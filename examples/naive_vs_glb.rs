@@ -1,0 +1,54 @@
+//! Naive static partition vs lifeline GLB (paper §5.4, Table 2 left):
+//! same results, very different balance. Prints per-process work
+//! distribution to show *why* the naive approach fails on deep trees.
+//!
+//! ```bash
+//! cargo run --release --example naive_vs_glb [P]
+//! ```
+
+use parlamp::bench::{all_scenarios, calibrate_lamp};
+use parlamp::lamp::lamp_serial;
+use parlamp::par::{run_sim, RunMode, SimConfig};
+use parlamp::util::table::Table;
+
+fn main() {
+    let p: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let sc = all_scenarios(true).into_iter().find(|s| s.name == "hapmap-dom-20").unwrap();
+    let db = sc.build();
+    let serial = lamp_serial(&db, parlamp::DEFAULT_ALPHA);
+    let cal = calibrate_lamp(&db, parlamp::DEFAULT_ALPHA);
+    let t1 = cal.t1_s;
+    println!(
+        "hapmap-dom-20-like: {} items × {} trans, CS({})={}, serial count time {t1:.3}s\n",
+        db.n_items(),
+        db.n_trans(),
+        serial.min_sup,
+        serial.correction_factor
+    );
+
+    let mut table = Table::new(&["engine", "time(s)", "speedup", "gives", "idle share", "max/mean work"]);
+    for (label, steal) in [("GLB (lifeline steal)", true), ("naive (static partition)", false)] {
+        let cfg = SimConfig { p, steal, ..SimConfig::calibrated(p, &cal) };
+        let out = run_sim(&db, RunMode::Count { min_sup: serial.min_sup }, &cfg);
+        assert_eq!(out.closed_total, serial.correction_factor, "results must match");
+        let total = parlamp::par::breakdown::sum(&out.breakdowns);
+        let idle_share = total.idle_ns as f64 / total.total_ns().max(1) as f64;
+        let mains: Vec<f64> = out.breakdowns.iter().map(|b| b.main_ns as f64).collect();
+        let mean = mains.iter().sum::<f64>() / mains.len() as f64;
+        let max = mains.iter().cloned().fold(0.0, f64::max);
+        table.row(vec![
+            label.to_string(),
+            format!("{:.4}", out.makespan_s),
+            format!("{:.1}x", t1 / out.makespan_s),
+            out.comm.gives.to_string(),
+            format!("{:.0}%", idle_share * 100.0),
+            format!("{:.1}", max / mean.max(1.0)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "the naive engine's max/mean work imbalance is the paper's \"failed\n\
+         completely\": one process inherits the deep subtree and everyone\n\
+         else idles (§5.4)."
+    );
+}

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the rust runtime.
+
+Run once at build time (`make artifacts`); Python is never on the request
+path. HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla_extension
+0.5.1 under the rust `xla` crate rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/screen.hlo.txt   — the full significance screen (L2 + both L1
+                               Pallas kernels fused into one module)
+  artifacts/support.hlo.txt  — popcount support counting alone
+  artifacts/manifest.json    — frozen shapes the rust loader validates
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust's
+    `to_tupleN` unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_screen(k, w, t_max):
+    def fn(occ, pos, n_total, n_pos):
+        return model.screen_batch(occ, pos, n_total, n_pos, t_max=t_max)
+
+    return jax.jit(fn).lower(*model.screen_example_args(k, w, t_max))
+
+
+def lower_support(k, w):
+    from .kernels.popcount import support_counts
+
+    import jax.numpy as jnp
+
+    def fn(occ, pos):
+        return support_counts(occ, pos)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((k, w), jnp.uint32),
+        jax.ShapeDtypeStruct((w,), jnp.uint32),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--k", type=int, default=1024, help="batch capacity (candidates)")
+    ap.add_argument("--w", type=int, default=64, help="u32 words per bitmap (64 = 2048 transactions)")
+    ap.add_argument("--t-max", type=int, default=512, help="max Fisher tail length (must be > N_pos)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    screen = to_hlo_text(lower_screen(args.k, args.w, args.t_max))
+    screen_path = os.path.join(args.out_dir, "screen.hlo.txt")
+    with open(screen_path, "w") as f:
+        f.write(screen)
+    print(f"wrote {screen_path} ({len(screen)} chars)")
+
+    support = to_hlo_text(lower_support(args.k, args.w))
+    support_path = os.path.join(args.out_dir, "support.hlo.txt")
+    with open(support_path, "w") as f:
+        f.write(support)
+    print(f"wrote {support_path} ({len(support)} chars)")
+
+    manifest = {
+        "k": args.k,
+        "w": args.w,
+        "t_max": args.t_max,
+        "entries": {
+            "screen": {
+                "file": "screen.hlo.txt",
+                "inputs": [
+                    {"name": "occ_words", "shape": [args.k, args.w], "dtype": "u32"},
+                    {"name": "pos_words", "shape": [args.w], "dtype": "u32"},
+                    {"name": "n_total", "shape": [1], "dtype": "f64"},
+                    {"name": "n_pos", "shape": [1], "dtype": "f64"},
+                ],
+                "outputs": ["x:i32", "n:i32", "logp:f64", "logf:f64"],
+            },
+            "support": {
+                "file": "support.hlo.txt",
+                "inputs": [
+                    {"name": "occ_words", "shape": [args.k, args.w], "dtype": "u32"},
+                    {"name": "pos_words", "shape": [args.w], "dtype": "u32"},
+                ],
+                "outputs": ["x:i32", "n:i32"],
+            },
+        },
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

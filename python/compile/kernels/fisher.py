@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: batched one-sided Fisher exact test + Tarone bound.
+
+Transcendental-bound (lgamma) VPU work: each grid step takes a (BK,) tile
+of (x, n) pairs and evaluates the hypergeometric upper tail as a masked,
+fixed-length (T_MAX) log-sum-exp — shape-static, so it AOT-lowers cleanly.
+f64 is used under interpret=True for exactness against the rust oracle; a
+real-TPU build would drop to f32 with compensated summation (DESIGN.md §5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_K = 256
+
+
+def _log_choose(a, b):
+    return (
+        jax.lax.lgamma(a + 1.0) - jax.lax.lgamma(b + 1.0) - jax.lax.lgamma(a - b + 1.0)
+    )
+
+
+def _fisher_kernel(t_max, x_ref, n_ref, nt_ref, np_ref, logp_ref, logf_ref):
+    x = x_ref[...].astype(jnp.float64)
+    n = n_ref[...].astype(jnp.float64)
+    N = nt_ref[0].astype(jnp.float64)
+    Np = np_ref[0].astype(jnp.float64)
+
+    # --- Fisher upper tail via the cumulative-ratio formulation ---
+    # The observed cell (x, n) is always inside the hypergeometric support
+    # (n ≤ min(x, N_pos) and x − n ≤ N − N_pos hold by construction in the
+    # miner), so the first tail term is valid and successive terms follow
+    # from term(k+1)/term(k) = (Np−k)(x−k) / ((k+1)(N−Np−x+k+1)): one `log`
+    # + a cumulative sum per term instead of six `lgamma`s (§Perf, L1).
+    nc = jnp.minimum(n, Np)  # clamp for padded/degenerate rows
+    lt0 = (
+        _log_choose(Np, nc)
+        + _log_choose(N - Np, jnp.clip(x - nc, 0.0, None))
+        - _log_choose(N, x)
+    )
+    j = jnp.arange(t_max - 1, dtype=jnp.float64)[None, :]
+    kj = n[:, None] + j
+    num = (Np - kj) * (x[:, None] - kj)
+    den = (kj + 1.0) * (N - Np - x[:, None] + kj + 1.0)
+    log_r = jnp.log(jnp.clip(num, 1e-300, None)) - jnp.log(jnp.clip(den, 1e-300, None))
+    log_term = jnp.concatenate(
+        [lt0[:, None], lt0[:, None] + jnp.cumsum(log_r, axis=1)], axis=1
+    )
+    ks = n[:, None] + jnp.arange(t_max, dtype=jnp.float64)[None, :]
+    hi = jnp.minimum(x, Np)[:, None]
+    log_term = jnp.where(ks <= hi, log_term, -jnp.inf)
+    m = jnp.max(log_term, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    logp = jnp.squeeze(m, 1) + jnp.log(jnp.sum(jnp.exp(log_term - m), axis=1))
+    # Observed count at/below the support's lower limit ⇒ the tail covers
+    # the whole distribution ⇒ P = 1 (also covers x = 0 padding rows).
+    lo_support = jnp.maximum(x - (N - Np), 0.0)
+    logp = jnp.where((x <= 0) | (n <= lo_support), 0.0, logp)
+    logp_ref[...] = jnp.minimum(logp, 0.0)
+
+    # --- Tarone minimum-achievable log P ---
+    low = _log_choose(Np, jnp.minimum(x, Np)) - _log_choose(N, x)
+    high = _log_choose(N - Np, jnp.clip(x - Np, 0.0, None)) - _log_choose(N, x)
+    logf = jnp.where(x <= Np, low, high)
+    logf_ref[...] = jnp.where(x <= 0, 0.0, jnp.minimum(logf, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("t_max", "block_k"))
+def fisher_tarone(x, n, n_total, n_pos, *, t_max, block_k=BLOCK_K):
+    """Batched (log P, log f) for K (x, n) pairs.
+
+    x, n: (K,) int32 (K divisible by block_k); n_total/n_pos: () f64 scalars
+    (shape-(1,) arrays). t_max must be ≥ n_pos + 1 to cover the longest
+    possible tail. Returns (logp, logf): (K,) float64 each.
+    """
+    (k,) = x.shape
+    assert k % block_k == 0, f"K={k} must be padded to a multiple of {block_k}"
+    grid = (k // block_k,)
+    kern = functools.partial(_fisher_kernel, t_max)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float64),
+            jax.ShapeDtypeStruct((k,), jnp.float64),
+        ],
+        interpret=True,
+    )(x, n, n_total, n_pos)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: packed-bitmap AND + popcount support counting.
+
+The paper's innermost operation (§4.6): supports are counted with the
+population-count instruction over packed occurrence bitmaps instead of
+database reduction. On TPU-shaped hardware this maps to a VPU SWAR
+popcount over BlockSpec-tiled slabs: the candidate axis rides the grid,
+each (BK, W) uint32 slab is staged HBM→VMEM once, and the W-axis reduction
+stays in registers. (DESIGN.md §5 Hardware-Adaptation; popcount is not an
+MXU op — there is no matmul to chase here.)
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the interpret path lowers to plain HLO, which is exactly
+what the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate-axis block size. W (words per bitmap) is never tiled: real
+# transaction counts (hundreds to ~13k bits = tens to ~400 words) keep a
+# (BK, W) uint32 slab comfortably under VMEM (BK=256, W=512 → 512 KiB).
+BLOCK_K = 256
+
+
+def _popcount_u32(v):
+    """SWAR popcount; identical arithmetic to ref.popcount_u32 but kept
+    local so the kernel is self-contained under tracing."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _support_kernel(occ_ref, pos_ref, x_ref, n_ref):
+    """One (BK, W) tile: x = popcount(occ), n = popcount(occ & pos)."""
+    occ = occ_ref[...]
+    pos = pos_ref[...]
+    x_ref[...] = _popcount_u32(occ).sum(axis=1, dtype=jnp.int32)
+    n_ref[...] = _popcount_u32(occ & pos[None, :]).sum(axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def support_counts(occ_words, pos_words, *, block_k=BLOCK_K):
+    """Supports of K packed candidate bitmaps.
+
+    occ_words: (K, W) uint32, K divisible by block_k (callers pad).
+    pos_words: (W,) uint32.
+    Returns (x, n): (K,) int32 each.
+    """
+    k, w = occ_words.shape
+    assert k % block_k == 0, f"K={k} must be padded to a multiple of {block_k}"
+    grid = (k // block_k,)
+    return pl.pallas_call(
+        _support_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, w), lambda i: (i, 0)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+        ],
+        interpret=True,
+    )(occ_words, pos_words)

@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness baseline: simple, obviously-correct jax.numpy
+implementations of (a) packed-bitmap popcount support counting and (b) the
+one-sided Fisher exact test / Tarone minimum-achievable-P bound. pytest
+asserts the Pallas kernels match these (and scipy independently checks the
+statistics).
+"""
+
+import jax.numpy as jnp
+
+
+def popcount_u32(v):
+    """SWAR population count of a uint32 array (reference form)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def support_counts_ref(occ_words, pos_words):
+    """Support and positive-class support of K packed candidate bitmaps.
+
+    occ_words: (K, W) uint32 — occurrence bitmaps, little-endian packing.
+    pos_words: (W,) uint32 — positive-class mask.
+    Returns (x, n): each (K,) int32.
+    """
+    x = popcount_u32(occ_words).sum(axis=1, dtype=jnp.int32)
+    n = popcount_u32(occ_words & pos_words[None, :]).sum(axis=1, dtype=jnp.int32)
+    return x, n
+
+
+def _log_choose(a, b):
+    """ln C(a, b) via lgamma, elementwise; caller guarantees 0 <= b <= a."""
+    from jax.scipy.special import gammaln
+
+    return gammaln(a + 1.0) - gammaln(b + 1.0) - gammaln(a - b + 1.0)
+
+
+def fisher_logp_ref(x, n, n_total, n_pos, t_max):
+    """One-sided Fisher exact test, log P-value (f64 reference).
+
+    P = sum_{k=n}^{min(x, n_pos)} C(n_pos,k) C(n_total-n_pos, x-k) / C(n_total, x)
+
+    evaluated as a masked fixed-length (t_max) tail in log space.
+    x, n: (K,) arrays; n_total, n_pos: scalars; returns (K,) float64 (<= 0).
+    Entries with x == 0 get log P = 0 (P = 1).
+    """
+    x = x.astype(jnp.float64)
+    n = n.astype(jnp.float64)
+    N = jnp.float64(n_total)
+    Np = jnp.float64(n_pos)
+    ks = n[:, None] + jnp.arange(t_max, dtype=jnp.float64)[None, :]  # (K, T)
+    hi = jnp.minimum(x, Np)[:, None]
+    lo_support = jnp.maximum(x - (N - Np), 0.0)[:, None]
+    valid = (ks <= hi) & (ks >= lo_support) & ((x[:, None] - ks) >= 0)
+    ks_c = jnp.clip(ks, 0.0, None)
+    xk = jnp.clip(x[:, None] - ks_c, 0.0, None)
+    log_term = (
+        _log_choose(Np, jnp.minimum(ks_c, Np))
+        + _log_choose(N - Np, jnp.minimum(xk, N - Np))
+        - _log_choose(N, x)[:, None]
+    )
+    log_term = jnp.where(valid, log_term, -jnp.inf)
+    m = jnp.max(log_term, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    logp = jnp.squeeze(m, 1) + jnp.log(jnp.sum(jnp.exp(log_term - m), axis=1))
+    # x == 0 (or an empty tail) means P = 1.
+    logp = jnp.where(x <= 0, 0.0, logp)
+    return jnp.minimum(logp, 0.0)
+
+
+def tarone_logf_ref(x, n_total, n_pos):
+    """Tarone minimum-achievable log P, ln f(x) (f64 reference).
+
+    f(x) = C(n_pos, x)/C(n_total, x) for x <= n_pos, else the
+    all-positives-inside bound C(n_total-n_pos, x-n_pos)/C(n_total, x);
+    f(0) = 1.
+    """
+    x = x.astype(jnp.float64)
+    N = jnp.float64(n_total)
+    Np = jnp.float64(n_pos)
+    low = _log_choose(Np, jnp.minimum(x, Np)) - _log_choose(N, x)
+    high = _log_choose(N - Np, jnp.clip(x - Np, 0.0, None)) - _log_choose(N, x)
+    logf = jnp.where(x <= Np, low, high)
+    return jnp.where(x <= 0, 0.0, jnp.minimum(logf, 0.0))

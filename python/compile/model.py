@@ -1,0 +1,47 @@
+"""L2 — the significance-screen compute graph.
+
+`screen_batch` composes the two L1 Pallas kernels into the batched
+phase-3 screen the rust coordinator offloads through PJRT: packed
+occurrence bitmaps in, (support, positive support, Fisher log-P, Tarone
+log-f) out. Forward-only — this is a mining paper, there is no backward
+pass to build (DESIGN.md §1).
+
+jax config: f64 must be enabled before any jax import site uses it; the
+import below is the single switch for the whole compile path.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels.fisher import fisher_tarone  # noqa: E402
+from .kernels.popcount import support_counts  # noqa: E402
+
+
+def screen_batch(occ_words, pos_words, n_total, n_pos, *, t_max):
+    """The full screen: bitmaps → statistics.
+
+    occ_words: (K, W) uint32 packed candidate occurrence bitmaps (padded
+        rows must be all-zero: they produce x = 0 → log P = 0, screened out
+        by the rust side).
+    pos_words: (W,) uint32 positive-class mask.
+    n_total, n_pos: (1,) float64 marginals (runtime scalars, so one
+        artifact serves any dataset with n_pos + 1 <= t_max).
+    Returns (x, n, logp, logf).
+    """
+    x, n = support_counts(occ_words, pos_words)
+    logp, logf = fisher_tarone(x, n, n_total, n_pos, t_max=t_max)
+    return x, n, logp, logf
+
+
+def screen_example_args(k, w, t_max):
+    """ShapeDtypeStructs for AOT lowering of `screen_batch`."""
+    del t_max  # static; fixed by closure at lowering time
+    return (
+        jax.ShapeDtypeStruct((k, w), jnp.uint32),
+        jax.ShapeDtypeStruct((w,), jnp.uint32),
+        jax.ShapeDtypeStruct((1,), jnp.float64),
+        jax.ShapeDtypeStruct((1,), jnp.float64),
+    )

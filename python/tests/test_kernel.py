@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp reference — the core L1 correctness signal.
+
+hypothesis sweeps shapes and bit patterns; scipy provides an independent
+statistical oracle for the Fisher/Tarone kernel.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from scipy.stats import hypergeom  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.fisher import fisher_tarone  # noqa: E402
+from compile.kernels.popcount import support_counts  # noqa: E402
+
+
+# ---------------------------------------------------------------- popcount
+
+
+def test_popcount_exhaustive_small():
+    v = np.array([0, 1, 2, 3, 0xFFFFFFFF, 0x80000000, 0x55555555], dtype=np.uint32)
+    got = np.asarray(ref.popcount_u32(jnp.asarray(v)))
+    want = np.array([bin(x).count("1") for x in v], dtype=np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k_blocks=st.integers(1, 3),
+    w=st.integers(1, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_support_kernel_matches_ref(k_blocks, w, seed):
+    rng = np.random.default_rng(seed)
+    k = 256 * k_blocks
+    occ = rng.integers(0, 2**32, size=(k, w), dtype=np.uint32)
+    pos = rng.integers(0, 2**32, size=(w,), dtype=np.uint32)
+    x, n = support_counts(jnp.asarray(occ), jnp.asarray(pos))
+    xr, nr = ref.support_counts_ref(jnp.asarray(occ), jnp.asarray(pos))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(xr))
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(nr))
+    # independent numpy oracle
+    want_x = np.array([sum(bin(wd).count("1") for wd in row) for row in occ])
+    np.testing.assert_array_equal(np.asarray(x), want_x)
+
+
+def test_support_kernel_rejects_unpadded():
+    with pytest.raises(AssertionError):
+        support_counts(jnp.zeros((100, 4), jnp.uint32), jnp.zeros((4,), jnp.uint32))
+
+
+# ------------------------------------------------------------------ fisher
+
+
+def _scipy_logp(x, n, N, Np):
+    # one-sided (greater): P[H >= n], H ~ Hypergeom(N, Np, x)
+    p = hypergeom.sf(n - 1, N, Np, x)
+    return np.log(np.clip(p, 1e-320, 1.0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_total=st.integers(10, 900),
+)
+def test_fisher_kernel_matches_scipy(seed, n_total):
+    rng = np.random.default_rng(seed)
+    n_pos = int(rng.integers(1, n_total))
+    k = 256
+    x = rng.integers(0, n_total + 1, size=k).astype(np.int32)
+    lo = np.maximum(0, x - (n_total - n_pos))
+    hi = np.minimum(x, n_pos)
+    n = (lo + rng.random(k) * (hi - lo + 1)).astype(np.int32)
+    n = np.minimum(n, hi).astype(np.int32)
+    t_max = n_pos + 1
+    logp, logf = fisher_tarone(
+        jnp.asarray(x),
+        jnp.asarray(n),
+        jnp.asarray([float(n_total)]),
+        jnp.asarray([float(n_pos)]),
+        t_max=t_max,
+    )
+    logp = np.asarray(logp)
+    logf = np.asarray(logf)
+    want = np.array([_scipy_logp(xi, ni, n_total, n_pos) for xi, ni in zip(x, n)])
+    np.testing.assert_allclose(logp, want, rtol=1e-8, atol=1e-8)
+    # Tarone bound must lower-bound the P-value and hit it at n == hi.
+    assert np.all(logf <= logp + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fisher_kernel_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n_total, n_pos = 300, 77
+    k = 512
+    x = rng.integers(0, n_total + 1, size=k).astype(np.int32)
+    n = np.minimum(x, rng.integers(0, n_pos + 1, size=k)).astype(np.int32)
+    t_max = n_pos + 1
+    logp, logf = fisher_tarone(
+        jnp.asarray(x), jnp.asarray(n),
+        jnp.asarray([300.0]), jnp.asarray([77.0]), t_max=t_max,
+    )
+    rp = ref.fisher_logp_ref(jnp.asarray(x), jnp.asarray(n), 300.0, 77.0, t_max)
+    rf = ref.tarone_logf_ref(jnp.asarray(x), 300.0, 77.0)
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(rp), rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(logf), np.asarray(rf), rtol=1e-10, atol=1e-10)
+
+
+def test_fisher_edge_cases():
+    # x = 0 → P = 1; n at the lower support limit → P = 1; n = hi → P = f(x)
+    logp, logf = fisher_tarone(
+        jnp.asarray([0, 25, 8], jnp.int32),
+        jnp.asarray([0, 7, 8], jnp.int32),
+        jnp.asarray([30.0]),
+        jnp.asarray([12.0]),
+        t_max=13,
+        block_k=1,
+    )
+    logp = np.asarray(logp)
+    logf = np.asarray(logf)
+    assert logp[0] == 0.0
+    # x=25, N−Np=18 → lo=7: full tail ⇒ P=1
+    np.testing.assert_allclose(logp[1], 0.0, atol=1e-12)
+    # n == hi == min(x, Np) = 8 ⇒ single term = f(x)
+    np.testing.assert_allclose(logp[2], logf[2], rtol=1e-10)

@@ -1,0 +1,83 @@
+//! Ablations over the design knobs the paper fixes from preliminary
+//! experiments (§4.2: `l = 2`, `w = 1`; §4.6: ~1 ms probe cadence; §4.5:
+//! depth-1 preprocess): sweep each on the large HapMap-like problem.
+//!
+//! Run: `cargo bench --bench ablations [-- --quick]`
+
+use parlamp::bench::{all_scenarios, calibrate_lamp};
+use parlamp::par::{run_sim, RunMode, SimConfig};
+use parlamp::util::bench_harness::{quick_mode, BenchSet};
+use parlamp::util::fmt_secs;
+
+fn main() {
+    let quick = quick_mode();
+    let alpha = parlamp::DEFAULT_ALPHA;
+    let sc = all_scenarios(quick)
+        .into_iter()
+        .find(|s| s.name == "hapmap-dom-20")
+        .expect("scenario");
+    let db = sc.build();
+    let cal = calibrate_lamp(&db, alpha);
+    let p = if quick { 48 } else { 192 };
+    let base = SimConfig { p, ..SimConfig::calibrated(p, &cal) };
+
+    let mut run = |label: String, cfg: &SimConfig, set: &mut BenchSet| {
+        let out = run_sim(&db, RunMode::Phase1 { alpha }, cfg);
+        set.row(vec![
+            label,
+            fmt_secs(out.makespan_s),
+            out.comm.gives.to_string(),
+            out.comm.rejects.to_string(),
+            out.comm.sent.to_string(),
+        ]);
+    };
+
+    let mut set = BenchSet::new(
+        &format!("Ablation — random steal attempts w (P={p}, hapmap-dom-20)"),
+        &["w", "time", "gives", "rejects", "msgs"],
+    );
+    for w in [0usize, 1, 2, 4] {
+        run(w.to_string(), &SimConfig { w, ..base.clone() }, &mut set);
+    }
+    set.finish();
+
+    let mut set = BenchSet::new(
+        &format!("Ablation — lifeline hypercube edge length l (P={p})"),
+        &["l", "time", "gives", "rejects", "msgs"],
+    );
+    for l in [2usize, 3, 4] {
+        run(l.to_string(), &SimConfig { l, ..base.clone() }, &mut set);
+    }
+    set.finish();
+
+    let mut set = BenchSet::new(
+        &format!("Ablation — probe budget (≈probe interval; paper tunes to 1 ms) (P={p})"),
+        &["budget(units)", "time", "gives", "rejects", "msgs"],
+    );
+    for budget in [250_000u64, 1_000_000, 4_000_000, 16_000_000] {
+        run(
+            budget.to_string(),
+            &SimConfig { probe_budget_units: budget, ..base.clone() },
+            &mut set,
+        );
+    }
+    set.finish();
+
+    let mut set = BenchSet::new(
+        &format!("Ablation — depth-1 preprocess partition (§4.5) (P={p})"),
+        &["preprocess", "time", "gives", "rejects", "msgs"],
+    );
+    for pre in [true, false] {
+        run(pre.to_string(), &SimConfig { preprocess: pre, ..base.clone() }, &mut set);
+    }
+    set.finish();
+
+    let mut set = BenchSet::new(
+        &format!("Ablation — DTD spanning-tree arity (paper: ternary) (P={p})"),
+        &["arity", "time", "gives", "rejects", "msgs"],
+    );
+    for arity in [1usize, 2, 3, 8] {
+        run(arity.to_string(), &SimConfig { tree_arity: arity, ..base.clone() }, &mut set);
+    }
+    set.finish();
+}

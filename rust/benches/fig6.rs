@@ -1,0 +1,47 @@
+//! Fig. 6: time and speedup vs process count, all six problems,
+//! P ∈ {1, 12, 24, 48, 96, 192, 300, 600, 1200} (paper §5.2).
+//!
+//! Run: `cargo bench --bench fig6 [-- --quick]`
+
+use parlamp::bench::{all_scenarios, calibrate_lamp};
+use parlamp::par::{lamp_parallel_sim, SimConfig};
+use parlamp::util::bench_harness::{quick_mode, BenchSet};
+use parlamp::util::fmt_secs;
+
+const PROCS: &[usize] = &[1, 12, 24, 48, 96, 192, 300, 600, 1200];
+
+fn main() {
+    let quick = quick_mode();
+    let alpha = parlamp::DEFAULT_ALPHA;
+    let procs: Vec<usize> =
+        if quick { vec![1, 12, 96, 1200] } else { PROCS.to_vec() };
+    for sc in all_scenarios(quick) {
+        let db = sc.build();
+        let cal = calibrate_lamp(&db, alpha);
+        let t1 = cal.t1_s; // phases 1+2, the computation the sims run
+        let mut set = BenchSet::new(
+            &format!(
+                "Fig 6 — {} ({}, t1={})",
+                sc.name,
+                if sc.large { "LARGE" } else { "small" },
+                fmt_secs(t1)
+            ),
+            &["P", "time", "speedup", "efficiency", "gives", "msgs"],
+        );
+        for &p in &procs {
+            let cfg = SimConfig { p, ..SimConfig::calibrated(p, &cal) };
+            let (_res, p1, p2) = lamp_parallel_sim(&db, alpha, &cfg);
+            let t = p1.makespan_s + p2.makespan_s;
+            let speedup = t1 / t.max(1e-12);
+            set.row(vec![
+                p.to_string(),
+                fmt_secs(t),
+                format!("{speedup:.1}x"),
+                format!("{:.0}%", 100.0 * speedup / p as f64),
+                (p1.comm.gives + p2.comm.gives).to_string(),
+                (p1.comm.sent + p2.comm.sent).to_string(),
+            ]);
+        }
+        set.finish();
+    }
+}

@@ -1,0 +1,37 @@
+//! Fig. 7: breakdown of total CPU time (summed over processes) into
+//! preprocess / main / probe / idle, per process count (paper §5.2).
+//!
+//! Run: `cargo bench --bench fig7 [-- --quick]`
+
+use parlamp::bench::{all_scenarios, calibrate_lamp};
+use parlamp::par::{breakdown, run_sim, RunMode, SimConfig};
+use parlamp::util::bench_harness::{quick_mode, BenchSet};
+
+fn main() {
+    let quick = quick_mode();
+    let procs: Vec<usize> =
+        if quick { vec![1, 12, 96, 600] } else { vec![1, 12, 24, 48, 96, 192, 300, 600, 1200] };
+    for sc in all_scenarios(quick) {
+        let db = sc.build();
+        let cal = calibrate_lamp(&db, parlamp::DEFAULT_ALPHA);
+        let mut set = BenchSet::new(
+            &format!("Fig 7 — total CPU time breakdown, {} (seconds)", sc.name),
+            &["P", "preprocess", "main", "probe", "idle", "total"],
+        );
+        for &p in &procs {
+            let cfg = SimConfig { p, ..SimConfig::calibrated(p, &cal) };
+            let out = run_sim(&db, RunMode::Phase1 { alpha: parlamp::DEFAULT_ALPHA }, &cfg);
+            let b = breakdown::sum(&out.breakdowns);
+            let [pre, main, probe, idle] = b.as_secs();
+            set.row(vec![
+                p.to_string(),
+                format!("{pre:.4}"),
+                format!("{main:.4}"),
+                format!("{probe:.4}"),
+                format!("{idle:.4}"),
+                format!("{:.4}", pre + main + probe + idle),
+            ]);
+        }
+        set.finish();
+    }
+}

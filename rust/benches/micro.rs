@@ -1,0 +1,82 @@
+//! Micro-benchmarks of the hot paths (the §Perf working set):
+//! AND+popcount, node expansion, Fisher P-values, stack split, DES event
+//! throughput.
+//!
+//! Run: `cargo bench --bench micro`
+
+use parlamp::bench::all_scenarios;
+use parlamp::bits::{and_popcount, BitVec};
+use parlamp::lcm::{expand, ExpandScratch, SearchNode};
+use parlamp::stats::{FisherTable, Marginals};
+use parlamp::util::bench_harness::{bench, BenchSet};
+use parlamp::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("micro — hot paths", &["bench", "mean ± sd", "throughput"]);
+    let mut rng = Rng::new(7);
+
+    // AND + popcount over a HapMap-like row (697 transactions = 11 words)
+    // and an MCF7-like row (12,773 transactions = 200 words). 1k calls per
+    // sample so the timer floor doesn't dominate sub-µs kernels.
+    const REPS: usize = 1000;
+    for (label, words) in [("and_popcount 11w", 11usize), ("and_popcount 200w", 200)] {
+        let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let s = bench(20, 500, || {
+            let mut acc = 0u32;
+            for _ in 0..REPS {
+                acc = acc.wrapping_add(and_popcount(std::hint::black_box(&a), &b));
+            }
+            acc
+        });
+        set.row(vec![
+            label.to_string(),
+            format!("{:.1} ns/call", s.mean_s * 1e9 / REPS as f64),
+            format!("{:.1} Gword/s", (words * REPS) as f64 / s.mean_s / 1e9),
+        ]);
+    }
+
+    // Full node expansion on the hapmap-dom-10 scenario root.
+    let db = all_scenarios(true).into_iter().find(|s| s.name == "hapmap-dom-10").unwrap().build();
+    let mut scratch = ExpandScratch::default();
+    let s = bench(3, 30, || {
+        let mut root = SearchNode::root(&db);
+        let mut out = Vec::new();
+        expand(&db, &mut root, 2, &mut scratch, &mut out);
+        out.len()
+    });
+    set.row(vec!["expand(root, hapmap-dom-10)".into(), s.display(), String::new()]);
+
+    // Fisher exact test.
+    let fisher = FisherTable::new(Marginals::new(697, 105));
+    let s = bench(100, 5000, || {
+        let mut acc = 0.0;
+        for x in 1..=40u32 {
+            acc += fisher.log_p_value(x, x.min(20));
+        }
+        acc
+    });
+    set.row(vec![
+        "fisher log_p ×40".into(),
+        s.display(),
+        format!("{:.2} Mp/s", 40.0 / s.mean_s / 1e6),
+    ]);
+
+    // Stack split (steal GIVE path).
+    let nodes: Vec<SearchNode> = (0..512)
+        .map(|i| SearchNode {
+            items: vec![i as u32, i as u32 + 1, i as u32 + 2],
+            core: i as i64,
+            support: 5,
+            occ: Some(BitVec::ones(697)),
+        })
+        .collect();
+    let s = bench(100, 3000, || {
+        let mut stack = nodes.clone();
+        let half: Vec<SearchNode> = stack.drain(..stack.len() / 2).collect();
+        half.len() + stack.len()
+    });
+    set.row(vec!["split 512-node stack".into(), s.display(), String::new()]);
+
+    set.finish();
+}

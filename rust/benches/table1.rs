@@ -1,0 +1,45 @@
+//! Table 1: problem statistics + t₁ (serial, measured), t₁₂ and t₁,₂₀₀
+//! (DES, virtual time calibrated against the measured serial run).
+//!
+//! Run: `cargo bench --bench table1 [-- --quick]`
+
+use parlamp::bench::{all_scenarios, calibrate_lamp};
+use parlamp::par::{lamp_parallel_sim, SimConfig};
+use parlamp::util::bench_harness::{quick_mode, BenchSet};
+use parlamp::util::fmt_secs;
+
+fn main() {
+    let quick = quick_mode();
+    let alpha = parlamp::DEFAULT_ALPHA;
+    let mut set = BenchSet::new(
+        "Table 1 — problems and runtimes (t in seconds; t12/t1200 simulated)",
+        &["name", "items", "trans.", "density", "N_pos", "lambda", "nu.CS", "t1", "t12", "t1200", "speedup1200"],
+    );
+    for sc in all_scenarios(quick) {
+        let db = sc.build();
+        // t₁ is the measured serial time of the same computation the
+        // parallel engines run (phases 1+2); phase 3 is reported in §5.6.
+        let cal = calibrate_lamp(&db, alpha);
+        let t1 = cal.t1_s;
+        let mut row_times = Vec::new();
+        for p in [12usize, 1200] {
+            let cfg = SimConfig { p, ..SimConfig::calibrated(p, &cal) };
+            let (_r, p1, p2) = lamp_parallel_sim(&db, alpha, &cfg);
+            row_times.push(p1.makespan_s + p2.makespan_s);
+        }
+        set.row(vec![
+            sc.name.to_string(),
+            db.n_items().to_string(),
+            db.n_trans().to_string(),
+            format!("{:.2}%", db.density() * 100.0),
+            db.marginals().n_pos.to_string(),
+            cal.min_sup.to_string(),
+            cal.correction.to_string(),
+            fmt_secs(t1),
+            fmt_secs(row_times[0]),
+            fmt_secs(row_times[1]),
+            format!("{:.0}x", t1 / row_times[1].max(1e-12)),
+        ]);
+    }
+    set.finish();
+}

@@ -1,0 +1,86 @@
+//! XLA screen offload vs native rust phase 3: batched PJRT execution
+//! throughput and end-to-end phase-3 comparison (the L1/L2 path on the
+//! request side). Skips (cleanly) when artifacts are missing.
+//!
+//! Run: `make artifacts && cargo bench --bench xla_offload`
+
+use parlamp::bits::BitVec;
+use parlamp::datagen::{generate_gwas, GwasSpec};
+use parlamp::lamp::{lamp_serial, phase3_extract};
+use parlamp::runtime::{artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime};
+use parlamp::stats::{FisherTable, Marginals};
+use parlamp::util::bench_harness::{bench, time_once, BenchSet};
+use parlamp::util::rng::Rng;
+
+fn main() {
+    if !artifacts_available() {
+        println!("SKIP xla_offload: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let engine = ScreenEngine::new(XlaRuntime::load(&artifacts_dir()).expect("load"));
+    let man = engine.runtime().manifest();
+    println!(
+        "platform={} artifact: K={} W={} T_MAX={}",
+        engine.runtime().platform(),
+        man.k,
+        man.w,
+        man.t_max
+    );
+
+    let mut set = BenchSet::new("XLA offload — batched significance screen", &["bench", "mean ± sd", "rate"]);
+    let n = 500usize;
+    let m = Marginals::new(n as u32, 120);
+    let mut rng = Rng::new(11);
+    let pos = BitVec::from_indices(n, 0..120);
+    let rows: Vec<BitVec> = (0..man.k)
+        .map(|_| BitVec::from_indices(n, (0..n).filter(|_| rng.bernoulli(0.1))))
+        .collect();
+
+    // Full batch through PJRT.
+    let s = bench(2, 10, || engine.score(&rows, &pos, m).unwrap().len());
+    set.row(vec![
+        format!("xla screen batch (K={})", man.k),
+        s.display(),
+        format!("{:.0} cand/s", man.k as f64 / s.mean_s),
+    ]);
+
+    // Native equivalent.
+    let fisher = FisherTable::new(m);
+    let s2 = bench(2, 10, || {
+        let mut acc = 0.0f64;
+        for r in &rows {
+            let x = r.count();
+            let nobs = r.and_count(&pos);
+            acc += fisher.log_p_value(x, nobs);
+        }
+        acc
+    });
+    set.row(vec![
+        format!("native screen batch (K={})", man.k),
+        s2.display(),
+        format!("{:.0} cand/s", man.k as f64 / s2.mean_s),
+    ]);
+    set.finish();
+
+    // End-to-end phase 3 on a GWAS-like problem.
+    let (db, _) = generate_gwas(&GwasSpec {
+        n_snps: 400,
+        n_individuals: 180,
+        n_pos: 45,
+        planted: vec![(3, 0.85)],
+        ..GwasSpec::small(5)
+    });
+    let res = lamp_serial(&db, 0.05);
+    let (t_native, native) =
+        time_once(|| phase3_extract(&db, res.min_sup, res.correction_factor, 0.05));
+    let (t_xla, xla) = time_once(|| {
+        phase3_extract_xla(&engine, &db, res.min_sup, res.correction_factor, 0.05).unwrap()
+    });
+    assert_eq!(native.len(), xla.len(), "paths must agree");
+    println!(
+        "phase-3 end-to-end: native {:.4}s vs xla {:.4}s ({} significant patterns)",
+        t_native,
+        t_xla,
+        native.len()
+    );
+}

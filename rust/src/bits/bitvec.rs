@@ -1,0 +1,257 @@
+//! Fixed-width packed bit vector.
+
+use super::{and_popcount, subset_of, words_for};
+
+/// A fixed-length bit vector packed into `u64` words, little-endian within
+/// each word (bit `i` lives at word `i / 64`, bit `i % 64`).
+///
+/// Represents the *occurrence bitmap* of an itemset: bit `t` is set iff
+/// transaction `t` contains the itemset. Trailing bits past `len` are kept
+/// zero as an invariant so popcounts never over-count.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[{}; ", self.len)?;
+        for i in 0..self.len.min(128) {
+            write!(f, "{}", u8::from(self.get(i)))?;
+        }
+        if self.len > 128 {
+            write!(f, "…")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl BitVec {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, words: vec![0; words_for(len)] }
+    }
+
+    /// All-one vector of `len` bits (trailing bits zeroed).
+    pub fn ones(len: usize) -> Self {
+        let mut v = BitVec { len, words: vec![!0u64; words_for(len)] };
+        v.mask_tail();
+        v
+    }
+
+    /// Build from an iterator of set bit positions.
+    pub fn from_indices(len: usize, idx: impl IntoIterator<Item = usize>) -> Self {
+        let mut v = Self::zeros(len);
+        for i in idx {
+            v.set(i, true);
+        }
+        v
+    }
+
+    /// Zero any bits past `len` in the last word (representation invariant).
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1u64 << (i % 64);
+        } else {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Number of set bits — the *support* when this is an occurrence bitmap.
+    #[inline]
+    pub fn count(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Popcount of `self & other` without materializing the intersection.
+    #[inline]
+    pub fn and_count(&self, other: &BitVec) -> u32 {
+        debug_assert_eq!(self.len, other.len);
+        and_popcount(&self.words, &other.words)
+    }
+
+    /// `self ∧ other` into a fresh vector.
+    pub fn and(&self, other: &BitVec) -> BitVec {
+        debug_assert_eq!(self.len, other.len);
+        let words = self.words.iter().zip(&other.words).map(|(a, b)| a & b).collect();
+        BitVec { len: self.len, words }
+    }
+
+    /// In-place `self &= other`, reusing `self`'s allocation (hot path:
+    /// child occurrence bitmaps in the expansion loop).
+    #[inline]
+    pub fn and_assign_into(&self, other: &BitVec, out: &mut BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        out.len = self.len;
+        out.words.clear();
+        out.words.extend(self.words.iter().zip(&other.words).map(|(a, b)| a & b));
+    }
+
+    /// `true` iff every set bit of `self` is also set in `other`.
+    #[inline]
+    pub fn is_subset_of(&self, other: &BitVec) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        subset_of(&self.words, &other.words)
+    }
+
+    /// Iterate over the indices of set bits in ascending order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Pack into little-endian `u32` words (the layout the XLA screen
+    /// artifact consumes — see `runtime::screen`).
+    pub fn to_u32_words(&self, out_words: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(out_words);
+        for w in &self.words {
+            out.push(*w as u32);
+            out.push((*w >> 32) as u32);
+        }
+        out.resize(out_words, 0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn zeros_and_ones() {
+        let z = BitVec::zeros(70);
+        assert_eq!(z.count(), 0);
+        let o = BitVec::ones(70);
+        assert_eq!(o.count(), 70);
+        assert_eq!(o.words().len(), 2);
+        // tail must be masked
+        assert_eq!(o.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(128));
+        assert_eq!(v.count(), 3);
+        v.set(64, false);
+        assert_eq!(v.count(), 2);
+    }
+
+    #[test]
+    fn from_indices_and_iter_ones_roundtrip() {
+        forall("iter_ones(from_indices(s)) == s", 64, |rng| {
+            let len = 1 + rng.index(300);
+            let mut idx: Vec<usize> = (0..len).filter(|_| rng.bernoulli(0.3)).collect();
+            let v = BitVec::from_indices(len, idx.iter().copied());
+            idx.sort_unstable();
+            idx.dedup();
+            let got: Vec<usize> = v.iter_ones().collect();
+            if got != idx {
+                return Err(format!("len={len} got={got:?} want={idx:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn and_count_equals_and_then_count() {
+        forall("and_count == and().count()", 64, |rng| {
+            let len = 1 + rng.index(200);
+            let a = BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(0.5)));
+            let b = BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(0.5)));
+            if a.and_count(&b) != a.and(&b).count() {
+                return Err(format!("len={len}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subset_reflexive_and_antisymmetric_on_count() {
+        forall("subset properties", 64, |rng| {
+            let len = 1 + rng.index(150);
+            let a = BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(0.4)));
+            let b = a.and(&BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(0.7))));
+            if !a.is_subset_of(&a) {
+                return Err("not reflexive".into());
+            }
+            if !b.is_subset_of(&a) {
+                return Err("b = a∧x must be ⊆ a".into());
+            }
+            if b.is_subset_of(&a) && a.is_subset_of(&b) && a != b {
+                return Err("mutual subset but unequal".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn to_u32_words_layout() {
+        let mut v = BitVec::zeros(96);
+        v.set(0, true);
+        v.set(33, true);
+        v.set(65, true);
+        let w = v.to_u32_words(4);
+        assert_eq!(w, vec![1, 2, 2, 0]);
+        // pads with zeros
+        assert_eq!(v.to_u32_words(6).len(), 6);
+    }
+
+    #[test]
+    fn and_assign_into_reuses_buffer() {
+        let a = BitVec::ones(100);
+        let b = BitVec::from_indices(100, [3, 50, 99]);
+        let mut out = BitVec::zeros(100);
+        a.and_assign_into(&b, &mut out);
+        assert_eq!(out.iter_ones().collect::<Vec<_>>(), vec![3, 50, 99]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Flag parsing: `--key value` and boolean `--flag` pairs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `--key value` / `--flag` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &["naive", "ethernet", "quick", "no-preprocess", "verbose"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if BOOL_FLAGS.contains(&key) {
+                out.flags.push(key.to_string());
+                i += 1;
+            } else {
+                let v = argv.get(i + 1).with_context(|| format!("--{key} needs a value"))?;
+                out.kv.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&argv(&["--alpha", "0.01", "--naive", "--procs", "96"])).unwrap();
+        assert_eq!(a.get("alpha"), Some("0.01"));
+        assert!(a.flag("naive"));
+        assert!(!a.flag("ethernet"));
+        assert_eq!(a.get_usize("procs", 1).unwrap(), 96);
+        assert_eq!(a.get_f64("alpha", 0.05).unwrap(), 0.01);
+        assert_eq!(a.get_f64("beta", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn rejects_positional_and_dangling() {
+        assert!(Args::parse(&argv(&["positional"])).is_err());
+        assert!(Args::parse(&argv(&["--alpha"])).is_err());
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse(&argv(&[])).unwrap();
+        assert!(a.require("data").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Subcommand implementations.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::all_scenarios;
+use crate::db::{read_labels, read_transactions, Database};
+use crate::fabric::sim::NetModel;
+use crate::lamp::{lamp2::lamp2_serial, lamp_serial};
+use crate::lcm::{mine_closed, Visit};
+use crate::par::{lamp_parallel_sim, SimConfig};
+use crate::runtime::{artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime};
+use crate::util::table::Table;
+
+use super::args::Args;
+
+fn load_db(args: &Args) -> Result<Database> {
+    let data = args.require("data")?;
+    let labels_path = args.require("labels")?;
+    let (n_items, trans) = read_transactions(Path::new(data))?;
+    let labels = read_labels(Path::new(labels_path))?;
+    anyhow::ensure!(
+        labels.len() == trans.len(),
+        "{} labels vs {} transactions",
+        labels.len(),
+        trans.len()
+    );
+    Ok(Database::from_transactions(n_items, &trans, &labels))
+}
+
+fn scenario_db(args: &Args) -> Result<(String, Database)> {
+    let name = args.require("scenario")?;
+    let quick = args.flag("quick");
+    let sc = all_scenarios(quick)
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown scenario '{name}' (see `parlamp scenarios`)"))?;
+    Ok((name.to_string(), sc.build()))
+}
+
+/// `parlamp lamp` — full three-phase LAMP on a dataset from disk.
+pub fn cmd_lamp(args: &Args) -> Result<()> {
+    let db = load_db(args)?;
+    let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
+    let engine = args.get("engine").unwrap_or("serial");
+    let res = match engine {
+        "serial" => lamp_serial(&db, alpha),
+        "lamp2" => lamp2_serial(&db, alpha),
+        other => bail!("unknown --engine '{other}' (serial|lamp2)"),
+    };
+    println!(
+        "N={} items={} density={:.4}% N_pos={}",
+        db.n_trans(),
+        db.n_items(),
+        db.density() * 100.0,
+        db.marginals().n_pos
+    );
+    println!("{}", res.summary());
+
+    let significant = match args.get("screen").unwrap_or("native") {
+        "native" => res.significant.clone(),
+        "xla" => {
+            let rt = XlaRuntime::load(&artifacts_dir())
+                .context("load XLA artifacts (run `make artifacts`)")?;
+            let eng = ScreenEngine::new(rt);
+            phase3_extract_xla(&eng, &db, res.min_sup, res.correction_factor, alpha)?
+        }
+        other => bail!("unknown --screen '{other}' (native|xla)"),
+    };
+    let mut t = Table::new(&["rank", "items", "x", "n", "p-value"]);
+    for (i, s) in significant.iter().take(20).enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            format!("{:?}", s.items),
+            s.support.to_string(),
+            s.pos_support.to_string(),
+            format!("{:.3e}", s.p_value),
+        ]);
+    }
+    println!("{}", t.render());
+    if significant.len() > 20 {
+        println!("… and {} more", significant.len() - 20);
+    }
+    Ok(())
+}
+
+/// `parlamp mine` — plain frequent closed itemset mining.
+pub fn cmd_mine(args: &Args) -> Result<()> {
+    let data = args.require("data")?;
+    let (n_items, trans) = read_transactions(Path::new(data))?;
+    let labels = vec![false; trans.len()];
+    let db = Database::from_transactions(n_items, &trans, &labels);
+    let min_sup = args.get_usize("min-sup", 1)? as u32;
+    let mut count = 0u64;
+    let verbose = args.flag("verbose");
+    let stats = mine_closed(&db, min_sup, |node, ms| {
+        count += 1;
+        if verbose {
+            println!("{:?} (sup {})", node.items, node.support);
+        }
+        (Visit::Continue, ms)
+    });
+    println!(
+        "closed itemsets: {count} (expanded {} candidates, {} word-ops)",
+        stats.expand.candidates, stats.expand.word_ops
+    );
+    Ok(())
+}
+
+/// `parlamp sim` — one DES run with full reporting.
+pub fn cmd_sim(args: &Args) -> Result<()> {
+    let (name, db) = scenario_db(args)?;
+    let p = args.get_usize("procs", 12)?;
+    let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
+    // The speedup baseline is the *same computation* serially: LAMP
+    // phases 1+2 with support-increase pruning (not a full enumeration).
+    let cal = crate::bench::calibrate_lamp(&db, alpha);
+    let t1 = cal.t1_s;
+    let cfg = SimConfig {
+        p,
+        net: if args.flag("ethernet") { NetModel::ethernet() } else { NetModel::default() },
+        steal: !args.flag("naive"),
+        preprocess: !args.flag("no-preprocess"),
+        seed: args.get_u64("seed", 2015)?,
+        ..SimConfig::calibrated(p, &cal)
+    };
+    let (res, p1, p2) = lamp_parallel_sim(&db, alpha, &cfg);
+    println!("scenario {name}: {}", res.summary());
+    println!(
+        "serial t1={:.3}s | P={p} phase1={:.4}s phase2={:.4}s speedup₁={:.1}×",
+        t1,
+        p1.makespan_s,
+        p2.makespan_s,
+        t1 / (p1.makespan_s + p2.makespan_s).max(1e-12)
+    );
+    println!(
+        "comm: sent={} gives={} tasks={} rejects={} bytes={}",
+        p1.comm.sent + p2.comm.sent,
+        p1.comm.gives + p2.comm.gives,
+        p1.comm.tasks_shipped + p2.comm.tasks_shipped,
+        p1.comm.rejects + p2.comm.rejects,
+        p1.comm.bytes_sent + p2.comm.bytes_sent,
+    );
+    let b = crate::par::breakdown::sum(&p1.breakdowns);
+    let [pre, main, probe, idle] = b.as_secs();
+    println!("phase1 cpu-time: preprocess={pre:.4}s main={main:.4}s probe={probe:.4}s idle={idle:.4}s");
+    Ok(())
+}
+
+/// `parlamp gendata` — write a scenario to FIMI files.
+pub fn cmd_gendata(args: &Args) -> Result<()> {
+    let (name, db) = scenario_db(args)?;
+    let out = PathBuf::from(args.require("out")?);
+    std::fs::create_dir_all(&out)?;
+    // reconstruct horizontal form
+    let mut trans: Vec<Vec<crate::db::Item>> = vec![Vec::new(); db.n_trans()];
+    for i in 0..db.n_items() as crate::db::Item {
+        for t in db.col(i).iter_ones() {
+            trans[t].push(i);
+        }
+    }
+    let labels: Vec<bool> = (0..db.n_trans()).map(|t| db.pos_mask().get(t)).collect();
+    crate::db::write_transactions(&out.join(format!("{name}.dat")), &trans)?;
+    crate::db::write_labels(&out.join(format!("{name}.labels")), &labels)?;
+    println!(
+        "wrote {}/{name}.dat ({} items × {} transactions, density {:.3}%)",
+        out.display(),
+        db.n_items(),
+        db.n_trans(),
+        db.density() * 100.0
+    );
+    Ok(())
+}
+
+/// `parlamp scenarios` — list the Table-1 mirror problems.
+pub fn cmd_scenarios(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let mut t = Table::new(&["name", "items", "trans", "density", "N_pos", "class"]);
+    for s in all_scenarios(quick) {
+        let db = s.build();
+        t.row(vec![
+            s.name.to_string(),
+            db.n_items().to_string(),
+            db.n_trans().to_string(),
+            format!("{:.2}%", db.density() * 100.0),
+            db.marginals().n_pos.to_string(),
+            if s.large { "LARGE".into() } else { "small".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_cmd_runs() {
+        let args = Args::parse(&["--quick".to_string()]).unwrap();
+        cmd_scenarios(&args).unwrap();
+    }
+
+    #[test]
+    fn gendata_then_lamp_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("parlamp_cli_{}", std::process::id()));
+        let argv: Vec<String> = ["--scenario", "mcf7", "--quick", "--out", dir.to_str().unwrap()]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv).unwrap();
+        cmd_gendata(&args).unwrap();
+        let argv: Vec<String> = [
+            "--data",
+            dir.join("mcf7.dat").to_str().unwrap(),
+            "--labels",
+            dir.join("mcf7.labels").to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&argv).unwrap();
+        cmd_lamp(&args).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,74 @@
+//! Command-line driver (no clap in the offline registry — a small
+//! hand-rolled parser).
+//!
+//! ```text
+//! parlamp lamp    --data t.dat --labels t.lab [--alpha 0.05] [--screen native|xla]
+//! parlamp mine    --data t.dat [--min-sup K]
+//! parlamp sim     --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
+//! parlamp gendata --scenario alz-dom-5 --out dir/
+//! parlamp scenarios
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+/// Binary entry point.
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&argv);
+    std::process::exit(code);
+}
+
+/// Dispatch; returns the process exit code (testable).
+pub fn run(argv: &[String]) -> i32 {
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", usage());
+        return 2;
+    };
+    let args = match Args::parse(rest) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            return 2;
+        }
+    };
+    let result = match cmd.as_str() {
+        "lamp" => commands::cmd_lamp(&args),
+        "mine" => commands::cmd_mine(&args),
+        "sim" => commands::cmd_sim(&args),
+        "gendata" => commands::cmd_gendata(&args),
+        "scenarios" => commands::cmd_scenarios(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+pub fn usage() -> String {
+    "parlamp — distributed significant pattern mining (LCM + LAMP + lifeline GLB)
+
+USAGE:
+  parlamp lamp      --data FILE --labels FILE [--alpha A] [--screen native|xla] [--engine serial|lamp2]
+  parlamp mine      --data FILE [--min-sup K]
+  parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet] [--alpha A] [--seed S]
+  parlamp gendata   --scenario NAME --out DIR [--quick]
+  parlamp scenarios [--quick]
+
+Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20, alz-dom-5,
+alz-dom-10, alz-rec-30, mcf7."
+        .to_string()
+}

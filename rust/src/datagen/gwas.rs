@@ -1,0 +1,268 @@
+//! GWAS-style genotype matrix generator (paper §5.1).
+//!
+//! Pipeline mirrors the paper's preparation:
+//! 1. draw per-SNP minor allele frequencies from a spectrum,
+//! 2. generate diploid genotypes (0/1/2 minor-allele counts) with
+//!    LD-style correlation between adjacent SNPs (block copying),
+//! 3. binarize under the **dominant** (≥1 copy) or **recessive**
+//!    (2 copies) model — dominant yields the denser matrices,
+//! 4. drop items outside the MAF window (the paper's "upper 10"/"upper 20"
+//!    thresholds keep only SNPs with MAF below 10%/20%),
+//! 5. assign `n_pos` positive labels and plant significant item
+//!    combinations enriched in the positive class.
+
+use crate::db::{Database, Item};
+use crate::util::rng::Rng;
+
+/// Binarization model for diploid genotypes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeneticModel {
+    /// Mutation present iff ≥ 1 minor allele (denser items).
+    Dominant,
+    /// Mutation present iff homozygous minor (sparser items).
+    Recessive,
+}
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct GwasSpec {
+    /// SNPs drawn before MAF filtering.
+    pub n_snps: usize,
+    /// Individuals (transactions).
+    pub n_individuals: usize,
+    /// Positive-class individuals.
+    pub n_pos: usize,
+    pub model: GeneticModel,
+    /// Keep items with MAF ≤ this bound (0.10 / 0.20 in the paper).
+    pub maf_upper: f64,
+    /// Probability an SNP copies its left neighbour (LD blocks; produces
+    /// the non-trivial closures real genotype data has).
+    pub ld_copy_prob: f64,
+    /// Fraction of SNPs drawn near the MAF cap (a common-variant mode on
+    /// top of the rare-skewed spectrum); drives the density / tree-depth
+    /// regime: the paper's dense problems (Alz dom 10) have most kept
+    /// items close to the threshold.
+    pub common_frac: f64,
+    /// Planted significant patterns: (arity, positive-class penetrance).
+    pub planted: Vec<(usize, f64)>,
+    pub seed: u64,
+}
+
+impl GwasSpec {
+    /// A small default spec handy for tests and the quickstart example.
+    pub fn small(seed: u64) -> Self {
+        GwasSpec {
+            n_snps: 300,
+            n_individuals: 120,
+            n_pos: 30,
+            model: GeneticModel::Dominant,
+            maf_upper: 0.2,
+            ld_copy_prob: 0.3,
+            common_frac: 0.2,
+            planted: vec![(3, 0.8)],
+            seed,
+        }
+    }
+}
+
+/// Generate a labelled binary database plus the planted pattern item ids
+/// (post-filtering; a planted item dropped by the MAF filter is omitted).
+pub fn generate_gwas(spec: &GwasSpec) -> (Database, Vec<Vec<Item>>) {
+    let mut rng = Rng::new(spec.seed);
+    let n = spec.n_individuals;
+    let m = spec.n_snps;
+    assert!(spec.n_pos <= n);
+
+    // 1–2. genotypes with LD blocks.
+    let mut geno: Vec<Vec<u8>> = Vec::with_capacity(m); // [snp][individual]
+    let mut mafs: Vec<f64> = Vec::with_capacity(m);
+    for s in 0..m {
+        if s > 0 && rng.bernoulli(spec.ld_copy_prob) {
+            // Copy the previous SNP with small mutation noise: an LD proxy.
+            let prev = geno[s - 1].clone();
+            let mut col = prev;
+            for g in col.iter_mut() {
+                if rng.bernoulli(0.05) {
+                    *g = rng.below(3) as u8;
+                }
+            }
+            mafs.push(mafs[s - 1]);
+            geno.push(col);
+        } else {
+            // Mixture spectrum: a common-variant mode hugging the MAF cap
+            // plus a rare-skewed tail on [0.01, 0.5].
+            let q = if rng.bernoulli(spec.common_frac) {
+                spec.maf_upper * (0.55 + 0.45 * rng.f64())
+            } else {
+                0.01 + 0.49 * rng.f64().powi(2)
+            };
+            mafs.push(q);
+            let col = (0..n)
+                .map(|_| u8::from(rng.bernoulli(q)) + u8::from(rng.bernoulli(q)))
+                .collect();
+            geno.push(col);
+        }
+    }
+
+    // Labels first (planting needs them).
+    let mut labels = vec![false; n];
+    for l in labels.iter_mut().take(spec.n_pos) {
+        *l = true;
+    }
+
+    // 3. binarize.
+    let mut cols: Vec<Vec<bool>> = geno
+        .iter()
+        .map(|col| {
+            col.iter()
+                .map(|&g| match spec.model {
+                    GeneticModel::Dominant => g >= 1,
+                    GeneticModel::Recessive => g >= 2,
+                })
+                .collect()
+        })
+        .collect();
+
+    // 5a. plant patterns *before* filtering so their items keep realistic
+    // frequencies: choose `arity` random SNPs and switch them on together
+    // for a `penetrance` fraction of positives (plus background carriers).
+    let mut planted_snps: Vec<Vec<usize>> = Vec::new();
+    // keep_max is computed below from maf_upper; candidates for planting
+    // must stay under it *after* the positive-class boost, or the MAF
+    // filter would silently drop the signal.
+    let keep_max_f = 2.0 * spec.maf_upper * n as f64;
+    for &(arity, penetrance) in &spec.planted {
+        let mut snps = Vec::with_capacity(arity);
+        let mut tries = 0;
+        while snps.len() < arity {
+            let s = rng.index(m);
+            tries += 1;
+            let boosted = 2.0 * mafs[s] * n as f64 + penetrance * spec.n_pos as f64;
+            let rare_enough = boosted <= 0.9 * keep_max_f || tries > 20 * m;
+            if rare_enough && !snps.contains(&s) {
+                snps.push(s);
+            }
+        }
+        for (t, lab) in labels.iter().enumerate() {
+            if *lab && rng.bernoulli(penetrance) {
+                for &s in &snps {
+                    cols[s][t] = true;
+                }
+            }
+        }
+        planted_snps.push(snps);
+    }
+
+    // 4. MAF-window filter on realized item frequency: keep items whose
+    // carrier frequency is within (0, maf_upper·(model factor)].
+    // Dominant carriers ≈ 2q, recessive ≈ q²; filtering on the *realized*
+    // frequency matches what matters to the miner.
+    let keep_max = match spec.model {
+        GeneticModel::Dominant => (2.0 * spec.maf_upper * n as f64) as u32,
+        GeneticModel::Recessive => {
+            // recessive matrices are sparse; admit everything below the
+            // dominant-equivalent carrier bound
+            (2.0 * spec.maf_upper * n as f64) as u32
+        }
+    };
+    let mut keep_map: Vec<Option<Item>> = vec![None; m];
+    let mut trans: Vec<Vec<Item>> = vec![Vec::new(); n];
+    let mut next: Item = 0;
+    for (s, col) in cols.iter().enumerate() {
+        let sup = col.iter().filter(|&&b| b).count() as u32;
+        if sup == 0 || sup > keep_max.max(1) {
+            continue;
+        }
+        keep_map[s] = Some(next);
+        for (t, &b) in col.iter().enumerate() {
+            if b {
+                trans[t].push(next);
+            }
+        }
+        next += 1;
+    }
+
+    let planted_items: Vec<Vec<Item>> = planted_snps
+        .iter()
+        .map(|snps| {
+            let mut v: Vec<Item> = snps.iter().filter_map(|&s| keep_map[s]).collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+
+    (Database::from_transactions(next as usize, &trans, &labels), planted_items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_spec() {
+        let spec = GwasSpec::small(42);
+        let (db, planted) = generate_gwas(&spec);
+        assert_eq!(db.n_trans(), 120);
+        assert!(db.n_items() > 50, "MAF filter should keep most rare items");
+        assert!(db.n_items() <= 300);
+        assert_eq!(db.marginals().n_pos, 30);
+        assert_eq!(planted.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = GwasSpec::small(7);
+        let (a, _) = generate_gwas(&spec);
+        let (b, _) = generate_gwas(&spec);
+        assert_eq!(a.n_items(), b.n_items());
+        assert_eq!(a.density(), b.density());
+        let (c, _) = generate_gwas(&GwasSpec::small(8));
+        // different seed gives a different matrix (overwhelmingly likely)
+        assert!(a.density() != c.density() || a.n_items() != c.n_items());
+    }
+
+    #[test]
+    fn dominant_denser_than_recessive() {
+        let mut spec = GwasSpec::small(11);
+        spec.planted.clear();
+        let (dom, _) = generate_gwas(&spec);
+        spec.model = GeneticModel::Recessive;
+        let (rec, _) = generate_gwas(&spec);
+        assert!(
+            dom.density() > rec.density(),
+            "dominant {} must exceed recessive {}",
+            dom.density(),
+            rec.density()
+        );
+    }
+
+    #[test]
+    fn planted_pattern_enriched_in_positives() {
+        let mut spec = GwasSpec::small(123);
+        spec.planted = vec![(3, 0.9)];
+        let (db, planted) = generate_gwas(&spec);
+        let p = &planted[0];
+        if p.len() < 2 {
+            return; // pattern filtered away (rare); other seeds cover this
+        }
+        let occ = db.occurrence(p);
+        let npos = db.pos_support(&occ);
+        let x = occ.count();
+        // strong enrichment: most carriers are positive
+        assert!(x > 0);
+        assert!(
+            npos as f64 >= 0.6 * x as f64,
+            "planted pattern should be positive-enriched: n={npos} x={x}"
+        );
+    }
+
+    #[test]
+    fn maf_filter_bounds_item_frequency() {
+        let spec = GwasSpec { planted: vec![], ..GwasSpec::small(5) };
+        let (db, _) = generate_gwas(&spec);
+        let bound = (2.0 * spec.maf_upper * spec.n_individuals as f64) as u32;
+        for i in 0..db.n_items() as Item {
+            assert!(db.item_support(i) <= bound.max(1), "item {i} too frequent");
+        }
+    }
+}

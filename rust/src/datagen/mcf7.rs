@@ -1,0 +1,139 @@
+//! MCF7-style transcriptome workload: few items, many transactions.
+//!
+//! The paper's sixth problem (Table 1: 397 items × 12,773 transactions,
+//! density 2.94%) exercises the regime its bitmap miner is *not* tuned
+//! for — the depth-1 preprocess dominates at P ≥ 600 because there are
+//! fewer items than processes (§5.2), and the occurrence-deliver LAMP2
+//! baseline wins on it single-core (§5.5). This generator reproduces that
+//! shape: a small item vocabulary with a heavy-tailed frequency spectrum
+//! over a large transaction set.
+
+use crate::db::{Database, Item};
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct Mcf7Spec {
+    pub n_items: usize,
+    pub n_trans: usize,
+    pub n_pos: usize,
+    /// Target matrix density (paper: 0.0294).
+    pub density: f64,
+    /// Item-frequency skew: item `i` gets weight `(i+1)^-skew`.
+    pub skew: f64,
+    /// Planted positive-enriched pattern arities and penetrances.
+    pub planted: Vec<(usize, f64)>,
+    pub seed: u64,
+}
+
+impl Mcf7Spec {
+    pub fn small(seed: u64) -> Self {
+        Mcf7Spec {
+            n_items: 60,
+            n_trans: 800,
+            n_pos: 70,
+            density: 0.03,
+            skew: 0.8,
+            planted: vec![(2, 0.7)],
+            seed,
+        }
+    }
+}
+
+/// Generate the labelled database plus planted pattern ids.
+pub fn generate_mcf7_like(spec: &Mcf7Spec) -> (Database, Vec<Vec<Item>>) {
+    let mut rng = Rng::new(spec.seed);
+    let (m, n) = (spec.n_items, spec.n_trans);
+    assert!(spec.n_pos <= n);
+
+    // Zipf-ish per-item probabilities scaled to the target density.
+    let weights: Vec<f64> = (0..m).map(|i| 1.0 / ((i + 1) as f64).powf(spec.skew)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let scale = spec.density * m as f64 / wsum;
+    let probs: Vec<f64> = weights.iter().map(|w| (w * scale).min(0.9)).collect();
+
+    let mut labels = vec![false; n];
+    for l in labels.iter_mut().take(spec.n_pos) {
+        *l = true;
+    }
+
+    let mut trans: Vec<Vec<Item>> = (0..n)
+        .map(|_| {
+            (0..m as Item).filter(|&i| rng.bernoulli(probs[i as usize])).collect::<Vec<_>>()
+        })
+        .collect();
+
+    // Plant enriched combinations among positives.
+    let mut planted_items = Vec::new();
+    for &(arity, penetrance) in &spec.planted {
+        let mut items: Vec<Item> = Vec::new();
+        while items.len() < arity.min(m) {
+            let i = rng.index(m) as Item;
+            if !items.contains(&i) {
+                items.push(i);
+            }
+        }
+        items.sort_unstable();
+        for (t, lab) in labels.iter().enumerate() {
+            if *lab && rng.bernoulli(penetrance) {
+                for &i in &items {
+                    if !trans[t].contains(&i) {
+                        trans[t].push(i);
+                    }
+                }
+            }
+        }
+        planted_items.push(items);
+    }
+    for t in trans.iter_mut() {
+        t.sort_unstable();
+    }
+
+    (Database::from_transactions(m, &trans, &labels), planted_items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_density() {
+        let spec = Mcf7Spec { planted: vec![], ..Mcf7Spec::small(3) };
+        let (db, _) = generate_mcf7_like(&spec);
+        assert_eq!(db.n_items(), 60);
+        assert_eq!(db.n_trans(), 800);
+        let d = db.density();
+        assert!(
+            (d - 0.03).abs() < 0.012,
+            "density {d} should approximate the 0.03 target"
+        );
+    }
+
+    #[test]
+    fn frequency_spectrum_is_skewed() {
+        let spec = Mcf7Spec { planted: vec![], ..Mcf7Spec::small(9) };
+        let (db, _) = generate_mcf7_like(&spec);
+        // first decile of items should be much more frequent than the last
+        let head: u32 = (0..6).map(|i| db.item_support(i)).sum();
+        let tail: u32 = (54..60).map(|i| db.item_support(i)).sum();
+        assert!(head > tail, "head {head} vs tail {tail}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = Mcf7Spec::small(1);
+        let (a, pa) = generate_mcf7_like(&spec);
+        let (b, pb) = generate_mcf7_like(&spec);
+        assert_eq!(a.density(), b.density());
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn planted_items_valid() {
+        let (db, planted) = generate_mcf7_like(&Mcf7Spec::small(17));
+        for p in &planted {
+            assert!(!p.is_empty());
+            assert!(db.support(p) > 0, "planted pattern must occur");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic workload generators (the data substitution — DESIGN.md §2).
+//!
+//! The paper's genotype matrices (HapMap, Alzheimer GWAS) are
+//! restricted-access; these generators reproduce the *shape statistics*
+//! that drive the miner — item count, transaction count, density, class
+//! balance, minor-allele-frequency spectrum, linkage-disequilibrium-style
+//! item correlation, and planted significant combinations — so tree shape
+//! and protocol behaviour match the paper's regimes.
+
+pub mod gwas;
+pub mod mcf7;
+
+pub use gwas::{generate_gwas, GeneticModel, GwasSpec};
+pub use mcf7::{generate_mcf7_like, Mcf7Spec};

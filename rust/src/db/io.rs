@@ -1,0 +1,122 @@
+//! Text I/O for transaction databases.
+//!
+//! Format follows the FIMI `.dat` convention the LCM tooling uses: one
+//! transaction per line, whitespace-separated item ids. Labels are one
+//! `0`/`1` per line (1 = positive), aligned with the transaction file.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Item;
+
+/// Read a FIMI-style transaction file. Returns `(n_items, transactions)`
+/// where `n_items` is one past the largest item id seen.
+pub fn read_transactions(path: &Path) -> Result<(usize, Vec<Vec<Item>>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut trans = Vec::new();
+    let mut max_item: i64 = -1;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            trans.push(Vec::new());
+            continue;
+        }
+        let mut t = Vec::new();
+        for tok in line.split_whitespace() {
+            let item: Item = tok
+                .parse()
+                .with_context(|| format!("{}:{}: bad item '{tok}'", path.display(), lineno + 1))?;
+            max_item = max_item.max(item as i64);
+            t.push(item);
+        }
+        t.sort_unstable();
+        t.dedup();
+        trans.push(t);
+    }
+    Ok(((max_item + 1) as usize, trans))
+}
+
+/// Read a label file (one `0`/`1` per line).
+pub fn read_labels(path: &Path) -> Result<Vec<bool>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut labels = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        match line.trim() {
+            "0" => labels.push(false),
+            "1" => labels.push(true),
+            "" => {}
+            other => bail!("{}:{}: bad label '{other}'", path.display(), lineno + 1),
+        }
+    }
+    Ok(labels)
+}
+
+/// Write transactions in FIMI format.
+pub fn write_transactions(path: &Path, trans: &[Vec<Item>]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    for t in trans {
+        let line: Vec<String> = t.iter().map(|i| i.to_string()).collect();
+        writeln!(f, "{}", line.join(" "))?;
+    }
+    Ok(())
+}
+
+/// Write labels (one per line).
+pub fn write_labels(path: &Path, labels: &[bool]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    for l in labels {
+        writeln!(f, "{}", u8::from(*l))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("parlamp_io_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tpath = dir.join("t.dat");
+        let lpath = dir.join("t.labels");
+        let trans = vec![vec![0, 2, 5], vec![], vec![1, 2]];
+        let labels = vec![true, false, true];
+        write_transactions(&tpath, &trans).unwrap();
+        write_labels(&lpath, &labels).unwrap();
+        let (n_items, got) = read_transactions(&tpath).unwrap();
+        assert_eq!(n_items, 6);
+        assert_eq!(got, trans);
+        assert_eq!(read_labels(&lpath).unwrap(), labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let dir = std::env::temp_dir().join(format!("parlamp_io_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let lpath = dir.join("bad.labels");
+        std::fs::write(&lpath, "0\n2\n").unwrap();
+        assert!(read_labels(&lpath).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dedups_and_sorts_items() {
+        let dir = std::env::temp_dir().join(format!("parlamp_io_dup_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tpath = dir.join("d.dat");
+        std::fs::write(&tpath, "3 1 3 2\n").unwrap();
+        let (_, got) = read_transactions(&tpath).unwrap();
+        assert_eq!(got, vec![vec![1, 2, 3]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

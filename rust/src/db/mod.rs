@@ -1,0 +1,196 @@
+//! Transaction databases in the paper's vertical bitmap layout.
+//!
+//! An item's column is its *occurrence bitmap* over transactions; support
+//! counting is bitwise AND + popcount (paper §4.6: dense data, no database
+//! reduction, popcount instruction). [`Database`] owns the per-item bitmaps
+//! plus the positive-class mask used by the significance statistics.
+
+mod io;
+
+pub use io::{read_labels, read_transactions, write_labels, write_transactions};
+
+use crate::bits::BitVec;
+use crate::stats::Marginals;
+
+/// Identifier of an item (column index after any preprocessing).
+pub type Item = u32;
+
+/// A binary transaction database with class labels, stored vertically.
+#[derive(Clone, Debug)]
+pub struct Database {
+    n_trans: usize,
+    /// `cols[i]` = occurrence bitmap of item `i` over transactions.
+    cols: Vec<BitVec>,
+    /// Bit `t` set iff transaction `t` is labelled positive.
+    pos_mask: BitVec,
+}
+
+impl Database {
+    /// Build from horizontal transactions (`trans[t]` = sorted-or-not item
+    /// list of transaction `t`) and a positive-class indicator per
+    /// transaction. `n_items` fixes the column count (items ≥ `n_items` are
+    /// rejected).
+    pub fn from_transactions(n_items: usize, trans: &[Vec<Item>], positive: &[bool]) -> Self {
+        assert_eq!(trans.len(), positive.len(), "labels must match transactions");
+        let n_trans = trans.len();
+        let mut cols = vec![BitVec::zeros(n_trans); n_items];
+        for (t, items) in trans.iter().enumerate() {
+            for &i in items {
+                assert!((i as usize) < n_items, "item {i} out of range {n_items}");
+                cols[i as usize].set(t, true);
+            }
+        }
+        let pos_mask =
+            BitVec::from_indices(n_trans, positive.iter().enumerate().filter(|(_, p)| **p).map(|(t, _)| t));
+        Database { n_trans, cols, pos_mask }
+    }
+
+    /// Number of transactions `N`.
+    pub fn n_trans(&self) -> usize {
+        self.n_trans
+    }
+
+    /// Number of items (columns).
+    pub fn n_items(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Occurrence bitmap of item `i`.
+    #[inline]
+    pub fn col(&self, i: Item) -> &BitVec {
+        &self.cols[i as usize]
+    }
+
+    /// Positive-class mask.
+    pub fn pos_mask(&self) -> &BitVec {
+        &self.pos_mask
+    }
+
+    /// Support of a single item.
+    #[inline]
+    pub fn item_support(&self, i: Item) -> u32 {
+        self.cols[i as usize].count()
+    }
+
+    /// Occurrence bitmap of an itemset (AND over member columns); the
+    /// all-ones vector for the empty set.
+    pub fn occurrence(&self, items: &[Item]) -> BitVec {
+        let mut occ = BitVec::ones(self.n_trans);
+        for &i in items {
+            occ = occ.and(self.col(i));
+        }
+        occ
+    }
+
+    /// Support of an itemset.
+    pub fn support(&self, items: &[Item]) -> u32 {
+        self.occurrence(items).count()
+    }
+
+    /// Positive-class support `n(I)` for an occurrence bitmap.
+    #[inline]
+    pub fn pos_support(&self, occ: &BitVec) -> u32 {
+        occ.and_count(&self.pos_mask)
+    }
+
+    /// Statistical marginals `(N, N_pos)`.
+    pub fn marginals(&self) -> Marginals {
+        Marginals::new(self.n_trans as u32, self.pos_mask.count())
+    }
+
+    /// Fraction of set bits in the item-transaction matrix (the paper's
+    /// "density" column in Table 1).
+    pub fn density(&self) -> f64 {
+        if self.n_items() == 0 || self.n_trans == 0 {
+            return 0.0;
+        }
+        let ones: u64 = self.cols.iter().map(|c| c.count() as u64).sum();
+        ones as f64 / (self.n_items() as f64 * self.n_trans as f64)
+    }
+
+    /// Drop items whose support is outside `[min_sup, max_sup]`, returning
+    /// the remapped database and the mapping `new item -> old item`.
+    ///
+    /// This is the MAF-style frequency filter applied when preparing the
+    /// GWAS inputs (paper §5.1): overly frequent or ultra-rare variants are
+    /// excluded before mining.
+    pub fn filter_items(&self, min_sup: u32, max_sup: u32) -> (Database, Vec<Item>) {
+        let mut keep = Vec::new();
+        for i in 0..self.n_items() as Item {
+            let s = self.item_support(i);
+            if s >= min_sup && s <= max_sup {
+                keep.push(i);
+            }
+        }
+        let cols = keep.iter().map(|&i| self.cols[i as usize].clone()).collect();
+        (
+            Database { n_trans: self.n_trans, cols, pos_mask: self.pos_mask.clone() },
+            keep,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 5 transactions, 4 items; transactions 0,1 positive.
+    fn tiny() -> Database {
+        let trans = vec![
+            vec![0, 1, 2],
+            vec![0, 1],
+            vec![1, 2, 3],
+            vec![0, 3],
+            vec![1],
+        ];
+        let labels = vec![true, true, false, false, false];
+        Database::from_transactions(4, &trans, &labels)
+    }
+
+    #[test]
+    fn shape_and_supports() {
+        let db = tiny();
+        assert_eq!(db.n_trans(), 5);
+        assert_eq!(db.n_items(), 4);
+        assert_eq!(db.item_support(0), 3);
+        assert_eq!(db.item_support(1), 4);
+        assert_eq!(db.item_support(3), 2);
+        assert_eq!(db.support(&[0, 1]), 2);
+        assert_eq!(db.support(&[]), 5); // empty set occurs everywhere
+        assert_eq!(db.support(&[0, 1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn positive_support_and_marginals() {
+        let db = tiny();
+        let m = db.marginals();
+        assert_eq!((m.n, m.n_pos), (5, 2));
+        let occ = db.occurrence(&[0, 1]);
+        assert_eq!(db.pos_support(&occ), 2); // both transactions 0,1
+        let occ3 = db.occurrence(&[3]);
+        assert_eq!(db.pos_support(&occ3), 0);
+    }
+
+    #[test]
+    fn density_counts_all_ones() {
+        let db = tiny();
+        // 3+4+2+2 = 11 ones over 4*5 cells
+        assert!((db.density() - 11.0 / 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn filter_items_remaps() {
+        let db = tiny();
+        let (f, map) = db.filter_items(3, 3);
+        assert_eq!(map, vec![0]); // only item 0 has support exactly 3
+        assert_eq!(f.n_items(), 1);
+        assert_eq!(f.item_support(0), 3);
+        assert_eq!(f.n_trans(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range_items() {
+        Database::from_transactions(2, &[vec![5]], &[true]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Distributed termination detection (paper §4.3).
+//!
+//! Mattern's *time algorithm* with bounded clocks, adapted from the
+//! original star topology to a spanning tree — the paper uses a **ternary**
+//! tree, as do we ([`tree::SpanningTree`]). Control waves sweep down and
+//! up the tree; each process reports its cumulative basic-message deficit
+//! (`sends − receives`) plus a cut-consistency flag derived from message
+//! time-stamps, and the root declares termination only from a consistent
+//! zero-deficit, all-idle wave.
+//!
+//! The closed-itemset histogram gather and λ broadcast (paper §4.4) are
+//! piggybacked on the same waves: `WaveUp` carries each subtree's
+//! histogram delta, `WaveDown` carries the freshest global λ. Staleness
+//! only costs wasted work, never correctness.
+
+pub mod mattern;
+pub mod tree;
+
+pub use mattern::{DtdNode, WaveOutcome};
+pub use tree::SpanningTree;

@@ -1,0 +1,125 @@
+//! Ternary spanning tree over process ranks.
+//!
+//! The paper modifies Mattern's star-topology time algorithm to "a version
+//! using a spanning tree and we have implemented a version using a ternary
+//! tree" (§4.3). Rank 0 is the root; rank `r`'s children are
+//! `3r+1, 3r+2, 3r+3` (when < P) and its parent is `(r−1)/3`.
+
+/// Position of one rank in the ternary spanning tree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanningTree {
+    rank: usize,
+    size: usize,
+    arity: usize,
+}
+
+impl SpanningTree {
+    /// The paper's ternary tree.
+    pub fn ternary(rank: usize, size: usize) -> Self {
+        Self::with_arity(rank, size, 3)
+    }
+
+    /// General `k`-ary tree (used by the ablation bench).
+    pub fn with_arity(rank: usize, size: usize, arity: usize) -> Self {
+        assert!(arity >= 1);
+        assert!(rank < size);
+        SpanningTree { rank, size, arity }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.rank == 0
+    }
+
+    /// Parent rank (`None` for the root).
+    pub fn parent(&self) -> Option<usize> {
+        if self.rank == 0 {
+            None
+        } else {
+            Some((self.rank - 1) / self.arity)
+        }
+    }
+
+    /// Child ranks present in a world of `size` processes.
+    pub fn children(&self) -> Vec<usize> {
+        (1..=self.arity)
+            .map(|k| self.rank * self.arity + k)
+            .filter(|&c| c < self.size)
+            .collect()
+    }
+
+    /// Depth of this rank (root = 0). O(log₃ P).
+    pub fn depth(&self) -> usize {
+        let mut d = 0;
+        let mut r = self.rank;
+        while r != 0 {
+            r = (r - 1) / self.arity;
+            d += 1;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn parent_child_inverse() {
+        forall("child's parent is self", 32, |rng| {
+            let size = 1 + rng.index(2000);
+            let rank = rng.index(size);
+            let t = SpanningTree::ternary(rank, size);
+            for c in t.children() {
+                let ct = SpanningTree::ternary(c, size);
+                if ct.parent() != Some(rank) {
+                    return Err(format!("size={size} rank={rank} child={c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_nonroot_has_smaller_parent() {
+        let size = 1200;
+        for rank in 1..size {
+            let t = SpanningTree::ternary(rank, size);
+            let p = t.parent().unwrap();
+            assert!(p < rank);
+        }
+    }
+
+    #[test]
+    fn tree_spans_all_ranks() {
+        // Walking down from the root reaches every rank exactly once.
+        let size = 1200;
+        let mut seen = vec![false; size];
+        let mut stack = vec![0usize];
+        while let Some(r) = stack.pop() {
+            assert!(!seen[r], "rank {r} reached twice");
+            seen[r] = true;
+            stack.extend(SpanningTree::ternary(r, size).children());
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn ternary_depth_logarithmic() {
+        assert_eq!(SpanningTree::ternary(0, 1200).depth(), 0);
+        // depth of the last rank in a 1200-node ternary tree is ~log3(1200)≈6.5
+        let d = SpanningTree::ternary(1199, 1200).depth();
+        assert!((6..=8).contains(&d), "depth {d}");
+    }
+
+    #[test]
+    fn root_has_no_parent() {
+        assert_eq!(SpanningTree::ternary(0, 7).parent(), None);
+        assert!(SpanningTree::ternary(0, 7).is_root());
+        assert!(!SpanningTree::ternary(3, 7).is_root());
+    }
+}

@@ -1,0 +1,163 @@
+//! The message fabric — an MPI-like substrate (paper §4.6 uses MVAPICH).
+//!
+//! The paper's protocol needs exactly the MPI surface of `MPI_Send` +
+//! `MPI_Iprobe`/`MPI_Recv`: asynchronous point-to-point messages and a
+//! non-blocking receive poll. [`Mailbox`] is that surface. Two backends
+//! implement it:
+//!
+//! - [`thread::ThreadFabric`] — one OS thread per process, channel-backed;
+//!   exercises the real protocol code with true concurrency.
+//! - [`sim`] — a deterministic discrete-event network used by
+//!   `par::engine_sim` to model up to 1,200 processes with a calibrated
+//!   latency/bandwidth model (the TSUBAME substitution; see DESIGN.md §2).
+//!
+//! Message taxonomy follows Mattern's terminology (paper §4.3): *basic*
+//! messages (steal protocol traffic) are counted and time-stamped for
+//! termination detection; *control* messages (DTD waves, preprocess
+//! barrier, finish) are not.
+
+pub mod sim;
+pub mod thread;
+
+use crate::db::Item;
+
+/// A search-tree task in wire form: the occurrence bitmap is stripped (the
+/// itemset identifies the node — paper §4.1) and recomputed by the thief.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireTask {
+    pub items: Vec<Item>,
+    pub core: i64,
+    pub support: u32,
+}
+
+impl WireTask {
+    /// Approximate serialized size, used by the bandwidth model.
+    pub fn wire_bytes(&self) -> usize {
+        16 + self.items.len() * std::mem::size_of::<Item>()
+    }
+}
+
+/// Steal-protocol payloads — Mattern *basic* messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BasicKind {
+    /// Work-steal request; `lifeline` marks a lifeline (hypercube-edge)
+    /// request that the victim records for deferred distribution.
+    Request { lifeline: bool },
+    /// Victim had no work. Echoes the request's `lifeline` flag so the
+    /// thief can tell a (terminal) random rejection from a lifeline
+    /// rejection — after the latter the victim has *recorded* the lifeline
+    /// and will GIVE when it next has surplus work (paper §4.2,
+    /// `Distribute`).
+    Reject { lifeline: bool },
+    /// Work transfer: half of the victim's stack.
+    Give { tasks: Vec<WireTask> },
+}
+
+/// Sparse per-support closed-set counts, the λ-gather payload (paper §4.4).
+pub type HistDelta = Vec<(u32, u64)>;
+
+/// All messages exchanged by processes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// A counted, clock-stamped basic message (steal traffic).
+    Basic { stamp: u64, kind: BasicKind },
+    /// DTD wave descending the ternary spanning tree; carries the current
+    /// global λ (piggyback, paper §4.4).
+    WaveDown { t: u64, lambda: u32 },
+    /// DTD wave ascending: aggregated message-counter deficit, cut
+    /// invalidation flag, idleness, and the closed-set histogram delta.
+    WaveUp { t: u64, count: i64, invalid: bool, all_idle: bool, hist: HistDelta },
+    /// Preprocess barrier: depth-1 histogram ascending the tree (§4.5).
+    PreUp { hist: HistDelta },
+    /// Preprocess barrier release with the initial λ.
+    PreDown { lambda: u32 },
+    /// Global termination (broadcast by the root once DTD fires).
+    Finish,
+}
+
+impl Msg {
+    /// Approximate wire size in bytes for the bandwidth model.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Msg::Basic { kind, .. } => {
+                16 + match kind {
+                    BasicKind::Request { .. } => 1,
+                    BasicKind::Reject { .. } => 1,
+                    BasicKind::Give { tasks } => {
+                        tasks.iter().map(WireTask::wire_bytes).sum::<usize>()
+                    }
+                }
+            }
+            Msg::WaveDown { .. } => 24,
+            Msg::WaveUp { hist, .. } | Msg::PreUp { hist } => 40 + hist.len() * 12,
+            Msg::PreDown { .. } => 12,
+            Msg::Finish => 8,
+        }
+    }
+
+    /// Is this a Mattern *basic* (counted) message?
+    pub fn is_basic(&self) -> bool {
+        matches!(self, Msg::Basic { .. })
+    }
+}
+
+/// The MPI-like surface a worker drives its communication through.
+pub trait Mailbox {
+    /// Own rank.
+    fn rank(&self) -> usize;
+    /// World size.
+    fn size(&self) -> usize;
+    /// Asynchronous send (never blocks).
+    fn send(&mut self, dst: usize, msg: Msg);
+    /// Non-blocking receive of any pending message (`MPI_Iprobe` + recv).
+    fn try_recv(&mut self) -> Option<(usize, Msg)>;
+}
+
+/// Per-process communication counters (reported in EXPERIMENTS.md and used
+/// by the overhead breakdown).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub sent: u64,
+    pub received: u64,
+    pub steal_requests: u64,
+    pub rejects: u64,
+    pub gives: u64,
+    pub tasks_shipped: u64,
+    pub bytes_sent: u64,
+}
+
+impl CommStats {
+    pub fn add(&mut self, o: &CommStats) {
+        self.sent += o.sent;
+        self.received += o.received;
+        self.steal_requests += o.steal_requests;
+        self.rejects += o.rejects;
+        self.gives += o.gives;
+        self.tasks_shipped += o.tasks_shipped;
+        self.bytes_sent += o.bytes_sent;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_scale_with_payload() {
+        let small = Msg::Basic { stamp: 0, kind: BasicKind::Reject { lifeline: false } };
+        let big = Msg::Basic {
+            stamp: 0,
+            kind: BasicKind::Give {
+                tasks: vec![WireTask { items: vec![1; 100], core: 5, support: 3 }],
+            },
+        };
+        assert!(big.wire_bytes() > small.wire_bytes() + 300);
+    }
+
+    #[test]
+    fn basic_classification() {
+        assert!(Msg::Basic { stamp: 1, kind: BasicKind::Reject { lifeline: false } }.is_basic());
+        assert!(!Msg::Finish.is_basic());
+        assert!(!Msg::WaveDown { t: 0, lambda: 1 }.is_basic());
+    }
+}

@@ -1,0 +1,183 @@
+//! Discrete-event simulated network.
+//!
+//! The substitution for the paper's TSUBAME testbed (DESIGN.md §2): virtual
+//! processes exchange messages through an event queue with a calibrated
+//! latency + bandwidth model. The *protocol code is the real worker*; only
+//! time is virtual, so load-balancing dynamics, steal traffic, and
+//! termination behaviour are faithful at P = 1,200 on a single host.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::{Mailbox, Msg};
+
+/// Network timing model. Defaults approximate dual-rail QDR InfiniBand
+/// (the paper's interconnect): ~2 µs one-way latency, 80 Gbps aggregate.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// One-way message latency in nanoseconds.
+    pub latency_ns: u64,
+    /// Bandwidth in bytes per nanosecond (10 B/ns = 80 Gbps).
+    pub bytes_per_ns: f64,
+    /// Fixed per-message software overhead charged to the *receiver*'s
+    /// probe time (send/recv call cost).
+    pub sw_overhead_ns: u64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel { latency_ns: 2_000, bytes_per_ns: 10.0, sw_overhead_ns: 300 }
+    }
+}
+
+impl NetModel {
+    /// An "Ethernet-class" model for the slow-network estimate the paper
+    /// discusses in §5.2 (they could not measure one; we can simulate it).
+    pub fn ethernet() -> Self {
+        NetModel { latency_ns: 50_000, bytes_per_ns: 0.125, sw_overhead_ns: 3_000 }
+    }
+
+    /// Time for a message of `bytes` to reach its destination.
+    pub fn transit_ns(&self, bytes: usize) -> u64 {
+        self.latency_ns + (bytes as f64 / self.bytes_per_ns) as u64
+    }
+}
+
+/// What happens at a virtual process.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A message arrives.
+    Deliver { src: usize, msg: Msg },
+    /// The process gets scheduled to run (its own continuation).
+    Poll,
+}
+
+/// A scheduled event. Ordering: earliest time first, FIFO within a time
+/// (the `seq` tiebreaker keeps the simulation deterministic).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub time_ns: u64,
+    pub seq: u64,
+    pub dst: usize,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ns == other.time_ns && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_ns.cmp(&other.time_ns).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Deterministic future-event list.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time_ns: u64, dst: usize, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time_ns, seq, dst, kind }));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Per-process mailbox inside the simulation. The worker sees the plain
+/// [`Mailbox`] surface; sends land in `outbox` and the engine turns them
+/// into `Deliver` events with the [`NetModel`]'s timing.
+pub struct SimMailbox {
+    pub rank: usize,
+    pub size: usize,
+    pub inbox: VecDeque<(usize, Msg)>,
+    pub outbox: Vec<(usize, Msg)>,
+}
+
+impl SimMailbox {
+    pub fn new(rank: usize, size: usize) -> Self {
+        SimMailbox { rank, size, inbox: VecDeque::new(), outbox: Vec::new() }
+    }
+}
+
+impl Mailbox for SimMailbox {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+    fn size(&self) -> usize {
+        self.size
+    }
+    fn send(&mut self, dst: usize, msg: Msg) {
+        self.outbox.push((dst, msg));
+    }
+    fn try_recv(&mut self) -> Option<(usize, Msg)> {
+        self.inbox.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(50, 1, EventKind::Poll);
+        q.push(10, 0, EventKind::Poll);
+        q.push(10, 2, EventKind::Poll);
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        let c = q.pop().unwrap();
+        assert_eq!((a.time_ns, a.dst), (10, 0));
+        assert_eq!((b.time_ns, b.dst), (10, 2)); // FIFO within equal time
+        assert_eq!((c.time_ns, c.dst), (50, 1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn net_model_transit_includes_bandwidth() {
+        let m = NetModel::default();
+        assert_eq!(m.transit_ns(0), 2_000);
+        assert_eq!(m.transit_ns(10_000), 2_000 + 1_000);
+        let e = NetModel::ethernet();
+        assert!(e.transit_ns(1_000) > m.transit_ns(1_000) * 10);
+    }
+
+    #[test]
+    fn sim_mailbox_buffers() {
+        let mut mb = SimMailbox::new(1, 4);
+        assert_eq!(mb.rank(), 1);
+        assert_eq!(mb.size(), 4);
+        mb.send(2, Msg::Finish);
+        assert_eq!(mb.outbox.len(), 1);
+        mb.inbox.push_back((0, Msg::Finish));
+        assert_eq!(mb.try_recv(), Some((0, Msg::Finish)));
+        assert!(mb.try_recv().is_none());
+    }
+}

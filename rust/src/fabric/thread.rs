@@ -1,0 +1,121 @@
+//! Thread-backed fabric: one OS thread per process, mpsc channels as the
+//! interconnect. Communication is "replaced with a memory copy" exactly as
+//! the paper describes for its single-node MPI runs (§5.3).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use super::{Mailbox, Msg};
+
+/// One process's endpoint of the thread fabric.
+pub struct ThreadMailbox {
+    rank: usize,
+    peers: Vec<Sender<(usize, Msg)>>,
+    inbox: Receiver<(usize, Msg)>,
+    /// Messages pulled in by a blocking wait but not yet consumed by the
+    /// worker's probe loop.
+    pending: VecDeque<(usize, Msg)>,
+}
+
+impl ThreadMailbox {
+    /// Block until a message arrives (buffered for the next `try_recv`) or
+    /// the timeout elapses — used by idle workers so they wake on incoming
+    /// GIVEs without spinning. Returns whether a message arrived.
+    pub fn wait_for_msg(&mut self, d: Duration) -> bool {
+        if !self.pending.is_empty() {
+            return true;
+        }
+        match self.inbox.recv_timeout(d) {
+            Ok(m) => {
+                self.pending.push_back(m);
+                true
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => false,
+        }
+    }
+}
+
+impl Mailbox for ThreadMailbox {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn send(&mut self, dst: usize, msg: Msg) {
+        // A send to a finished (dropped) peer is a no-op, mirroring MPI
+        // finalize semantics during shutdown.
+        let _ = self.peers[dst].send((self.rank, msg));
+    }
+
+    fn try_recv(&mut self) -> Option<(usize, Msg)> {
+        if let Some(m) = self.pending.pop_front() {
+            return Some(m);
+        }
+        self.inbox.try_recv().ok()
+    }
+}
+
+/// Build a fully-connected fabric of `p` endpoints.
+pub fn thread_fabric(p: usize) -> Vec<ThreadMailbox> {
+    let mut senders = Vec::with_capacity(p);
+    let mut receivers = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, inbox)| ThreadMailbox {
+            rank,
+            peers: senders.clone(),
+            inbox,
+            pending: VecDeque::new(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::BasicKind;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let mut boxes = thread_fabric(3);
+        let mut b2 = boxes.pop().unwrap();
+        let b1 = boxes.pop().unwrap();
+        let mut b0 = boxes.pop().unwrap();
+        assert_eq!(b0.rank(), 0);
+        assert_eq!(b1.rank(), 1);
+        assert_eq!(b0.size(), 3);
+        b0.send(2, Msg::Finish);
+        b0.send(2, Msg::Basic { stamp: 7, kind: BasicKind::Reject { lifeline: false } });
+        let (src, m) = b2.try_recv().unwrap();
+        assert_eq!((src, m), (0, Msg::Finish));
+        let (src, m) = b2.try_recv().unwrap();
+        assert_eq!(src, 0);
+        assert!(m.is_basic());
+        assert!(b2.try_recv().is_none());
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let mut boxes = thread_fabric(2);
+        let mut b1 = boxes.pop().unwrap();
+        let mut b0 = boxes.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let arrived = b1.wait_for_msg(Duration::from_secs(5));
+            (arrived, b1.try_recv())
+        });
+        b0.send(1, Msg::PreDown { lambda: 3 });
+        let (arrived, got) = h.join().unwrap();
+        assert!(arrived);
+        assert_eq!(got, Some((0, Msg::PreDown { lambda: 3 })));
+    }
+}

@@ -1,0 +1,168 @@
+//! Lifeline-based global load balancing topology (paper §4.2).
+//!
+//! GLB (Saraswat et al., PPoPP'11) organizes processes as a hypercube with
+//! edge length `l` plus `w` random steal attempts. The paper fixes `l = 2`
+//! (binary hypercube, the highest possible dimension) and `w = 1` from
+//! preliminary experiments; both remain configurable here for the ablation
+//! benches. With `l = 2`, the lifeline neighbors of rank `r` are
+//! `r XOR 2^j` for `j < z`, `z = ⌈log₂ P⌉`, skipping ids ≥ P.
+
+use crate::util::rng::Rng;
+
+/// The lifeline graph for one process.
+#[derive(Clone, Debug)]
+pub struct Lifelines {
+    rank: usize,
+    size: usize,
+    /// Lifeline neighbor ranks, `LL(j)` for `j < z` (deduplicated, < P).
+    neighbors: Vec<usize>,
+}
+
+impl Lifelines {
+    /// Construct the lifeline neighborhood of `rank` in a world of `size`
+    /// processes for hypercube edge length `l` (the paper uses `l = 2`).
+    ///
+    /// For general `l`, ranks are written in base `l` with `z` digits
+    /// (`l^z ≥ size`), and the `j`-th lifeline increments digit `j` mod `l`
+    /// — the structure of Saraswat et al. For `l = 2` this reduces to the
+    /// XOR form.
+    pub fn new(rank: usize, size: usize, l: usize) -> Self {
+        assert!(l >= 2, "hypercube edge length must be ≥ 2");
+        assert!(rank < size);
+        let mut z = 0usize;
+        let mut cap = 1usize;
+        while cap < size {
+            cap *= l;
+            z += 1;
+        }
+        let mut neighbors = Vec::with_capacity(z);
+        for j in 0..z {
+            // rank with base-l digit j incremented mod l
+            let base = l.pow(j as u32);
+            let digit = rank / base % l;
+            let next = (digit + 1) % l;
+            let replaced = rank - digit * base + next * base;
+            if replaced < size && replaced != rank && !neighbors.contains(&replaced) {
+                neighbors.push(replaced);
+            }
+        }
+        Lifelines { rank, size, neighbors }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Lifeline neighbors `LL(0..z)`.
+    pub fn neighbors(&self) -> &[usize] {
+        &self.neighbors
+    }
+
+    /// Dimension `z` (number of lifelines actually present).
+    pub fn z(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Index of `src` in the neighbor list, if it is one of our lifelines.
+    pub fn index_of(&self, src: usize) -> Option<usize> {
+        self.neighbors.iter().position(|&n| n == src)
+    }
+
+    /// A uniformly random steal victim ≠ self (the `w` random steals).
+    pub fn random_victim(&self, rng: &mut Rng) -> usize {
+        debug_assert!(self.size > 1);
+        loop {
+            let v = rng.index(self.size);
+            if v != self.rank {
+                return v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn l2_reduces_to_xor() {
+        for size in [2usize, 3, 8, 13, 16, 100] {
+            for rank in 0..size {
+                let ll = Lifelines::new(rank, size, 2);
+                let mut want: Vec<usize> = Vec::new();
+                let z = (usize::BITS - (size - 1).leading_zeros()) as usize;
+                for j in 0..z {
+                    let n = rank ^ (1 << j);
+                    if n < size && !want.contains(&n) {
+                        want.push(n);
+                    }
+                }
+                assert_eq!(ll.neighbors(), &want[..], "rank {rank} size {size}");
+            }
+        }
+    }
+
+    #[test]
+    fn lifelines_are_symmetric_for_l2_powers_of_two() {
+        // In a full binary hypercube the lifeline relation is symmetric.
+        let size = 16;
+        for rank in 0..size {
+            let ll = Lifelines::new(rank, size, 2);
+            for &n in ll.neighbors() {
+                let back = Lifelines::new(n, size, 2);
+                assert!(back.neighbors().contains(&rank));
+            }
+        }
+    }
+
+    #[test]
+    fn graph_is_connected() {
+        forall("lifeline graph connects all ranks", 24, |rng| {
+            let size = 2 + rng.index(200);
+            let l = 2 + rng.index(3); // l ∈ {2,3,4}
+            // BFS from 0 over lifeline edges, traversed in both directions
+            // (work flows victim→thief along an edge either may initiate).
+            let adj: Vec<Vec<usize>> =
+                (0..size).map(|r| Lifelines::new(r, size, l).neighbors().to_vec()).collect();
+            let mut seen = vec![false; size];
+            let mut queue = std::collections::VecDeque::from([0usize]);
+            seen[0] = true;
+            while let Some(u) = queue.pop_front() {
+                for &v in &adj[u] {
+                    if !seen[v] {
+                        seen[v] = true;
+                        queue.push_back(v);
+                    }
+                }
+                for (v, a) in adj.iter().enumerate() {
+                    if !seen[v] && a.contains(&u) {
+                        seen[v] = true;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("size={size} l={l}: unreachable ranks"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_victim_never_self() {
+        let ll = Lifelines::new(3, 7, 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = ll.random_victim(&mut rng);
+            assert!(v < 7 && v != 3);
+        }
+    }
+
+    #[test]
+    fn dimension_logarithmic() {
+        let ll = Lifelines::new(0, 1200, 2);
+        assert_eq!(ll.z(), 11); // 2^11 = 2048 ≥ 1200
+        assert!(ll.neighbors().iter().all(|&n| n < 1200));
+    }
+}

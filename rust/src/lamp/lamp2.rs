@@ -1,0 +1,313 @@
+//! LAMP2 baseline — occurrence-deliver LCM (Table 2 comparator).
+//!
+//! The paper compares its bitmap+popcount miner against LAMP2 (Minato et
+//! al. 2014), which is built on LCM v5.3: *horizontal* transaction lists,
+//! conditional tid-lists, and the occurrence-deliver technique. That engine
+//! is asymptotically better on sparse many-transaction data (MCF7) and
+//! worse on the dense GWAS matrices — the crossover Table 2 shows. This
+//! module is an independent implementation of that style, running the same
+//! three LAMP phases so results are comparable pattern-for-pattern.
+
+use crate::db::{Database, Item};
+use crate::lcm::{SupportHist, Visit};
+use crate::stats::FisherTable;
+
+use super::phase3::SignificantPattern;
+use super::result::LampResult;
+use super::rule::SupportIncreaseRule;
+
+/// Horizontal view of a database: per-transaction sorted item lists.
+#[derive(Clone, Debug)]
+pub struct HorizontalDb {
+    n_items: usize,
+    trans: Vec<Vec<Item>>,
+    positive: Vec<bool>,
+}
+
+impl HorizontalDb {
+    pub fn from_database(db: &Database) -> Self {
+        let n_items = db.n_items();
+        let n_trans = db.n_trans();
+        let mut trans = vec![Vec::new(); n_trans];
+        for i in 0..n_items as Item {
+            for t in db.col(i).iter_ones() {
+                trans[t].push(i);
+            }
+        }
+        let positive = (0..n_trans).map(|t| db.pos_mask().get(t)).collect();
+        HorizontalDb { n_items, trans, positive }
+    }
+
+    pub fn n_trans(&self) -> usize {
+        self.trans.len()
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+}
+
+/// A node of the occurrence-deliver search: itemset + tid-list.
+#[derive(Clone, Debug)]
+struct OdNode {
+    items: Vec<Item>,
+    core: i64,
+    tids: Vec<u32>,
+}
+
+/// Mine closed itemsets with the occurrence-deliver engine, with the same
+/// dynamic-minimum-support visitor contract as `lcm::mine_closed`.
+pub fn mine_closed_od<F>(h: &HorizontalDb, initial_min_sup: u32, mut visit: F) -> u64
+where
+    F: FnMut(&[Item], u32, &[u32], u32) -> (Visit, u32),
+{
+    let n = h.n_trans();
+    let m = h.n_items;
+    let mut min_sup = initial_min_sup.max(1);
+    let mut visited: u64 = 0;
+
+    // Root: closure of the empty set = items present in every transaction.
+    let all_tids: Vec<u32> = (0..n as u32).collect();
+    let mut cnt = vec![0u32; m];
+    for t in &h.trans {
+        for &i in t {
+            cnt[i as usize] += 1;
+        }
+    }
+    let root_items: Vec<Item> =
+        (0..m as Item).filter(|&i| cnt[i as usize] == n as u32).collect();
+    if !root_items.is_empty() && n as u32 >= min_sup {
+        visited += 1;
+        let (v, ms) = visit(&root_items, n as u32, &all_tids, min_sup);
+        min_sup = ms.max(min_sup);
+        if matches!(v, Visit::Stop | Visit::PruneChildren) {
+            return visited;
+        }
+    }
+
+    let mut stack = vec![OdNode { items: root_items, core: -1, tids: all_tids }];
+    // Reusable delivery buckets.
+    let mut bucket: Vec<Vec<u32>> = vec![Vec::new(); m];
+    let mut touched: Vec<Item> = Vec::new();
+    let mut ccnt = vec![0u32; m];
+
+    while let Some(node) = stack.pop() {
+        // Visit at pop (traversal) time, matching the bitmap engine.
+        if node.core >= 0 {
+            if (node.tids.len() as u32) < min_sup {
+                continue;
+            }
+            visited += 1;
+            let (v, ms) =
+                visit(&node.items, node.tids.len() as u32, &node.tids, min_sup);
+            min_sup = ms.max(min_sup);
+            match v {
+                Visit::Stop => return visited,
+                Visit::PruneChildren => continue,
+                Visit::Continue => {}
+            }
+        }
+        // Occurrence deliver: bucket tids by candidate extension item.
+        for &tid in &node.tids {
+            for &i in &h.trans[tid as usize] {
+                if (i as i64) > node.core && node.items.binary_search(&i).is_err() {
+                    if bucket[i as usize].is_empty() {
+                        touched.push(i);
+                    }
+                    bucket[i as usize].push(tid);
+                }
+            }
+        }
+        touched.sort_unstable();
+        let mut children = Vec::new();
+        for &i in &touched {
+            let tids = std::mem::take(&mut bucket[i as usize]);
+            let sup = tids.len() as u32;
+            if sup < min_sup {
+                continue;
+            }
+            // Count every item's frequency inside the candidate denotation
+            // (one conditional-database pass).
+            let mut cand_items: Vec<Item> = Vec::new();
+            for &tid in &tids {
+                for &j in &h.trans[tid as usize] {
+                    ccnt[j as usize] += 1;
+                    if ccnt[j as usize] == 1 {
+                        cand_items.push(j);
+                    }
+                }
+            }
+            // PPC check + closure completion.
+            let mut ok = true;
+            let mut closure: Vec<Item> = node.items.clone();
+            closure.push(i);
+            for &j in &cand_items {
+                if ccnt[j as usize] == sup && node.items.binary_search(&j).is_err() && j != i {
+                    if j < i {
+                        ok = false;
+                    } else {
+                        closure.push(j);
+                    }
+                }
+            }
+            for &j in &cand_items {
+                ccnt[j as usize] = 0; // reset scratch
+            }
+            if !ok {
+                continue;
+            }
+            closure.sort_unstable();
+            children.push(OdNode { items: closure, core: i as i64, tids });
+        }
+        for &k in &touched {
+            bucket[k as usize].clear();
+        }
+        touched.clear();
+        // Reverse push for DFS order, matching the bitmap engine.
+        while let Some(c) = children.pop() {
+            stack.push(c);
+        }
+    }
+    visited
+}
+
+/// Full three-phase LAMP on the occurrence-deliver engine.
+pub fn lamp2_serial(db: &Database, alpha: f64) -> LampResult {
+    let h = HorizontalDb::from_database(db);
+    let rule = SupportIncreaseRule::new(db.marginals(), alpha);
+    let mut hist = SupportHist::new(db.n_trans());
+    let mut lambda: u32 = 1;
+
+    // Phase 1: support increase.
+    let p1_visited = mine_closed_od(&h, 1, |_items, sup, _tids, _ms| {
+        hist.record(sup);
+        lambda = rule.advance(lambda, |l| hist.cs_ge(l));
+        (Visit::Continue, lambda)
+    });
+    let min_sup = lambda.saturating_sub(1).max(1);
+
+    // Phase 2: count at min_sup.
+    let mut k: u64 = 0;
+    mine_closed_od(&h, min_sup, |_items, _sup, _tids, ms| {
+        k += 1;
+        (Visit::Continue, ms)
+    });
+    let k = k.max(1);
+
+    // Phase 3: extract significant patterns.
+    let fisher = FisherTable::new(db.marginals());
+    let delta = alpha / k as f64;
+    let log_delta = delta.ln();
+    let mut significant = Vec::new();
+    mine_closed_od(&h, min_sup, |items, sup, tids, ms| {
+        let n_obs = tids.iter().filter(|&&t| h.positive[t as usize]).count() as u32;
+        let log_p = fisher.log_p_value(sup, n_obs);
+        if log_p <= log_delta {
+            significant.push(SignificantPattern {
+                items: items.to_vec(),
+                support: sup,
+                pos_support: n_obs,
+                p_value: log_p.exp(),
+            });
+        }
+        (Visit::Continue, ms)
+    });
+    significant.sort_by(|a, b| {
+        a.p_value.partial_cmp(&b.p_value).unwrap().then_with(|| a.items.cmp(&b.items))
+    });
+
+    LampResult {
+        alpha,
+        lambda_final: lambda,
+        min_sup,
+        correction_factor: k,
+        adjusted_level: delta,
+        significant,
+        phase1_closed: p1_visited,
+        phase2_closed: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lamp::lamp_serial;
+    use crate::lcm::brute_force_closed;
+    use crate::util::propcheck::forall;
+    use crate::util::rng::Rng;
+
+    fn random_db(rng: &mut Rng) -> Database {
+        let m = 3 + rng.index(6);
+        let n = 4 + rng.index(16);
+        let trans: Vec<Vec<Item>> = (0..n)
+            .map(|_| (0..m as Item).filter(|_| rng.bernoulli(0.45)).collect())
+            .collect();
+        let labels: Vec<bool> = (0..n).map(|t| t < n.div_ceil(3)).collect();
+        Database::from_transactions(m, &trans, &labels)
+    }
+
+    #[test]
+    fn od_enumeration_matches_brute_force() {
+        forall("OD miner == brute force", 40, |rng| {
+            let db = random_db(rng);
+            let h = HorizontalDb::from_database(&db);
+            let min_sup = 1 + rng.below(3) as u32;
+            let mut got: Vec<(Vec<Item>, u32)> = Vec::new();
+            mine_closed_od(&h, min_sup, |items, sup, _tids, ms| {
+                got.push((items.to_vec(), sup));
+                (Visit::Continue, ms)
+            });
+            got.sort();
+            let want = brute_force_closed(&db, min_sup);
+            if got != want {
+                return Err(format!("min_sup={min_sup}\n got {got:?}\nwant {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lamp2_agrees_with_bitmap_lamp() {
+        forall("lamp2_serial == lamp_serial", 25, |rng| {
+            let db = random_db(rng);
+            let a = lamp_serial(&db, 0.05);
+            let b = lamp2_serial(&db, 0.05);
+            if a.lambda_final != b.lambda_final
+                || a.min_sup != b.min_sup
+                || a.correction_factor != b.correction_factor
+            {
+                return Err(format!(
+                    "phase1/2 mismatch: bitmap λ*={} k={}, od λ*={} k={}",
+                    a.lambda_final, a.correction_factor, b.lambda_final, b.correction_factor
+                ));
+            }
+            if a.significant.len() != b.significant.len() {
+                return Err(format!(
+                    "phase3 mismatch: {} vs {}",
+                    a.significant.len(),
+                    b.significant.len()
+                ));
+            }
+            for (x, y) in a.significant.iter().zip(&b.significant) {
+                if x.items != y.items || (x.p_value - y.p_value).abs() > 1e-12 {
+                    return Err(format!("pattern mismatch {x:?} vs {y:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tidlists_consistent_with_labels() {
+        let mut rng = Rng::new(5);
+        let db = random_db(&mut rng);
+        let h = HorizontalDb::from_database(&db);
+        assert_eq!(h.n_trans(), db.n_trans());
+        assert_eq!(h.n_items(), db.n_items());
+        mine_closed_od(&h, 1, |items, sup, tids, ms| {
+            assert_eq!(sup as usize, tids.len());
+            assert_eq!(db.support(items), sup);
+            (Visit::Continue, ms)
+        });
+    }
+}

@@ -1,0 +1,53 @@
+//! LAMP — Limitless-Arity Multiple-testing Procedure (paper §3).
+//!
+//! Three phases:
+//! 1. [`phase1`]: the *support-increase* search finds the optimal minimum
+//!    support `λ* − 1` in a single closed-itemset traversal, raising the
+//!    running threshold `λ` whenever the count of closed sets with support
+//!    ≥ λ exceeds `α / f(λ−1)` (Eq. 3.1 + Fig. 2).
+//! 2. [`phase2`]: re-mines at the final minimum support to obtain the
+//!    Tarone–Bonferroni correction factor `k = CS(λ*−1)`.
+//! 3. [`phase3`]: extracts itemsets with Fisher `P(I) ≤ α / k` among the
+//!    closed sets of frequency ≥ λ*−1 (optionally through the XLA screen —
+//!    see `runtime::screen`).
+//!
+//! [`lamp2`] is the serial comparator of Table 2: an occurrence-deliver /
+//! conditional-database LCM in the style of LCM v5.3, which wins on sparse
+//! many-transaction data and loses on the dense GWAS matrices — the
+//! crossover the paper reports.
+
+pub mod lamp2;
+pub mod phase1;
+pub mod phase2;
+pub mod phase3;
+pub mod result;
+mod rule;
+
+pub use phase1::{phase1_serial, Phase1Result};
+pub use phase2::{phase2_count, Phase2Result};
+pub use phase3::{phase3_extract, SignificantPattern};
+pub use result::LampResult;
+pub use rule::SupportIncreaseRule;
+
+use crate::db::Database;
+
+/// Run the complete three-phase LAMP procedure serially.
+///
+/// This is the reference pipeline; the distributed engines replace phase 1
+/// and phase 2's traversals but reuse the same rule and extraction code, so
+/// results are bit-identical (asserted by the integration tests).
+pub fn lamp_serial(db: &Database, alpha: f64) -> LampResult {
+    let p1 = phase1_serial(db, alpha);
+    let p2 = phase2_count(db, p1.min_sup);
+    let sig = phase3_extract(db, p1.min_sup, p2.correction_factor, alpha);
+    LampResult {
+        alpha,
+        lambda_final: p1.lambda_final,
+        min_sup: p1.min_sup,
+        correction_factor: p2.correction_factor,
+        adjusted_level: alpha / p2.correction_factor as f64,
+        significant: sig,
+        phase1_closed: p1.stats.closed,
+        phase2_closed: p2.closed,
+    }
+}

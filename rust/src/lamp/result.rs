@@ -1,0 +1,72 @@
+//! Aggregate result of a LAMP run.
+
+use super::phase3::SignificantPattern;
+
+/// Everything a LAMP run reports (matches the columns of Table 1 plus the
+/// phase-3 output of §5.6).
+#[derive(Clone, Debug)]
+pub struct LampResult {
+    pub alpha: f64,
+    /// Final λ of the support-increase search.
+    pub lambda_final: u32,
+    /// Optimal minimum support `λ_final − 1` (the paper's Table 1 λ column
+    /// reports this value).
+    pub min_sup: u32,
+    /// Correction factor `k = CS(min_sup)` (Table 1 "nu. CS").
+    pub correction_factor: u64,
+    /// Adjusted per-test level `δ = α / k`.
+    pub adjusted_level: f64,
+    /// Significant patterns, ascending P-value.
+    pub significant: Vec<SignificantPattern>,
+    /// Closed sets visited during (pruned) phase 1.
+    pub phase1_closed: u64,
+    /// Closed sets counted in phase 2 (= `correction_factor`).
+    pub phase2_closed: u64,
+}
+
+impl LampResult {
+    /// Largest significant pattern arity (paper §5.6 reports 8 for
+    /// HapMap dom 20).
+    pub fn max_arity(&self) -> usize {
+        self.significant.iter().map(|s| s.items.len()).max().unwrap_or(0)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "λ*={} min_sup={} k={} δ={:.3e} significant={} max_arity={}",
+            self.lambda_final,
+            self.min_sup,
+            self.correction_factor,
+            self.adjusted_level,
+            self.significant.len(),
+            self.max_arity()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_and_arity() {
+        let r = LampResult {
+            alpha: 0.05,
+            lambda_final: 5,
+            min_sup: 4,
+            correction_factor: 42,
+            adjusted_level: 0.05 / 42.0,
+            significant: vec![SignificantPattern {
+                items: vec![1, 2, 3],
+                support: 7,
+                pos_support: 6,
+                p_value: 1e-5,
+            }],
+            phase1_closed: 10,
+            phase2_closed: 42,
+        };
+        assert_eq!(r.max_arity(), 3);
+        assert!(r.summary().contains("min_sup=4"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Brute-force closed-itemset enumeration — the test oracle.
+//!
+//! Enumerates every subset of items (so only usable for ≤ ~20 items),
+//! computes its closure, and collects the distinct closed sets with support
+//! ≥ `min_sup`. Quadratic and allocation-happy on purpose: it is the
+//! *independent* implementation the LCM tree search is validated against.
+
+use std::collections::BTreeSet;
+
+use crate::db::{Database, Item};
+
+/// All distinct non-empty-support closed itemsets with support ≥ `min_sup`,
+/// sorted. Includes the closure of the empty set only if it is non-empty
+/// (matching the miner, which reports the root only when non-empty).
+pub fn brute_force_closed(db: &Database, min_sup: u32) -> Vec<(Vec<Item>, u32)> {
+    let m = db.n_items();
+    assert!(m <= 22, "brute force oracle limited to tiny databases");
+    let mut seen: BTreeSet<Vec<Item>> = BTreeSet::new();
+    let mut out = Vec::new();
+    for mask in 0u64..(1u64 << m) {
+        let items: Vec<Item> = (0..m as Item).filter(|i| mask >> i & 1 == 1).collect();
+        let occ = db.occurrence(&items);
+        let sup = occ.count();
+        if sup < min_sup.max(1) {
+            continue; // empty-support sets are never reported
+        }
+        // closure = all items whose column contains occ
+        let closure: Vec<Item> =
+            (0..m as Item).filter(|&j| occ.is_subset_of(db.col(j))).collect();
+        if closure.is_empty() {
+            continue; // closure of the empty set when no item is universal
+        }
+        if seen.insert(closure.clone()) {
+            let csup = db.support(&closure);
+            out.push((closure, csup));
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_example_by_hand() {
+        // trans: {0,1}, {0,1}, {1}
+        let db = Database::from_transactions(
+            2,
+            &[vec![0, 1], vec![0, 1], vec![1]],
+            &[true, false, false],
+        );
+        let got = brute_force_closed(&db, 1);
+        // closed sets: {1} (sup 3), {0,1} (sup 2)
+        assert_eq!(got, vec![(vec![0, 1], 2), (vec![1], 3)]);
+    }
+
+    #[test]
+    fn min_sup_filters() {
+        let db = Database::from_transactions(
+            2,
+            &[vec![0, 1], vec![0, 1], vec![1]],
+            &[true, false, false],
+        );
+        let got = brute_force_closed(&db, 3);
+        assert_eq!(got, vec![(vec![1], 3)]);
+    }
+}

@@ -1,0 +1,229 @@
+//! PPC extension — the `ProcessNode` of the paper's Fig. 5.
+//!
+//! Expanding a closed itemset `P` with core `e` generates, for every item
+//! `i > e` with `i ∉ P` and `sup(P ∪ i) ≥ min_sup`, the closure
+//! `Q = clo(P ∪ i)`; the extension is *prefix-preserving* iff
+//! `Q ∩ [0, i) = P ∩ [0, i)`. Each frequent closed itemset other than the
+//! root is produced by exactly one `(P, i)` pair, so no duplicate detection
+//! is needed — the property that makes the search a tree and therefore
+//! amenable to stack-based distribution.
+
+use crate::bits::BitVec;
+use crate::db::{Database, Item};
+
+use super::node::SearchNode;
+
+/// Reusable scratch buffers so the hot loop performs no allocations.
+#[derive(Default)]
+pub struct ExpandScratch {
+    child_occ: Option<BitVec>,
+}
+
+/// Work accounting for one expansion, used both for perf reporting and as
+/// the discrete-event simulator's virtual-time cost model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExpandStats {
+    /// Number of candidate items scanned.
+    pub candidates: u64,
+    /// Number of frequent candidates that reached the closure check.
+    pub closure_checks: u64,
+    /// Children emitted.
+    pub children: u64,
+    /// Approximate `u64`-word operations performed (the DES cost unit).
+    pub word_ops: u64,
+}
+
+impl ExpandStats {
+    pub fn add(&mut self, o: &ExpandStats) {
+        self.candidates += o.candidates;
+        self.closure_checks += o.closure_checks;
+        self.children += o.children;
+        self.word_ops += o.word_ops;
+    }
+}
+
+/// Expand `node`, pushing each PPC child onto `out` in **reverse item
+/// order** so that popping from a stack visits children in ascending order
+/// (depth-first order identical to the recursive formulation — paper §4.1).
+///
+/// `min_sup` is the current frequency threshold (the LAMP `λ`); children
+/// below it are not generated.
+pub fn expand(
+    db: &Database,
+    node: &mut SearchNode,
+    min_sup: u32,
+    scratch: &mut ExpandScratch,
+    out: &mut Vec<SearchNode>,
+) -> ExpandStats {
+    expand_filtered(db, node, min_sup, scratch, out, |_| true)
+}
+
+/// [`expand`] restricted to generating items accepted by `keep`.
+///
+/// Used by the depth-1 preprocess partition (paper §4.5): process `r` of
+/// `P` expands the root only for items `i` with `i mod P = r`, which seeds
+/// every stack without any communication.
+pub fn expand_filtered(
+    db: &Database,
+    node: &mut SearchNode,
+    min_sup: u32,
+    scratch: &mut ExpandScratch,
+    out: &mut Vec<SearchNode>,
+    keep: impl Fn(Item) -> bool,
+) -> ExpandStats {
+    let mut stats = ExpandStats::default();
+    let n_items = db.n_items() as Item;
+    let words = crate::bits::words_for(db.n_trans()) as u64;
+    let first = out.len();
+
+    // Ensure the occurrence bitmap exists (may have been stripped in
+    // transit); charge its reconstruction cost.
+    if node.occ.is_none() {
+        stats.word_ops += words * node.items.len() as u64;
+    }
+    let occ = node.occurrence(db).clone();
+
+    let start: Item = (node.core + 1) as Item; // NO_CORE = -1 -> 0
+    // Membership mask of P for O(1) "i ∈ P" checks. P is sorted and small.
+    let in_p = |i: Item| node.items.binary_search(&i).is_ok();
+
+    let child_occ = scratch.child_occ.get_or_insert_with(|| BitVec::zeros(db.n_trans()));
+
+    for i in start..n_items {
+        if in_p(i) || !keep(i) {
+            continue;
+        }
+        stats.candidates += 1;
+        stats.word_ops += words;
+        let sup = occ.and_count(db.col(i));
+        if sup < min_sup || sup == 0 {
+            continue;
+        }
+        stats.closure_checks += 1;
+        occ.and_assign_into(db.col(i), child_occ);
+        stats.word_ops += words;
+
+        // PPC check: no item j < i outside P may contain child_occ.
+        let mut prefix_ok = true;
+        for j in 0..i {
+            if in_p(j) {
+                continue;
+            }
+            stats.word_ops += 1; // early-exit scans are ~1 word on average
+            if child_occ.is_subset_of(db.col(j)) {
+                prefix_ok = false;
+                break;
+            }
+        }
+        if !prefix_ok {
+            continue;
+        }
+
+        // Closure completion: items j > i with child_occ ⊆ col(j).
+        let mut items = Vec::with_capacity(node.items.len() + 2);
+        items.extend_from_slice(&node.items);
+        items.push(i);
+        for j in i + 1..n_items {
+            if in_p(j) {
+                continue;
+            }
+            stats.word_ops += 1;
+            if child_occ.is_subset_of(db.col(j)) {
+                items.push(j);
+            }
+        }
+        items.sort_unstable();
+
+        out.push(SearchNode {
+            items,
+            core: i as i64,
+            support: sup,
+            occ: Some(child_occ.clone()),
+        });
+        stats.children += 1;
+    }
+
+    // Reverse the children pushed by this call so stack pops see ascending
+    // core order (true DFS order).
+    out[first..].reverse();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lcm::node::NO_CORE;
+
+    fn db() -> Database {
+        // The classic 4-item example; transactions chosen so several
+        // closures are non-trivial.
+        let trans = vec![
+            vec![0, 1, 2],
+            vec![0, 1],
+            vec![1, 2, 3],
+            vec![0, 3],
+            vec![1, 2],
+        ];
+        Database::from_transactions(4, &trans, &[true, true, false, false, false])
+    }
+
+    #[test]
+    fn children_have_correct_support_and_closure() {
+        let d = db();
+        let mut root = SearchNode::root(&d);
+        let mut out = Vec::new();
+        let mut scratch = ExpandScratch::default();
+        let st = expand(&d, &mut root, 1, &mut scratch, &mut out);
+        assert_eq!(st.children as usize, out.len());
+        for c in &out {
+            // support matches db
+            assert_eq!(d.support(&c.items), c.support, "items {:?}", c.items);
+            // closed: no item outside adds nothing
+            let occ = d.occurrence(&c.items);
+            for j in 0..d.n_items() as Item {
+                if !c.items.contains(&j) {
+                    assert!(
+                        !occ.is_subset_of(d.col(j)),
+                        "items {:?} not closed wrt {j}",
+                        c.items
+                    );
+                }
+            }
+            assert!(c.core > NO_CORE);
+        }
+    }
+
+    #[test]
+    fn min_sup_prunes() {
+        let d = db();
+        let mut root = SearchNode::root(&d);
+        let mut scratch = ExpandScratch::default();
+        let mut all = Vec::new();
+        expand(&d, &mut root.clone(), 1, &mut scratch, &mut all);
+        let mut frequent = Vec::new();
+        expand(&d, &mut root, 3, &mut scratch, &mut frequent);
+        assert!(frequent.len() < all.len());
+        for c in &frequent {
+            assert!(c.support >= 3);
+        }
+    }
+
+    #[test]
+    fn children_pushed_in_reverse_core_order() {
+        let d = db();
+        let mut root = SearchNode::root(&d);
+        let mut out = Vec::new();
+        expand(&d, &mut root, 1, &mut ExpandScratch::default(), &mut out);
+        for w in out.windows(2) {
+            assert!(w[0].core > w[1].core, "stack order must be reverse");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut a = ExpandStats { candidates: 1, closure_checks: 2, children: 3, word_ops: 4 };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a, ExpandStats { candidates: 2, closure_checks: 4, children: 6, word_ops: 8 });
+    }
+}

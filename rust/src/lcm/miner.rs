@@ -1,0 +1,278 @@
+//! Serial stack-based closed-itemset miner (paper Fig. 3, `DFS_Loop`).
+//!
+//! The same Pop → ProcessNode → Push loop the distributed workers run,
+//! minus the communication. The visitor can adjust the minimum support
+//! between nodes, which is how the LAMP phase-1 support-increase algorithm
+//! plugs in.
+
+use crate::db::Database;
+
+use super::expand::{expand, ExpandScratch, ExpandStats};
+use super::node::SearchNode;
+
+/// Visitor verdict for a closed itemset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Visit {
+    /// Keep searching (children of this node will be expanded).
+    Continue,
+    /// Do not expand this node's children (but keep the rest of the tree).
+    PruneChildren,
+    /// Abort the whole search.
+    Stop,
+}
+
+/// Aggregate statistics of one mining run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MineStats {
+    /// Closed itemsets reported to the visitor.
+    pub closed: u64,
+    /// Nodes popped from the stack (≥ `closed` when λ rises mid-run).
+    pub popped: u64,
+    /// Nodes skipped at pop time because λ rose past their support.
+    pub pruned_at_pop: u64,
+    /// Expansion work counters.
+    pub expand: ExpandStats,
+    /// High-water mark of the node stack.
+    pub max_stack: usize,
+}
+
+/// Histogram of closed-itemset counts by support, the quantity the LAMP
+/// support-increase rule consumes: `cs_ge(λ)` = #closed sets with support
+/// ≥ λ.
+#[derive(Clone, Debug)]
+pub struct SupportHist {
+    counts: Vec<u64>,
+}
+
+impl SupportHist {
+    pub fn new(n_trans: usize) -> Self {
+        SupportHist { counts: vec![0; n_trans + 1] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, support: u32) {
+        self.counts[support as usize] += 1;
+    }
+
+    /// Number of recorded closed sets with support ≥ `lambda`.
+    pub fn cs_ge(&self, lambda: u32) -> u64 {
+        self.counts[(lambda as usize).min(self.counts.len())..].iter().sum()
+    }
+
+    /// Merge another histogram (used by the distributed gather).
+    pub fn merge(&mut self, other: &SupportHist) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Raw counts, index = support.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total closed sets recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// Mine all closed itemsets with support ≥ the visitor-controlled minimum
+/// support, depth-first.
+///
+/// The visitor is called once per closed itemset with
+/// `(node, current_min_sup) -> (Visit, new_min_sup)`; returning a higher
+/// `new_min_sup` immediately prunes the remaining search below it (the
+/// support-increase mechanism). The root (closure of ∅) is visited only if
+/// non-empty.
+pub fn mine_closed<F>(db: &Database, initial_min_sup: u32, mut visit: F) -> MineStats
+where
+    F: FnMut(&SearchNode, u32) -> (Visit, u32),
+{
+    let mut stats = MineStats::default();
+    let mut min_sup = initial_min_sup.max(1);
+    let mut stack: Vec<SearchNode> = Vec::new();
+    let mut scratch = ExpandScratch::default();
+
+    let root = SearchNode::root(db);
+    if !root.items.is_empty() && root.support >= min_sup {
+        let (v, ms) = visit(&root, min_sup);
+        stats.closed += 1;
+        min_sup = ms.max(min_sup);
+        match v {
+            Visit::Stop => return stats,
+            Visit::PruneChildren => return stats,
+            Visit::Continue => {}
+        }
+    }
+    stack.push(root);
+
+    // Visit each closed set when it is *popped* (traversal time), exactly
+    // as the paper's Fig 2 walk-through: a node generated while λ was low
+    // but reached after λ rose past its support is skipped, not counted.
+    while let Some(mut node) = stack.pop() {
+        stats.popped += 1;
+        if node.core >= 0 {
+            if node.support < min_sup {
+                stats.pruned_at_pop += 1;
+                continue;
+            }
+            let (v, ms) = visit(&node, min_sup);
+            stats.closed += 1;
+            min_sup = ms.max(min_sup);
+            match v {
+                Visit::Stop => return stats,
+                Visit::PruneChildren => continue,
+                Visit::Continue => {}
+            }
+        }
+        stats.expand.add(&expand(db, &mut node, min_sup, &mut scratch, &mut stack));
+        stats.max_stack = stats.max_stack.max(stack.len());
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Item;
+    use crate::lcm::brute::brute_force_closed;
+    use crate::util::propcheck::forall;
+    use crate::util::rng::Rng;
+
+    fn random_db(rng: &mut Rng, max_items: usize, max_trans: usize) -> Database {
+        let m = 2 + rng.index(max_items - 1);
+        let n = 2 + rng.index(max_trans - 1);
+        let density = 0.2 + rng.f64() * 0.5;
+        let trans: Vec<Vec<Item>> = (0..n)
+            .map(|_| (0..m as Item).filter(|_| rng.bernoulli(density)).collect())
+            .collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.4)).collect();
+        Database::from_transactions(m, &trans, &labels)
+    }
+
+    fn collect(db: &Database, min_sup: u32) -> Vec<(Vec<Item>, u32)> {
+        let mut got = Vec::new();
+        mine_closed(db, min_sup, |node, ms| {
+            got.push((node.items.clone(), node.support));
+            (Visit::Continue, ms)
+        });
+        got.sort();
+        got
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_dbs() {
+        forall("LCM == brute force", 60, |rng| {
+            let db = random_db(rng, 9, 14);
+            let min_sup = 1 + rng.below(3) as u32;
+            let want = brute_force_closed(&db, min_sup);
+            let got = collect(&db, min_sup);
+            if got != want {
+                return Err(format!(
+                    "m={} n={} min_sup={min_sup}\n got {got:?}\nwant {want:?}",
+                    db.n_items(),
+                    db.n_trans()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_duplicates_ever() {
+        forall("each closed set visited once", 40, |rng| {
+            let db = random_db(rng, 10, 16);
+            let got = collect(&db, 1);
+            let mut dedup = got.clone();
+            dedup.dedup();
+            if dedup.len() != got.len() {
+                return Err("duplicate closed sets".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stop_aborts_search() {
+        let mut rng = Rng::new(3);
+        let db = random_db(&mut rng, 10, 16);
+        let mut count = 0;
+        mine_closed(&db, 1, |_, ms| {
+            count += 1;
+            (if count >= 3 { Visit::Stop } else { Visit::Continue }, ms)
+        });
+        assert_eq!(count, 3);
+    }
+
+    #[test]
+    fn raising_min_sup_mid_run_only_prunes() {
+        forall("dynamic λ result ⊆ static λ=1 result, ⊇ static λ=hi result", 30, |rng| {
+            let db = random_db(rng, 9, 14);
+            let hi = 3u32;
+            let all = collect(&db, 1);
+            let strict = collect(&db, hi);
+            // raise λ to `hi` after the 5th closed set
+            let mut seen = 0;
+            let mut dynamic = Vec::new();
+            mine_closed(&db, 1, |node, ms| {
+                seen += 1;
+                dynamic.push((node.items.clone(), node.support));
+                (Visit::Continue, if seen >= 5 { ms.max(hi) } else { ms })
+            });
+            dynamic.sort();
+            for e in &dynamic {
+                if !all.contains(e) {
+                    return Err(format!("dynamic produced non-closed {e:?}"));
+                }
+            }
+            for e in &strict {
+                if !dynamic.contains(e) {
+                    return Err(format!("dynamic missed high-support set {e:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn support_hist_cs_ge() {
+        let mut h = SupportHist::new(10);
+        h.record(3);
+        h.record(3);
+        h.record(7);
+        assert_eq!(h.cs_ge(1), 3);
+        assert_eq!(h.cs_ge(4), 1);
+        assert_eq!(h.cs_ge(8), 0);
+        assert_eq!(h.total(), 3);
+        let mut h2 = SupportHist::new(10);
+        h2.record(7);
+        h.merge(&h2);
+        assert_eq!(h.cs_ge(7), 2);
+    }
+
+    #[test]
+    fn dfs_order_matches_recursive_definition() {
+        // With reverse-order pushes the visit order must equal recursive
+        // DFS: parent's children in ascending core order, each subtree
+        // fully before the next sibling.
+        let db = Database::from_transactions(
+            3,
+            &[vec![0, 1, 2], vec![0, 1], vec![0], vec![1, 2]],
+            &[true, false, false, true],
+        );
+        let mut order = Vec::new();
+        mine_closed(&db, 1, |n, ms| {
+            order.push(n.items.clone());
+            (Visit::Continue, ms)
+        });
+        // Visits happen at generation; cores ascend within one expansion.
+        // Sanity: first visited child of the root has the smallest core.
+        assert!(!order.is_empty());
+        let mut sorted = order.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), order.len());
+    }
+}

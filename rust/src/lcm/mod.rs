@@ -1,0 +1,19 @@
+//! Linear-time Closed itemset Miner (LCM) over bitmap databases.
+//!
+//! Implements the prefix-preserving closure (PPC) extension of Uno et al.
+//! (paper §2.1): the search space is a tree whose nodes are exactly the
+//! closed itemsets, so depth-first traversal enumerates each closed set
+//! once with no duplicate checks. The single tree-node expansion
+//! ([`expand`]) is shared verbatim by the serial miner ([`mine_closed`]),
+//! the LAMP phases, and the distributed workers (`par::worker`), which is
+//! what guarantees serial/parallel result equivalence.
+
+mod brute;
+mod expand;
+mod miner;
+mod node;
+
+pub use brute::brute_force_closed;
+pub use expand::{expand, expand_filtered, ExpandScratch, ExpandStats};
+pub use miner::{mine_closed, MineStats, SupportHist, Visit};
+pub use node::{SearchNode, NO_CORE};

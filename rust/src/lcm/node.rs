@@ -1,0 +1,84 @@
+//! Search-tree node representation.
+
+use crate::bits::BitVec;
+use crate::db::{Database, Item};
+
+/// Core index of the root node (no generating item).
+pub const NO_CORE: i64 = -1;
+
+/// One node of the LCM tree: a closed itemset plus the bookkeeping the PPC
+/// extension needs.
+///
+/// The occurrence bitmap is a *cache*: it is dropped when a node is shipped
+/// to another process (the paper notes the itemset data itself identifies
+/// the node, §4.1) and lazily recomputed on first expansion.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SearchNode {
+    /// Sorted member items of the closed itemset.
+    pub items: Vec<Item>,
+    /// The generating item (PPC core); `NO_CORE` for the root.
+    pub core: i64,
+    /// Support `x(I)`.
+    pub support: u32,
+    /// Cached occurrence bitmap (`None` after a steal ships the node).
+    pub occ: Option<BitVec>,
+}
+
+impl SearchNode {
+    /// The root node: the closure of the empty itemset (all items present
+    /// in *every* transaction), support `N`.
+    pub fn root(db: &Database) -> Self {
+        let occ = BitVec::ones(db.n_trans());
+        let sup = db.n_trans() as u32;
+        let items: Vec<Item> =
+            (0..db.n_items() as Item).filter(|&i| db.item_support(i) == sup).collect();
+        SearchNode { items, core: NO_CORE, support: sup, occ: Some(occ) }
+    }
+
+    /// Occurrence bitmap, recomputing from the item list if the cache was
+    /// dropped in transit.
+    pub fn occurrence(&mut self, db: &Database) -> &BitVec {
+        if self.occ.is_none() {
+            self.occ = Some(db.occurrence(&self.items));
+        }
+        self.occ.as_ref().unwrap()
+    }
+
+    /// Strip the bitmap cache for wire transfer; returns the approximate
+    /// number of bytes the serialized node occupies (itemset + header), the
+    /// quantity the fabric's bandwidth model charges.
+    pub fn strip_for_wire(&mut self) -> usize {
+        self.occ = None;
+        self.items.len() * std::mem::size_of::<Item>() + 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db() -> Database {
+        // item 1 occurs in every transaction -> root closure = {1}
+        let trans = vec![vec![0, 1], vec![1], vec![1, 2]];
+        Database::from_transactions(3, &trans, &[true, false, false])
+    }
+
+    #[test]
+    fn root_is_closure_of_empty() {
+        let r = SearchNode::root(&db());
+        assert_eq!(r.items, vec![1]);
+        assert_eq!(r.support, 3);
+        assert_eq!(r.core, NO_CORE);
+    }
+
+    #[test]
+    fn occurrence_recomputed_after_strip() {
+        let d = db();
+        let mut n = SearchNode::root(&d);
+        let before = n.occurrence(&d).clone();
+        let bytes = n.strip_for_wire();
+        assert!(bytes >= 16);
+        assert!(n.occ.is_none());
+        assert_eq!(*n.occurrence(&d), before);
+    }
+}

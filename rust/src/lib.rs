@@ -1,0 +1,40 @@
+//! # parlamp
+//!
+//! Reproduction of *"Redesigning pattern mining algorithms for
+//! supercomputers"* (Yoshizoe, Terada & Tsuda, 2015): a distributed-memory
+//! parallel closed-itemset miner (LCM) generalized to significant pattern
+//! mining (LAMP), built on lifeline-based global load balancing, Mattern
+//! distributed termination detection, and a piggybacked support-increase
+//! protocol — plus an XLA/PJRT-offloaded batched significance screen
+//! (Fisher exact test + Tarone bound) AOT-compiled from JAX/Pallas.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - [`bits`], [`db`], [`stats`] — substrates: packed bitmaps, transaction
+//!   databases, exact-test statistics.
+//! - [`lcm`], [`lamp`] — the serial miner and the LAMP three-phase
+//!   procedure (incl. the `lamp2` occurrence-deliver baseline).
+//! - [`fabric`], [`glb`], [`dtd`], [`par`] — the distributed runtime: an
+//!   MPI-like message fabric (thread and discrete-event backends), lifeline
+//!   work stealing, termination detection, and the parallel DFS worker.
+//! - [`runtime`] — PJRT loader for the AOT artifacts built under
+//!   `python/compile` (`make artifacts`).
+//! - [`datagen`] — synthetic GWAS / transcriptome workload generators.
+//! - [`bench`], [`cli`], [`util`] — harnesses and drivers.
+
+pub mod bench;
+pub mod bits;
+pub mod cli;
+pub mod datagen;
+pub mod db;
+pub mod dtd;
+pub mod fabric;
+pub mod glb;
+pub mod lamp;
+pub mod lcm;
+pub mod par;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+/// Default family-wise error rate used throughout the paper's experiments.
+pub const DEFAULT_ALPHA: f64 = 0.05;

@@ -1,0 +1,3 @@
+fn main() {
+    parlamp::cli::main();
+}

@@ -1,0 +1,79 @@
+//! Per-process time breakdown (paper Fig. 7).
+//!
+//! The paper splits total CPU time into four categories:
+//! - **preprocess** — everything up to the depth-1 barrier release (§4.5;
+//!   for MCF7 at P ≥ 600 this includes the waiting that dominates Fig. 7),
+//! - **main** — node expansion work,
+//! - **probe** — message send/receive handling plus stack split/merge,
+//! - **idle** — waiting for steal replies or for global termination.
+
+/// Nanosecond totals per category for one process.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Breakdown {
+    pub preprocess_ns: u64,
+    pub main_ns: u64,
+    pub probe_ns: u64,
+    pub idle_ns: u64,
+}
+
+impl Breakdown {
+    pub fn total_ns(&self) -> u64 {
+        self.preprocess_ns + self.main_ns + self.probe_ns + self.idle_ns
+    }
+
+    pub fn add(&mut self, o: &Breakdown) {
+        self.preprocess_ns += o.preprocess_ns;
+        self.main_ns += o.main_ns;
+        self.probe_ns += o.probe_ns;
+        self.idle_ns += o.idle_ns;
+    }
+
+    /// Fill `idle` so the total spans `span_ns` (a process's unaccounted
+    /// time inside the run span is, by definition, waiting).
+    pub fn close_over_span(&mut self, span_ns: u64) {
+        let busy = self.preprocess_ns + self.main_ns + self.probe_ns;
+        self.idle_ns = span_ns.saturating_sub(busy);
+    }
+
+    pub fn as_secs(&self) -> [f64; 4] {
+        [
+            self.preprocess_ns as f64 * 1e-9,
+            self.main_ns as f64 * 1e-9,
+            self.probe_ns as f64 * 1e-9,
+            self.idle_ns as f64 * 1e-9,
+        ]
+    }
+}
+
+/// Sum a slice of breakdowns (the stacked bars of Fig. 7 are totals over
+/// all processes).
+pub fn sum(breakdowns: &[Breakdown]) -> Breakdown {
+    let mut acc = Breakdown::default();
+    for b in breakdowns {
+        acc.add(b);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_over_span_assigns_remainder_to_idle() {
+        let mut b = Breakdown { preprocess_ns: 10, main_ns: 50, probe_ns: 15, idle_ns: 0 };
+        b.close_over_span(100);
+        assert_eq!(b.idle_ns, 25);
+        assert_eq!(b.total_ns(), 100);
+        // span shorter than busy time saturates at zero idle
+        b.close_over_span(10);
+        assert_eq!(b.idle_ns, 0);
+    }
+
+    #[test]
+    fn sum_accumulates() {
+        let a = Breakdown { preprocess_ns: 1, main_ns: 2, probe_ns: 3, idle_ns: 4 };
+        let s = sum(&[a, a, a]);
+        assert_eq!(s, Breakdown { preprocess_ns: 3, main_ns: 6, probe_ns: 9, idle_ns: 12 });
+    }
+}

@@ -1,0 +1,281 @@
+//! Discrete-event engine: P virtual processes, one real core.
+//!
+//! Drives the identical [`Worker`] protocol code under virtual time. Each
+//! worker's expansions execute for real (the tree, the steals, the λ
+//! updates are the true dynamics); time is charged from the expansion work
+//! counters through a calibrated `ns_per_unit`, and the network charges
+//! the [`NetModel`]'s latency + bandwidth. This is the TSUBAME
+//! substitution that regenerates Figs. 6–7 at P up to 1,200 (DESIGN.md §2).
+
+use crate::db::Database;
+use crate::fabric::sim::{EventKind, EventQueue, NetModel, SimMailbox};
+use crate::fabric::CommStats;
+use crate::lcm::SupportHist;
+
+use super::breakdown::Breakdown;
+use super::worker::{Poll, RunMode, Worker, WorkerConfig};
+use super::ParRunResult;
+
+/// Simulation parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub p: usize,
+    pub net: NetModel,
+    /// Virtual nanoseconds per expansion cost unit. Calibrate against a
+    /// measured serial run for absolute-time fidelity (benches do).
+    pub ns_per_unit: f64,
+    /// Work budget between probes, in cost units (≈1 ms, §4.6).
+    pub probe_budget_units: u64,
+    pub dtd_interval_ns: u64,
+    /// Random steal attempts `w` (paper: 1).
+    pub w: usize,
+    /// Hypercube edge length `l` (paper: 2).
+    pub l: usize,
+    /// DTD spanning-tree arity (paper: 3).
+    pub tree_arity: usize,
+    /// `false` = naive baseline (no stealing).
+    pub steal: bool,
+    /// Depth-1 preprocess partition (§4.5).
+    pub preprocess: bool,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Calibrated configuration for a measured problem: the probe cadence
+    /// and wave interval scale with the measured serial time so the
+    /// *ratios* (work-per-probe, waves-per-run) match the paper's regime
+    /// on the scaled-down datasets. Absolute knobs clamp to the paper's
+    /// values (≈1 ms probe, 1 ms waves) for large problems.
+    pub fn calibrated(p: usize, cal: &crate::bench::Calibration) -> Self {
+        let t1_ns = cal.t1_s * 1e9;
+        let probe_ns = (t1_ns / 100_000.0).clamp(2_000.0, 1_000_000.0);
+        // λ staleness wastes ≈ P · interval · (#λ-steps) of fleet work, so
+        // the wave cadence scales inversely with P to bound that waste at
+        // ~5% of t₁ (clamped to the paper's 1 ms above, 20 µs below).
+        let dtd_ns = (0.005 * t1_ns / p as f64).clamp(20_000.0, 1_000_000.0);
+        SimConfig {
+            ns_per_unit: cal.ns_per_unit,
+            probe_budget_units: (probe_ns / cal.ns_per_unit).max(1.0) as u64,
+            dtd_interval_ns: dtd_ns as u64,
+            ..Self::paper_defaults(p)
+        }
+    }
+
+    pub fn paper_defaults(p: usize) -> Self {
+        SimConfig {
+            p,
+            net: NetModel::default(),
+            ns_per_unit: 0.25,
+            probe_budget_units: 4_000_000,
+            dtd_interval_ns: 1_000_000,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: true,
+            seed: 2015,
+        }
+    }
+}
+
+/// Run one phase (per `mode`) on the simulated machine; returns the merged
+/// results and per-process breakdowns.
+pub fn run_sim(db: &Database, mode: RunMode, cfg: &SimConfig) -> ParRunResult {
+    let p = cfg.p;
+    assert!(p >= 1);
+    let mut workers: Vec<Worker> = (0..p)
+        .map(|rank| {
+            let wc = WorkerConfig {
+                rank,
+                p,
+                w: cfg.w,
+                l: cfg.l,
+                tree_arity: cfg.tree_arity,
+                steal: cfg.steal,
+                preprocess: cfg.preprocess && p > 1,
+                mode,
+                probe_budget_units: cfg.probe_budget_units,
+                dtd_interval_ns: cfg.dtd_interval_ns,
+                ns_per_unit: Some(cfg.ns_per_unit),
+                seed: cfg.seed,
+            };
+            Worker::new(db, wc)
+        })
+        .collect();
+    let mut boxes: Vec<SimMailbox> = (0..p).map(|r| SimMailbox::new(r, p)).collect();
+    let mut queue = EventQueue::new();
+    let mut poll_scheduled = vec![false; p];
+    let mut done = vec![false; p];
+    let mut finish_at = vec![0u64; p];
+    let mut n_done = 0usize;
+
+    for r in 0..p {
+        queue.push(0, r, EventKind::Poll);
+        poll_scheduled[r] = true;
+    }
+
+    let mut now = 0u64;
+    while let Some(ev) = queue.pop() {
+        now = ev.time_ns;
+        let r = ev.dst;
+        match ev.kind {
+            EventKind::Deliver { src, msg } => {
+                if done[r] {
+                    continue; // late messages to a finished process
+                }
+                boxes[r].inbox.push_back((src, msg));
+                if !poll_scheduled[r] {
+                    poll_scheduled[r] = true;
+                    queue.push(now + cfg.net.sw_overhead_ns, r, EventKind::Poll);
+                }
+            }
+            EventKind::Poll => {
+                poll_scheduled[r] = false;
+                if done[r] {
+                    continue;
+                }
+                let outcome = workers[r].poll(&mut boxes[r], now);
+                // Route outgoing messages through the network model.
+                let outgoing = std::mem::take(&mut boxes[r].outbox);
+                for (dst, msg) in outgoing {
+                    let arrive = now + cfg.net.transit_ns(msg.wire_bytes());
+                    queue.push(arrive, dst, EventKind::Deliver { src: r, msg });
+                }
+                match outcome {
+                    Poll::Busy { cost_ns } => {
+                        poll_scheduled[r] = true;
+                        queue.push(now + cost_ns.max(1), r, EventKind::Poll);
+                    }
+                    Poll::Idle { wake_at } => {
+                        if let Some(t) = wake_at {
+                            poll_scheduled[r] = true;
+                            queue.push(t.max(now + 1), r, EventKind::Poll);
+                        }
+                    }
+                    Poll::Finished => {
+                        done[r] = true;
+                        finish_at[r] = now;
+                        n_done += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(
+        n_done, p,
+        "simulation deadlock: {}/{} processes finished at t={now}ns \
+         (stacks: {:?})",
+        n_done,
+        p,
+        workers.iter().map(|w| w.stack_len()).collect::<Vec<_>>()
+    );
+
+    let makespan_ns = finish_at.iter().copied().max().unwrap_or(now).max(now);
+    collect(db, workers, makespan_ns, mode)
+}
+
+/// Merge worker-local results into a [`ParRunResult`].
+pub(crate) fn collect(
+    db: &Database,
+    workers: Vec<Worker>,
+    makespan_ns: u64,
+    mode: RunMode,
+) -> ParRunResult {
+    let mut hist = SupportHist::new(db.n_trans());
+    let mut closed_total = 0u64;
+    let mut comm = CommStats::default();
+    let mut work_units = 0u64;
+    let mut breakdowns: Vec<Breakdown> = Vec::with_capacity(workers.len());
+    for w in &workers {
+        hist.merge(w.hist());
+        closed_total += w.closed_count();
+        comm.add(&w.comm);
+        work_units += w.work_units();
+        let mut b = w.breakdown;
+        b.close_over_span(makespan_ns);
+        breakdowns.push(b);
+    }
+    let (lambda_final, min_sup) = match mode {
+        RunMode::Phase1 { .. } => (0, 0), // finalized by finalize_phase1
+        RunMode::Count { min_sup } => (min_sup + 1, min_sup),
+    };
+    ParRunResult {
+        lambda_final,
+        min_sup,
+        hist,
+        closed_total,
+        makespan_s: makespan_ns as f64 * 1e-9,
+        breakdowns,
+        comm,
+        work_units,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Item;
+    use crate::lamp::{lamp_serial, SupportIncreaseRule};
+    use crate::util::rng::Rng;
+
+    fn random_db(rng: &mut Rng, m: usize, n: usize, density: f64) -> Database {
+        let trans: Vec<Vec<Item>> = (0..n)
+            .map(|_| (0..m as Item).filter(|_| rng.bernoulli(density)).collect())
+            .collect();
+        let labels: Vec<bool> = (0..n).map(|t| t < n / 3).collect();
+        Database::from_transactions(m, &trans, &labels)
+    }
+
+    #[test]
+    fn sim_phase1_matches_serial_small_worlds() {
+        let mut rng = Rng::new(77);
+        for p in [1usize, 2, 3, 5, 8] {
+            let db = random_db(&mut rng, 12, 30, 0.4);
+            let serial = lamp_serial(&db, 0.05);
+            let cfg = SimConfig { p, ..SimConfig::paper_defaults(p) };
+            let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
+            let mut got = run_sim(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg);
+            got.finalize_phase1(&rule);
+            assert_eq!(
+                got.lambda_final, serial.lambda_final,
+                "p={p}: λ mismatch (sim {} serial {})",
+                got.lambda_final, serial.lambda_final
+            );
+            // Histogram exact at and above λ_final.
+            for l in got.lambda_final..=db.n_trans() as u32 {
+                // serial hist unavailable here; compare via phase-2 count below
+                let _ = l;
+            }
+            let count_cfg = SimConfig { p, ..SimConfig::paper_defaults(p) };
+            let p2 = run_sim(&db, RunMode::Count { min_sup: got.min_sup }, &count_cfg);
+            assert_eq!(
+                p2.closed_total, serial.correction_factor,
+                "p={p}: phase-2 count mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_is_deterministic() {
+        let mut rng = Rng::new(3);
+        let db = random_db(&mut rng, 10, 24, 0.45);
+        let cfg = SimConfig::paper_defaults(6);
+        let a = run_sim(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg);
+        let b = run_sim(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.closed_total, b.closed_total);
+        assert_eq!(a.comm.sent, b.comm.sent);
+    }
+
+    #[test]
+    fn naive_mode_counts_equal_glb() {
+        let mut rng = Rng::new(9);
+        let db = random_db(&mut rng, 12, 28, 0.45);
+        let glb = SimConfig::paper_defaults(4);
+        let naive = SimConfig { steal: false, ..SimConfig::paper_defaults(4) };
+        let a = run_sim(&db, RunMode::Count { min_sup: 2 }, &glb);
+        let b = run_sim(&db, RunMode::Count { min_sup: 2 }, &naive);
+        assert_eq!(a.closed_total, b.closed_total, "result must not depend on stealing");
+        assert_eq!(b.comm.gives, 0, "naive mode must never ship tasks");
+    }
+}

@@ -1,0 +1,103 @@
+//! Thread engine: one OS thread per process, real wall-clock time.
+//!
+//! This is the configuration the paper runs on a single compute node
+//! (§5.3, the `t₁₂` column of Table 1): MPI communication degenerates to a
+//! memory copy. The container this reproduction runs in has a single
+//! physical core, so wall-clock *speedup* is measured with the DES engine;
+//! this engine demonstrates protocol correctness under true concurrency
+//! and OS-scheduling nondeterminism.
+
+use std::time::{Duration, Instant};
+
+use crate::db::Database;
+
+use super::engine_sim::collect;
+use super::worker::{Poll, RunMode, Worker, WorkerConfig};
+use super::ParRunResult;
+
+/// Run one phase on `p` OS threads. `steal = false` gives the naive
+/// baseline. Blocking waits cap at 200 µs so DTD waves keep flowing.
+pub fn run_threads(db: &Database, mode: RunMode, p: usize, steal: bool, seed: u64) -> ParRunResult {
+    assert!(p >= 1);
+    let boxes = crate::fabric::thread::thread_fabric(p);
+    let t0 = Instant::now();
+    let workers: Vec<Worker> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        for (rank, mut mb) in boxes.into_iter().enumerate() {
+            let cfg = WorkerConfig {
+                ns_per_unit: None, // real time
+                steal,
+                preprocess: p > 1,
+                ..WorkerConfig::paper_defaults(rank, p, mode, seed)
+            };
+            let mut worker = Worker::new(db, cfg);
+            handles.push(scope.spawn(move || {
+                let t0 = Instant::now();
+                loop {
+                    let now_ns = t0.elapsed().as_nanos() as u64;
+                    match worker.poll(&mut mb, now_ns) {
+                        Poll::Busy { .. } => {}
+                        Poll::Idle { wake_at } => {
+                            let cap = Duration::from_micros(200);
+                            let d = match wake_at {
+                                Some(t) => {
+                                    Duration::from_nanos(t.saturating_sub(now_ns)).min(cap)
+                                }
+                                None => cap,
+                            };
+                            if !d.is_zero() {
+                                mb.wait_for_msg(d);
+                            }
+                        }
+                        Poll::Finished => break,
+                    }
+                }
+                worker
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let makespan_ns = t0.elapsed().as_nanos() as u64;
+    collect(db, workers, makespan_ns, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Item;
+    use crate::lamp::{lamp_serial, SupportIncreaseRule};
+    use crate::util::rng::Rng;
+
+    fn random_db(rng: &mut Rng, m: usize, n: usize, density: f64) -> Database {
+        let trans: Vec<Vec<Item>> = (0..n)
+            .map(|_| (0..m as Item).filter(|_| rng.bernoulli(density)).collect())
+            .collect();
+        let labels: Vec<bool> = (0..n).map(|t| t < n / 3).collect();
+        Database::from_transactions(m, &trans, &labels)
+    }
+
+    #[test]
+    fn threads_phase1_matches_serial() {
+        let mut rng = Rng::new(21);
+        for p in [1usize, 2, 4] {
+            let db = random_db(&mut rng, 12, 30, 0.4);
+            let serial = lamp_serial(&db, 0.05);
+            let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
+            let mut got = run_threads(&db, RunMode::Phase1 { alpha: 0.05 }, p, true, 42);
+            got.finalize_phase1(&rule);
+            assert_eq!(got.lambda_final, serial.lambda_final, "p={p}");
+            let p2 = run_threads(&db, RunMode::Count { min_sup: got.min_sup }, p, true, 43);
+            assert_eq!(p2.closed_total, serial.correction_factor, "p={p}");
+        }
+    }
+
+    #[test]
+    fn threads_naive_matches_serial_counts() {
+        let mut rng = Rng::new(31);
+        let db = random_db(&mut rng, 10, 26, 0.5);
+        let serial = lamp_serial(&db, 0.05);
+        let p2 = run_threads(&db, RunMode::Count { min_sup: serial.min_sup }, 3, false, 7);
+        assert_eq!(p2.closed_total, serial.correction_factor);
+        assert_eq!(p2.comm.gives, 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! The distributed parallel miner (paper §4) — the system contribution.
+//!
+//! [`worker::Worker`] is the Fig. 5 `ParallelDFS` state machine: stack-based
+//! DFS, lifeline work stealing, Mattern termination detection, and the
+//! piggybacked λ protocol, written against the abstract [`crate::fabric::Mailbox`]
+//! so the *identical protocol code* runs under both engines:
+//!
+//! - [`engine_thread`] — real OS threads (the paper's single-node MPI runs);
+//! - [`engine_sim`] — the deterministic discrete-event simulation used for
+//!   the P ≤ 1,200 scaling studies (Figs. 6–7; TSUBAME substitution).
+//!
+//! The *naive baseline* of Table 2 is this same machinery with stealing
+//! disabled (`steal: false`): the depth-1 static partition plus the λ
+//! broadcast, exactly as §5.4 describes.
+
+pub mod breakdown;
+pub mod engine_sim;
+pub mod engine_thread;
+pub mod worker;
+
+pub use breakdown::Breakdown;
+pub use engine_sim::{run_sim, SimConfig};
+pub use engine_thread::run_threads;
+pub use worker::{Poll, RunMode, Worker, WorkerConfig};
+
+use crate::db::Database;
+use crate::lamp::{phase3_extract, LampResult, SupportIncreaseRule};
+use crate::lcm::SupportHist;
+
+/// Aggregate outcome of one parallel run (one phase).
+#[derive(Clone, Debug)]
+pub struct ParRunResult {
+    /// Final λ (phase 1) or the fixed minimum support (count mode).
+    pub lambda_final: u32,
+    /// `λ_final − 1` (phase-1 mode).
+    pub min_sup: u32,
+    /// Exact global closed-set histogram (merged from all workers at the
+    /// phase boundary).
+    pub hist: SupportHist,
+    /// Total closed itemsets visited.
+    pub closed_total: u64,
+    /// Wall-clock (thread engine) or virtual (sim engine) makespan.
+    pub makespan_s: f64,
+    /// Per-process time breakdown (Fig. 7).
+    pub breakdowns: Vec<Breakdown>,
+    /// Aggregated communication counters.
+    pub comm: crate::fabric::CommStats,
+    /// Total expansion work units (word-ops) across processes.
+    pub work_units: u64,
+}
+
+impl ParRunResult {
+    /// Finalize a phase-1 run: compute the exact λ from the merged
+    /// histogram (the root's in-flight λ may lag; the merged histogram is
+    /// exact, so this equals the serial result — see DESIGN.md §4).
+    pub(crate) fn finalize_phase1(&mut self, rule: &SupportIncreaseRule) {
+        self.lambda_final = rule.advance(1, |l| self.hist.cs_ge(l));
+        self.min_sup = self.lambda_final.saturating_sub(1).max(1);
+    }
+}
+
+/// Full three-phase LAMP through the DES engine (phases 1–2 distributed,
+/// phase 3 serial — the paper measures it at ~10 ms and omits it).
+pub fn lamp_parallel_sim(db: &Database, alpha: f64, cfg: &SimConfig) -> (LampResult, ParRunResult, ParRunResult) {
+    let rule = SupportIncreaseRule::new(db.marginals(), alpha);
+    let mut p1 = run_sim(db, RunMode::Phase1 { alpha }, cfg);
+    p1.finalize_phase1(&rule);
+    let p2 = run_sim(db, RunMode::Count { min_sup: p1.min_sup }, cfg);
+    let k = p2.closed_total.max(1);
+    let significant = phase3_extract(db, p1.min_sup, k, alpha);
+    let result = LampResult {
+        alpha,
+        lambda_final: p1.lambda_final,
+        min_sup: p1.min_sup,
+        correction_factor: k,
+        adjusted_level: alpha / k as f64,
+        significant,
+        phase1_closed: p1.closed_total,
+        phase2_closed: p2.closed_total,
+    };
+    (result, p1, p2)
+}
+
+/// Full three-phase LAMP through the thread engine.
+pub fn lamp_parallel_threads(
+    db: &Database,
+    alpha: f64,
+    p: usize,
+    steal: bool,
+    seed: u64,
+) -> (LampResult, ParRunResult, ParRunResult) {
+    let rule = SupportIncreaseRule::new(db.marginals(), alpha);
+    let mut p1 = run_threads(db, RunMode::Phase1 { alpha }, p, steal, seed);
+    p1.finalize_phase1(&rule);
+    let p2 = run_threads(db, RunMode::Count { min_sup: p1.min_sup }, p, steal, seed + 1);
+    let k = p2.closed_total.max(1);
+    let significant = phase3_extract(db, p1.min_sup, k, alpha);
+    let result = LampResult {
+        alpha,
+        lambda_final: p1.lambda_final,
+        min_sup: p1.min_sup,
+        correction_factor: k,
+        adjusted_level: alpha / k as f64,
+        significant,
+        phase1_closed: p1.closed_total,
+        phase2_closed: p2.closed_total,
+    };
+    (result, p1, p2)
+}

@@ -1,0 +1,85 @@
+//! Artifact manifest parsing.
+//!
+//! `manifest.json` freezes the shapes the screen artifact was lowered
+//! with. The offline build has no serde, and the manifest is flat, so a
+//! small key scanner suffices (validated against malformed input in
+//! tests).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Frozen artifact shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Batch capacity (candidate rows per execution).
+    pub k: usize,
+    /// `u32` words per packed bitmap (supports up to `32·w` transactions).
+    pub w: usize,
+    /// Fisher tail capacity; requires `n_pos + 1 ≤ t_max`.
+    pub t_max: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Extract the three top-level integer fields.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let k = scan_usize(text, "\"k\"")?;
+        let w = scan_usize(text, "\"w\"")?;
+        let t_max = scan_usize(text, "\"t_max\"")?;
+        if k == 0 || w == 0 || t_max == 0 {
+            bail!("manifest has zero-sized shapes: k={k} w={w} t_max={t_max}");
+        }
+        Ok(Manifest { k, w, t_max })
+    }
+
+    /// Max transactions a bitmap row can hold.
+    pub fn max_transactions(&self) -> usize {
+        self.w * 32
+    }
+}
+
+/// Find `"key": <integer>` at the top level (first occurrence).
+fn scan_usize(text: &str, key: &str) -> Result<usize> {
+    let at = text.find(key).with_context(|| format!("manifest missing {key}"))?;
+    let rest = &text[at + key.len()..];
+    let colon = rest.find(':').context("missing ':' after key")?;
+    let digits: String =
+        rest[colon + 1..].chars().skip_while(|c| c.is_whitespace()).take_while(char::is_ascii_digit).collect();
+    digits.parse::<usize>().with_context(|| format!("bad integer for {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest() {
+        let text = r#"{
+  "k": 1024,
+  "w": 64,
+  "t_max": 512,
+  "entries": { "screen": { "file": "screen.hlo.txt" } }
+}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m, Manifest { k: 1024, w: 64, t_max: 512 });
+        assert_eq!(m.max_transactions(), 2048);
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"k": 4, "w": 2}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_shapes() {
+        assert!(Manifest::parse(r#"{"k": 0, "w": 2, "t_max": 3}"#).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! PJRT runtime — loads and executes the AOT-compiled XLA artifacts.
+//!
+//! The build-time Python (`make artifacts`) lowers the JAX/Pallas
+//! significance screen to HLO text; this module loads it through the
+//! `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`) so the rust coordinator can score closed
+//! itemsets in batches with Python nowhere on the path.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod screen;
+
+pub use manifest::Manifest;
+pub use pjrt::XlaRuntime;
+pub use screen::{phase3_extract_xla, ScreenEngine, ScreenRow};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory, overridable with `PARLAMP_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PARLAMP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Do the AOT artifacts exist? (Benches/tests skip XLA paths otherwise;
+/// `make artifacts` builds them.)
+pub fn artifacts_available() -> bool {
+    let d = artifacts_dir();
+    has_artifacts(&d)
+}
+
+pub fn has_artifacts(dir: &Path) -> bool {
+    dir.join("manifest.json").exists() && dir.join("screen.hlo.txt").exists()
+}

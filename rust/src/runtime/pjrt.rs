@@ -1,0 +1,140 @@
+//! PJRT client wrapper: HLO-text artifact → compiled executable.
+//!
+//! Mirrors /opt/xla-example/load_hlo: text (not serialized proto) is the
+//! interchange format because jax ≥ 0.5 emits 64-bit instruction ids the
+//! bundled xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::bits::BitVec;
+use crate::stats::Marginals;
+
+use super::manifest::Manifest;
+
+/// One loaded screen executable plus its frozen shapes.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    screen: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+}
+
+/// Statistics for one screened candidate row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScreenOut {
+    pub x: i32,
+    pub n: i32,
+    pub logp: f64,
+    pub logf: f64,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and compile the screen artifact from
+    /// `dir` (usually [`super::artifacts_dir`]).
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let path = dir.join("screen.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let screen = client.compile(&comp).context("compile screen artifact")?;
+        Ok(XlaRuntime { client, screen, manifest })
+    }
+
+    pub fn manifest(&self) -> Manifest {
+        self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the screen on up to `k` packed bitmaps.
+    ///
+    /// `rows.len() ≤ k`; rows are padded with all-zero bitmaps (x = 0 ⇒
+    /// log P = 0, filtered by callers). Transactions beyond the bitmap
+    /// length are zero bits by the [`BitVec`] invariant.
+    pub fn screen_batch(&self, rows: &[&BitVec], m: Marginals) -> Result<Vec<ScreenOut>> {
+        let Manifest { k, w, t_max } = self.manifest;
+        anyhow::ensure!(rows.len() <= k, "batch {} exceeds artifact capacity {k}", rows.len());
+        anyhow::ensure!(
+            (m.n_pos as usize) < t_max,
+            "N_pos={} exceeds artifact tail capacity t_max={t_max}",
+            m.n_pos
+        );
+        if let Some(r) = rows.first() {
+            anyhow::ensure!(
+                r.len() <= w * 32,
+                "bitmap of {} transactions exceeds artifact width {} bits",
+                r.len(),
+                w * 32
+            );
+        }
+
+        let mut occ_flat: Vec<u32> = Vec::with_capacity(k * w);
+        for r in rows {
+            occ_flat.extend(r.to_u32_words(w));
+        }
+        occ_flat.resize(k * w, 0);
+        let pos_words = vec![0u32; w]; // caller overrides via screen_batch_with_pos
+        self.execute(&occ_flat, &pos_words, m, rows.len())
+    }
+
+    /// Full screen: candidate bitmaps + the positive-class mask.
+    pub fn screen_batch_with_pos(
+        &self,
+        rows: &[&BitVec],
+        pos_mask: &BitVec,
+        m: Marginals,
+    ) -> Result<Vec<ScreenOut>> {
+        let Manifest { k, w, t_max } = self.manifest;
+        anyhow::ensure!(rows.len() <= k, "batch {} exceeds artifact capacity {k}", rows.len());
+        anyhow::ensure!(
+            (m.n_pos as usize) < t_max,
+            "N_pos={} exceeds artifact tail capacity t_max={t_max}",
+            m.n_pos
+        );
+        anyhow::ensure!(
+            pos_mask.len() <= w * 32,
+            "positive mask of {} transactions exceeds artifact width {} bits",
+            pos_mask.len(),
+            w * 32
+        );
+        let mut occ_flat: Vec<u32> = Vec::with_capacity(k * w);
+        for r in rows {
+            anyhow::ensure!(r.len() == pos_mask.len(), "bitmap length mismatch");
+            occ_flat.extend(r.to_u32_words(w));
+        }
+        occ_flat.resize(k * w, 0);
+        let pos_words = pos_mask.to_u32_words(w);
+        self.execute(&occ_flat, &pos_words, m, rows.len())
+    }
+
+    fn execute(
+        &self,
+        occ_flat: &[u32],
+        pos_words: &[u32],
+        m: Marginals,
+        take: usize,
+    ) -> Result<Vec<ScreenOut>> {
+        let Manifest { k, w, .. } = self.manifest;
+        let occ = xla::Literal::vec1(occ_flat).reshape(&[k as i64, w as i64])?;
+        let pos = xla::Literal::vec1(pos_words);
+        let n_total = xla::Literal::vec1(&[m.n as f64]);
+        let n_pos = xla::Literal::vec1(&[m.n_pos as f64]);
+        let result = self.screen.execute::<xla::Literal>(&[occ, pos, n_total, n_pos])?[0][0]
+            .to_literal_sync()?;
+        let (x, n, logp, logf) = result.to_tuple4()?;
+        let x = x.to_vec::<i32>()?;
+        let n = n.to_vec::<i32>()?;
+        let logp = logp.to_vec::<f64>()?;
+        let logf = logf.to_vec::<f64>()?;
+        Ok((0..take)
+            .map(|i| ScreenOut { x: x[i], n: n[i], logp: logp[i], logf: logf[i] })
+            .collect())
+    }
+}

@@ -1,0 +1,113 @@
+//! Batched phase-3 significance screen through the XLA artifact.
+//!
+//! Walks the frequent closed itemsets exactly like the native
+//! `lamp::phase3_extract`, but accumulates candidate occurrence bitmaps
+//! into batches and scores them with one PJRT execution per batch.
+//! Integration tests assert the XLA path and the native path produce the
+//! same significant set (to f64 tolerance).
+
+use anyhow::Result;
+
+use crate::bits::BitVec;
+use crate::db::{Database, Item};
+use crate::lamp::phase3::SignificantPattern;
+use crate::lcm::{mine_closed, Visit};
+use crate::stats::Marginals;
+
+use super::pjrt::XlaRuntime;
+
+/// Re-export of the per-row output type.
+pub type ScreenRow = super::pjrt::ScreenOut;
+
+/// Batch accumulator around the runtime.
+pub struct ScreenEngine {
+    rt: XlaRuntime,
+}
+
+impl ScreenEngine {
+    pub fn new(rt: XlaRuntime) -> Self {
+        ScreenEngine { rt }
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.rt
+    }
+
+    /// Score a set of candidate bitmaps (splitting into artifact-sized
+    /// batches as needed).
+    pub fn score(
+        &self,
+        rows: &[BitVec],
+        pos_mask: &BitVec,
+        m: Marginals,
+    ) -> Result<Vec<ScreenRow>> {
+        let k = self.rt.manifest().k;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(k) {
+            let refs: Vec<&BitVec> = chunk.iter().collect();
+            out.extend(self.rt.screen_batch_with_pos(&refs, pos_mask, m)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Phase 3 through the XLA screen: identical contract to
+/// [`crate::lamp::phase3_extract`].
+pub fn phase3_extract_xla(
+    engine: &ScreenEngine,
+    db: &Database,
+    min_sup: u32,
+    correction_factor: u64,
+    alpha: f64,
+) -> Result<Vec<SignificantPattern>> {
+    let m = db.marginals();
+    let delta = alpha / correction_factor as f64;
+    let log_delta = delta.ln();
+    let batch_cap = engine.rt.manifest().k;
+
+    let mut pending_items: Vec<Vec<Item>> = Vec::new();
+    let mut pending_occ: Vec<BitVec> = Vec::new();
+    let mut out: Vec<SignificantPattern> = Vec::new();
+
+    let mut flush = |items: &mut Vec<Vec<Item>>, occ: &mut Vec<BitVec>| -> Result<()> {
+        if occ.is_empty() {
+            return Ok(());
+        }
+        let rows = engine.score(occ, db.pos_mask(), m)?;
+        for (i, row) in rows.iter().enumerate() {
+            if row.logp <= log_delta {
+                out.push(SignificantPattern {
+                    items: items[i].clone(),
+                    support: row.x as u32,
+                    pos_support: row.n as u32,
+                    p_value: row.logp.exp(),
+                });
+            }
+        }
+        items.clear();
+        occ.clear();
+        Ok(())
+    };
+
+    let mut err: Option<anyhow::Error> = None;
+    mine_closed(db, min_sup.max(1), |node, ms| {
+        pending_items.push(node.items.clone());
+        pending_occ.push(node.occ.clone().expect("serial miner keeps occ"));
+        if pending_occ.len() >= batch_cap {
+            if let Err(e) = flush(&mut pending_items, &mut pending_occ) {
+                err = Some(e);
+                return (Visit::Stop, ms);
+            }
+        }
+        (Visit::Continue, ms)
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    flush(&mut pending_items, &mut pending_occ)?;
+
+    out.sort_by(|a, b| {
+        a.p_value.partial_cmp(&b.p_value).unwrap().then_with(|| a.items.cmp(&b.items))
+    });
+    Ok(out)
+}

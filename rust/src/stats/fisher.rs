@@ -1,0 +1,161 @@
+//! One-sided Fisher's exact test (paper §3.1).
+//!
+//! For an itemset `I` with total frequency `x = x(I)` and positive-class
+//! frequency `n = n(I)` under marginals `(N, N_pos)`:
+//!
+//! ```text
+//!            min{x, N_pos}   C(N_pos, n_i) · C(N − N_pos, x − n_i)
+//! P(I)  =        Σ           ───────────────────────────────────────
+//!            n_i = n(I)                   C(N, x)
+//! ```
+//!
+//! i.e. the upper tail of the hypergeometric distribution at the observed
+//! positive count. Evaluated in log space with a numerically stable
+//! log-sum-exp over the (short) tail.
+
+use super::{LogFact, Marginals};
+
+/// Fisher exact-test evaluator bound to fixed marginals.
+#[derive(Clone, Debug)]
+pub struct FisherTable {
+    m: Marginals,
+    lf: LogFact,
+}
+
+impl FisherTable {
+    pub fn new(m: Marginals) -> Self {
+        let lf = LogFact::new(m.n);
+        FisherTable { m, lf }
+    }
+
+    pub fn marginals(&self) -> Marginals {
+        self.m
+    }
+
+    /// log-PMF of the hypergeometric: probability that exactly `k` of the
+    /// `x` transactions containing the itemset are positive.
+    #[inline]
+    fn log_pmf(&self, x: u32, k: u32) -> f64 {
+        let Marginals { n, n_pos } = self.m;
+        debug_assert!(k <= x && k <= n_pos && x - k <= n - n_pos);
+        self.lf.log_choose(n_pos, k) + self.lf.log_choose(n - n_pos, x - k)
+            - self.lf.log_choose(n, x)
+    }
+
+    /// One-sided (enrichment in positives) P-value: `P[H ≥ n_obs]` for
+    /// `H ~ Hypergeom(N, N_pos, x)`.
+    ///
+    /// Returns 1.0 when `n_obs` is at or below the distribution's lower
+    /// support limit; 0-probability cells are handled by the summation
+    /// bounds rather than `-inf` logs.
+    pub fn p_value(&self, x: u32, n_obs: u32) -> f64 {
+        self.log_p_value(x, n_obs).exp()
+    }
+
+    /// `ln P(I)`; preferred for comparisons against tiny thresholds.
+    pub fn log_p_value(&self, x: u32, n_obs: u32) -> f64 {
+        let Marginals { n, n_pos } = self.m;
+        assert!(x <= n, "x={x} > N={n}");
+        assert!(n_obs <= x, "n(I)={n_obs} > x(I)={x}");
+        let hi = x.min(n_pos);
+        // Lower support limit: x - k ≤ N - N_pos  ⇒  k ≥ x - (N - N_pos).
+        let lo_support = x.saturating_sub(n - n_pos);
+        let lo = n_obs.max(lo_support);
+        if n_obs <= lo_support {
+            return 0.0; // tail covers the whole support ⇒ P = 1
+        }
+        // log-sum-exp over k = lo ..= hi, anchored at the largest term.
+        let mut max_lp = f64::NEG_INFINITY;
+        let mut lps = Vec::with_capacity((hi - lo + 1) as usize);
+        for k in lo..=hi {
+            let lp = self.log_pmf(x, k);
+            max_lp = max_lp.max(lp);
+            lps.push(lp);
+        }
+        if lps.is_empty() || max_lp == f64::NEG_INFINITY {
+            return f64::NEG_INFINITY; // empty tail ⇒ P = 0 (cannot happen for valid inputs)
+        }
+        let sum: f64 = lps.iter().map(|lp| (lp - max_lp).exp()).sum();
+        // Clamp at ln 1: rounding can push the full-tail sum epsilon above 1.
+        (max_lp + sum.ln()).min(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    /// Oracle values precomputed with scipy.stats.hypergeom.sf(n-1, N, Npos, x).
+    const ORACLE: &[(u32, u32, u32, u32, f64)] = &[
+        (10, 5, 4, 3, 0.2619047619047619),
+        (100, 20, 10, 6, 0.003933076466791354),
+        (697, 105, 8, 7, 1.036502823205562e-05),
+        (364, 176, 30, 25, 4.303547201354027e-05),
+        (50, 25, 50, 25, 1.0),
+        (697, 105, 1, 1, 0.15064562410329987),
+        (364, 176, 18, 18, 1.3008679821704796e-06),
+    ];
+
+    #[test]
+    fn matches_scipy_oracle() {
+        for &(n, npos, x, nobs, want) in ORACLE {
+            let f = FisherTable::new(Marginals::new(n, npos));
+            let got = f.p_value(x, nobs);
+            assert!(
+                (got - want).abs() / want.max(1e-300) < 1e-9,
+                "N={n} Npos={npos} x={x} n={nobs}: got {got:e} want {want:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_tail_is_one() {
+        let f = FisherTable::new(Marginals::new(30, 12));
+        // n_obs at the lower support limit ⇒ tail covers everything ⇒ P = 1
+        assert!((f.p_value(5, 0) - 1.0).abs() < 1e-12);
+        // x > N - N_pos forces a positive lower limit
+        assert!((f.p_value(25, 7) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let f = FisherTable::new(Marginals::new(40, 15));
+        for x in [1u32, 5, 17, 40] {
+            let lo = x.saturating_sub(40 - 15);
+            let hi = x.min(15);
+            let total: f64 = (lo..=hi).map(|k| f.log_pmf(x, k).exp()).sum();
+            assert!((total - 1.0).abs() < 1e-10, "x={x} total={total}");
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_observed_count() {
+        forall("P(x, n) decreasing in n", 64, |rng| {
+            let n = 10 + rng.below(200) as u32;
+            let npos = 1 + rng.below(n as u64 - 1) as u32;
+            let f = FisherTable::new(Marginals::new(n, npos));
+            let x = 1 + rng.below(n as u64) as u32;
+            let mut prev = f64::INFINITY;
+            for nobs in 0..=x.min(npos) {
+                let p = f.p_value(x, nobs);
+                if p > prev + 1e-12 {
+                    return Err(format!("N={n} Npos={npos} x={x} n={nobs}: {p} > {prev}"));
+                }
+                prev = p;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn log_p_consistent_with_p() {
+        let f = FisherTable::new(Marginals::new(120, 37));
+        for (x, nobs) in [(10, 8), (50, 20), (3, 3)] {
+            let lp = f.log_p_value(x, nobs);
+            let p = f.p_value(x, nobs);
+            assert!((lp.exp() - p).abs() < 1e-12);
+            assert!(lp <= 1e-12, "log p must be ≤ 0, got {lp}");
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Cached log-factorial table.
+
+/// `ln(k!)` for `k = 0..=max`, precomputed once per database size.
+///
+/// All hypergeometric quantities are evaluated in log space to stay finite
+/// for the large binomials a 12k-transaction database produces.
+#[derive(Clone, Debug)]
+pub struct LogFact {
+    table: Vec<f64>,
+}
+
+impl LogFact {
+    /// Build a table valid for arguments up to `max` inclusive.
+    pub fn new(max: u32) -> Self {
+        let mut table = Vec::with_capacity(max as usize + 1);
+        table.push(0.0); // ln 0! = 0
+        let mut acc = 0.0f64;
+        for k in 1..=max as u64 {
+            acc += (k as f64).ln();
+            table.push(acc);
+        }
+        LogFact { table }
+    }
+
+    /// `ln(k!)`.
+    #[inline]
+    pub fn lf(&self, k: u32) -> f64 {
+        self.table[k as usize]
+    }
+
+    /// `ln C(n, k)`; requires `k ≤ n ≤ max`.
+    #[inline]
+    pub fn log_choose(&self, n: u32, k: u32) -> f64 {
+        debug_assert!(k <= n);
+        self.lf(n) - self.lf(k) - self.lf(n - k)
+    }
+
+    /// Largest argument the table supports.
+    pub fn max(&self) -> u32 {
+        (self.table.len() - 1) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_factorials_exact() {
+        let t = LogFact::new(10);
+        assert!((t.lf(0) - 0.0).abs() < 1e-12);
+        assert!((t.lf(1) - 0.0).abs() < 1e-12);
+        assert!((t.lf(5) - 120f64.ln()).abs() < 1e-10);
+        assert!((t.lf(10) - 3628800f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_choose_matches_pascal() {
+        let t = LogFact::new(30);
+        for n in 0..=30u32 {
+            let mut row = vec![1u128];
+            for _ in 0..n {
+                let mut next = vec![1u128];
+                for w in row.windows(2) {
+                    next.push(w[0] + w[1]);
+                }
+                next.push(1);
+                row = next;
+            }
+            for (k, &c) in row.iter().enumerate() {
+                let got = t.log_choose(n, k as u32);
+                let want = (c as f64).ln();
+                assert!((got - want).abs() < 1e-9, "C({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn max_reports_capacity() {
+        assert_eq!(LogFact::new(100).max(), 100);
+    }
+}

@@ -1,0 +1,30 @@
+//! Exact-test statistics for significant pattern mining (paper §3).
+//!
+//! - [`logfact::LogFact`]: cached log-factorial table, the shared substrate.
+//! - [`fisher::FisherTable`]: one-sided Fisher's exact test P-values.
+//! - [`tarone`]: Tarone's minimum-achievable-P bound `f(x)` (Eq. in §3.2),
+//!   the key to the LAMP correction.
+
+pub mod fisher;
+pub mod logfact;
+pub mod tarone;
+
+pub use fisher::FisherTable;
+pub use logfact::LogFact;
+
+/// Marginals of the 2×2 contingency setting: `n` transactions total of
+/// which `n_pos` are labelled positive. Shared by Fisher and Tarone code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Marginals {
+    /// Total number of transactions `N`.
+    pub n: u32,
+    /// Number of positive transactions `N_pos` (must be ≤ `n`).
+    pub n_pos: u32,
+}
+
+impl Marginals {
+    pub fn new(n: u32, n_pos: u32) -> Self {
+        assert!(n_pos <= n, "n_pos={n_pos} > n={n}");
+        Marginals { n, n_pos }
+    }
+}

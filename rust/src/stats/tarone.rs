@@ -1,0 +1,133 @@
+//! Tarone's minimum-achievable-P bound (paper §3.2).
+//!
+//! Given marginals `(N, N_pos)` and an itemset frequency `x`, the smallest
+//! P-value any itemset of frequency `x` can attain (all `x` occurrences in
+//! the positive class) is
+//!
+//! ```text
+//! f(x) = C(N_pos, x) / C(N, x)        (x ≤ N_pos; else the analogous
+//!                                       all-in-one-class bound, see below)
+//! ```
+//!
+//! `f` is monotone non-increasing in `x`, which is exactly what makes the
+//! LAMP support-increase search sound: raising the minimum support `λ` only
+//! discards itemsets whose best-achievable P already exceeds the adjusted
+//! significance level.
+
+use super::{LogFact, Marginals};
+
+/// Evaluator for `f(x)` bound to fixed marginals.
+#[derive(Clone, Debug)]
+pub struct TaroneBound {
+    m: Marginals,
+    lf: LogFact,
+}
+
+impl TaroneBound {
+    pub fn new(m: Marginals) -> Self {
+        TaroneBound { m, lf: LogFact::new(m.n) }
+    }
+
+    /// `ln f(x)`. For `x > N_pos` the literal binomial ratio is zero; the
+    /// true minimum achievable P is then the probability that *all*
+    /// positives fall inside the itemset's support, `C(N−N_pos, x−N_pos) /
+    /// C(N, x)`, which is what phase-1 needs to stay conservative. For
+    /// `x = 0` the bound is 1 (`ln f = 0`).
+    pub fn log_f(&self, x: u32) -> f64 {
+        let Marginals { n, n_pos } = self.m;
+        assert!(x <= n, "x={x} > N={n}");
+        if x == 0 {
+            return 0.0;
+        }
+        if x <= n_pos {
+            self.lf.log_choose(n_pos, x) - self.lf.log_choose(n, x)
+        } else {
+            self.lf.log_choose(n - n_pos, x - n_pos) - self.lf.log_choose(n, x)
+        }
+    }
+
+    /// `f(x)` in linear space.
+    pub fn f(&self, x: u32) -> f64 {
+        self.log_f(x).exp()
+    }
+
+    pub fn marginals(&self) -> Marginals {
+        self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::fisher::FisherTable;
+    use crate::util::propcheck::forall;
+
+    /// Oracle values: f(x) = C(Npos,x)/C(N,x), precomputed exactly.
+    const ORACLE: &[(u32, u32, u32, f64)] = &[
+        (10, 5, 4, 0.023809523809523808),
+        (100, 20, 10, 1.0673177187555404e-08),
+        (697, 105, 8, 2.1013089920178958e-07),
+        (364, 176, 30, 8.452749188777162e-11),
+        (697, 105, 1, 0.15064562410329985),
+        (364, 176, 18, 1.3008679821704798e-06),
+    ];
+
+    #[test]
+    fn matches_exact_binomial_ratio() {
+        for &(n, npos, x, want) in ORACLE {
+            let t = TaroneBound::new(Marginals::new(n, npos));
+            let got = t.f(x);
+            assert!(
+                (got - want).abs() / want < 1e-9,
+                "N={n} Npos={npos} x={x}: got {got:e} want {want:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn boundary_values() {
+        let t = TaroneBound::new(Marginals::new(20, 8));
+        assert!((t.f(0) - 1.0).abs() < 1e-12);
+        // x = N: every transaction contains I, both classes fully inside ⇒ 1
+        assert!((t.f(20) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_up_to_npos() {
+        forall("f(x) nonincreasing on 0..=Npos", 64, |rng| {
+            let n = 5 + rng.below(300) as u32;
+            let npos = 1 + rng.below(n as u64) as u32;
+            let t = TaroneBound::new(Marginals::new(n, npos));
+            let mut prev = f64::INFINITY;
+            for x in 0..=npos {
+                let fx = t.f(x);
+                if fx > prev * (1.0 + 1e-12) {
+                    return Err(format!("N={n} Npos={npos} x={x}: {fx} > {prev}"));
+                }
+                prev = fx;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lower_bounds_every_achievable_p() {
+        // f(x) must lower-bound the Fisher P for every feasible n(I).
+        forall("f(x) ≤ P(x, n) ∀ feasible n", 48, |rng| {
+            let n = 10 + rng.below(120) as u32;
+            let npos = 1 + rng.below(n as u64 - 1) as u32;
+            let t = TaroneBound::new(Marginals::new(n, npos));
+            let fi = FisherTable::new(Marginals::new(n, npos));
+            let x = 1 + rng.below(n as u64) as u32;
+            let lo = x.saturating_sub(n - npos);
+            for nobs in lo..=x.min(npos) {
+                let p = fi.p_value(x, nobs);
+                let fx = t.f(x);
+                if fx > p * (1.0 + 1e-9) + 1e-300 {
+                    return Err(format!("N={n} Npos={npos} x={x} n={nobs}: f={fx:e} > P={p:e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

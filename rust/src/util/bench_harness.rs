@@ -1,0 +1,112 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Methodology mirrors criterion's core loop: warm-up iterations, then a
+//! fixed number of timed samples, reporting mean ± standard deviation.
+//! Benchmarks that reproduce paper tables use [`BenchSet`] to accumulate and
+//! render rows; `cargo bench` invokes the `[[bench]]` binaries with
+//! `harness = false`, which call into this module.
+
+use std::time::Instant;
+
+use super::{fmt_secs, mean_sd, table::Table};
+
+/// One measured statistic.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub mean_s: f64,
+    pub sd_s: f64,
+    pub samples: usize,
+}
+
+impl Sample {
+    pub fn display(&self) -> String {
+        format!("{} ± {}", fmt_secs(self.mean_s), fmt_secs(self.sd_s))
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `samples` timed runs.
+///
+/// The closure's return value is consumed through `std::hint::black_box` so
+/// the optimizer cannot elide the work.
+pub fn bench<T, F: FnMut() -> T>(warmup: usize, samples: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean_s, sd_s) = mean_sd(&times);
+    Sample { mean_s, sd_s, samples }
+}
+
+/// Quick single-shot wall-clock measurement (for long-running end-to-end
+/// benches where repeated sampling is impractical; the paper itself averages
+/// ≥10 runs for parallel and ≥4 for serial — callers choose).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// A named collection of benchmark rows rendered as a table, matching the
+/// row/column layout of the paper artefact each bench binary reproduces.
+pub struct BenchSet {
+    title: String,
+    table: Table,
+}
+
+impl BenchSet {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        BenchSet { title: title.to_string(), table: Table::new(columns) }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.table.row(cells);
+    }
+
+    /// Render to stdout (and return the rendered string for logging).
+    pub fn finish(self) -> String {
+        let mut out = format!("\n=== {} ===\n", self.title);
+        out.push_str(&self.table.render());
+        println!("{out}");
+        out
+    }
+}
+
+/// Parse `--quick` / `PARLAMP_BENCH_QUICK=1` so CI can run abbreviated
+/// versions of the paper-scale benches.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("PARLAMP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_requested_samples() {
+        let s = bench(1, 5, || 2u64 + 2);
+        assert_eq!(s.samples, 5);
+        assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (dt, v) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn bench_set_renders_rows() {
+        let mut b = BenchSet::new("t", &["a", "b"]);
+        b.row(vec!["1".into(), "2".into()]);
+        let s = b.finish();
+        assert!(s.contains("=== t ==="));
+        assert!(s.contains('1'));
+    }
+}

@@ -1,0 +1,57 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment ships no `rand`, `proptest`, or
+//! `criterion`, so this module provides the minimal substitutes the rest of
+//! the crate needs: a deterministic PRNG ([`rng::Rng`]), a property-testing
+//! harness ([`propcheck`]), a benchmark harness ([`bench_harness`]), and
+//! plain-text table rendering ([`table`]).
+
+pub mod bench_harness;
+pub mod propcheck;
+pub mod rng;
+pub mod table;
+
+/// Format a duration given in seconds with sensible units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_sd(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(123.0), "123 s");
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0015), "1.500 ms");
+        assert_eq!(fmt_secs(0.0000015), "1.500 us");
+    }
+
+    #[test]
+    fn mean_sd_basic() {
+        let (m, s) = mean_sd(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(mean_sd(&[]), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline registry has no `proptest`, so this module provides the
+//! subset the crate's invariant tests need: a seeded case generator, a
+//! configurable number of cases, and failure reporting that prints the seed
+//! so a failing case can be replayed deterministically.
+//!
+//! ```
+//! use parlamp::util::propcheck::forall;
+//! forall("addition commutes", 256, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     if a + b != b + a {
+//!         return Err(format!("a={a} b={b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; combined with the case index so each case is independent but
+/// reproducible. Override with env var `PROPCHECK_SEED` to replay.
+fn base_seed() -> u64 {
+    std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00_D15E_A5E5)
+}
+
+/// Number-of-cases override (`PROPCHECK_CASES`), for quick local runs or
+/// deeper CI sweeps.
+fn case_count(default_cases: u64) -> u64 {
+    std::env::var("PROPCHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` against `cases` independently seeded RNGs; panic with the
+/// case seed and the property's message on the first failure.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..case_count(cases) {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay with PROPCHECK_SEED={base} — case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but hands the case index to the property as well, which
+/// is convenient for size-ramped generation (small cases first).
+pub fn forall_sized<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng, u64) -> Result<(), String>,
+{
+    let base = base_seed();
+    let total = case_count(cases);
+    for case in 0..total {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay with PROPCHECK_SEED={base} — case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("count", 17, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        forall("fails", 4, |rng| {
+            if rng.below(2) < 2 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sized_ramps_cases() {
+        let mut seen = Vec::new();
+        forall_sized("sizes", 5, |_, case| {
+            seen.push(case);
+            Ok(())
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,182 @@
+//! DTD stress: Mattern's time algorithm must never declare termination
+//! while work or messages exist (safety) and must always fire once the
+//! system is quiescent (liveness), under adversarial schedules.
+
+use parlamp::dtd::{DtdNode, SpanningTree, WaveOutcome};
+use parlamp::fabric::Msg;
+use parlamp::util::propcheck::forall;
+use parlamp::util::rng::Rng;
+
+/// A toy distributed system: processes randomly exchange basic messages
+/// for a while, then stop. The DTD runs waves concurrently; we check that
+/// no wave reports a clean (count==0, valid, idle) completion while basic
+/// messages are in flight, and that after quiescence a wave fires.
+struct Sys {
+    nodes: Vec<DtdNode>,
+    /// In-flight basic messages: (dst, stamp).
+    basic_in_flight: Vec<(usize, u64)>,
+    /// In-flight control messages: (dst, msg).
+    ctrl_in_flight: Vec<(usize, Msg)>,
+    /// Whether each process still "works" (will send more basics).
+    active: Vec<bool>,
+}
+
+impl Sys {
+    fn new(p: usize) -> Sys {
+        Sys {
+            nodes: (0..p).map(|r| DtdNode::new(SpanningTree::ternary(r, p))).collect(),
+            basic_in_flight: Vec::new(),
+            ctrl_in_flight: Vec::new(),
+            active: vec![true; p],
+        }
+    }
+
+    fn quiescent(&self) -> bool {
+        self.basic_in_flight.is_empty() && self.active.iter().all(|a| !a)
+    }
+
+    fn idle_vote(&self, r: usize) -> bool {
+        !self.active[r]
+    }
+
+    fn deliver_ctrl(&mut self, idx: usize) -> Option<(bool, WaveOutcome)> {
+        let (dst, msg) = self.ctrl_in_flight.swap_remove(idx);
+        let mut out = Vec::new();
+        let oc = match msg {
+            Msg::WaveDown { t, lambda } => {
+                let idle = self.idle_vote(dst);
+                self.nodes[dst].on_wave_down(t, lambda, idle, vec![], &mut out);
+                WaveOutcome::Pending
+            }
+            Msg::WaveUp { t, count, invalid, all_idle, hist } => {
+                self.nodes[dst].on_wave_up(t, count, invalid, all_idle, hist, &mut out)
+            }
+            _ => unreachable!(),
+        };
+        for (d, m) in out {
+            self.ctrl_in_flight.push((d, m));
+        }
+        Some((dst == 0, oc))
+    }
+}
+
+#[test]
+fn never_false_terminates_and_eventually_fires() {
+    forall("DTD safety+liveness", 60, |rng: &mut Rng| {
+        let p = 2 + rng.index(30);
+        let mut sys = Sys::new(p);
+        let mut wave_running = false;
+        let mut clean_completions = 0u32;
+        let steps = 400 + rng.index(400);
+        let mut step = 0usize;
+        loop {
+            step += 1;
+            if step > steps + 20_000 {
+                return Err(format!("liveness violated: no clean wave after {step} steps"));
+            }
+            // Adversarial scheduler: pick an action at random.
+            let action = rng.below(5);
+            match action {
+                // a process sends a basic message (while still active)
+                0 if step < steps => {
+                    let src = rng.index(p);
+                    if sys.active[src] {
+                        let stamp = sys.nodes[src].on_basic_sent();
+                        let dst = rng.index(p);
+                        sys.basic_in_flight.push((dst, stamp));
+                    }
+                }
+                // a basic message is delivered
+                1 if !sys.basic_in_flight.is_empty() => {
+                    let i = rng.index(sys.basic_in_flight.len());
+                    let (dst, stamp) = sys.basic_in_flight.swap_remove(i);
+                    sys.nodes[dst].on_basic_recv(stamp);
+                }
+                // a process retires
+                2 if step >= steps / 2 => {
+                    let r = rng.index(p);
+                    sys.active[r] = false;
+                }
+                // root initiates a wave
+                3 if !wave_running => {
+                    let idle = sys.idle_vote(0);
+                    let mut out = Vec::new();
+                    let oc = sys.nodes[0].initiate_wave(1, idle, vec![], &mut out);
+                    for (d, m) in out {
+                        sys.ctrl_in_flight.push((d, m));
+                    }
+                    wave_running = true;
+                    if let WaveOutcome::Complete { count, invalid, all_idle, .. } = oc {
+                        wave_running = false;
+                        if count == 0 && !invalid && all_idle {
+                            if !sys.quiescent() {
+                                return Err("false termination (p=1 path)".into());
+                            }
+                            clean_completions += 1;
+                        }
+                    }
+                }
+                // a control message is delivered
+                _ if !sys.ctrl_in_flight.is_empty() => {
+                    let i = rng.index(sys.ctrl_in_flight.len());
+                    if let Some((at_root, oc)) = sys.deliver_ctrl(i) {
+                        if at_root {
+                            if let WaveOutcome::Complete { count, invalid, all_idle, .. } = oc {
+                                wave_running = false;
+                                if count == 0 && !invalid && all_idle {
+                                    // SAFETY: must be genuinely quiescent.
+                                    if !sys.quiescent() {
+                                        return Err(format!(
+                                            "false termination at step {step}: {} in flight, active={:?}",
+                                            sys.basic_in_flight.len(),
+                                            sys.active
+                                        ));
+                                    }
+                                    clean_completions += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    // force progress when everything is drained
+                    if step > steps {
+                        for a in sys.active.iter_mut() {
+                            *a = false;
+                        }
+                    }
+                }
+            }
+            // LIVENESS: quiescent + a clean completion → done.
+            if clean_completions > 0 {
+                return Ok(());
+            }
+        }
+    });
+}
+
+#[test]
+fn clock_advances_once_per_wave() {
+    let mut sys = Sys::new(7);
+    for want_t in 1..=5u64 {
+        let mut out = Vec::new();
+        let _ = sys.nodes[0].initiate_wave(1, true, vec![], &mut out);
+        for (d, m) in out {
+            sys.ctrl_in_flight.push((d, m));
+        }
+        // drain to completion
+        let mut done = false;
+        while !sys.ctrl_in_flight.is_empty() {
+            let i = sys.ctrl_in_flight.len() - 1;
+            if let Some((at_root, oc)) = sys.deliver_ctrl(i) {
+                if at_root && matches!(oc, WaveOutcome::Complete { .. }) {
+                    done = true;
+                }
+            }
+        }
+        assert!(done);
+        for n in &sys.nodes {
+            assert_eq!(n.clock(), want_t);
+        }
+    }
+}

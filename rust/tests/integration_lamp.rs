@@ -1,0 +1,120 @@
+//! End-to-end LAMP integration over the synthetic GWAS / MCF7 generators:
+//! the full three-phase pipeline, statistical sanity (FWER behaviour under
+//! the null), and planted-pattern recovery.
+
+use parlamp::datagen::{generate_gwas, generate_mcf7_like, GeneticModel, GwasSpec, Mcf7Spec};
+use parlamp::lamp::{lamp2::lamp2_serial, lamp_serial};
+use parlamp::stats::FisherTable;
+use parlamp::util::rng::Rng;
+
+#[test]
+fn planted_gwas_pattern_is_discovered() {
+    let spec = GwasSpec {
+        n_snps: 200,
+        n_individuals: 150,
+        n_pos: 40,
+        model: GeneticModel::Dominant,
+        maf_upper: 0.2,
+        ld_copy_prob: 0.25,
+        common_frac: 0.2,
+        planted: vec![(3, 0.9)],
+        seed: 31,
+    };
+    let (db, planted) = generate_gwas(&spec);
+    let res = lamp_serial(&db, 0.05);
+    assert!(res.min_sup >= 1);
+    assert!(res.correction_factor >= 1);
+    assert!(
+        !res.significant.is_empty(),
+        "a strongly planted pattern must reach significance: {}",
+        res.summary()
+    );
+    // the planted items (or a closed superset) must appear
+    let p = &planted[0];
+    assert!(
+        res.significant.iter().any(|s| p.iter().all(|i| s.items.contains(i))),
+        "planted {:?} missing from {:?}",
+        p,
+        res.significant.iter().map(|s| &s.items).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn null_data_rarely_rejects() {
+    // With no planted signal and random labels, LAMP at α = 0.05 should
+    // essentially never report anything (FWER control); we allow a single
+    // seed to fire across 8 runs.
+    let mut fires = 0;
+    for seed in 0..8u64 {
+        let spec = GwasSpec {
+            n_snps: 120,
+            n_individuals: 80,
+            n_pos: 20,
+            model: GeneticModel::Dominant,
+            maf_upper: 0.25,
+            ld_copy_prob: 0.2,
+            common_frac: 0.2,
+            planted: vec![],
+            seed: 1000 + seed,
+        };
+        let (db, _) = generate_gwas(&spec);
+        let res = lamp_serial(&db, 0.05);
+        if !res.significant.is_empty() {
+            fires += 1;
+        }
+    }
+    assert!(fires <= 1, "null data fired {fires}/8 times — FWER control broken?");
+}
+
+#[test]
+fn reported_p_values_are_exact_and_below_delta() {
+    let (db, _) = generate_gwas(&GwasSpec::small(77));
+    let res = lamp_serial(&db, 0.05);
+    let fisher = FisherTable::new(db.marginals());
+    for s in &res.significant {
+        assert!(s.p_value <= res.adjusted_level * (1.0 + 1e-12));
+        assert_eq!(db.support(&s.items), s.support);
+        let occ = db.occurrence(&s.items);
+        assert_eq!(db.pos_support(&occ), s.pos_support);
+        let want = fisher.p_value(s.support, s.pos_support);
+        assert!((s.p_value - want).abs() < 1e-12);
+        assert!(s.support >= res.min_sup, "significant pattern below min_sup");
+    }
+}
+
+#[test]
+fn mcf7_like_pipeline_runs_and_agrees_with_lamp2() {
+    let spec = Mcf7Spec::small(5);
+    let (db, _) = generate_mcf7_like(&spec);
+    let a = lamp_serial(&db, 0.05);
+    let b = lamp2_serial(&db, 0.05);
+    assert_eq!(a.lambda_final, b.lambda_final);
+    assert_eq!(a.correction_factor, b.correction_factor);
+    assert_eq!(a.significant.len(), b.significant.len());
+}
+
+#[test]
+fn alpha_monotonicity_of_discoveries() {
+    let spec = GwasSpec { planted: vec![(2, 0.9), (3, 0.8)], ..GwasSpec::small(13) };
+    let (db, _) = generate_gwas(&spec);
+    let strict = lamp_serial(&db, 0.01);
+    let loose = lamp_serial(&db, 0.10);
+    // A stricter family-wise level cannot *increase* the minimum support's
+    // leniency: λ* is non-decreasing in 1/α.
+    assert!(strict.lambda_final >= loose.lambda_final);
+}
+
+#[test]
+fn lambda_reported_matches_table1_semantics() {
+    // Table 1's λ column is the *minimum support* (λ* − 1); make sure the
+    // plumbing agrees with phase 2's mining threshold.
+    let mut rng = Rng::new(4);
+    for _ in 0..5 {
+        let (db, _) = generate_gwas(&GwasSpec::small(rng.next_u64()));
+        let res = lamp_serial(&db, 0.05);
+        assert_eq!(res.min_sup, res.lambda_final.saturating_sub(1).max(1));
+        for s in &res.significant {
+            assert!(s.support >= res.min_sup);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Cross-module property suite (the proptest-style invariants of
+//! DESIGN.md §6, on the in-repo propcheck harness).
+
+use parlamp::bits::BitVec;
+use parlamp::db::{Database, Item};
+use parlamp::fabric::sim::NetModel;
+use parlamp::lamp::{lamp_serial, SupportIncreaseRule};
+use parlamp::lcm::{brute_force_closed, mine_closed, Visit};
+use parlamp::par::{run_sim, RunMode, SimConfig};
+use parlamp::stats::{tarone::TaroneBound, FisherTable, Marginals};
+use parlamp::util::propcheck::forall;
+use parlamp::util::rng::Rng;
+
+fn random_db(rng: &mut Rng, max_items: usize, max_trans: usize) -> Database {
+    let m = 2 + rng.index(max_items - 1);
+    let n = 2 + rng.index(max_trans - 1);
+    let density = 0.15 + rng.f64() * 0.55;
+    let trans: Vec<Vec<Item>> =
+        (0..n).map(|_| (0..m as Item).filter(|_| rng.bernoulli(density)).collect()).collect();
+    let labels: Vec<bool> = (0..n).map(|t| t < n.div_ceil(3)).collect();
+    Database::from_transactions(m, &trans, &labels)
+}
+
+#[test]
+fn closure_is_idempotent_and_support_preserving() {
+    forall("closure idempotence", 100, |rng| {
+        let db = random_db(rng, 10, 20);
+        let m = db.n_items();
+        // random itemset
+        let items: Vec<Item> = (0..m as Item).filter(|_| rng.bernoulli(0.3)).collect();
+        let occ = db.occurrence(&items);
+        if occ.count() == 0 {
+            return Ok(());
+        }
+        let closure: Vec<Item> =
+            (0..m as Item).filter(|&j| occ.is_subset_of(db.col(j))).collect();
+        // support preserved
+        if db.support(&closure) != occ.count() {
+            return Err(format!("closure changed support: {items:?} -> {closure:?}"));
+        }
+        // idempotent
+        let occ2 = db.occurrence(&closure);
+        let closure2: Vec<Item> =
+            (0..m as Item).filter(|&j| occ2.is_subset_of(db.col(j))).collect();
+        if closure2 != closure {
+            return Err(format!("closure not idempotent: {closure:?} -> {closure2:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn miner_is_exhaustive_and_duplicate_free() {
+    forall("PPC enumeration completeness", 50, |rng| {
+        let db = random_db(rng, 9, 16);
+        let min_sup = 1 + rng.below(3) as u32;
+        let mut got: Vec<(Vec<Item>, u32)> = Vec::new();
+        mine_closed(&db, min_sup, |n, ms| {
+            got.push((n.items.clone(), n.support));
+            (Visit::Continue, ms)
+        });
+        got.sort();
+        let want = brute_force_closed(&db, min_sup);
+        if got != want {
+            return Err(format!("min_sup={min_sup}: {} vs {}", got.len(), want.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fisher_tail_properties() {
+    forall("fisher: bounds, monotonicity, symmetry limits", 80, |rng| {
+        let n = 5 + rng.below(400) as u32;
+        let npos = 1 + rng.below(n as u64 - 1) as u32;
+        let m = Marginals::new(n, npos);
+        let f = FisherTable::new(m);
+        let t = TaroneBound::new(m);
+        let x = 1 + rng.below(n as u64) as u32;
+        let lo = x.saturating_sub(n - npos);
+        let hi = x.min(npos);
+        // P ∈ [f(x), 1]; P(lo) = 1; monotone non-increasing in n.
+        let mut prev = f64::INFINITY;
+        for nobs in lo..=hi {
+            let p = f.p_value(x, nobs);
+            if !(0.0..=1.0 + 1e-12).contains(&p) {
+                return Err(format!("P out of range: {p}"));
+            }
+            if p > prev + 1e-12 {
+                return Err("not monotone".into());
+            }
+            if p + 1e-300 < t.f(x) * (1.0 - 1e-9) {
+                return Err(format!("P {p:e} below Tarone bound {:e}", t.f(x)));
+            }
+            prev = p;
+        }
+        if (f.p_value(x, lo) - 1.0).abs() > 1e-9 {
+            return Err("P at lower support limit must be 1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn support_increase_rule_is_sound() {
+    // The rule's final λ must always satisfy: condition 3.1 holds for all
+    // levels below, fails at λ (on the histogram it was given).
+    forall("rule soundness", 60, |rng| {
+        let n = 10 + rng.below(200) as u32;
+        let npos = 1 + rng.below(n as u64 / 2) as u32;
+        let rule = SupportIncreaseRule::new(Marginals::new(n, npos), 0.05);
+        // random decreasing cs_ge
+        let mut levels = vec![0u64; n as usize + 2];
+        let mut acc = 0u64;
+        for s in (1..=n as usize).rev() {
+            acc += rng.below(50);
+            levels[s] = acc;
+        }
+        let cs = |l: u32| levels.get(l as usize).copied().unwrap_or(0);
+        let lambda = rule.advance(1, cs);
+        if lambda > 1 && !rule.exceeded(lambda - 1, cs(lambda - 1)) {
+            return Err(format!("λ={lambda} but level {} not exceeded", lambda - 1));
+        }
+        if lambda <= n && rule.exceeded(lambda, cs(lambda)) {
+            return Err(format!("λ={lambda} still exceeded"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn des_results_independent_of_network_and_seed() {
+    // Protocol nondeterminism (steal victims, message timing) must never
+    // change the *computed result*, only the timing.
+    forall("result invariance", 12, |rng| {
+        let db = random_db(rng, 10, 24);
+        let serial = lamp_serial(&db, 0.05);
+        let p = 2 + rng.index(20);
+        for (seed, net) in
+            [(1u64, NetModel::default()), (2, NetModel::ethernet()), (3, NetModel::default())]
+        {
+            let cfg = SimConfig { p, seed, net, ..SimConfig::paper_defaults(p) };
+            let out = run_sim(&db, RunMode::Count { min_sup: serial.min_sup }, &cfg);
+            if out.closed_total != serial.correction_factor {
+                return Err(format!(
+                    "p={p} seed={seed}: count {} != serial {}",
+                    out.closed_total, serial.correction_factor
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bitvec_algebra_laws() {
+    forall("bitvec boolean-algebra laws", 100, |rng| {
+        let len = 1 + rng.index(260);
+        let mk = |rng: &mut Rng, d: f64| {
+            BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(d)))
+        };
+        let a = mk(rng, 0.5);
+        let b = mk(rng, 0.5);
+        let c = mk(rng, 0.5);
+        // commutativity, associativity, absorption-ish via subset
+        if a.and(&b) != b.and(&a) {
+            return Err("AND not commutative".into());
+        }
+        if a.and(&b).and(&c) != a.and(&b.and(&c)) {
+            return Err("AND not associative".into());
+        }
+        if !a.and(&b).is_subset_of(&a) {
+            return Err("a∧b ⊄ a".into());
+        }
+        if a.and(&a) != a {
+            return Err("AND not idempotent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wire_roundtrip_preserves_node_identity() {
+    // Shipping a node (dropping its bitmap) then re-expanding must produce
+    // the same children as expanding the original.
+    forall("steal wire roundtrip", 40, |rng| {
+        let db = random_db(rng, 10, 20);
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        let mut scratch = parlamp::lcm::ExpandScratch::default();
+        // take some node from a quick mine
+        let mut nodes = Vec::new();
+        mine_closed(&db, 1, |n, ms| {
+            nodes.push(n.clone());
+            (if nodes.len() >= 8 { Visit::Stop } else { Visit::Continue }, ms)
+        });
+        for mut node in nodes {
+            let mut shipped = node.clone();
+            shipped.strip_for_wire();
+            out_a.clear();
+            out_b.clear();
+            parlamp::lcm::expand(&db, &mut node, 1, &mut scratch, &mut out_a);
+            parlamp::lcm::expand(&db, &mut shipped, 1, &mut scratch, &mut out_b);
+            if out_a.len() != out_b.len()
+                || out_a
+                    .iter()
+                    .zip(&out_b)
+                    .any(|(x, y)| x.items != y.items || x.support != y.support)
+            {
+                return Err("wire roundtrip changed expansion".into());
+            }
+        }
+        Ok(())
+    });
+}

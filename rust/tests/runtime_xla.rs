@@ -1,0 +1,99 @@
+//! XLA runtime integration: the AOT screen artifact vs the native rust
+//! statistics. Requires `make artifacts` (tests skip with a notice when
+//! the artifacts are absent, so plain `cargo test` stays green).
+
+use parlamp::bits::BitVec;
+use parlamp::datagen::{generate_gwas, GwasSpec};
+use parlamp::lamp::lamp_serial;
+use parlamp::runtime::{
+    artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
+};
+use parlamp::stats::{tarone::TaroneBound, FisherTable, Marginals};
+use parlamp::util::rng::Rng;
+
+fn engine_or_skip() -> Option<ScreenEngine> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(ScreenEngine::new(XlaRuntime::load(&artifacts_dir()).expect("load artifacts")))
+}
+
+#[test]
+fn screen_matches_native_fisher_on_random_bitmaps() {
+    let Some(engine) = engine_or_skip() else { return };
+    let m = Marginals::new(500, 120);
+    let fisher = FisherTable::new(m);
+    let tarone = TaroneBound::new(m);
+    let mut rng = Rng::new(2015);
+    let n = 500usize;
+    let pos = BitVec::from_indices(n, 0..120);
+    let rows: Vec<BitVec> = (0..700)
+        .map(|_| {
+            let density = 0.02 + rng.f64() * 0.4;
+            BitVec::from_indices(n, (0..n).filter(|_| rng.bernoulli(density)))
+        })
+        .collect();
+    let got = engine.score(&rows, &pos, m).expect("screen");
+    assert_eq!(got.len(), rows.len());
+    for (row, out) in rows.iter().zip(&got) {
+        let x = row.count();
+        let nobs = row.and_count(&pos);
+        assert_eq!(out.x as u32, x);
+        assert_eq!(out.n as u32, nobs);
+        let want_logp = fisher.log_p_value(x, nobs);
+        let want_logf = tarone.log_f(x);
+        assert!(
+            (out.logp - want_logp).abs() < 1e-8 * want_logp.abs().max(1.0),
+            "logp mismatch: xla {} native {} (x={x} n={nobs})",
+            out.logp,
+            want_logp
+        );
+        assert!(
+            (out.logf - want_logf).abs() < 1e-8 * want_logf.abs().max(1.0),
+            "logf mismatch: xla {} native {} (x={x})",
+            out.logf,
+            want_logf
+        );
+    }
+}
+
+#[test]
+fn xla_phase3_equals_native_phase3() {
+    let Some(engine) = engine_or_skip() else { return };
+    let spec = GwasSpec {
+        n_snps: 120,
+        n_individuals: 100,
+        n_pos: 25,
+        planted: vec![(3, 0.85)],
+        ..GwasSpec::small(99)
+    };
+    let (db, _) = generate_gwas(&spec);
+    let serial = lamp_serial(&db, 0.05);
+    let xla = phase3_extract_xla(&engine, &db, serial.min_sup, serial.correction_factor, 0.05)
+        .expect("xla phase 3");
+    assert_eq!(
+        xla.len(),
+        serial.significant.len(),
+        "pattern count: xla {} native {}",
+        xla.len(),
+        serial.significant.len()
+    );
+    for (a, b) in xla.iter().zip(&serial.significant) {
+        assert_eq!(a.items, b.items);
+        assert_eq!(a.support, b.support);
+        assert_eq!(a.pos_support, b.pos_support);
+        assert!((a.p_value - b.p_value).abs() <= 1e-9 * b.p_value.max(1e-300));
+    }
+}
+
+#[test]
+fn screen_rejects_oversized_marginals() {
+    let Some(engine) = engine_or_skip() else { return };
+    let t_max = engine.runtime().manifest().t_max;
+    let n = (t_max + 10).min(engine.runtime().manifest().max_transactions());
+    let m = Marginals::new(n as u32, t_max as u32); // n_pos == t_max: too big
+    let pos = BitVec::ones(n);
+    let rows = vec![BitVec::ones(n)];
+    assert!(engine.score(&rows, &pos, m).is_err());
+}
