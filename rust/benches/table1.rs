@@ -11,9 +11,13 @@ use parlamp::util::fmt_secs;
 fn main() {
     let quick = quick_mode();
     let alpha = parlamp::DEFAULT_ALPHA;
+    let columns = [
+        "name", "items", "trans.", "density", "N_pos", "lambda", "nu.CS", "t1", "t12", "t1200",
+        "speedup1200",
+    ];
     let mut set = BenchSet::new(
         "Table 1 — problems and runtimes (t in seconds; t12/t1200 simulated)",
-        &["name", "items", "trans.", "density", "N_pos", "lambda", "nu.CS", "t1", "t12", "t1200", "speedup1200"],
+        &columns,
     );
     for sc in all_scenarios(quick) {
         let db = sc.build();

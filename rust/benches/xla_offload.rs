@@ -7,7 +7,9 @@
 use parlamp::bits::BitVec;
 use parlamp::datagen::{generate_gwas, GwasSpec};
 use parlamp::lamp::{lamp_serial, phase3_extract};
-use parlamp::runtime::{artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime};
+use parlamp::runtime::{
+    artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
+};
 use parlamp::stats::{FisherTable, Marginals};
 use parlamp::util::bench_harness::{bench, time_once, BenchSet};
 use parlamp::util::rng::Rng;
@@ -17,7 +19,16 @@ fn main() {
         println!("SKIP xla_offload: artifacts/ missing — run `make artifacts`");
         return;
     }
-    let engine = ScreenEngine::new(XlaRuntime::load(&artifacts_dir()).expect("load"));
+    // In default (stub) builds the loader fails even with artifacts
+    // present; skip rather than panic (build with `--features xla`).
+    let rt = match XlaRuntime::load(&artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP xla_offload: {e:#}");
+            return;
+        }
+    };
+    let engine = ScreenEngine::new(rt);
     let man = engine.runtime().manifest();
     println!(
         "platform={} artifact: K={} W={} T_MAX={}",
@@ -27,7 +38,8 @@ fn main() {
         man.t_max
     );
 
-    let mut set = BenchSet::new("XLA offload — batched significance screen", &["bench", "mean ± sd", "rate"]);
+    let mut set =
+        BenchSet::new("XLA offload — batched significance screen", &["bench", "mean ± sd", "rate"]);
     let n = 500usize;
     let m = Marginals::new(n as u32, 120);
     let mut rng = Rng::new(11);

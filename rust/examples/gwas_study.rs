@@ -4,8 +4,9 @@
 //! 1. synthetic GWAS cohort generation (dominant model, MAF filter,
 //!    planted multi-SNP association),
 //! 2. serial LAMP (reference),
-//! 3. the distributed miner on the DES fabric at P = 96 (phases 1–2) with
-//!    the λ/DTD protocol, calibrated against the measured serial run,
+//! 3. a coordinated run ([`parlamp::coordinator`]) on the DES fabric at
+//!    P = 96 (phases 1–2) with the λ/DTD protocol, calibrated against the
+//!    measured serial run,
 //! 4. phase 3 through the AOT-compiled XLA/PJRT screen when artifacts are
 //!    present (native fallback otherwise),
 //! 5. cross-validation of all three paths + paper §5.6-style reporting.
@@ -15,10 +16,11 @@
 //! ```
 
 use parlamp::bench::calibrate_lamp;
+use parlamp::coordinator::{Backend, Coordinator, ScreenKind, ScreenMode};
 use parlamp::datagen::{generate_gwas, GeneticModel, GwasSpec};
+use parlamp::fabric::sim::NetModel;
 use parlamp::lamp::lamp_serial;
-use parlamp::par::{breakdown, lamp_parallel_sim, SimConfig};
-use parlamp::runtime::{artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime};
+use parlamp::par::breakdown;
 use parlamp::util::bench_harness::time_once;
 
 fn main() {
@@ -49,51 +51,52 @@ fn main() {
     let (t1, serial) = time_once(|| lamp_serial(&db, 0.05));
     println!("\n== serial LAMP ==\nt1={t1:.3}s  {}", serial.summary());
 
-    // 3. distributed run (DES, P = 96)
+    // 3. coordinated run (DES backend, P = 96)
     let cal = calibrate_lamp(&db, 0.05);
     let p = 96;
-    let cfg = SimConfig { p, ..SimConfig::calibrated(p, &cal) };
-    let (par_res, p1, p2) = lamp_parallel_sim(&db, 0.05, &cfg);
-    let t_par = p1.makespan_s + p2.makespan_s;
-    println!("\n== distributed (DES, P={p}) ==");
+    let coord = Coordinator::new(0.05).with_calibration(cal).with_screen(ScreenMode::Native);
+    let backend = Backend::Sim { p, net: NetModel::default(), seed: 0xE2E };
+    let run = coord.run(&db, &backend).expect("coordinated run");
+    let t_par = run.t_parallel_s();
+    println!("\n== distributed (coordinator, DES, P={p}) ==");
     // Speedup baseline: the same computation serially (phases 1+2).
     println!(
-        "phase1={:.4}s phase2={:.4}s speedup={:.1}x efficiency={:.0}%  (serial phases 1+2: {:.3}s)",
-        p1.makespan_s,
-        p2.makespan_s,
+        "phase1={:.4}s phase2={:.4}s speedup={:.1}x efficiency={:.0}% (serial 1+2: {:.3}s)",
+        run.phase1.makespan_s,
+        run.phase2.makespan_s,
         cal.t1_s / t_par,
         100.0 * cal.t1_s / t_par / p as f64,
         cal.t1_s
     );
+    let comm = run.comm_total();
     println!(
         "steals: {} gives, {} tasks shipped, {} messages, {} bytes",
-        p1.comm.gives + p2.comm.gives,
-        p1.comm.tasks_shipped + p2.comm.tasks_shipped,
-        p1.comm.sent + p2.comm.sent,
-        p1.comm.bytes_sent + p2.comm.bytes_sent
+        comm.gives, comm.tasks_shipped, comm.sent, comm.bytes_sent
     );
-    let b = breakdown::sum(&p1.breakdowns);
+    let b = breakdown::sum(&run.phase1.breakdowns);
     let [pre, main, probe, idle] = b.as_secs();
-    println!("phase1 CPU breakdown: preprocess={pre:.3}s main={main:.3}s probe={probe:.3}s idle={idle:.3}s");
+    println!(
+        "phase1 CPU breakdown: preprocess={pre:.3}s main={main:.3}s probe={probe:.3}s \
+         idle={idle:.3}s"
+    );
+    let par_res = &run.result;
     assert_eq!(par_res.lambda_final, serial.lambda_final, "parallel must match serial");
     assert_eq!(par_res.correction_factor, serial.correction_factor);
 
-    // 4. phase 3 through XLA/PJRT
+    // 4. phase 3 through the coordinator's Auto screen policy: the
+    // XLA/PJRT artifact when present and loadable, native Fisher otherwise
+    // (one policy — the same code path the CLI and tests use).
     println!("\n== phase 3 ==");
-    let significant = if artifacts_available() {
-        let rt = XlaRuntime::load(&artifacts_dir()).expect("load artifacts");
-        println!("screen: XLA artifact on {} (AOT from JAX/Pallas)", rt.platform());
-        let engine = ScreenEngine::new(rt);
-        let (t3, sig) = time_once(|| {
-            phase3_extract_xla(&engine, &db, serial.min_sup, serial.correction_factor, 0.05)
-                .expect("xla phase 3")
-        });
-        println!("xla phase-3 time: {t3:.3}s");
-        sig
-    } else {
-        println!("screen: native (artifacts missing — run `make artifacts` for the XLA path)");
-        serial.significant.clone()
-    };
+    let screen_coord = Coordinator::new(0.05).with_screen(ScreenMode::Auto);
+    let (t3, (significant, kind)) = time_once(|| {
+        screen_coord.screen(&db, serial.min_sup, serial.correction_factor).expect("phase 3")
+    });
+    match kind {
+        ScreenKind::Xla => println!("screen: XLA artifact (AOT from JAX/Pallas), {t3:.3}s"),
+        ScreenKind::Native => println!(
+            "screen: native Fisher ({t3:.3}s) — run `make artifacts` for the XLA path"
+        ),
+    }
 
     // 5. cross-validate + report
     assert_eq!(significant.len(), serial.significant.len(), "screens must agree");
@@ -115,5 +118,5 @@ fn main() {
     let found = significant.iter().any(|s| planted[0].iter().all(|i| s.items.contains(i)));
     println!("\nplanted association recovered: {found}");
     assert!(found, "the planted association must be recovered");
-    println!("\nOK — all layers agree (serial = distributed; native = XLA screen).");
+    println!("\nOK — all layers agree (serial = coordinated; native = XLA screen).");
 }

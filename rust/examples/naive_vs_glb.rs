@@ -1,14 +1,16 @@
 //! Naive static partition vs lifeline GLB (paper §5.4, Table 2 left):
-//! same results, very different balance. Prints per-process work
-//! distribution to show *why* the naive approach fails on deep trees.
+//! same results, very different balance. Both variants run through the
+//! [`parlamp::coordinator`] — only the [`GlbParams`] differ — and the
+//! per-process work distribution shows *why* the naive approach fails on
+//! deep trees.
 //!
 //! ```bash
 //! cargo run --release --example naive_vs_glb [P]
 //! ```
 
 use parlamp::bench::{all_scenarios, calibrate_lamp};
+use parlamp::coordinator::{Backend, Coordinator, GlbParams, ScreenMode};
 use parlamp::lamp::lamp_serial;
-use parlamp::par::{run_sim, RunMode, SimConfig};
 use parlamp::util::table::Table;
 
 fn main() {
@@ -19,18 +21,41 @@ fn main() {
     let cal = calibrate_lamp(&db, parlamp::DEFAULT_ALPHA);
     let t1 = cal.t1_s;
     println!(
-        "hapmap-dom-20-like: {} items × {} trans, CS({})={}, serial count time {t1:.3}s\n",
+        "hapmap-dom-20-like: {} items × {} trans, CS({})={}, serial t1 {t1:.3}s\n",
         db.n_items(),
         db.n_trans(),
         serial.min_sup,
         serial.correction_factor
     );
 
-    let mut table = Table::new(&["engine", "time(s)", "speedup", "gives", "idle share", "max/mean work"]);
-    for (label, steal) in [("GLB (lifeline steal)", true), ("naive (static partition)", false)] {
-        let cfg = SimConfig { p, steal, ..SimConfig::calibrated(p, &cal) };
-        let out = run_sim(&db, RunMode::Count { min_sup: serial.min_sup }, &cfg);
-        assert_eq!(out.closed_total, serial.correction_factor, "results must match");
+    // All balance columns describe phase 2 (the counting phase — the
+    // regime Table 2 left reports); the speedup column is the full
+    // phases-1+2 pipeline against the serial t1.
+    let mut table = Table::new(&[
+        "engine",
+        "p2 time(s)",
+        "speedup(1+2)",
+        "p2 gives",
+        "p2 idle share",
+        "max/mean work",
+    ]);
+    let variants = [
+        ("GLB (lifeline steal)", GlbParams::default()),
+        ("naive (static partition)", GlbParams::naive()),
+    ];
+    for (label, glb) in variants {
+        let coord = Coordinator::new(parlamp::DEFAULT_ALPHA)
+            .with_glb(glb)
+            .with_calibration(cal)
+            .with_screen(ScreenMode::Native);
+        let run = coord.run(&db, &Backend::sim(p)).expect("coordinated run");
+        assert_eq!(
+            run.result.correction_factor, serial.correction_factor,
+            "results must match the serial reference"
+        );
+        // Balance metrics from the phase-2 merge (the counting phase, the
+        // regime Table 2 reports).
+        let out = &run.phase2;
         let total = parlamp::par::breakdown::sum(&out.breakdowns);
         let idle_share = total.idle_ns as f64 / total.total_ns().max(1) as f64;
         let mains: Vec<f64> = out.breakdowns.iter().map(|b| b.main_ns as f64).collect();
@@ -39,7 +64,7 @@ fn main() {
         table.row(vec![
             label.to_string(),
             format!("{:.4}", out.makespan_s),
-            format!("{:.1}x", t1 / out.makespan_s),
+            format!("{:.1}x", t1 / run.t_parallel_s()),
             out.comm.gives.to_string(),
             format!("{:.0}%", idle_share * 100.0),
             format!("{:.1}", max / mean.max(1.0)),

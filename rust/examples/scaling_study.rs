@@ -1,15 +1,17 @@
 //! Scaling study: sweep the process count on one scenario and print the
 //! Fig-6-style time/speedup series plus the Fig-7-style breakdown —
 //! including the slow-network (Ethernet-class) estimate the paper only
-//! discusses (§5.2).
+//! discusses (§5.2). Every point is one coordinated run
+//! ([`parlamp::coordinator`]) on the calibrated DES backend.
 //!
 //! ```bash
 //! cargo run --release --example scaling_study [scenario]
 //! ```
 
 use parlamp::bench::{all_scenarios, calibrate_lamp, serial_t1};
+use parlamp::coordinator::{Backend, Coordinator, ScreenMode};
 use parlamp::fabric::sim::NetModel;
-use parlamp::par::{breakdown, lamp_parallel_sim, SimConfig};
+use parlamp::par::breakdown;
 use parlamp::util::table::Table;
 
 fn main() {
@@ -23,24 +25,25 @@ fn main() {
     let (t1, res) = serial_t1(&db, parlamp::DEFAULT_ALPHA);
     println!("scenario {name}: {} | serial t1 = {t1:.3}s", res.summary());
 
+    let coord = Coordinator::new(parlamp::DEFAULT_ALPHA)
+        .with_calibration(cal)
+        .with_screen(ScreenMode::Native);
     let mut t = Table::new(&[
         "P", "time(s)", "speedup", "eff", "ethernet(s)", "pre(s)", "main(s)", "probe(s)", "idle(s)",
     ]);
     for p in [1usize, 12, 24, 48, 96, 192, 300, 600, 1200] {
-        let cfg = SimConfig { p, ..SimConfig::calibrated(p, &cal) };
-        let (_r, p1, p2) = lamp_parallel_sim(&db, parlamp::DEFAULT_ALPHA, &cfg);
-        let time = p1.makespan_s + p2.makespan_s;
-        let eth_cfg =
-            SimConfig { p, net: NetModel::ethernet(), ..SimConfig::calibrated(p, &cal) };
-        let (_r2, e1, e2) = lamp_parallel_sim(&db, parlamp::DEFAULT_ALPHA, &eth_cfg);
-        let b = breakdown::sum(&p1.breakdowns);
+        let run = coord.run(&db, &Backend::sim(p)).expect("coordinated run");
+        let time = run.t_parallel_s();
+        let eth_backend = Backend::Sim { p, net: NetModel::ethernet(), seed: 2015 };
+        let eth = coord.run(&db, &eth_backend).expect("ethernet run");
+        let b = breakdown::sum(&run.phase1.breakdowns);
         let [pre, main, probe, idle] = b.as_secs();
         t.row(vec![
             p.to_string(),
             format!("{time:.4}"),
             format!("{:.1}x", t1 / time),
             format!("{:.0}%", 100.0 * t1 / time / p as f64),
-            format!("{:.4}", e1.makespan_s + e2.makespan_s),
+            format!("{:.4}", eth.t_parallel_s()),
             format!("{pre:.3}"),
             format!("{main:.3}"),
             format!("{probe:.3}"),

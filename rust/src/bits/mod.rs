@@ -25,21 +25,23 @@ pub const fn words_for(nbits: usize) -> usize {
 /// (see EXPERIMENTS.md §Perf).
 #[inline]
 pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
+    // Hard assert: with the zipped loops below a length mismatch would
+    // silently truncate (wrong supports), not panic like indexing did.
+    assert_eq!(a.len(), b.len());
     let mut acc0: u32 = 0;
     let mut acc1: u32 = 0;
     let mut acc2: u32 = 0;
     let mut acc3: u32 = 0;
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc0 += (a[j] & b[j]).count_ones();
-        acc1 += (a[j + 1] & b[j + 1]).count_ones();
-        acc2 += (a[j + 2] & b[j + 2]).count_ones();
-        acc3 += (a[j + 3] & b[j + 3]).count_ones();
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc0 += (x[0] & y[0]).count_ones();
+        acc1 += (x[1] & y[1]).count_ones();
+        acc2 += (x[2] & y[2]).count_ones();
+        acc3 += (x[3] & y[3]).count_ones();
     }
-    for j in chunks * 4..a.len() {
-        acc0 += (a[j] & b[j]).count_ones();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc0 += (x & y).count_ones();
     }
     acc0 + acc1 + acc2 + acc3
 }
@@ -48,9 +50,9 @@ pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
 /// violating word. Used by the closure computation.
 #[inline]
 pub fn subset_of(a: &[u64], b: &[u64]) -> bool {
-    debug_assert_eq!(a.len(), b.len());
-    for i in 0..a.len() {
-        if a[i] & !b[i] != 0 {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        if x & !y != 0 {
             return false;
         }
     }

@@ -1,16 +1,17 @@
-//! Subcommand implementations.
+//! Subcommand implementations. Every LAMP pipeline — serial or
+//! distributed — dispatches its phases through [`crate::coordinator`], so
+//! the CLI, the examples, and the benches exercise one orchestration path.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::bench::all_scenarios;
+use crate::coordinator::{Backend, Coordinator, GlbParams, ScreenKind, ScreenMode};
 use crate::db::{read_labels, read_transactions, Database};
 use crate::fabric::sim::NetModel;
-use crate::lamp::{lamp2::lamp2_serial, lamp_serial};
+use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
-use crate::par::{lamp_parallel_sim, SimConfig};
-use crate::runtime::{artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime};
 use crate::util::table::Table;
 
 use super::args::Args;
@@ -39,35 +40,25 @@ fn scenario_db(args: &Args) -> Result<(String, Database)> {
     Ok((name.to_string(), sc.build()))
 }
 
-/// `parlamp lamp` — full three-phase LAMP on a dataset from disk.
-pub fn cmd_lamp(args: &Args) -> Result<()> {
-    let db = load_db(args)?;
-    let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
-    let engine = args.get("engine").unwrap_or("serial");
-    let res = match engine {
-        "serial" => lamp_serial(&db, alpha),
-        "lamp2" => lamp2_serial(&db, alpha),
-        other => bail!("unknown --engine '{other}' (serial|lamp2)"),
-    };
-    println!(
-        "N={} items={} density={:.4}% N_pos={}",
-        db.n_trans(),
-        db.n_items(),
-        db.density() * 100.0,
-        db.marginals().n_pos
-    );
-    println!("{}", res.summary());
+fn parse_screen(args: &Args) -> Result<ScreenMode> {
+    match args.get("screen").unwrap_or("native") {
+        "native" => Ok(ScreenMode::Native),
+        "xla" => Ok(ScreenMode::Xla),
+        "auto" => Ok(ScreenMode::Auto),
+        other => bail!("unknown --screen '{other}' (native|xla|auto)"),
+    }
+}
 
-    let significant = match args.get("screen").unwrap_or("native") {
-        "native" => res.significant.clone(),
-        "xla" => {
-            let rt = XlaRuntime::load(&artifacts_dir())
-                .context("load XLA artifacts (run `make artifacts`)")?;
-            let eng = ScreenEngine::new(rt);
-            phase3_extract_xla(&eng, &db, res.min_sup, res.correction_factor, alpha)?
-        }
-        other => bail!("unknown --screen '{other}' (native|xla)"),
+fn glb_from_args(args: &Args) -> GlbParams {
+    let base = if args.flag("naive") {
+        GlbParams::naive()
+    } else {
+        GlbParams::default()
     };
+    GlbParams { preprocess: !args.flag("no-preprocess"), ..base }
+}
+
+fn print_significant(significant: &[SignificantPattern]) {
     let mut t = Table::new(&["rank", "items", "x", "n", "p-value"]);
     for (i, s) in significant.iter().take(20).enumerate() {
         t.row(vec![
@@ -82,6 +73,59 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
     if significant.len() > 20 {
         println!("… and {} more", significant.len() - 20);
     }
+}
+
+/// `parlamp lamp` — full three-phase LAMP on a dataset from disk, on any
+/// engine: `serial` (reference), `lamp2` (occurrence-deliver comparator),
+/// or a coordinated distributed run on `threads` / `sim`.
+pub fn cmd_lamp(args: &Args) -> Result<()> {
+    let db = load_db(args)?;
+    let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
+    let engine = args.get("engine").unwrap_or("serial");
+    let screen = parse_screen(args)?;
+    println!(
+        "N={} items={} density={:.4}% N_pos={}",
+        db.n_trans(),
+        db.n_items(),
+        db.density() * 100.0,
+        db.marginals().n_pos
+    );
+
+    let significant: Vec<SignificantPattern> = match engine {
+        "serial" | "lamp2" => {
+            let res = match engine {
+                "serial" => lamp_serial(&db, alpha),
+                _ => lamp2_serial(&db, alpha),
+            };
+            // The serial pipelines already ran the native phase 3; only
+            // re-dispatch through the coordinator's screen policy when a
+            // non-native screen was requested (PJRT artifact / auto).
+            let (sig, kind) = match screen {
+                ScreenMode::Native => (res.significant.clone(), ScreenKind::Native),
+                _ => {
+                    let coord = Coordinator::new(alpha).with_screen(screen);
+                    coord.screen(&db, res.min_sup, res.correction_factor)?
+                }
+            };
+            println!("{} | engine={engine} screen={kind:?}", res.summary());
+            sig
+        }
+        "threads" | "sim" => {
+            let p = args.get_usize("procs", 4)?;
+            let seed = args.get_u64("seed", 2015)?;
+            let backend = match engine {
+                "threads" => Backend::Threads { p, seed },
+                _ => Backend::Sim { p, net: NetModel::default(), seed },
+            };
+            let coord =
+                Coordinator::new(alpha).with_glb(glb_from_args(args)).with_screen(screen);
+            let run = coord.run(&db, &backend)?;
+            println!("engine={engine} P={p} | {}", run.summary());
+            run.result.significant
+        }
+        other => bail!("unknown --engine '{other}' (serial|lamp2|threads|sim)"),
+    };
+    print_significant(&significant);
     Ok(())
 }
 
@@ -108,43 +152,47 @@ pub fn cmd_mine(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `parlamp sim` — one DES run with full reporting.
+/// `parlamp sim` — one coordinated DES run with full reporting.
 pub fn cmd_sim(args: &Args) -> Result<()> {
     let (name, db) = scenario_db(args)?;
     let p = args.get_usize("procs", 12)?;
     let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
     // The speedup baseline is the *same computation* serially: LAMP
     // phases 1+2 with support-increase pruning (not a full enumeration).
+    // The measurement doubles as the DES cost-model calibration.
     let cal = crate::bench::calibrate_lamp(&db, alpha);
     let t1 = cal.t1_s;
-    let cfg = SimConfig {
-        p,
-        net: if args.flag("ethernet") { NetModel::ethernet() } else { NetModel::default() },
-        steal: !args.flag("naive"),
-        preprocess: !args.flag("no-preprocess"),
-        seed: args.get_u64("seed", 2015)?,
-        ..SimConfig::calibrated(p, &cal)
+    let coord = Coordinator::new(alpha)
+        .with_glb(glb_from_args(args))
+        .with_calibration(cal)
+        .with_screen(ScreenMode::Auto);
+    let net = if args.flag("ethernet") {
+        NetModel::ethernet()
+    } else {
+        NetModel::default()
     };
-    let (res, p1, p2) = lamp_parallel_sim(&db, alpha, &cfg);
-    println!("scenario {name}: {}", res.summary());
+    let backend = Backend::Sim { p, net, seed: args.get_u64("seed", 2015)? };
+    let run = coord.run(&db, &backend)?;
+    println!("scenario {name}: {}", run.result.summary());
     println!(
-        "serial t1={:.3}s | P={p} phase1={:.4}s phase2={:.4}s speedup₁={:.1}×",
+        "serial t1={:.3}s | P={p} phase1={:.4}s phase2={:.4}s speedup₁={:.1}× screen={:?}",
         t1,
-        p1.makespan_s,
-        p2.makespan_s,
-        t1 / (p1.makespan_s + p2.makespan_s).max(1e-12)
+        run.phase1.makespan_s,
+        run.phase2.makespan_s,
+        t1 / run.t_parallel_s().max(1e-12),
+        run.screen,
     );
+    let comm = run.comm_total();
     println!(
         "comm: sent={} gives={} tasks={} rejects={} bytes={}",
-        p1.comm.sent + p2.comm.sent,
-        p1.comm.gives + p2.comm.gives,
-        p1.comm.tasks_shipped + p2.comm.tasks_shipped,
-        p1.comm.rejects + p2.comm.rejects,
-        p1.comm.bytes_sent + p2.comm.bytes_sent,
+        comm.sent, comm.gives, comm.tasks_shipped, comm.rejects, comm.bytes_sent,
     );
-    let b = crate::par::breakdown::sum(&p1.breakdowns);
+    let b = crate::par::breakdown::sum(&run.phase1.breakdowns);
     let [pre, main, probe, idle] = b.as_secs();
-    println!("phase1 cpu-time: preprocess={pre:.4}s main={main:.4}s probe={probe:.4}s idle={idle:.4}s");
+    println!(
+        "phase1 cpu-time: preprocess={pre:.4}s main={main:.4}s probe={probe:.4}s \
+         idle={idle:.4}s"
+    );
     Ok(())
 }
 
@@ -211,17 +259,43 @@ mod tests {
             .collect();
         let args = Args::parse(&argv).unwrap();
         cmd_gendata(&args).unwrap();
-        let argv: Vec<String> = [
-            "--data",
-            dir.join("mcf7.dat").to_str().unwrap(),
-            "--labels",
-            dir.join("mcf7.labels").to_str().unwrap(),
-        ]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
+        let data = dir.join("mcf7.dat");
+        let labels = dir.join("mcf7.labels");
+        let base = vec![
+            "--data".to_string(),
+            data.to_str().unwrap().to_string(),
+            "--labels".to_string(),
+            labels.to_str().unwrap().to_string(),
+        ];
+        // serial reference path
+        let args = Args::parse(&base).unwrap();
+        cmd_lamp(&args).unwrap();
+        // coordinated DES path through the same CLI entry point
+        let mut argv = base.clone();
+        argv.extend(["--engine", "sim", "--procs", "6"].iter().map(|s| s.to_string()));
         let args = Args::parse(&argv).unwrap();
         cmd_lamp(&args).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lamp_rejects_unknown_engine_and_screen() {
+        let dir = std::env::temp_dir().join(format!("parlamp_cli_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.dat"), "0 1\n1\n").unwrap();
+        std::fs::write(dir.join("t.labels"), "1\n0\n").unwrap();
+        let base = vec![
+            "--data".to_string(),
+            dir.join("t.dat").to_str().unwrap().to_string(),
+            "--labels".to_string(),
+            dir.join("t.labels").to_str().unwrap().to_string(),
+        ];
+        let mut argv = base.clone();
+        argv.extend(["--engine", "warp"].iter().map(|s| s.to_string()));
+        assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
+        let mut argv = base;
+        argv.extend(["--screen", "gpu"].iter().map(|s| s.to_string()));
+        assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

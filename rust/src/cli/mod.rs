@@ -2,7 +2,7 @@
 //! hand-rolled parser).
 //!
 //! ```text
-//! parlamp lamp    --data t.dat --labels t.lab [--alpha 0.05] [--screen native|xla]
+//! parlamp lamp    --data t.dat --labels t.lab [--engine serial|lamp2|threads|sim]
 //! parlamp mine    --data t.dat [--min-sup K]
 //! parlamp sim     --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
 //! parlamp gendata --scenario alz-dom-5 --out dir/
@@ -62,12 +62,17 @@ pub fn usage() -> String {
     "parlamp — distributed significant pattern mining (LCM + LAMP + lifeline GLB)
 
 USAGE:
-  parlamp lamp      --data FILE --labels FILE [--alpha A] [--screen native|xla] [--engine serial|lamp2]
+  parlamp lamp      --data FILE --labels FILE [--alpha A]
+                    [--engine serial|lamp2|threads|sim] [--procs P] [--naive]
+                    [--screen native|xla|auto] [--seed S]
   parlamp mine      --data FILE [--min-sup K]
-  parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet] [--alpha A] [--seed S]
+  parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
+                    [--no-preprocess] [--alpha A] [--seed S]
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
 
+Engines `threads` and `sim` run the full three-phase procedure through the
+coordinator (phases 1-2 distributed, phase 3 via the configured screen).
 Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20, alz-dom-5,
 alz-dom-10, alz-rec-30, mcf7."
         .to_string()

@@ -1,1 +1,454 @@
-// paper's L3 coordination contribution
+//! The L3 coordination layer (paper §4): one orchestration path for the
+//! complete three-phase LAMP procedure over either fabric backend.
+//!
+//! The lower layers each solve one problem — [`crate::lcm`] expands tree
+//! nodes, [`crate::par`] runs the Fig. 5 worker under an engine,
+//! [`crate::glb`] shapes the lifeline topology, [`crate::dtd`] detects
+//! quiescence — but the seed left the *composition* of a full run scattered
+//! across the CLI, the examples, and ad-hoc helpers. [`Coordinator`] owns
+//! that composition:
+//!
+//! 1. **Phase 1** (λ search): workers are configured from [`GlbParams`]
+//!    (the lifeline hypercube edge length `l`, random steal attempts `w`,
+//!    DTD tree arity) and launched on the chosen [`Backend`]. The engine
+//!    returns only after Mattern DTD declares quiescence, at which point
+//!    the per-worker `SupportHist` / `Breakdown` / `CommStats` have been
+//!    merged into one [`ParRunResult`] — the *phase boundary*. The final λ
+//!    is recomputed from the merged (exact) histogram, so it equals the
+//!    serial result even though the in-flight λ may have lagged
+//!    (DESIGN.md §4).
+//! 2. **Phase 2** (correction factor): a counting run at
+//!    `min_sup = λ* − 1`, same backend, same merge discipline.
+//! 3. **Phase 3** (extraction): dispatched through the XLA/PJRT screen
+//!    when AOT artifacts are present and loadable
+//!    ([`ScreenMode::Auto`]), with a graceful fallback to the native
+//!    [`crate::stats::fisher`] path — the paper measures this phase at
+//!    ~10 ms, so the serial fallback never dominates.
+//!
+//! The CLI (`parlamp lamp --engine threads|sim`, `parlamp sim`) and the
+//! `quickstart` / `naive_vs_glb` / `scaling_study` / `gwas_study` examples
+//! all run through this one path.
+
+use anyhow::{Context, Result};
+
+use crate::bench::Calibration;
+use crate::db::Database;
+use crate::fabric::sim::NetModel;
+use crate::fabric::CommStats;
+use crate::glb::Lifelines;
+use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
+use crate::par::{
+    breakdown, run_sim, run_threads_with, ParRunResult, RunMode, SimConfig, ThreadConfig,
+};
+use crate::runtime::{
+    artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
+};
+
+/// Lifeline-GLB topology parameters (paper §4.2), the knobs the
+/// coordinator translates into per-worker configuration for both engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GlbParams {
+    /// Hypercube edge length `l` (paper fixes 2: binary hypercube).
+    pub l: usize,
+    /// Random steal attempts `w` before falling back to lifelines
+    /// (paper fixes 1).
+    pub w: usize,
+    /// `false` = the §5.4 naive static-partition baseline: depth-1
+    /// distribution plus the λ broadcast, no stealing.
+    pub steal: bool,
+    /// Depth-1 preprocess partition (§4.5).
+    pub preprocess: bool,
+    /// Mattern DTD spanning-tree arity (paper: ternary).
+    pub tree_arity: usize,
+}
+
+impl Default for GlbParams {
+    /// The paper's fixed operating point: `l = 2`, `w = 1`, ternary DTD
+    /// tree, stealing and preprocess on.
+    fn default() -> Self {
+        GlbParams { l: 2, w: 1, steal: true, preprocess: true, tree_arity: 3 }
+    }
+}
+
+impl GlbParams {
+    /// The naive baseline of Table 2: identical protocol with stealing
+    /// disabled.
+    pub fn naive() -> Self {
+        GlbParams { steal: false, ..Self::default() }
+    }
+
+    /// The lifeline neighborhood this parameterization induces for `rank`
+    /// in a world of `p` processes — exactly what each worker is wired
+    /// with.
+    pub fn lifelines(&self, rank: usize, p: usize) -> Lifelines {
+        Lifelines::new(rank, p, self.l)
+    }
+}
+
+/// Which fabric executes phases 1–2.
+#[derive(Clone, Copy, Debug)]
+pub enum Backend {
+    /// One OS thread per process over the channel fabric; real wall-clock
+    /// time (the paper's single-node runs, §5.3).
+    Threads { p: usize, seed: u64 },
+    /// Discrete-event simulation; virtual time under `net`'s latency and
+    /// bandwidth model (the TSUBAME substitution, DESIGN.md §2).
+    Sim { p: usize, net: NetModel, seed: u64 },
+}
+
+impl Backend {
+    /// Thread backend with the default seed.
+    pub fn threads(p: usize) -> Backend {
+        Backend::Threads { p, seed: 2015 }
+    }
+
+    /// Sim backend with the default (InfiniBand-class) network and seed.
+    pub fn sim(p: usize) -> Backend {
+        Backend::Sim { p, net: NetModel::default(), seed: 2015 }
+    }
+
+    /// World size.
+    pub fn p(&self) -> usize {
+        match self {
+            Backend::Threads { p, .. } | Backend::Sim { p, .. } => *p,
+        }
+    }
+
+    fn seed(&self) -> u64 {
+        match self {
+            Backend::Threads { seed, .. } | Backend::Sim { seed, .. } => *seed,
+        }
+    }
+}
+
+/// Phase-3 screen selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScreenMode {
+    /// Use the XLA/PJRT artifact when present and loadable, otherwise the
+    /// native Fisher path. The default.
+    Auto,
+    /// Always the native `stats::fisher` path.
+    Native,
+    /// Require the XLA/PJRT artifact; error when it cannot be used.
+    Xla,
+}
+
+/// Which screen actually ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScreenKind {
+    Native,
+    Xla,
+}
+
+/// Everything one coordinated run produces: the LAMP result plus the
+/// merged per-phase artifacts gathered at the DTD phase boundaries.
+#[derive(Clone, Debug)]
+pub struct CoordinatorRun {
+    pub result: LampResult,
+    /// Screen that produced `result.significant`.
+    pub screen: ScreenKind,
+    /// Phase-1 merge: exact histogram (at and above λ*), breakdowns,
+    /// communication counters, makespan.
+    pub phase1: ParRunResult,
+    /// Phase-2 merge: the full histogram at `min_sup`, whose total is the
+    /// correction factor.
+    pub phase2: ParRunResult,
+}
+
+impl CoordinatorRun {
+    /// Phases 1+2 makespan — the quantity the paper's speedups compare
+    /// against the serial `t₁`.
+    pub fn t_parallel_s(&self) -> f64 {
+        self.phase1.makespan_s + self.phase2.makespan_s
+    }
+
+    /// Communication counters summed over both distributed phases.
+    pub fn comm_total(&self) -> CommStats {
+        let mut c = self.phase1.comm;
+        c.add(&self.phase2.comm);
+        c
+    }
+
+    /// Fig. 7-style CPU-time breakdown summed over processes and phases.
+    pub fn breakdown_total(&self) -> breakdown::Breakdown {
+        let mut b = breakdown::sum(&self.phase1.breakdowns);
+        b.add(&breakdown::sum(&self.phase2.breakdowns));
+        b
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} | phase1 {:.4}s phase2 {:.4}s screen={:?}",
+            self.result.summary(),
+            self.phase1.makespan_s,
+            self.phase2.makespan_s,
+            self.screen
+        )
+    }
+}
+
+/// Owns the three-phase LAMP orchestration. Construct with [`Coordinator::new`],
+/// adjust with the builder methods, then [`run`](Coordinator::run) against a
+/// database and a [`Backend`].
+#[derive(Clone, Debug)]
+pub struct Coordinator {
+    alpha: f64,
+    glb: GlbParams,
+    screen: ScreenMode,
+    /// When present, the DES cost model and probe/wave cadences are derived
+    /// from a measured serial run (`bench::calibrate_lamp`); otherwise the
+    /// paper-default knobs apply.
+    calibration: Option<Calibration>,
+}
+
+impl Coordinator {
+    /// A coordinator at family-wise error rate `alpha` with the paper's
+    /// GLB parameters and the `Auto` screen.
+    pub fn new(alpha: f64) -> Coordinator {
+        Coordinator {
+            alpha,
+            glb: GlbParams::default(),
+            screen: ScreenMode::Auto,
+            calibration: None,
+        }
+    }
+
+    pub fn with_glb(mut self, glb: GlbParams) -> Coordinator {
+        self.glb = glb;
+        self
+    }
+
+    pub fn with_screen(mut self, screen: ScreenMode) -> Coordinator {
+        self.screen = screen;
+        self
+    }
+
+    pub fn with_calibration(mut self, cal: Calibration) -> Coordinator {
+        self.calibration = Some(cal);
+        self
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn glb(&self) -> GlbParams {
+        self.glb
+    }
+
+    /// Run the complete three-phase procedure. Phases 1–2 execute on
+    /// `backend`; phase 3 runs through the configured screen.
+    pub fn run(&self, db: &Database, backend: &Backend) -> Result<CoordinatorRun> {
+        let rule = SupportIncreaseRule::new(db.marginals(), self.alpha);
+
+        // Phase 1: λ search with the piggybacked support-increase protocol.
+        // The engine returns after DTD quiescence with the workers'
+        // histograms merged; the exact λ* is then recomputed from that
+        // merged histogram (the root's in-flight λ may lag — DESIGN.md §4).
+        let mut p1 = self.run_phase(db, RunMode::Phase1 { alpha: self.alpha }, backend, 0);
+        p1.finalize_phase1(&rule);
+        debug_assert_eq!(
+            rule.advance(p1.lambda_final, |l| p1.hist.cs_ge(l)),
+            p1.lambda_final,
+            "λ* must be a fixed point of the merged histogram"
+        );
+
+        // Phase 2: correction factor k = CS(λ* − 1) by re-mining at the
+        // final minimum support.
+        let p2 = self.run_phase(db, RunMode::Count { min_sup: p1.min_sup }, backend, 1);
+        let k = p2.closed_total.max(1);
+
+        // Phase 3: significance screen at the adjusted level α / k.
+        let (significant, screen) = self.screen(db, p1.min_sup, k)?;
+
+        let result = LampResult {
+            alpha: self.alpha,
+            lambda_final: p1.lambda_final,
+            min_sup: p1.min_sup,
+            correction_factor: k,
+            adjusted_level: self.alpha / k as f64,
+            significant,
+            phase1_closed: p1.closed_total,
+            phase2_closed: p2.closed_total,
+        };
+        Ok(CoordinatorRun { result, screen, phase1: p1, phase2: p2 })
+    }
+
+    /// Launch one distributed phase and block until its DTD-quiescent
+    /// merge. `phase_idx` decorrelates the two phases' steal randomness,
+    /// mirroring `lamp_parallel_threads`.
+    fn run_phase(
+        &self,
+        db: &Database,
+        mode: RunMode,
+        backend: &Backend,
+        phase_idx: u64,
+    ) -> ParRunResult {
+        let seed = backend.seed().wrapping_add(phase_idx);
+        match backend {
+            Backend::Threads { p, .. } => {
+                run_threads_with(db, mode, &self.thread_config(*p, seed))
+            }
+            Backend::Sim { p, net, .. } => run_sim(db, mode, &self.sim_config(*p, *net, seed)),
+        }
+    }
+
+    /// `GlbParams` (+ paper-default cadences) → thread-engine knobs.
+    fn thread_config(&self, p: usize, seed: u64) -> ThreadConfig {
+        ThreadConfig {
+            w: self.glb.w,
+            l: self.glb.l,
+            tree_arity: self.glb.tree_arity,
+            steal: self.glb.steal,
+            preprocess: self.glb.preprocess,
+            ..ThreadConfig::paper_defaults(p, seed)
+        }
+    }
+
+    /// `GlbParams` (+ calibration when present) → DES knobs.
+    fn sim_config(&self, p: usize, net: NetModel, seed: u64) -> SimConfig {
+        let base = match &self.calibration {
+            Some(cal) => SimConfig::calibrated(p, cal),
+            None => SimConfig::paper_defaults(p),
+        };
+        SimConfig {
+            p,
+            net,
+            seed,
+            w: self.glb.w,
+            l: self.glb.l,
+            tree_arity: self.glb.tree_arity,
+            steal: self.glb.steal,
+            preprocess: self.glb.preprocess,
+            ..base
+        }
+    }
+
+    /// Phase-3 dispatch: PJRT screen or native Fisher, per [`ScreenMode`].
+    /// Public so serial pipelines (CLI `--engine serial|lamp2`) share the
+    /// exact same screen-selection policy as coordinated runs.
+    pub fn screen(
+        &self,
+        db: &Database,
+        min_sup: u32,
+        correction_factor: u64,
+    ) -> Result<(Vec<SignificantPattern>, ScreenKind)> {
+        match self.screen {
+            ScreenMode::Native => {
+                let sig = phase3_extract(db, min_sup, correction_factor, self.alpha);
+                Ok((sig, ScreenKind::Native))
+            }
+            ScreenMode::Xla => {
+                let sig = self.xla_screen(db, min_sup, correction_factor)?;
+                Ok((sig, ScreenKind::Xla))
+            }
+            ScreenMode::Auto => {
+                // Fall back to native when artifacts are absent, the PJRT
+                // backend is not compiled in (stub build), or the frozen
+                // artifact shapes cannot hold this database — but say why,
+                // so an operator can tell why the fast path never runs.
+                if artifacts_available() {
+                    match self.xla_screen(db, min_sup, correction_factor) {
+                        Ok(sig) => return Ok((sig, ScreenKind::Xla)),
+                        Err(e) => {
+                            eprintln!("warning: XLA screen unusable, using native: {e:#}");
+                        }
+                    }
+                }
+                let sig = phase3_extract(db, min_sup, correction_factor, self.alpha);
+                Ok((sig, ScreenKind::Native))
+            }
+        }
+    }
+
+    /// The XLA/PJRT screen path: load artifacts, compile, batch-score.
+    /// Shared by the `Xla` (required) and `Auto` (best-effort) modes.
+    fn xla_screen(
+        &self,
+        db: &Database,
+        min_sup: u32,
+        correction_factor: u64,
+    ) -> Result<Vec<SignificantPattern>> {
+        let rt = XlaRuntime::load(&artifacts_dir())
+            .context("load XLA artifacts (run `make artifacts`)")?;
+        let engine = ScreenEngine::new(rt);
+        phase3_extract_xla(&engine, db, min_sup, correction_factor, self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_gwas, GwasSpec};
+    use crate::lamp::lamp_serial;
+
+    fn small_db() -> crate::db::Database {
+        let spec = GwasSpec { n_snps: 120, n_individuals: 80, n_pos: 20, ..GwasSpec::small(99) };
+        generate_gwas(&spec).0
+    }
+
+    #[test]
+    fn sim_run_matches_serial_end_to_end() {
+        let db = small_db();
+        let serial = lamp_serial(&db, 0.05);
+        let run = Coordinator::new(0.05)
+            .with_screen(ScreenMode::Native)
+            .run(&db, &Backend::sim(6))
+            .expect("coordinated run");
+        assert_eq!(run.result.lambda_final, serial.lambda_final);
+        assert_eq!(run.result.correction_factor, serial.correction_factor);
+        assert_eq!(run.result.significant.len(), serial.significant.len());
+        for (a, b) in run.result.significant.iter().zip(&serial.significant) {
+            assert_eq!(a.items, b.items);
+        }
+        assert!(run.t_parallel_s() > 0.0);
+    }
+
+    #[test]
+    fn glb_params_flow_into_worker_topology() {
+        // w = 0 must eliminate random steal attempts: every request is a
+        // lifeline request, so rejects only carry the lifeline flag.
+        let db = small_db();
+        let glb = GlbParams { w: 0, ..GlbParams::default() };
+        assert_eq!(glb.lifelines(0, 8).z(), 3); // binary hypercube of 8
+        let run = Coordinator::new(0.05)
+            .with_glb(glb)
+            .with_screen(ScreenMode::Native)
+            .run(&db, &Backend::sim(8))
+            .expect("run");
+        let serial = lamp_serial(&db, 0.05);
+        assert_eq!(run.result.correction_factor, serial.correction_factor);
+    }
+
+    #[test]
+    fn xla_screen_mode_errors_without_artifacts() {
+        // CI has no artifacts; requiring the XLA screen must fail loudly
+        // while Auto (the default) silently degrades to native.
+        if artifacts_available() {
+            return; // environment with artifacts: covered by runtime_xla
+        }
+        let db = small_db();
+        let err = Coordinator::new(0.05)
+            .with_screen(ScreenMode::Xla)
+            .run(&db, &Backend::sim(2))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("artifacts"), "{err:#}");
+        let run = Coordinator::new(0.05).run(&db, &Backend::sim(2)).expect("auto run");
+        assert_eq!(run.screen, ScreenKind::Native);
+    }
+
+    #[test]
+    fn summary_mentions_phase_times() {
+        let db = small_db();
+        let run = Coordinator::new(0.05)
+            .with_screen(ScreenMode::Native)
+            .run(&db, &Backend::sim(3))
+            .expect("run");
+        let s = run.summary();
+        assert!(s.contains("phase1"), "{s}");
+        assert!(s.contains("screen=Native"), "{s}");
+        let total = run.breakdown_total();
+        assert!(total.total_ns() > 0);
+    }
+}

@@ -40,8 +40,8 @@ impl Database {
                 cols[i as usize].set(t, true);
             }
         }
-        let pos_mask =
-            BitVec::from_indices(n_trans, positive.iter().enumerate().filter(|(_, p)| **p).map(|(t, _)| t));
+        let pos = positive.iter().enumerate().filter(|(_, p)| **p).map(|(t, _)| t);
+        let pos_mask = BitVec::from_indices(n_trans, pos);
         Database { n_trans, cols, pos_mask }
     }
 

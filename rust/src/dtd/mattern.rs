@@ -208,7 +208,7 @@ impl DtdNode {
 }
 
 /// Merge sparse histogram deltas (sorted-by-support not required).
-pub fn merge_hist(into: &mut HistDelta, from: &HistDelta) {
+pub fn merge_hist(into: &mut HistDelta, from: &[(u32, u64)]) {
     for &(s, c) in from {
         if let Some(e) = into.iter_mut().find(|(s2, _)| *s2 == s) {
             e.1 += c;
@@ -296,7 +296,7 @@ mod tests {
         let mut deficits = vec![0i64; 9];
         deficits[4] = 2;
         deficits[7] = -1;
-        let out = run_wave(9, &deficits, &vec![true; 9]);
+        let out = run_wave(9, &deficits, &[true; 9]);
         match out {
             WaveOutcome::Complete { count, .. } => assert_eq!(count, 1),
             _ => panic!(),
@@ -362,7 +362,7 @@ mod tests {
     #[test]
     fn merge_hist_accumulates() {
         let mut a = vec![(3u32, 2u64), (5, 1)];
-        merge_hist(&mut a, &vec![(5, 4), (9, 9)]);
+        merge_hist(&mut a, &[(5, 4), (9, 9)]);
         a.sort();
         assert_eq!(a, vec![(3, 2), (5, 5), (9, 9)]);
     }

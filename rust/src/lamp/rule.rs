@@ -47,7 +47,7 @@ impl SupportIncreaseRule {
     /// `cs_ge_lambda = CS(λ)` (i.e. should λ rise past it)?
     #[inline]
     pub fn exceeded(&self, lambda: u32, cs_ge_lambda: u64) -> bool {
-        cs_ge_lambda as f64 > self.threshold(lambda as u32)
+        cs_ge_lambda as f64 > self.threshold(lambda)
     }
 
     /// Advance λ as far as the histogram allows; returns the new λ.

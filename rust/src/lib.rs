@@ -16,14 +16,19 @@
 //! - [`fabric`], [`glb`], [`dtd`], [`par`] — the distributed runtime: an
 //!   MPI-like message fabric (thread and discrete-event backends), lifeline
 //!   work stealing, termination detection, and the parallel DFS worker.
+//! - [`coordinator`] — the L3 orchestration layer: owns the three-phase
+//!   LAMP procedure across either fabric backend (configures workers from
+//!   the GLB parameters, merges histograms/breakdowns/counters at the DTD
+//!   phase boundaries) and dispatches the phase-3 screen.
 //! - [`runtime`] — PJRT loader for the AOT artifacts built under
-//!   `python/compile` (`make artifacts`).
+//!   `python/compile` (`make artifacts`); a stub without the `xla` feature.
 //! - [`datagen`] — synthetic GWAS / transcriptome workload generators.
 //! - [`bench`], [`cli`], [`util`] — harnesses and drivers.
 
 pub mod bench;
 pub mod bits;
 pub mod cli;
+pub mod coordinator;
 pub mod datagen;
 pub mod db;
 pub mod dtd;

@@ -15,22 +15,77 @@ use super::engine_sim::collect;
 use super::worker::{Poll, RunMode, Worker, WorkerConfig};
 use super::ParRunResult;
 
-/// Run one phase on `p` OS threads. `steal = false` gives the naive
-/// baseline. Blocking waits cap at 200 µs so DTD waves keep flowing.
+/// Knobs for one thread-engine phase: the same GLB/DTD surface as
+/// [`super::engine_sim::SimConfig`] minus the network model (the channel
+/// fabric is "a memory copy", §5.3) and minus `ns_per_unit` (real
+/// wall-clock replaces the virtual cost model).
+#[derive(Clone, Debug)]
+pub struct ThreadConfig {
+    pub p: usize,
+    /// Random steal attempts `w` (paper: 1).
+    pub w: usize,
+    /// Hypercube edge length `l` (paper: 2).
+    pub l: usize,
+    /// DTD spanning-tree arity (paper: 3).
+    pub tree_arity: usize,
+    /// `false` = naive baseline (no stealing).
+    pub steal: bool,
+    /// Depth-1 preprocess partition (§4.5).
+    pub preprocess: bool,
+    /// Work budget between probes, in expansion cost units (§4.6).
+    pub probe_budget_units: u64,
+    pub dtd_interval_ns: u64,
+    pub seed: u64,
+}
+
+impl ThreadConfig {
+    pub fn paper_defaults(p: usize, seed: u64) -> Self {
+        ThreadConfig {
+            p,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: true,
+            probe_budget_units: 4_000_000,
+            dtd_interval_ns: 1_000_000,
+            seed,
+        }
+    }
+}
+
+/// Run one phase on `p` OS threads with the paper-default knobs.
+/// `steal = false` gives the naive baseline.
 pub fn run_threads(db: &Database, mode: RunMode, p: usize, steal: bool, seed: u64) -> ParRunResult {
+    run_threads_with(db, mode, &ThreadConfig { steal, ..ThreadConfig::paper_defaults(p, seed) })
+}
+
+/// Run one phase on OS threads with explicit GLB/DTD knobs (the
+/// coordinator's entry point). Blocking waits cap at 200 µs so DTD waves
+/// keep flowing.
+pub fn run_threads_with(db: &Database, mode: RunMode, cfg: &ThreadConfig) -> ParRunResult {
+    let p = cfg.p;
     assert!(p >= 1);
     let boxes = crate::fabric::thread::thread_fabric(p);
     let t0 = Instant::now();
     let workers: Vec<Worker> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
         for (rank, mut mb) in boxes.into_iter().enumerate() {
-            let cfg = WorkerConfig {
+            let wc = WorkerConfig {
+                rank,
+                p,
+                w: cfg.w,
+                l: cfg.l,
+                tree_arity: cfg.tree_arity,
+                steal: cfg.steal,
+                preprocess: cfg.preprocess && p > 1,
+                mode,
+                probe_budget_units: cfg.probe_budget_units,
+                dtd_interval_ns: cfg.dtd_interval_ns,
                 ns_per_unit: None, // real time
-                steal,
-                preprocess: p > 1,
-                ..WorkerConfig::paper_defaults(rank, p, mode, seed)
+                seed: cfg.seed,
             };
-            let mut worker = Worker::new(db, cfg);
+            let mut worker = Worker::new(db, wc);
             handles.push(scope.spawn(move || {
                 let t0 = Instant::now();
                 loop {

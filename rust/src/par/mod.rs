@@ -20,7 +20,7 @@ pub mod worker;
 
 pub use breakdown::Breakdown;
 pub use engine_sim::{run_sim, SimConfig};
-pub use engine_thread::run_threads;
+pub use engine_thread::{run_threads, run_threads_with, ThreadConfig};
 pub use worker::{Poll, RunMode, Worker, WorkerConfig};
 
 use crate::db::Database;
@@ -61,11 +61,22 @@ impl ParRunResult {
 
 /// Full three-phase LAMP through the DES engine (phases 1–2 distributed,
 /// phase 3 serial — the paper measures it at ~10 ms and omits it).
-pub fn lamp_parallel_sim(db: &Database, alpha: f64, cfg: &SimConfig) -> (LampResult, ParRunResult, ParRunResult) {
+///
+/// Convenience wrapper with the paper-default GLB parameters; the
+/// [`crate::coordinator`] is the full-featured orchestration path.
+pub fn lamp_parallel_sim(
+    db: &Database,
+    alpha: f64,
+    cfg: &SimConfig,
+) -> (LampResult, ParRunResult, ParRunResult) {
     let rule = SupportIncreaseRule::new(db.marginals(), alpha);
     let mut p1 = run_sim(db, RunMode::Phase1 { alpha }, cfg);
     p1.finalize_phase1(&rule);
-    let p2 = run_sim(db, RunMode::Count { min_sup: p1.min_sup }, cfg);
+    // Decorrelate the counting phase's steal randomness from phase 1, as
+    // the thread wrapper and the coordinator both do (results are
+    // seed-invariant; only comm/timing statistics are affected).
+    let p2_cfg = SimConfig { seed: cfg.seed.wrapping_add(1), ..cfg.clone() };
+    let p2 = run_sim(db, RunMode::Count { min_sup: p1.min_sup }, &p2_cfg);
     let k = p2.closed_total.max(1);
     let significant = phase3_extract(db, p1.min_sup, k, alpha);
     let result = LampResult {
@@ -92,7 +103,8 @@ pub fn lamp_parallel_threads(
     let rule = SupportIncreaseRule::new(db.marginals(), alpha);
     let mut p1 = run_threads(db, RunMode::Phase1 { alpha }, p, steal, seed);
     p1.finalize_phase1(&rule);
-    let p2 = run_threads(db, RunMode::Count { min_sup: p1.min_sup }, p, steal, seed + 1);
+    let mode2 = RunMode::Count { min_sup: p1.min_sup };
+    let p2 = run_threads(db, mode2, p, steal, seed.wrapping_add(1));
     let k = p2.closed_total.max(1);
     let significant = phase3_extract(db, p1.min_sup, k, alpha);
     let result = LampResult {

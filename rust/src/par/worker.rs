@@ -745,7 +745,8 @@ mod tests {
         let mut w = Worker::new(&db, cfg);
         let mut mb = SimMailbox::new(1, 4);
         // a random request: immediate reject (not lifeline)
-        mb.inbox.push_back((2, Msg::Basic { stamp: 0, kind: BasicKind::Request { lifeline: false } }));
+        let random_req = Msg::Basic { stamp: 0, kind: BasicKind::Request { lifeline: false } };
+        mb.inbox.push_back((2, random_req));
         let _ = w.poll(&mut mb, 0);
         let rejects: Vec<_> = mb
             .outbox
@@ -758,7 +759,8 @@ mod tests {
         assert_eq!(rejects.len(), 1, "random request must be rejected: {:?}", mb.outbox);
         mb.outbox.clear();
         // a lifeline request: rejected with the lifeline echo + recorded
-        mb.inbox.push_back((3, Msg::Basic { stamp: 0, kind: BasicKind::Request { lifeline: true } }));
+        let lifeline_req = Msg::Basic { stamp: 0, kind: BasicKind::Request { lifeline: true } };
+        mb.inbox.push_back((3, lifeline_req));
         let _ = w.poll(&mut mb, 1);
         assert!(mb.outbox.iter().any(|(dst, m)| *dst == 3
             && matches!(m, Msg::Basic { kind: BasicKind::Reject { lifeline: true }, .. })));

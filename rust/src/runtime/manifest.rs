@@ -50,8 +50,11 @@ fn scan_usize(text: &str, key: &str) -> Result<usize> {
     let at = text.find(key).with_context(|| format!("manifest missing {key}"))?;
     let rest = &text[at + key.len()..];
     let colon = rest.find(':').context("missing ':' after key")?;
-    let digits: String =
-        rest[colon + 1..].chars().skip_while(|c| c.is_whitespace()).take_while(char::is_ascii_digit).collect();
+    let digits: String = rest[colon + 1..]
+        .chars()
+        .skip_while(|c| c.is_whitespace())
+        .take_while(char::is_ascii_digit)
+        .collect();
     digits.parse::<usize>().with_context(|| format!("bad integer for {key}"))
 }
 

@@ -7,8 +7,18 @@
 //! itemsets in batches with Python nowhere on the path.
 
 pub mod manifest;
-pub mod pjrt;
 pub mod screen;
+
+// The real PJRT loader needs the `xla` crate, which the offline build
+// environment cannot provide; without the `xla` cargo feature a stub with
+// the identical API is compiled instead, `XlaRuntime::load` fails with an
+// explanatory error, and callers (notably `coordinator::ScreenMode::Auto`)
+// fall back to the native Fisher screen. See DESIGN.md §5.
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
+pub mod pjrt;
 
 pub use manifest::Manifest;
 pub use pjrt::XlaRuntime;

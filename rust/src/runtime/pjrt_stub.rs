@@ -1,0 +1,91 @@
+//! Stub PJRT runtime, compiled when the `xla` cargo feature is disabled.
+//!
+//! Mirrors the public surface of the real `pjrt` module (same types, same
+//! signatures) so every call site — `runtime::screen`, the CLI, the
+//! coordinator, benches, tests — compiles identically with or without the
+//! feature. [`XlaRuntime::load`] always fails with an explanatory error;
+//! since loading is the only way to obtain an `XlaRuntime`, the remaining
+//! methods are unreachable in practice but still return honest errors.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::bits::BitVec;
+use crate::stats::Marginals;
+
+use super::manifest::Manifest;
+
+/// Stand-in for the compiled screen executable. Never constructible in
+/// stub builds: [`XlaRuntime::load`] is the sole constructor and it always
+/// returns an error.
+pub struct XlaRuntime {
+    manifest: Manifest,
+}
+
+/// Statistics for one screened candidate row (same layout as the real
+/// runtime's output).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScreenOut {
+    pub x: i32,
+    pub n: i32,
+    pub logp: f64,
+    pub logf: f64,
+}
+
+const UNAVAILABLE: &str = "XLA/PJRT backend not compiled into this binary \
+     (build with `--features xla` and a vendored `xla` crate); \
+     the native Fisher screen is the supported offline path";
+
+impl XlaRuntime {
+    /// Validate the artifact directory, then report that no PJRT backend is
+    /// available. Checking the manifest first keeps the two failure modes
+    /// distinguishable: "artifacts missing/corrupt" vs "backend not built".
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let _ = Manifest::load(dir)?;
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn manifest(&self) -> Manifest {
+        self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// See the real runtime's `screen_batch`; always errors in stub builds.
+    pub fn screen_batch(&self, _rows: &[&BitVec], _m: Marginals) -> Result<Vec<ScreenOut>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// See the real runtime's `screen_batch_with_pos`; always errors in
+    /// stub builds.
+    pub fn screen_batch_with_pos(
+        &self,
+        _rows: &[&BitVec],
+        _pos_mask: &BitVec,
+        _m: Marginals,
+    ) -> Result<Vec<ScreenOut>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_distinguishes_missing_artifacts_from_missing_backend() {
+        let dir = std::env::temp_dir().join(format!("parlamp_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // No manifest at all: the error is about the artifacts.
+        let e = XlaRuntime::load(&dir).unwrap_err();
+        assert!(!format!("{e:#}").contains("not compiled"), "{e:#}");
+        // Valid manifest but stub build: the error is about the backend.
+        std::fs::write(dir.join("manifest.json"), r#"{"k": 8, "w": 2, "t_max": 16}"#).unwrap();
+        let e = XlaRuntime::load(&dir).unwrap_err();
+        assert!(format!("{e:#}").contains("not compiled"), "{e:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,130 @@
+//! Coordinator integration: the phase-boundary merges gathered at Mattern
+//! DTD quiescence must reproduce the serial miner's histograms exactly, on
+//! both fabric backends, with and without stealing; and the whole
+//! coordinated pipeline must agree with `lamp_serial` end to end.
+
+use parlamp::coordinator::{Backend, Coordinator, GlbParams, ScreenKind, ScreenMode};
+use parlamp::datagen::{generate_gwas, GwasSpec};
+use parlamp::db::Database;
+use parlamp::lamp::{lamp_serial, SupportIncreaseRule};
+use parlamp::lcm::{mine_closed, SupportHist, Visit};
+
+fn small_db(seed: u64) -> Database {
+    let spec = GwasSpec { n_snps: 140, n_individuals: 90, n_pos: 24, ..GwasSpec::small(seed) };
+    generate_gwas(&spec).0
+}
+
+/// The serial LCM closed-set histogram at `min_sup` — the ground truth the
+/// distributed phase-2 merge must equal.
+fn serial_hist(db: &Database, min_sup: u32) -> SupportHist {
+    let mut hist = SupportHist::new(db.n_trans());
+    mine_closed(db, min_sup, |node, ms| {
+        hist.record(node.support);
+        (Visit::Continue, ms)
+    });
+    hist
+}
+
+fn assert_phase2_merge_matches_serial(db: &Database, backend: &Backend, glb: GlbParams) {
+    let serial = lamp_serial(db, 0.05);
+    let run = Coordinator::new(0.05)
+        .with_glb(glb)
+        .with_screen(ScreenMode::Native)
+        .run(db, backend)
+        .expect("coordinated run");
+    assert_eq!(run.result.lambda_final, serial.lambda_final, "{backend:?} λ*");
+    assert_eq!(run.result.correction_factor, serial.correction_factor, "{backend:?} k");
+
+    // Phase 2 counts every closed set with support ≥ min_sup exactly once,
+    // so the merged histogram must equal the serial one bin for bin.
+    let want = serial_hist(db, run.result.min_sup);
+    assert_eq!(
+        run.phase2.hist.counts(),
+        want.counts(),
+        "{backend:?} steal={}: phase-2 merged histogram != serial LCM histogram",
+        glb.steal
+    );
+    assert_eq!(run.phase2.hist.total(), serial.correction_factor);
+
+    // Phase 1's merged histogram is exact at and above λ* (below it the
+    // rising λ prunes), which is precisely what makes the recomputed λ* a
+    // fixed point of the support-increase rule.
+    let full = serial_hist(db, 1);
+    for lambda in run.result.lambda_final..=db.n_trans() as u32 {
+        assert_eq!(
+            run.phase1.hist.cs_ge(lambda),
+            full.cs_ge(lambda),
+            "{backend:?} steal={}: phase-1 CS({lambda}) diverges from serial",
+            glb.steal
+        );
+    }
+    let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
+    assert_eq!(
+        rule.advance(1, |l| run.phase1.hist.cs_ge(l)),
+        run.result.lambda_final,
+        "{backend:?}: λ* must be recomputable from the merged phase-1 histogram"
+    );
+
+    if !glb.steal {
+        let comm = run.comm_total();
+        assert_eq!(comm.gives, 0, "{backend:?}: naive baseline must never ship tasks");
+        assert_eq!(comm.tasks_shipped, 0);
+    }
+}
+
+#[test]
+fn sim_backend_merge_matches_serial() {
+    let db = small_db(7);
+    for p in [1usize, 4, 9] {
+        assert_phase2_merge_matches_serial(&db, &Backend::sim(p), GlbParams::default());
+    }
+}
+
+#[test]
+fn thread_backend_merge_matches_serial() {
+    let db = small_db(11);
+    for p in [2usize, 4] {
+        let backend = Backend::Threads { p, seed: 77 };
+        assert_phase2_merge_matches_serial(&db, &backend, GlbParams::default());
+    }
+}
+
+#[test]
+fn naive_baseline_merge_matches_serial_on_both_backends() {
+    let db = small_db(13);
+    assert_phase2_merge_matches_serial(&db, &Backend::sim(6), GlbParams::naive());
+    let backend = Backend::Threads { p: 3, seed: 5 };
+    assert_phase2_merge_matches_serial(&db, &backend, GlbParams::naive());
+}
+
+#[test]
+fn backends_agree_with_each_other() {
+    let db = small_db(17);
+    let coord = Coordinator::new(0.05).with_screen(ScreenMode::Native);
+    let thr = coord.run(&db, &Backend::Threads { p: 3, seed: 1 }).expect("threads");
+    let sim = coord.run(&db, &Backend::sim(5)).expect("sim");
+    assert_eq!(thr.result.lambda_final, sim.result.lambda_final);
+    assert_eq!(thr.result.correction_factor, sim.result.correction_factor);
+    assert_eq!(thr.result.significant.len(), sim.result.significant.len());
+    for (a, b) in thr.result.significant.iter().zip(&sim.result.significant) {
+        assert_eq!(a.items, b.items);
+        assert_eq!(a.support, b.support);
+        assert!((a.p_value - b.p_value).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn default_screen_degrades_gracefully_without_artifacts() {
+    // In CI there are no AOT artifacts: the Auto screen must fall back to
+    // native Fisher and still produce the serial significant set.
+    let db = small_db(19);
+    let serial = lamp_serial(&db, 0.05);
+    let run = Coordinator::new(0.05).run(&db, &Backend::sim(4)).expect("auto run");
+    if !parlamp::runtime::artifacts_available() {
+        assert_eq!(run.screen, ScreenKind::Native);
+    }
+    assert_eq!(run.result.significant.len(), serial.significant.len());
+    for (a, b) in run.result.significant.iter().zip(&serial.significant) {
+        assert_eq!(a.items, b.items);
+    }
+}

@@ -1,0 +1,288 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the subset of `anyhow`'s API the workspace actually uses, with
+//! the same observable behaviour:
+//!
+//! - [`Error`]: an opaque error carrying a context chain (outermost first).
+//!   `Display` prints the outermost message, `{:#}` prints the full chain
+//!   joined by `": "`, and `Debug` prints the anyhow-style
+//!   `Caused by:` listing.
+//! - [`Result<T>`] with `Error` as the default error type.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result<T, E>`
+//!   for any `E: std::error::Error`, on `Result<T, Error>`, and on
+//!   `Option<T>`.
+//! - [`anyhow!`], [`bail!`], [`ensure!`].
+//!
+//! The blanket-vs-`Error` coherence is resolved exactly the way the real
+//! crate does it: one `Context` impl parameterized over a private extension
+//! trait that is implemented both for all standard errors and for `Error`
+//! itself (sound because `Error` deliberately does not implement
+//! `std::error::Error`).
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` by default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a chain of context messages (outermost first) plus the
+/// boxed root cause when one exists.
+pub struct Error {
+    /// Context messages, outermost first; the last entry is the root
+    /// message. Never empty.
+    chain: Vec<String>,
+    /// The typed root cause, when constructed from a standard error.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()], source: None }
+    }
+
+    /// Create an error from a standard error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { chain: vec![error.to_string()], source: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message.
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("chain is never empty")
+    }
+
+    /// The typed root cause, when one exists.
+    // `.map` cannot drop the box's `Send + Sync` bounds (no coercion through
+    // `Option`), so this stays an explicit match.
+    #[allow(clippy::manual_map)]
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        match &self.source {
+            Some(boxed) => Some(&**boxed),
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Private extension trait: "something that can absorb a context
+    /// message and become an `Error`". Implemented for every standard
+    /// error and for `Error` itself.
+    pub trait ErrorExt {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> ErrorExt for E {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::new(self).wrap(context)
+        }
+    }
+
+    impl ErrorExt for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.wrap(context)
+        }
+    }
+}
+
+/// Attach context to a fallible value.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::ErrorExt> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("open config").unwrap_err();
+        assert_eq!(format!("{e}"), "open config");
+        assert_eq!(format!("{e:#}"), "open config: missing file");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["open config", "missing file"]);
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        let r: Result<()> = Err(Error::msg("inner"));
+        let e = r.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "layer 2: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+        let lazy: Option<u32> = None;
+        assert!(lazy.with_context(|| "lazy").is_err());
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+
+        fn g() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(g().unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain literal");
+        assert_eq!(a.to_string(), "plain literal");
+        let n = 4;
+        let b = anyhow!("formatted {n} {}", "args");
+        assert_eq!(b.to_string(), "formatted 4 args");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+}
