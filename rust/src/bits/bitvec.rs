@@ -8,6 +8,23 @@ use super::{and_popcount, subset_of, words_for};
 /// Represents the *occurrence bitmap* of an itemset: bit `t` is set iff
 /// transaction `t` contains the itemset. Trailing bits past `len` are kept
 /// zero as an invariant so popcounts never over-count.
+///
+/// # Examples
+///
+/// The miner's hot path is AND + popcount over occurrence bitmaps (paper
+/// §4.6): intersecting two itemsets' occurrences gives the support of
+/// their union, without materializing the intersection.
+///
+/// ```
+/// use parlamp::bits::BitVec;
+///
+/// let a = BitVec::from_indices(100, [0, 3, 64, 99]); // transactions with itemset A
+/// let b = BitVec::from_indices(100, [3, 64, 65]);    // transactions with itemset B
+/// assert_eq!(a.count(), 4);
+/// assert_eq!(a.and_count(&b), 2);                    // support of A ∪ B
+/// assert_eq!(a.and(&b).iter_ones().collect::<Vec<_>>(), vec![3, 64]);
+/// assert!(a.and(&b).is_subset_of(&a));
+/// ```
 #[derive(Clone, PartialEq, Eq, Hash)]
 pub struct BitVec {
     len: usize,
@@ -129,6 +146,13 @@ impl BitVec {
     }
 
     /// Iterate over the indices of set bits in ascending order.
+    ///
+    /// ```
+    /// use parlamp::bits::BitVec;
+    ///
+    /// let v = BitVec::from_indices(130, [1, 64, 129]);
+    /// assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![1, 64, 129]);
+    /// ```
     pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(|(wi, &w)| {
             let mut w = w;

@@ -20,7 +20,12 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            let Some(key) = a.strip_prefix("--") else {
+            // `-n` is shorthand for `--procs` (rank count).
+            let key = if a == "-n" {
+                "procs"
+            } else if let Some(key) = a.strip_prefix("--") {
+                key
+            } else {
                 bail!("unexpected positional argument '{a}'");
             };
             if BOOL_FLAGS.contains(&key) {
@@ -92,6 +97,14 @@ mod tests {
     fn rejects_positional_and_dangling() {
         assert!(Args::parse(&argv(&["positional"])).is_err());
         assert!(Args::parse(&argv(&["--alpha"])).is_err());
+        assert!(Args::parse(&argv(&["-x", "1"])).is_err());
+    }
+
+    #[test]
+    fn dash_n_is_procs() {
+        let a = Args::parse(&argv(&["-n", "8"])).unwrap();
+        assert_eq!(a.get_usize("procs", 1).unwrap(), 8);
+        assert!(Args::parse(&argv(&["-n"])).is_err());
     }
 
     #[test]

@@ -77,7 +77,7 @@ fn print_significant(significant: &[SignificantPattern]) {
 
 /// `parlamp lamp` — full three-phase LAMP on a dataset from disk, on any
 /// engine: `serial` (reference), `lamp2` (occurrence-deliver comparator),
-/// or a coordinated distributed run on `threads` / `sim`.
+/// or a coordinated distributed run on `threads` / `sim` / `process`.
 pub fn cmd_lamp(args: &Args) -> Result<()> {
     let db = load_db(args)?;
     let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
@@ -110,11 +110,12 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
             println!("{} | engine={engine} screen={kind:?}", res.summary());
             sig
         }
-        "threads" | "sim" => {
+        "threads" | "sim" | "process" => {
             let p = args.get_usize("procs", 4)?;
             let seed = args.get_u64("seed", 2015)?;
             let backend = match engine {
                 "threads" => Backend::Threads { p, seed },
+                "process" => Backend::Process { p, seed },
                 _ => Backend::Sim { p, net: NetModel::default(), seed },
             };
             let coord =
@@ -123,7 +124,7 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
             println!("engine={engine} P={p} | {}", run.summary());
             run.result.significant
         }
-        other => bail!("unknown --engine '{other}' (serial|lamp2|threads|sim)"),
+        other => bail!("unknown --engine '{other}' (serial|lamp2|threads|sim|process)"),
     };
     print_significant(&significant);
     Ok(())

@@ -2,7 +2,8 @@
 //! hand-rolled parser).
 //!
 //! ```text
-//! parlamp lamp    --data t.dat --labels t.lab [--engine serial|lamp2|threads|sim]
+//! parlamp lamp    --data t.dat --labels t.lab
+//!                 [--engine serial|lamp2|threads|sim|process]
 //! parlamp mine    --data t.dat [--min-sup K]
 //! parlamp sim     --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
 //! parlamp gendata --scenario alz-dom-5 --out dir/
@@ -40,6 +41,10 @@ pub fn run(argv: &[String]) -> i32 {
         "sim" => commands::cmd_sim(&args),
         "gendata" => commands::cmd_gendata(&args),
         "scenarios" => commands::cmd_scenarios(&args),
+        // Hidden: the process-fabric child entry point. The parent engine
+        // re-executes this binary as `parlamp __worker --socket S
+        // --worker-rank R` for each rank (see par::engine_process).
+        "__worker" => crate::par::engine_process::worker_main(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
@@ -63,7 +68,8 @@ pub fn usage() -> String {
 
 USAGE:
   parlamp lamp      --data FILE --labels FILE [--alpha A]
-                    [--engine serial|lamp2|threads|sim] [--procs P] [--naive]
+                    [--engine serial|lamp2|threads|sim|process]
+                    [--procs P | -n P] [--naive]
                     [--screen native|xla|auto] [--seed S]
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
@@ -71,9 +77,11 @@ USAGE:
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
 
-Engines `threads` and `sim` run the full three-phase procedure through the
-coordinator (phases 1-2 distributed, phase 3 via the configured screen).
-Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20, alz-dom-5,
-alz-dom-10, alz-rec-30, mcf7."
+Engines `threads`, `sim`, and `process` run the full three-phase procedure
+through the coordinator (phases 1-2 distributed, phase 3 via the configured
+screen). `process` spawns one worker OS process per rank, connected over
+Unix-domain sockets with the DESIGN.md §7 wire protocol — true distributed
+memory on one host. Scenario names mirror Table 1: hapmap-dom-10,
+hapmap-dom-20, alz-dom-5, alz-dom-10, alz-rec-30, mcf7."
         .to_string()
 }

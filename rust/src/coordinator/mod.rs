@@ -1,5 +1,5 @@
 //! The L3 coordination layer (paper §4): one orchestration path for the
-//! complete three-phase LAMP procedure over either fabric backend.
+//! complete three-phase LAMP procedure over any fabric backend.
 //!
 //! The lower layers each solve one problem — [`crate::lcm`] expands tree
 //! nodes, [`crate::par`] runs the Fig. 5 worker under an engine,
@@ -25,9 +25,9 @@
 //!    [`crate::stats::fisher`] path — the paper measures this phase at
 //!    ~10 ms, so the serial fallback never dominates.
 //!
-//! The CLI (`parlamp lamp --engine threads|sim`, `parlamp sim`) and the
-//! `quickstart` / `naive_vs_glb` / `scaling_study` / `gwas_study` examples
-//! all run through this one path.
+//! The CLI (`parlamp lamp --engine threads|sim|process`, `parlamp sim`) and
+//! the `quickstart` / `naive_vs_glb` / `scaling_study` / `gwas_study`
+//! examples all run through this one path.
 
 use anyhow::{Context, Result};
 
@@ -38,14 +38,15 @@ use crate::fabric::CommStats;
 use crate::glb::Lifelines;
 use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
 use crate::par::{
-    breakdown, run_sim, run_threads_with, ParRunResult, RunMode, SimConfig, ThreadConfig,
+    breakdown, run_process_with, run_sim, run_threads_with, ParRunResult, ProcessConfig,
+    RunMode, SimConfig, ThreadConfig,
 };
 use crate::runtime::{
     artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
 };
 
 /// Lifeline-GLB topology parameters (paper §4.2), the knobs the
-/// coordinator translates into per-worker configuration for both engines.
+/// coordinator translates into per-worker configuration for every engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GlbParams {
     /// Hypercube edge length `l` (paper fixes 2: binary hypercube).
@@ -94,6 +95,11 @@ pub enum Backend {
     /// Discrete-event simulation; virtual time under `net`'s latency and
     /// bandwidth model (the TSUBAME substitution, DESIGN.md §2).
     Sim { p: usize, net: NetModel, seed: u64 },
+    /// One OS process per rank over the Unix-socket fabric; real wall-clock
+    /// time and real address-space separation — every message crosses the
+    /// [`crate::wire`] protocol (DESIGN.md §7). Requires a spawnable
+    /// `parlamp` binary (see [`crate::par::engine_process`]).
+    Process { p: usize, seed: u64 },
 }
 
 impl Backend {
@@ -107,16 +113,25 @@ impl Backend {
         Backend::Sim { p, net: NetModel::default(), seed: 2015 }
     }
 
+    /// Multi-process backend with the default seed.
+    pub fn process(p: usize) -> Backend {
+        Backend::Process { p, seed: 2015 }
+    }
+
     /// World size.
     pub fn p(&self) -> usize {
         match self {
-            Backend::Threads { p, .. } | Backend::Sim { p, .. } => *p,
+            Backend::Threads { p, .. } | Backend::Sim { p, .. } | Backend::Process { p, .. } => {
+                *p
+            }
         }
     }
 
     fn seed(&self) -> u64 {
         match self {
-            Backend::Threads { seed, .. } | Backend::Sim { seed, .. } => *seed,
+            Backend::Threads { seed, .. }
+            | Backend::Sim { seed, .. }
+            | Backend::Process { seed, .. } => *seed,
         }
     }
 }
@@ -191,6 +206,29 @@ impl CoordinatorRun {
 /// Owns the three-phase LAMP orchestration. Construct with [`Coordinator::new`],
 /// adjust with the builder methods, then [`run`](Coordinator::run) against a
 /// database and a [`Backend`].
+///
+/// # Examples
+///
+/// Run the full three-phase procedure on the discrete-event backend and
+/// cross-check it against the serial reference:
+///
+/// ```
+/// use parlamp::coordinator::{Backend, Coordinator, ScreenMode};
+/// use parlamp::datagen::{generate_gwas, GwasSpec};
+/// use parlamp::lamp::lamp_serial;
+///
+/// let spec = GwasSpec { n_snps: 80, n_individuals: 60, n_pos: 15, ..GwasSpec::small(11) };
+/// let (db, _planted) = generate_gwas(&spec);
+///
+/// let run = Coordinator::new(0.05)
+///     .with_screen(ScreenMode::Native)
+///     .run(&db, &Backend::sim(4))
+///     .expect("coordinated run");
+///
+/// let serial = lamp_serial(&db, 0.05);
+/// assert_eq!(run.result.lambda_final, serial.lambda_final);
+/// assert_eq!(run.result.correction_factor, serial.correction_factor);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Coordinator {
     alpha: f64,
@@ -246,7 +284,7 @@ impl Coordinator {
         // The engine returns after DTD quiescence with the workers'
         // histograms merged; the exact λ* is then recomputed from that
         // merged histogram (the root's in-flight λ may lag — DESIGN.md §4).
-        let mut p1 = self.run_phase(db, RunMode::Phase1 { alpha: self.alpha }, backend, 0);
+        let mut p1 = self.run_phase(db, RunMode::Phase1 { alpha: self.alpha }, backend, 0)?;
         p1.finalize_phase1(&rule);
         debug_assert_eq!(
             rule.advance(p1.lambda_final, |l| p1.hist.cs_ge(l)),
@@ -256,7 +294,7 @@ impl Coordinator {
 
         // Phase 2: correction factor k = CS(λ* − 1) by re-mining at the
         // final minimum support.
-        let p2 = self.run_phase(db, RunMode::Count { min_sup: p1.min_sup }, backend, 1);
+        let p2 = self.run_phase(db, RunMode::Count { min_sup: p1.min_sup }, backend, 1)?;
         let k = p2.closed_total.max(1);
 
         // Phase 3: significance screen at the adjusted level α / k.
@@ -284,13 +322,31 @@ impl Coordinator {
         mode: RunMode,
         backend: &Backend,
         phase_idx: u64,
-    ) -> ParRunResult {
+    ) -> Result<ParRunResult> {
         let seed = backend.seed().wrapping_add(phase_idx);
         match backend {
             Backend::Threads { p, .. } => {
-                run_threads_with(db, mode, &self.thread_config(*p, seed))
+                Ok(run_threads_with(db, mode, &self.thread_config(*p, seed)))
             }
-            Backend::Sim { p, net, .. } => run_sim(db, mode, &self.sim_config(*p, *net, seed)),
+            Backend::Sim { p, net, .. } => {
+                Ok(run_sim(db, mode, &self.sim_config(*p, *net, seed)))
+            }
+            Backend::Process { p, .. } => {
+                run_process_with(db, mode, &self.process_config(*p, seed))
+                    .context("process-fabric phase")
+            }
+        }
+    }
+
+    /// `GlbParams` (+ paper-default cadences) → process-engine knobs.
+    fn process_config(&self, p: usize, seed: u64) -> ProcessConfig {
+        ProcessConfig {
+            w: self.glb.w,
+            l: self.glb.l,
+            tree_arity: self.glb.tree_arity,
+            steal: self.glb.steal,
+            preprocess: self.glb.preprocess,
+            ..ProcessConfig::paper_defaults(p, seed)
         }
     }
 

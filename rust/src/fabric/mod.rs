@@ -2,20 +2,24 @@
 //!
 //! The paper's protocol needs exactly the MPI surface of `MPI_Send` +
 //! `MPI_Iprobe`/`MPI_Recv`: asynchronous point-to-point messages and a
-//! non-blocking receive poll. [`Mailbox`] is that surface. Two backends
+//! non-blocking receive poll. [`Mailbox`] is that surface. Three backends
 //! implement it:
 //!
-//! - [`thread::ThreadFabric`] — one OS thread per process, channel-backed;
+//! - [`thread::ThreadMailbox`] — one OS thread per process, channel-backed;
 //!   exercises the real protocol code with true concurrency.
 //! - [`sim`] — a deterministic discrete-event network used by
 //!   `par::engine_sim` to model up to 1,200 processes with a calibrated
 //!   latency/bandwidth model (the TSUBAME substitution; see DESIGN.md §2).
+//! - [`process`] — one OS process per rank over Unix-domain sockets, every
+//!   message crossing the [`crate::wire`] serialization boundary; the only
+//!   backend with real address-space separation (DESIGN.md §7).
 //!
 //! Message taxonomy follows Mattern's terminology (paper §4.3): *basic*
 //! messages (steal protocol traffic) are counted and time-stamped for
 //! termination detection; *control* messages (DTD waves, preprocess
 //! barrier, finish) are not.
 
+pub mod process;
 pub mod sim;
 pub mod thread;
 

@@ -1,0 +1,684 @@
+//! Process-backed fabric: one OS process per rank, Unix-domain sockets as
+//! the interconnect (DESIGN.md §7).
+//!
+//! The first fabric backend with real address-space separation: unlike
+//! [`super::thread`] and [`super::sim`], nothing can be passed by value, so
+//! every protocol message crosses the [`crate::wire`] serialization
+//! boundary. Topology is hub-and-spoke: the parent process runs a [`Hub`]
+//! that accepts one connection per worker rank and routes `RELAY` frames
+//! between them, which keeps the design at `P` sockets instead of the
+//! `P(P−1)/2` a full mesh would need (file-descriptor passing between
+//! children is not required).
+//!
+//! Lifecycle of one phase:
+//!
+//! 1. the engine ([`crate::par::engine_process`]) binds a hub and spawns
+//!    `P` worker processes pointing at its socket;
+//! 2. each worker connects and sends `HELLO { rank }`; the hub answers with
+//!    `CONFIG` (the full [`RunSpec`], database included);
+//! 3. once all `P` ranks are registered the hub broadcasts `START` — the
+//!    startup barrier that guarantees no steal traffic targets an
+//!    unregistered rank;
+//! 4. workers run the ordinary [`crate::par::Worker`] loop against a
+//!    [`ProcessMailbox`]; every [`Mailbox::send`] becomes a `RELAY` frame
+//!    the hub forwards;
+//! 5. on `Finish` each worker sends its `MERGE` (the phase-boundary
+//!    histogram/breakdown/counter payload) and blocks until `BYE`;
+//! 6. the hub collects `P` merges, broadcasts `BYE`, and the workers exit.
+//!
+//! Failure semantics: a worker that dies mid-run surfaces as a
+//! [`HubEvent::Gone`] (socket EOF or error) and the engine aborts the run;
+//! a forward to an already-exited worker is silently dropped, mirroring the
+//! finished-peer no-op of the thread fabric (MPI-finalize semantics).
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::wire::{
+    encode_config, read_frame, write_frame, Frame, RunSpec, WorkerMerge, MAX_FRAME_LEN,
+};
+
+use super::{Mailbox, Msg};
+
+/// How long either side waits for the other during the HELLO/CONFIG/START
+/// handshake before declaring the peer dead.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+// ---- worker (child) side ---------------------------------------------------
+
+/// Link status of a worker's hub connection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Link {
+    Open,
+    /// Orderly `BYE` received.
+    Bye,
+    /// Socket error or unexpected EOF; the run cannot complete.
+    Lost(String),
+}
+
+enum ChildEvent {
+    Deliver { src: usize, msg: Msg },
+    Bye,
+    Lost(String),
+}
+
+/// The worker-process endpoint of the fabric: the [`Mailbox`] the ordinary
+/// [`crate::par::Worker`] state machine drives, plus the merge/shutdown
+/// handshake. Obtain one with [`connect`].
+pub struct ProcessMailbox {
+    rank: usize,
+    size: usize,
+    writer: UnixStream,
+    rx: Receiver<ChildEvent>,
+    /// Messages pulled in by a blocking wait (or buffered during the
+    /// handshake) but not yet consumed by the worker's probe loop.
+    pending: VecDeque<(usize, Msg)>,
+    link: Link,
+    _reader: JoinHandle<()>,
+}
+
+/// Connect to the hub at `path` as `rank`: send `HELLO`, receive `CONFIG`,
+/// wait for the `START` barrier (buffering any early `RELAY` traffic), then
+/// hand the socket to a background reader thread.
+///
+/// Returns the run specification and the ready-to-poll mailbox.
+pub fn connect(path: &Path, rank: usize) -> Result<(RunSpec, ProcessMailbox)> {
+    let mut stream = UnixStream::connect(path)
+        .with_context(|| format!("connect to fabric hub at {}", path.display()))?;
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    write_frame(&mut stream, &Frame::Hello { rank: rank as u32 }).context("send HELLO")?;
+
+    let frame = read_frame(&mut stream)?.context("hub closed before CONFIG")?;
+    let spec = match frame {
+        Frame::Config(spec) => spec,
+        other => bail!("expected CONFIG from hub, got {}", other.name()),
+    };
+    ensure!(
+        (rank as u32) < spec.p,
+        "rank {rank} out of range for world size {}",
+        spec.p
+    );
+
+    // Await the START barrier. Workers that started earlier may already be
+    // sending us steal traffic; buffer it in arrival order.
+    let mut pending = VecDeque::new();
+    loop {
+        let frame = read_frame(&mut stream)?.context("hub closed before START")?;
+        match frame {
+            Frame::Start => break,
+            Frame::Relay { peer, msg } => pending.push_back((peer as usize, msg)),
+            other => bail!("expected START from hub, got {}", other.name()),
+        }
+    }
+    stream.set_read_timeout(None)?;
+
+    let reader_stream = stream.try_clone().context("clone fabric socket")?;
+    let (tx, rx) = channel();
+    let reader = std::thread::spawn(move || reader_loop(reader_stream, tx));
+    let mb = ProcessMailbox {
+        rank,
+        size: spec.p as usize,
+        writer: stream,
+        rx,
+        pending,
+        link: Link::Open,
+        _reader: reader,
+    };
+    Ok((*spec, mb))
+}
+
+fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(Frame::Relay { peer, msg })) => {
+                if tx.send(ChildEvent::Deliver { src: peer as usize, msg }).is_err() {
+                    return; // mailbox dropped
+                }
+            }
+            Ok(Some(Frame::Bye)) => {
+                let _ = tx.send(ChildEvent::Bye);
+                return;
+            }
+            Ok(Some(other)) => {
+                let _ = tx.send(ChildEvent::Lost(format!(
+                    "unexpected {} frame from hub",
+                    other.name()
+                )));
+                return;
+            }
+            Ok(None) => {
+                let _ = tx.send(ChildEvent::Lost("hub closed the connection".into()));
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(ChildEvent::Lost(format!("{e:#}")));
+                return;
+            }
+        }
+    }
+}
+
+impl ProcessMailbox {
+    fn absorb(&mut self, ev: ChildEvent) -> Option<(usize, Msg)> {
+        match ev {
+            ChildEvent::Deliver { src, msg } => Some((src, msg)),
+            ChildEvent::Bye => {
+                self.link = Link::Bye;
+                None
+            }
+            ChildEvent::Lost(e) => {
+                if self.link == Link::Open {
+                    self.link = Link::Lost(e);
+                }
+                None
+            }
+        }
+    }
+
+    /// The error that severed the hub link, if any. The worker loop checks
+    /// this each quantum and aborts the run — without a hub there is no
+    /// termination detection, so spinning would hang forever.
+    pub fn lost(&self) -> Option<&str> {
+        match &self.link {
+            Link::Lost(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Block until a message arrives (buffered for the next `try_recv`) or
+    /// the timeout elapses — used by idle workers so they wake on incoming
+    /// GIVEs without spinning. Returns whether a message arrived.
+    pub fn wait_for_msg(&mut self, d: Duration) -> bool {
+        if !self.pending.is_empty() {
+            return true;
+        }
+        match self.rx.recv_timeout(d) {
+            Ok(ev) => match self.absorb(ev) {
+                Some(m) => {
+                    self.pending.push_back(m);
+                    true
+                }
+                None => false,
+            },
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => false,
+        }
+    }
+
+    /// Send the phase-boundary merge after the worker saw `Finish`.
+    pub fn send_merge(&mut self, merge: &WorkerMerge) -> Result<()> {
+        write_frame(&mut self.writer, &Frame::Merge(Box::new(merge.clone())))
+            .context("send MERGE to hub")
+    }
+
+    /// Block until the hub acknowledges the merge with `BYE` (late steal
+    /// traffic still in flight is drained and dropped).
+    pub fn wait_bye(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match &self.link {
+                Link::Bye => return Ok(()),
+                Link::Lost(e) => bail!("hub link lost while awaiting BYE: {e}"),
+                Link::Open => {}
+            }
+            let now = Instant::now();
+            ensure!(now < deadline, "timed out waiting for BYE from hub");
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) => {
+                    let _ = self.absorb(ev); // drop late deliveries
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("fabric reader thread exited while awaiting BYE")
+                }
+            }
+        }
+    }
+}
+
+impl Mailbox for ProcessMailbox {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, dst: usize, msg: Msg) {
+        if self.link != Link::Open {
+            return; // shutdown race: mirror the dropped-peer no-op
+        }
+        let frame = Frame::Relay { peer: dst as u32, msg };
+        if let Err(e) = write_frame(&mut self.writer, &frame) {
+            self.link = Link::Lost(format!("send to hub failed: {e}"));
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<(usize, Msg)> {
+        if let Some(m) = self.pending.pop_front() {
+            return Some(m);
+        }
+        while let Ok(ev) = self.rx.try_recv() {
+            if let Some(m) = self.absorb(ev) {
+                return Some(m);
+            }
+            if self.link != Link::Open {
+                return None;
+            }
+        }
+        None
+    }
+}
+
+// ---- hub (parent) side -----------------------------------------------------
+
+/// What the hub reports to the engine while a phase runs.
+#[derive(Debug)]
+pub enum HubEvent {
+    /// A worker delivered its phase-boundary merge.
+    Merge(WorkerMerge),
+    /// A worker's connection ended — orderly EOF after its merge and the
+    /// `BYE`, or a crash/protocol violation mid-run. The engine treats it as
+    /// fatal only for ranks that have not merged yet.
+    Gone { rank: usize, detail: String },
+}
+
+/// Per-rank write halves, shared between the hub and its route threads.
+type Writers = Arc<Vec<Mutex<Option<UnixStream>>>>;
+
+/// Parent-side fabric endpoint: accepts worker connections, runs one route
+/// thread per worker, and surfaces merges. Owned and driven by
+/// [`crate::par::engine_process::run_process_with`].
+pub struct Hub {
+    listener: UnixListener,
+    /// Pre-encoded `CONFIG` frame (identical for every worker).
+    config_bytes: Arc<Vec<u8>>,
+    p: usize,
+    writers: Writers,
+    events_tx: Sender<HubEvent>,
+    events_rx: Receiver<HubEvent>,
+    routers: Vec<JoinHandle<()>>,
+    connected: usize,
+    started: bool,
+}
+
+impl Hub {
+    /// Bind the hub socket and freeze the run specification that every
+    /// connecting worker will receive.
+    pub fn bind(path: &Path, spec: &RunSpec) -> Result<Hub> {
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("bind fabric hub socket {}", path.display()))?;
+        listener.set_nonblocking(true).context("set hub listener non-blocking")?;
+        let p = spec.p as usize;
+        ensure!(p >= 1, "world size must be ≥ 1");
+        let config_bytes = encode_config(spec);
+        ensure!(
+            config_bytes.len() - 4 <= MAX_FRAME_LEN as usize,
+            "CONFIG frame ({} bytes) exceeds the {MAX_FRAME_LEN}-byte frame cap; \
+             the database is too large for the process fabric's wire format",
+            config_bytes.len() - 4
+        );
+        let (events_tx, events_rx) = channel();
+        Ok(Hub {
+            listener,
+            config_bytes: Arc::new(config_bytes),
+            p,
+            writers: Arc::new((0..p).map(|_| Mutex::new(None)).collect()),
+            events_tx,
+            events_rx,
+            routers: Vec::with_capacity(p),
+            connected: 0,
+            started: false,
+        })
+    }
+
+    /// Ranks that have completed the HELLO/CONFIG handshake so far.
+    pub fn connected(&self) -> usize {
+        self.connected
+    }
+
+    /// Accept and handshake at most one pending worker connection. Returns
+    /// whether one was accepted. Non-blocking: the engine interleaves this
+    /// with liveness checks on the spawned processes.
+    pub fn try_accept(&mut self) -> Result<bool> {
+        let (mut stream, _) = match self.listener.accept() {
+            Ok(conn) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) => return Err(e).context("accept worker connection"),
+        };
+        stream.set_nonblocking(false).context("set worker socket blocking")?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let frame = read_frame(&mut stream)?.context("worker closed during handshake")?;
+        let rank = match frame {
+            Frame::Hello { rank } => rank as usize,
+            other => bail!("expected HELLO from worker, got {}", other.name()),
+        };
+        ensure!(rank < self.p, "HELLO rank {rank} out of range for world size {}", self.p);
+        stream.write_all(&self.config_bytes).context("send CONFIG")?;
+        stream.set_read_timeout(None)?;
+        let reader = stream.try_clone().context("clone worker socket")?;
+        {
+            let mut slot = self.writers[rank].lock().expect("writer lock");
+            ensure!(slot.is_none(), "duplicate HELLO for rank {rank}");
+            *slot = Some(stream);
+        }
+        let writers = Arc::clone(&self.writers);
+        let tx = self.events_tx.clone();
+        let p = self.p;
+        self.routers.push(std::thread::spawn(move || route_loop(rank, reader, writers, tx, p)));
+        self.connected += 1;
+        Ok(true)
+    }
+
+    /// Release the startup barrier: broadcast `START` once every rank is
+    /// registered. Workers begin the phase on receipt.
+    pub fn start_all(&mut self) -> Result<()> {
+        ensure!(
+            self.connected == self.p,
+            "cannot start: {}/{} workers connected",
+            self.connected,
+            self.p
+        );
+        ensure!(!self.started, "phase already started");
+        for rank in 0..self.p {
+            let mut slot = self.writers[rank].lock().expect("writer lock");
+            let w = slot.as_mut().expect("connected worker has a writer");
+            write_frame(w, &Frame::Start)
+                .with_context(|| format!("send START to rank {rank}"))?;
+        }
+        self.started = true;
+        Ok(())
+    }
+
+    /// Wait up to `timeout` for the next hub event. `Ok(None)` = timeout.
+    pub fn recv_event(&self, timeout: Duration) -> Result<Option<HubEvent>> {
+        match self.events_rx.recv_timeout(timeout) {
+            Ok(ev) => Ok(Some(ev)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            // All route threads gone without the engine collecting P merges.
+            Err(RecvTimeoutError::Disconnected) => bail!("all fabric route threads exited"),
+        }
+    }
+
+    /// Broadcast `BYE`. Send errors are ignored: a worker that already
+    /// exited has nothing left to acknowledge.
+    pub fn broadcast_bye(&mut self) {
+        for slot in self.writers.iter() {
+            if let Some(w) = slot.lock().expect("writer lock").as_mut() {
+                let _ = write_frame(w, &Frame::Bye);
+            }
+        }
+    }
+
+    /// Join the route threads (they exit at worker-socket EOF). Call after
+    /// [`Hub::broadcast_bye`] and after the worker processes were reaped —
+    /// never while workers may still be running.
+    pub fn join(&mut self) {
+        for h in self.routers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-worker route thread: forward `RELAY` frames to their destination
+/// rank (stamping the source), surface `MERGE` and disconnection.
+fn route_loop(
+    rank: usize,
+    mut reader: UnixStream,
+    writers: Writers,
+    tx: Sender<HubEvent>,
+    p: usize,
+) {
+    let gone = |detail: String| {
+        let _ = tx.send(HubEvent::Gone { rank, detail });
+    };
+    loop {
+        match read_frame(&mut reader) {
+            Ok(Some(Frame::Relay { peer, msg })) => {
+                let dst = peer as usize;
+                if dst >= p {
+                    gone(format!("relayed to out-of-range rank {dst}"));
+                    return;
+                }
+                let frame = Frame::Relay { peer: rank as u32, msg };
+                let mut slot = writers[dst].lock().expect("writer lock");
+                if let Some(w) = slot.as_mut() {
+                    // A failed forward means the destination already exited;
+                    // drop it like the thread fabric drops sends to a
+                    // finished peer.
+                    let _ = write_frame(w, &frame);
+                }
+            }
+            Ok(Some(Frame::Merge(m))) => {
+                if m.rank as usize != rank {
+                    gone(format!("MERGE claims rank {} on rank {rank}'s connection", m.rank));
+                    return;
+                }
+                if tx.send(HubEvent::Merge(*m)).is_err() {
+                    return; // engine gone
+                }
+                // Keep draining until EOF so late RELAYs are still routed.
+            }
+            Ok(Some(other)) => {
+                gone(format!("unexpected {} frame", other.name()));
+                return;
+            }
+            Ok(None) => {
+                gone("EOF".into());
+                return;
+            }
+            Err(e) => {
+                gone(format!("{e:#}"));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Database;
+    use crate::fabric::BasicKind;
+    use crate::par::worker::RunMode;
+
+    fn tiny_spec(p: u32) -> RunSpec {
+        let trans = vec![vec![0, 1], vec![1]];
+        let db = Database::from_transactions(2, &trans, &[true, false]);
+        RunSpec {
+            p,
+            seed: 1,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: false,
+            probe_budget_units: 1000,
+            dtd_interval_ns: 1000,
+            mode: RunMode::Count { min_sup: 1 },
+            db,
+        }
+    }
+
+    fn test_sock(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("parlamp-fabtest-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("hub.sock")
+    }
+
+    fn merge_for(rank: u32) -> WorkerMerge {
+        WorkerMerge {
+            rank,
+            hist: vec![(1, 2)],
+            closed_count: 2,
+            work_units: 10,
+            breakdown: Default::default(),
+            comm: Default::default(),
+            makespan_ns: 5,
+        }
+    }
+
+    /// Two in-process "workers" on real sockets: handshake, START barrier,
+    /// routed messages both ways, merge collection, BYE.
+    #[test]
+    fn hub_routes_between_two_workers() {
+        let sock = test_sock("route");
+        let mut hub = Hub::bind(&sock, &tiny_spec(2)).unwrap();
+
+        let spawn_worker = |rank: usize, sock: std::path::PathBuf| {
+            std::thread::spawn(move || -> Result<()> {
+                let (spec, mut mb) = connect(&sock, rank)?;
+                assert_eq!(spec.p, 2);
+                assert_eq!(mb.rank(), rank);
+                assert_eq!(mb.size(), 2);
+                let peer = 1 - rank;
+                mb.send(peer, Msg::WaveDown { t: rank as u64, lambda: 7 });
+                // await the peer's message
+                let deadline = Instant::now() + Duration::from_secs(10);
+                let got = loop {
+                    if let Some(got) = mb.try_recv() {
+                        break got;
+                    }
+                    assert!(Instant::now() < deadline, "no message from peer");
+                    mb.wait_for_msg(Duration::from_millis(10));
+                };
+                assert_eq!(got.0, peer, "source must be stamped by the hub");
+                assert!(matches!(got.1, Msg::WaveDown { lambda: 7, .. }));
+                mb.send_merge(&merge_for(rank as u32))?;
+                mb.wait_bye(Duration::from_secs(10))?;
+                Ok(())
+            })
+        };
+        let w0 = spawn_worker(0, sock.clone());
+        let w1 = spawn_worker(1, sock.clone());
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while hub.connected() < 2 {
+            if !hub.try_accept().unwrap() {
+                assert!(Instant::now() < deadline, "workers never connected");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        hub.start_all().unwrap();
+
+        let mut merged = [false; 2];
+        while !(merged[0] && merged[1]) {
+            match hub.recv_event(Duration::from_secs(10)).unwrap() {
+                Some(HubEvent::Merge(m)) => merged[m.rank as usize] = true,
+                Some(HubEvent::Gone { rank, detail }) => {
+                    panic!("rank {rank} gone before merge: {detail}")
+                }
+                None => panic!("timed out waiting for merges"),
+            }
+        }
+        hub.broadcast_bye();
+        w0.join().unwrap().unwrap();
+        w1.join().unwrap().unwrap();
+        hub.join();
+    }
+
+    /// GIVE payloads (serialized SearchNodes) survive the hub round trip.
+    #[test]
+    fn give_tasks_roundtrip_through_hub() {
+        let sock = test_sock("give");
+        let mut hub = Hub::bind(&sock, &tiny_spec(2)).unwrap();
+        let tasks = vec![crate::fabric::WireTask { items: vec![3, 9], core: 9, support: 4 }];
+        let sent = tasks.clone();
+        let w0 = std::thread::spawn({
+            let sock = sock.clone();
+            move || -> Result<()> {
+                let (_, mut mb) = connect(&sock, 0)?;
+                mb.send(1, Msg::Basic { stamp: 3, kind: BasicKind::Give { tasks } });
+                mb.send_merge(&merge_for(0))?;
+                mb.wait_bye(Duration::from_secs(10))
+            }
+        });
+        let w1 = std::thread::spawn({
+            let sock = sock.clone();
+            move || -> Result<(usize, Msg)> {
+                let (_, mut mb) = connect(&sock, 1)?;
+                let deadline = Instant::now() + Duration::from_secs(10);
+                let got = loop {
+                    if let Some(got) = mb.try_recv() {
+                        break got;
+                    }
+                    ensure!(Instant::now() < deadline, "no GIVE arrived");
+                    mb.wait_for_msg(Duration::from_millis(10));
+                };
+                mb.send_merge(&merge_for(1))?;
+                mb.wait_bye(Duration::from_secs(10))?;
+                Ok(got)
+            }
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while hub.connected() < 2 {
+            if !hub.try_accept().unwrap() {
+                assert!(Instant::now() < deadline);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        hub.start_all().unwrap();
+        let mut got = 0;
+        while got < 2 {
+            if let Some(HubEvent::Merge(_)) =
+                hub.recv_event(Duration::from_secs(10)).unwrap()
+            {
+                got += 1;
+            }
+        }
+        hub.broadcast_bye();
+        w0.join().unwrap().unwrap();
+        let (src, msg) = w1.join().unwrap().unwrap();
+        assert_eq!(src, 0);
+        match msg {
+            Msg::Basic { stamp: 3, kind: BasicKind::Give { tasks } } => {
+                assert_eq!(tasks, sent);
+            }
+            other => panic!("expected GIVE, got {other:?}"),
+        }
+        hub.join();
+    }
+
+    /// Drive `try_accept` until it yields a definite accept/reject outcome.
+    fn accept_outcome(hub: &mut Hub) -> Result<bool> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match hub.try_accept() {
+                Ok(false) => {
+                    assert!(Instant::now() < deadline, "no pending connection");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    #[test]
+    fn hub_rejects_out_of_range_and_duplicate_ranks() {
+        let sock = test_sock("badrank");
+        let mut hub = Hub::bind(&sock, &tiny_spec(2)).unwrap();
+        // out-of-range rank
+        let mut s = UnixStream::connect(&sock).unwrap();
+        write_frame(&mut s, &Frame::Hello { rank: 9 }).unwrap();
+        let err = accept_outcome(&mut hub).expect_err("rank 9 must be rejected");
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // duplicate rank: first registration succeeds, second errors
+        let mut a = UnixStream::connect(&sock).unwrap();
+        write_frame(&mut a, &Frame::Hello { rank: 0 }).unwrap();
+        assert!(accept_outcome(&mut hub).unwrap());
+        let mut b = UnixStream::connect(&sock).unwrap();
+        write_frame(&mut b, &Frame::Hello { rank: 0 }).unwrap();
+        let err = accept_outcome(&mut hub).expect_err("duplicate rank must be rejected");
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        assert_eq!(hub.connected(), 1);
+    }
+}

@@ -10,6 +10,34 @@
 use crate::util::rng::Rng;
 
 /// The lifeline graph for one process.
+///
+/// # Examples
+///
+/// With `l = 2` the lifelines of rank `r` are `r XOR 2^j`:
+///
+/// ```
+/// use parlamp::glb::Lifelines;
+///
+/// let ll = Lifelines::new(5, 16, 2);
+/// assert_eq!(ll.neighbors(), &[4, 7, 1, 13]); // 5^1, 5^2, 5^4, 5^8
+/// assert_eq!(ll.z(), 4);
+/// assert_eq!(ll.index_of(7), Some(1));
+/// assert_eq!(ll.index_of(6), None);
+/// ```
+///
+/// For world sizes that are not a power of `l`, each dimension wraps to the
+/// first id that actually exists, so every rank keeps an outgoing lifeline
+/// in every dimension that distinguishes ranks — the directed lifeline
+/// graph stays strongly connected (the paper's deadlock-freedom
+/// prerequisite; see the property suite):
+///
+/// ```
+/// use parlamp::glb::Lifelines;
+///
+/// // rank 4 of 5 at l = 3: both naive digit increments (to ids 5 and 7)
+/// // fall outside the world and wrap to 3 and 1 instead.
+/// assert_eq!(Lifelines::new(4, 5, 3).neighbors(), &[3, 1]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Lifelines {
     rank: usize,
@@ -25,7 +53,13 @@ impl Lifelines {
     /// For general `l`, ranks are written in base `l` with `z` digits
     /// (`l^z ≥ size`), and the `j`-th lifeline increments digit `j` mod `l`
     /// — the structure of Saraswat et al. For `l = 2` this reduces to the
-    /// XOR form.
+    /// XOR form. When the incremented id falls outside the world (`≥ size`,
+    /// possible when `size` is not a power of `l`), the digit keeps
+    /// cycling until it lands on an existing rank: each dimension then
+    /// forms a directed cycle over the ranks that exist, which keeps the
+    /// directed lifeline graph strongly connected — the deadlock-freedom
+    /// prerequisite of the paper's §4.2 (every starving process must be
+    /// reachable from every working one through lifeline edges).
     pub fn new(rank: usize, size: usize, l: usize) -> Self {
         assert!(l >= 2, "hypercube edge length must be ≥ 2");
         assert!(rank < size);
@@ -37,13 +71,20 @@ impl Lifelines {
         }
         let mut neighbors = Vec::with_capacity(z);
         for j in 0..z {
-            // rank with base-l digit j incremented mod l
+            // rank with base-l digit j incremented (cyclically, skipping
+            // ids that fall outside the world) — the first valid id wins.
             let base = l.pow(j as u32);
             let digit = rank / base % l;
-            let next = (digit + 1) % l;
-            let replaced = rank - digit * base + next * base;
-            if replaced < size && replaced != rank && !neighbors.contains(&replaced) {
-                neighbors.push(replaced);
+            for step in 1..l {
+                // next != digit for every step in 1..l, so candidate != rank.
+                let next = (digit + step) % l;
+                let candidate = rank - digit * base + next * base;
+                if candidate < size {
+                    if !neighbors.contains(&candidate) {
+                        neighbors.push(candidate);
+                    }
+                    break;
+                }
             }
         }
         Lifelines { rank, size, neighbors }

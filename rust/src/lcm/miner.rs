@@ -59,6 +59,13 @@ impl SupportHist {
         self.counts[(lambda as usize).min(self.counts.len())..].iter().sum()
     }
 
+    /// Record `n` closed sets at once (used when applying a sparse
+    /// wire-format delta, where per-support counts can be large).
+    #[inline]
+    pub fn add_count(&mut self, support: u32, n: u64) {
+        self.counts[support as usize] += n;
+    }
+
     /// Merge another histogram (used by the distributed gather).
     pub fn merge(&mut self, other: &SupportHist) {
         assert_eq!(self.counts.len(), other.counts.len());

@@ -14,10 +14,13 @@
 //! - [`lcm`], [`lamp`] — the serial miner and the LAMP three-phase
 //!   procedure (incl. the `lamp2` occurrence-deliver baseline).
 //! - [`fabric`], [`glb`], [`dtd`], [`par`] — the distributed runtime: an
-//!   MPI-like message fabric (thread and discrete-event backends), lifeline
-//!   work stealing, termination detection, and the parallel DFS worker.
+//!   MPI-like message fabric (thread, discrete-event, and multi-process
+//!   backends), lifeline work stealing, termination detection, and the
+//!   parallel DFS worker.
+//! - [`wire`] — the versioned length-prefixed binary protocol the process
+//!   fabric speaks across address spaces (DESIGN.md §7).
 //! - [`coordinator`] — the L3 orchestration layer: owns the three-phase
-//!   LAMP procedure across either fabric backend (configures workers from
+//!   LAMP procedure across any fabric backend (configures workers from
 //!   the GLB parameters, merges histograms/breakdowns/counters at the DTD
 //!   phase boundaries) and dispatches the phase-3 screen.
 //! - [`runtime`] — PJRT loader for the AOT artifacts built under
@@ -40,6 +43,7 @@ pub mod par;
 pub mod runtime;
 pub mod stats;
 pub mod util;
+pub mod wire;
 
 /// Default family-wise error rate used throughout the paper's experiments.
 pub const DEFAULT_ALPHA: f64 = 0.05;

@@ -1,0 +1,438 @@
+//! Process engine: one OS process per rank, real wall-clock time.
+//!
+//! The third engine, and the first with true distributed memory: where
+//! [`super::engine_thread`] shares one address space and [`super::engine_sim`]
+//! shares one event loop, this engine spawns each rank as a separate worker
+//! process connected to a parent [`Hub`] over Unix-domain sockets, speaking
+//! the [`crate::wire`] protocol (DESIGN.md §7). Every steal, DTD wave, and
+//! phase-boundary merge of the paper's §4 protocol therefore crosses a real
+//! serialization boundary — the configuration the paper's MPI runs assume,
+//! minus only the physical network.
+//!
+//! The parent (this module's `run_process*` entry points) is the
+//! coordinator side: it spawns and supervises the worker fleet, routes
+//! their traffic, collects the per-rank merges into a [`ParRunResult`], and
+//! tears the fleet down. The child side is [`worker_main`], reached through
+//! the hidden `__worker` CLI entry point — worker processes re-execute the
+//! `parlamp` binary (or whatever [`ProcessConfig::worker_exe`] /
+//! `$PARLAMP_WORKER_EXE` names, for callers that are not the binary).
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::db::Database;
+use crate::fabric::process::{connect, Hub, HubEvent};
+use crate::fabric::CommStats;
+use crate::lcm::SupportHist;
+use crate::wire::{RunSpec, WorkerMerge};
+
+use super::breakdown::Breakdown;
+use super::worker::{Poll, RunMode, Worker, WorkerConfig};
+use super::ParRunResult;
+
+/// Environment variable overriding the worker executable, for callers that
+/// are not themselves the `parlamp` binary (e.g. scripts embedding the
+/// library). In-process callers should prefer the race-free
+/// [`ProcessConfig::worker_exe`] field — the integration tests point it at
+/// `CARGO_BIN_EXE_parlamp`.
+pub const WORKER_EXE_ENV: &str = "PARLAMP_WORKER_EXE";
+
+/// Knobs for one process-engine phase: the [`super::engine_thread::ThreadConfig`]
+/// surface plus process-spawn controls.
+#[derive(Clone, Debug)]
+pub struct ProcessConfig {
+    pub p: usize,
+    /// Random steal attempts `w` (paper: 1).
+    pub w: usize,
+    /// Hypercube edge length `l` (paper: 2).
+    pub l: usize,
+    /// DTD spanning-tree arity (paper: 3).
+    pub tree_arity: usize,
+    /// `false` = naive baseline (no stealing).
+    pub steal: bool,
+    /// Depth-1 preprocess partition (§4.5).
+    pub preprocess: bool,
+    /// Work budget between probes, in expansion cost units (§4.6).
+    pub probe_budget_units: u64,
+    pub dtd_interval_ns: u64,
+    pub seed: u64,
+    /// Worker executable; when `None`, `$PARLAMP_WORKER_EXE` is consulted
+    /// and then the current executable (correct when the caller *is* the
+    /// `parlamp` binary).
+    pub worker_exe: Option<PathBuf>,
+    /// How long to wait for the whole fleet to spawn and handshake.
+    pub spawn_timeout: Duration,
+}
+
+impl ProcessConfig {
+    pub fn paper_defaults(p: usize, seed: u64) -> Self {
+        ProcessConfig {
+            p,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: true,
+            probe_budget_units: 4_000_000,
+            dtd_interval_ns: 1_000_000,
+            seed,
+            worker_exe: None,
+            spawn_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Run one phase on `p` worker processes with the paper-default knobs.
+pub fn run_process(db: &Database, mode: RunMode, p: usize, seed: u64) -> Result<ParRunResult> {
+    run_process_with(db, mode, &ProcessConfig::paper_defaults(p, seed))
+}
+
+/// Kill-on-drop guard for the worker fleet: a parent error path must never
+/// leak orphan miners.
+struct Fleet {
+    children: Vec<Child>,
+    reaped: Vec<bool>,
+}
+
+impl Fleet {
+    fn spawn(exe: &Path, sock: &Path, p: usize) -> Result<Fleet> {
+        let mut children = Vec::with_capacity(p);
+        for rank in 0..p {
+            let child = Command::new(exe)
+                .arg("__worker")
+                .arg("--socket")
+                .arg(sock)
+                .arg("--worker-rank")
+                .arg(rank.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .with_context(|| {
+                    format!("spawn worker rank {rank} ({})", exe.display())
+                })?;
+            children.push(child);
+        }
+        Ok(Fleet { reaped: vec![false; p], children })
+    }
+
+    /// Non-blocking liveness check: a worker that already exited while the
+    /// run is still in progress is a fatal fault.
+    fn check(&mut self) -> Result<()> {
+        for (rank, child) in self.children.iter_mut().enumerate() {
+            if self.reaped[rank] {
+                continue;
+            }
+            if let Some(status) = child.try_wait().context("poll worker status")? {
+                self.reaped[rank] = true;
+                bail!("worker rank {rank} exited mid-run: {status}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Reap the whole fleet after `BYE`; any non-zero exit is an error.
+    fn wait_all(&mut self) -> Result<()> {
+        for (rank, child) in self.children.iter_mut().enumerate() {
+            if self.reaped[rank] {
+                continue;
+            }
+            let status = child.wait().context("wait for worker")?;
+            self.reaped[rank] = true;
+            ensure!(status.success(), "worker rank {rank} exited with {status}");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for (rank, child) in self.children.iter_mut().enumerate() {
+            if !self.reaped[rank] {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// Remove the per-run socket directory when the run ends, however it ends.
+struct SockDir(PathBuf);
+
+impl Drop for SockDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn fresh_sock_path() -> Result<(SockDir, PathBuf)> {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "parlamp-pf-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("create socket directory {}", dir.display()))?;
+    let sock = dir.join("hub.sock");
+    Ok((SockDir(dir), sock))
+}
+
+fn worker_exe(cfg: &ProcessConfig) -> Result<PathBuf> {
+    if let Some(exe) = &cfg.worker_exe {
+        return Ok(exe.clone());
+    }
+    if let Some(exe) = std::env::var_os(WORKER_EXE_ENV) {
+        return Ok(PathBuf::from(exe));
+    }
+    std::env::current_exe().context("resolve current executable for worker spawn")
+}
+
+/// Run one phase on worker processes with explicit GLB/DTD knobs (the
+/// coordinator's entry point). Blocks until every rank's phase-boundary
+/// merge arrived, the fleet exited cleanly, and the socket directory is
+/// gone.
+pub fn run_process_with(db: &Database, mode: RunMode, cfg: &ProcessConfig) -> Result<ParRunResult> {
+    let p = cfg.p;
+    ensure!(p >= 1, "world size must be ≥ 1");
+    let (_sock_dir, sock) = fresh_sock_path()?;
+    // The spec (and its database copy) only feeds the CONFIG encoder; scope
+    // it so the copy is transient instead of held for the whole phase.
+    let mut hub = {
+        let spec = RunSpec {
+            p: p as u32,
+            seed: cfg.seed,
+            w: cfg.w as u32,
+            l: cfg.l as u32,
+            tree_arity: cfg.tree_arity as u32,
+            steal: cfg.steal,
+            preprocess: cfg.preprocess && p > 1,
+            probe_budget_units: cfg.probe_budget_units,
+            dtd_interval_ns: cfg.dtd_interval_ns,
+            mode,
+            db: db.clone(),
+        };
+        Hub::bind(&sock, &spec)?
+    };
+    let exe = worker_exe(cfg)?;
+    let mut fleet = Fleet::spawn(&exe, &sock, p)?;
+
+    // Fleet assembly: accept handshakes while watching for early deaths.
+    let deadline = Instant::now() + cfg.spawn_timeout;
+    while hub.connected() < p {
+        fleet.check().context("while assembling the worker fleet")?;
+        if !hub.try_accept()? {
+            ensure!(
+                Instant::now() < deadline,
+                "timed out assembling worker fleet ({}/{p} connected)",
+                hub.connected()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    hub.start_all()?;
+
+    // Collect one merge per rank; any disconnect before a rank's merge is
+    // fatal for the run.
+    let mut merges: Vec<Option<WorkerMerge>> = vec![None; p];
+    let mut collected = 0usize;
+    while collected < p {
+        match hub.recv_event(Duration::from_millis(200))? {
+            Some(HubEvent::Merge(m)) => {
+                let rank = m.rank as usize;
+                ensure!(rank < p, "merge from out-of-range rank {rank}");
+                ensure!(merges[rank].is_none(), "duplicate merge from rank {rank}");
+                // The wire layer validates counts, not value ranges; check
+                // supports here so a corrupt MERGE errors instead of
+                // panicking collect_merges' histogram indexing.
+                let max_sup = db.n_trans() as u32;
+                for &(s, _) in &m.hist {
+                    ensure!(
+                        s <= max_sup,
+                        "merge from rank {rank} reports support {s} > N = {max_sup}"
+                    );
+                }
+                merges[rank] = Some(m);
+                collected += 1;
+            }
+            Some(HubEvent::Gone { rank, detail }) => {
+                if merges[rank].is_none() {
+                    bail!("worker rank {rank} disconnected before its merge: {detail}");
+                }
+            }
+            None => fleet.check()?, // idle tick: catch crashed workers
+        }
+    }
+
+    hub.broadcast_bye();
+    fleet.wait_all()?;
+    hub.join();
+
+    let merges: Vec<WorkerMerge> = merges.into_iter().map(Option::unwrap).collect();
+    Ok(collect_merges(db, &merges, mode))
+}
+
+/// Merge the per-rank wire payloads into a [`ParRunResult`] — the
+/// serialization-boundary twin of `engine_sim::collect`.
+fn collect_merges(db: &Database, merges: &[WorkerMerge], mode: RunMode) -> ParRunResult {
+    let makespan_ns = merges.iter().map(|m| m.makespan_ns).max().unwrap_or(0);
+    let mut hist = SupportHist::new(db.n_trans());
+    let mut closed_total = 0u64;
+    let mut comm = CommStats::default();
+    let mut work_units = 0u64;
+    let mut breakdowns: Vec<Breakdown> = Vec::with_capacity(merges.len());
+    for m in merges {
+        for &(s, c) in &m.hist {
+            hist.add_count(s, c);
+        }
+        closed_total += m.closed_count;
+        comm.add(&m.comm);
+        work_units += m.work_units;
+        let mut b = m.breakdown;
+        b.close_over_span(makespan_ns);
+        breakdowns.push(b);
+    }
+    let (lambda_final, min_sup) = match mode {
+        RunMode::Phase1 { .. } => (0, 0), // finalized by finalize_phase1
+        RunMode::Count { min_sup } => (min_sup + 1, min_sup),
+    };
+    ParRunResult {
+        lambda_final,
+        min_sup,
+        hist,
+        closed_total,
+        makespan_s: makespan_ns as f64 * 1e-9,
+        breakdowns,
+        comm,
+        work_units,
+    }
+}
+
+/// Child entry point behind the hidden `__worker` CLI command: join the hub
+/// named by `--socket` as `--worker-rank`, run the ordinary Fig. 5 worker
+/// loop over the process fabric, ship the merge, and wait for `BYE`.
+pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
+    let sock = args.require("socket")?;
+    let rank: usize = args
+        .require("worker-rank")?
+        .parse()
+        .context("--worker-rank must be a non-negative integer")?;
+    let (spec, mut mb) = connect(Path::new(sock), rank)?;
+
+    let wc = WorkerConfig {
+        rank,
+        p: spec.p as usize,
+        w: spec.w as usize,
+        l: spec.l as usize,
+        tree_arity: spec.tree_arity as usize,
+        steal: spec.steal,
+        preprocess: spec.preprocess,
+        mode: spec.mode,
+        probe_budget_units: spec.probe_budget_units,
+        dtd_interval_ns: spec.dtd_interval_ns,
+        ns_per_unit: None, // real time
+        seed: spec.seed,
+    };
+    let db = spec.db;
+    let mut worker = Worker::new(&db, wc);
+
+    // The same scheduling loop as the thread engine: blocking waits cap at
+    // 200 µs so DTD waves keep flowing.
+    let t0 = Instant::now();
+    loop {
+        if let Some(err) = mb.lost() {
+            bail!("rank {rank}: fabric link lost mid-run: {err}");
+        }
+        let now_ns = t0.elapsed().as_nanos() as u64;
+        match worker.poll(&mut mb, now_ns) {
+            Poll::Busy { .. } => {}
+            Poll::Idle { wake_at } => {
+                let cap = Duration::from_micros(200);
+                let d = match wake_at {
+                    Some(t) => Duration::from_nanos(t.saturating_sub(now_ns)).min(cap),
+                    None => cap,
+                };
+                if !d.is_zero() {
+                    mb.wait_for_msg(d);
+                }
+            }
+            Poll::Finished => break,
+        }
+    }
+    let makespan_ns = t0.elapsed().as_nanos() as u64;
+
+    let hist = worker
+        .hist()
+        .counts()
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(s, &c)| (s as u32, c))
+        .collect();
+    let merge = WorkerMerge {
+        rank: rank as u32,
+        hist,
+        closed_count: worker.closed_count(),
+        work_units: worker.work_units(),
+        breakdown: worker.breakdown,
+        comm: worker.comm,
+        makespan_ns,
+    };
+    mb.send_merge(&merge)?;
+    mb.wait_bye(Duration::from_secs(30))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn merge(rank: u32, hist: Vec<(u32, u64)>, closed: u64, makespan_ns: u64) -> WorkerMerge {
+        WorkerMerge {
+            rank,
+            hist,
+            closed_count: closed,
+            work_units: closed * 10,
+            breakdown: Breakdown { main_ns: 100, ..Default::default() },
+            comm: CommStats { sent: rank as u64, ..Default::default() },
+            makespan_ns,
+        }
+    }
+
+    #[test]
+    fn collect_merges_mirrors_engine_collect() {
+        let trans = vec![vec![0], vec![0, 1], vec![1]];
+        let db = Database::from_transactions(2, &trans, &[true, false, false]);
+        let merges = vec![
+            merge(0, vec![(1, 2), (2, 1)], 3, 500),
+            merge(1, vec![(2, 4)], 4, 900),
+        ];
+        let got = collect_merges(&db, &merges, RunMode::Count { min_sup: 1 });
+        assert_eq!(got.closed_total, 7);
+        assert_eq!(got.hist.cs_ge(2), 5);
+        assert_eq!(got.hist.cs_ge(1), 7);
+        assert_eq!(got.min_sup, 1);
+        assert_eq!(got.lambda_final, 2);
+        assert_eq!(got.comm.sent, 1);
+        assert_eq!(got.work_units, 70);
+        assert!((got.makespan_s - 900e-9).abs() < 1e-15);
+        // idle fills each rank's breakdown to the global makespan
+        for b in &got.breakdowns {
+            assert_eq!(b.total_ns(), 900);
+        }
+    }
+
+    #[test]
+    fn process_config_defaults_match_thread_engine() {
+        let pc = ProcessConfig::paper_defaults(4, 7);
+        let tc = super::super::ThreadConfig::paper_defaults(4, 7);
+        assert_eq!(pc.w, tc.w);
+        assert_eq!(pc.l, tc.l);
+        assert_eq!(pc.tree_arity, tc.tree_arity);
+        assert_eq!(pc.probe_budget_units, tc.probe_budget_units);
+        assert_eq!(pc.dtd_interval_ns, tc.dtd_interval_ns);
+        assert!(pc.steal && pc.preprocess);
+    }
+}

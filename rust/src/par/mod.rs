@@ -3,22 +3,27 @@
 //! [`worker::Worker`] is the Fig. 5 `ParallelDFS` state machine: stack-based
 //! DFS, lifeline work stealing, Mattern termination detection, and the
 //! piggybacked λ protocol, written against the abstract [`crate::fabric::Mailbox`]
-//! so the *identical protocol code* runs under both engines:
+//! so the *identical protocol code* runs under all three engines:
 //!
 //! - [`engine_thread`] — real OS threads (the paper's single-node MPI runs);
 //! - [`engine_sim`] — the deterministic discrete-event simulation used for
-//!   the P ≤ 1,200 scaling studies (Figs. 6–7; TSUBAME substitution).
+//!   the P ≤ 1,200 scaling studies (Figs. 6–7; TSUBAME substitution);
+//! - [`engine_process`] — one OS process per rank over the Unix-socket
+//!   fabric, with every message serialized through [`crate::wire`]
+//!   (distributed memory for real; DESIGN.md §7).
 //!
 //! The *naive baseline* of Table 2 is this same machinery with stealing
 //! disabled (`steal: false`): the depth-1 static partition plus the λ
 //! broadcast, exactly as §5.4 describes.
 
 pub mod breakdown;
+pub mod engine_process;
 pub mod engine_sim;
 pub mod engine_thread;
 pub mod worker;
 
 pub use breakdown::Breakdown;
+pub use engine_process::{run_process, run_process_with, ProcessConfig};
 pub use engine_sim::{run_sim, SimConfig};
 pub use engine_thread::{run_threads, run_threads_with, ThreadConfig};
 pub use worker::{Poll, RunMode, Worker, WorkerConfig};
@@ -53,7 +58,11 @@ impl ParRunResult {
     /// Finalize a phase-1 run: compute the exact λ from the merged
     /// histogram (the root's in-flight λ may lag; the merged histogram is
     /// exact, so this equals the serial result — see DESIGN.md §4).
-    pub(crate) fn finalize_phase1(&mut self, rule: &SupportIncreaseRule) {
+    ///
+    /// Public so callers composing the phases manually (instead of going
+    /// through [`crate::coordinator`]) can recover λ* the same way the
+    /// coordinator and the `lamp_parallel_*` wrappers do.
+    pub fn finalize_phase1(&mut self, rule: &SupportIncreaseRule) {
         self.lambda_final = rule.advance(1, |l| self.hist.cs_ge(l));
         self.min_sup = self.lambda_final.saturating_sub(1).max(1);
     }

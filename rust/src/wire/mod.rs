@@ -1,0 +1,940 @@
+//! The wire protocol of the process fabric (DESIGN.md §7).
+//!
+//! Both in-process fabric backends ([`crate::fabric::thread`],
+//! [`crate::fabric::sim`]) pass [`Msg`] values through shared memory, which
+//! lets every payload stay an ordinary Rust value. The process backend
+//! ([`crate::fabric::process`]) cannot: each rank is a separate OS process,
+//! so every message the paper's §4 protocol describes — steal
+//! request/response with serialized search nodes, DTD wave tokens, the
+//! preprocess barrier, the phase-boundary merge — must cross an explicit
+//! serialization boundary. This module is that boundary: a small, versioned,
+//! length-prefixed binary format with no external dependencies.
+//!
+//! ## Framing
+//!
+//! Every frame on a fabric socket is
+//!
+//! ```text
+//! frame   := len:u32  tag:u8  payload
+//! ```
+//!
+//! where `len` counts the tag byte plus the payload, all integers are
+//! little-endian, and `len` is capped at [`MAX_FRAME_LEN`] so a corrupt
+//! length prefix fails fast instead of allocating gigabytes. The six frame
+//! types and the message grammar are documented in DESIGN.md §7; the
+//! encoders/decoders here are the normative implementation.
+//!
+//! ## Versioning
+//!
+//! [`HELLO`](Frame::Hello) and [`CONFIG`](Frame::Config) both carry
+//! [`WIRE_VERSION`]. The hub rejects a worker whose version differs and vice
+//! versa, so a stale binary on one side of the socket produces one clear
+//! error instead of a garbled protocol exchange.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+use crate::db::{Database, Item};
+use crate::fabric::{BasicKind, CommStats, HistDelta, Msg, WireTask};
+use crate::par::breakdown::Breakdown;
+use crate::par::worker::RunMode;
+
+/// First four bytes of every `HELLO` payload ("ParLamp Message Wire").
+pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
+
+/// Protocol version; bump on any change to the frame or message grammar.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
+pub const MAX_FRAME_LEN: u32 = 256 << 20;
+
+/// Sanity cap on decoded database dimensions (items and transactions).
+/// Far above any Table-1-scale problem, far below header values whose
+/// decode-side allocations could hurt (a corrupt `n_trans` would otherwise
+/// drive gigabyte allocations before any per-element bounds check runs —
+/// transactions, unlike every other variable-length list in the format,
+/// can legitimately occupy zero payload bytes, so they cannot be validated
+/// against the remaining byte count alone).
+pub const MAX_DB_DIM: u32 = 1 << 24;
+
+const TAG_HELLO: u8 = 0x01;
+const TAG_CONFIG: u8 = 0x02;
+const TAG_RELAY: u8 = 0x03;
+const TAG_MERGE: u8 = 0x04;
+const TAG_BYE: u8 = 0x05;
+const TAG_START: u8 = 0x06;
+
+/// Per-phase worker parameterization shipped in the `CONFIG` frame: the
+/// exact [`crate::par::WorkerConfig`] surface (minus rank, which the worker
+/// already knows) plus the database itself, so a worker process needs no
+/// filesystem access to participate in a run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// World size.
+    pub p: u32,
+    /// Base RNG seed (each worker folds in its rank).
+    pub seed: u64,
+    /// Random steal attempts `w`.
+    pub w: u32,
+    /// Lifeline hypercube edge length `l`.
+    pub l: u32,
+    /// Mattern DTD spanning-tree arity.
+    pub tree_arity: u32,
+    /// `false` = naive static-partition baseline.
+    pub steal: bool,
+    /// Depth-1 preprocess partition (already `p > 1`-gated by the hub).
+    pub preprocess: bool,
+    /// Expansion cost units between probes.
+    pub probe_budget_units: u64,
+    /// DTD wave cadence in nanoseconds.
+    pub dtd_interval_ns: u64,
+    /// Phase being run.
+    pub mode: RunMode,
+    /// The transaction database, shipped vertically (per-item occurrence
+    /// index lists + the positive-class mask).
+    pub db: Database,
+}
+
+/// One worker's phase-boundary contribution, shipped in the `MERGE` frame:
+/// everything the in-process engines read off a local [`crate::par::Worker`]
+/// after DTD quiescence when they merge a phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerMerge {
+    pub rank: u32,
+    /// Sparse closed-set histogram (support, count).
+    pub hist: HistDelta,
+    pub closed_count: u64,
+    pub work_units: u64,
+    pub breakdown: Breakdown,
+    pub comm: CommStats,
+    /// The worker's own wall-clock span from `CONFIG` receipt to `Finish`.
+    pub makespan_ns: u64,
+}
+
+/// Everything that crosses a process-fabric socket.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Worker → hub, first frame after connect: magic, version, own rank.
+    Hello { rank: u32 },
+    /// Hub → worker, in response: the full run specification.
+    Config(Box<RunSpec>),
+    /// Hub → worker once *every* rank has completed the handshake: begin
+    /// the phase. Separating `START` from `CONFIG` gives the run an MPI-like
+    /// startup barrier, so no worker can send steal traffic toward a rank
+    /// that has not yet registered with the hub.
+    Start,
+    /// Routed protocol message. Worker → hub: `peer` is the *destination*
+    /// rank. Hub → worker: `peer` is the *source* rank.
+    Relay { peer: u32, msg: Msg },
+    /// Worker → hub after `Finish`: the phase-boundary merge payload.
+    Merge(Box<WorkerMerge>),
+    /// Hub → worker: merge received from every rank; exit cleanly.
+    Bye,
+}
+
+impl Frame {
+    /// Short frame-type name for diagnostics (the `Debug` form of `Config`
+    /// would print the entire database).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "HELLO",
+            Frame::Config(_) => "CONFIG",
+            Frame::Start => "START",
+            Frame::Relay { .. } => "RELAY",
+            Frame::Merge(_) => "MERGE",
+            Frame::Bye => "BYE",
+        }
+    }
+}
+
+// ---- primitive put/get -----------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(buf: &mut Vec<u8>, v: i64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(u8::from(v));
+}
+
+/// Cursor over a received payload. Every accessor bounds-checks, so a
+/// truncated or corrupt frame decodes to an error, never a panic.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "wire: truncated payload (need {n} bytes at offset {}, have {})",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("wire: bad bool byte {b:#x}"),
+        }
+    }
+
+    /// Validate a count prefix against the bytes actually remaining, so a
+    /// corrupt count cannot drive a huge allocation.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(min_elem_bytes) <= self.buf.len() - self.pos,
+            "wire: count {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "wire: {} trailing bytes after payload",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---- message grammar -------------------------------------------------------
+
+const MSG_REQUEST: u8 = 0;
+const MSG_REJECT: u8 = 1;
+const MSG_GIVE: u8 = 2;
+const MSG_WAVE_DOWN: u8 = 3;
+const MSG_WAVE_UP: u8 = 4;
+const MSG_PRE_UP: u8 = 5;
+const MSG_PRE_DOWN: u8 = 6;
+const MSG_FINISH: u8 = 7;
+
+fn put_hist(buf: &mut Vec<u8>, hist: &HistDelta) {
+    put_u32(buf, hist.len() as u32);
+    for &(s, c) in hist {
+        put_u32(buf, s);
+        put_u64(buf, c);
+    }
+}
+
+fn get_hist(d: &mut Dec) -> Result<HistDelta> {
+    let n = d.count(12)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = d.u32()?;
+        let c = d.u64()?;
+        out.push((s, c));
+    }
+    Ok(out)
+}
+
+fn put_task(buf: &mut Vec<u8>, t: &WireTask) {
+    put_u32(buf, t.items.len() as u32);
+    for &i in &t.items {
+        put_u32(buf, i);
+    }
+    put_i64(buf, t.core);
+    put_u32(buf, t.support);
+}
+
+fn get_task(d: &mut Dec) -> Result<WireTask> {
+    let n = d.count(4)?;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        items.push(d.u32()? as Item);
+    }
+    let core = d.i64()?;
+    let support = d.u32()?;
+    Ok(WireTask { items, core, support })
+}
+
+/// Serialize one protocol message (the body of a `RELAY` frame).
+pub fn put_msg(buf: &mut Vec<u8>, msg: &Msg) {
+    match msg {
+        Msg::Basic { stamp, kind } => match kind {
+            BasicKind::Request { lifeline } => {
+                put_u8(buf, MSG_REQUEST);
+                put_u64(buf, *stamp);
+                put_bool(buf, *lifeline);
+            }
+            BasicKind::Reject { lifeline } => {
+                put_u8(buf, MSG_REJECT);
+                put_u64(buf, *stamp);
+                put_bool(buf, *lifeline);
+            }
+            BasicKind::Give { tasks } => {
+                put_u8(buf, MSG_GIVE);
+                put_u64(buf, *stamp);
+                put_u32(buf, tasks.len() as u32);
+                for t in tasks {
+                    put_task(buf, t);
+                }
+            }
+        },
+        Msg::WaveDown { t, lambda } => {
+            put_u8(buf, MSG_WAVE_DOWN);
+            put_u64(buf, *t);
+            put_u32(buf, *lambda);
+        }
+        Msg::WaveUp { t, count, invalid, all_idle, hist } => {
+            put_u8(buf, MSG_WAVE_UP);
+            put_u64(buf, *t);
+            put_i64(buf, *count);
+            put_bool(buf, *invalid);
+            put_bool(buf, *all_idle);
+            put_hist(buf, hist);
+        }
+        Msg::PreUp { hist } => {
+            put_u8(buf, MSG_PRE_UP);
+            put_hist(buf, hist);
+        }
+        Msg::PreDown { lambda } => {
+            put_u8(buf, MSG_PRE_DOWN);
+            put_u32(buf, *lambda);
+        }
+        Msg::Finish => put_u8(buf, MSG_FINISH),
+    }
+}
+
+fn get_msg(d: &mut Dec) -> Result<Msg> {
+    let kind = d.u8()?;
+    Ok(match kind {
+        MSG_REQUEST => Msg::Basic {
+            stamp: d.u64()?,
+            kind: BasicKind::Request { lifeline: d.bool()? },
+        },
+        MSG_REJECT => Msg::Basic {
+            stamp: d.u64()?,
+            kind: BasicKind::Reject { lifeline: d.bool()? },
+        },
+        MSG_GIVE => {
+            let stamp = d.u64()?;
+            let n = d.count(16)?;
+            let mut tasks = Vec::with_capacity(n);
+            for _ in 0..n {
+                tasks.push(get_task(d)?);
+            }
+            Msg::Basic { stamp, kind: BasicKind::Give { tasks } }
+        }
+        MSG_WAVE_DOWN => Msg::WaveDown { t: d.u64()?, lambda: d.u32()? },
+        MSG_WAVE_UP => Msg::WaveUp {
+            t: d.u64()?,
+            count: d.i64()?,
+            invalid: d.bool()?,
+            all_idle: d.bool()?,
+            hist: get_hist(d)?,
+        },
+        MSG_PRE_UP => Msg::PreUp { hist: get_hist(d)? },
+        MSG_PRE_DOWN => Msg::PreDown { lambda: d.u32()? },
+        MSG_FINISH => Msg::Finish,
+        other => bail!("wire: unknown message kind {other:#x}"),
+    })
+}
+
+// ---- database --------------------------------------------------------------
+
+/// Serialize the database vertically: the positive-class mask plus one
+/// occurrence index list per item. Dense bitmaps would also work, but index
+/// lists match the generator densities (a few percent) and keep the format
+/// independent of the in-memory word layout.
+fn put_db(buf: &mut Vec<u8>, db: &Database) {
+    put_u32(buf, db.n_items() as u32);
+    put_u32(buf, db.n_trans() as u32);
+    let pos: Vec<usize> = db.pos_mask().iter_ones().collect();
+    put_u32(buf, pos.len() as u32);
+    for t in pos {
+        put_u32(buf, t as u32);
+    }
+    for i in 0..db.n_items() as Item {
+        let col = db.col(i);
+        put_u32(buf, col.count());
+        for t in col.iter_ones() {
+            put_u32(buf, t as u32);
+        }
+    }
+}
+
+fn get_db(d: &mut Dec) -> Result<Database> {
+    let n_items = d.u32()?;
+    let n_trans = d.u32()?;
+    ensure!(n_items <= MAX_DB_DIM, "wire: database item count {n_items} exceeds {MAX_DB_DIM}");
+    ensure!(
+        n_trans <= MAX_DB_DIM,
+        "wire: database transaction count {n_trans} exceeds {MAX_DB_DIM}"
+    );
+    // Each item contributes at least its 4-byte occurrence-count prefix, so
+    // the item count is additionally bounded by the payload that remains.
+    ensure!(
+        (n_items as usize).saturating_mul(4) <= d.buf.len() - d.pos,
+        "wire: database item count {n_items} exceeds remaining payload"
+    );
+    let n_items = n_items as usize;
+    let n_trans = n_trans as usize;
+    let n_pos = d.count(4)?;
+    let mut positive = vec![false; n_trans];
+    for _ in 0..n_pos {
+        let t = d.u32()? as usize;
+        ensure!(t < n_trans, "wire: positive index {t} out of range {n_trans}");
+        positive[t] = true;
+    }
+    let mut trans: Vec<Vec<Item>> = vec![Vec::new(); n_trans];
+    for i in 0..n_items as Item {
+        let k = d.count(4)?;
+        for _ in 0..k {
+            let t = d.u32()? as usize;
+            ensure!(t < n_trans, "wire: occurrence index {t} out of range {n_trans}");
+            trans[t].push(i);
+        }
+    }
+    Ok(Database::from_transactions(n_items, &trans, &positive))
+}
+
+// ---- run spec / merge ------------------------------------------------------
+
+const MODE_PHASE1: u8 = 0;
+const MODE_COUNT: u8 = 1;
+
+fn put_mode(buf: &mut Vec<u8>, mode: &RunMode) {
+    match mode {
+        RunMode::Phase1 { alpha } => {
+            put_u8(buf, MODE_PHASE1);
+            put_f64(buf, *alpha);
+        }
+        RunMode::Count { min_sup } => {
+            put_u8(buf, MODE_COUNT);
+            put_u32(buf, *min_sup);
+        }
+    }
+}
+
+fn get_mode(d: &mut Dec) -> Result<RunMode> {
+    match d.u8()? {
+        MODE_PHASE1 => Ok(RunMode::Phase1 { alpha: d.f64()? }),
+        MODE_COUNT => Ok(RunMode::Count { min_sup: d.u32()? }),
+        other => bail!("wire: unknown run mode {other:#x}"),
+    }
+}
+
+fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec) {
+    put_u16(buf, WIRE_VERSION);
+    put_u32(buf, spec.p);
+    put_u64(buf, spec.seed);
+    put_u32(buf, spec.w);
+    put_u32(buf, spec.l);
+    put_u32(buf, spec.tree_arity);
+    put_bool(buf, spec.steal);
+    put_bool(buf, spec.preprocess);
+    put_u64(buf, spec.probe_budget_units);
+    put_u64(buf, spec.dtd_interval_ns);
+    put_mode(buf, &spec.mode);
+    put_db(buf, &spec.db);
+}
+
+fn get_spec(d: &mut Dec) -> Result<RunSpec> {
+    let version = d.u16()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "wire: CONFIG version {version} != supported {WIRE_VERSION}"
+    );
+    Ok(RunSpec {
+        p: d.u32()?,
+        seed: d.u64()?,
+        w: d.u32()?,
+        l: d.u32()?,
+        tree_arity: d.u32()?,
+        steal: d.bool()?,
+        preprocess: d.bool()?,
+        probe_budget_units: d.u64()?,
+        dtd_interval_ns: d.u64()?,
+        mode: get_mode(d)?,
+        db: get_db(d)?,
+    })
+}
+
+fn put_merge(buf: &mut Vec<u8>, m: &WorkerMerge) {
+    put_u32(buf, m.rank);
+    put_hist(buf, &m.hist);
+    put_u64(buf, m.closed_count);
+    put_u64(buf, m.work_units);
+    put_u64(buf, m.breakdown.preprocess_ns);
+    put_u64(buf, m.breakdown.main_ns);
+    put_u64(buf, m.breakdown.probe_ns);
+    put_u64(buf, m.breakdown.idle_ns);
+    put_u64(buf, m.comm.sent);
+    put_u64(buf, m.comm.received);
+    put_u64(buf, m.comm.steal_requests);
+    put_u64(buf, m.comm.rejects);
+    put_u64(buf, m.comm.gives);
+    put_u64(buf, m.comm.tasks_shipped);
+    put_u64(buf, m.comm.bytes_sent);
+    put_u64(buf, m.makespan_ns);
+}
+
+fn get_merge(d: &mut Dec) -> Result<WorkerMerge> {
+    Ok(WorkerMerge {
+        rank: d.u32()?,
+        hist: get_hist(d)?,
+        closed_count: d.u64()?,
+        work_units: d.u64()?,
+        breakdown: Breakdown {
+            preprocess_ns: d.u64()?,
+            main_ns: d.u64()?,
+            probe_ns: d.u64()?,
+            idle_ns: d.u64()?,
+        },
+        comm: CommStats {
+            sent: d.u64()?,
+            received: d.u64()?,
+            steal_requests: d.u64()?,
+            rejects: d.u64()?,
+            gives: d.u64()?,
+            tasks_shipped: d.u64()?,
+            bytes_sent: d.u64()?,
+        },
+        makespan_ns: d.u64()?,
+    })
+}
+
+// ---- frame encode / decode -------------------------------------------------
+
+impl Frame {
+    /// Encode into a complete frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Hello { rank } => {
+                put_u8(&mut body, TAG_HELLO);
+                body.extend_from_slice(&WIRE_MAGIC);
+                put_u16(&mut body, WIRE_VERSION);
+                put_u32(&mut body, *rank);
+            }
+            Frame::Config(spec) => {
+                put_u8(&mut body, TAG_CONFIG);
+                put_spec(&mut body, spec);
+            }
+            Frame::Start => put_u8(&mut body, TAG_START),
+            Frame::Relay { peer, msg } => {
+                put_u8(&mut body, TAG_RELAY);
+                put_u32(&mut body, *peer);
+                put_msg(&mut body, msg);
+            }
+            Frame::Merge(m) => {
+                put_u8(&mut body, TAG_MERGE);
+                put_merge(&mut body, m);
+            }
+            Frame::Bye => put_u8(&mut body, TAG_BYE),
+        }
+        debug_assert!(body.len() <= MAX_FRAME_LEN as usize);
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode from a frame body (tag + payload, length prefix already
+    /// stripped).
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut d = Dec::new(body);
+        let tag = d.u8()?;
+        let frame = match tag {
+            TAG_HELLO => {
+                let magic = d.take(4)?;
+                ensure!(magic == WIRE_MAGIC, "wire: bad HELLO magic {magic:02x?}");
+                let version = d.u16()?;
+                ensure!(
+                    version == WIRE_VERSION,
+                    "wire: HELLO version {version} != supported {WIRE_VERSION}"
+                );
+                Frame::Hello { rank: d.u32()? }
+            }
+            TAG_CONFIG => Frame::Config(Box::new(get_spec(&mut d)?)),
+            TAG_START => Frame::Start,
+            TAG_RELAY => Frame::Relay { peer: d.u32()?, msg: get_msg(&mut d)? },
+            TAG_MERGE => Frame::Merge(Box::new(get_merge(&mut d)?)),
+            TAG_BYE => Frame::Bye,
+            other => bail!("wire: unknown frame tag {other:#x}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Pre-encode the `CONFIG` frame from a borrowed spec (the hub sends the
+/// identical bytes to every worker; this avoids cloning the database just
+/// to feed an owned [`Frame`]).
+pub fn encode_config(spec: &RunSpec) -> Vec<u8> {
+    let mut body = vec![TAG_CONFIG];
+    put_spec(&mut body, spec);
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame to a stream (a single `write_all`; Unix-socket writes of
+/// a frame this size are atomic enough that no explicit flush protocol is
+/// needed). Refuses frames over [`MAX_FRAME_LEN`] — the receiver would
+/// reject them anyway, and past `u32::MAX` the length prefix would wrap and
+/// desynchronize the stream.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    let bytes = frame.encode();
+    if bytes.len() - 4 > MAX_FRAME_LEN as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {} exceeds {MAX_FRAME_LEN}", bytes.len() - 4),
+        ));
+    }
+    w.write_all(&bytes)
+}
+
+/// Read one frame, blocking. Returns `Ok(None)` on a clean EOF *at a frame
+/// boundary* (the peer closed its socket between frames); any mid-frame EOF
+/// or malformed content is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                bail!("wire: EOF inside frame length prefix");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("wire: read length prefix"),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    ensure!(len >= 1, "wire: zero-length frame");
+    ensure!(len <= MAX_FRAME_LEN, "wire: frame length {len} exceeds {MAX_FRAME_LEN}");
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).context("wire: read frame body")?;
+    Frame::decode(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let mut cursor = &bytes[..];
+        let got = read_frame(&mut cursor).expect("decode").expect("not EOF");
+        assert!(cursor.is_empty(), "decoder must consume the whole frame");
+        got
+    }
+
+    fn roundtrip_msg(m: &Msg) -> Msg {
+        match roundtrip(&Frame::Relay { peer: 3, msg: m.clone() }) {
+            Frame::Relay { peer, msg } => {
+                assert_eq!(peer, 3);
+                msg
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_msg_variant_roundtrips() {
+        let msgs = vec![
+            Msg::Basic { stamp: 7, kind: BasicKind::Request { lifeline: true } },
+            Msg::Basic { stamp: 8, kind: BasicKind::Reject { lifeline: false } },
+            Msg::Basic {
+                stamp: u64::MAX,
+                kind: BasicKind::Give {
+                    tasks: vec![
+                        WireTask { items: vec![0, 5, 9], core: 5, support: 12 },
+                        WireTask { items: vec![], core: -1, support: 0 },
+                    ],
+                },
+            },
+            Msg::WaveDown { t: 3, lambda: 42 },
+            Msg::WaveUp {
+                t: 3,
+                count: -17,
+                invalid: true,
+                all_idle: false,
+                hist: vec![(2, 10), (9, 1)],
+            },
+            Msg::PreUp { hist: vec![(1, 1_000_000)] },
+            Msg::PreDown { lambda: 6 },
+            Msg::Finish,
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip_msg(m), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn random_messages_roundtrip() {
+        forall("wire msg roundtrip", 64, |rng| {
+            let m = random_msg(rng);
+            let got = roundtrip_msg(&m);
+            if got != m {
+                return Err(format!("{m:?} -> {got:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    fn random_msg(rng: &mut Rng) -> Msg {
+        match rng.index(6) {
+            0 => Msg::Basic {
+                stamp: rng.next_u64(),
+                kind: BasicKind::Request { lifeline: rng.bernoulli(0.5) },
+            },
+            1 => Msg::Basic {
+                stamp: rng.next_u64(),
+                kind: BasicKind::Reject { lifeline: rng.bernoulli(0.5) },
+            },
+            2 => {
+                let tasks = (0..rng.index(5))
+                    .map(|_| WireTask {
+                        items: (0..rng.index(20)).map(|_| rng.below(1 << 20) as Item).collect(),
+                        core: rng.below(100) as i64 - 1,
+                        support: rng.below(1 << 16) as u32,
+                    })
+                    .collect();
+                Msg::Basic { stamp: rng.next_u64(), kind: BasicKind::Give { tasks } }
+            }
+            3 => Msg::WaveDown { t: rng.next_u64(), lambda: rng.below(1 << 20) as u32 },
+            4 => Msg::WaveUp {
+                t: rng.next_u64(),
+                count: rng.below(1 << 30) as i64 - (1 << 29),
+                invalid: rng.bernoulli(0.5),
+                all_idle: rng.bernoulli(0.5),
+                hist: (0..rng.index(8)).map(|_| (rng.below(100) as u32, rng.next_u64())).collect(),
+            },
+            _ => Msg::PreUp {
+                hist: (0..rng.index(8)).map(|_| (rng.below(100) as u32, rng.next_u64())).collect(),
+            },
+        }
+    }
+
+    #[test]
+    fn hello_start_and_bye_roundtrip() {
+        match roundtrip(&Frame::Hello { rank: 11 }) {
+            Frame::Hello { rank } => assert_eq!(rank, 11),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(roundtrip(&Frame::Start), Frame::Start));
+        assert!(matches!(roundtrip(&Frame::Bye), Frame::Bye));
+        assert_eq!(Frame::Bye.name(), "BYE");
+        assert_eq!(Frame::Start.name(), "START");
+    }
+
+    #[test]
+    fn encode_config_matches_owned_frame_encode() {
+        let db = Database::from_transactions(2, &[vec![0], vec![1]], &[true, false]);
+        let spec = RunSpec {
+            p: 2,
+            seed: 3,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: true,
+            probe_budget_units: 10,
+            dtd_interval_ns: 20,
+            mode: RunMode::Count { min_sup: 2 },
+            db,
+        };
+        let borrowed = encode_config(&spec);
+        let owned = Frame::Config(Box::new(spec)).encode();
+        assert_eq!(borrowed, owned);
+    }
+
+    #[test]
+    fn config_roundtrips_database_and_mode() {
+        let trans = vec![vec![0, 2], vec![1], vec![0, 1, 2], vec![]];
+        let labels = vec![true, false, true, false];
+        let db = Database::from_transactions(3, &trans, &labels);
+        let spec = RunSpec {
+            p: 4,
+            seed: 99,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: false,
+            probe_budget_units: 1234,
+            dtd_interval_ns: 5678,
+            mode: RunMode::Phase1 { alpha: 0.05 },
+            db: db.clone(),
+        };
+        let got = match roundtrip(&Frame::Config(Box::new(spec))) {
+            Frame::Config(s) => *s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(got.p, 4);
+        assert_eq!(got.seed, 99);
+        assert!(matches!(got.mode, RunMode::Phase1 { alpha } if alpha == 0.05));
+        assert_eq!(got.db.n_items(), db.n_items());
+        assert_eq!(got.db.n_trans(), db.n_trans());
+        for i in 0..db.n_items() as Item {
+            assert_eq!(got.db.col(i), db.col(i), "column {i}");
+        }
+        assert_eq!(got.db.pos_mask(), db.pos_mask());
+
+        let count = RunSpec { mode: RunMode::Count { min_sup: 9 }, ..got };
+        let back = match roundtrip(&Frame::Config(Box::new(count))) {
+            Frame::Config(s) => *s,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(back.mode, RunMode::Count { min_sup: 9 }));
+    }
+
+    #[test]
+    fn merge_roundtrips() {
+        let m = WorkerMerge {
+            rank: 2,
+            hist: vec![(3, 5), (10, 1)],
+            closed_count: 6,
+            work_units: 777,
+            breakdown: Breakdown { preprocess_ns: 1, main_ns: 2, probe_ns: 3, idle_ns: 4 },
+            comm: CommStats {
+                sent: 9,
+                received: 8,
+                steal_requests: 7,
+                rejects: 6,
+                gives: 5,
+                tasks_shipped: 4,
+                bytes_sent: 3,
+            },
+            makespan_ns: 123_456,
+        };
+        let got = match roundtrip(&Frame::Merge(Box::new(m.clone()))) {
+            Frame::Merge(g) => *g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn corrupt_input_errors_instead_of_panicking() {
+        // truncated body
+        let mut bytes = Frame::Bye.encode();
+        bytes[0] = 10; // claim a longer frame than is present
+        let mut cursor = &bytes[..];
+        assert!(read_frame(&mut cursor).is_err());
+        // unknown tag
+        assert!(Frame::decode(&[0x77]).is_err());
+        // bad magic
+        let mut hello = Frame::Hello { rank: 0 }.encode();
+        hello[5] = b'X'; // first magic byte (after len prefix + tag)
+        assert!(Frame::decode(&hello[4..]).is_err());
+        // oversized length prefix
+        let huge = (MAX_FRAME_LEN + 1).to_le_bytes();
+        let mut cursor: &[u8] = &huge;
+        assert!(read_frame(&mut cursor).is_err());
+        // absurd count prefix inside a RELAY(GIVE) must not allocate
+        let mut body = vec![TAG_RELAY];
+        put_u32(&mut body, 0); // peer
+        put_u8(&mut body, MSG_GIVE);
+        put_u64(&mut body, 0); // stamp
+        put_u32(&mut body, u32::MAX); // task count with no task bytes
+        assert!(Frame::decode(&body).is_err());
+    }
+
+    #[test]
+    fn absurd_database_dimensions_error_instead_of_allocating() {
+        // A CONFIG whose db header claims u32::MAX transactions/items must
+        // fail the dimension checks, not allocate gigabytes.
+        let db = Database::from_transactions(1, &[vec![0]], &[true]);
+        let spec = RunSpec {
+            p: 1,
+            seed: 0,
+            w: 1,
+            l: 2,
+            tree_arity: 3,
+            steal: true,
+            preprocess: false,
+            probe_budget_units: 1,
+            dtd_interval_ns: 1,
+            mode: RunMode::Count { min_sup: 1 },
+            db,
+        };
+        let frame = Frame::Config(Box::new(spec)).encode();
+        // db starts right after: len(4) tag(1) version(2) p(4) seed(8) w(4)
+        // l(4) arity(4) steal(1) pre(1) budget(8) dtd(8) mode(1+4) = 54.
+        let db_off = 54;
+        for dim_off in [0usize, 4] {
+            let mut bad = frame.clone();
+            bad[db_off + dim_off..db_off + dim_off + 4]
+                .copy_from_slice(&u32::MAX.to_le_bytes());
+            let err = Frame::decode(&bad[4..]).unwrap_err();
+            assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        let empty: &[u8] = &[];
+        let mut cursor = empty;
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+        // EOF inside the prefix is an error
+        let partial: &[u8] = &[1, 0];
+        let mut cursor = partial;
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Cross-engine equivalence for the multi-process fabric: the process
+//! engine must compute *exactly* what the serial miner computes on the
+//! quickstart scenario — same λ*, same closed-pattern histogram, same
+//! correction factor, same significant set — with every protocol message
+//! crossing the DESIGN.md §7 wire boundary between real OS processes.
+//!
+//! Worker processes re-execute the `parlamp` binary (Cargo builds it for
+//! integration tests and exposes the path as `CARGO_BIN_EXE_parlamp`).
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+use parlamp::datagen::{generate_gwas, GeneticModel, GwasSpec};
+use parlamp::lamp::{lamp_serial, SupportIncreaseRule};
+use parlamp::lcm::{mine_closed, SupportHist, Visit};
+use parlamp::par::{run_process_with, ProcessConfig, RunMode};
+
+fn parlamp_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_parlamp"))
+}
+
+/// The test binary is not `parlamp`, so every in-library run must name the
+/// worker executable explicitly. (The `PARLAMP_WORKER_EXE` environment
+/// override exists for the same purpose, but `std::env::set_var` races
+/// with concurrent test threads spawning processes, so tests avoid it.)
+fn process_cfg(p: usize, seed: u64) -> ProcessConfig {
+    ProcessConfig {
+        worker_exe: Some(parlamp_bin()),
+        spawn_timeout: Duration::from_secs(60),
+        ..ProcessConfig::paper_defaults(p, seed)
+    }
+}
+
+/// The quickstart scenario: the same cohort the `quickstart` example and
+/// the CI smoke job mine (200 SNPs × 150 individuals, one planted 3-SNP
+/// association).
+fn quickstart_db() -> parlamp::db::Database {
+    let spec = GwasSpec {
+        n_snps: 200,
+        n_individuals: 150,
+        n_pos: 40,
+        model: GeneticModel::Dominant,
+        maf_upper: 0.2,
+        ld_copy_prob: 0.25,
+        common_frac: 0.2,
+        planted: vec![(3, 0.9)],
+        seed: 31,
+    };
+    generate_gwas(&spec).0
+}
+
+/// Serial closed-pattern histogram at `min_sup` — the oracle the process
+/// engine's phase-boundary merge must reproduce exactly.
+fn serial_hist(db: &parlamp::db::Database, min_sup: u32) -> SupportHist {
+    let mut hist = SupportHist::new(db.n_trans());
+    mine_closed(db, min_sup, |node, ms| {
+        hist.record(node.support);
+        (Visit::Continue, ms)
+    });
+    hist
+}
+
+/// Acceptance: the process engine computes the same λ* and the same closed-
+/// pattern histogram as the serial reference on the quickstart scenario.
+#[test]
+fn process_engine_matches_serial_on_quickstart_scenario() {
+    let db = quickstart_db();
+    let serial = lamp_serial(&db, 0.05);
+    let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
+
+    // Phase 1 (λ search) across 3 worker processes.
+    let mut p1 = run_process_with(&db, RunMode::Phase1 { alpha: 0.05 }, &process_cfg(3, 42))
+        .expect("process phase 1");
+    p1.finalize_phase1(&rule);
+    assert_eq!(p1.lambda_final, serial.lambda_final, "λ* mismatch");
+    assert_eq!(p1.min_sup, serial.min_sup);
+
+    // The phase-1 merge is exact at and above λ* (DESIGN.md §4); it must
+    // equal the serial miner's histogram support by support.
+    let oracle = serial_hist(&db, serial.lambda_final);
+    for support in serial.lambda_final..=db.n_trans() as u32 {
+        assert_eq!(
+            p1.hist.counts()[support as usize],
+            oracle.counts()[support as usize],
+            "phase-1 histogram differs at support {support}"
+        );
+    }
+
+    // Phase 2 (count at min_sup) must reproduce the correction factor and
+    // the full closed-pattern histogram.
+    let p2 = run_process_with(
+        &db,
+        RunMode::Count { min_sup: serial.min_sup },
+        &process_cfg(3, 43),
+    )
+    .expect("process phase 2");
+    assert_eq!(p2.closed_total, serial.correction_factor, "correction factor mismatch");
+    assert_eq!(
+        p2.hist.counts(),
+        serial_hist(&db, serial.min_sup).counts(),
+        "phase-2 closed-pattern histogram mismatch"
+    );
+    // Real distributed run: traffic crossed the wire.
+    assert!(p2.comm.sent > 0, "no messages crossed the process fabric");
+    assert!(p2.makespan_s > 0.0);
+}
+
+/// The naive baseline (stealing disabled, §5.4) over the process fabric:
+/// identical counts, and no task is ever shipped.
+#[test]
+fn process_naive_mode_counts_match_and_never_ship() {
+    let spec = GwasSpec { n_snps: 90, n_individuals: 64, n_pos: 16, ..GwasSpec::small(21) };
+    let (db, _) = generate_gwas(&spec);
+    let serial = lamp_serial(&db, 0.05);
+    let cfg = ProcessConfig { steal: false, ..process_cfg(3, 7) };
+    let p2 = run_process_with(&db, RunMode::Count { min_sup: serial.min_sup }, &cfg)
+        .expect("naive process count phase");
+    assert_eq!(p2.closed_total, serial.correction_factor);
+    assert_eq!(p2.hist.counts(), serial_hist(&db, serial.min_sup).counts());
+    assert_eq!(p2.comm.gives, 0, "naive mode must never ship tasks");
+}
+
+/// Extract the six `λ*=… min_sup=… k=… δ=… significant=… max_arity=…`
+/// summary tokens from a CLI stdout blob, engine-independent.
+fn summary_tokens(stdout: &str) -> Vec<String> {
+    let at = stdout.find("λ*=").expect("no summary in output");
+    stdout[at..].split_whitespace().take(6).map(str::to_string).collect()
+}
+
+/// CLI-level acceptance: `parlamp lamp --engine process` prints the same
+/// result summary as `--engine serial` on the same dataset files.
+#[test]
+fn cli_engine_process_matches_serial() {
+    let spec = GwasSpec { n_snps: 100, n_individuals: 70, n_pos: 18, ..GwasSpec::small(5) };
+    let (db, _) = generate_gwas(&spec);
+    let dir = std::env::temp_dir().join(format!("parlamp-proc-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("g.dat");
+    let labels = dir.join("g.labels");
+    // reconstruct horizontal form for the FIMI writer
+    let mut trans: Vec<Vec<parlamp::db::Item>> = vec![Vec::new(); db.n_trans()];
+    for i in 0..db.n_items() as parlamp::db::Item {
+        for t in db.col(i).iter_ones() {
+            trans[t].push(i);
+        }
+    }
+    let lab: Vec<bool> = (0..db.n_trans()).map(|t| db.pos_mask().get(t)).collect();
+    parlamp::db::write_transactions(&data, &trans).unwrap();
+    parlamp::db::write_labels(&labels, &lab).unwrap();
+
+    let run_cli = |engine: &str, extra: &[&str]| -> String {
+        let mut cmd = Command::new(parlamp_bin());
+        cmd.arg("lamp")
+            .arg("--data")
+            .arg(&data)
+            .arg("--labels")
+            .arg(&labels)
+            .arg("--engine")
+            .arg(engine)
+            .args(extra);
+        let out = cmd.output().expect("run parlamp CLI");
+        assert!(
+            out.status.success(),
+            "engine {engine} failed: {}\n{}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8(out.stdout).expect("utf8 stdout")
+    };
+
+    let serial_out = run_cli("serial", &[]);
+    // `-n` is the documented shorthand for `--procs`.
+    let process_out = run_cli("process", &["-n", "2"]);
+    assert_eq!(
+        summary_tokens(&serial_out),
+        summary_tokens(&process_out),
+        "serial vs process CLI summaries differ\n--- serial ---\n{serial_out}\n\
+         --- process ---\n{process_out}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

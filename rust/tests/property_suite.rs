@@ -4,6 +4,7 @@
 use parlamp::bits::BitVec;
 use parlamp::db::{Database, Item};
 use parlamp::fabric::sim::NetModel;
+use parlamp::glb::Lifelines;
 use parlamp::lamp::{lamp_serial, SupportIncreaseRule};
 use parlamp::lcm::{brute_force_closed, mine_closed, Visit};
 use parlamp::par::{run_sim, RunMode, SimConfig};
@@ -177,6 +178,55 @@ fn bitvec_algebra_laws() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn lifeline_graph_strongly_connected_for_all_small_worlds() {
+    // Paper §4.2 / DESIGN.md §6: work flows victim→thief along *directed*
+    // lifeline edges, and Mattern termination is only deadlock-free if a
+    // starving process can eventually be reached from any process that
+    // still has work — i.e. the directed lifeline graph must be strongly
+    // connected. Exhaustive over every world size the benches use and both
+    // hypercube edge lengths of the ablation (P ≤ 256, l ∈ {2, 3}).
+    fn reach_count(adj: &[Vec<usize>], start: usize) -> usize {
+        let mut seen = vec![false; adj.len()];
+        let mut queue = std::collections::VecDeque::from([start]);
+        seen[start] = true;
+        let mut n = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    n += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        n
+    }
+    for l in [2usize, 3] {
+        for p in 1..=256usize {
+            let fwd: Vec<Vec<usize>> =
+                (0..p).map(|r| Lifelines::new(r, p, l).neighbors().to_vec()).collect();
+            let mut rev: Vec<Vec<usize>> = vec![Vec::new(); p];
+            for (u, ns) in fwd.iter().enumerate() {
+                for &v in ns {
+                    assert!(v < p && v != u, "P={p} l={l}: bad edge {u}->{v}");
+                    rev[v].push(u);
+                }
+            }
+            if p >= 2 {
+                for (r, ns) in fwd.iter().enumerate() {
+                    assert!(
+                        !ns.is_empty(),
+                        "P={p} l={l}: rank {r} has no outgoing lifeline (would starve)"
+                    );
+                }
+            }
+            assert_eq!(reach_count(&fwd, 0), p, "P={p} l={l}: not forward-reachable from 0");
+            assert_eq!(reach_count(&rev, 0), p, "P={p} l={l}: rank 0 not reachable from all");
+        }
+    }
 }
 
 #[test]
