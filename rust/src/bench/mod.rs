@@ -1,22 +1,43 @@
-//! Benchmark scenarios and calibration.
+//! Benchmark scenarios, calibration, and the perf-trajectory harness.
 //!
 //! [`scenarios`] defines the six problems of Table 1, scaled so a laptop
 //! regenerates every table and figure in minutes (the ratios — items :
 //! transactions, density regime, class balance — are preserved; see
 //! DESIGN.md §3 for what "reproduced" means on the substituted testbed).
+//!
+//! [`report`] is the `BENCH_*.json` schema the `parlamp bench` subcommand
+//! emits: one record per `(scenario, engine)` with wall-clock, expansion
+//! work units, closed-set counts, and λ*, validated structurally in CI.
+//! [`measure_engine`] produces those records.
 
+pub mod report;
 pub mod scenarios;
 
+pub use report::{BenchRecord, BenchReport, SCHEMA_ID};
 pub use scenarios::{all_scenarios, Scenario};
 
+/// The engines [`measure_engine`] understands, in the order the bench
+/// runs them by default. The CLI derives its default `--engines` value
+/// and its fail-fast validation from this single list.
+pub const ENGINES: &[&str] = &["serial", "lamp2", "threads", "sim", "process"];
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Backend, Coordinator, ScreenMode};
 use crate::db::Database;
-use crate::lamp::{lamp_serial, phase1_serial, phase2_count};
+use crate::fabric::sim::NetModel;
+use crate::lamp::{
+    lamp2::lamp2_serial, lamp_serial, phase1_serial, phase2_count, phase3_extract,
+};
 use crate::lcm::{mine_closed, Visit};
 use crate::util::bench_harness::time_once;
 
 /// Calibrate the DES cost model: run the serial miner for real, divide
-/// wall-clock by total expansion work units. Returns (ns_per_unit,
-/// serial_seconds, closed_sets).
+/// wall-clock by total expansion work units — candidate-loop word ops
+/// *plus* conditional-database reduction work, i.e.
+/// [`crate::lcm::ExpandStats::units`], so `ns_per_unit` stays meaningful
+/// on the reduced hot path. Returns (ns_per_unit, serial_seconds,
+/// closed_sets).
 pub fn calibrate(db: &Database, min_sup: u32) -> (f64, f64, u64) {
     let mut closed = 0u64;
     let (secs, stats) = time_once(|| {
@@ -25,7 +46,7 @@ pub fn calibrate(db: &Database, min_sup: u32) -> (f64, f64, u64) {
             (Visit::Continue, ms)
         })
     });
-    let units = stats.expand.word_ops.max(1);
+    let units = stats.expand.units().max(1);
     ((secs * 1e9) / units as f64, secs, closed)
 }
 
@@ -33,7 +54,7 @@ pub fn calibrate(db: &Database, min_sup: u32) -> (f64, f64, u64) {
 /// calibrated DES cost-model constant derived from the *same* workload.
 #[derive(Clone, Copy, Debug)]
 pub struct Calibration {
-    /// Virtual nanoseconds per expansion work unit.
+    /// Virtual nanoseconds per expansion work unit (word ops + reduction).
     pub ns_per_unit: f64,
     /// Serial wall-clock for phases 1+2 (the paper's measured `t`).
     pub t1_s: f64,
@@ -50,7 +71,7 @@ pub fn calibrate_lamp(db: &Database, alpha: f64) -> Calibration {
         let p2 = phase2_count(db, p1.min_sup);
         (p1, p2)
     });
-    let units = (p1.stats.expand.word_ops + p2.stats.expand.word_ops).max(1);
+    let units = (p1.stats.expand.units() + p2.stats.expand.units()).max(1);
     Calibration {
         ns_per_unit: secs * 1e9 / units as f64,
         t1_s: secs,
@@ -63,4 +84,143 @@ pub fn calibrate_lamp(db: &Database, alpha: f64) -> Calibration {
 pub fn serial_t1(db: &Database, alpha: f64) -> (f64, crate::lamp::LampResult) {
     let (secs, res) = time_once(|| lamp_serial(db, alpha));
     (secs, res)
+}
+
+/// One engine's end-to-end measurement, the per-engine slice of a
+/// [`BenchRecord`] (the scenario/shape fields are added by the caller).
+#[derive(Clone, Debug)]
+pub struct EngineRun {
+    pub wall_s: f64,
+    /// Phases 1+2 makespan (virtual on the DES engine); 0 for serial.
+    pub t_parallel_s: f64,
+    pub work_units: u64,
+    pub word_ops: u64,
+    pub reduce_ops: u64,
+    pub lambda_star: u32,
+    pub min_sup: u32,
+    pub correction_factor: u64,
+    pub phase1_closed: u64,
+    pub phase2_closed: u64,
+    pub significant: usize,
+}
+
+/// Run the full three-phase LAMP procedure on `engine`
+/// (`serial|lamp2|threads|sim|process`) and measure it. The phase-3
+/// screen is pinned to native so records compare like with like across
+/// machines with and without XLA artifacts.
+pub fn measure_engine(
+    db: &Database,
+    engine: &str,
+    procs: usize,
+    alpha: f64,
+    seed: u64,
+) -> Result<EngineRun> {
+    match engine {
+        "serial" => {
+            let (secs, (p1, p2, sig)) = time_once(|| {
+                let p1 = phase1_serial(db, alpha);
+                let p2 = phase2_count(db, p1.min_sup);
+                let sig = phase3_extract(db, p1.min_sup, p2.correction_factor, alpha);
+                (p1, p2, sig)
+            });
+            let e = |s: &crate::lcm::MineStats| s.expand;
+            let (x1, x2) = (e(&p1.stats), e(&p2.stats));
+            Ok(EngineRun {
+                wall_s: secs,
+                t_parallel_s: 0.0,
+                work_units: x1.units() + x2.units(),
+                word_ops: x1.word_ops + x2.word_ops,
+                reduce_ops: x1.reduce_ops + x2.reduce_ops,
+                lambda_star: p1.lambda_final,
+                min_sup: p1.min_sup,
+                correction_factor: p2.correction_factor,
+                phase1_closed: p1.stats.closed,
+                phase2_closed: p2.closed,
+                significant: sig.len(),
+            })
+        }
+        "lamp2" => {
+            // The occurrence-deliver comparator is not word-op
+            // instrumented (different cost structure); unit fields are 0.
+            let (secs, res) = time_once(|| lamp2_serial(db, alpha));
+            Ok(EngineRun {
+                wall_s: secs,
+                t_parallel_s: 0.0,
+                work_units: 0,
+                word_ops: 0,
+                reduce_ops: 0,
+                lambda_star: res.lambda_final,
+                min_sup: res.min_sup,
+                correction_factor: res.correction_factor,
+                phase1_closed: res.phase1_closed,
+                phase2_closed: res.phase2_closed,
+                significant: res.significant.len(),
+            })
+        }
+        "threads" | "sim" | "process" => {
+            let backend = match engine {
+                "threads" => Backend::Threads { p: procs, seed },
+                "process" => Backend::Process { p: procs, seed },
+                _ => Backend::Sim { p: procs, net: NetModel::default(), seed },
+            };
+            let coord = Coordinator::new(alpha).with_screen(ScreenMode::Native);
+            let (secs, run) = time_once(|| coord.run(db, &backend));
+            let run = run?;
+            Ok(EngineRun {
+                wall_s: secs,
+                t_parallel_s: run.t_parallel_s(),
+                work_units: run.work_units_total(),
+                word_ops: 0,
+                reduce_ops: 0,
+                lambda_star: run.result.lambda_final,
+                min_sup: run.result.min_sup,
+                correction_factor: run.result.correction_factor,
+                phase1_closed: run.result.phase1_closed,
+                phase2_closed: run.result.phase2_closed,
+                significant: run.result.significant.len(),
+            })
+        }
+        other => bail!("unknown bench engine '{other}' ({})", ENGINES.join("|")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_gwas, GwasSpec};
+
+    fn small_db() -> Database {
+        let spec = GwasSpec { n_snps: 90, n_individuals: 70, n_pos: 18, ..GwasSpec::small(5) };
+        generate_gwas(&spec).0
+    }
+
+    #[test]
+    fn engines_agree_and_serial_is_instrumented() {
+        let db = small_db();
+        let serial = measure_engine(&db, "serial", 1, 0.05, 1).unwrap();
+        assert!(serial.work_units > 0);
+        assert_eq!(serial.work_units, serial.word_ops + serial.reduce_ops);
+        assert!(serial.reduce_ops > 0, "reduction work must be counted");
+        for engine in ["lamp2", "sim"] {
+            let got = measure_engine(&db, engine, 3, 0.05, 1).unwrap();
+            assert_eq!(got.lambda_star, serial.lambda_star, "{engine}");
+            assert_eq!(got.correction_factor, serial.correction_factor, "{engine}");
+            assert_eq!(got.significant, serial.significant, "{engine}");
+        }
+        assert!(measure_engine(&db, "warp", 1, 0.05, 1).is_err());
+    }
+
+    #[test]
+    fn calibration_units_include_reduction() {
+        // calibrate() must divide by the same unit total the DES charges:
+        // ns_per_unit × units ≈ measured seconds (exactly, by definition).
+        let db = small_db();
+        let (ns_per_unit, secs, closed) = calibrate(&db, 2);
+        assert!(closed > 0);
+        assert!(ns_per_unit > 0.0);
+        assert!(secs >= 0.0);
+        let cal = calibrate_lamp(&db, 0.05);
+        assert!(cal.ns_per_unit > 0.0);
+        assert!(cal.correction >= 1);
+    }
 }

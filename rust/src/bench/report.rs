@@ -1,0 +1,496 @@
+//! The `BENCH_*.json` perf-trajectory schema: writer + validator.
+//!
+//! `parlamp bench` emits one schema-stable JSON document per run so every
+//! future PR can compare against the recorded trajectory (wall-clock,
+//! expansion work units, closed-set counts, λ*). The schema is versioned
+//! through the [`SCHEMA_ID`] string; additive fields bump the suffix.
+//! CI gates on [`validate`] (structure and types), never on timings —
+//! machine noise must not fail a build, a shape change must.
+//!
+//! No `serde` exists in the offline registry, so the writer builds the
+//! document by hand and [`validate`] runs a minimal recursive-descent JSON
+//! parser — also used by the round-trip tests.
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Schema identifier stamped into every report.
+pub const SCHEMA_ID: &str = "parlamp-bench/1";
+
+/// One `(scenario, engine)` measurement.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub scenario: String,
+    pub engine: String,
+    /// World size (1 for the serial engines).
+    pub procs: usize,
+    pub n_items: usize,
+    pub n_trans: usize,
+    pub density: f64,
+    /// Real wall-clock of the end-to-end run, seconds.
+    pub wall_s: f64,
+    /// Phases 1+2 makespan for distributed engines (virtual seconds on the
+    /// DES engine); 0 for the serial engines.
+    pub t_parallel_s: f64,
+    /// Total expansion work units (`ExpandStats::units`); 0 when the
+    /// engine is not instrumented (lamp2).
+    pub work_units: u64,
+    /// Serial bitmap engine only: the candidate-loop / reduction split of
+    /// `work_units`. 0 elsewhere.
+    pub word_ops: u64,
+    pub reduce_ops: u64,
+    pub lambda_star: u32,
+    pub min_sup: u32,
+    pub correction_factor: u64,
+    pub phase1_closed: u64,
+    pub phase2_closed: u64,
+    pub significant: usize,
+}
+
+/// A full report: header + one record per `(scenario, engine)`.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub label: String,
+    pub quick: bool,
+    pub alpha: f64,
+    pub seed: u64,
+    pub runs: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    pub fn new(label: &str, quick: bool, alpha: f64, seed: u64) -> BenchReport {
+        BenchReport { label: label.to_string(), quick, alpha, seed, runs: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: BenchRecord) {
+        self.runs.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Render the document. Key order is part of the stable schema.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512 + self.runs.len() * 400);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": {},\n", json_str(SCHEMA_ID)));
+        s.push_str(&format!("  \"label\": {},\n", json_str(&self.label)));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"alpha\": {},\n", json_num(self.alpha)));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str("  \"runs\": [\n");
+        for (i, r) in self.runs.iter().enumerate() {
+            s.push_str("    {");
+            s.push_str(&format!("\"scenario\": {}, ", json_str(&r.scenario)));
+            s.push_str(&format!("\"engine\": {}, ", json_str(&r.engine)));
+            s.push_str(&format!("\"procs\": {}, ", r.procs));
+            s.push_str(&format!("\"n_items\": {}, ", r.n_items));
+            s.push_str(&format!("\"n_trans\": {}, ", r.n_trans));
+            s.push_str(&format!("\"density\": {}, ", json_num(r.density)));
+            s.push_str(&format!("\"wall_s\": {}, ", json_num(r.wall_s)));
+            s.push_str(&format!("\"t_parallel_s\": {}, ", json_num(r.t_parallel_s)));
+            s.push_str(&format!("\"work_units\": {}, ", r.work_units));
+            s.push_str(&format!("\"word_ops\": {}, ", r.word_ops));
+            s.push_str(&format!("\"reduce_ops\": {}, ", r.reduce_ops));
+            s.push_str(&format!("\"lambda_star\": {}, ", r.lambda_star));
+            s.push_str(&format!("\"min_sup\": {}, ", r.min_sup));
+            s.push_str(&format!("\"correction_factor\": {}, ", r.correction_factor));
+            s.push_str(&format!("\"phase1_closed\": {}, ", r.phase1_closed));
+            s.push_str(&format!("\"phase2_closed\": {}, ", r.phase2_closed));
+            s.push_str(&format!("\"significant\": {}}}", r.significant));
+            s.push_str(if i + 1 < self.runs.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_num(x: f64) -> String {
+    // `{:?}` prints the shortest round-trip form, which is valid JSON for
+    // finite values. A NaN/∞ measurement is corrupt: emit `null` so the
+    // schema validator (and the writer's self-check before the file is
+    // written) rejects the document loudly instead of recording a
+    // plausible-looking zero.
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+// ---- minimal JSON value model + parser (validation / tests only) -------
+
+/// Parsed JSON value. Only what validation needs; numbers are `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (strict enough for the bench schema; rejects
+/// trailing garbage).
+pub fn parse_json(s: &str) -> Result<Json> {
+    let b = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    ensure!(pos == b.len(), "trailing garbage at byte {pos}");
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, pos),
+        c => bail!("unexpected byte {:?} at {}", c as char, *pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    ensure!(b[*pos..].starts_with(lit.as_bytes()), "bad literal at {}", *pos);
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    if b[*pos] == b'-' {
+        *pos += 1;
+    }
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+        *pos += 1;
+    }
+    let txt = std::str::from_utf8(&b[start..*pos])?;
+    let x: f64 = txt.parse().with_context(|| format!("bad number '{txt}' at {start}"))?;
+    ensure!(x.is_finite(), "non-finite number at {start}");
+    Ok(Json::Num(x))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    ensure!(b[*pos] == b'"', "expected string at {}", *pos);
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        ensure!(*pos < b.len(), "unterminated string");
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                ensure!(*pos < b.len(), "unterminated escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        ensure!(*pos + 4 < b.len(), "truncated \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .with_context(|| format!("bad \\u{hex}"))?;
+                        // Surrogate pairs don't occur in the schema's
+                        // ASCII field names; reject rather than mangle.
+                        let c = char::from_u32(code)
+                            .with_context(|| format!("\\u{hex} is not a scalar value"))?;
+                        out.push(c);
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape '\\{}'", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy one UTF-8 scalar
+                let rest = std::str::from_utf8(&b[*pos..]).context("invalid UTF-8")?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        ensure!(*pos < b.len(), "unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            c => bail!("expected ',' or ']' at {}, got '{}'", *pos, c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        let k = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        ensure!(*pos < b.len() && b[*pos] == b':', "expected ':' at {}", *pos);
+        *pos += 1;
+        let v = parse_value(b, pos)?;
+        out.push((k, v));
+        skip_ws(b, pos);
+        ensure!(*pos < b.len(), "unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(out));
+            }
+            c => bail!("expected ',' or '}}' at {}, got '{}'", *pos, c as char),
+        }
+    }
+}
+
+// ---- schema validation -------------------------------------------------
+
+const RUN_STR_FIELDS: &[&str] = &["scenario", "engine"];
+const RUN_NUM_FIELDS: &[&str] = &[
+    "procs",
+    "n_items",
+    "n_trans",
+    "density",
+    "wall_s",
+    "t_parallel_s",
+    "work_units",
+    "word_ops",
+    "reduce_ops",
+    "lambda_star",
+    "min_sup",
+    "correction_factor",
+    "phase1_closed",
+    "phase2_closed",
+    "significant",
+];
+
+/// Validate a rendered report against the `parlamp-bench/1` schema:
+/// header fields present and typed, at least one run, every run carrying
+/// every field with the right type and non-negative measurements. Returns
+/// the number of runs. This is the CI gate — timings are deliberately not
+/// judged.
+pub fn validate(doc: &str) -> Result<usize> {
+    let v = parse_json(doc).context("parse")?;
+    let schema = v
+        .get("schema")
+        .and_then(Json::as_str)
+        .context("missing or non-string 'schema'")?;
+    ensure!(schema == SCHEMA_ID, "schema '{schema}' != '{SCHEMA_ID}'");
+    v.get("label").and_then(Json::as_str).context("missing 'label'")?;
+    ensure!(
+        matches!(v.get("quick"), Some(Json::Bool(_))),
+        "missing or non-bool 'quick'"
+    );
+    v.get("alpha").and_then(Json::as_f64).context("missing 'alpha'")?;
+    v.get("seed").and_then(Json::as_f64).context("missing 'seed'")?;
+    let runs = v.get("runs").and_then(Json::as_arr).context("missing 'runs' array")?;
+    ensure!(!runs.is_empty(), "'runs' must not be empty");
+    for (i, r) in runs.iter().enumerate() {
+        for f in RUN_STR_FIELDS {
+            let s = r
+                .get(f)
+                .and_then(Json::as_str)
+                .with_context(|| format!("run {i}: missing string '{f}'"))?;
+            ensure!(!s.is_empty(), "run {i}: empty '{f}'");
+        }
+        for f in RUN_NUM_FIELDS {
+            let x = r
+                .get(f)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("run {i}: missing number '{f}'"))?;
+            ensure!(x >= 0.0, "run {i}: negative '{f}'");
+        }
+    }
+    Ok(runs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(engine: &str) -> BenchRecord {
+        BenchRecord {
+            scenario: "mcf7".into(),
+            engine: engine.into(),
+            procs: 4,
+            n_items: 250,
+            n_trans: 2000,
+            density: 0.0294,
+            wall_s: 0.125,
+            t_parallel_s: 0.0,
+            work_units: 123_456,
+            word_ops: 100_000,
+            reduce_ops: 23_456,
+            lambda_star: 7,
+            min_sup: 6,
+            correction_factor: 88,
+            phase1_closed: 1234,
+            phase2_closed: 88,
+            significant: 3,
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let mut rep = BenchReport::new("pr3", true, 0.05, 2015);
+        rep.push(record("serial"));
+        rep.push(record("sim"));
+        let doc = rep.to_json();
+        assert_eq!(validate(&doc).unwrap(), 2);
+        let v = parse_json(&doc).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(), SCHEMA_ID);
+        assert_eq!(v.get("runs").unwrap().as_arr().unwrap().len(), 2);
+        let r0 = &v.get("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("engine").unwrap().as_str().unwrap(), "serial");
+        assert_eq!(r0.get("work_units").unwrap().as_f64().unwrap(), 123_456.0);
+        assert_eq!(r0.get("density").unwrap().as_f64().unwrap(), 0.0294);
+    }
+
+    #[test]
+    fn validator_rejects_shape_violations() {
+        let mut rep = BenchReport::new("pr3", false, 0.05, 1);
+        // empty runs
+        assert!(validate(&rep.to_json()).is_err());
+        rep.push(record("serial"));
+        let good = rep.to_json();
+        assert!(validate(&good).is_ok());
+        // wrong schema id
+        let bad = good.replace(SCHEMA_ID, "parlamp-bench/0");
+        assert!(validate(&bad).is_err());
+        // a missing field
+        let bad = good.replace("\"lambda_star\"", "\"lambda_sta\"");
+        assert!(validate(&bad).is_err());
+        // truncated document
+        assert!(validate(&good[..good.len() / 2]).is_err());
+        // type confusion
+        let bad = good.replace("\"procs\": 4", "\"procs\": \"four\"");
+        assert!(validate(&bad).is_err());
+    }
+
+    #[test]
+    fn non_finite_measurements_fail_validation_not_silently_zeroed() {
+        let mut rep = BenchReport::new("pr3", false, 0.05, 1);
+        let mut r = record("serial");
+        r.wall_s = f64::NAN;
+        rep.push(r);
+        let doc = rep.to_json();
+        assert!(doc.contains("\"wall_s\": null"), "{doc}");
+        assert!(validate(&doc).is_err(), "corrupt measurement must not validate");
+    }
+
+    #[test]
+    fn parser_handles_json_basics() {
+        let v = parse_json(r#"{"a": [1, 2.5, -3e-2], "b": "x\"y\n", "c": null, "d": true}"#)
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].as_f64().unwrap(), -0.03);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "x\"y\n");
+        assert_eq!(v.get("c"), Some(&Json::Null));
+        assert!(parse_json("{\"a\": 1} trailing").is_err());
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("[1, 2").is_err());
+        assert!(parse_json("NaN").is_err());
+    }
+
+    #[test]
+    fn strings_escape_cleanly() {
+        assert_eq!(json_str("a\"b\\c\nd"), r#""a\"b\\c\nd""#);
+        let doc = format!("{{\"k\": {}}}", json_str("weird \u{1} value"));
+        let v = parse_json(&doc).unwrap();
+        assert_eq!(v.get("k").unwrap().as_str().unwrap(), "weird \u{1} value");
+    }
+}

@@ -1,11 +1,13 @@
 //! Packed bitmap algebra.
 //!
 //! The paper (§4.6) targets dense databases with relatively few
-//! transactions and deliberately *excludes* database-reduction techniques,
-//! counting supports with the population-count instruction over packed
-//! occurrence bitmaps instead. [`BitVec`] is that representation: one bit
-//! per transaction, `u64` words, with the AND / ANDNOT / popcount kernels
-//! the LCM expansion loop is built from.
+//! transactions, counting supports with the population-count instruction
+//! over packed occurrence bitmaps. [`BitVec`] is that representation: one
+//! bit per transaction, `u64` words, with the AND / ANDNOT / popcount
+//! kernels the LCM expansion loop is built from. Since PR 3 the expansion
+//! runs those kernels over *reduced* row spaces (`db::ConditionalDb`,
+//! DESIGN.md §8); [`sparse_subset_of`] is the id-list counterpart used
+//! when a projection is too sparse for packed words to pay off.
 
 mod bitvec;
 
@@ -59,6 +61,30 @@ pub fn subset_of(a: &[u64], b: &[u64]) -> bool {
     true
 }
 
+/// `true` iff the strictly-ascending id list `a` is a subset of the
+/// strictly-ascending id list `b` — the sparse-encoding counterpart of
+/// [`subset_of`], used by the reduced conditional database
+/// ([`crate::db::ConditionalDb`], DESIGN.md §8) when a projection is too
+/// sparse for packed words to pay off. Merge scan, early-exiting as soon
+/// as an element of `a` cannot be matched.
+#[inline]
+pub fn sparse_subset_of(a: &[u32], b: &[u32]) -> bool {
+    if a.len() > b.len() {
+        return false;
+    }
+    let mut bi = 0usize;
+    for &x in a {
+        while bi < b.len() && b[bi] < x {
+            bi += 1;
+        }
+        if bi == b.len() || b[bi] != x {
+            return false;
+        }
+        bi += 1;
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +116,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn sparse_subset_of_matches_set_definition() {
+        forall("sparse_subset_of == set ⊆", 128, |rng| {
+            let universe = 1 + rng.index(200);
+            let b: Vec<u32> =
+                (0..universe as u32).filter(|_| rng.bernoulli(0.3)).collect();
+            // a ⊆ b half the time, independent random otherwise
+            let a: Vec<u32> = if rng.bernoulli(0.5) {
+                b.iter().copied().filter(|_| rng.bernoulli(0.6)).collect()
+            } else {
+                (0..universe as u32).filter(|_| rng.bernoulli(0.2)).collect()
+            };
+            let naive = a.iter().all(|x| b.binary_search(x).is_ok());
+            if sparse_subset_of(&a, &b) != naive {
+                return Err(format!("a={a:?} b={b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_subset_edges() {
+        assert!(sparse_subset_of(&[], &[]));
+        assert!(sparse_subset_of(&[], &[1, 2]));
+        assert!(!sparse_subset_of(&[1], &[]));
+        assert!(sparse_subset_of(&[1, 5], &[0, 1, 4, 5]));
+        assert!(!sparse_subset_of(&[1, 6], &[0, 1, 4, 5]));
     }
 
     #[test]

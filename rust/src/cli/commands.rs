@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::bench::all_scenarios;
+use crate::bench::{all_scenarios, measure_engine, report, BenchRecord, BenchReport, ENGINES};
 use crate::coordinator::{Backend, Coordinator, GlbParams, ScreenKind, ScreenMode};
 use crate::db::{read_labels, read_transactions, Database};
 use crate::fabric::sim::NetModel;
@@ -147,8 +147,8 @@ pub fn cmd_mine(args: &Args) -> Result<()> {
         (Visit::Continue, ms)
     });
     println!(
-        "closed itemsets: {count} (expanded {} candidates, {} word-ops)",
-        stats.expand.candidates, stats.expand.word_ops
+        "closed itemsets: {count} (scanned {} candidates, {} word-ops + {} reduce-ops)",
+        stats.expand.candidates, stats.expand.word_ops, stats.expand.reduce_ops
     );
     Ok(())
 }
@@ -194,6 +194,113 @@ pub fn cmd_sim(args: &Args) -> Result<()> {
         "phase1 cpu-time: preprocess={pre:.4}s main={main:.4}s probe={probe:.4}s \
          idle={idle:.4}s"
     );
+    Ok(())
+}
+
+/// `parlamp bench` — the perf-trajectory harness: run the Table-1
+/// scenarios across engines, emit a schema-stable `BENCH_*.json`
+/// (validated before it is written), or validate an existing file with
+/// `--check`.
+///
+/// Defaults: all six scenarios × all five engines; `--quick` shrinks the
+/// datasets *and* narrows the default scenario set to one (`mcf7`) so CI
+/// can smoke every engine cheaply. Timings in the file are informative;
+/// only the schema is a contract (see README "Benchmarks").
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("check") {
+        let doc = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path}"))?;
+        let n = report::validate(&doc).with_context(|| format!("validate {path}"))?;
+        println!("{path}: valid {} ({n} runs)", crate::bench::SCHEMA_ID);
+        return Ok(());
+    }
+
+    let quick = args.flag("quick");
+    let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
+    let procs = args.get_usize("procs", 4)?;
+    let seed = args.get_u64("seed", 2015)?;
+    let label = args.get("label").unwrap_or("pr3");
+    let default_out = format!("BENCH_{label}.json");
+    let out = args.get("out").unwrap_or(&default_out);
+    let default_engines = ENGINES.join(",");
+    let engines: Vec<&str> = args
+        .get("engines")
+        .unwrap_or(&default_engines)
+        .split(',')
+        .filter(|e| !e.is_empty())
+        .collect();
+    // Fail on a typo before any measurement runs, not minutes into it.
+    for e in &engines {
+        anyhow::ensure!(ENGINES.contains(e), "unknown engine '{e}' ({})", ENGINES.join("|"));
+    }
+    let default_scenarios = if quick { "mcf7" } else { "all" };
+    let wanted = args.get("scenarios").unwrap_or(default_scenarios);
+    let all = all_scenarios(quick);
+    let chosen: Vec<_> = if wanted == "all" {
+        all
+    } else {
+        let names: Vec<&str> = wanted.split(',').filter(|s| !s.is_empty()).collect();
+        for n in &names {
+            anyhow::ensure!(
+                all.iter().any(|s| s.name == *n),
+                "unknown scenario '{n}' (see `parlamp scenarios`)"
+            );
+        }
+        all.into_iter().filter(|s| names.contains(&s.name)).collect()
+    };
+    anyhow::ensure!(!chosen.is_empty(), "no scenarios selected");
+    anyhow::ensure!(!engines.is_empty(), "no engines selected");
+
+    let mut rep = BenchReport::new(label, quick, alpha, seed);
+    let mut t = Table::new(&["scenario", "engine", "wall", "units", "λ*", "k", "sig"]);
+    for sc in &chosen {
+        let db = sc.build();
+        println!(
+            "scenario {}: {} items × {} transactions, density {:.2}%",
+            sc.name,
+            db.n_items(),
+            db.n_trans(),
+            db.density() * 100.0
+        );
+        for &engine in &engines {
+            let r = measure_engine(&db, engine, procs, alpha, seed)
+                .with_context(|| format!("{} on {}", engine, sc.name))?;
+            t.row(vec![
+                sc.name.to_string(),
+                engine.to_string(),
+                crate::util::fmt_secs(r.wall_s),
+                r.work_units.to_string(),
+                r.lambda_star.to_string(),
+                r.correction_factor.to_string(),
+                r.significant.to_string(),
+            ]);
+            rep.push(BenchRecord {
+                scenario: sc.name.to_string(),
+                engine: engine.to_string(),
+                procs: if matches!(engine, "serial" | "lamp2") { 1 } else { procs },
+                n_items: db.n_items(),
+                n_trans: db.n_trans(),
+                density: db.density(),
+                wall_s: r.wall_s,
+                t_parallel_s: r.t_parallel_s,
+                work_units: r.work_units,
+                word_ops: r.word_ops,
+                reduce_ops: r.reduce_ops,
+                lambda_star: r.lambda_star,
+                min_sup: r.min_sup,
+                correction_factor: r.correction_factor,
+                phase1_closed: r.phase1_closed,
+                phase2_closed: r.phase2_closed,
+                significant: r.significant,
+            });
+        }
+    }
+    println!("{}", t.render());
+
+    let doc = rep.to_json();
+    report::validate(&doc).context("self-check emitted JSON")?;
+    std::fs::write(out, &doc).with_context(|| format!("write {out}"))?;
+    println!("wrote {out} ({} runs, schema {})", rep.len(), crate::bench::SCHEMA_ID);
     Ok(())
 }
 
@@ -276,6 +383,49 @@ mod tests {
         argv.extend(["--engine", "sim", "--procs", "6"].iter().map(|s| s.to_string()));
         let args = Args::parse(&argv).unwrap();
         cmd_lamp(&args).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_writes_valid_report_and_check_gates() {
+        let dir = std::env::temp_dir().join(format!("parlamp_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_test.json");
+        // Quick single-scenario run on the uninstrumented-spawn-free
+        // engines (process needs the real binary; CI covers it).
+        let argv: Vec<String> = [
+            "--quick",
+            "--engines",
+            "serial,sim",
+            "--procs",
+            "3",
+            "--out",
+            out.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        cmd_bench(&Args::parse(&argv).unwrap()).unwrap();
+        let doc = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(crate::bench::report::validate(&doc).unwrap(), 2);
+        // --check accepts the good file and rejects a corrupted one.
+        let check = |p: &std::path::Path| {
+            let argv = vec!["--check".to_string(), p.to_str().unwrap().to_string()];
+            cmd_bench(&Args::parse(&argv).unwrap())
+        };
+        check(&out).unwrap();
+        let bad = dir.join("BENCH_bad.json");
+        std::fs::write(&bad, doc.replace("\"runs\"", "\"ruins\"")).unwrap();
+        assert!(check(&bad).is_err());
+        // unknown engine / scenario fail fast
+        let argv: Vec<String> =
+            ["--quick", "--engines", "warp"].iter().map(|s| s.to_string()).collect();
+        assert!(cmd_bench(&Args::parse(&argv).unwrap()).is_err());
+        let argv: Vec<String> = ["--quick", "--scenarios", "nope", "--engines", "serial"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(cmd_bench(&Args::parse(&argv).unwrap()).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -6,6 +6,8 @@
 //!                 [--engine serial|lamp2|threads|sim|process]
 //! parlamp mine    --data t.dat [--min-sup K]
 //! parlamp sim     --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
+//! parlamp bench   [--quick] [--engines a,b,..] [--scenarios x,y|all]
+//!                 [--out BENCH_pr3.json] | --check FILE
 //! parlamp gendata --scenario alz-dom-5 --out dir/
 //! parlamp scenarios
 //! ```
@@ -39,6 +41,7 @@ pub fn run(argv: &[String]) -> i32 {
         "lamp" => commands::cmd_lamp(&args),
         "mine" => commands::cmd_mine(&args),
         "sim" => commands::cmd_sim(&args),
+        "bench" => commands::cmd_bench(&args),
         "gendata" => commands::cmd_gendata(&args),
         "scenarios" => commands::cmd_scenarios(&args),
         // Hidden: the process-fabric child entry point. The parent engine
@@ -74,8 +77,18 @@ USAGE:
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
                     [--no-preprocess] [--alpha A] [--seed S]
+  parlamp bench     [--quick] [--engines E1,E2,..] [--scenarios S1,S2|all]
+                    [--procs P] [--alpha A] [--seed S] [--label L]
+                    [--out FILE]
+  parlamp bench     --check FILE
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
+
+`bench` runs the Table-1 scenarios across engines (default: all five) and
+writes the schema-stable perf-trajectory JSON (BENCH_<label>.json; the
+label defaults to pr3 and is stamped into the document header);
+`--quick` shrinks the data and defaults to the single mcf7 scenario;
+`--check` validates an existing file against the parlamp-bench/1 schema.
 
 Engines `threads`, `sim`, and `process` run the full three-phase procedure
 through the coordinator (phases 1-2 distributed, phase 3 via the configured

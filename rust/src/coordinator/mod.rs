@@ -177,6 +177,14 @@ impl CoordinatorRun {
         self.phase1.makespan_s + self.phase2.makespan_s
     }
 
+    /// Total expansion work units (word-op equivalents including the
+    /// conditional-database reduction work, DESIGN.md §8) summed over both
+    /// distributed phases — the quantity `parlamp bench` records for
+    /// cross-run comparison.
+    pub fn work_units_total(&self) -> u64 {
+        self.phase1.work_units + self.phase2.work_units
+    }
+
     /// Communication counters summed over both distributed phases.
     pub fn comm_total(&self) -> CommStats {
         let mut c = self.phase1.comm;
@@ -506,5 +514,6 @@ mod tests {
         assert!(s.contains("screen=Native"), "{s}");
         let total = run.breakdown_total();
         assert!(total.total_ns() > 0);
+        assert!(run.work_units_total() > 0, "merged work units must be non-zero");
     }
 }

@@ -1,13 +1,18 @@
 //! Transaction databases in the paper's vertical bitmap layout.
 //!
 //! An item's column is its *occurrence bitmap* over transactions; support
-//! counting is bitwise AND + popcount (paper §4.6: dense data, no database
-//! reduction, popcount instruction). [`Database`] owns the per-item bitmaps
-//! plus the positive-class mask used by the significance statistics.
+//! counting is bitwise AND + popcount (paper §4.6). [`Database`] owns the
+//! per-item bitmaps plus the positive-class mask used by the significance
+//! statistics. The miner's hot path does not scan these full-width
+//! columns per candidate, though: each expansion first projects the
+//! node's [`ConditionalDb`] (item pruning, weighted row merging, adaptive
+//! dense/sparse encoding — DESIGN.md §8) and checks against that.
 
 mod io;
+mod reduced;
 
 pub use io::{read_labels, read_transactions, write_labels, write_transactions};
+pub use reduced::{ConditionalDb, ProjectScratch};
 
 use crate::bits::BitVec;
 use crate::stats::Marginals;
@@ -16,6 +21,30 @@ use crate::stats::Marginals;
 pub type Item = u32;
 
 /// A binary transaction database with class labels, stored vertically.
+///
+/// # Examples
+///
+/// Supports, occurrences, and class statistics all come from the vertical
+/// bitmap layout:
+///
+/// ```
+/// use parlamp::db::Database;
+///
+/// // Three transactions over four items; the first two are positives.
+/// let db = Database::from_transactions(
+///     4,
+///     &[vec![0, 1], vec![0, 1, 2], vec![1, 3]],
+///     &[true, true, false],
+/// );
+/// assert_eq!((db.n_items(), db.n_trans()), (4, 3));
+/// assert_eq!(db.support(&[0, 1]), 2);
+/// assert_eq!(db.pos_support(&db.occurrence(&[0, 1])), 2);
+/// assert!((db.density() - 7.0 / 12.0).abs() < 1e-12);
+/// ```
+///
+/// The miner never scans these full-width columns per candidate: each
+/// expansion projects the node's conditional database first (see
+/// [`ConditionalDb`] and DESIGN.md §8).
 #[derive(Clone, Debug)]
 pub struct Database {
     n_trans: usize,

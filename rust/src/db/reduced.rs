@@ -1,0 +1,591 @@
+//! Reduced (projected) conditional databases — the miner's hot path.
+//!
+//! The paper's §4.6 position is that dense GWAS matrices want plain bitmap
+//! AND + popcount and no database reduction. That is true near the root,
+//! but LCM's FIM-competition lineage wins deep in the tree by *projection*:
+//! once a node `P` is fixed, only the transactions containing `P`, and the
+//! items still frequent inside that denotation, can influence any
+//! descendant. [`ConditionalDb`] is that projection, rebuilt per expansion
+//! (nodes stay shippable as bare itemsets — paper §4.1 — so nothing here
+//! crosses the wire):
+//!
+//! 1. **Row projection & remapping** — the transactions of `occ(P)` are
+//!    renumbered to the dense range `0..sup(P)`.
+//! 2. **Infrequent-item pruning** — only items `i > core(P)`, `i ∉ P`,
+//!    with `sup(P ∪ i) ≥ min_sup` are kept. A pruned item can neither
+//!    extend `P` nor contain any descendant's occurrence (containment
+//!    would force its projected support above the threshold), so it
+//!    vanishes from every PPC and closure check.
+//! 3. **Identical-row merging** — rows with the same kept-item signature
+//!    collapse into one weighted row; true supports are recovered from
+//!    the [`row weights`](ConditionalDb::row_weights).
+//! 4. **Adaptive encoding** — kept occurrences are stored as dense
+//!    [`BitVec`]s over merged rows or as sorted sparse row-id lists,
+//!    whichever the projection's density favors (the switch rule is
+//!    documented in DESIGN.md §8 and exposed as [`ConditionalDb::is_dense`]).
+//!
+//! Kept items also carry a frequency order ([`ConditionalDb::candidates`],
+//! [`ConditionalDb::ppc_closure`]): a candidate's containment pass only
+//! ever touches items of projected support ≥ its own, so the pass length
+//! shrinks with the candidate's frequency instead of scanning all items.
+//!
+//! `lcm::expand` consumes this type for every node, which is how the
+//! serial miner, the thread engine, the discrete-event engine, and the
+//! process engine all inherit the reduced hot path unchanged.
+
+use std::collections::HashMap;
+
+use crate::bits::{sparse_subset_of, words_for, BitVec};
+use crate::db::{Database, Item};
+
+/// Reusable intermediate buffers for [`ConditionalDb::project_where_with`].
+///
+/// A projection is built for *every* tree-node expansion; the expansion
+/// scratch (`lcm::ExpandScratch`) owns one of these so the rank prefix,
+/// the extracted row-list CSR, the inverted arena, and the grouping
+/// vectors keep their capacity across millions of nodes instead of
+/// reallocating each time. Only the projection's *outputs* (kept
+/// columns, supports, weights), which the returned [`ConditionalDb`]
+/// owns, and the transient row-grouping hash map are freshly allocated.
+#[derive(Default)]
+pub struct ProjectScratch {
+    rank: Vec<u32>,
+    /// Item-major CSR of the extracted row lists: kept item `k`'s rows
+    /// live at `flat[flat_off[k]..flat_off[k + 1]]`.
+    flat: Vec<u32>,
+    flat_off: Vec<usize>,
+    deg: Vec<u32>,
+    off: Vec<usize>,
+    cursor: Vec<usize>,
+    arena: Vec<u32>,
+    reps: Vec<u32>,
+}
+
+/// Occurrence storage for the kept items, chosen by projected density.
+#[derive(Clone, Debug)]
+enum Cols {
+    /// One bitmap over merged rows per kept item.
+    Dense(Vec<BitVec>),
+    /// One strictly-ascending merged-row-id list per kept item.
+    Sparse(Vec<Vec<u32>>),
+}
+
+/// The conditional database of one search node: the occurrence of every
+/// surviving candidate item, projected onto `occ(P)`, with identical rows
+/// merged into weighted rows.
+///
+/// # Examples
+///
+/// Conditioning the tiny database below on `P = {1}` keeps only the items
+/// that are still frequent among the transactions containing item 1, and
+/// merges transactions that became indistinguishable inside the
+/// projection:
+///
+/// ```
+/// use parlamp::db::{ConditionalDb, Database};
+///
+/// let trans = vec![vec![0, 1, 2], vec![0, 1], vec![1, 2], vec![0, 1], vec![3]];
+/// let db = Database::from_transactions(4, &trans, &[true, false, false, false, false]);
+///
+/// let occ = db.occurrence(&[1]);
+/// let cond = ConditionalDb::project(&db, &occ, &[1], -1, 2);
+///
+/// assert_eq!(cond.total_weight(), 4); // sup({1})
+/// // Projected supports are exactly sup({1} ∪ {i}); item 3 (support 0
+/// // inside the projection) is pruned.
+/// assert_eq!(cond.kept_items(), &[(0, 3), (2, 2)]);
+/// // Transactions {0,1} and {0,1} are identical inside the projection
+/// // and merge into one row of weight 2.
+/// assert_eq!(cond.rows(), 3);
+/// assert_eq!(cond.row_weights().iter().sum::<u32>(), 4);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ConditionalDb {
+    /// Kept items, ascending by original id: `(original id, sup(P ∪ i))`.
+    items: Vec<(Item, u32)>,
+    /// Kept indices sorted by descending projected support (ties broken by
+    /// ascending original id) — the frequency order of the checks.
+    by_desc: Vec<u32>,
+    /// Merged row count.
+    rows: usize,
+    /// Multiplicity of each merged row; sums to `sup(P)`.
+    weights: Vec<u32>,
+    cols: Cols,
+    scanned: u64,
+    build_ops: u64,
+}
+
+impl ConditionalDb {
+    /// Project `db` onto the node `(members, core)` whose occurrence
+    /// bitmap is `occ`: scan the candidate range `core+1..n_items`, prune
+    /// items with projected support < `min_sup`, merge identical rows,
+    /// and pick the occurrence encoding.
+    ///
+    /// `members` must be the node's sorted itemset and `occ` its
+    /// occurrence bitmap (`core = -1` for the root).
+    pub fn project(
+        db: &Database,
+        occ: &BitVec,
+        members: &[Item],
+        core: i64,
+        min_sup: u32,
+    ) -> ConditionalDb {
+        Self::project_where(db, occ, members, core, min_sup, |_| true)
+    }
+
+    /// [`ConditionalDb::project`] restricted to candidate-range items
+    /// accepted by `scan`. Used by the depth-1 preprocess partition
+    /// (paper §4.5): each rank only extracts its own `i mod P = r` slice,
+    /// so the aggregate projection work over the fleet stays `O(m)`
+    /// instead of `O(P·m)`. Items outside `scan` are absent from the
+    /// projection entirely — callers that still need them for containment
+    /// checks must fall back to full-width columns (as `lcm::expand`
+    /// does).
+    pub fn project_where(
+        db: &Database,
+        occ: &BitVec,
+        members: &[Item],
+        core: i64,
+        min_sup: u32,
+        scan: impl Fn(Item) -> bool,
+    ) -> ConditionalDb {
+        Self::project_where_with(db, occ, members, core, min_sup, scan, &mut Default::default())
+    }
+
+    /// [`ConditionalDb::project_where`] with caller-owned intermediate
+    /// buffers — the hot-path entry point (`lcm::expand` threads its
+    /// [`ProjectScratch`] through here once per node).
+    pub fn project_where_with(
+        db: &Database,
+        occ: &BitVec,
+        members: &[Item],
+        core: i64,
+        min_sup: u32,
+        scan: impl Fn(Item) -> bool,
+        scratch: &mut ProjectScratch,
+    ) -> ConditionalDb {
+        let ProjectScratch { rank, flat, flat_off, deg, off, cursor, arena, reps } = scratch;
+        let min_sup = min_sup.max(1) as usize;
+        let occ_w = occ.words();
+        let mut build_ops = occ_w.len() as u64; // rank-prefix construction
+        // rank[w] = number of set bits of `occ` strictly before word `w`,
+        // turning a transaction id into its projected row id in O(1).
+        rank.clear();
+        let mut acc = 0u32;
+        for w in occ_w {
+            rank.push(acc);
+            acc += w.count_ones();
+        }
+        let s = acc as usize; // sup(P): the projected row universe
+
+        // Steps 1+2: extract each candidate-range item's projected row
+        // list, pruning infrequent items immediately. The list length is
+        // the *true* support sup(P ∪ i): rows are still one-per-
+        // transaction here.
+        let start = (core + 1).max(0) as usize;
+        let n_items = db.n_items();
+        let mut items: Vec<(Item, u32)> = Vec::new();
+        let mut scanned = 0u64;
+        let mut mi = members.partition_point(|&m| (m as usize) < start);
+        flat.clear();
+        flat_off.clear();
+        flat_off.push(0);
+        for i in start..n_items {
+            if mi < members.len() && members[mi] as usize == i {
+                mi += 1;
+                continue;
+            }
+            if !scan(i as Item) {
+                continue;
+            }
+            scanned += 1;
+            let mark = flat.len();
+            let col_w = db.col(i as Item).words();
+            for (w, (&ow, &cw)) in occ_w.iter().zip(col_w).enumerate() {
+                let mut x = ow & cw;
+                while x != 0 {
+                    let b = x.trailing_zeros();
+                    flat.push(rank[w] + (ow & ((1u64 << b) - 1)).count_ones());
+                    x &= x - 1;
+                }
+            }
+            let len = flat.len() - mark;
+            build_ops += occ_w.len() as u64 + len as u64 / 16;
+            if len >= min_sup {
+                items.push((i as Item, len as u32));
+                flat_off.push(flat.len());
+            } else {
+                flat.truncate(mark); // infrequent: discard its rows in place
+            }
+        }
+        let kept = items.len();
+
+        // Step 3: merge identical rows. Invert the kept columns into a
+        // row → kept-item CSR arena (each row's signature is ascending by
+        // construction), then group rows by signature. Merged ids are
+        // assigned in first-seen row order, so the layout is deterministic
+        // regardless of the hasher.
+        let total_ones: usize = flat.len();
+        deg.clear();
+        deg.resize(s, 0);
+        for &r in flat.iter() {
+            deg[r as usize] += 1;
+        }
+        off.clear();
+        let mut sum = 0usize;
+        for &d in deg.iter() {
+            off.push(sum);
+            sum += d as usize;
+        }
+        off.push(sum);
+        cursor.clear();
+        cursor.extend_from_slice(&off[..s]);
+        arena.clear();
+        arena.resize(total_ones, 0);
+        for k in 0..kept {
+            for &r in &flat[flat_off[k]..flat_off[k + 1]] {
+                arena[cursor[r as usize]] = k as u32;
+                cursor[r as usize] += 1;
+            }
+        }
+        reps.clear();
+        let mut weights: Vec<u32> = Vec::new();
+        {
+            let mut groups: HashMap<&[u32], u32> = HashMap::new();
+            for r in 0..s {
+                let sig = &arena[off[r]..off[r + 1]];
+                let id = *groups.entry(sig).or_insert_with(|| {
+                    reps.push(r as u32);
+                    weights.push(0);
+                    (reps.len() - 1) as u32
+                });
+                weights[id as usize] += 1;
+            }
+        }
+        build_ops += s as u64 + total_ones as u64 / 8;
+
+        // Step 4: re-encode the kept columns over merged rows, from each
+        // representative row's signature (ascending ids come for free).
+        let rows = reps.len();
+        let merged_ones: usize =
+            reps.iter().map(|&r| off[r as usize + 1] - off[r as usize]).sum();
+        let dense = Self::choose_dense(rows, kept, merged_ones);
+        let cols = if dense {
+            let mut cols: Vec<BitVec> = (0..kept).map(|_| BitVec::zeros(rows)).collect();
+            for (m, &r) in reps.iter().enumerate() {
+                for &k in &arena[off[r as usize]..off[r as usize + 1]] {
+                    cols[k as usize].set(m, true);
+                }
+            }
+            build_ops += kept as u64 * words_for(rows) as u64 / 8 + merged_ones as u64 / 16;
+            Cols::Dense(cols)
+        } else {
+            let mut cols: Vec<Vec<u32>> = vec![Vec::new(); kept];
+            for (m, &r) in reps.iter().enumerate() {
+                for &k in &arena[off[r as usize]..off[r as usize + 1]] {
+                    cols[k as usize].push(m as u32);
+                }
+            }
+            build_ops += merged_ones as u64 / 16;
+            Cols::Sparse(cols)
+        };
+
+        let mut by_desc: Vec<u32> = (0..kept as u32).collect();
+        by_desc.sort_unstable_by(|&a, &b| {
+            let (ia, sa) = items[a as usize];
+            let (ib, sb) = items[b as usize];
+            sb.cmp(&sa).then(ia.cmp(&ib))
+        });
+        build_ops += kept as u64;
+
+        ConditionalDb { items, by_desc, rows, weights, cols, scanned, build_ops }
+    }
+
+    /// Encoding switch rule (DESIGN.md §8): dense when the merged row
+    /// space fits in ≤ 8 words anyway, or when kept columns average at
+    /// least one set bit per 32 rows — one sparse `u32` entry costs half
+    /// a dense `u64` word, so 2 entries per word is the break-even.
+    fn choose_dense(rows: usize, kept: usize, ones: usize) -> bool {
+        rows <= 512 || ones * 32 >= rows * kept.max(1)
+    }
+
+    /// Kept items ascending by original id, as `(original id, sup(P ∪ i))`.
+    pub fn kept_items(&self) -> &[(Item, u32)] {
+        &self.items
+    }
+
+    /// `(original id, projected support)` of kept item `k`.
+    #[inline]
+    pub fn item(&self, k: usize) -> (Item, u32) {
+        self.items[k]
+    }
+
+    /// Kept indices in ascending projected-support order — a deterministic
+    /// candidate iteration order for the expansion loop. Per-candidate
+    /// cost does not depend on this order (each
+    /// [`ConditionalDb::ppc_closure`] pass is independent); the frequency
+    /// order that *does* cut work is the descending walk inside that pass.
+    pub fn candidates(&self) -> impl Iterator<Item = usize> + '_ {
+        self.by_desc.iter().rev().map(|&k| k as usize)
+    }
+
+    /// Number of merged (weighted) rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Multiplicity of each merged row; sums to the node's support.
+    pub fn row_weights(&self) -> &[u32] {
+        &self.weights
+    }
+
+    /// Sum of the row weights, i.e. `sup(P)`.
+    pub fn total_weight(&self) -> u32 {
+        self.weights.iter().sum()
+    }
+
+    /// `true` when the dense bitmap encoding was chosen.
+    pub fn is_dense(&self) -> bool {
+        matches!(self.cols, Cols::Dense(_))
+    }
+
+    /// Items scanned in the candidate range (kept + pruned).
+    pub fn scanned(&self) -> u64 {
+        self.scanned
+    }
+
+    /// Construction cost in word-op equivalents (DESIGN.md §8), charged
+    /// to `ExpandStats::reduce_ops` by the expansion loop.
+    pub fn build_ops(&self) -> u64 {
+        self.build_ops
+    }
+
+    /// Does kept item `sub`'s occurrence lie inside kept item `sup`'s?
+    /// Charges the check's cost model to `ops` (dense scans early-exit and
+    /// are charged 1 word like the full-width scans they replace; sparse
+    /// merge scans are charged by length).
+    #[inline]
+    fn contains(&self, sub: usize, sup: usize, ops: &mut u64) -> bool {
+        match &self.cols {
+            Cols::Dense(c) => {
+                *ops += 1;
+                c[sub].is_subset_of(&c[sup])
+            }
+            Cols::Sparse(c) => {
+                let (a, b) = (&c[sub], &c[sup]);
+                *ops += 1 + (a.len() + b.len()) as u64 / 16;
+                sparse_subset_of(a, b)
+            }
+        }
+    }
+
+    /// One frequency-ordered PPC + closure pass for kept candidate `k`
+    /// (paper §2.1 on the reduced representation): every kept item whose
+    /// projected support is ≥ the candidate's is tested for containment of
+    /// the candidate's occurrence. A container with a *smaller* original
+    /// id is a prefix-preservation violation (`false` is returned, the
+    /// candidate generates no child); containers with larger ids are the
+    /// closure completion and are pushed onto `closure` as original ids.
+    ///
+    /// Items below the support cut cannot contain the candidate (weights
+    /// are positive, so containment implies support ≥ the candidate's)
+    /// and are never touched — this is what the frequency order buys.
+    pub fn ppc_closure(&self, k: usize, closure: &mut Vec<Item>, ops: &mut u64) -> bool {
+        let (orig, sup) = self.items[k];
+        for &j in &self.by_desc {
+            let j = j as usize;
+            let (jorig, jsup) = self.items[j];
+            if jsup < sup {
+                break;
+            }
+            if j == k {
+                continue;
+            }
+            if self.contains(k, j, ops) {
+                if jorig < orig {
+                    return false;
+                }
+                closure.push(jorig);
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::rng::Rng;
+
+    fn random_db(rng: &mut Rng, m: usize, n: usize, density: f64) -> Database {
+        let trans: Vec<Vec<Item>> = (0..n)
+            .map(|_| (0..m as Item).filter(|_| rng.bernoulli(density)).collect())
+            .collect();
+        let labels: Vec<bool> = (0..n).map(|t| t % 3 == 0).collect();
+        Database::from_transactions(m, &trans, &labels)
+    }
+
+    /// Reference projected support computed the slow way.
+    fn slow_sup(db: &Database, members: &[Item], i: Item) -> u32 {
+        let mut set: Vec<Item> = members.to_vec();
+        set.push(i);
+        db.support(&set)
+    }
+
+    #[test]
+    fn kept_supports_match_database() {
+        forall("projected supports == db.support(P ∪ i)", 48, |rng| {
+            let db = random_db(rng, 3 + rng.index(6), 4 + rng.index(20), 0.2 + rng.f64() * 0.5);
+            // Condition on a random single frequent item (or the root).
+            let members: Vec<Item> = if rng.bernoulli(0.5) {
+                vec![rng.index(db.n_items()) as Item]
+            } else {
+                Vec::new()
+            };
+            let core: i64 = if members.is_empty() { -1 } else { members[0] as i64 };
+            let occ = db.occurrence(&members);
+            let min_sup = 1 + rng.below(2) as u32;
+            let cond = ConditionalDb::project(&db, &occ, &members, core, min_sup);
+            for &(i, sup) in cond.kept_items() {
+                if sup != slow_sup(&db, &members, i) {
+                    return Err(format!("item {i}: got {sup}"));
+                }
+                if sup < min_sup {
+                    return Err(format!("item {i} kept below min_sup"));
+                }
+                if (i as i64) <= core {
+                    return Err(format!("item {i} outside candidate range"));
+                }
+            }
+            // Pruning is complete: every range item outside P with support
+            // ≥ min_sup is kept.
+            for i in (core + 1).max(0) as usize..db.n_items() {
+                let i = i as Item;
+                if members.contains(&i) {
+                    continue;
+                }
+                let sup = slow_sup(&db, &members, i);
+                let kept = cond.kept_items().iter().any(|&(j, _)| j == i);
+                if (sup >= min_sup) != kept {
+                    return Err(format!("item {i} sup={sup} kept={kept}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weights_sum_to_support_and_merging_collapses_duplicates() {
+        // Four copies of the same transaction plus one distinct one.
+        let trans = vec![vec![0, 1], vec![0, 1], vec![0, 1], vec![0, 1], vec![1, 2]];
+        let db = Database::from_transactions(3, &trans, &[true; 5]);
+        let occ = db.occurrence(&[1]);
+        let cond = ConditionalDb::project(&db, &occ, &[1], -1, 1);
+        assert_eq!(cond.total_weight(), 5);
+        assert_eq!(cond.rows(), 2, "identical projected rows must merge");
+        let mut w = cond.row_weights().to_vec();
+        w.sort_unstable();
+        assert_eq!(w, vec![1, 4]);
+    }
+
+    #[test]
+    fn encoding_follows_switch_rule() {
+        let mut rng = Rng::new(42);
+        // Small row space → dense regardless of density.
+        let small = random_db(&mut rng, 6, 40, 0.1);
+        let occ = BitVec::ones(small.n_trans());
+        assert!(ConditionalDb::project(&small, &occ, &[], -1, 1).is_dense());
+        // Tall sparse projection (rows > 512, ones per column ≪ rows/32)
+        // → sparse id lists. Distinct singleton rows avoid merging.
+        let n = 700usize;
+        let m = 40usize;
+        let trans: Vec<Vec<Item>> = (0..n).map(|t| vec![(t % m) as Item]).collect();
+        let tall = Database::from_transactions(m, &trans, &vec![false; n]);
+        let occ = BitVec::ones(n);
+        let cond = ConditionalDb::project(&tall, &occ, &[], -1, 1);
+        assert!(cond.rows() > 512, "rows={}", cond.rows());
+        assert!(!cond.is_dense());
+        assert_eq!(cond.kept_items().len(), m);
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_on_ppc_closure() {
+        // The same logical projection, checked through both encodings:
+        // replicate each base pattern with a distinct tag item so the row
+        // space crosses the switch threshold while the subset structure of
+        // the low items is unchanged.
+        let m = 5usize;
+        let base: Vec<Vec<Item>> = (0..10)
+            .map(|t| (0..m as Item).filter(|&i| (7 * t + 3 * i as usize) % 5 < 2).collect())
+            .collect();
+        let mk = |copies: usize| {
+            let trans: Vec<Vec<Item>> = base
+                .iter()
+                .flat_map(|t| {
+                    (0..copies).map(move |c| {
+                        let mut t = t.clone();
+                        t.push((m + c) as Item);
+                        t
+                    })
+                })
+                .collect();
+            let n = trans.len();
+            Database::from_transactions(m + copies, &trans, &vec![false; n])
+        };
+        let small = mk(1);
+        let big = mk(199); // 5 distinct patterns × 199 tags = 995 rows, sparse
+        let occ_s = BitVec::ones(small.n_trans());
+        let occ_b = BitVec::ones(big.n_trans());
+        let cs = ConditionalDb::project(&small, &occ_s, &[], -1, 1);
+        let cb = ConditionalDb::project(&big, &occ_b, &[], -1, 1);
+        assert!(cs.is_dense());
+        assert!(!cb.is_dense(), "rows={} must pick the sparse encoding", cb.rows());
+        // PPC/closure outcomes on the shared low items must agree exactly.
+        let mut ops = 0u64;
+        for k in 0..m {
+            let find =
+                |c: &ConditionalDb| c.kept_items().iter().position(|&(i, _)| i == k as Item);
+            let (Some(ks), Some(kb)) = (find(&cs), find(&cb)) else { continue };
+            let (mut close_s, mut close_b) = (Vec::new(), Vec::new());
+            let ok_s = cs.ppc_closure(ks, &mut close_s, &mut ops);
+            let ok_b = cb.ppc_closure(kb, &mut close_b, &mut ops);
+            close_s.retain(|&i| (i as usize) < m);
+            close_b.retain(|&i| (i as usize) < m);
+            close_s.sort_unstable();
+            close_b.sort_unstable();
+            assert_eq!(ok_s, ok_b, "item {k}");
+            assert_eq!(close_s, close_b, "item {k}");
+        }
+        assert!(ops > 0);
+    }
+
+    #[test]
+    fn empty_and_degenerate_projections() {
+        let db = Database::from_transactions(2, &[vec![0], vec![1]], &[true, false]);
+        // min_sup above every support → nothing kept.
+        let occ = BitVec::ones(2);
+        let cond = ConditionalDb::project(&db, &occ, &[], -1, 5);
+        assert!(cond.kept_items().is_empty());
+        assert_eq!(cond.scanned(), 2);
+        assert_eq!(cond.candidates().count(), 0);
+        // Empty occurrence → zero rows, nothing kept.
+        let empty = BitVec::zeros(2);
+        let cond = ConditionalDb::project(&db, &empty, &[], -1, 1);
+        assert_eq!(cond.rows(), 0);
+        assert!(cond.kept_items().is_empty());
+        assert!(cond.build_ops() > 0);
+    }
+
+    #[test]
+    fn candidate_order_is_ascending_support() {
+        let mut rng = Rng::new(11);
+        let db = random_db(&mut rng, 8, 30, 0.4);
+        let occ = BitVec::ones(db.n_trans());
+        let cond = ConditionalDb::project(&db, &occ, &[], -1, 1);
+        let sups: Vec<u32> = cond.candidates().map(|k| cond.item(k).1).collect();
+        for w in sups.windows(2) {
+            assert!(w[0] <= w[1], "candidates must come least-frequent first");
+        }
+    }
+}

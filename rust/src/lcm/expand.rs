@@ -7,30 +7,51 @@
 //! root is produced by exactly one `(P, i)` pair, so no duplicate detection
 //! is needed — the property that makes the search a tree and therefore
 //! amenable to stack-based distribution.
+//!
+//! Since PR 3 the expansion runs on a **reduced conditional database**
+//! ([`ConditionalDb`], DESIGN.md §8) rebuilt per node: the candidate range
+//! is projected onto `occ(P)` once (infrequent items pruned, identical
+//! rows merged, dense or sparse encoding by density), and every support,
+//! PPC, and closure check then runs at the projection's width instead of
+//! over full-width columns. Only two full-width touches remain per child:
+//! the prefix PPC scan over items ≤ core (early-exit, as before) and the
+//! child's occurrence bitmap materialization.
 
 use crate::bits::BitVec;
-use crate::db::{Database, Item};
+use crate::db::{ConditionalDb, Database, Item, ProjectScratch};
 
 use super::node::SearchNode;
 
-/// Reusable scratch buffers so the hot loop performs no allocations.
+/// Reusable scratch buffers (child bitmap, closure list, projection
+/// intermediates) so the per-node loop allocates only for the projection
+/// outputs and the children it actually emits.
 #[derive(Default)]
 pub struct ExpandScratch {
     child_occ: Option<BitVec>,
+    closure: Vec<Item>,
+    project: ProjectScratch,
 }
 
 /// Work accounting for one expansion, used both for perf reporting and as
-/// the discrete-event simulator's virtual-time cost model.
+/// the discrete-event simulator's virtual-time cost model (DESIGN.md §8).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExpandStats {
-    /// Number of candidate items scanned.
+    /// Items scanned in the candidate range (`i > core`, `i ∉ P`, inside
+    /// the `keep` partition), whether or not they survived the frequency
+    /// pruning.
     pub candidates: u64,
-    /// Number of frequent candidates that reached the closure check.
+    /// Frequent candidates that reached the PPC/closure pass.
     pub closure_checks: u64,
     /// Children emitted.
     pub children: u64,
-    /// Approximate `u64`-word operations performed (the DES cost unit).
+    /// Approximate `u64`-word operations in the candidate loop:
+    /// reduced-width containment checks, full-width prefix scans, and
+    /// child bitmap materialization.
     pub word_ops: u64,
+    /// Word-op equivalents spent building the conditional database
+    /// (projection, row merging, re-encoding) and reconstructing stripped
+    /// occurrence bitmaps.
+    pub reduce_ops: u64,
 }
 
 impl ExpandStats {
@@ -39,6 +60,17 @@ impl ExpandStats {
         self.closure_checks += o.closure_checks;
         self.children += o.children;
         self.word_ops += o.word_ops;
+        self.reduce_ops += o.reduce_ops;
+    }
+
+    /// Total expansion work in word-op equivalents — the unit the DES
+    /// charges virtual time for (`units × ns_per_unit`) and the quantity
+    /// `bench::calibrate*` divides measured wall-clock by. Reduction work
+    /// is included so calibration stays meaningful on the reduced hot
+    /// path.
+    #[inline]
+    pub fn units(&self) -> u64 {
+        self.word_ops + self.reduce_ops
     }
 }
 
@@ -62,7 +94,12 @@ pub fn expand(
 ///
 /// Used by the depth-1 preprocess partition (paper §4.5): process `r` of
 /// `P` expands the root only for items `i` with `i mod P = r`, which seeds
-/// every stack without any communication.
+/// every stack without any communication. Only the `keep` slice is
+/// projected into the conditional database (each rank pays `O(m/P)`
+/// extraction work, not `O(m)`); filtered-out items still participate in
+/// PPC and closure checks through full-width early-exit scans, exactly as
+/// in the pre-reduction expansion, so the emitted children are identical
+/// to the unfiltered expansion's `keep`-satisfying subset.
 pub fn expand_filtered(
     db: &Database,
     node: &mut SearchNode,
@@ -72,66 +109,102 @@ pub fn expand_filtered(
     keep: impl Fn(Item) -> bool,
 ) -> ExpandStats {
     let mut stats = ExpandStats::default();
-    let n_items = db.n_items() as Item;
     let words = crate::bits::words_for(db.n_trans()) as u64;
     let first = out.len();
 
     // Ensure the occurrence bitmap exists (may have been stripped in
-    // transit); charge its reconstruction cost.
+    // transit); charge its reconstruction as reduction work.
     if node.occ.is_none() {
-        stats.word_ops += words * node.items.len() as u64;
+        stats.reduce_ops += words * node.items.len() as u64;
     }
     let occ = node.occurrence(db).clone();
 
+    // Build this node's conditional database: the `keep` slice of the
+    // candidate range projected onto occ(P), infrequent items pruned,
+    // identical rows merged, encoding chosen by density. Per-candidate
+    // checks against projected items run on this reduced view; items
+    // outside `keep` (none, for a plain `expand`) are handled full-width
+    // below.
+    let cond = ConditionalDb::project_where_with(
+        db,
+        &occ,
+        &node.items,
+        node.core,
+        min_sup,
+        &keep,
+        &mut scratch.project,
+    );
+    stats.candidates += cond.scanned();
+    stats.reduce_ops += cond.build_ops();
+
     let start: Item = (node.core + 1) as Item; // NO_CORE = -1 -> 0
+    let n_items = db.n_items() as Item;
     // Membership mask of P for O(1) "i ∈ P" checks. P is sorted and small.
     let in_p = |i: Item| node.items.binary_search(&i).is_ok();
+    // Did `keep` exclude anything from the projection? (Plain `expand`
+    // never does; the preprocess partition does.) When nothing was
+    // excluded the full-width fallback pass below is skipped wholesale.
+    let members_in_range = node.items.len() - node.items.partition_point(|&m| m < start);
+    let keep_excluded =
+        cond.scanned() < (n_items as usize - start as usize - members_in_range) as u64;
 
     let child_occ = scratch.child_occ.get_or_insert_with(|| BitVec::zeros(db.n_trans()));
+    let closure = &mut scratch.closure;
 
-    for i in start..n_items {
-        if in_p(i) || !keep(i) {
-            continue;
-        }
-        stats.candidates += 1;
-        stats.word_ops += words;
-        let sup = occ.and_count(db.col(i));
-        if sup < min_sup || sup == 0 {
-            continue;
-        }
+    // Candidates iterate in ascending-support order (deterministic; the
+    // per-candidate cost is independent of this order — the saving comes
+    // from the support-cut walk inside ppc_closure).
+    'cand: for k in cond.candidates() {
+        let (i, sup) = cond.item(k);
         stats.closure_checks += 1;
+        closure.clear();
+
+        // Suffix PPC + closure completion in one frequency-ordered pass
+        // over the reduced columns. Items pruned from the projection
+        // cannot contain the child (containment would lift their
+        // projected support past min_sup), so they are never touched.
+        if !cond.ppc_closure(k, closure, &mut stats.word_ops) {
+            continue;
+        }
+
+        // Prefix PPC over items ≤ core outside P, against full-width
+        // columns (the projection only covers the candidate range). The
+        // child occurrence is materialized once, here, and reused as the
+        // emitted child's cache. Early-exit scans are ~1 word on average.
         occ.and_assign_into(db.col(i), child_occ);
         stats.word_ops += words;
-
-        // PPC check: no item j < i outside P may contain child_occ.
-        let mut prefix_ok = true;
-        for j in 0..i {
-            if in_p(j) {
-                continue;
-            }
-            stats.word_ops += 1; // early-exit scans are ~1 word on average
-            if child_occ.is_subset_of(db.col(j)) {
-                prefix_ok = false;
-                break;
-            }
-        }
-        if !prefix_ok {
-            continue;
-        }
-
-        // Closure completion: items j > i with child_occ ⊆ col(j).
-        let mut items = Vec::with_capacity(node.items.len() + 2);
-        items.extend_from_slice(&node.items);
-        items.push(i);
-        for j in i + 1..n_items {
+        for j in 0..start {
             if in_p(j) {
                 continue;
             }
             stats.word_ops += 1;
             if child_occ.is_subset_of(db.col(j)) {
-                items.push(j);
+                continue 'cand;
             }
         }
+        // Candidate-range items excluded from the projection by `keep`:
+        // same full-width early-exit containment checks the seed used.
+        // Skipped entirely by plain `expand`, where `keep` excludes
+        // nothing; `keep` is tested first so included items cost one call.
+        if keep_excluded {
+            for j in start..n_items {
+                if keep(j) || in_p(j) || j == i {
+                    continue;
+                }
+                stats.word_ops += 1;
+                if child_occ.is_subset_of(db.col(j)) {
+                    if j < i {
+                        continue 'cand; // PPC violation from another partition
+                    }
+                    closure.push(j);
+                }
+            }
+        }
+
+        let mut items = Vec::with_capacity(node.items.len() + 1 + closure.len());
+        items.extend_from_slice(&node.items);
+        items.push(i);
+        items.extend_from_slice(closure);
         items.sort_unstable();
 
         out.push(SearchNode {
@@ -143,9 +216,9 @@ pub fn expand_filtered(
         stats.children += 1;
     }
 
-    // Reverse the children pushed by this call so stack pops see ascending
-    // core order (true DFS order).
-    out[first..].reverse();
+    // The frequency-ordered generation above is re-sorted so stack pops
+    // see ascending core order (true DFS order, as before the reduction).
+    out[first..].sort_unstable_by(|a, b| b.core.cmp(&a.core));
     stats
 }
 
@@ -190,6 +263,8 @@ mod tests {
                 }
             }
             assert!(c.core > NO_CORE);
+            // the occurrence cache is the full-width bitmap
+            assert_eq!(c.occ.as_ref().unwrap(), &occ);
         }
     }
 
@@ -220,10 +295,66 @@ mod tests {
     }
 
     #[test]
-    fn stats_accumulate() {
-        let mut a = ExpandStats { candidates: 1, closure_checks: 2, children: 3, word_ops: 4 };
+    fn filtered_expansion_partitions_children() {
+        // keep-filtered expansions must produce exactly the children of
+        // the unfiltered expansion whose core satisfies the predicate,
+        // with identical closures (checks stay keep-agnostic).
+        let d = db();
+        let mut all = Vec::new();
+        expand(&d, &mut SearchNode::root(&d), 1, &mut ExpandScratch::default(), &mut all);
+        let p = 2u32;
+        let mut parts = Vec::new();
+        for r in 0..p {
+            let mut out = Vec::new();
+            expand_filtered(
+                &d,
+                &mut SearchNode::root(&d),
+                1,
+                &mut ExpandScratch::default(),
+                &mut out,
+                |i| i % p == r,
+            );
+            parts.extend(out);
+        }
+        let key = |n: &SearchNode| (n.core, n.items.clone(), n.support);
+        let mut a: Vec<_> = all.iter().map(key).collect();
+        let mut b: Vec<_> = parts.iter().map(key).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_accumulate_and_units_sum() {
+        let mut a = ExpandStats {
+            candidates: 1,
+            closure_checks: 2,
+            children: 3,
+            word_ops: 4,
+            reduce_ops: 5,
+        };
         let b = a;
         a.add(&b);
-        assert_eq!(a, ExpandStats { candidates: 2, closure_checks: 4, children: 6, word_ops: 8 });
+        assert_eq!(
+            a,
+            ExpandStats {
+                candidates: 2,
+                closure_checks: 4,
+                children: 6,
+                word_ops: 8,
+                reduce_ops: 10,
+            }
+        );
+        assert_eq!(a.units(), 18);
+    }
+
+    #[test]
+    fn expansion_charges_reduction_work() {
+        let d = db();
+        let mut out = Vec::new();
+        let st = expand(&d, &mut SearchNode::root(&d), 1, &mut ExpandScratch::default(), &mut out);
+        assert!(st.reduce_ops > 0, "projection build must be accounted");
+        assert!(st.word_ops > 0);
+        assert!(st.units() >= st.word_ops.max(st.reduce_ops));
     }
 }

@@ -6,7 +6,10 @@
 //! once with no duplicate checks. The single tree-node expansion
 //! ([`expand`]) is shared verbatim by the serial miner ([`mine_closed`]),
 //! the LAMP phases, and the distributed workers (`par::worker`), which is
-//! what guarantees serial/parallel result equivalence.
+//! what guarantees serial/parallel result equivalence. Expansion runs on
+//! a per-node reduced conditional database (`db::ConditionalDb`,
+//! DESIGN.md §8); `rust/tests/reduced_equivalence.rs` pins it to the
+//! brute-force oracle ([`brute_force_closed`]).
 
 mod brute;
 mod expand;

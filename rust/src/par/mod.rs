@@ -50,7 +50,8 @@ pub struct ParRunResult {
     pub breakdowns: Vec<Breakdown>,
     /// Aggregated communication counters.
     pub comm: crate::fabric::CommStats,
-    /// Total expansion work units (word-ops) across processes.
+    /// Total expansion work units across processes: word-op equivalents
+    /// including conditional-database reduction work (DESIGN.md §8).
     pub work_units: u64,
 }
 

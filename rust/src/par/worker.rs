@@ -360,8 +360,11 @@ impl<'d> Worker<'d> {
                 }
                 let st =
                     expand(self.db, &mut node, self.lambda, &mut self.scratch, &mut self.stack);
-                spent_units += st.word_ops.max(1);
-                self.work_units += st.word_ops;
+                // Charge candidate-loop *and* database-reduction work: the
+                // DES cost model and the probe budget both run on total
+                // expansion units (DESIGN.md §8).
+                spent_units += st.units().max(1);
+                self.work_units += st.units();
             }
             let main_ns = if real_mode {
                 self.real_now_ns() - main_t0
@@ -408,7 +411,7 @@ impl<'d> Worker<'d> {
             &mut self.stack,
             |i| i % p == rank,
         );
-        self.work_units += st.word_ops;
+        self.work_units += st.units();
         // Count the depth-1 closed sets now so the barrier can seed λ > 1
         // (§4.5). They are *not* re-counted when popped in Main: mark them
         // by recording here and visiting only deeper nodes… simpler: record
@@ -427,7 +430,7 @@ impl<'d> Worker<'d> {
         }
         self.pre_local_done = true;
         crate::dtd::mattern::merge_hist(&mut self.pre_hist, &delta);
-        let cost = if real_mode { self.real_now_ns() - t0 } else { self.units_to_ns(st.word_ops) };
+        let cost = if real_mode { self.real_now_ns() - t0 } else { self.units_to_ns(st.units()) };
         self.breakdown.preprocess_ns += cost;
         self.check_barrier(mb);
         cost

@@ -104,6 +104,8 @@ pub struct WorkerMerge {
     /// Sparse closed-set histogram (support, count).
     pub hist: HistDelta,
     pub closed_count: u64,
+    /// Total expansion work units — word-op equivalents including the
+    /// conditional-database reduction work (`ExpandStats::units`).
     pub work_units: u64,
     pub breakdown: Breakdown,
     pub comm: CommStats,
