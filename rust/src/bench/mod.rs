@@ -17,15 +17,14 @@ pub use report::{BenchRecord, BenchReport, SCHEMA_ID};
 pub use scenarios::{all_scenarios, Scenario};
 
 /// The engines [`measure_engine`] understands, in the order the bench
-/// runs them by default. The CLI derives its default `--engines` value
-/// and its fail-fast validation from this single list.
-pub const ENGINES: &[&str] = &["serial", "lamp2", "threads", "sim", "process"];
+/// runs them by default — re-exported from the coordinator, which owns the
+/// one engine-name dispatch point ([`crate::coordinator::parse_engine`]).
+pub use crate::coordinator::ENGINES;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::coordinator::{Backend, Coordinator, ScreenMode};
+use crate::coordinator::{parse_engine, Coordinator, EngineSelect, ScreenMode};
 use crate::db::Database;
-use crate::fabric::sim::NetModel;
 use crate::lamp::{
     lamp2::lamp2_serial, lamp_serial, phase1_serial, phase2_count, phase3_extract,
 };
@@ -115,8 +114,8 @@ pub fn measure_engine(
     alpha: f64,
     seed: u64,
 ) -> Result<EngineRun> {
-    match engine {
-        "serial" => {
+    match parse_engine(engine, procs, seed)? {
+        EngineSelect::Serial => {
             let (secs, (p1, p2, sig)) = time_once(|| {
                 let p1 = phase1_serial(db, alpha);
                 let p2 = phase2_count(db, p1.min_sup);
@@ -139,7 +138,7 @@ pub fn measure_engine(
                 significant: sig.len(),
             })
         }
-        "lamp2" => {
+        EngineSelect::Lamp2 => {
             // The occurrence-deliver comparator is not word-op
             // instrumented (different cost structure); unit fields are 0.
             let (secs, res) = time_once(|| lamp2_serial(db, alpha));
@@ -157,12 +156,7 @@ pub fn measure_engine(
                 significant: res.significant.len(),
             })
         }
-        "threads" | "sim" | "process" => {
-            let backend = match engine {
-                "threads" => Backend::Threads { p: procs, seed },
-                "process" => Backend::Process { p: procs, seed },
-                _ => Backend::Sim { p: procs, net: NetModel::default(), seed },
-            };
+        EngineSelect::Backend(backend) => {
             let coord = Coordinator::new(alpha).with_screen(ScreenMode::Native);
             let (secs, run) = time_once(|| coord.run(db, &backend));
             let run = run?;
@@ -180,7 +174,6 @@ pub fn measure_engine(
                 significant: run.result.significant.len(),
             })
         }
-        other => bail!("unknown bench engine '{other}' ({})", ENGINES.join("|")),
     }
 }
 

@@ -7,12 +7,16 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::bench::{all_scenarios, measure_engine, report, BenchRecord, BenchReport, ENGINES};
-use crate::coordinator::{Backend, Coordinator, GlbParams, ScreenKind, ScreenMode};
+use crate::coordinator::{
+    parse_engine, Backend, Coordinator, EngineSelect, GlbParams, ScreenKind, ScreenMode,
+};
 use crate::db::{read_labels, read_transactions, Database};
 use crate::fabric::sim::NetModel;
 use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
+use crate::service::{Client, ServeConfig};
 use crate::util::table::Table;
+use crate::wire::service::{JobSpec, JobState};
 
 use super::args::Args;
 
@@ -78,10 +82,15 @@ fn print_significant(significant: &[SignificantPattern]) {
 /// `parlamp lamp` — full three-phase LAMP on a dataset from disk, on any
 /// engine: `serial` (reference), `lamp2` (occurrence-deliver comparator),
 /// or a coordinated distributed run on `threads` / `sim` / `process`.
+/// Engine-name dispatch goes through [`parse_engine`] — the same resolver
+/// (and error message) the bench harness uses.
 pub fn cmd_lamp(args: &Args) -> Result<()> {
     let db = load_db(args)?;
     let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
     let engine = args.get("engine").unwrap_or("serial");
+    let p = args.get_usize("procs", 4)?;
+    let seed = args.get_u64("seed", 2015)?;
+    let select = parse_engine(engine, p, seed)?;
     let screen = parse_screen(args)?;
     println!(
         "N={} items={} density={:.4}% N_pos={}",
@@ -91,10 +100,10 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
         db.marginals().n_pos
     );
 
-    let significant: Vec<SignificantPattern> = match engine {
-        "serial" | "lamp2" => {
-            let res = match engine {
-                "serial" => lamp_serial(&db, alpha),
+    let significant: Vec<SignificantPattern> = match select {
+        EngineSelect::Serial | EngineSelect::Lamp2 => {
+            let res = match select {
+                EngineSelect::Serial => lamp_serial(&db, alpha),
                 _ => lamp2_serial(&db, alpha),
             };
             // The serial pipelines already ran the native phase 3; only
@@ -110,21 +119,13 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
             println!("{} | engine={engine} screen={kind:?}", res.summary());
             sig
         }
-        "threads" | "sim" | "process" => {
-            let p = args.get_usize("procs", 4)?;
-            let seed = args.get_u64("seed", 2015)?;
-            let backend = match engine {
-                "threads" => Backend::Threads { p, seed },
-                "process" => Backend::Process { p, seed },
-                _ => Backend::Sim { p, net: NetModel::default(), seed },
-            };
+        EngineSelect::Backend(backend) => {
             let coord =
                 Coordinator::new(alpha).with_glb(glb_from_args(args)).with_screen(screen);
             let run = coord.run(&db, &backend)?;
             println!("engine={engine} P={p} | {}", run.summary());
             run.result.significant
         }
-        other => bail!("unknown --engine '{other}' (serial|lamp2|threads|sim|process)"),
     };
     print_significant(&significant);
     Ok(())
@@ -345,6 +346,75 @@ pub fn cmd_scenarios(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+// ---- service subcommands (DESIGN.md §9) ------------------------------------
+
+/// `parlamp serve` — start the long-running mining daemon: warm worker
+/// fleet, FIFO job queue, bounded result cache. Blocks until `SHUTDOWN`
+/// or SIGTERM drains the queue.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let socket = PathBuf::from(args.require("socket")?);
+    let mut cfg = ServeConfig::new(socket, args.get_usize("procs", 4)?);
+    cfg.cache_cap = args.get_usize("cache", 32)?;
+    anyhow::ensure!(cfg.cache_cap >= 1, "--cache must be ≥ 1");
+    crate::service::serve(&cfg)
+}
+
+fn connect_client(args: &Args) -> Result<Client> {
+    Client::connect(Path::new(args.require("socket")?))
+}
+
+fn job_id(args: &Args) -> Result<u64> {
+    args.require("job")?.parse().context("--job must be a job id (unsigned integer)")
+}
+
+/// `parlamp submit` — submit a dataset to a running daemon; prints the
+/// assigned job id.
+pub fn cmd_submit(args: &Args) -> Result<()> {
+    let db = load_db(args)?;
+    let spec = JobSpec {
+        alpha: args.get_f64("alpha", crate::DEFAULT_ALPHA)?,
+        glb: glb_from_args(args),
+        screen: parse_screen(args)?,
+        seed: args.get_u64("seed", 2015)?,
+        db,
+    };
+    let id = connect_client(args)?.submit(spec)?;
+    println!("job {id} accepted");
+    Ok(())
+}
+
+/// `parlamp status` — one-line lifecycle report for a job.
+pub fn cmd_status(args: &Args) -> Result<()> {
+    let id = job_id(args)?;
+    let state = connect_client(args)?.status(id)?;
+    println!("job {id}: {state}");
+    anyhow::ensure!(state != JobState::NotFound, "job {id} is unknown to the daemon");
+    Ok(())
+}
+
+/// `parlamp results` — fetch (blocking until finished) and print a job's
+/// outcome. Stdout carries exactly the summary line + significant-pattern
+/// table, so it diffs against `parlamp lamp --engine serial` output; the
+/// cache-hit note goes to stderr.
+pub fn cmd_results(args: &Args) -> Result<()> {
+    let id = job_id(args)?;
+    let outcome = connect_client(args)?.results(id)?;
+    if outcome.from_cache {
+        eprintln!("job {id}: served from the result cache");
+    }
+    let res = outcome.to_lamp_result();
+    println!("{}", res.summary());
+    print_significant(&res.significant);
+    Ok(())
+}
+
+/// `parlamp shutdown` — ask the daemon to drain its queue and exit.
+pub fn cmd_shutdown(args: &Args) -> Result<()> {
+    connect_client(args)?.shutdown()?;
+    println!("daemon acknowledged shutdown (draining queue, dismissing fleet)");
     Ok(())
 }
 

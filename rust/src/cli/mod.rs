@@ -2,14 +2,19 @@
 //! hand-rolled parser).
 //!
 //! ```text
-//! parlamp lamp    --data t.dat --labels t.lab
-//!                 [--engine serial|lamp2|threads|sim|process]
-//! parlamp mine    --data t.dat [--min-sup K]
-//! parlamp sim     --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
-//! parlamp bench   [--quick] [--engines a,b,..] [--scenarios x,y|all]
-//!                 [--out BENCH_pr3.json] | --check FILE
-//! parlamp gendata --scenario alz-dom-5 --out dir/
+//! parlamp lamp     --data t.dat --labels t.lab
+//!                  [--engine serial|lamp2|threads|sim|process]
+//! parlamp mine     --data t.dat [--min-sup K]
+//! parlamp sim      --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
+//! parlamp bench    [--quick] [--engines a,b,..] [--scenarios x,y|all]
+//!                  [--out BENCH_pr3.json] | --check FILE
+//! parlamp gendata  --scenario alz-dom-5 --out dir/
 //! parlamp scenarios
+//! parlamp serve    --socket /run/parlamp.sock --procs 8 [--cache 32]
+//! parlamp submit   --socket /run/parlamp.sock --data t.dat --labels t.lab
+//! parlamp status   --socket /run/parlamp.sock --job 1
+//! parlamp results  --socket /run/parlamp.sock --job 1
+//! parlamp shutdown --socket /run/parlamp.sock
 //! ```
 
 mod args;
@@ -44,6 +49,11 @@ pub fn run(argv: &[String]) -> i32 {
         "bench" => commands::cmd_bench(&args),
         "gendata" => commands::cmd_gendata(&args),
         "scenarios" => commands::cmd_scenarios(&args),
+        "serve" => commands::cmd_serve(&args),
+        "submit" => commands::cmd_submit(&args),
+        "status" => commands::cmd_status(&args),
+        "results" => commands::cmd_results(&args),
+        "shutdown" => commands::cmd_shutdown(&args),
         // Hidden: the process-fabric child entry point. The parent engine
         // re-executes this binary as `parlamp __worker --socket S
         // --worker-rank R` for each rank (see par::engine_process).
@@ -83,6 +93,13 @@ USAGE:
   parlamp bench     --check FILE
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
+  parlamp serve     --socket PATH [--procs P] [--cache N]
+  parlamp submit    --socket PATH --data FILE --labels FILE [--alpha A]
+                    [--naive] [--no-preprocess] [--screen native|xla|auto]
+                    [--seed S]
+  parlamp status    --socket PATH --job ID
+  parlamp results   --socket PATH --job ID
+  parlamp shutdown  --socket PATH
 
 `bench` runs the Table-1 scenarios across engines (default: all five) and
 writes the schema-stable perf-trajectory JSON (BENCH_<label>.json; the
@@ -95,6 +112,14 @@ through the coordinator (phases 1-2 distributed, phase 3 via the configured
 screen). `process` spawns one worker OS process per rank, connected over
 Unix-domain sockets with the DESIGN.md §7 wire protocol — true distributed
 memory on one host. Scenario names mirror Table 1: hapmap-dom-10,
-hapmap-dom-20, alz-dom-5, alz-dom-10, alz-rec-30, mcf7."
+hapmap-dom-20, alz-dom-5, alz-dom-10, alz-rec-30, mcf7.
+
+`serve` starts the long-running mining daemon (DESIGN.md §9): the worker
+fleet spawns once and stays warm, jobs queue FIFO, and repeat submissions
+are answered from a bounded result cache keyed by (database digest, alpha,
+GLB parameters, screen). `submit` prints the assigned job id; `results`
+blocks until the job finishes and prints the same summary + table as
+`lamp --engine serial`; `shutdown` (or SIGTERM) drains the queue, BYEs the
+fleet, and unlinks the socket."
         .to_string()
 }

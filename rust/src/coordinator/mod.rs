@@ -29,7 +29,7 @@
 //! the `quickstart` / `naive_vs_glb` / `scaling_study` / `gwas_study`
 //! examples all run through this one path.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::bench::Calibration;
 use crate::db::Database;
@@ -38,16 +38,50 @@ use crate::fabric::CommStats;
 use crate::glb::Lifelines;
 use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
 use crate::par::{
-    breakdown, run_process_with, run_sim, run_threads_with, ParRunResult, ProcessConfig,
-    RunMode, SimConfig, ThreadConfig,
+    breakdown, run_sim, run_threads_with, ParRunResult, ProcessConfig, ProcessFleet, RunMode,
+    SimConfig, ThreadConfig,
 };
 use crate::runtime::{
     artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
 };
 
+/// Every engine name the CLI and the bench harness accept, in the order
+/// the bench runs them by default. [`parse_engine`] is the one dispatch
+/// point; its error message derives from this list.
+pub const ENGINES: &[&str] = &["serial", "lamp2", "threads", "sim", "process"];
+
+/// What an engine name resolves to: one of the two serial pipelines, or a
+/// coordinated distributed [`Backend`].
+#[derive(Clone, Copy, Debug)]
+pub enum EngineSelect {
+    /// The serial reference pipeline (`lamp_serial`).
+    Serial,
+    /// The occurrence-deliver serial comparator (`lamp2_serial`).
+    Lamp2,
+    /// A distributed run through the [`Coordinator`].
+    Backend(Backend),
+}
+
+/// Resolve an engine name (`serial|lamp2|threads|sim|process`) to its
+/// dispatch target — the single engine-name parser shared by `parlamp
+/// lamp`, `parlamp bench`, and the service daemon, so a typo gets the same
+/// one-line error everywhere.
+pub fn parse_engine(name: &str, p: usize, seed: u64) -> Result<EngineSelect> {
+    Ok(match name {
+        "serial" => EngineSelect::Serial,
+        "lamp2" => EngineSelect::Lamp2,
+        "threads" => EngineSelect::Backend(Backend::Threads { p, seed }),
+        "sim" => EngineSelect::Backend(Backend::Sim { p, net: NetModel::default(), seed }),
+        "process" => EngineSelect::Backend(Backend::Process { p, seed }),
+        other => bail!("unknown engine '{other}' ({})", ENGINES.join("|")),
+    })
+}
+
 /// Lifeline-GLB topology parameters (paper §4.2), the knobs the
 /// coordinator translates into per-worker configuration for every engine.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` because these parameters are part of the service result-cache
+/// key (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct GlbParams {
     /// Hypercube edge length `l` (paper fixes 2: binary hypercube).
     pub l: usize,
@@ -136,8 +170,9 @@ impl Backend {
     }
 }
 
-/// Phase-3 screen selection.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Phase-3 screen selection. `Hash` because the screen policy is part of
+/// the service result-cache key (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ScreenMode {
     /// Use the XLA/PJRT artifact when present and loadable, otherwise the
     /// native Fisher path. The default.
@@ -285,14 +320,72 @@ impl Coordinator {
 
     /// Run the complete three-phase procedure. Phases 1–2 execute on
     /// `backend`; phase 3 runs through the configured screen.
+    ///
+    /// The process backend spawns a [`ProcessFleet`] that serves *both*
+    /// distributed phases (phase 2 reuses phase 1's shipped database via
+    /// `RECONFIG`) and is torn down afterwards; callers answering many
+    /// requests should hold their own fleet and use
+    /// [`Coordinator::run_on_fleet`] instead.
     pub fn run(&self, db: &Database, backend: &Backend) -> Result<CoordinatorRun> {
+        match backend {
+            Backend::Process { p, seed } => {
+                let mut fleet = ProcessFleet::spawn(&self.process_config(*p, *seed))?;
+                let run = self.run_on_fleet(db, &mut fleet, *seed)?;
+                fleet.shutdown()?;
+                Ok(run)
+            }
+            Backend::Threads { p, .. } => {
+                let seed = backend.seed();
+                self.run_phases(db, |mode, idx| {
+                    Ok(run_threads_with(
+                        db,
+                        mode,
+                        &self.thread_config(*p, seed.wrapping_add(idx)),
+                    ))
+                })
+            }
+            Backend::Sim { p, net, .. } => {
+                let seed = backend.seed();
+                self.run_phases(db, |mode, idx| {
+                    Ok(run_sim(db, mode, &self.sim_config(*p, *net, seed.wrapping_add(idx))))
+                })
+            }
+        }
+    }
+
+    /// Run the three-phase procedure across an already-warm worker fleet —
+    /// the entry point the `parlamp serve` daemon uses so the fleet
+    /// outlives any single job. On error the fleet is poisoned and must be
+    /// dropped (see [`ProcessFleet`]).
+    pub fn run_on_fleet(
+        &self,
+        db: &Database,
+        fleet: &mut ProcessFleet,
+        seed: u64,
+    ) -> Result<CoordinatorRun> {
+        let cfg = self.process_config(fleet.p(), seed);
+        self.run_phases(db, |mode, idx| {
+            fleet
+                .run_phase(db, mode, &cfg, seed.wrapping_add(idx))
+                .context("process-fabric phase")
+        })
+    }
+
+    /// The three-phase skeleton, generic over how a distributed phase is
+    /// executed. `phase(mode, phase_idx)` blocks until the phase's
+    /// DTD-quiescent merge; `phase_idx` decorrelates the two phases' steal
+    /// randomness, mirroring `lamp_parallel_threads`.
+    fn run_phases<F>(&self, db: &Database, mut phase: F) -> Result<CoordinatorRun>
+    where
+        F: FnMut(RunMode, u64) -> Result<ParRunResult>,
+    {
         let rule = SupportIncreaseRule::new(db.marginals(), self.alpha);
 
         // Phase 1: λ search with the piggybacked support-increase protocol.
         // The engine returns after DTD quiescence with the workers'
         // histograms merged; the exact λ* is then recomputed from that
         // merged histogram (the root's in-flight λ may lag — DESIGN.md §4).
-        let mut p1 = self.run_phase(db, RunMode::Phase1 { alpha: self.alpha }, backend, 0)?;
+        let mut p1 = phase(RunMode::Phase1 { alpha: self.alpha }, 0)?;
         p1.finalize_phase1(&rule);
         debug_assert_eq!(
             rule.advance(p1.lambda_final, |l| p1.hist.cs_ge(l)),
@@ -302,7 +395,7 @@ impl Coordinator {
 
         // Phase 2: correction factor k = CS(λ* − 1) by re-mining at the
         // final minimum support.
-        let p2 = self.run_phase(db, RunMode::Count { min_sup: p1.min_sup }, backend, 1)?;
+        let p2 = phase(RunMode::Count { min_sup: p1.min_sup }, 1)?;
         let k = p2.closed_total.max(1);
 
         // Phase 3: significance screen at the adjusted level α / k.
@@ -319,31 +412,6 @@ impl Coordinator {
             phase2_closed: p2.closed_total,
         };
         Ok(CoordinatorRun { result, screen, phase1: p1, phase2: p2 })
-    }
-
-    /// Launch one distributed phase and block until its DTD-quiescent
-    /// merge. `phase_idx` decorrelates the two phases' steal randomness,
-    /// mirroring `lamp_parallel_threads`.
-    fn run_phase(
-        &self,
-        db: &Database,
-        mode: RunMode,
-        backend: &Backend,
-        phase_idx: u64,
-    ) -> Result<ParRunResult> {
-        let seed = backend.seed().wrapping_add(phase_idx);
-        match backend {
-            Backend::Threads { p, .. } => {
-                Ok(run_threads_with(db, mode, &self.thread_config(*p, seed)))
-            }
-            Backend::Sim { p, net, .. } => {
-                Ok(run_sim(db, mode, &self.sim_config(*p, *net, seed)))
-            }
-            Backend::Process { p, .. } => {
-                run_process_with(db, mode, &self.process_config(*p, seed))
-                    .context("process-fabric phase")
-            }
-        }
     }
 
     /// `GlbParams` (+ paper-default cadences) → process-engine knobs.

@@ -137,6 +137,56 @@ impl Database {
         ones as f64 / (self.n_items() as f64 * self.n_trans as f64)
     }
 
+    /// Stable 64-bit FNV-1a content digest over the canonical encoding of
+    /// this database — the service layer's cache key and the warm process
+    /// fleet's "is this the database the workers already hold?" check.
+    ///
+    /// The hashed byte stream is exactly the [`crate::wire`] database
+    /// encoding (DESIGN.md §7): `n_items:u32 n_trans:u32 n_pos:u32
+    /// pos_idx:u32[] (occ_count:u32 occ_idx:u32[])^n_items`, all
+    /// little-endian, occurrence indices ascending. Two databases digest
+    /// equal iff they have identical columns, dimensions, and labels, so
+    /// the digest is invariant under a no-op round-trip through the text
+    /// I/O ([`write_transactions`] / [`read_transactions`]), provided no
+    /// trailing all-zero column is dropped by the reader's `max item + 1`
+    /// inference.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use parlamp::db::Database;
+    ///
+    /// let a = Database::from_transactions(2, &[vec![0], vec![0, 1]], &[true, false]);
+    /// let b = Database::from_transactions(2, &[vec![0], vec![0, 1]], &[true, false]);
+    /// let c = Database::from_transactions(2, &[vec![0], vec![0, 1]], &[true, true]);
+    /// assert_eq!(a.digest(), b.digest());
+    /// assert_ne!(a.digest(), c.digest(), "labels are part of the content");
+    /// ```
+    pub fn digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat_u32 = |v: u32| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat_u32(self.n_items() as u32);
+        eat_u32(self.n_trans as u32);
+        eat_u32(self.pos_mask.count());
+        for t in self.pos_mask.iter_ones() {
+            eat_u32(t as u32);
+        }
+        for col in &self.cols {
+            eat_u32(col.count());
+            for t in col.iter_ones() {
+                eat_u32(t as u32);
+            }
+        }
+        h
+    }
+
     /// Drop items whose support is outside `[min_sup, max_sup]`, returning
     /// the remapped database and the mapping `new item -> old item`.
     ///
@@ -221,5 +271,60 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn rejects_out_of_range_items() {
         Database::from_transactions(2, &[vec![5]], &[true]);
+    }
+
+    /// Pinned FNV-1a vectors: the digest is a wire-visible cache key, so
+    /// its value for known inputs must never drift across refactors.
+    #[test]
+    fn digest_matches_pinned_vectors() {
+        // Empty database: canonical bytes are 12 zero bytes
+        // (n_items=0, n_trans=0, n_pos=0).
+        let empty = Database::from_transactions(0, &[], &[]);
+        assert_eq!(empty.digest(), 0x5467_b0da_1d10_6495);
+        // 2 items × 3 transactions, trans = [[0], [0,1], []],
+        // labels = [+,−,+]: bytes are n_items=2, n_trans=3, n_pos=2,
+        // pos [0,2], item 0 count 2 idx [0,1], item 1 count 1 idx [1].
+        let tiny = Database::from_transactions(
+            2,
+            &[vec![0], vec![0, 1], vec![]],
+            &[true, false, true],
+        );
+        assert_eq!(tiny.digest(), 0x70ae_1262_178d_0b57);
+    }
+
+    #[test]
+    fn digest_separates_content_and_ignores_input_order() {
+        let a = Database::from_transactions(3, &[vec![0, 2], vec![1]], &[true, false]);
+        // Same content, items listed in a different horizontal order.
+        let b = Database::from_transactions(3, &[vec![2, 0], vec![1]], &[true, false]);
+        assert_eq!(a.digest(), b.digest());
+        // One extra occurrence, one flipped label, one extra (empty) column:
+        // all must change the digest.
+        let c = Database::from_transactions(3, &[vec![0, 2], vec![1, 2]], &[true, false]);
+        let d = Database::from_transactions(3, &[vec![0, 2], vec![1]], &[true, true]);
+        let e = Database::from_transactions(4, &[vec![0, 2], vec![1]], &[true, false]);
+        assert_ne!(a.digest(), c.digest());
+        assert_ne!(a.digest(), d.digest());
+        assert_ne!(a.digest(), e.digest());
+    }
+
+    #[test]
+    fn digest_invariant_under_io_roundtrip() {
+        let trans = vec![vec![0, 3], vec![1, 2], vec![0, 1, 2, 3], vec![2]];
+        let labels = vec![true, false, true, false];
+        // Item 3 (the highest id) occurs, so the reader's `max + 1`
+        // inference reconstructs the same column count.
+        let db = Database::from_transactions(4, &trans, &labels);
+        let dir = std::env::temp_dir().join(format!("parlamp_digest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tpath = dir.join("d.dat");
+        let lpath = dir.join("d.labels");
+        write_transactions(&tpath, &trans).unwrap();
+        write_labels(&lpath, &labels).unwrap();
+        let (n_items, got_trans) = read_transactions(&tpath).unwrap();
+        let got_labels = read_labels(&lpath).unwrap();
+        let back = Database::from_transactions(n_items, &got_trans, &got_labels);
+        assert_eq!(back.digest(), db.digest());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

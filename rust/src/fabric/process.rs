@@ -10,21 +10,32 @@
 //! `P(P−1)/2` a full mesh would need (file-descriptor passing between
 //! children is not required).
 //!
-//! Lifecycle of one phase:
+//! The fleet is **warm**: a worker's connection outlives any single phase,
+//! so one spawned fleet can serve many phases — and many jobs, which is
+//! what `parlamp serve` (DESIGN.md §9) is built on. Lifecycle:
 //!
 //! 1. the engine ([`crate::par::engine_process`]) binds a hub and spawns
-//!    `P` worker processes pointing at its socket;
-//! 2. each worker connects and sends `HELLO { rank }`; the hub answers with
-//!    `CONFIG` (the full [`RunSpec`], database included);
-//! 3. once all `P` ranks are registered the hub broadcasts `START` — the
-//!    startup barrier that guarantees no steal traffic targets an
-//!    unregistered rank;
-//! 4. workers run the ordinary [`crate::par::Worker`] loop against a
+//!    `P` worker processes pointing at its socket; each worker connects and
+//!    sends `HELLO { rank }`;
+//! 2. per phase, the hub broadcasts `CONFIG` (the [`PhaseSpec`] *plus* the
+//!    database) — or `RECONFIG` (the [`PhaseSpec`] alone) when the workers
+//!    already hold the right database — and then `START`, the barrier that
+//!    guarantees no steal traffic targets a rank that is not in the phase;
+//! 3. workers run the ordinary [`crate::par::Worker`] loop against a
 //!    [`ProcessMailbox`]; every [`Mailbox::send`] becomes a `RELAY` frame
 //!    the hub forwards;
-//! 5. on `Finish` each worker sends its `MERGE` (the phase-boundary
-//!    histogram/breakdown/counter payload) and blocks until `BYE`;
-//! 6. the hub collects `P` merges, broadcasts `BYE`, and the workers exit.
+//! 4. on `Finish` each worker sends its `MERGE` (the phase-boundary
+//!    histogram/breakdown/counter payload) and returns to
+//!    [`ProcessMailbox::await_phase`];
+//! 5. the hub collects `P` merges and either opens the next phase (step 2)
+//!    or broadcasts `BYE`, upon which the workers exit cleanly.
+//!
+//! Between phases no fencing is needed: a worker sends nothing after its
+//! `MERGE` until its next `START`, so once the hub holds all `P` merges,
+//! every late relay of the finished phase has already been forwarded —
+//! anything a worker receives *before* its next `CONFIG`/`RECONFIG` is
+//! stale and dropped, anything after belongs to the new phase and is
+//! buffered until `START`.
 //!
 //! Failure semantics: a worker that dies mid-run surfaces as a
 //! [`HubEvent::Gone`] (socket EOF or error) and the engine aborts the run;
@@ -42,14 +53,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::db::Database;
 use crate::wire::{
-    encode_config, read_frame, write_frame, Frame, RunSpec, WorkerMerge, MAX_FRAME_LEN,
+    encode_config, read_frame, write_frame, Frame, PhaseSpec, RunSpec, WorkerMerge,
+    MAX_FRAME_LEN,
 };
 
 use super::{Mailbox, Msg};
 
-/// How long either side waits for the other during the HELLO/CONFIG/START
-/// handshake before declaring the peer dead.
+/// How long the hub waits for a connecting worker's `HELLO` before
+/// declaring the peer dead.
 pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 
 // ---- worker (child) side ---------------------------------------------------
@@ -58,91 +71,76 @@ pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 #[derive(Clone, Debug, PartialEq, Eq)]
 enum Link {
     Open,
-    /// Orderly `BYE` received.
-    Bye,
-    /// Socket error or unexpected EOF; the run cannot complete.
+    /// Socket error, unexpected EOF, or protocol violation; the run cannot
+    /// complete.
     Lost(String),
 }
 
 enum ChildEvent {
     Deliver { src: usize, msg: Msg },
+    Config(Box<RunSpec>),
+    Reconfig(Box<PhaseSpec>),
+    Start,
     Bye,
     Lost(String),
 }
 
+/// What [`ProcessMailbox::await_phase`] hands the worker: the phase
+/// parameters, plus the database when the hub (re-)shipped one (`CONFIG`).
+/// `db: None` means "mine the database you already hold" (`RECONFIG`).
+pub struct PhaseStart {
+    pub phase: PhaseSpec,
+    pub db: Option<Database>,
+}
+
 /// The worker-process endpoint of the fabric: the [`Mailbox`] the ordinary
-/// [`crate::par::Worker`] state machine drives, plus the merge/shutdown
-/// handshake. Obtain one with [`connect`].
+/// [`crate::par::Worker`] state machine drives, plus the phase/merge
+/// handshake. Obtain one with [`connect`]; drive phases with
+/// [`ProcessMailbox::await_phase`].
 pub struct ProcessMailbox {
     rank: usize,
+    /// World size of the current phase (set by `await_phase`).
     size: usize,
     writer: UnixStream,
     rx: Receiver<ChildEvent>,
-    /// Messages pulled in by a blocking wait (or buffered during the
-    /// handshake) but not yet consumed by the worker's probe loop.
+    /// Messages pulled in by a blocking wait (or buffered between `CONFIG`
+    /// and `START`) but not yet consumed by the worker's probe loop.
     pending: VecDeque<(usize, Msg)>,
     link: Link,
     _reader: JoinHandle<()>,
 }
 
-/// Connect to the hub at `path` as `rank`: send `HELLO`, receive `CONFIG`,
-/// wait for the `START` barrier (buffering any early `RELAY` traffic), then
-/// hand the socket to a background reader thread.
-///
-/// Returns the run specification and the ready-to-poll mailbox.
-pub fn connect(path: &Path, rank: usize) -> Result<(RunSpec, ProcessMailbox)> {
+/// Connect to the hub at `path` as `rank`: send `HELLO` and hand the
+/// socket to a background reader thread. The worker then blocks in
+/// [`ProcessMailbox::await_phase`] until the hub opens a phase — there is
+/// deliberately no read timeout here, because a warm worker legitimately
+/// idles between jobs for as long as the daemon stays up; a dead hub
+/// surfaces as EOF.
+pub fn connect(path: &Path, rank: usize) -> Result<ProcessMailbox> {
     let mut stream = UnixStream::connect(path)
         .with_context(|| format!("connect to fabric hub at {}", path.display()))?;
-    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     write_frame(&mut stream, &Frame::Hello { rank: rank as u32 }).context("send HELLO")?;
-
-    let frame = read_frame(&mut stream)?.context("hub closed before CONFIG")?;
-    let spec = match frame {
-        Frame::Config(spec) => spec,
-        other => bail!("expected CONFIG from hub, got {}", other.name()),
-    };
-    ensure!(
-        (rank as u32) < spec.p,
-        "rank {rank} out of range for world size {}",
-        spec.p
-    );
-
-    // Await the START barrier. Workers that started earlier may already be
-    // sending us steal traffic; buffer it in arrival order.
-    let mut pending = VecDeque::new();
-    loop {
-        let frame = read_frame(&mut stream)?.context("hub closed before START")?;
-        match frame {
-            Frame::Start => break,
-            Frame::Relay { peer, msg } => pending.push_back((peer as usize, msg)),
-            other => bail!("expected START from hub, got {}", other.name()),
-        }
-    }
-    stream.set_read_timeout(None)?;
-
     let reader_stream = stream.try_clone().context("clone fabric socket")?;
     let (tx, rx) = channel();
     let reader = std::thread::spawn(move || reader_loop(reader_stream, tx));
-    let mb = ProcessMailbox {
+    Ok(ProcessMailbox {
         rank,
-        size: spec.p as usize,
+        size: 0,
         writer: stream,
         rx,
-        pending,
+        pending: VecDeque::new(),
         link: Link::Open,
         _reader: reader,
-    };
-    Ok((*spec, mb))
+    })
 }
 
 fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
     loop {
-        match read_frame(&mut stream) {
-            Ok(Some(Frame::Relay { peer, msg })) => {
-                if tx.send(ChildEvent::Deliver { src: peer as usize, msg }).is_err() {
-                    return; // mailbox dropped
-                }
-            }
+        let ev = match read_frame(&mut stream) {
+            Ok(Some(Frame::Relay { peer, msg })) => ChildEvent::Deliver { src: peer as usize, msg },
+            Ok(Some(Frame::Config(spec))) => ChildEvent::Config(spec),
+            Ok(Some(Frame::Reconfig(phase))) => ChildEvent::Reconfig(phase),
+            Ok(Some(Frame::Start)) => ChildEvent::Start,
             Ok(Some(Frame::Bye)) => {
                 let _ = tx.send(ChildEvent::Bye);
                 return;
@@ -162,16 +160,82 @@ fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
                 let _ = tx.send(ChildEvent::Lost(format!("{e:#}")));
                 return;
             }
+        };
+        if tx.send(ev).is_err() {
+            return; // mailbox dropped
         }
     }
 }
 
 impl ProcessMailbox {
+    /// Block until the hub opens the next phase (`CONFIG`/`RECONFIG`
+    /// followed by `START`) or dismisses the fleet (`BYE` → `None`).
+    ///
+    /// Stale deliveries from the finished phase — late relays the hub
+    /// forwarded before it had collected every merge — arrive strictly
+    /// before the phase frame and are dropped; deliveries between the
+    /// phase frame and `START` belong to the new phase (a peer that
+    /// started earlier may already be stealing) and are buffered.
+    pub fn await_phase(&mut self) -> Result<Option<PhaseStart>> {
+        if let Link::Lost(e) = &self.link {
+            bail!("fabric link lost: {e}");
+        }
+        self.pending.clear();
+        // 1. The phase frame (dropping stale traffic).
+        let start = loop {
+            match self.recv_event()? {
+                ChildEvent::Config(spec) => {
+                    let RunSpec { phase, db } = *spec;
+                    break PhaseStart { phase, db: Some(db) };
+                }
+                ChildEvent::Reconfig(phase) => break PhaseStart { phase: *phase, db: None },
+                ChildEvent::Deliver { .. } => continue, // stale: previous phase
+                ChildEvent::Bye => return Ok(None),
+                ChildEvent::Start => bail!("START from hub before CONFIG"),
+                ChildEvent::Lost(e) => {
+                    self.link = Link::Lost(e.clone());
+                    bail!("fabric link lost awaiting phase: {e}");
+                }
+            }
+        };
+        ensure!(
+            (self.rank as u32) < start.phase.p,
+            "rank {} out of range for world size {}",
+            self.rank,
+            start.phase.p
+        );
+        self.size = start.phase.p as usize;
+        // 2. The START barrier (buffering early next-phase traffic).
+        loop {
+            match self.recv_event()? {
+                ChildEvent::Start => break,
+                ChildEvent::Deliver { src, msg } => self.pending.push_back((src, msg)),
+                ChildEvent::Bye => bail!("BYE from hub between CONFIG and START"),
+                ChildEvent::Config(_) | ChildEvent::Reconfig(_) => {
+                    bail!("duplicate CONFIG from hub before START")
+                }
+                ChildEvent::Lost(e) => {
+                    self.link = Link::Lost(e.clone());
+                    bail!("fabric link lost awaiting START: {e}");
+                }
+            }
+        }
+        Ok(Some(start))
+    }
+
+    fn recv_event(&mut self) -> Result<ChildEvent> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("fabric reader thread exited"))
+    }
+
+    /// Absorb an event mid-phase, when only deliveries are legitimate.
     fn absorb(&mut self, ev: ChildEvent) -> Option<(usize, Msg)> {
         match ev {
             ChildEvent::Deliver { src, msg } => Some((src, msg)),
-            ChildEvent::Bye => {
-                self.link = Link::Bye;
+            ChildEvent::Config(_) | ChildEvent::Reconfig(_) | ChildEvent::Start
+            | ChildEvent::Bye => {
+                if self.link == Link::Open {
+                    self.link = Link::Lost("phase frame from hub mid-phase".into());
+                }
                 None
             }
             ChildEvent::Lost(e) => {
@@ -189,7 +253,7 @@ impl ProcessMailbox {
     pub fn lost(&self) -> Option<&str> {
         match &self.link {
             Link::Lost(e) => Some(e),
-            _ => None,
+            Link::Open => None,
         }
     }
 
@@ -212,34 +276,13 @@ impl ProcessMailbox {
         }
     }
 
-    /// Send the phase-boundary merge after the worker saw `Finish`.
+    /// Send the phase-boundary merge after the worker saw `Finish`. The
+    /// worker must send nothing else until its next phase starts — the
+    /// between-phase protocol relies on `MERGE` being the last frame of a
+    /// phase (see the module docs).
     pub fn send_merge(&mut self, merge: &WorkerMerge) -> Result<()> {
         write_frame(&mut self.writer, &Frame::Merge(Box::new(merge.clone())))
             .context("send MERGE to hub")
-    }
-
-    /// Block until the hub acknowledges the merge with `BYE` (late steal
-    /// traffic still in flight is drained and dropped).
-    pub fn wait_bye(&mut self, timeout: Duration) -> Result<()> {
-        let deadline = Instant::now() + timeout;
-        loop {
-            match &self.link {
-                Link::Bye => return Ok(()),
-                Link::Lost(e) => bail!("hub link lost while awaiting BYE: {e}"),
-                Link::Open => {}
-            }
-            let now = Instant::now();
-            ensure!(now < deadline, "timed out waiting for BYE from hub");
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(ev) => {
-                    let _ = self.absorb(ev); // drop late deliveries
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    bail!("fabric reader thread exited while awaiting BYE")
-                }
-            }
-        }
     }
 }
 
@@ -285,9 +328,12 @@ impl Mailbox for ProcessMailbox {
 pub enum HubEvent {
     /// A worker delivered its phase-boundary merge.
     Merge(WorkerMerge),
-    /// A worker's connection ended — orderly EOF after its merge and the
-    /// `BYE`, or a crash/protocol violation mid-run. The engine treats it as
-    /// fatal only for ranks that have not merged yet.
+    /// A worker's connection ended — orderly EOF after the `BYE`, or a
+    /// crash/protocol violation. Any `Gone` surfacing while a phase's
+    /// merges are being collected fails that phase (a warm fleet with a
+    /// missing rank cannot serve further phases either — the owner drops
+    /// and respawns it); orderly post-`BYE` EOFs arrive only after the
+    /// engine has stopped listening.
     Gone { rank: usize, detail: String },
 }
 
@@ -295,52 +341,38 @@ pub enum HubEvent {
 type Writers = Arc<Vec<Mutex<Option<UnixStream>>>>;
 
 /// Parent-side fabric endpoint: accepts worker connections, runs one route
-/// thread per worker, and surfaces merges. Owned and driven by
-/// [`crate::par::engine_process::run_process_with`].
+/// thread per worker, opens phases, and surfaces merges. Owned and driven
+/// by [`crate::par::engine_process::ProcessFleet`].
 pub struct Hub {
     listener: UnixListener,
-    /// Pre-encoded `CONFIG` frame (identical for every worker).
-    config_bytes: Arc<Vec<u8>>,
     p: usize,
     writers: Writers,
     events_tx: Sender<HubEvent>,
     events_rx: Receiver<HubEvent>,
     routers: Vec<JoinHandle<()>>,
     connected: usize,
-    started: bool,
 }
 
 impl Hub {
-    /// Bind the hub socket and freeze the run specification that every
-    /// connecting worker will receive.
-    pub fn bind(path: &Path, spec: &RunSpec) -> Result<Hub> {
+    /// Bind the hub socket for a world of `p` ranks.
+    pub fn bind(path: &Path, p: usize) -> Result<Hub> {
+        ensure!(p >= 1, "world size must be ≥ 1");
         let listener = UnixListener::bind(path)
             .with_context(|| format!("bind fabric hub socket {}", path.display()))?;
         listener.set_nonblocking(true).context("set hub listener non-blocking")?;
-        let p = spec.p as usize;
-        ensure!(p >= 1, "world size must be ≥ 1");
-        let config_bytes = encode_config(spec);
-        ensure!(
-            config_bytes.len() - 4 <= MAX_FRAME_LEN as usize,
-            "CONFIG frame ({} bytes) exceeds the {MAX_FRAME_LEN}-byte frame cap; \
-             the database is too large for the process fabric's wire format",
-            config_bytes.len() - 4
-        );
         let (events_tx, events_rx) = channel();
         Ok(Hub {
             listener,
-            config_bytes: Arc::new(config_bytes),
             p,
             writers: Arc::new((0..p).map(|_| Mutex::new(None)).collect()),
             events_tx,
             events_rx,
             routers: Vec::with_capacity(p),
             connected: 0,
-            started: false,
         })
     }
 
-    /// Ranks that have completed the HELLO/CONFIG handshake so far.
+    /// Ranks that have completed the `HELLO` handshake so far.
     pub fn connected(&self) -> usize {
         self.connected
     }
@@ -362,7 +394,6 @@ impl Hub {
             other => bail!("expected HELLO from worker, got {}", other.name()),
         };
         ensure!(rank < self.p, "HELLO rank {rank} out of range for world size {}", self.p);
-        stream.write_all(&self.config_bytes).context("send CONFIG")?;
         stream.set_read_timeout(None)?;
         let reader = stream.try_clone().context("clone worker socket")?;
         {
@@ -378,24 +409,53 @@ impl Hub {
         Ok(true)
     }
 
-    /// Release the startup barrier: broadcast `START` once every rank is
-    /// registered. Workers begin the phase on receipt.
-    pub fn start_all(&mut self) -> Result<()> {
+    /// Write pre-encoded frame bytes to every registered rank.
+    fn broadcast_bytes(&mut self, bytes: &[u8], what: &str) -> Result<()> {
         ensure!(
             self.connected == self.p,
-            "cannot start: {}/{} workers connected",
+            "cannot {what}: {}/{} workers connected",
             self.connected,
             self.p
         );
-        ensure!(!self.started, "phase already started");
         for rank in 0..self.p {
             let mut slot = self.writers[rank].lock().expect("writer lock");
-            let w = slot.as_mut().expect("connected worker has a writer");
-            write_frame(w, &Frame::Start)
-                .with_context(|| format!("send START to rank {rank}"))?;
+            let w = slot
+                .as_mut()
+                .with_context(|| format!("rank {rank} disconnected before {what}"))?;
+            w.write_all(bytes).with_context(|| format!("{what} to rank {rank}"))?;
         }
-        self.started = true;
         Ok(())
+    }
+
+    /// Open a phase by shipping the full run specification — phase
+    /// parameters *plus* database — to every rank. Use
+    /// [`Hub::broadcast_reconfig`] instead when the workers already hold
+    /// the database (the warm-fleet fast path).
+    pub fn broadcast_config(&mut self, spec: &RunSpec) -> Result<()> {
+        let bytes = encode_config(spec);
+        ensure!(
+            bytes.len() - 4 <= MAX_FRAME_LEN as usize,
+            "CONFIG frame ({} bytes) exceeds the {MAX_FRAME_LEN}-byte frame cap; \
+             the database is too large for the process fabric's wire format",
+            bytes.len() - 4
+        );
+        self.broadcast_bytes(&bytes, "send CONFIG")
+    }
+
+    /// Open a phase over the database the workers already hold: ships the
+    /// phase parameters only (a ~60-byte frame instead of the serialized
+    /// database).
+    pub fn broadcast_reconfig(&mut self, phase: &PhaseSpec) -> Result<()> {
+        let bytes = Frame::Reconfig(Box::new(phase.clone())).encode();
+        self.broadcast_bytes(&bytes, "send RECONFIG")
+    }
+
+    /// Release the phase barrier: broadcast `START`. Workers begin the
+    /// phase on receipt. Call only after [`Hub::broadcast_config`] /
+    /// [`Hub::broadcast_reconfig`] for this phase.
+    pub fn start_all(&mut self) -> Result<()> {
+        let bytes = Frame::Start.encode();
+        self.broadcast_bytes(&bytes, "send START")
     }
 
     /// Wait up to `timeout` for the next hub event. `Ok(None)` = timeout.
@@ -408,12 +468,14 @@ impl Hub {
         }
     }
 
-    /// Broadcast `BYE`. Send errors are ignored: a worker that already
-    /// exited has nothing left to acknowledge.
+    /// Broadcast `BYE`: no further phases; the fleet exits. Send errors are
+    /// ignored: a worker that already exited has nothing left to
+    /// acknowledge.
     pub fn broadcast_bye(&mut self) {
+        let bytes = Frame::Bye.encode();
         for slot in self.writers.iter() {
             if let Some(w) = slot.lock().expect("writer lock").as_mut() {
-                let _ = write_frame(w, &Frame::Bye);
+                let _ = w.write_all(&bytes);
             }
         }
     }
@@ -429,7 +491,8 @@ impl Hub {
 }
 
 /// Per-worker route thread: forward `RELAY` frames to their destination
-/// rank (stamping the source), surface `MERGE` and disconnection.
+/// rank (stamping the source), surface `MERGE` and disconnection. Lives for
+/// the whole fleet lifetime, spanning phases.
 fn route_loop(
     rank: usize,
     mut reader: UnixStream,
@@ -465,7 +528,8 @@ fn route_loop(
                 if tx.send(HubEvent::Merge(*m)).is_err() {
                     return; // engine gone
                 }
-                // Keep draining until EOF so late RELAYs are still routed.
+                // Keep reading: the next phase's relays and merge arrive on
+                // this same connection.
             }
             Ok(Some(other)) => {
                 gone(format!("unexpected {} frame", other.name()));
@@ -490,12 +554,10 @@ mod tests {
     use crate::fabric::BasicKind;
     use crate::par::worker::RunMode;
 
-    fn tiny_spec(p: u32) -> RunSpec {
-        let trans = vec![vec![0, 1], vec![1]];
-        let db = Database::from_transactions(2, &trans, &[true, false]);
-        RunSpec {
+    fn tiny_phase(p: u32, seed: u64) -> PhaseSpec {
+        PhaseSpec {
             p,
-            seed: 1,
+            seed,
             w: 1,
             l: 2,
             tree_arity: 3,
@@ -504,8 +566,13 @@ mod tests {
             probe_budget_units: 1000,
             dtd_interval_ns: 1000,
             mode: RunMode::Count { min_sup: 1 },
-            db,
         }
+    }
+
+    fn tiny_spec(p: u32) -> RunSpec {
+        let trans = vec![vec![0, 1], vec![1]];
+        let db = Database::from_transactions(2, &trans, &[true, false]);
+        RunSpec { phase: tiny_phase(p, 1), db }
     }
 
     fn test_sock(tag: &str) -> std::path::PathBuf {
@@ -527,59 +594,86 @@ mod tests {
         }
     }
 
-    /// Two in-process "workers" on real sockets: handshake, START barrier,
-    /// routed messages both ways, merge collection, BYE.
-    #[test]
-    fn hub_routes_between_two_workers() {
-        let sock = test_sock("route");
-        let mut hub = Hub::bind(&sock, &tiny_spec(2)).unwrap();
-
-        let spawn_worker = |rank: usize, sock: std::path::PathBuf| {
-            std::thread::spawn(move || -> Result<()> {
-                let (spec, mut mb) = connect(&sock, rank)?;
-                assert_eq!(spec.p, 2);
-                assert_eq!(mb.rank(), rank);
-                assert_eq!(mb.size(), 2);
-                let peer = 1 - rank;
-                mb.send(peer, Msg::WaveDown { t: rank as u64, lambda: 7 });
-                // await the peer's message
-                let deadline = Instant::now() + Duration::from_secs(10);
-                let got = loop {
-                    if let Some(got) = mb.try_recv() {
-                        break got;
-                    }
-                    assert!(Instant::now() < deadline, "no message from peer");
-                    mb.wait_for_msg(Duration::from_millis(10));
-                };
-                assert_eq!(got.0, peer, "source must be stamped by the hub");
-                assert!(matches!(got.1, Msg::WaveDown { lambda: 7, .. }));
-                mb.send_merge(&merge_for(rank as u32))?;
-                mb.wait_bye(Duration::from_secs(10))?;
-                Ok(())
-            })
-        };
-        let w0 = spawn_worker(0, sock.clone());
-        let w1 = spawn_worker(1, sock.clone());
-
+    /// Drive `try_accept` until all `want` workers have registered.
+    fn accept_all(hub: &mut Hub, want: usize) {
         let deadline = Instant::now() + Duration::from_secs(10);
-        while hub.connected() < 2 {
+        while hub.connected() < want {
             if !hub.try_accept().unwrap() {
                 assert!(Instant::now() < deadline, "workers never connected");
                 std::thread::sleep(Duration::from_millis(1));
             }
         }
-        hub.start_all().unwrap();
+    }
 
-        let mut merged = [false; 2];
-        while !(merged[0] && merged[1]) {
+    fn collect_merges(hub: &Hub, want: usize) {
+        let mut got = 0;
+        while got < want {
             match hub.recv_event(Duration::from_secs(10)).unwrap() {
-                Some(HubEvent::Merge(m)) => merged[m.rank as usize] = true,
+                Some(HubEvent::Merge(_)) => got += 1,
                 Some(HubEvent::Gone { rank, detail }) => {
                     panic!("rank {rank} gone before merge: {detail}")
                 }
                 None => panic!("timed out waiting for merges"),
             }
         }
+    }
+
+    /// Two in-process "workers" on real sockets, across TWO phases on the
+    /// same warm connections: phase 1 opens with `CONFIG` (database
+    /// shipped), phase 2 with `RECONFIG` (database reused). Messages are
+    /// routed both ways in each phase; `BYE` ends the loop.
+    #[test]
+    fn warm_hub_runs_two_phases_reusing_the_database() {
+        let sock = test_sock("route");
+        let mut hub = Hub::bind(&sock, 2).unwrap();
+
+        let spawn_worker = |rank: usize, sock: std::path::PathBuf| {
+            std::thread::spawn(move || -> Result<()> {
+                let mut mb = connect(&sock, rank)?;
+                let mut phases = 0u32;
+                while let Some(start) = mb.await_phase()? {
+                    assert_eq!(start.phase.p, 2);
+                    assert_eq!(mb.rank(), rank);
+                    assert_eq!(mb.size(), 2);
+                    match phases {
+                        0 => assert!(start.db.is_some(), "first phase must ship the db"),
+                        _ => assert!(start.db.is_none(), "reconfig must not re-ship the db"),
+                    }
+                    assert_eq!(start.phase.seed, u64::from(phases) + 1);
+                    let peer = 1 - rank;
+                    mb.send(peer, Msg::WaveDown { t: rank as u64, lambda: 7 + phases });
+                    // await the peer's message
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    let got = loop {
+                        if let Some(got) = mb.try_recv() {
+                            break got;
+                        }
+                        assert!(Instant::now() < deadline, "no message from peer");
+                        mb.wait_for_msg(Duration::from_millis(10));
+                    };
+                    assert_eq!(got.0, peer, "source must be stamped by the hub");
+                    assert!(
+                        matches!(got.1, Msg::WaveDown { lambda, .. } if lambda == 7 + phases)
+                    );
+                    mb.send_merge(&merge_for(rank as u32))?;
+                    phases += 1;
+                }
+                assert_eq!(phases, 2, "worker must have served both phases");
+                Ok(())
+            })
+        };
+        let w0 = spawn_worker(0, sock.clone());
+        let w1 = spawn_worker(1, sock.clone());
+
+        accept_all(&mut hub, 2);
+        // Phase 1: full CONFIG.
+        hub.broadcast_config(&tiny_spec(2)).unwrap();
+        hub.start_all().unwrap();
+        collect_merges(&hub, 2);
+        // Phase 2: RECONFIG over the resident database.
+        hub.broadcast_reconfig(&tiny_phase(2, 2)).unwrap();
+        hub.start_all().unwrap();
+        collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
         w1.join().unwrap().unwrap();
@@ -590,51 +684,47 @@ mod tests {
     #[test]
     fn give_tasks_roundtrip_through_hub() {
         let sock = test_sock("give");
-        let mut hub = Hub::bind(&sock, &tiny_spec(2)).unwrap();
+        let mut hub = Hub::bind(&sock, 2).unwrap();
         let tasks = vec![crate::fabric::WireTask { items: vec![3, 9], core: 9, support: 4 }];
         let sent = tasks.clone();
         let w0 = std::thread::spawn({
             let sock = sock.clone();
             move || -> Result<()> {
-                let (_, mut mb) = connect(&sock, 0)?;
-                mb.send(1, Msg::Basic { stamp: 3, kind: BasicKind::Give { tasks } });
-                mb.send_merge(&merge_for(0))?;
-                mb.wait_bye(Duration::from_secs(10))
+                let mut mb = connect(&sock, 0)?;
+                while let Some(_start) = mb.await_phase()? {
+                    mb.send(
+                        1,
+                        Msg::Basic { stamp: 3, kind: BasicKind::Give { tasks: tasks.clone() } },
+                    );
+                    mb.send_merge(&merge_for(0))?;
+                }
+                Ok(())
             }
         });
         let w1 = std::thread::spawn({
             let sock = sock.clone();
             move || -> Result<(usize, Msg)> {
-                let (_, mut mb) = connect(&sock, 1)?;
-                let deadline = Instant::now() + Duration::from_secs(10);
-                let got = loop {
-                    if let Some(got) = mb.try_recv() {
-                        break got;
-                    }
-                    ensure!(Instant::now() < deadline, "no GIVE arrived");
-                    mb.wait_for_msg(Duration::from_millis(10));
-                };
-                mb.send_merge(&merge_for(1))?;
-                mb.wait_bye(Duration::from_secs(10))?;
-                Ok(got)
+                let mut mb = connect(&sock, 1)?;
+                let mut got_msg = None;
+                while let Some(_start) = mb.await_phase()? {
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    let got = loop {
+                        if let Some(got) = mb.try_recv() {
+                            break got;
+                        }
+                        ensure!(Instant::now() < deadline, "no GIVE arrived");
+                        mb.wait_for_msg(Duration::from_millis(10));
+                    };
+                    got_msg = Some(got);
+                    mb.send_merge(&merge_for(1))?;
+                }
+                got_msg.context("no phase ran")
             }
         });
-        let deadline = Instant::now() + Duration::from_secs(10);
-        while hub.connected() < 2 {
-            if !hub.try_accept().unwrap() {
-                assert!(Instant::now() < deadline);
-                std::thread::sleep(Duration::from_millis(1));
-            }
-        }
+        accept_all(&mut hub, 2);
+        hub.broadcast_config(&tiny_spec(2)).unwrap();
         hub.start_all().unwrap();
-        let mut got = 0;
-        while got < 2 {
-            if let Some(HubEvent::Merge(_)) =
-                hub.recv_event(Duration::from_secs(10)).unwrap()
-            {
-                got += 1;
-            }
-        }
+        collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
         let (src, msg) = w1.join().unwrap().unwrap();
@@ -665,7 +755,7 @@ mod tests {
     #[test]
     fn hub_rejects_out_of_range_and_duplicate_ranks() {
         let sock = test_sock("badrank");
-        let mut hub = Hub::bind(&sock, &tiny_spec(2)).unwrap();
+        let mut hub = Hub::bind(&sock, 2).unwrap();
         // out-of-range rank
         let mut s = UnixStream::connect(&sock).unwrap();
         write_frame(&mut s, &Frame::Hello { rank: 9 }).unwrap();
@@ -680,5 +770,8 @@ mod tests {
         let err = accept_outcome(&mut hub).expect_err("duplicate rank must be rejected");
         assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
         assert_eq!(hub.connected(), 1);
+        // a phase broadcast with a missing rank fails loudly
+        let err = hub.broadcast_config(&tiny_spec(2)).expect_err("incomplete fleet");
+        assert!(format!("{err:#}").contains("1/2"), "{err:#}");
     }
 }

@@ -79,6 +79,18 @@ impl SupportHist {
         &self.counts
     }
 
+    /// Sparse form `(support, count)` with zero entries dropped, ascending
+    /// support — the wire representation used by the phase-boundary merge
+    /// and the service result payloads.
+    pub fn sparse(&self) -> Vec<(u32, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, &c)| (s as u32, c))
+            .collect()
+    }
+
     /// Total closed sets recorded.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()

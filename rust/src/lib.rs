@@ -23,6 +23,9 @@
 //!   LAMP procedure across any fabric backend (configures workers from
 //!   the GLB parameters, merges histograms/breakdowns/counters at the DTD
 //!   phase boundaries) and dispatches the phase-3 screen.
+//! - [`service`] — the serving layer: the `parlamp serve` daemon (warm
+//!   worker fleet, FIFO job queue, bounded result cache) and its typed
+//!   client (DESIGN.md §9).
 //! - [`runtime`] — PJRT loader for the AOT artifacts built under
 //!   `python/compile` (`make artifacts`); a stub without the `xla` feature.
 //! - [`datagen`] — synthetic GWAS / transcriptome workload generators.
@@ -41,6 +44,7 @@ pub mod lamp;
 pub mod lcm;
 pub mod par;
 pub mod runtime;
+pub mod service;
 pub mod stats;
 pub mod util;
 pub mod wire;

@@ -9,13 +9,23 @@
 //! serialization boundary — the configuration the paper's MPI runs assume,
 //! minus only the physical network.
 //!
-//! The parent (this module's `run_process*` entry points) is the
-//! coordinator side: it spawns and supervises the worker fleet, routes
-//! their traffic, collects the per-rank merges into a [`ParRunResult`], and
-//! tears the fleet down. The child side is [`worker_main`], reached through
-//! the hidden `__worker` CLI entry point — worker processes re-execute the
-//! `parlamp` binary (or whatever [`ProcessConfig::worker_exe`] /
-//! `$PARLAMP_WORKER_EXE` names, for callers that are not the binary).
+//! The central abstraction is the **warm fleet** ([`ProcessFleet`]): spawn
+//! the worker processes once, then run any number of phases — and any
+//! number of *jobs* — across them. A phase over a database the workers
+//! already hold ships only a `RECONFIG` (~60 bytes) instead of the
+//! serialized database; [`crate::db::Database::digest`] decides. This is
+//! what lets `parlamp serve` (DESIGN.md §9) answer a stream of requests
+//! without paying spawn + handshake + data-ship per request, and it also
+//! halves the data shipped by a one-shot coordinated run (phase 2 reuses
+//! phase 1's database).
+//!
+//! The parent (this module) is the coordinator side: it spawns and
+//! supervises the worker fleet, routes their traffic, collects the
+//! per-rank merges into a [`ParRunResult`], and tears the fleet down. The
+//! child side is [`worker_main`], reached through the hidden `__worker`
+//! CLI entry point — worker processes re-execute the `parlamp` binary (or
+//! whatever [`ProcessConfig::worker_exe`] / `$PARLAMP_WORKER_EXE` names,
+//! for callers that are not the binary).
 
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
@@ -28,7 +38,7 @@ use crate::db::Database;
 use crate::fabric::process::{connect, Hub, HubEvent};
 use crate::fabric::CommStats;
 use crate::lcm::SupportHist;
-use crate::wire::{RunSpec, WorkerMerge};
+use crate::wire::{PhaseSpec, RunSpec, WorkerMerge};
 
 use super::breakdown::Breakdown;
 use super::worker::{Poll, RunMode, Worker, WorkerConfig};
@@ -41,7 +51,7 @@ use super::ParRunResult;
 /// `CARGO_BIN_EXE_parlamp`.
 pub const WORKER_EXE_ENV: &str = "PARLAMP_WORKER_EXE";
 
-/// Knobs for one process-engine phase: the [`super::engine_thread::ThreadConfig`]
+/// Knobs for process-engine phases: the [`super::engine_thread::ThreadConfig`]
 /// surface plus process-spawn controls.
 #[derive(Clone, Debug)]
 pub struct ProcessConfig {
@@ -119,7 +129,7 @@ impl Fleet {
     }
 
     /// Non-blocking liveness check: a worker that already exited while the
-    /// run is still in progress is a fatal fault.
+    /// fleet is still in service is a fatal fault.
     fn check(&mut self) -> Result<()> {
         for (rank, child) in self.children.iter_mut().enumerate() {
             if self.reaped[rank] {
@@ -158,7 +168,8 @@ impl Drop for Fleet {
     }
 }
 
-/// Remove the per-run socket directory when the run ends, however it ends.
+/// Remove the per-fleet socket directory when the fleet ends, however it
+/// ends.
 struct SockDir(PathBuf);
 
 impl Drop for SockDir {
@@ -190,88 +201,147 @@ fn worker_exe(cfg: &ProcessConfig) -> Result<PathBuf> {
     std::env::current_exe().context("resolve current executable for worker spawn")
 }
 
-/// Run one phase on worker processes with explicit GLB/DTD knobs (the
-/// coordinator's entry point). Blocks until every rank's phase-boundary
-/// merge arrived, the fleet exited cleanly, and the socket directory is
-/// gone.
-pub fn run_process_with(db: &Database, mode: RunMode, cfg: &ProcessConfig) -> Result<ParRunResult> {
-    let p = cfg.p;
-    ensure!(p >= 1, "world size must be ≥ 1");
-    let (_sock_dir, sock) = fresh_sock_path()?;
-    // The spec (and its database copy) only feeds the CONFIG encoder; scope
-    // it so the copy is transient instead of held for the whole phase.
-    let mut hub = {
-        let spec = RunSpec {
-            p: p as u32,
-            seed: cfg.seed,
+/// A spawned, handshaken, reusable worker fleet: the warm half of the
+/// process engine. One [`ProcessFleet`] serves any number of phases (and
+/// jobs); the database ships to the workers only when it differs from the
+/// one they already hold (keyed by [`Database::digest`]).
+///
+/// On error the fleet is *poisoned* — drop it (children are killed, the
+/// socket directory is removed) and spawn a fresh one; the daemon's
+/// scheduler does exactly that. On the success path, call
+/// [`ProcessFleet::shutdown`] for an orderly `BYE` + reap.
+pub struct ProcessFleet {
+    hub: Hub,
+    fleet: Fleet,
+    _sock_dir: SockDir,
+    p: usize,
+    /// Digest of the database currently resident on every worker.
+    resident_db: Option<u64>,
+}
+
+impl ProcessFleet {
+    /// Bind a hub socket, spawn `cfg.p` worker processes, and block until
+    /// every rank has completed the `HELLO` handshake (or
+    /// `cfg.spawn_timeout` passes / a worker dies).
+    pub fn spawn(cfg: &ProcessConfig) -> Result<ProcessFleet> {
+        let p = cfg.p;
+        ensure!(p >= 1, "world size must be ≥ 1");
+        let (sock_dir, sock) = fresh_sock_path()?;
+        let mut hub = Hub::bind(&sock, p)?;
+        let exe = worker_exe(cfg)?;
+        let mut fleet = Fleet::spawn(&exe, &sock, p)?;
+        let deadline = Instant::now() + cfg.spawn_timeout;
+        while hub.connected() < p {
+            fleet.check().context("while assembling the worker fleet")?;
+            if !hub.try_accept()? {
+                ensure!(
+                    Instant::now() < deadline,
+                    "timed out assembling worker fleet ({}/{p} connected)",
+                    hub.connected()
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        Ok(ProcessFleet { hub, fleet, _sock_dir: sock_dir, p, resident_db: None })
+    }
+
+    /// World size.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Run one phase across the warm fleet and block until every rank's
+    /// phase-boundary merge arrived. Ships the database only when its
+    /// digest differs from what the workers hold (`CONFIG` vs `RECONFIG`).
+    pub fn run_phase(
+        &mut self,
+        db: &Database,
+        mode: RunMode,
+        cfg: &ProcessConfig,
+        seed: u64,
+    ) -> Result<ParRunResult> {
+        let phase = PhaseSpec {
+            p: self.p as u32,
+            seed,
             w: cfg.w as u32,
             l: cfg.l as u32,
             tree_arity: cfg.tree_arity as u32,
             steal: cfg.steal,
-            preprocess: cfg.preprocess && p > 1,
+            preprocess: cfg.preprocess && self.p > 1,
             probe_budget_units: cfg.probe_budget_units,
             dtd_interval_ns: cfg.dtd_interval_ns,
             mode,
-            db: db.clone(),
         };
-        Hub::bind(&sock, &spec)?
-    };
-    let exe = worker_exe(cfg)?;
-    let mut fleet = Fleet::spawn(&exe, &sock, p)?;
-
-    // Fleet assembly: accept handshakes while watching for early deaths.
-    let deadline = Instant::now() + cfg.spawn_timeout;
-    while hub.connected() < p {
-        fleet.check().context("while assembling the worker fleet")?;
-        if !hub.try_accept()? {
-            ensure!(
-                Instant::now() < deadline,
-                "timed out assembling worker fleet ({}/{p} connected)",
-                hub.connected()
-            );
-            std::thread::sleep(Duration::from_millis(2));
+        let digest = db.digest();
+        if self.resident_db == Some(digest) {
+            self.hub.broadcast_reconfig(&phase)?;
+        } else {
+            // Invalidate first: a partial broadcast failure leaves the fleet
+            // in a mixed state, and the fleet is poisoned anyway on error.
+            self.resident_db = None;
+            self.hub.broadcast_config(&RunSpec { phase, db: db.clone() })?;
+            self.resident_db = Some(digest);
         }
-    }
-    hub.start_all()?;
+        self.hub.start_all()?;
 
-    // Collect one merge per rank; any disconnect before a rank's merge is
-    // fatal for the run.
-    let mut merges: Vec<Option<WorkerMerge>> = vec![None; p];
-    let mut collected = 0usize;
-    while collected < p {
-        match hub.recv_event(Duration::from_millis(200))? {
-            Some(HubEvent::Merge(m)) => {
-                let rank = m.rank as usize;
-                ensure!(rank < p, "merge from out-of-range rank {rank}");
-                ensure!(merges[rank].is_none(), "duplicate merge from rank {rank}");
-                // The wire layer validates counts, not value ranges; check
-                // supports here so a corrupt MERGE errors instead of
-                // panicking collect_merges' histogram indexing.
-                let max_sup = db.n_trans() as u32;
-                for &(s, _) in &m.hist {
-                    ensure!(
-                        s <= max_sup,
-                        "merge from rank {rank} reports support {s} > N = {max_sup}"
-                    );
+        // Collect one merge per rank; any disconnect before a rank's merge
+        // is fatal for the phase (and poisons the fleet).
+        let mut merges: Vec<Option<WorkerMerge>> = vec![None; self.p];
+        let mut collected = 0usize;
+        while collected < self.p {
+            match self.hub.recv_event(Duration::from_millis(200))? {
+                Some(HubEvent::Merge(m)) => {
+                    let rank = m.rank as usize;
+                    ensure!(rank < self.p, "merge from out-of-range rank {rank}");
+                    ensure!(merges[rank].is_none(), "duplicate merge from rank {rank}");
+                    // The wire layer validates counts, not value ranges;
+                    // check supports here so a corrupt MERGE errors instead
+                    // of panicking collect_merges' histogram indexing.
+                    let max_sup = db.n_trans() as u32;
+                    for &(s, _) in &m.hist {
+                        ensure!(
+                            s <= max_sup,
+                            "merge from rank {rank} reports support {s} > N = {max_sup}"
+                        );
+                    }
+                    merges[rank] = Some(m);
+                    collected += 1;
                 }
-                merges[rank] = Some(m);
-                collected += 1;
-            }
-            Some(HubEvent::Gone { rank, detail }) => {
-                if merges[rank].is_none() {
+                Some(HubEvent::Gone { rank, detail }) => {
                     bail!("worker rank {rank} disconnected before its merge: {detail}");
                 }
+                None => self.fleet.check()?, // idle tick: catch crashed workers
             }
-            None => fleet.check()?, // idle tick: catch crashed workers
         }
+
+        let merges: Vec<WorkerMerge> = merges.into_iter().map(Option::unwrap).collect();
+        Ok(collect_merges(db, &merges, mode))
     }
 
-    hub.broadcast_bye();
-    fleet.wait_all()?;
-    hub.join();
+    /// Orderly teardown: `BYE` the fleet, reap every worker (non-zero exit
+    /// is an error), join the route threads, remove the socket directory.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.hub.broadcast_bye();
+        self.fleet.wait_all()?;
+        self.hub.join();
+        Ok(())
+    }
+}
 
-    let merges: Vec<WorkerMerge> = merges.into_iter().map(Option::unwrap).collect();
-    Ok(collect_merges(db, &merges, mode))
+/// Run one phase on worker processes with explicit GLB/DTD knobs: spawn a
+/// fleet, run, tear down. Kept for one-shot callers and tests; anything
+/// running more than one phase should hold a [`ProcessFleet`] (the
+/// coordinator and the `parlamp serve` daemon both do).
+pub fn run_process_with(db: &Database, mode: RunMode, cfg: &ProcessConfig) -> Result<ParRunResult> {
+    let mut fleet = ProcessFleet::spawn(cfg)?;
+    match fleet.run_phase(db, mode, cfg, cfg.seed) {
+        Ok(result) => {
+            fleet.shutdown()?;
+            Ok(result)
+        }
+        // Drop the poisoned fleet: children are killed, nothing leaks.
+        Err(e) => Err(e),
+    }
 }
 
 /// Merge the per-rank wire payloads into a [`ParRunResult`] — the
@@ -311,77 +381,85 @@ fn collect_merges(db: &Database, merges: &[WorkerMerge], mode: RunMode) -> ParRu
 }
 
 /// Child entry point behind the hidden `__worker` CLI command: join the hub
-/// named by `--socket` as `--worker-rank`, run the ordinary Fig. 5 worker
-/// loop over the process fabric, ship the merge, and wait for `BYE`.
+/// named by `--socket` as `--worker-rank`, then serve phases until `BYE` —
+/// for each one, run the ordinary Fig. 5 worker loop over the process
+/// fabric and ship the merge. The database arrives with the first phase
+/// (`CONFIG`) and is retained across `RECONFIG` phases.
 pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
+    // Terminal Ctrl-C hits the whole foreground process group; a worker
+    // that died to it would abort the supervisor's graceful drain. Workers
+    // are supervised — they exit on fabric EOF or `BYE` — so SIGINT is
+    // ignored here (SIGTERM keeps its default for targeted kills).
+    crate::util::sig::ignore_interrupts();
     let sock = args.require("socket")?;
     let rank: usize = args
         .require("worker-rank")?
         .parse()
         .context("--worker-rank must be a non-negative integer")?;
-    let (spec, mut mb) = connect(Path::new(sock), rank)?;
+    let mut mb = connect(Path::new(sock), rank)?;
+    let mut resident: Option<Database> = None;
 
-    let wc = WorkerConfig {
-        rank,
-        p: spec.p as usize,
-        w: spec.w as usize,
-        l: spec.l as usize,
-        tree_arity: spec.tree_arity as usize,
-        steal: spec.steal,
-        preprocess: spec.preprocess,
-        mode: spec.mode,
-        probe_budget_units: spec.probe_budget_units,
-        dtd_interval_ns: spec.dtd_interval_ns,
-        ns_per_unit: None, // real time
-        seed: spec.seed,
-    };
-    let db = spec.db;
-    let mut worker = Worker::new(&db, wc);
-
-    // The same scheduling loop as the thread engine: blocking waits cap at
-    // 200 µs so DTD waves keep flowing.
-    let t0 = Instant::now();
-    loop {
-        if let Some(err) = mb.lost() {
-            bail!("rank {rank}: fabric link lost mid-run: {err}");
+    while let Some(start) = mb.await_phase()? {
+        if let Some(db) = start.db {
+            resident = Some(db);
         }
-        let now_ns = t0.elapsed().as_nanos() as u64;
-        match worker.poll(&mut mb, now_ns) {
-            Poll::Busy { .. } => {}
-            Poll::Idle { wake_at } => {
-                let cap = Duration::from_micros(200);
-                let d = match wake_at {
-                    Some(t) => Duration::from_nanos(t.saturating_sub(now_ns)).min(cap),
-                    None => cap,
-                };
-                if !d.is_zero() {
-                    mb.wait_for_msg(d);
-                }
+        let db = resident
+            .as_ref()
+            .context("hub opened a RECONFIG phase before ever shipping a database")?;
+        let spec = start.phase;
+        let wc = WorkerConfig {
+            rank,
+            p: spec.p as usize,
+            w: spec.w as usize,
+            l: spec.l as usize,
+            tree_arity: spec.tree_arity as usize,
+            steal: spec.steal,
+            preprocess: spec.preprocess,
+            mode: spec.mode,
+            probe_budget_units: spec.probe_budget_units,
+            dtd_interval_ns: spec.dtd_interval_ns,
+            ns_per_unit: None, // real time
+            seed: spec.seed,
+        };
+        let mut worker = Worker::new(db, wc);
+
+        // The same scheduling loop as the thread engine: blocking waits cap
+        // at 200 µs so DTD waves keep flowing.
+        let t0 = Instant::now();
+        loop {
+            if let Some(err) = mb.lost() {
+                bail!("rank {rank}: fabric link lost mid-run: {err}");
             }
-            Poll::Finished => break,
+            let now_ns = t0.elapsed().as_nanos() as u64;
+            match worker.poll(&mut mb, now_ns) {
+                Poll::Busy { .. } => {}
+                Poll::Idle { wake_at } => {
+                    let cap = Duration::from_micros(200);
+                    let d = match wake_at {
+                        Some(t) => Duration::from_nanos(t.saturating_sub(now_ns)).min(cap),
+                        None => cap,
+                    };
+                    if !d.is_zero() {
+                        mb.wait_for_msg(d);
+                    }
+                }
+                Poll::Finished => break,
+            }
         }
-    }
-    let makespan_ns = t0.elapsed().as_nanos() as u64;
+        let makespan_ns = t0.elapsed().as_nanos() as u64;
 
-    let hist = worker
-        .hist()
-        .counts()
-        .iter()
-        .enumerate()
-        .filter(|(_, &c)| c > 0)
-        .map(|(s, &c)| (s as u32, c))
-        .collect();
-    let merge = WorkerMerge {
-        rank: rank as u32,
-        hist,
-        closed_count: worker.closed_count(),
-        work_units: worker.work_units(),
-        breakdown: worker.breakdown,
-        comm: worker.comm,
-        makespan_ns,
-    };
-    mb.send_merge(&merge)?;
-    mb.wait_bye(Duration::from_secs(30))?;
+        let hist = worker.hist().sparse();
+        let merge = WorkerMerge {
+            rank: rank as u32,
+            hist,
+            closed_count: worker.closed_count(),
+            work_units: worker.work_units(),
+            breakdown: worker.breakdown,
+            comm: worker.comm,
+            makespan_ns,
+        };
+        mb.send_merge(&merge)?;
+    }
     Ok(())
 }
 

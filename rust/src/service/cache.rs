@@ -1,0 +1,175 @@
+//! The daemon's bounded in-memory result cache.
+//!
+//! Keyed by `(database digest, α, GlbParams, screen mode)` — everything
+//! that determines a job's *result*. The steal-randomness seed is
+//! deliberately excluded: results are seed-invariant (only communication
+//! and timing statistics differ), so two submissions that differ only in
+//! seed are the same computation. Eviction is least-recently-*used* (a hit
+//! refreshes the entry), capacity is fixed at construction, and a repeat
+//! submission that hits returns the stored result without the workers
+//! receiving a single frame.
+//!
+//! What is stored is the wire-ready [`JobOutcome`] view of the finished
+//! [`CoordinatorRun`] (λ*, correction factor, phase-2 histogram,
+//! significant set, makespans), prebuilt with `from_cache = true` and held
+//! behind an [`Arc`]: a hit under the daemon's global state lock is one
+//! `Arc` clone — never a `CoordinatorRun` deep copy or a histogram
+//! rebuild, and entries do not retain the run's per-rank breakdowns or
+//! dense histograms that nothing on the serving path reads.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::{CoordinatorRun, GlbParams, ScreenMode};
+use crate::wire::service::JobOutcome;
+
+/// What determines a mining job's result (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`crate::db::Database::digest`] of the submitted database.
+    pub digest: u64,
+    /// `f64::to_bits` of α (bit-exact: 0.05 and 0.05000…1 are different
+    /// computations, and NaN never reaches here — the CLI parses α).
+    pub alpha_bits: u64,
+    pub glb: GlbParams,
+    pub screen: ScreenMode,
+}
+
+impl CacheKey {
+    pub fn new(digest: u64, alpha: f64, glb: GlbParams, screen: ScreenMode) -> CacheKey {
+        CacheKey { digest, alpha_bits: alpha.to_bits(), glb, screen }
+    }
+}
+
+/// Bounded LRU map from [`CacheKey`] to the finished result.
+#[derive(Debug)]
+pub struct ResultCache {
+    cap: usize,
+    map: HashMap<CacheKey, Arc<JobOutcome>>,
+    /// Keys from least- to most-recently used.
+    order: Vec<CacheKey>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResultCache {
+    /// A cache holding at most `cap` results (`cap` ≥ 1).
+    pub fn new(cap: usize) -> ResultCache {
+        ResultCache { cap: cap.max(1), map: HashMap::new(), order: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    fn touch(&mut self, key: &CacheKey) {
+        if let Some(i) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(i);
+            self.order.push(k);
+        }
+    }
+
+    /// Look up a result, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<JobOutcome>> {
+        match self.map.get(key).cloned() {
+            Some(outcome) => {
+                self.hits += 1;
+                self.touch(key);
+                Some(outcome)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a finished run (its cached wire outcome is built here, once,
+    /// with `from_cache = true`), evicting the least-recently-used entry
+    /// at capacity.
+    pub fn insert(&mut self, key: CacheKey, run: &CoordinatorRun) {
+        let outcome = Arc::new(JobOutcome::from_run(run, true));
+        if self.map.insert(key, outcome).is_some() {
+            self.touch(&key);
+            return;
+        }
+        self.order.push(key);
+        while self.map.len() > self.cap {
+            let evict = self.order.remove(0);
+            self.map.remove(&evict);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Coordinator};
+    use crate::datagen::{generate_gwas, GwasSpec};
+
+    fn tiny_run() -> CoordinatorRun {
+        let spec = GwasSpec { n_snps: 40, n_individuals: 30, n_pos: 8, ..GwasSpec::small(3) };
+        let (db, _) = generate_gwas(&spec);
+        Coordinator::new(0.05)
+            .with_screen(ScreenMode::Native)
+            .run(&db, &Backend::sim(2))
+            .expect("tiny run")
+    }
+
+    fn key(digest: u64) -> CacheKey {
+        CacheKey::new(digest, 0.05, GlbParams::default(), ScreenMode::Native)
+    }
+
+    #[test]
+    fn hit_miss_and_lru_eviction() {
+        let run = tiny_run();
+        let mut c = ResultCache::new(2);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), &run);
+        c.insert(key(2), &run);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), &run);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(2)).is_none(), "LRU entry must have been evicted");
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+        let (hits, misses) = c.stats();
+        assert_eq!((hits, misses), (4, 2));
+        // Re-inserting an existing key refreshes, never grows.
+        c.insert(key(1), &run);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn cached_outcome_is_prebuilt_and_shared() {
+        let run = tiny_run();
+        let mut c = ResultCache::new(2);
+        c.insert(key(1), &run);
+        let outcome = c.get(&key(1)).expect("hit");
+        assert!(outcome.from_cache, "cached outcome must be pre-marked");
+        assert_eq!(outcome.lambda_final, run.result.lambda_final);
+        assert_eq!(outcome.correction_factor, run.result.correction_factor);
+        // A second hit hands out the same allocation, not a deep copy.
+        let again = c.get(&key(1)).expect("hit");
+        assert!(Arc::ptr_eq(&outcome, &again));
+    }
+
+    #[test]
+    fn key_separates_every_component() {
+        let base = key(1);
+        assert_ne!(base, key(2));
+        assert_ne!(base, CacheKey::new(1, 0.01, GlbParams::default(), ScreenMode::Native));
+        assert_ne!(base, CacheKey::new(1, 0.05, GlbParams::naive(), ScreenMode::Native));
+        assert_ne!(base, CacheKey::new(1, 0.05, GlbParams::default(), ScreenMode::Auto));
+    }
+}

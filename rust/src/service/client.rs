@@ -1,0 +1,86 @@
+//! Client side of the `parlamp serve` protocol: connect, speak frames,
+//! surface typed results. Used by the `parlamp submit|status|results|
+//! shutdown` subcommands and by the integration tests.
+
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::wire::service::{JobOutcome, JobSpec, JobState};
+use crate::wire::{read_frame, write_frame, Frame};
+
+/// One connection to a running daemon. A connection can carry any number
+/// of requests; each request is one frame out, one frame back.
+pub struct Client {
+    stream: UnixStream,
+}
+
+impl Client {
+    /// Connect to the daemon listening at `path`.
+    pub fn connect(path: &Path) -> Result<Client> {
+        let stream = UnixStream::connect(path).with_context(|| {
+            format!("connect to parlamp daemon at {} (is `parlamp serve` running?)", path.display())
+        })?;
+        Ok(Client { stream })
+    }
+
+    fn call(&mut self, frame: &Frame) -> Result<Frame> {
+        write_frame(&mut self.stream, frame)
+            .with_context(|| format!("send {} to daemon", frame.name()))?;
+        read_frame(&mut self.stream)?.context("daemon closed the connection without replying")
+    }
+
+    /// Submit a job; returns the assigned job id.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<u64> {
+        match self.call(&Frame::Submit(Box::new(spec)))? {
+            Frame::Accepted { job_id } => Ok(job_id),
+            Frame::Status { report: Some(state), .. } => {
+                bail!("daemon rejected the submission: {state}")
+            }
+            other => bail!("expected ACCEPTED from daemon, got {}", other.name()),
+        }
+    }
+
+    /// Query a job's lifecycle state.
+    pub fn status(&mut self, job_id: u64) -> Result<JobState> {
+        match self.call(&Frame::Status { job_id, report: None })? {
+            Frame::Status { job_id: got, report: Some(state) } if got == job_id => Ok(state),
+            other => bail!("expected STATUS report from daemon, got {}", other.name()),
+        }
+    }
+
+    /// Fetch a job's outcome. The daemon blocks the reply until the job is
+    /// terminal, so this call waits with it; a job that failed, was
+    /// cancelled, or is unknown surfaces as an error carrying its state.
+    pub fn results(&mut self, job_id: u64) -> Result<JobOutcome> {
+        match self.call(&Frame::JobResult { job_id, report: None })? {
+            Frame::JobResult { job_id: got, report: Some(outcome) } if got == job_id => {
+                Ok(*outcome)
+            }
+            Frame::Status { report: Some(state), .. } => {
+                bail!("job {job_id} has no results: {state}")
+            }
+            other => bail!("expected RESULT from daemon, got {}", other.name()),
+        }
+    }
+
+    /// Remove a pending job from the queue; returns the job's state after
+    /// the attempt (`Cancelled` iff it was still pending).
+    pub fn cancel(&mut self, job_id: u64) -> Result<JobState> {
+        match self.call(&Frame::Cancel { job_id })? {
+            Frame::Status { job_id: got, report: Some(state) } if got == job_id => Ok(state),
+            other => bail!("expected STATUS report from daemon, got {}", other.name()),
+        }
+    }
+
+    /// Ask the daemon to drain its queue and exit. Returns once the daemon
+    /// acknowledged (it may still be draining; wait on process exit or
+    /// socket removal for full teardown).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&Frame::Shutdown)? {
+            Frame::Shutdown => Ok(()),
+            other => bail!("expected SHUTDOWN ack from daemon, got {}", other.name()),
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The serving layer (DESIGN.md §9): `parlamp` as a long-running mining
+//! service instead of a one-shot batch run.
+//!
+//! Every earlier entry point pays the full startup bill per request —
+//! spawn a worker fleet, handshake, ship the database, mine, tear down.
+//! The paper's own deployment story is the opposite: a *persistent* set of
+//! cores fed work continuously (§4), and the task-parallel literature
+//! (PAPERS.md) identifies repeated runtime re-initialization as a dominant
+//! cost when mining requests arrive as a stream. This module is where that
+//! lives:
+//!
+//! - [`server::serve`] — the daemon: binds a Unix-domain socket, spawns
+//!   the process-fabric worker fleet **once** ([`crate::par::ProcessFleet`])
+//!   and keeps it warm, schedules queued jobs one at a time across it, and
+//!   drains gracefully on `SHUTDOWN` or `SIGTERM`;
+//! - [`queue::JobQueue`] — the FIFO of pending jobs (`CANCEL` removes
+//!   exactly the targeted pending entry);
+//! - [`cache::ResultCache`] — a bounded LRU keyed by
+//!   `(database digest, α, GlbParams, screen mode)`; a repeat submission
+//!   is answered without the workers receiving a single frame;
+//! - [`client::Client`] — the typed client the `parlamp
+//!   submit|status|results|shutdown` subcommands drive.
+//!
+//! The wire grammar of the job frames lives in [`crate::wire::service`];
+//! the daemon and its clients share [`crate::wire`]'s framing, bounds
+//! checking, and versioning.
+
+pub mod cache;
+pub mod client;
+pub mod queue;
+pub mod server;
+
+pub use cache::{CacheKey, ResultCache};
+pub use client::Client;
+pub use queue::JobQueue;
+pub use server::{serve, ServeConfig};

@@ -1,0 +1,138 @@
+//! The daemon's FIFO job queue.
+//!
+//! Deliberately minimal: job *records* (spec, state, outcome) live in the
+//! server's job table; the queue holds only the ids of jobs awaiting the
+//! scheduler, in submission order. `CANCEL` removes exactly the targeted
+//! pending id and nothing else — the property test below pins both the
+//! FIFO discipline and that surgical removal.
+
+use std::collections::VecDeque;
+
+/// FIFO queue of pending job ids.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    q: VecDeque<u64>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// Append a job at the tail.
+    pub fn push(&mut self, id: u64) {
+        self.q.push_back(id);
+    }
+
+    /// Take the next job to run (submission order).
+    pub fn pop(&mut self) -> Option<u64> {
+        self.q.pop_front()
+    }
+
+    /// Remove a pending job. Returns whether it was present; every other
+    /// entry keeps its relative order.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.q.iter().position(|&x| x == id) {
+            Some(i) => {
+                let _ = self.q.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// 0-based distance from the head (0 = next to run).
+    pub fn position(&self, id: u64) -> Option<usize> {
+        self.q.iter().position(|&x| x == id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn fifo_and_position() {
+        let mut q = JobQueue::new();
+        assert!(q.is_empty());
+        q.push(10);
+        q.push(11);
+        q.push(12);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.position(11), Some(1));
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.position(11), Some(0));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), Some(12));
+        assert_eq!(q.pop(), None);
+    }
+
+    /// Random interleavings of push/cancel/pop against a model `Vec`:
+    /// FIFO order is preserved, and cancel removes exactly the targeted
+    /// pending job (present → removed and true; absent → false and
+    /// untouched).
+    #[test]
+    fn queue_matches_model_under_random_ops() {
+        forall("job queue vs model", 128, |rng| {
+            let mut q = JobQueue::new();
+            let mut model: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..rng.index(64) {
+                match rng.index(4) {
+                    // push (weighted: half the ops)
+                    0 | 1 => {
+                        q.push(next_id);
+                        model.push(next_id);
+                        next_id += 1;
+                    }
+                    // pop
+                    2 => {
+                        let want = if model.is_empty() { None } else { Some(model.remove(0)) };
+                        if q.pop() != want {
+                            return Err(format!("pop mismatch, want {want:?}"));
+                        }
+                    }
+                    // cancel a random id — sometimes pending, sometimes
+                    // already popped or never issued
+                    _ => {
+                        let id = rng.below(next_id.max(1) + 2);
+                        let want = model.iter().position(|&x| x == id);
+                        if let Some(i) = want {
+                            model.remove(i);
+                        }
+                        if q.cancel(id) != want.is_some() {
+                            return Err(format!("cancel({id}) presence mismatch"));
+                        }
+                    }
+                }
+                if q.len() != model.len() {
+                    return Err(format!("len {} != model {}", q.len(), model.len()));
+                }
+                for (i, &id) in model.iter().enumerate() {
+                    if q.position(id) != Some(i) {
+                        return Err(format!("order drift at {i} (id {id})"));
+                    }
+                }
+            }
+            // Drain: remaining pops must replay the model exactly.
+            for &id in &model {
+                if q.pop() != Some(id) {
+                    return Err(format!("drain mismatch at id {id}"));
+                }
+            }
+            if q.pop().is_some() {
+                return Err("queue not empty after drain".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,459 @@
+//! The `parlamp serve` daemon (DESIGN.md §9).
+//!
+//! One process owns a warm [`ProcessFleet`] for its whole lifetime and
+//! answers job frames over a Unix-domain socket:
+//!
+//! - a **listener thread** accepts client connections and spawns one
+//!   handler thread per connection;
+//! - handler threads translate frames into operations on the shared state
+//!   (submit → job table + FIFO queue, status/result/cancel → job table)
+//!   and block `RESULT` replies until the job is terminal;
+//! - the **scheduler** (the thread that called [`serve`]) pops the queue
+//!   and runs one mining job at a time across the warm fleet via
+//!   [`Coordinator::run_on_fleet`] — re-shipping the database to the
+//!   workers only when its digest changes, and skipping the fleet entirely
+//!   on a result-cache hit.
+//!
+//! Shutdown (a `SHUTDOWN` frame or `SIGTERM`/`SIGINT`) is graceful: new
+//! submissions are rejected, the queue drains, the fleet gets its `BYE`,
+//! and the socket is unlinked before [`serve`] returns.
+
+use std::collections::HashMap;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::Coordinator;
+use crate::par::{ProcessConfig, ProcessFleet};
+use crate::util::sig;
+use crate::wire::service::{JobOutcome, JobSpec, JobState};
+use crate::wire::{read_frame, write_frame, Frame};
+
+use super::cache::{CacheKey, ResultCache};
+use super::queue::JobQueue;
+
+/// Knobs of one daemon instance.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Where to listen. Created at startup, unlinked at shutdown; refuses
+    /// to start if the path already exists.
+    pub socket: PathBuf,
+    /// Warm fleet size (worker processes).
+    pub procs: usize,
+    /// Result-cache capacity (entries).
+    pub cache_cap: usize,
+    /// Worker executable override (tests; `None` = this binary).
+    pub worker_exe: Option<PathBuf>,
+    /// Fleet spawn/handshake timeout.
+    pub spawn_timeout: Duration,
+}
+
+impl ServeConfig {
+    pub fn new(socket: PathBuf, procs: usize) -> ServeConfig {
+        ServeConfig {
+            socket,
+            procs,
+            cache_cap: 32,
+            worker_exe: None,
+            spawn_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A job's lifecycle record. The spec (and its database) is dropped the
+/// moment the scheduler takes the job, so queued-but-not-yet-run jobs are
+/// the only ones holding database memory.
+enum Record {
+    Queued { spec: Box<JobSpec>, key: CacheKey },
+    Running,
+    Done { outcome: JobOutcome },
+    Failed { reason: String },
+    Cancelled,
+}
+
+/// How many *terminal* job records (done/failed/cancelled) the daemon
+/// retains for STATUS/RESULT queries. Older ones are evicted oldest-first
+/// and report `not found` afterwards — without a bound, a long-running
+/// daemon would leak one record (outcome included) per submission forever.
+const JOB_HISTORY_CAP: usize = 1024;
+
+struct Inner {
+    next_id: u64,
+    queue: JobQueue,
+    jobs: HashMap<u64, Record>,
+    /// Terminal job ids, oldest first, for [`JOB_HISTORY_CAP`] eviction.
+    finished: std::collections::VecDeque<u64>,
+    cache: ResultCache,
+    /// Shutdown requested: reject new submissions, finish the queue, exit.
+    draining: bool,
+    /// The scheduler has exited (result waiters must not block forever).
+    done: bool,
+    jobs_mined: u64,
+}
+
+impl Inner {
+    /// Record a job's terminal state and evict the oldest terminal records
+    /// beyond [`JOB_HISTORY_CAP`]. Queued/running jobs are never evicted.
+    fn finish(&mut self, id: u64, record: Record) {
+        self.jobs.insert(id, record);
+        self.finished.push_back(id);
+        while self.finished.len() > JOB_HISTORY_CAP {
+            if let Some(old) = self.finished.pop_front() {
+                self.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Signals queue arrivals (scheduler) and job completions (waiters).
+    wake: Condvar,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().expect("service state lock")
+    }
+}
+
+/// Unlink the service socket when the daemon exits, however it exits.
+struct SocketGuard(PathBuf);
+
+impl Drop for SocketGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+/// Run the daemon: spawn the fleet, listen on `cfg.socket`, schedule jobs
+/// until a `SHUTDOWN` frame or `SIGTERM`/`SIGINT` drains the queue.
+/// Returns after the fleet was dismissed and the socket unlinked.
+pub fn serve(cfg: &ServeConfig) -> Result<()> {
+    // SIGTERM/SIGINT latch into an atomic flag the scheduler polls; the
+    // worker processes ignore terminal SIGINT themselves (see util::sig),
+    // so a Ctrl-C drain finishes the in-flight job instead of killing the
+    // fleet under it.
+    sig::install_terminate_latch();
+    let fleet_cfg = ProcessConfig {
+        worker_exe: cfg.worker_exe.clone(),
+        spawn_timeout: cfg.spawn_timeout,
+        ..ProcessConfig::paper_defaults(cfg.procs, 2015)
+    };
+    // Fleet first: a daemon that cannot mine should fail before it starts
+    // accepting submissions.
+    let mut fleet = Some(ProcessFleet::spawn(&fleet_cfg).context("spawn warm worker fleet")?);
+    println!("parlamp serve: fleet of {} worker processes warm", cfg.procs);
+
+    let listener = UnixListener::bind(&cfg.socket).with_context(|| {
+        format!(
+            "bind service socket {} (stale socket from a dead daemon? remove it first)",
+            cfg.socket.display()
+        )
+    })?;
+    let _socket_guard = SocketGuard(cfg.socket.clone());
+    listener.set_nonblocking(true).context("set service listener non-blocking")?;
+    println!("parlamp serve: listening on {}", cfg.socket.display());
+
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            next_id: 1,
+            queue: JobQueue::new(),
+            jobs: HashMap::new(),
+            finished: std::collections::VecDeque::new(),
+            cache: ResultCache::new(cfg.cache_cap),
+            draining: false,
+            done: false,
+            jobs_mined: 0,
+        }),
+        wake: Condvar::new(),
+    });
+
+    // Listener thread: accept until the scheduler is done.
+    let accept_shared = Arc::clone(&shared);
+    let listener_thread = std::thread::spawn(move || loop {
+        if accept_shared.lock().done {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let shared = Arc::clone(&accept_shared);
+                std::thread::spawn(move || client_loop(stream, &shared));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            // Transient accept failures (ECONNABORTED from a client that
+            // vanished mid-handshake, EMFILE under fd pressure) must not
+            // kill the accept loop — a daemon that silently stops
+            // answering is worse than a noisy retry.
+            Err(e) => {
+                eprintln!("parlamp serve: accept error (retrying): {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    });
+
+    // Scheduler: one mining job at a time on this thread.
+    scheduler_loop(&shared, &mut fleet, &fleet_cfg);
+
+    // Drained. Release waiters, stop the listener, dismiss the fleet.
+    {
+        let mut inner = shared.lock();
+        inner.done = true;
+        let (hits, misses) = inner.cache.stats();
+        println!(
+            "parlamp serve: drained ({} jobs mined, cache {hits} hits / {misses} misses)",
+            inner.jobs_mined
+        );
+    }
+    shared.wake.notify_all();
+    let _ = listener_thread.join();
+    if let Some(fleet) = fleet.take() {
+        fleet.shutdown().context("dismiss warm fleet")?;
+    }
+    Ok(())
+}
+
+fn scheduler_loop(
+    shared: &Arc<Shared>,
+    fleet: &mut Option<ProcessFleet>,
+    fleet_cfg: &ProcessConfig,
+) {
+    loop {
+        let next = {
+            let mut inner = shared.lock();
+            if sig::terminate_requested() && !inner.draining {
+                inner.draining = true;
+                println!("parlamp serve: signal received, draining queue");
+            }
+            match inner.queue.pop() {
+                Some(id) => Some(id),
+                None if inner.draining => break,
+                None => None,
+            }
+        };
+        let Some(id) = next else {
+            // Idle: sleep until a submission (or poll the signal latch).
+            let inner = shared.lock();
+            drop(
+                shared
+                    .wake
+                    .wait_timeout(inner, Duration::from_millis(200))
+                    .expect("service state lock"),
+            );
+            continue;
+        };
+
+        // Take the job's spec and mark it running. (A popped id is always
+        // `Queued`: CANCEL only flips jobs it removed from the queue.)
+        let Some((spec, key)) = ({
+            let mut inner = shared.lock();
+            match inner.jobs.insert(id, Record::Running) {
+                Some(Record::Queued { spec, key }) => Some((spec, key)),
+                stale => {
+                    // Defensive: restore whatever was there and skip.
+                    if let Some(r) = stale {
+                        inner.jobs.insert(id, r);
+                    }
+                    None
+                }
+            }
+        }) else {
+            continue;
+        };
+
+        // Schedule-time cache probe: an identical job may have finished
+        // while this one waited in the queue.
+        let cached = {
+            let mut inner = shared.lock();
+            inner.cache.get(&key).map(|o| o.as_ref().clone())
+        };
+        if let Some(outcome) = cached {
+            shared.lock().finish(id, Record::Done { outcome });
+            shared.wake.notify_all();
+            continue;
+        }
+
+        // Mine. A failed fleet is poisoned: drop it (children die) and
+        // respawn for the next job.
+        let outcome = mine(fleet, fleet_cfg, &spec);
+        {
+            let mut inner = shared.lock();
+            match outcome {
+                Ok(run) => {
+                    inner.jobs_mined += 1;
+                    let outcome = JobOutcome::from_run(&run, false);
+                    inner.cache.insert(key, &run);
+                    inner.finish(id, Record::Done { outcome });
+                }
+                Err(e) => {
+                    inner.finish(id, Record::Failed { reason: format!("{e:#}") });
+                }
+            }
+        }
+        shared.wake.notify_all();
+    }
+}
+
+fn mine(
+    fleet: &mut Option<ProcessFleet>,
+    fleet_cfg: &ProcessConfig,
+    spec: &JobSpec,
+) -> Result<crate::coordinator::CoordinatorRun> {
+    if fleet.is_none() {
+        *fleet = Some(ProcessFleet::spawn(fleet_cfg).context("respawn worker fleet")?);
+    }
+    let f = fleet.as_mut().expect("fleet just ensured");
+    let coord = Coordinator::new(spec.alpha).with_glb(spec.glb).with_screen(spec.screen);
+    match coord.run_on_fleet(&spec.db, f, spec.seed) {
+        Ok(run) => Ok(run),
+        Err(e) => {
+            *fleet = None; // poisoned: kill-on-drop, respawn lazily
+            Err(e)
+        }
+    }
+}
+
+/// One connected client: serve frames until EOF (or its `SHUTDOWN` ack).
+fn client_loop(mut stream: UnixStream, shared: &Arc<Shared>) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return, // client gone
+            // A malformed or version-mismatched frame gets one clear error
+            // reply (the wire versioning promise) before the connection
+            // closes — after a framing error the stream cannot be resynced.
+            Err(e) => {
+                eprintln!("parlamp serve: bad client frame: {e:#}");
+                let _ = write_frame(
+                    &mut stream,
+                    &Frame::Status {
+                        job_id: 0,
+                        report: Some(JobState::Failed { reason: format!("bad frame: {e:#}") }),
+                    },
+                );
+                return;
+            }
+        };
+        let last = matches!(frame, Frame::Shutdown);
+        let reply = handle(shared, frame);
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+        if last {
+            return;
+        }
+    }
+}
+
+fn handle(shared: &Arc<Shared>, frame: Frame) -> Frame {
+    match frame {
+        Frame::Submit(spec) => submit(shared, spec),
+        Frame::Status { job_id, .. } => {
+            let inner = shared.lock();
+            Frame::Status { job_id, report: Some(state_of(&inner, job_id)) }
+        }
+        Frame::JobResult { job_id, .. } => wait_result(shared, job_id),
+        Frame::Cancel { job_id } => {
+            let mut inner = shared.lock();
+            if inner.queue.cancel(job_id) {
+                inner.finish(job_id, Record::Cancelled);
+            }
+            Frame::Status { job_id, report: Some(state_of(&inner, job_id)) }
+        }
+        Frame::Shutdown => {
+            {
+                let mut inner = shared.lock();
+                if !inner.draining {
+                    inner.draining = true;
+                    println!("parlamp serve: SHUTDOWN received, draining queue");
+                }
+            }
+            shared.wake.notify_all();
+            Frame::Shutdown
+        }
+        other => Frame::Status {
+            job_id: 0,
+            report: Some(JobState::Failed {
+                reason: format!("unexpected {} frame on the service socket", other.name()),
+            }),
+        },
+    }
+}
+
+fn submit(shared: &Arc<Shared>, spec: Box<JobSpec>) -> Frame {
+    let key = CacheKey::new(spec.db.digest(), spec.alpha, spec.glb, spec.screen);
+    let mut inner = shared.lock();
+    if inner.draining {
+        return Frame::Status {
+            job_id: 0,
+            report: Some(JobState::Failed {
+                reason: "daemon is draining (shutdown in progress)".into(),
+            }),
+        };
+    }
+    let id = inner.next_id;
+    inner.next_id += 1;
+    // Submit-time cache probe: a repeat submission never reaches the
+    // queue, let alone the workers.
+    if let Some(outcome) = inner.cache.get(&key) {
+        inner.finish(id, Record::Done { outcome: outcome.as_ref().clone() });
+    } else {
+        inner.jobs.insert(id, Record::Queued { spec, key });
+        inner.queue.push(id);
+        drop(inner);
+        shared.wake.notify_all();
+    }
+    Frame::Accepted { job_id: id }
+}
+
+fn state_of(inner: &Inner, id: u64) -> JobState {
+    match inner.jobs.get(&id) {
+        None => JobState::NotFound,
+        Some(Record::Queued { .. }) => JobState::Queued {
+            position: inner.queue.position(id).unwrap_or(0) as u32,
+        },
+        Some(Record::Running) => JobState::Running,
+        Some(Record::Done { outcome }) => JobState::Done { from_cache: outcome.from_cache },
+        Some(Record::Failed { reason }) => JobState::Failed { reason: reason.clone() },
+        Some(Record::Cancelled) => JobState::Cancelled,
+    }
+}
+
+/// Block until `id` is terminal; reply `RESULT` for a finished job and a
+/// `STATUS` report otherwise (failed, cancelled, unknown).
+fn wait_result(shared: &Arc<Shared>, id: u64) -> Frame {
+    let mut inner = shared.lock();
+    loop {
+        // Decide on an owned reply first so the `jobs` borrow ends before
+        // the guard is handed to the condvar.
+        let reply: Option<Frame> = match inner.jobs.get(&id) {
+            Some(Record::Done { outcome }) => {
+                Some(Frame::JobResult { job_id: id, report: Some(Box::new(outcome.clone())) })
+            }
+            Some(Record::Queued { .. } | Record::Running) if !inner.done => None,
+            Some(Record::Queued { .. } | Record::Running) => Some(Frame::Status {
+                job_id: id,
+                report: Some(JobState::Failed {
+                    reason: "daemon exited before the job finished".into(),
+                }),
+            }),
+            _ => Some(Frame::Status { job_id: id, report: Some(state_of(&inner, id)) }),
+        };
+        if let Some(frame) = reply {
+            return frame;
+        }
+        let (guard, _) = shared
+            .wake
+            .wait_timeout(inner, Duration::from_millis(200))
+            .expect("service state lock");
+        inner = guard;
+    }
+}

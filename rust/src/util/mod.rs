@@ -1,14 +1,17 @@
 //! Small self-contained utilities.
 //!
-//! The offline build environment ships no `rand`, `proptest`, or
-//! `criterion`, so this module provides the minimal substitutes the rest of
+//! The offline build environment ships no `rand`, `proptest`, `criterion`,
+//! or `libc`, so this module provides the minimal substitutes the rest of
 //! the crate needs: a deterministic PRNG ([`rng::Rng`]), a property-testing
-//! harness ([`propcheck`]), a benchmark harness ([`bench_harness`]), and
-//! plain-text table rendering ([`table`]).
+//! harness ([`propcheck`]), a benchmark harness ([`bench_harness`]),
+//! plain-text table rendering ([`table`]), and Unix signal plumbing for the
+//! service daemon and its workers ([`sig`]).
 
 pub mod bench_harness;
 pub mod propcheck;
 pub mod rng;
+#[cfg(unix)]
+pub mod sig;
 pub mod table;
 
 /// Format a duration given in seconds with sensible units.

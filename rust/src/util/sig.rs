@@ -1,0 +1,58 @@
+//! Minimal Unix signal plumbing (no `libc` dependency — the two symbols
+//! used are part of every Unix libc ABI and are declared directly).
+//!
+//! Two users:
+//! - the `parlamp serve` daemon latches SIGTERM/SIGINT into an atomic flag
+//!   (the one async-signal-safe thing a handler may do) and drains
+//!   gracefully (DESIGN.md §9);
+//! - `parlamp __worker` processes *ignore* SIGINT: a terminal Ctrl-C
+//!   delivers SIGINT to the whole foreground process group, and workers
+//!   that die mid-phase would turn a graceful daemon drain into a failed
+//!   job. Workers are supervised — they exit on the fabric socket's EOF
+//!   (or `BYE`), so ignoring the terminal's signal never leaks them.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub const SIGINT: i32 = 2;
+pub const SIGTERM: i32 = 15;
+
+/// `SIG_IGN` as the kernel ABI encodes it.
+const SIG_IGN: usize = 1;
+
+/// Latched by [`install_terminate_latch`]'s handler.
+static TERMINATE: AtomicBool = AtomicBool::new(false);
+
+type Handler = extern "C" fn(i32);
+
+extern "C" {
+    /// POSIX `signal(2)`. The handler slot is pointer-sized; passing it as
+    /// `usize` lets the same declaration carry both real handlers and the
+    /// `SIG_IGN` sentinel.
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+extern "C" fn latch(_signum: i32) {
+    TERMINATE.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT into the terminate latch; poll with
+/// [`terminate_requested`].
+pub fn install_terminate_latch() {
+    let h: Handler = latch;
+    unsafe {
+        signal(SIGTERM, h as *const () as usize);
+        signal(SIGINT, h as *const () as usize);
+    }
+}
+
+/// Whether a latched SIGTERM/SIGINT has been received.
+pub fn terminate_requested() -> bool {
+    TERMINATE.load(Ordering::SeqCst)
+}
+
+/// Ignore SIGINT for this process (worker processes under a supervisor).
+pub fn ignore_interrupts() {
+    unsafe {
+        signal(SIGINT, SIG_IGN);
+    }
+}

@@ -20,16 +20,22 @@
 //!
 //! where `len` counts the tag byte plus the payload, all integers are
 //! little-endian, and `len` is capped at [`MAX_FRAME_LEN`] so a corrupt
-//! length prefix fails fast instead of allocating gigabytes. The six frame
-//! types and the message grammar are documented in DESIGN.md §7; the
-//! encoders/decoders here are the normative implementation.
+//! length prefix fails fast instead of allocating gigabytes. The fabric
+//! frame types and the message grammar are documented in DESIGN.md §7; the
+//! job frames the `parlamp serve` daemon speaks with its clients
+//! (`SUBMIT`/`ACCEPTED`/`STATUS`/`RESULT`/`CANCEL`/`SHUTDOWN`, payloads in
+//! [`service`]) in DESIGN.md §9. The encoders/decoders here are the
+//! normative implementation for both.
 //!
 //! ## Versioning
 //!
-//! [`HELLO`](Frame::Hello) and [`CONFIG`](Frame::Config) both carry
-//! [`WIRE_VERSION`]. The hub rejects a worker whose version differs and vice
-//! versa, so a stale binary on one side of the socket produces one clear
+//! [`HELLO`](Frame::Hello), [`CONFIG`](Frame::Config),
+//! [`RECONFIG`](Frame::Reconfig), and [`SUBMIT`](Frame::Submit) all carry
+//! [`WIRE_VERSION`]. The receiving side rejects a peer whose version
+//! differs, so a stale binary on one side of the socket produces one clear
 //! error instead of a garbled protocol exchange.
+
+pub mod service;
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
@@ -39,11 +45,16 @@ use crate::fabric::{BasicKind, CommStats, HistDelta, Msg, WireTask};
 use crate::par::breakdown::Breakdown;
 use crate::par::worker::RunMode;
 
+use service::{JobOutcome, JobSpec, JobState};
+
 /// First four bytes of every `HELLO` payload ("ParLamp Message Wire").
 pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 
 /// Protocol version; bump on any change to the frame or message grammar.
-pub const WIRE_VERSION: u16 = 1;
+/// v2: split `CONFIG` into reusable [`PhaseSpec`] + database, added
+/// `RECONFIG` (warm-fleet phase without re-shipping the database) and the
+/// `parlamp serve` job frames.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -63,13 +74,23 @@ const TAG_RELAY: u8 = 0x03;
 const TAG_MERGE: u8 = 0x04;
 const TAG_BYE: u8 = 0x05;
 const TAG_START: u8 = 0x06;
+const TAG_RECONFIG: u8 = 0x07;
+// Job frames (the `parlamp serve` client protocol, DESIGN.md §9) live in
+// a disjoint tag range so fabric and service streams can never be confused.
+const TAG_SUBMIT: u8 = 0x10;
+const TAG_ACCEPTED: u8 = 0x11;
+const TAG_STATUS: u8 = 0x12;
+const TAG_RESULT: u8 = 0x13;
+const TAG_CANCEL: u8 = 0x14;
+const TAG_SHUTDOWN: u8 = 0x15;
 
-/// Per-phase worker parameterization shipped in the `CONFIG` frame: the
-/// exact [`crate::par::WorkerConfig`] surface (minus rank, which the worker
-/// already knows) plus the database itself, so a worker process needs no
-/// filesystem access to participate in a run.
+/// Per-phase worker parameterization: the exact [`crate::par::WorkerConfig`]
+/// surface minus rank (which the worker already knows) and minus the
+/// database (which ships once per dataset in `CONFIG` and is *reused* by
+/// `RECONFIG`, so a warm fleet pays the serialization cost only when the
+/// data actually changes).
 #[derive(Clone, Debug)]
-pub struct RunSpec {
+pub struct PhaseSpec {
     /// World size.
     pub p: u32,
     /// Base RNG seed (each worker folds in its rank).
@@ -90,8 +111,14 @@ pub struct RunSpec {
     pub dtd_interval_ns: u64,
     /// Phase being run.
     pub mode: RunMode,
-    /// The transaction database, shipped vertically (per-item occurrence
-    /// index lists + the positive-class mask).
+}
+
+/// The `CONFIG` frame payload: a [`PhaseSpec`] plus the database itself,
+/// shipped vertically (per-item occurrence index lists + the positive-class
+/// mask), so a worker process needs no filesystem access to participate.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub phase: PhaseSpec,
     pub db: Database,
 }
 
@@ -113,13 +140,17 @@ pub struct WorkerMerge {
     pub makespan_ns: u64,
 }
 
-/// Everything that crosses a process-fabric socket.
+/// Everything that crosses a process-fabric or service socket.
 #[derive(Clone, Debug)]
 pub enum Frame {
     /// Worker → hub, first frame after connect: magic, version, own rank.
     Hello { rank: u32 },
-    /// Hub → worker, in response: the full run specification.
+    /// Hub → worker: the phase specification plus the database. Sent once
+    /// per dataset; subsequent phases over the same data use `Reconfig`.
     Config(Box<RunSpec>),
+    /// Hub → worker: a new phase over the database shipped by the most
+    /// recent `Config` — the warm-fleet fast path (no database bytes).
+    Reconfig(Box<PhaseSpec>),
     /// Hub → worker once *every* rank has completed the handshake: begin
     /// the phase. Separating `START` from `CONFIG` gives the run an MPI-like
     /// startup barrier, so no worker can send steal traffic toward a rank
@@ -130,21 +161,45 @@ pub enum Frame {
     Relay { peer: u32, msg: Msg },
     /// Worker → hub after `Finish`: the phase-boundary merge payload.
     Merge(Box<WorkerMerge>),
-    /// Hub → worker: merge received from every rank; exit cleanly.
+    /// Hub → worker: no further phases; exit cleanly.
     Bye,
+    /// Client → daemon: submit a mining job (parameters + database).
+    Submit(Box<JobSpec>),
+    /// Daemon → client, in response to `Submit`: the assigned job id.
+    Accepted { job_id: u64 },
+    /// Job-state exchange. Client → daemon with `report: None` is a query;
+    /// the daemon answers with `report: Some(state)`.
+    Status { job_id: u64, report: Option<JobState> },
+    /// Result exchange. Client → daemon with `report: None` requests the
+    /// outcome (the daemon blocks the reply until the job is terminal);
+    /// daemon → client carries it.
+    JobResult { job_id: u64, report: Option<Box<JobOutcome>> },
+    /// Client → daemon: remove a *pending* job from the queue. Answered
+    /// with `Status` reporting the job's resulting state.
+    Cancel { job_id: u64 },
+    /// Client → daemon: drain the queue, dismiss the fleet, exit. Echoed
+    /// back as the acknowledgment.
+    Shutdown,
 }
 
 impl Frame {
     /// Short frame-type name for diagnostics (the `Debug` form of `Config`
-    /// would print the entire database).
+    /// or `Submit` would print the entire database).
     pub fn name(&self) -> &'static str {
         match self {
             Frame::Hello { .. } => "HELLO",
             Frame::Config(_) => "CONFIG",
+            Frame::Reconfig(_) => "RECONFIG",
             Frame::Start => "START",
             Frame::Relay { .. } => "RELAY",
             Frame::Merge(_) => "MERGE",
             Frame::Bye => "BYE",
+            Frame::Submit(_) => "SUBMIT",
+            Frame::Accepted { .. } => "ACCEPTED",
+            Frame::Status { .. } => "STATUS",
+            Frame::JobResult { .. } => "RESULT",
+            Frame::Cancel { .. } => "CANCEL",
+            Frame::Shutdown => "SHUTDOWN",
         }
     }
 }
@@ -177,6 +232,11 @@ fn put_f64(buf: &mut Vec<u8>, v: f64) {
 
 fn put_bool(buf: &mut Vec<u8>, v: bool) {
     buf.push(u8::from(v));
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 /// Cursor over a received payload. Every accessor bounds-checks, so a
@@ -233,6 +293,12 @@ impl<'a> Dec<'a> {
             1 => Ok(true),
             b => bail!("wire: bad bool byte {b:#x}"),
         }
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| anyhow::anyhow!("wire: bad utf-8: {e}"))
     }
 
     /// Validate a count prefix against the bytes actually remaining, so a
@@ -473,28 +539,28 @@ fn get_mode(d: &mut Dec) -> Result<RunMode> {
     }
 }
 
-fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec) {
+/// Shared by `CONFIG`, `RECONFIG`: version prefix + the phase fields.
+fn put_phase(buf: &mut Vec<u8>, phase: &PhaseSpec) {
     put_u16(buf, WIRE_VERSION);
-    put_u32(buf, spec.p);
-    put_u64(buf, spec.seed);
-    put_u32(buf, spec.w);
-    put_u32(buf, spec.l);
-    put_u32(buf, spec.tree_arity);
-    put_bool(buf, spec.steal);
-    put_bool(buf, spec.preprocess);
-    put_u64(buf, spec.probe_budget_units);
-    put_u64(buf, spec.dtd_interval_ns);
-    put_mode(buf, &spec.mode);
-    put_db(buf, &spec.db);
+    put_u32(buf, phase.p);
+    put_u64(buf, phase.seed);
+    put_u32(buf, phase.w);
+    put_u32(buf, phase.l);
+    put_u32(buf, phase.tree_arity);
+    put_bool(buf, phase.steal);
+    put_bool(buf, phase.preprocess);
+    put_u64(buf, phase.probe_budget_units);
+    put_u64(buf, phase.dtd_interval_ns);
+    put_mode(buf, &phase.mode);
 }
 
-fn get_spec(d: &mut Dec) -> Result<RunSpec> {
+fn get_phase(d: &mut Dec) -> Result<PhaseSpec> {
     let version = d.u16()?;
     ensure!(
         version == WIRE_VERSION,
         "wire: CONFIG version {version} != supported {WIRE_VERSION}"
     );
-    Ok(RunSpec {
+    Ok(PhaseSpec {
         p: d.u32()?,
         seed: d.u64()?,
         w: d.u32()?,
@@ -505,8 +571,16 @@ fn get_spec(d: &mut Dec) -> Result<RunSpec> {
         probe_budget_units: d.u64()?,
         dtd_interval_ns: d.u64()?,
         mode: get_mode(d)?,
-        db: get_db(d)?,
     })
+}
+
+fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec) {
+    put_phase(buf, &spec.phase);
+    put_db(buf, &spec.db);
+}
+
+fn get_spec(d: &mut Dec) -> Result<RunSpec> {
+    Ok(RunSpec { phase: get_phase(d)?, db: get_db(d)? })
 }
 
 fn put_merge(buf: &mut Vec<u8>, m: &WorkerMerge) {
@@ -570,6 +644,10 @@ impl Frame {
                 put_u8(&mut body, TAG_CONFIG);
                 put_spec(&mut body, spec);
             }
+            Frame::Reconfig(phase) => {
+                put_u8(&mut body, TAG_RECONFIG);
+                put_phase(&mut body, phase);
+            }
             Frame::Start => put_u8(&mut body, TAG_START),
             Frame::Relay { peer, msg } => {
                 put_u8(&mut body, TAG_RELAY);
@@ -581,6 +659,41 @@ impl Frame {
                 put_merge(&mut body, m);
             }
             Frame::Bye => put_u8(&mut body, TAG_BYE),
+            Frame::Submit(spec) => {
+                put_u8(&mut body, TAG_SUBMIT);
+                service::put_job_spec(&mut body, spec);
+            }
+            Frame::Accepted { job_id } => {
+                put_u8(&mut body, TAG_ACCEPTED);
+                put_u64(&mut body, *job_id);
+            }
+            Frame::Status { job_id, report } => {
+                put_u8(&mut body, TAG_STATUS);
+                put_u64(&mut body, *job_id);
+                match report {
+                    None => put_u8(&mut body, 0),
+                    Some(state) => {
+                        put_u8(&mut body, 1);
+                        service::put_job_state(&mut body, state);
+                    }
+                }
+            }
+            Frame::JobResult { job_id, report } => {
+                put_u8(&mut body, TAG_RESULT);
+                put_u64(&mut body, *job_id);
+                match report {
+                    None => put_u8(&mut body, 0),
+                    Some(outcome) => {
+                        put_u8(&mut body, 1);
+                        service::put_job_outcome(&mut body, outcome);
+                    }
+                }
+            }
+            Frame::Cancel { job_id } => {
+                put_u8(&mut body, TAG_CANCEL);
+                put_u64(&mut body, *job_id);
+            }
+            Frame::Shutdown => put_u8(&mut body, TAG_SHUTDOWN),
         }
         debug_assert!(body.len() <= MAX_FRAME_LEN as usize);
         let mut out = Vec::with_capacity(4 + body.len());
@@ -606,10 +719,33 @@ impl Frame {
                 Frame::Hello { rank: d.u32()? }
             }
             TAG_CONFIG => Frame::Config(Box::new(get_spec(&mut d)?)),
+            TAG_RECONFIG => Frame::Reconfig(Box::new(get_phase(&mut d)?)),
             TAG_START => Frame::Start,
             TAG_RELAY => Frame::Relay { peer: d.u32()?, msg: get_msg(&mut d)? },
             TAG_MERGE => Frame::Merge(Box::new(get_merge(&mut d)?)),
             TAG_BYE => Frame::Bye,
+            TAG_SUBMIT => Frame::Submit(Box::new(service::get_job_spec(&mut d)?)),
+            TAG_ACCEPTED => Frame::Accepted { job_id: d.u64()? },
+            TAG_STATUS => {
+                let job_id = d.u64()?;
+                let report = match d.u8()? {
+                    0 => None,
+                    1 => Some(service::get_job_state(&mut d)?),
+                    b => bail!("wire: bad STATUS presence byte {b:#x}"),
+                };
+                Frame::Status { job_id, report }
+            }
+            TAG_RESULT => {
+                let job_id = d.u64()?;
+                let report = match d.u8()? {
+                    0 => None,
+                    1 => Some(Box::new(service::get_job_outcome(&mut d)?)),
+                    b => bail!("wire: bad RESULT presence byte {b:#x}"),
+                };
+                Frame::JobResult { job_id, report }
+            }
+            TAG_CANCEL => Frame::Cancel { job_id: d.u64()? },
+            TAG_SHUTDOWN => Frame::Shutdown,
             other => bail!("wire: unknown frame tag {other:#x}"),
         };
         d.finish()?;
@@ -785,11 +921,9 @@ mod tests {
         assert_eq!(Frame::Start.name(), "START");
     }
 
-    #[test]
-    fn encode_config_matches_owned_frame_encode() {
-        let db = Database::from_transactions(2, &[vec![0], vec![1]], &[true, false]);
-        let spec = RunSpec {
-            p: 2,
+    fn phase_spec(p: u32) -> PhaseSpec {
+        PhaseSpec {
+            p,
             seed: 3,
             w: 1,
             l: 2,
@@ -799,8 +933,13 @@ mod tests {
             probe_budget_units: 10,
             dtd_interval_ns: 20,
             mode: RunMode::Count { min_sup: 2 },
-            db,
-        };
+        }
+    }
+
+    #[test]
+    fn encode_config_matches_owned_frame_encode() {
+        let db = Database::from_transactions(2, &[vec![0], vec![1]], &[true, false]);
+        let spec = RunSpec { phase: phase_spec(2), db };
         let borrowed = encode_config(&spec);
         let owned = Frame::Config(Box::new(spec)).encode();
         assert_eq!(borrowed, owned);
@@ -812,25 +951,24 @@ mod tests {
         let labels = vec![true, false, true, false];
         let db = Database::from_transactions(3, &trans, &labels);
         let spec = RunSpec {
-            p: 4,
-            seed: 99,
-            w: 1,
-            l: 2,
-            tree_arity: 3,
-            steal: true,
-            preprocess: false,
-            probe_budget_units: 1234,
-            dtd_interval_ns: 5678,
-            mode: RunMode::Phase1 { alpha: 0.05 },
+            phase: PhaseSpec {
+                p: 4,
+                seed: 99,
+                preprocess: false,
+                probe_budget_units: 1234,
+                dtd_interval_ns: 5678,
+                mode: RunMode::Phase1 { alpha: 0.05 },
+                ..phase_spec(4)
+            },
             db: db.clone(),
         };
         let got = match roundtrip(&Frame::Config(Box::new(spec))) {
             Frame::Config(s) => *s,
             other => panic!("{other:?}"),
         };
-        assert_eq!(got.p, 4);
-        assert_eq!(got.seed, 99);
-        assert!(matches!(got.mode, RunMode::Phase1 { alpha } if alpha == 0.05));
+        assert_eq!(got.phase.p, 4);
+        assert_eq!(got.phase.seed, 99);
+        assert!(matches!(got.phase.mode, RunMode::Phase1 { alpha } if alpha == 0.05));
         assert_eq!(got.db.n_items(), db.n_items());
         assert_eq!(got.db.n_trans(), db.n_trans());
         for i in 0..db.n_items() as Item {
@@ -838,12 +976,33 @@ mod tests {
         }
         assert_eq!(got.db.pos_mask(), db.pos_mask());
 
-        let count = RunSpec { mode: RunMode::Count { min_sup: 9 }, ..got };
+        let count = RunSpec {
+            phase: PhaseSpec { mode: RunMode::Count { min_sup: 9 }, ..got.phase },
+            db: got.db,
+        };
         let back = match roundtrip(&Frame::Config(Box::new(count))) {
             Frame::Config(s) => *s,
             other => panic!("{other:?}"),
         };
-        assert!(matches!(back.mode, RunMode::Count { min_sup: 9 }));
+        assert!(matches!(back.phase.mode, RunMode::Count { min_sup: 9 }));
+    }
+
+    #[test]
+    fn reconfig_roundtrips_without_database_bytes() {
+        let phase = PhaseSpec { seed: 77, mode: RunMode::Phase1 { alpha: 0.01 }, ..phase_spec(6) };
+        let frame = Frame::Reconfig(Box::new(phase));
+        let bytes = frame.encode();
+        // version(2) + p(4) seed(8) w(4) l(4) arity(4) steal(1) pre(1)
+        // budget(8) dtd(8) + mode(1+8) = 53 payload bytes + tag + len.
+        assert_eq!(bytes.len(), 4 + 1 + 53);
+        let got = match roundtrip(&frame) {
+            Frame::Reconfig(p) => *p,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(got.p, 6);
+        assert_eq!(got.seed, 77);
+        assert!(matches!(got.mode, RunMode::Phase1 { alpha } if alpha == 0.01));
+        assert_eq!(Frame::Reconfig(Box::new(got)).name(), "RECONFIG");
     }
 
     #[test]
@@ -903,19 +1062,7 @@ mod tests {
         // A CONFIG whose db header claims u32::MAX transactions/items must
         // fail the dimension checks, not allocate gigabytes.
         let db = Database::from_transactions(1, &[vec![0]], &[true]);
-        let spec = RunSpec {
-            p: 1,
-            seed: 0,
-            w: 1,
-            l: 2,
-            tree_arity: 3,
-            steal: true,
-            preprocess: false,
-            probe_budget_units: 1,
-            dtd_interval_ns: 1,
-            mode: RunMode::Count { min_sup: 1 },
-            db,
-        };
+        let spec = RunSpec { phase: phase_spec(1), db };
         let frame = Frame::Config(Box::new(spec)).encode();
         // db starts right after: len(4) tag(1) version(2) p(4) seed(8) w(4)
         // l(4) arity(4) steal(1) pre(1) budget(8) dtd(8) mode(1+4) = 54.
@@ -938,5 +1085,173 @@ mod tests {
         let partial: &[u8] = &[1, 0];
         let mut cursor = partial;
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    // ---- service (job) frames ----------------------------------------------
+
+    use super::service::{JobOutcome, JobSpec, JobState};
+    use crate::coordinator::{GlbParams, ScreenKind, ScreenMode};
+    use crate::lamp::SignificantPattern;
+
+    fn sample_outcome() -> JobOutcome {
+        JobOutcome {
+            alpha: 0.05,
+            lambda_final: 7,
+            min_sup: 6,
+            correction_factor: 123,
+            phase1_closed: 44,
+            phase2_closed: 123,
+            screen: ScreenKind::Native,
+            from_cache: true,
+            phase1_makespan_s: 0.25,
+            phase2_makespan_s: 0.125,
+            hist2: vec![(6, 100), (9, 23)],
+            significant: vec![
+                SignificantPattern { items: vec![3, 5], support: 9, pos_support: 8, p_value: 1e-6 },
+                SignificantPattern { items: vec![11], support: 7, pos_support: 7, p_value: 3e-4 },
+            ],
+        }
+    }
+
+    #[test]
+    fn submit_roundtrips_spec_and_database() {
+        let db = Database::from_transactions(2, &[vec![0, 1], vec![1]], &[true, false]);
+        let spec = JobSpec {
+            alpha: 0.01,
+            glb: GlbParams { w: 2, steal: false, ..GlbParams::default() },
+            screen: ScreenMode::Native,
+            seed: 31,
+            db: db.clone(),
+        };
+        let got = match roundtrip(&Frame::Submit(Box::new(spec))) {
+            Frame::Submit(s) => *s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(got.alpha, 0.01);
+        assert_eq!(got.glb, GlbParams { w: 2, steal: false, ..GlbParams::default() });
+        assert_eq!(got.screen, ScreenMode::Native);
+        assert_eq!(got.seed, 31);
+        assert_eq!(got.db.digest(), db.digest());
+        assert_eq!(Frame::Submit(Box::new(got)).name(), "SUBMIT");
+    }
+
+    #[test]
+    fn every_job_state_roundtrips_through_status() {
+        let states = vec![
+            JobState::Queued { position: 4 },
+            JobState::Running,
+            JobState::Done { from_cache: true },
+            JobState::Done { from_cache: false },
+            JobState::Failed { reason: "worker rank 1 exited mid-run".into() },
+            JobState::Cancelled,
+            JobState::NotFound,
+        ];
+        for state in states {
+            let frame = Frame::Status { job_id: 9, report: Some(state.clone()) };
+            match roundtrip(&frame) {
+                Frame::Status { job_id, report } => {
+                    assert_eq!(job_id, 9);
+                    assert_eq!(report, Some(state));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // The query form (no report) roundtrips too.
+        match roundtrip(&Frame::Status { job_id: 3, report: None }) {
+            Frame::Status { job_id: 3, report: None } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_accepted_cancel_shutdown_roundtrip() {
+        let outcome = sample_outcome();
+        let frame = Frame::JobResult { job_id: 12, report: Some(Box::new(outcome.clone())) };
+        match roundtrip(&frame) {
+            Frame::JobResult { job_id, report } => {
+                assert_eq!(job_id, 12);
+                assert_eq!(*report.expect("payload"), outcome);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            roundtrip(&Frame::JobResult { job_id: 5, report: None }),
+            Frame::JobResult { job_id: 5, report: None }
+        ));
+        assert!(matches!(
+            roundtrip(&Frame::Accepted { job_id: 88 }),
+            Frame::Accepted { job_id: 88 }
+        ));
+        assert!(matches!(
+            roundtrip(&Frame::Cancel { job_id: 17 }),
+            Frame::Cancel { job_id: 17 }
+        ));
+        assert!(matches!(roundtrip(&Frame::Shutdown), Frame::Shutdown));
+        assert_eq!(Frame::Shutdown.name(), "SHUTDOWN");
+    }
+
+    /// Every service frame survives the same corruption battery as the
+    /// fabric frames: truncated payloads, bad tags/discriminants, and
+    /// oversized counts must error — never panic, never allocate wildly.
+    #[test]
+    fn corrupt_service_frames_error_instead_of_panicking() {
+        let db = Database::from_transactions(1, &[vec![0]], &[true]);
+        let frames = vec![
+            Frame::Submit(Box::new(JobSpec::new(db, 0.05))),
+            Frame::Accepted { job_id: 1 },
+            Frame::Status { job_id: 2, report: Some(JobState::Failed { reason: "x".into() }) },
+            Frame::JobResult { job_id: 3, report: Some(Box::new(sample_outcome())) },
+            Frame::Cancel { job_id: 4 },
+        ];
+        for frame in &frames {
+            let bytes = frame.encode();
+            // Truncate the body at every prefix length: must error, not
+            // panic (the final full-length slice must decode fine).
+            for cut in 1..bytes.len() - 4 {
+                assert!(
+                    Frame::decode(&bytes[4..4 + cut]).is_err(),
+                    "{}: truncation at {cut} must fail",
+                    frame.name()
+                );
+            }
+            assert!(Frame::decode(&bytes[4..]).is_ok(), "{}", frame.name());
+        }
+        // Bad presence byte on STATUS / RESULT.
+        for tag in [TAG_STATUS, TAG_RESULT] {
+            let mut body = vec![tag];
+            put_u64(&mut body, 1);
+            put_u8(&mut body, 7); // neither 0 nor 1
+            assert!(Frame::decode(&body).is_err());
+        }
+        // Unknown job-state discriminant.
+        let mut body = vec![TAG_STATUS];
+        put_u64(&mut body, 1);
+        put_u8(&mut body, 1);
+        put_u8(&mut body, 0x66);
+        assert!(Frame::decode(&body).is_err());
+        // Oversized significant-pattern count in a RESULT must not allocate.
+        let mut body = vec![TAG_RESULT];
+        put_u64(&mut body, 1); // job id
+        put_u8(&mut body, 1); // present
+        let mut o = sample_outcome();
+        o.significant.clear();
+        super::service::put_job_outcome(&mut body, &o);
+        let n = body.len();
+        body[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // Oversized item count inside a SUBMIT database column.
+        let db = Database::from_transactions(1, &[vec![0]], &[true]);
+        let bytes = Frame::Submit(Box::new(JobSpec::new(db, 0.05))).encode();
+        // db starts after len(4) tag(1) version(2) alpha(8) l(4) w(4)
+        // steal(1) pre(1) arity(4) screen(1) seed(8) = 38; n_items is first.
+        let mut bad = bytes.clone();
+        bad[38..42].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&bad[4..]).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // Trailing garbage after a well-formed payload is rejected.
+        let mut long = bytes[4..].to_vec();
+        long.push(0);
+        assert!(Frame::decode(&long).is_err());
     }
 }

@@ -1,0 +1,331 @@
+//! Payloads of the `parlamp serve` job frames (DESIGN.md §9).
+//!
+//! The service socket speaks the same length-prefixed framing as the
+//! process fabric ([`super`]); this module holds the job-level payload
+//! types — what a client submits ([`JobSpec`]), how the daemon reports
+//! progress ([`JobState`]), and what a finished job returns
+//! ([`JobOutcome`]) — plus their codecs. Decoders follow the same
+//! discipline as the fabric grammar: every count is validated against the
+//! bytes actually remaining, so corrupt input errors instead of panicking
+//! or allocating gigabytes.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::{CoordinatorRun, GlbParams, ScreenKind, ScreenMode};
+use crate::db::{Database, Item};
+use crate::fabric::HistDelta;
+use crate::lamp::{LampResult, SignificantPattern};
+
+use super::{get_db, get_hist, put_bool, put_db, put_f64, put_hist, put_str, put_u32, put_u64};
+use super::{Dec, WIRE_VERSION};
+
+/// Everything one mining request needs: the statistical level, the GLB
+/// topology parameters, the phase-3 screen policy, the steal-randomness
+/// seed, and the database itself. The fleet size is *not* here — it is a
+/// property of the daemon (`parlamp serve --procs P`), not of a job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Family-wise error rate α.
+    pub alpha: f64,
+    /// Lifeline-GLB parameters (`l`, `w`, steal, preprocess, tree arity).
+    pub glb: GlbParams,
+    /// Phase-3 screen selection.
+    pub screen: ScreenMode,
+    /// Base RNG seed. Results are seed-invariant (only communication and
+    /// timing statistics differ), which is why the seed is *excluded* from
+    /// the result-cache key.
+    pub seed: u64,
+    /// The transaction database to mine.
+    pub db: Database,
+}
+
+impl JobSpec {
+    /// A job over `db` at level `alpha` with the paper-default GLB
+    /// parameters, the native screen, and the default seed.
+    pub fn new(db: Database, alpha: f64) -> JobSpec {
+        JobSpec {
+            alpha,
+            glb: GlbParams::default(),
+            screen: ScreenMode::Native,
+            seed: 2015,
+            db,
+        }
+    }
+}
+
+/// Where a job is in its lifecycle (DESIGN.md §9 state machine).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the FIFO queue; `position` 0 is next to run.
+    Queued { position: u32 },
+    /// The scheduler is mining it on the warm fleet.
+    Running,
+    /// Finished; the outcome is available via `RESULT`.
+    Done {
+        /// `true` when the outcome was served from the result cache
+        /// without the workers receiving any work frames.
+        from_cache: bool,
+    },
+    /// The run failed; `reason` is the error chain.
+    Failed { reason: String },
+    /// Removed from the queue by `CANCEL` before it ran.
+    Cancelled,
+    /// The daemon has no record of this job id.
+    NotFound,
+}
+
+impl JobState {
+    /// A terminal state will never change again.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued { .. } | JobState::Running)
+    }
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobState::Queued { position } => write!(f, "queued (position {position})"),
+            JobState::Running => write!(f, "running"),
+            JobState::Done { from_cache: true } => write!(f, "done (cache hit)"),
+            JobState::Done { from_cache: false } => write!(f, "done (mined)"),
+            JobState::Failed { reason } => write!(f, "failed: {reason}"),
+            JobState::Cancelled => write!(f, "cancelled"),
+            JobState::NotFound => write!(f, "not found"),
+        }
+    }
+}
+
+/// The result view a finished job ships back: the [`LampResult`] scalars,
+/// the significant-pattern set, the phase makespans, and the phase-2
+/// closed-pattern histogram (sparse), which is the cross-engine equivalence
+/// witness the integration tests diff against the serial miner.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobOutcome {
+    pub alpha: f64,
+    pub lambda_final: u32,
+    pub min_sup: u32,
+    pub correction_factor: u64,
+    pub phase1_closed: u64,
+    pub phase2_closed: u64,
+    /// Screen that produced `significant`.
+    pub screen: ScreenKind,
+    /// Served from the result cache (no mining for this submission).
+    pub from_cache: bool,
+    pub phase1_makespan_s: f64,
+    pub phase2_makespan_s: f64,
+    /// Sparse phase-2 histogram: (support, closed-set count), ascending
+    /// support.
+    pub hist2: HistDelta,
+    /// Significant patterns, ascending P-value.
+    pub significant: Vec<SignificantPattern>,
+}
+
+impl JobOutcome {
+    /// Build the wire view of a finished coordinated run.
+    pub fn from_run(run: &CoordinatorRun, from_cache: bool) -> JobOutcome {
+        let hist2 = run.phase2.hist.sparse();
+        JobOutcome {
+            alpha: run.result.alpha,
+            lambda_final: run.result.lambda_final,
+            min_sup: run.result.min_sup,
+            correction_factor: run.result.correction_factor,
+            phase1_closed: run.result.phase1_closed,
+            phase2_closed: run.result.phase2_closed,
+            screen: run.screen,
+            from_cache,
+            phase1_makespan_s: run.phase1.makespan_s,
+            phase2_makespan_s: run.phase2.makespan_s,
+            hist2,
+            significant: run.result.significant.clone(),
+        }
+    }
+
+    /// Reconstruct the [`LampResult`] view (for `summary()` and the CLI's
+    /// significant-pattern table).
+    pub fn to_lamp_result(&self) -> LampResult {
+        LampResult {
+            alpha: self.alpha,
+            lambda_final: self.lambda_final,
+            min_sup: self.min_sup,
+            correction_factor: self.correction_factor,
+            adjusted_level: self.alpha / self.correction_factor as f64,
+            significant: self.significant.clone(),
+            phase1_closed: self.phase1_closed,
+            phase2_closed: self.phase2_closed,
+        }
+    }
+}
+
+// ---- codecs ----------------------------------------------------------------
+
+const SCREEN_MODE_AUTO: u8 = 0;
+const SCREEN_MODE_NATIVE: u8 = 1;
+const SCREEN_MODE_XLA: u8 = 2;
+
+fn put_screen_mode(buf: &mut Vec<u8>, m: ScreenMode) {
+    buf.push(match m {
+        ScreenMode::Auto => SCREEN_MODE_AUTO,
+        ScreenMode::Native => SCREEN_MODE_NATIVE,
+        ScreenMode::Xla => SCREEN_MODE_XLA,
+    });
+}
+
+fn get_screen_mode(d: &mut Dec) -> Result<ScreenMode> {
+    Ok(match d.u8()? {
+        SCREEN_MODE_AUTO => ScreenMode::Auto,
+        SCREEN_MODE_NATIVE => ScreenMode::Native,
+        SCREEN_MODE_XLA => ScreenMode::Xla,
+        other => bail!("wire: unknown screen mode {other:#x}"),
+    })
+}
+
+pub(super) fn put_job_spec(buf: &mut Vec<u8>, spec: &JobSpec) {
+    super::put_u16(buf, WIRE_VERSION);
+    put_f64(buf, spec.alpha);
+    put_u32(buf, spec.glb.l as u32);
+    put_u32(buf, spec.glb.w as u32);
+    put_bool(buf, spec.glb.steal);
+    put_bool(buf, spec.glb.preprocess);
+    put_u32(buf, spec.glb.tree_arity as u32);
+    put_screen_mode(buf, spec.screen);
+    put_u64(buf, spec.seed);
+    put_db(buf, &spec.db);
+}
+
+pub(super) fn get_job_spec(d: &mut Dec) -> Result<JobSpec> {
+    let version = d.u16()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "wire: SUBMIT version {version} != supported {WIRE_VERSION}"
+    );
+    Ok(JobSpec {
+        alpha: d.f64()?,
+        glb: GlbParams {
+            l: d.u32()? as usize,
+            w: d.u32()? as usize,
+            steal: d.bool()?,
+            preprocess: d.bool()?,
+            tree_arity: d.u32()? as usize,
+        },
+        screen: get_screen_mode(d)?,
+        seed: d.u64()?,
+        db: get_db(d)?,
+    })
+}
+
+const STATE_QUEUED: u8 = 0;
+const STATE_RUNNING: u8 = 1;
+const STATE_DONE: u8 = 2;
+const STATE_FAILED: u8 = 3;
+const STATE_CANCELLED: u8 = 4;
+const STATE_NOT_FOUND: u8 = 5;
+
+pub(super) fn put_job_state(buf: &mut Vec<u8>, state: &JobState) {
+    match state {
+        JobState::Queued { position } => {
+            buf.push(STATE_QUEUED);
+            put_u32(buf, *position);
+        }
+        JobState::Running => buf.push(STATE_RUNNING),
+        JobState::Done { from_cache } => {
+            buf.push(STATE_DONE);
+            put_bool(buf, *from_cache);
+        }
+        JobState::Failed { reason } => {
+            buf.push(STATE_FAILED);
+            put_str(buf, reason);
+        }
+        JobState::Cancelled => buf.push(STATE_CANCELLED),
+        JobState::NotFound => buf.push(STATE_NOT_FOUND),
+    }
+}
+
+pub(super) fn get_job_state(d: &mut Dec) -> Result<JobState> {
+    Ok(match d.u8()? {
+        STATE_QUEUED => JobState::Queued { position: d.u32()? },
+        STATE_RUNNING => JobState::Running,
+        STATE_DONE => JobState::Done { from_cache: d.bool()? },
+        STATE_FAILED => JobState::Failed { reason: d.str()? },
+        STATE_CANCELLED => JobState::Cancelled,
+        STATE_NOT_FOUND => JobState::NotFound,
+        other => bail!("wire: unknown job state {other:#x}"),
+    })
+}
+
+const SCREEN_KIND_NATIVE: u8 = 0;
+const SCREEN_KIND_XLA: u8 = 1;
+
+pub(super) fn put_job_outcome(buf: &mut Vec<u8>, o: &JobOutcome) {
+    put_f64(buf, o.alpha);
+    put_u32(buf, o.lambda_final);
+    put_u32(buf, o.min_sup);
+    put_u64(buf, o.correction_factor);
+    put_u64(buf, o.phase1_closed);
+    put_u64(buf, o.phase2_closed);
+    buf.push(match o.screen {
+        ScreenKind::Native => SCREEN_KIND_NATIVE,
+        ScreenKind::Xla => SCREEN_KIND_XLA,
+    });
+    put_bool(buf, o.from_cache);
+    put_f64(buf, o.phase1_makespan_s);
+    put_f64(buf, o.phase2_makespan_s);
+    put_hist(buf, &o.hist2);
+    put_u32(buf, o.significant.len() as u32);
+    for s in &o.significant {
+        put_u32(buf, s.items.len() as u32);
+        for &i in &s.items {
+            put_u32(buf, i);
+        }
+        put_u32(buf, s.support);
+        put_u32(buf, s.pos_support);
+        put_f64(buf, s.p_value);
+    }
+}
+
+pub(super) fn get_job_outcome(d: &mut Dec) -> Result<JobOutcome> {
+    let alpha = d.f64()?;
+    let lambda_final = d.u32()?;
+    let min_sup = d.u32()?;
+    let correction_factor = d.u64()?;
+    let phase1_closed = d.u64()?;
+    let phase2_closed = d.u64()?;
+    let screen = match d.u8()? {
+        SCREEN_KIND_NATIVE => ScreenKind::Native,
+        SCREEN_KIND_XLA => ScreenKind::Xla,
+        other => bail!("wire: unknown screen kind {other:#x}"),
+    };
+    let from_cache = d.bool()?;
+    let phase1_makespan_s = d.f64()?;
+    let phase2_makespan_s = d.f64()?;
+    let hist2 = get_hist(d)?;
+    // Each pattern occupies ≥ 20 bytes (item count + support + pos + p).
+    let n_sig = d.count(20)?;
+    let mut significant = Vec::with_capacity(n_sig);
+    for _ in 0..n_sig {
+        let n_items = d.count(4)?;
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            items.push(d.u32()? as Item);
+        }
+        significant.push(SignificantPattern {
+            items,
+            support: d.u32()?,
+            pos_support: d.u32()?,
+            p_value: d.f64()?,
+        });
+    }
+    Ok(JobOutcome {
+        alpha,
+        lambda_final,
+        min_sup,
+        correction_factor,
+        phase1_closed,
+        phase2_closed,
+        screen,
+        from_cache,
+        phase1_makespan_s,
+        phase2_makespan_s,
+        hist2,
+        significant,
+    })
+}
