@@ -25,6 +25,7 @@ use anyhow::Result;
 
 use crate::coordinator::{parse_engine, Coordinator, EngineSelect, ScreenMode};
 use crate::db::Database;
+use crate::par::DataPlane;
 use crate::lamp::{
     lamp2::lamp2_serial, lamp_serial, phase1_serial, phase2_count, phase3_extract,
 };
@@ -101,18 +102,26 @@ pub struct EngineRun {
     pub phase1_closed: u64,
     pub phase2_closed: u64,
     pub significant: usize,
+    /// Process engine only: data-plane frames relayed through the hub /
+    /// sent directly worker-to-worker, summed over both distributed
+    /// phases. A mesh run records `hub_frames == 0` — the observable form
+    /// of the hub-demotion win. 0 on every other engine.
+    pub hub_frames: u64,
+    pub direct_frames: u64,
 }
 
 /// Run the full three-phase LAMP procedure on `engine`
-/// (`serial|lamp2|threads|sim|process`) and measure it. The phase-3
-/// screen is pinned to native so records compare like with like across
-/// machines with and without XLA artifacts.
+/// (`serial|lamp2|threads|sim|process`) and measure it. `data_plane`
+/// applies to the process engine only (`--data-plane hub|mesh`). The
+/// phase-3 screen is pinned to native so records compare like with like
+/// across machines with and without XLA artifacts.
 pub fn measure_engine(
     db: &Database,
     engine: &str,
     procs: usize,
     alpha: f64,
     seed: u64,
+    data_plane: DataPlane,
 ) -> Result<EngineRun> {
     match parse_engine(engine, procs, seed)? {
         EngineSelect::Serial => {
@@ -136,6 +145,8 @@ pub fn measure_engine(
                 phase1_closed: p1.stats.closed,
                 phase2_closed: p2.closed,
                 significant: sig.len(),
+                hub_frames: 0,
+                direct_frames: 0,
             })
         }
         EngineSelect::Lamp2 => {
@@ -154,12 +165,16 @@ pub fn measure_engine(
                 phase1_closed: res.phase1_closed,
                 phase2_closed: res.phase2_closed,
                 significant: res.significant.len(),
+                hub_frames: 0,
+                direct_frames: 0,
             })
         }
         EngineSelect::Backend(backend) => {
+            let backend = backend.with_data_plane(data_plane);
             let coord = Coordinator::new(alpha).with_screen(ScreenMode::Native);
             let (secs, run) = time_once(|| coord.run(db, &backend));
             let run = run?;
+            let comm = run.comm_total();
             Ok(EngineRun {
                 wall_s: secs,
                 t_parallel_s: run.t_parallel_s(),
@@ -172,6 +187,8 @@ pub fn measure_engine(
                 phase1_closed: run.result.phase1_closed,
                 phase2_closed: run.result.phase2_closed,
                 significant: run.result.significant.len(),
+                hub_frames: comm.hub_frames,
+                direct_frames: comm.direct_frames,
             })
         }
     }
@@ -190,17 +207,19 @@ mod tests {
     #[test]
     fn engines_agree_and_serial_is_instrumented() {
         let db = small_db();
-        let serial = measure_engine(&db, "serial", 1, 0.05, 1).unwrap();
+        let dp = DataPlane::Mesh;
+        let serial = measure_engine(&db, "serial", 1, 0.05, 1, dp).unwrap();
         assert!(serial.work_units > 0);
         assert_eq!(serial.work_units, serial.word_ops + serial.reduce_ops);
         assert!(serial.reduce_ops > 0, "reduction work must be counted");
+        assert_eq!((serial.hub_frames, serial.direct_frames), (0, 0));
         for engine in ["lamp2", "sim"] {
-            let got = measure_engine(&db, engine, 3, 0.05, 1).unwrap();
+            let got = measure_engine(&db, engine, 3, 0.05, 1, dp).unwrap();
             assert_eq!(got.lambda_star, serial.lambda_star, "{engine}");
             assert_eq!(got.correction_factor, serial.correction_factor, "{engine}");
             assert_eq!(got.significant, serial.significant, "{engine}");
         }
-        assert!(measure_engine(&db, "warp", 1, 0.05, 1).is_err());
+        assert!(measure_engine(&db, "warp", 1, 0.05, 1, dp).is_err());
     }
 
     #[test]

@@ -13,14 +13,18 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
-/// Schema identifier stamped into every report.
-pub const SCHEMA_ID: &str = "parlamp-bench/1";
+/// Schema identifier stamped into every report. v2 adds the process
+/// engine's data-plane fields: `data_plane` ("mesh"/"hub"; "none" for the
+/// other engines) and the `hub_frames`/`direct_frames` relay counters.
+pub const SCHEMA_ID: &str = "parlamp-bench/2";
 
 /// One `(scenario, engine)` measurement.
 #[derive(Clone, Debug)]
 pub struct BenchRecord {
     pub scenario: String,
     pub engine: String,
+    /// Process engine: "mesh" or "hub" (DESIGN.md §10); "none" elsewhere.
+    pub data_plane: String,
     /// World size (1 for the serial engines).
     pub procs: usize,
     pub n_items: usize,
@@ -44,6 +48,11 @@ pub struct BenchRecord {
     pub phase1_closed: u64,
     pub phase2_closed: u64,
     pub significant: usize,
+    /// Process engine: data-plane frames relayed by the hub (summed over
+    /// both distributed phases). A mesh run records 0 here. 0 elsewhere.
+    pub hub_frames: u64,
+    /// Process engine: data-plane frames sent worker-to-worker directly.
+    pub direct_frames: u64,
 }
 
 /// A full report: header + one record per `(scenario, engine)`.
@@ -87,6 +96,7 @@ impl BenchReport {
             s.push_str("    {");
             s.push_str(&format!("\"scenario\": {}, ", json_str(&r.scenario)));
             s.push_str(&format!("\"engine\": {}, ", json_str(&r.engine)));
+            s.push_str(&format!("\"data_plane\": {}, ", json_str(&r.data_plane)));
             s.push_str(&format!("\"procs\": {}, ", r.procs));
             s.push_str(&format!("\"n_items\": {}, ", r.n_items));
             s.push_str(&format!("\"n_trans\": {}, ", r.n_trans));
@@ -101,7 +111,9 @@ impl BenchReport {
             s.push_str(&format!("\"correction_factor\": {}, ", r.correction_factor));
             s.push_str(&format!("\"phase1_closed\": {}, ", r.phase1_closed));
             s.push_str(&format!("\"phase2_closed\": {}, ", r.phase2_closed));
-            s.push_str(&format!("\"significant\": {}}}", r.significant));
+            s.push_str(&format!("\"significant\": {}, ", r.significant));
+            s.push_str(&format!("\"hub_frames\": {}, ", r.hub_frames));
+            s.push_str(&format!("\"direct_frames\": {}}}", r.direct_frames));
             s.push_str(if i + 1 < self.runs.len() { ",\n" } else { "\n" });
         }
         s.push_str("  ]\n}\n");
@@ -340,7 +352,7 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
 
 // ---- schema validation -------------------------------------------------
 
-const RUN_STR_FIELDS: &[&str] = &["scenario", "engine"];
+const RUN_STR_FIELDS: &[&str] = &["scenario", "engine", "data_plane"];
 const RUN_NUM_FIELDS: &[&str] = &[
     "procs",
     "n_items",
@@ -357,9 +369,11 @@ const RUN_NUM_FIELDS: &[&str] = &[
     "phase1_closed",
     "phase2_closed",
     "significant",
+    "hub_frames",
+    "direct_frames",
 ];
 
-/// Validate a rendered report against the `parlamp-bench/1` schema:
+/// Validate a rendered report against the `parlamp-bench/2` schema:
 /// header fields present and typed, at least one run, every run carrying
 /// every field with the right type and non-negative measurements. Returns
 /// the number of runs. This is the CI gate — timings are deliberately not
@@ -399,6 +413,132 @@ pub fn validate(doc: &str) -> Result<usize> {
     Ok(runs.len())
 }
 
+// ---- two-report comparison (`parlamp bench --compare`) -----------------
+
+/// One joined row of a [`compare`] report.
+struct CompareRow {
+    scenario: String,
+    engine: String,
+    planes: (String, String),
+    wall: (f64, f64),
+    units: (f64, f64),
+    /// Result fields that must match between runs of the same scenario;
+    /// non-empty = a correctness regression, flagged in the report.
+    mismatches: Vec<&'static str>,
+}
+
+fn pct_delta(a: f64, b: f64) -> String {
+    if a <= 0.0 {
+        return "-".into();
+    }
+    format!("{:+.1}%", (b - a) / a * 100.0)
+}
+
+/// Diff two validated bench reports, joined per `(scenario, engine)`:
+/// wall-clock and work-unit deltas, the data planes, and loud flags when
+/// result fields (λ*, correction factor, significant count) differ — the
+/// one-command regression check for hub-vs-mesh and for future PRs.
+/// Returns the rendered report.
+pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
+    validate(doc_a).context("validate first report")?;
+    validate(doc_b).context("validate second report")?;
+    let a = parse_json(doc_a)?;
+    let b = parse_json(doc_b)?;
+    let label = |v: &Json| v.get("label").and_then(Json::as_str).unwrap_or("?").to_string();
+    let (label_a, label_b) = (label(&a), label(&b));
+    let runs = |v: &Json| -> Vec<Json> { v.get("runs").and_then(Json::as_arr).unwrap().to_vec() };
+    let key = |r: &Json| -> (String, String) {
+        (
+            r.get("scenario").and_then(Json::as_str).unwrap().to_string(),
+            r.get("engine").and_then(Json::as_str).unwrap().to_string(),
+        )
+    };
+    let num = |r: &Json, f: &str| r.get(f).and_then(Json::as_f64).unwrap();
+    let strf = |r: &Json, f: &str| r.get(f).and_then(Json::as_str).unwrap().to_string();
+
+    let runs_a = runs(&a);
+    let runs_b = runs(&b);
+    let mut rows: Vec<CompareRow> = Vec::new();
+    let mut only_a: Vec<(String, String)> = Vec::new();
+    let mut only_b: Vec<(String, String)> = runs_b.iter().map(key).collect();
+    for ra in &runs_a {
+        let k = key(ra);
+        let Some(rb) = runs_b.iter().find(|&r| key(r) == k) else {
+            only_a.push(k);
+            continue;
+        };
+        only_b.retain(|x| *x != k);
+        let mut mismatches = Vec::new();
+        for f in ["lambda_star", "min_sup", "correction_factor", "significant"] {
+            if num(ra, f) != num(rb, f) {
+                mismatches.push(match f {
+                    "lambda_star" => "λ*",
+                    "min_sup" => "min_sup",
+                    "correction_factor" => "k",
+                    _ => "significant",
+                });
+            }
+        }
+        rows.push(CompareRow {
+            scenario: k.0,
+            engine: k.1,
+            planes: (strf(ra, "data_plane"), strf(rb, "data_plane")),
+            wall: (num(ra, "wall_s"), num(rb, "wall_s")),
+            units: (num(ra, "work_units"), num(rb, "work_units")),
+            mismatches,
+        });
+    }
+    ensure!(
+        !rows.is_empty(),
+        "the reports share no (scenario, engine) pair — nothing to compare"
+    );
+
+    let mut t = crate::util::table::Table::new(&[
+        "scenario", "engine", "plane", "wall A", "wall B", "Δwall", "units A", "units B",
+        "Δunits", "result",
+    ]);
+    let mut regressions = 0usize;
+    for r in &rows {
+        let plane = if r.planes.0 == r.planes.1 {
+            r.planes.0.clone()
+        } else {
+            format!("{}→{}", r.planes.0, r.planes.1)
+        };
+        let result = if r.mismatches.is_empty() {
+            "=".to_string()
+        } else {
+            regressions += 1;
+            format!("MISMATCH: {}", r.mismatches.join(","))
+        };
+        t.row(vec![
+            r.scenario.clone(),
+            r.engine.clone(),
+            plane,
+            crate::util::fmt_secs(r.wall.0),
+            crate::util::fmt_secs(r.wall.1),
+            pct_delta(r.wall.0, r.wall.1),
+            (r.units.0 as u64).to_string(),
+            (r.units.1 as u64).to_string(),
+            pct_delta(r.units.0, r.units.1),
+            result,
+        ]);
+    }
+    let mut out = format!("A = {label_a}, B = {label_b}\n{}", t.render());
+    for (s, e) in &only_a {
+        out.push_str(&format!("\nonly in A: ({s}, {e})"));
+    }
+    for (s, e) in &only_b {
+        out.push_str(&format!("\nonly in B: ({s}, {e})"));
+    }
+    out.push('\n');
+    if regressions > 0 {
+        bail!(
+            "{regressions} (scenario, engine) pair(s) disagree on result fields:\n{out}"
+        );
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +547,7 @@ mod tests {
         BenchRecord {
             scenario: "mcf7".into(),
             engine: engine.into(),
+            data_plane: if engine == "process" { "mesh".into() } else { "none".into() },
             procs: 4,
             n_items: 250,
             n_trans: 2000,
@@ -422,6 +563,8 @@ mod tests {
             phase1_closed: 1234,
             phase2_closed: 88,
             significant: 3,
+            hub_frames: 0,
+            direct_frames: if engine == "process" { 42 } else { 0 },
         }
     }
 
@@ -471,6 +614,54 @@ mod tests {
         let doc = rep.to_json();
         assert!(doc.contains("\"wall_s\": null"), "{doc}");
         assert!(validate(&doc).is_err(), "corrupt measurement must not validate");
+    }
+
+    #[test]
+    fn compare_joins_on_scenario_and_engine() {
+        let mut a = BenchReport::new("hub", true, 0.05, 1);
+        let mut b = BenchReport::new("mesh", true, 0.05, 1);
+        let mut ra = record("process");
+        ra.data_plane = "hub".into();
+        ra.wall_s = 0.2;
+        ra.hub_frames = 900;
+        ra.direct_frames = 0;
+        a.push(ra);
+        a.push(record("serial"));
+        let mut rb = record("process");
+        rb.wall_s = 0.1;
+        b.push(rb);
+        b.push(record("sim")); // unmatched on both sides
+        let out = compare(&a.to_json(), &b.to_json()).unwrap();
+        assert!(out.contains("A = hub, B = mesh"), "{out}");
+        assert!(out.contains("hub→mesh"), "{out}");
+        assert!(out.contains("-50.0%"), "wall delta missing:\n{out}");
+        assert!(out.contains("only in A: (mcf7, serial)"), "{out}");
+        assert!(out.contains("only in B: (mcf7, sim)"), "{out}");
+    }
+
+    #[test]
+    fn compare_flags_result_mismatches_and_rejects_disjoint_reports() {
+        let mut a = BenchReport::new("old", true, 0.05, 1);
+        a.push(record("serial"));
+        let mut b = BenchReport::new("new", true, 0.05, 1);
+        let mut r = record("serial");
+        r.lambda_star = 8; // a correctness regression, not noise
+        b.push(r);
+        let err = compare(&a.to_json(), &b.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("MISMATCH: λ*"), "{err:#}");
+        // Identical results compare clean even when timings differ.
+        let mut c = BenchReport::new("new", true, 0.05, 1);
+        let mut r = record("serial");
+        r.wall_s = 99.0;
+        c.push(r);
+        assert!(compare(&a.to_json(), &c.to_json()).is_ok());
+        // No shared (scenario, engine) pair is an error, not an empty diff.
+        let mut d = BenchReport::new("other", true, 0.05, 1);
+        d.push(record("sim"));
+        let err = compare(&a.to_json(), &d.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("nothing to compare"), "{err:#}");
+        // Invalid input is rejected before any diffing.
+        assert!(compare("{}", &a.to_json()).is_err());
     }
 
     #[test]

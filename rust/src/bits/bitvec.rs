@@ -128,14 +128,29 @@ impl BitVec {
         BitVec { len: self.len, words }
     }
 
-    /// In-place `self &= other`, reusing `self`'s allocation (hot path:
-    /// child occurrence bitmaps in the expansion loop).
+    /// `self & other` into `out`, reusing `out`'s allocation (hot path:
+    /// child occurrence bitmaps in the innermost expansion loop).
+    ///
+    /// When `out` already holds a buffer of the right width — the steady
+    /// state, since the expansion loop recycles one scratch vector per
+    /// depth — the words are bulk-copied with `copy_from_slice` (memcpy)
+    /// and AND-ed in place, instead of the clear-then-extend path whose
+    /// per-element `push` the optimizer must see through. The first use
+    /// of a scratch buffer (or a width change) falls back to
+    /// clear+extend, which also (re)sizes the allocation.
     #[inline]
     pub fn and_assign_into(&self, other: &BitVec, out: &mut BitVec) {
         debug_assert_eq!(self.len, other.len);
         out.len = self.len;
-        out.words.clear();
-        out.words.extend(self.words.iter().zip(&other.words).map(|(a, b)| a & b));
+        if out.words.len() == self.words.len() {
+            out.words.copy_from_slice(&self.words);
+            for (o, b) in out.words.iter_mut().zip(&other.words) {
+                *o &= b;
+            }
+        } else {
+            out.words.clear();
+            out.words.extend(self.words.iter().zip(&other.words).map(|(a, b)| a & b));
+        }
     }
 
     /// `true` iff every set bit of `self` is also set in `other`.
@@ -277,5 +292,30 @@ mod tests {
         let mut out = BitVec::zeros(100);
         a.and_assign_into(&b, &mut out);
         assert_eq!(out.iter_ones().collect::<Vec<_>>(), vec![3, 50, 99]);
+    }
+
+    /// Both `and_assign_into` paths — the right-width memcpy fast path and
+    /// the resize fallback — must equal the fresh `and()` result.
+    #[test]
+    fn and_assign_into_paths_match_and() {
+        forall("and_assign_into == and()", 64, |rng| {
+            let len = 1 + rng.index(400);
+            let a = BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(0.4)));
+            let b = BitVec::from_indices(len, (0..len).filter(|_| rng.bernoulli(0.4)));
+            let want = a.and(&b);
+            // resize path: out starts with a different word width
+            let mut out = BitVec::zeros(rng.index(2 * len) + 1);
+            a.and_assign_into(&b, &mut out);
+            if out != want {
+                return Err(format!("resize path differs at len={len}"));
+            }
+            // fast path: out already has the right width (and stale bits)
+            let mut out = BitVec::ones(len);
+            a.and_assign_into(&b, &mut out);
+            if out != want {
+                return Err(format!("fast path differs at len={len}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -14,6 +14,7 @@ use crate::db::{read_labels, read_transactions, Database};
 use crate::fabric::sim::NetModel;
 use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
+use crate::par::DataPlane;
 use crate::service::{Client, ServeConfig};
 use crate::util::table::Table;
 use crate::wire::service::{JobSpec, JobState};
@@ -51,6 +52,13 @@ fn parse_screen(args: &Args) -> Result<ScreenMode> {
         "auto" => Ok(ScreenMode::Auto),
         other => bail!("unknown --screen '{other}' (native|xla|auto)"),
     }
+}
+
+/// `--data-plane hub|mesh` (default mesh): which topology carries the
+/// process engine's steal traffic and DTD waves (DESIGN.md §10). Ignored
+/// by the other engines.
+fn data_plane_from_args(args: &Args) -> Result<DataPlane> {
+    DataPlane::parse(args.get("data-plane").unwrap_or("mesh")).context("--data-plane")
 }
 
 fn glb_from_args(args: &Args) -> GlbParams {
@@ -92,6 +100,9 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 2015)?;
     let select = parse_engine(engine, p, seed)?;
     let screen = parse_screen(args)?;
+    // Validated for every engine so a typo'd flag errors instead of being
+    // silently ignored; only the process backend actually consumes it.
+    let data_plane = data_plane_from_args(args)?;
     println!(
         "N={} items={} density={:.4}% N_pos={}",
         db.n_trans(),
@@ -120,6 +131,7 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
             sig
         }
         EngineSelect::Backend(backend) => {
+            let backend = backend.with_data_plane(data_plane);
             let coord =
                 Coordinator::new(alpha).with_glb(glb_from_args(args)).with_screen(screen);
             let run = coord.run(&db, &backend)?;
@@ -215,12 +227,28 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         println!("{path}: valid {} ({n} runs)", crate::bench::SCHEMA_ID);
         return Ok(());
     }
+    // `--compare A.json,B.json` (or `--compare A.json --with B.json`):
+    // diff two reports per (scenario, engine) — errors on result-field
+    // mismatches, so it doubles as a CI regression gate.
+    if let Some(spec) = args.get("compare") {
+        let (path_a, path_b) = match spec.split_once(',') {
+            Some((a, b)) => (a.to_string(), b.to_string()),
+            None => (spec.to_string(), args.require("with")?.to_string()),
+        };
+        let doc_a = std::fs::read_to_string(&path_a)
+            .with_context(|| format!("read {path_a}"))?;
+        let doc_b = std::fs::read_to_string(&path_b)
+            .with_context(|| format!("read {path_b}"))?;
+        print!("{}", report::compare(&doc_a, &doc_b)?);
+        return Ok(());
+    }
 
     let quick = args.flag("quick");
     let alpha = args.get_f64("alpha", crate::DEFAULT_ALPHA)?;
     let procs = args.get_usize("procs", 4)?;
     let seed = args.get_u64("seed", 2015)?;
-    let label = args.get("label").unwrap_or("pr3");
+    let data_plane = data_plane_from_args(args)?;
+    let label = args.get("label").unwrap_or("pr5");
     let default_out = format!("BENCH_{label}.json");
     let out = args.get("out").unwrap_or(&default_out);
     let default_engines = ENGINES.join(",");
@@ -264,7 +292,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             db.density() * 100.0
         );
         for &engine in &engines {
-            let r = measure_engine(&db, engine, procs, alpha, seed)
+            let r = measure_engine(&db, engine, procs, alpha, seed, data_plane)
                 .with_context(|| format!("{} on {}", engine, sc.name))?;
             t.row(vec![
                 sc.name.to_string(),
@@ -278,6 +306,11 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             rep.push(BenchRecord {
                 scenario: sc.name.to_string(),
                 engine: engine.to_string(),
+                data_plane: if engine == "process" {
+                    data_plane.name().to_string()
+                } else {
+                    "none".to_string()
+                },
                 procs: if matches!(engine, "serial" | "lamp2") { 1 } else { procs },
                 n_items: db.n_items(),
                 n_trans: db.n_trans(),
@@ -293,6 +326,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 phase1_closed: r.phase1_closed,
                 phase2_closed: r.phase2_closed,
                 significant: r.significant,
+                hub_frames: r.hub_frames,
+                direct_frames: r.direct_frames,
             });
         }
     }
@@ -358,6 +393,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let socket = PathBuf::from(args.require("socket")?);
     let mut cfg = ServeConfig::new(socket, args.get_usize("procs", 4)?);
     cfg.cache_cap = args.get_usize("cache", 32)?;
+    cfg.data_plane = data_plane_from_args(args)?;
     anyhow::ensure!(cfg.cache_cap >= 1, "--cache must be ≥ 1");
     crate::service::serve(&cfg)
 }
@@ -487,9 +523,27 @@ mod tests {
         let bad = dir.join("BENCH_bad.json");
         std::fs::write(&bad, doc.replace("\"runs\"", "\"ruins\"")).unwrap();
         assert!(check(&bad).is_err());
-        // unknown engine / scenario fail fast
+        // --compare: a report against itself diffs clean, in both the
+        // comma form and the --with form; a corrupt input fails.
+        let both = format!("{0},{0}", out.to_str().unwrap());
+        cmd_bench(&Args::parse(&["--compare".to_string(), both]).unwrap()).unwrap();
+        let argv: Vec<String> = vec![
+            "--compare".into(),
+            out.to_str().unwrap().into(),
+            "--with".into(),
+            out.to_str().unwrap().into(),
+        ];
+        cmd_bench(&Args::parse(&argv).unwrap()).unwrap();
+        let both_bad = format!("{},{}", out.to_str().unwrap(), bad.to_str().unwrap());
+        assert!(cmd_bench(&Args::parse(&["--compare".to_string(), both_bad]).unwrap()).is_err());
+        // unknown engine / scenario / data plane fail fast
         let argv: Vec<String> =
             ["--quick", "--engines", "warp"].iter().map(|s| s.to_string()).collect();
+        assert!(cmd_bench(&Args::parse(&argv).unwrap()).is_err());
+        let argv: Vec<String> = ["--quick", "--engines", "serial", "--data-plane", "warp"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
         assert!(cmd_bench(&Args::parse(&argv).unwrap()).is_err());
         let argv: Vec<String> = ["--quick", "--scenarios", "nope", "--engines", "serial"]
             .iter()
@@ -514,8 +568,13 @@ mod tests {
         let mut argv = base.clone();
         argv.extend(["--engine", "warp"].iter().map(|s| s.to_string()));
         assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
-        let mut argv = base;
+        let mut argv = base.clone();
         argv.extend(["--screen", "gpu"].iter().map(|s| s.to_string()));
+        assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
+        // A typo'd --data-plane must error on every engine, even the
+        // serial ones that never consume it.
+        let mut argv = base;
+        argv.extend(["--data-plane", "warp"].iter().map(|s| s.to_string()));
         assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

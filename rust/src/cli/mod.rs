@@ -4,10 +4,12 @@
 //! ```text
 //! parlamp lamp     --data t.dat --labels t.lab
 //!                  [--engine serial|lamp2|threads|sim|process]
+//!                  [--data-plane hub|mesh]
 //! parlamp mine     --data t.dat [--min-sup K]
 //! parlamp sim      --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
 //! parlamp bench    [--quick] [--engines a,b,..] [--scenarios x,y|all]
-//!                  [--out BENCH_pr3.json] | --check FILE
+//!                  [--out BENCH_pr5.json] | --check FILE
+//!                  | --compare A.json,B.json
 //! parlamp gendata  --scenario alz-dom-5 --out dir/
 //! parlamp scenarios
 //! parlamp serve    --socket /run/parlamp.sock --procs 8 [--cache 32]
@@ -82,18 +84,20 @@ pub fn usage() -> String {
 USAGE:
   parlamp lamp      --data FILE --labels FILE [--alpha A]
                     [--engine serial|lamp2|threads|sim|process]
-                    [--procs P | -n P] [--naive]
+                    [--procs P | -n P] [--naive] [--data-plane hub|mesh]
                     [--screen native|xla|auto] [--seed S]
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
                     [--no-preprocess] [--alpha A] [--seed S]
   parlamp bench     [--quick] [--engines E1,E2,..] [--scenarios S1,S2|all]
                     [--procs P] [--alpha A] [--seed S] [--label L]
-                    [--out FILE]
+                    [--out FILE] [--data-plane hub|mesh]
   parlamp bench     --check FILE
+  parlamp bench     --compare A.json,B.json  (or --compare A.json --with B.json)
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
   parlamp serve     --socket PATH [--procs P] [--cache N]
+                    [--data-plane hub|mesh]
   parlamp submit    --socket PATH --data FILE --labels FILE [--alpha A]
                     [--naive] [--no-preprocess] [--screen native|xla|auto]
                     [--seed S]
@@ -103,16 +107,22 @@ USAGE:
 
 `bench` runs the Table-1 scenarios across engines (default: all five) and
 writes the schema-stable perf-trajectory JSON (BENCH_<label>.json; the
-label defaults to pr3 and is stamped into the document header);
+label defaults to pr5 and is stamped into the document header);
 `--quick` shrinks the data and defaults to the single mcf7 scenario;
-`--check` validates an existing file against the parlamp-bench/1 schema.
+`--check` validates an existing file against the parlamp-bench/2 schema;
+`--compare` diffs two reports per (scenario, engine) — wall-clock and
+work-unit deltas — and errors if result fields disagree.
 
 Engines `threads`, `sim`, and `process` run the full three-phase procedure
 through the coordinator (phases 1-2 distributed, phase 3 via the configured
 screen). `process` spawns one worker OS process per rank, connected over
 Unix-domain sockets with the DESIGN.md §7 wire protocol — true distributed
-memory on one host. Scenario names mirror Table 1: hapmap-dom-10,
-hapmap-dom-20, alz-dom-5, alz-dom-10, alz-rec-30, mcf7.
+memory on one host. Its data plane is selectable (`--data-plane`,
+DESIGN.md §10): `mesh` (default) lets workers exchange steal traffic and
+DTD waves over direct worker-to-worker sockets with zero hub hops; `hub`
+relays everything through the parent (the centralized ablation baseline).
+Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20, alz-dom-5,
+alz-dom-10, alz-rec-30, mcf7.
 
 `serve` starts the long-running mining daemon (DESIGN.md §9): the worker
 fleet spawns once and stays warm, jobs queue FIFO, and repeat submissions

@@ -38,8 +38,8 @@ use crate::fabric::CommStats;
 use crate::glb::Lifelines;
 use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
 use crate::par::{
-    breakdown, run_sim, run_threads_with, ParRunResult, ProcessConfig, ProcessFleet, RunMode,
-    SimConfig, ThreadConfig,
+    breakdown, run_sim, run_threads_with, DataPlane, ParRunResult, ProcessConfig, ProcessFleet,
+    RunMode, SimConfig, ThreadConfig,
 };
 use crate::runtime::{
     artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
@@ -72,7 +72,9 @@ pub fn parse_engine(name: &str, p: usize, seed: u64) -> Result<EngineSelect> {
         "lamp2" => EngineSelect::Lamp2,
         "threads" => EngineSelect::Backend(Backend::Threads { p, seed }),
         "sim" => EngineSelect::Backend(Backend::Sim { p, net: NetModel::default(), seed }),
-        "process" => EngineSelect::Backend(Backend::Process { p, seed }),
+        "process" => {
+            EngineSelect::Backend(Backend::Process { p, seed, plane: DataPlane::Mesh })
+        }
         other => bail!("unknown engine '{other}' ({})", ENGINES.join("|")),
     })
 }
@@ -131,9 +133,11 @@ pub enum Backend {
     Sim { p: usize, net: NetModel, seed: u64 },
     /// One OS process per rank over the Unix-socket fabric; real wall-clock
     /// time and real address-space separation — every message crosses the
-    /// [`crate::wire`] protocol (DESIGN.md §7). Requires a spawnable
+    /// [`crate::wire`] protocol (DESIGN.md §7). `plane` selects the data
+    /// plane: direct worker-to-worker mesh sockets (the default) or the
+    /// centralized hub relay (DESIGN.md §10). Requires a spawnable
     /// `parlamp` binary (see [`crate::par::engine_process`]).
-    Process { p: usize, seed: u64 },
+    Process { p: usize, seed: u64, plane: DataPlane },
 }
 
 impl Backend {
@@ -147,9 +151,19 @@ impl Backend {
         Backend::Sim { p, net: NetModel::default(), seed: 2015 }
     }
 
-    /// Multi-process backend with the default seed.
+    /// Multi-process backend with the default seed and data plane (mesh).
     pub fn process(p: usize) -> Backend {
-        Backend::Process { p, seed: 2015 }
+        Backend::Process { p, seed: 2015, plane: DataPlane::Mesh }
+    }
+
+    /// This backend with its data plane set (`--data-plane hub|mesh`).
+    /// A no-op for backends other than [`Backend::Process`] — the
+    /// in-process fabrics have no hub to bypass.
+    pub fn with_data_plane(self, plane: DataPlane) -> Backend {
+        match self {
+            Backend::Process { p, seed, .. } => Backend::Process { p, seed, plane },
+            other => other,
+        }
     }
 
     /// World size.
@@ -328,8 +342,9 @@ impl Coordinator {
     /// [`Coordinator::run_on_fleet`] instead.
     pub fn run(&self, db: &Database, backend: &Backend) -> Result<CoordinatorRun> {
         match backend {
-            Backend::Process { p, seed } => {
-                let mut fleet = ProcessFleet::spawn(&self.process_config(*p, *seed))?;
+            Backend::Process { p, seed, plane } => {
+                let cfg = ProcessConfig { data_plane: *plane, ..self.process_config(*p, *seed) };
+                let mut fleet = ProcessFleet::spawn(&cfg)?;
                 let run = self.run_on_fleet(db, &mut fleet, *seed)?;
                 fleet.shutdown()?;
                 Ok(run)

@@ -119,7 +119,7 @@ pub trait Mailbox {
 
 /// Per-process communication counters (reported in EXPERIMENTS.md and used
 /// by the overhead breakdown).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub sent: u64,
     pub received: u64,
@@ -128,6 +128,17 @@ pub struct CommStats {
     pub gives: u64,
     pub tasks_shipped: u64,
     pub bytes_sent: u64,
+    /// Process fabric only: data-plane frames this rank pushed through the
+    /// parent hub's relay (the hub data plane; 0 under the mesh plane and
+    /// on the in-process fabrics). Together with [`direct_frames`] this
+    /// makes the hub-vs-mesh win observable: a mesh run must report 0 here
+    /// (DESIGN.md §10).
+    ///
+    /// [`direct_frames`]: CommStats::direct_frames
+    pub hub_frames: u64,
+    /// Process fabric only: data-plane frames sent worker-to-worker over a
+    /// direct mesh connection, with zero hub hops.
+    pub direct_frames: u64,
 }
 
 impl CommStats {
@@ -139,6 +150,8 @@ impl CommStats {
         self.gives += o.gives;
         self.tasks_shipped += o.tasks_shipped;
         self.bytes_sent += o.bytes_sent;
+        self.hub_frames += o.hub_frames;
+        self.direct_frames += o.direct_frames;
     }
 }
 

@@ -4,11 +4,23 @@
 //! The first fabric backend with real address-space separation: unlike
 //! [`super::thread`] and [`super::sim`], nothing can be passed by value, so
 //! every protocol message crosses the [`crate::wire`] serialization
-//! boundary. Topology is hub-and-spoke: the parent process runs a [`Hub`]
-//! that accepts one connection per worker rank and routes `RELAY` frames
-//! between them, which keeps the design at `P` sockets instead of the
-//! `P(P−1)/2` a full mesh would need (file-descriptor passing between
-//! children is not required).
+//! boundary. The *control plane* is hub-and-spoke: the parent process runs
+//! a [`Hub`] that accepts one connection per worker rank and owns the
+//! phase lifecycle (HELLO/CONFIG/START/MERGE/BYE, plus liveness via socket
+//! EOF). The *data plane* — every steal REQUEST/GIVE/REJECT frame and
+//! every DTD wave — is selectable ([`DataPlane`], DESIGN.md §10):
+//!
+//! - [`DataPlane::Mesh`] (the default): each worker binds its own Unix
+//!   socket (`<hub>.r<rank>`), the hub distributes the peer socket map
+//!   with each phase frame, and workers open lazy direct connections on
+//!   first send — lifeline neighbors and random-steal victims talk
+//!   worker-to-worker with zero hub hops. Mesh frames are epoch-stamped
+//!   so phases stay fenced without the hub's socket ordering.
+//! - [`DataPlane::Hub`]: the original topology — every `RELAY` frame is
+//!   forwarded by the hub. `P` sockets instead of up to `P(P−1)/2`, at the
+//!   cost of doubling every data-plane hop and serializing all steal
+//!   traffic through one process. Retained as the fallback and as the
+//!   ablation baseline for the mesh speedup.
 //!
 //! The fleet is **warm**: a worker's connection outlives any single phase,
 //! so one spawned fleet can serve many phases — and many jobs, which is
@@ -22,20 +34,26 @@
 //!    already hold the right database — and then `START`, the barrier that
 //!    guarantees no steal traffic targets a rank that is not in the phase;
 //! 3. workers run the ordinary [`crate::par::Worker`] loop against a
-//!    [`ProcessMailbox`]; every [`Mailbox::send`] becomes a `RELAY` frame
-//!    the hub forwards;
+//!    [`ProcessMailbox`]; every [`Mailbox::send`] becomes either a `RELAY`
+//!    frame the hub forwards (hub plane) or an epoch-stamped `PEERMSG` on
+//!    a lazy direct connection (mesh plane — the phase frame carried a
+//!    peer socket map);
 //! 4. on `Finish` each worker sends its `MERGE` (the phase-boundary
 //!    histogram/breakdown/counter payload) and returns to
 //!    [`ProcessMailbox::await_phase`];
 //! 5. the hub collects `P` merges and either opens the next phase (step 2)
 //!    or broadcasts `BYE`, upon which the workers exit cleanly.
 //!
-//! Between phases no fencing is needed: a worker sends nothing after its
-//! `MERGE` until its next `START`, so once the hub holds all `P` merges,
-//! every late relay of the finished phase has already been forwarded —
-//! anything a worker receives *before* its next `CONFIG`/`RECONFIG` is
-//! stale and dropped, anything after belongs to the new phase and is
-//! buffered until `START`.
+//! Between phases the hub plane needs no explicit fencing: a worker sends
+//! nothing after its `MERGE` until its next `START`, so once the hub holds
+//! all `P` merges, every late relay of the finished phase has already been
+//! forwarded — anything a worker receives *before* its next
+//! `CONFIG`/`RECONFIG` is stale and dropped, anything after belongs to the
+//! new phase and is buffered until `START`. Mesh frames have no such
+//! socket ordering against the hub's phase frames, so they carry the
+//! sender's phase index instead: the receiver drops frames below its next
+//! phase index and buffers the rest exactly like hub-path pre-`START`
+//! deliveries (DESIGN.md §10).
 //!
 //! Failure semantics: a worker that dies mid-run surfaces as a
 //! [`HubEvent::Gone`] (socket EOF or error) and the engine aborts the run;
@@ -45,7 +63,7 @@
 use std::collections::VecDeque;
 use std::io::Write;
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -65,6 +83,48 @@ use super::{Mailbox, Msg};
 /// declaring the peer dead.
 pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// Which topology carries the data plane (steal traffic + DTD waves) of a
+/// process-fabric phase. The control plane (phase lifecycle, merges,
+/// liveness) always runs through the hub.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DataPlane {
+    /// Direct worker-to-worker Unix-socket connections, opened lazily on
+    /// first send; the hub forwards zero data-plane frames. The default.
+    #[default]
+    Mesh,
+    /// Every data-plane frame is relayed by the parent hub — the
+    /// centralized baseline (two hops per message).
+    Hub,
+}
+
+impl DataPlane {
+    /// CLI name (`--data-plane hub|mesh`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataPlane::Mesh => "mesh",
+            DataPlane::Hub => "hub",
+        }
+    }
+
+    /// Parse a `--data-plane` value.
+    pub fn parse(s: &str) -> Result<DataPlane> {
+        match s {
+            "mesh" => Ok(DataPlane::Mesh),
+            "hub" => Ok(DataPlane::Hub),
+            other => bail!("unknown data plane '{other}' (hub|mesh)"),
+        }
+    }
+}
+
+/// The path of rank `rank`'s own data-plane listener socket, derived from
+/// the hub socket path: `<hub>.r<rank>`. Lives in the per-fleet socket
+/// directory, so the fleet owner's cleanup removes it with the hub socket.
+pub fn peer_sock_path(hub: &Path, rank: usize) -> PathBuf {
+    let mut os = hub.as_os_str().to_os_string();
+    os.push(format!(".r{rank}"));
+    PathBuf::from(os)
+}
+
 // ---- worker (child) side ---------------------------------------------------
 
 /// Link status of a worker's hub connection.
@@ -77,9 +137,15 @@ enum Link {
 }
 
 enum ChildEvent {
+    /// A hub-relayed data-plane delivery (hub plane only). Phase fencing
+    /// comes for free from the hub socket's FIFO order relative to the
+    /// CONFIG/START frames.
     Deliver { src: usize, msg: Msg },
-    Config(Box<RunSpec>),
-    Reconfig(Box<PhaseSpec>),
+    /// A direct mesh delivery. `epoch` is the *sender's* phase index; the
+    /// mailbox fences it against its own (see [`ProcessMailbox::await_phase`]).
+    PeerDeliver { src: usize, epoch: u64, msg: Msg },
+    Config { spec: Box<RunSpec>, peers: Vec<String> },
+    Reconfig { phase: Box<PhaseSpec>, peers: Vec<String> },
     Start,
     Bye,
     Lost(String),
@@ -107,22 +173,45 @@ pub struct ProcessMailbox {
     /// and `START`) but not yet consumed by the worker's probe loop.
     pending: VecDeque<(usize, Msg)>,
     link: Link,
+    /// Peer socket map of the current phase; empty = hub data plane.
+    peer_paths: Vec<String>,
+    /// Lazily opened direct connections, cached for the fleet lifetime
+    /// (warm fleets keep peer links across phases and jobs).
+    peer_writers: Vec<Option<UnixStream>>,
+    /// Index of the current phase (stamped onto outgoing mesh frames).
+    epoch: u64,
+    /// Number of phases this mailbox has started (= the next phase index).
+    phases_started: u64,
+    /// Per-phase data-plane counters, reset at each `START`.
+    hub_frames: u64,
+    direct_frames: u64,
     _reader: JoinHandle<()>,
+    _peer_listener: JoinHandle<()>,
 }
 
-/// Connect to the hub at `path` as `rank`: send `HELLO` and hand the
+/// Connect to the hub at `path` as `rank`: bind this rank's own data-plane
+/// listener (`<path>.r<rank>` — bound *before* `HELLO`, so the path the
+/// hub learns is always connectable), send `HELLO`, and hand the hub
 /// socket to a background reader thread. The worker then blocks in
 /// [`ProcessMailbox::await_phase`] until the hub opens a phase — there is
 /// deliberately no read timeout here, because a warm worker legitimately
 /// idles between jobs for as long as the daemon stays up; a dead hub
 /// surfaces as EOF.
 pub fn connect(path: &Path, rank: usize) -> Result<ProcessMailbox> {
+    let peer_path = peer_sock_path(path, rank);
+    let peer_listener = UnixListener::bind(&peer_path)
+        .with_context(|| format!("bind peer data-plane socket {}", peer_path.display()))?;
+    let (tx, rx) = channel();
+    let peer_tx = tx.clone();
+    let peer_accept = std::thread::spawn(move || peer_accept_loop(peer_listener, peer_tx));
+
     let mut stream = UnixStream::connect(path)
         .with_context(|| format!("connect to fabric hub at {}", path.display()))?;
-    write_frame(&mut stream, &Frame::Hello { rank: rank as u32 }).context("send HELLO")?;
+    let hello = Frame::Hello { rank: rank as u32, peer: peer_path.display().to_string() };
+    write_frame(&mut stream, &hello).context("send HELLO")?;
     let reader_stream = stream.try_clone().context("clone fabric socket")?;
-    let (tx, rx) = channel();
-    let reader = std::thread::spawn(move || reader_loop(reader_stream, tx));
+    let reader_tx = tx;
+    let reader = std::thread::spawn(move || reader_loop(reader_stream, reader_tx));
     Ok(ProcessMailbox {
         rank,
         size: 0,
@@ -130,7 +219,14 @@ pub fn connect(path: &Path, rank: usize) -> Result<ProcessMailbox> {
         rx,
         pending: VecDeque::new(),
         link: Link::Open,
+        peer_paths: Vec::new(),
+        peer_writers: Vec::new(),
+        epoch: 0,
+        phases_started: 0,
+        hub_frames: 0,
+        direct_frames: 0,
         _reader: reader,
+        _peer_listener: peer_accept,
     })
 }
 
@@ -138,8 +234,8 @@ fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
     loop {
         let ev = match read_frame(&mut stream) {
             Ok(Some(Frame::Relay { peer, msg })) => ChildEvent::Deliver { src: peer as usize, msg },
-            Ok(Some(Frame::Config(spec))) => ChildEvent::Config(spec),
-            Ok(Some(Frame::Reconfig(phase))) => ChildEvent::Reconfig(phase),
+            Ok(Some(Frame::Config { spec, peers })) => ChildEvent::Config { spec, peers },
+            Ok(Some(Frame::Reconfig { phase, peers })) => ChildEvent::Reconfig { phase, peers },
             Ok(Some(Frame::Start)) => ChildEvent::Start,
             Ok(Some(Frame::Bye)) => {
                 let _ = tx.send(ChildEvent::Bye);
@@ -167,29 +263,92 @@ fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
     }
 }
 
+/// Accept incoming mesh connections for the mailbox lifetime. Each peer
+/// opens with a `PEERHELLO`; a dedicated reader thread then feeds its
+/// `PEERMSG` frames into the shared event channel. A peer connection that
+/// EOFs or misbehaves is simply dropped — the hub link owns liveness, so a
+/// dead peer is reported by the hub as `Gone`, never inferred here.
+/// Transient `accept` failures (ECONNABORTED from a peer that died
+/// mid-connect, EMFILE under descriptor pressure in a long-lived daemon)
+/// must not kill the accept loop — a mesh-deaf worker would silently
+/// black-hole steal traffic for the rest of the fleet lifetime — so they
+/// are retried after a short sleep, mirroring the service listener. The
+/// thread lives as long as the worker process (a worker's mailbox does
+/// too; the process exits when the hub says `BYE`).
+fn peer_accept_loop(listener: UnixListener, tx: Sender<ChildEvent>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                std::thread::spawn(move || peer_reader_loop(stream, tx));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Per-connection mesh reader. The claimed source rank is range-checked
+/// by the mailbox against the phase's world size (`absorb` /
+/// `await_phase`), where that size is known — this thread only pins the
+/// connection to one rank and rejects frames that contradict it.
+fn peer_reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
+    let src = match read_frame(&mut stream) {
+        Ok(Some(Frame::PeerHello { rank })) => rank as usize,
+        _ => return, // not a well-formed peer: drop the connection
+    };
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(Frame::PeerMsg { src: claimed, epoch, msg }))
+                if claimed as usize == src =>
+            {
+                if tx.send(ChildEvent::PeerDeliver { src, epoch, msg }).is_err() {
+                    return; // mailbox dropped
+                }
+            }
+            // EOF, a frame claiming a different source, or any protocol
+            // error: the connection is useless; the sender will lazily
+            // reconnect if it is still alive.
+            _ => return,
+        }
+    }
+}
+
 impl ProcessMailbox {
     /// Block until the hub opens the next phase (`CONFIG`/`RECONFIG`
     /// followed by `START`) or dismisses the fleet (`BYE` → `None`).
     ///
-    /// Stale deliveries from the finished phase — late relays the hub
-    /// forwarded before it had collected every merge — arrive strictly
-    /// before the phase frame and are dropped; deliveries between the
-    /// phase frame and `START` belong to the new phase (a peer that
-    /// started earlier may already be stealing) and are buffered.
+    /// Stale deliveries from the finished phase are dropped; deliveries
+    /// that belong to the upcoming phase (a peer that started earlier may
+    /// already be stealing) are buffered until `START`. On the hub socket
+    /// the two cases are distinguished by FIFO order alone — stale relays
+    /// arrive strictly before the phase frame. Mesh deliveries ride
+    /// independent sockets with no such ordering, so they are fenced by
+    /// the epoch their sender stamped: a frame whose epoch is below the
+    /// upcoming phase's index is stale, anything at or above it belongs to
+    /// the phase being opened (DESIGN.md §10).
     pub fn await_phase(&mut self) -> Result<Option<PhaseStart>> {
         if let Link::Lost(e) = &self.link {
             bail!("fabric link lost: {e}");
         }
         self.pending.clear();
+        let next_epoch = self.phases_started;
+        let mut early: VecDeque<(usize, Msg)> = VecDeque::new();
         // 1. The phase frame (dropping stale traffic).
-        let start = loop {
+        let (start, peers) = loop {
             match self.recv_event()? {
-                ChildEvent::Config(spec) => {
+                ChildEvent::Config { spec, peers } => {
                     let RunSpec { phase, db } = *spec;
-                    break PhaseStart { phase, db: Some(db) };
+                    break (PhaseStart { phase, db: Some(db) }, peers);
                 }
-                ChildEvent::Reconfig(phase) => break PhaseStart { phase: *phase, db: None },
+                ChildEvent::Reconfig { phase, peers } => {
+                    break (PhaseStart { phase: *phase, db: None }, peers);
+                }
                 ChildEvent::Deliver { .. } => continue, // stale: previous phase
+                ChildEvent::PeerDeliver { src, epoch, msg } => {
+                    if epoch >= next_epoch {
+                        early.push_back((src, msg)); // eager peer, next phase
+                    }
+                }
                 ChildEvent::Bye => return Ok(None),
                 ChildEvent::Start => bail!("START from hub before CONFIG"),
                 ChildEvent::Lost(e) => {
@@ -205,13 +364,19 @@ impl ProcessMailbox {
             start.phase.p
         );
         self.size = start.phase.p as usize;
+        self.set_peers(peers)?;
         // 2. The START barrier (buffering early next-phase traffic).
         loop {
             match self.recv_event()? {
                 ChildEvent::Start => break,
-                ChildEvent::Deliver { src, msg } => self.pending.push_back((src, msg)),
+                ChildEvent::Deliver { src, msg } => early.push_back((src, msg)),
+                ChildEvent::PeerDeliver { src, epoch, msg } => {
+                    if epoch >= next_epoch {
+                        early.push_back((src, msg));
+                    }
+                }
                 ChildEvent::Bye => bail!("BYE from hub between CONFIG and START"),
-                ChildEvent::Config(_) | ChildEvent::Reconfig(_) => {
+                ChildEvent::Config { .. } | ChildEvent::Reconfig { .. } => {
                     bail!("duplicate CONFIG from hub before START")
                 }
                 ChildEvent::Lost(e) => {
@@ -220,7 +385,33 @@ impl ProcessMailbox {
                 }
             }
         }
+        // Buffered frames were collected before (loop 1) or after (loop 2)
+        // the world size was known; validate sources now, matching the
+        // in-phase check in `absorb`.
+        early.retain(|(src, _)| *src < self.size);
+        self.pending = early;
+        self.epoch = next_epoch;
+        self.phases_started += 1;
+        self.hub_frames = 0;
+        self.direct_frames = 0;
         Ok(Some(start))
+    }
+
+    /// Install the phase's peer socket map. Cached direct connections are
+    /// kept when the map is unchanged (the warm-fleet case) and dropped
+    /// when it differs (a respawned fleet binds fresh sockets).
+    fn set_peers(&mut self, peers: Vec<String>) -> Result<()> {
+        ensure!(
+            peers.is_empty() || peers.len() == self.size,
+            "peer map has {} entries for world size {}",
+            peers.len(),
+            self.size
+        );
+        if self.peer_paths != peers {
+            self.peer_writers = (0..peers.len()).map(|_| None).collect();
+            self.peer_paths = peers;
+        }
+        Ok(())
     }
 
     fn recv_event(&mut self) -> Result<ChildEvent> {
@@ -231,7 +422,20 @@ impl ProcessMailbox {
     fn absorb(&mut self, ev: ChildEvent) -> Option<(usize, Msg)> {
         match ev {
             ChildEvent::Deliver { src, msg } => Some((src, msg)),
-            ChildEvent::Config(_) | ChildEvent::Reconfig(_) | ChildEvent::Start
+            // Mesh frames from a finished phase can surface arbitrarily
+            // late (independent sockets, independent reader threads);
+            // anything below the current epoch is stale and dropped. A
+            // *future* epoch cannot occur mid-phase: no peer can start
+            // phase n+1 before the hub holds every merge of phase n,
+            // including ours — and we have not merged yet. The source rank
+            // is validated against the world size here (the reader thread
+            // cannot know it) — the mesh counterpart of the hub's
+            // out-of-range HELLO rejection: a stray connector must not be
+            // able to poison the DTD counters with unmatched messages.
+            ChildEvent::PeerDeliver { src, epoch, msg } => {
+                (epoch == self.epoch && src < self.size).then_some((src, msg))
+            }
+            ChildEvent::Config { .. } | ChildEvent::Reconfig { .. } | ChildEvent::Start
             | ChildEvent::Bye => {
                 if self.link == Link::Open {
                     self.link = Link::Lost("phase frame from hub mid-phase".into());
@@ -245,6 +449,63 @@ impl ProcessMailbox {
                 None
             }
         }
+    }
+
+    /// This phase's data-plane send counters: frames pushed through the
+    /// hub relay and frames sent directly to peers. Reset at every
+    /// `START`; the worker folds them into its `MERGE` so the hub-vs-mesh
+    /// split is observable end to end ([`crate::fabric::CommStats`]).
+    pub fn plane_counters(&self) -> (u64, u64) {
+        (self.hub_frames, self.direct_frames)
+    }
+
+    /// Send `msg` over a lazily opened direct connection to `dst`; `true`
+    /// = the frame was written. A write failure on a *cached* stream does
+    /// not lose the frame: the stream may merely be stale (the receiver
+    /// dropped one connection), so it is discarded and the same frame
+    /// retried on a fresh connect (twice, with a short pause, to ride out
+    /// transient refusals such as a momentarily full listener backlog).
+    ///
+    /// Exhausting the retries severs the link: a silently dropped frame to
+    /// a live peer would permanently unbalance the Mattern send/receive
+    /// counts — no `Gone` fires, termination is never detected, and the
+    /// phase hangs forever. Failing loudly instead aborts this worker, the
+    /// hub reports it `Gone`, and the fleet owner respawns — exactly the
+    /// hub plane's write-failure semantics. (If the *peer* was the dead
+    /// one, its own `Gone` had already doomed the phase anyway.)
+    fn send_direct(&mut self, dst: usize, msg: Msg) -> bool {
+        if dst >= self.peer_writers.len() {
+            self.link = Link::Lost(format!("direct send to out-of-range rank {dst}"));
+            return false;
+        }
+        let frame = Frame::PeerMsg { src: self.rank as u32, epoch: self.epoch, msg };
+        if let Some(w) = self.peer_writers[dst].as_mut() {
+            if write_frame(w, &frame).is_ok() {
+                return true;
+            }
+            self.peer_writers[dst] = None; // stale stream: retry fresh below
+        }
+        for attempt in 0..2 {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            if let Ok(mut stream) = self.open_peer(dst) {
+                if write_frame(&mut stream, &frame).is_ok() {
+                    self.peer_writers[dst] = Some(stream);
+                    return true;
+                }
+            }
+        }
+        self.link =
+            Link::Lost(format!("direct send to rank {dst} failed after reconnect attempts"));
+        false
+    }
+
+    /// Open a fresh direct connection to `dst`: connect + `PEERHELLO`.
+    fn open_peer(&self, dst: usize) -> std::io::Result<UnixStream> {
+        let mut stream = UnixStream::connect(&self.peer_paths[dst])?;
+        write_frame(&mut stream, &Frame::PeerHello { rank: self.rank as u32 })?;
+        Ok(stream)
     }
 
     /// The error that severed the hub link, if any. The worker loop checks
@@ -299,9 +560,19 @@ impl Mailbox for ProcessMailbox {
         if self.link != Link::Open {
             return; // shutdown race: mirror the dropped-peer no-op
         }
+        // The plane counters record frames actually written, so a failed
+        // send (which severs the link) never inflates them.
+        if !self.peer_paths.is_empty() {
+            // Mesh data plane: worker-to-worker, zero hub hops.
+            if self.send_direct(dst, msg) {
+                self.direct_frames += 1;
+            }
+            return;
+        }
         let frame = Frame::Relay { peer: dst as u32, msg };
-        if let Err(e) = write_frame(&mut self.writer, &frame) {
-            self.link = Link::Lost(format!("send to hub failed: {e}"));
+        match write_frame(&mut self.writer, &frame) {
+            Ok(()) => self.hub_frames += 1,
+            Err(e) => self.link = Link::Lost(format!("send to hub failed: {e}")),
         }
     }
 
@@ -351,6 +622,8 @@ pub struct Hub {
     events_rx: Receiver<HubEvent>,
     routers: Vec<JoinHandle<()>>,
     connected: usize,
+    /// Each rank's own data-plane socket path, learned from its `HELLO`.
+    peer_paths: Vec<Option<String>>,
 }
 
 impl Hub {
@@ -369,12 +642,26 @@ impl Hub {
             events_rx,
             routers: Vec::with_capacity(p),
             connected: 0,
+            peer_paths: vec![None; p],
         })
     }
 
     /// Ranks that have completed the `HELLO` handshake so far.
     pub fn connected(&self) -> usize {
         self.connected
+    }
+
+    /// The mesh peer socket map: every rank's own data-plane socket path
+    /// in rank order, as reported in the `HELLO` handshakes. Errors until
+    /// the whole fleet has connected.
+    pub fn peer_map(&self) -> Result<Vec<String>> {
+        self.peer_paths
+            .iter()
+            .enumerate()
+            .map(|(rank, p)| {
+                p.clone().with_context(|| format!("rank {rank} has not completed HELLO"))
+            })
+            .collect()
     }
 
     /// Accept and handshake at most one pending worker connection. Returns
@@ -389,8 +676,8 @@ impl Hub {
         stream.set_nonblocking(false).context("set worker socket blocking")?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
         let frame = read_frame(&mut stream)?.context("worker closed during handshake")?;
-        let rank = match frame {
-            Frame::Hello { rank } => rank as usize,
+        let (rank, peer) = match frame {
+            Frame::Hello { rank, peer } => (rank as usize, peer),
             other => bail!("expected HELLO from worker, got {}", other.name()),
         };
         ensure!(rank < self.p, "HELLO rank {rank} out of range for world size {}", self.p);
@@ -401,6 +688,7 @@ impl Hub {
             ensure!(slot.is_none(), "duplicate HELLO for rank {rank}");
             *slot = Some(stream);
         }
+        self.peer_paths[rank] = Some(peer);
         let writers = Arc::clone(&self.writers);
         let tx = self.events_tx.clone();
         let p = self.p;
@@ -428,11 +716,13 @@ impl Hub {
     }
 
     /// Open a phase by shipping the full run specification — phase
-    /// parameters *plus* database — to every rank. Use
+    /// parameters *plus* database — to every rank. `peers` selects the
+    /// data plane: the mesh peer socket map ([`Hub::peer_map`]) for direct
+    /// worker-to-worker traffic, or empty for the hub relay. Use
     /// [`Hub::broadcast_reconfig`] instead when the workers already hold
     /// the database (the warm-fleet fast path).
-    pub fn broadcast_config(&mut self, spec: &RunSpec) -> Result<()> {
-        let bytes = encode_config(spec);
+    pub fn broadcast_config(&mut self, spec: &RunSpec, peers: &[String]) -> Result<()> {
+        let bytes = encode_config(spec, peers);
         ensure!(
             bytes.len() - 4 <= MAX_FRAME_LEN as usize,
             "CONFIG frame ({} bytes) exceeds the {MAX_FRAME_LEN}-byte frame cap; \
@@ -443,11 +733,11 @@ impl Hub {
     }
 
     /// Open a phase over the database the workers already hold: ships the
-    /// phase parameters only (a ~60-byte frame instead of the serialized
-    /// database).
-    pub fn broadcast_reconfig(&mut self, phase: &PhaseSpec) -> Result<()> {
-        let bytes = Frame::Reconfig(Box::new(phase.clone())).encode();
-        self.broadcast_bytes(&bytes, "send RECONFIG")
+    /// phase parameters (plus the peer map, as in [`Hub::broadcast_config`])
+    /// only — a ~60-byte frame instead of the serialized database.
+    pub fn broadcast_reconfig(&mut self, phase: &PhaseSpec, peers: &[String]) -> Result<()> {
+        let frame = Frame::Reconfig { phase: Box::new(phase.clone()), peers: peers.to_vec() };
+        self.broadcast_bytes(&frame.encode(), "send RECONFIG")
     }
 
     /// Release the phase barrier: broadcast `START`. Workers begin the
@@ -667,16 +957,141 @@ mod tests {
 
         accept_all(&mut hub, 2);
         // Phase 1: full CONFIG.
-        hub.broadcast_config(&tiny_spec(2)).unwrap();
+        hub.broadcast_config(&tiny_spec(2), &[]).unwrap();
         hub.start_all().unwrap();
         collect_merges(&hub, 2);
         // Phase 2: RECONFIG over the resident database.
-        hub.broadcast_reconfig(&tiny_phase(2, 2)).unwrap();
+        hub.broadcast_reconfig(&tiny_phase(2, 2), &[]).unwrap();
         hub.start_all().unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
         w1.join().unwrap().unwrap();
+        hub.join();
+    }
+
+    /// The same two-phase warm exchange over the MESH data plane: the hub
+    /// distributes the peer socket map, workers talk directly, and the
+    /// per-phase plane counters show zero hub-relayed frames.
+    #[test]
+    fn warm_mesh_runs_two_phases_with_direct_peer_traffic() {
+        let sock = test_sock("mesh");
+        let mut hub = Hub::bind(&sock, 2).unwrap();
+
+        let spawn_worker = |rank: usize, sock: std::path::PathBuf| {
+            std::thread::spawn(move || -> Result<()> {
+                let mut mb = connect(&sock, rank)?;
+                let mut phases = 0u32;
+                while let Some(start) = mb.await_phase()? {
+                    assert_eq!(start.phase.p, 2);
+                    let peer = 1 - rank;
+                    mb.send(peer, Msg::WaveDown { t: rank as u64, lambda: 7 + phases });
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    let got = loop {
+                        if let Some(got) = mb.try_recv() {
+                            break got;
+                        }
+                        assert!(Instant::now() < deadline, "no message from peer");
+                        mb.wait_for_msg(Duration::from_millis(10));
+                    };
+                    assert_eq!(got.0, peer, "direct frames must carry the sender rank");
+                    assert!(
+                        matches!(got.1, Msg::WaveDown { lambda, .. } if lambda == 7 + phases)
+                    );
+                    let (hub_frames, direct_frames) = mb.plane_counters();
+                    assert_eq!(hub_frames, 0, "mesh phase must not relay through the hub");
+                    assert_eq!(direct_frames, 1);
+                    mb.send_merge(&merge_for(rank as u32))?;
+                    phases += 1;
+                }
+                assert_eq!(phases, 2);
+                Ok(())
+            })
+        };
+        let w0 = spawn_worker(0, sock.clone());
+        let w1 = spawn_worker(1, sock.clone());
+
+        accept_all(&mut hub, 2);
+        let peers = hub.peer_map().unwrap();
+        assert_eq!(peers.len(), 2);
+        assert!(peers[0].ends_with(".r0") && peers[1].ends_with(".r1"), "{peers:?}");
+        hub.broadcast_config(&tiny_spec(2), &peers).unwrap();
+        hub.start_all().unwrap();
+        collect_merges(&hub, 2);
+        hub.broadcast_reconfig(&tiny_phase(2, 2), &peers).unwrap();
+        hub.start_all().unwrap();
+        collect_merges(&hub, 2);
+        hub.broadcast_bye();
+        w0.join().unwrap().unwrap();
+        w1.join().unwrap().unwrap();
+        hub.join();
+    }
+
+    /// FIFO per (src, dst) on the mesh data plane: two senders each push a
+    /// numbered sequence at a common receiver over direct connections; the
+    /// receiver must observe every source's sequence in send order
+    /// (interleaving across sources is free).
+    #[test]
+    fn mesh_preserves_fifo_per_src_dst_pair() {
+        const N: u64 = 200;
+        let sock = test_sock("fifo");
+        let mut hub = Hub::bind(&sock, 3).unwrap();
+
+        let sender = |rank: usize, sock: std::path::PathBuf| {
+            std::thread::spawn(move || -> Result<()> {
+                let mut mb = connect(&sock, rank)?;
+                while let Some(_start) = mb.await_phase()? {
+                    for t in 0..N {
+                        mb.send(1, Msg::WaveDown { t, lambda: rank as u32 });
+                    }
+                    mb.send_merge(&merge_for(rank as u32))?;
+                }
+                Ok(())
+            })
+        };
+        let receiver = std::thread::spawn({
+            let sock = sock.clone();
+            move || -> Result<()> {
+                let mut mb = connect(&sock, 1)?;
+                while let Some(_start) = mb.await_phase()? {
+                    let mut next = [0u64; 3]; // per-source expected sequence number
+                    let mut got = 0u64;
+                    let deadline = Instant::now() + Duration::from_secs(20);
+                    while got < 2 * N {
+                        let Some((src, msg)) = mb.try_recv() else {
+                            ensure!(Instant::now() < deadline, "only {got} of {} msgs", 2 * N);
+                            mb.wait_for_msg(Duration::from_millis(10));
+                            continue;
+                        };
+                        let Msg::WaveDown { t, lambda } = msg else {
+                            bail!("unexpected message {msg:?}");
+                        };
+                        ensure!(lambda as usize == src, "stamped source mismatch");
+                        ensure!(
+                            t == next[src],
+                            "src {src}: got seq {t}, expected {} — FIFO violated",
+                            next[src]
+                        );
+                        next[src] += 1;
+                        got += 1;
+                    }
+                    mb.send_merge(&merge_for(1))?;
+                }
+                Ok(())
+            }
+        });
+        let s0 = sender(0, sock.clone());
+        let s2 = sender(2, sock.clone());
+
+        accept_all(&mut hub, 3);
+        let peers = hub.peer_map().unwrap();
+        hub.broadcast_config(&tiny_spec(3), &peers).unwrap();
+        hub.start_all().unwrap();
+        collect_merges(&hub, 3);
+        hub.broadcast_bye();
+        s0.join().unwrap().unwrap();
+        s2.join().unwrap().unwrap();
+        receiver.join().unwrap().unwrap();
         hub.join();
     }
 
@@ -722,7 +1137,7 @@ mod tests {
             }
         });
         accept_all(&mut hub, 2);
-        hub.broadcast_config(&tiny_spec(2)).unwrap();
+        hub.broadcast_config(&tiny_spec(2), &[]).unwrap();
         hub.start_all().unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_bye();
@@ -756,22 +1171,25 @@ mod tests {
     fn hub_rejects_out_of_range_and_duplicate_ranks() {
         let sock = test_sock("badrank");
         let mut hub = Hub::bind(&sock, 2).unwrap();
+        let hello = |rank| Frame::Hello { rank, peer: format!("/nowhere.r{rank}") };
         // out-of-range rank
         let mut s = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut s, &Frame::Hello { rank: 9 }).unwrap();
+        write_frame(&mut s, &hello(9)).unwrap();
         let err = accept_outcome(&mut hub).expect_err("rank 9 must be rejected");
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
         // duplicate rank: first registration succeeds, second errors
         let mut a = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut a, &Frame::Hello { rank: 0 }).unwrap();
+        write_frame(&mut a, &hello(0)).unwrap();
         assert!(accept_outcome(&mut hub).unwrap());
         let mut b = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut b, &Frame::Hello { rank: 0 }).unwrap();
+        write_frame(&mut b, &hello(0)).unwrap();
         let err = accept_outcome(&mut hub).expect_err("duplicate rank must be rejected");
         assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
         assert_eq!(hub.connected(), 1);
+        // the peer map is incomplete until every rank has connected
+        assert!(hub.peer_map().is_err());
         // a phase broadcast with a missing rank fails loudly
-        let err = hub.broadcast_config(&tiny_spec(2)).expect_err("incomplete fleet");
+        let err = hub.broadcast_config(&tiny_spec(2), &[]).expect_err("incomplete fleet");
         assert!(format!("{err:#}").contains("1/2"), "{err:#}");
     }
 }

@@ -109,13 +109,19 @@ impl Lifelines {
         self.neighbors.iter().position(|&n| n == src)
     }
 
-    /// A uniformly random steal victim ≠ self (the `w` random steals).
-    pub fn random_victim(&self, rng: &mut Rng) -> usize {
-        debug_assert!(self.size > 1);
+    /// A uniformly random steal victim ≠ self (the `w` random steals), or
+    /// `None` in a single-process world, where no victim exists. Returning
+    /// `None` (instead of asserting) matters in release builds: the old
+    /// `debug_assert!` compiled away and the rejection loop spun forever
+    /// when `size == 1`.
+    pub fn random_victim(&self, rng: &mut Rng) -> Option<usize> {
+        if self.size <= 1 {
+            return None;
+        }
         loop {
             let v = rng.index(self.size);
             if v != self.rank {
-                return v;
+                return Some(v);
             }
         }
     }
@@ -195,8 +201,19 @@ mod tests {
         let ll = Lifelines::new(3, 7, 2);
         let mut rng = Rng::new(1);
         for _ in 0..200 {
-            let v = ll.random_victim(&mut rng);
+            let v = ll.random_victim(&mut rng).expect("victims exist for size 7");
             assert!(v < 7 && v != 3);
+        }
+    }
+
+    #[test]
+    fn random_victim_is_none_in_a_singleton_world() {
+        // Must return (None), not spin: the guard used to be a
+        // debug_assert!, which release builds compile away.
+        let ll = Lifelines::new(0, 1, 2);
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(ll.random_victim(&mut rng), None);
         }
     }
 

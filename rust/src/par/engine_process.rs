@@ -20,8 +20,11 @@
 //! phase 1's database).
 //!
 //! The parent (this module) is the coordinator side: it spawns and
-//! supervises the worker fleet, routes their traffic, collects the
-//! per-rank merges into a [`ParRunResult`], and tears the fleet down. The
+//! supervises the worker fleet, owns the control plane (and, under
+//! `--data-plane hub`, relays the data plane too — under the default mesh
+//! plane the workers exchange steal traffic and DTD waves directly,
+//! DESIGN.md §10), collects the per-rank merges into a [`ParRunResult`],
+//! and tears the fleet down. The
 //! child side is [`worker_main`], reached through the hidden `__worker`
 //! CLI entry point — worker processes re-execute the `parlamp` binary (or
 //! whatever [`ProcessConfig::worker_exe`] / `$PARLAMP_WORKER_EXE` names,
@@ -35,7 +38,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::db::Database;
-use crate::fabric::process::{connect, Hub, HubEvent};
+use crate::fabric::process::{connect, DataPlane, Hub, HubEvent};
 use crate::fabric::CommStats;
 use crate::lcm::SupportHist;
 use crate::wire::{PhaseSpec, RunSpec, WorkerMerge};
@@ -76,6 +79,11 @@ pub struct ProcessConfig {
     pub worker_exe: Option<PathBuf>,
     /// How long to wait for the whole fleet to spawn and handshake.
     pub spawn_timeout: Duration,
+    /// Which topology carries steal traffic and DTD waves: direct
+    /// worker-to-worker sockets (`Mesh`, the default) or the parent hub
+    /// relay (`Hub`, the centralized baseline). A fleet property — fixed
+    /// at [`ProcessFleet::spawn`] for the fleet's whole lifetime.
+    pub data_plane: DataPlane,
 }
 
 impl ProcessConfig {
@@ -92,6 +100,7 @@ impl ProcessConfig {
             seed,
             worker_exe: None,
             spawn_timeout: Duration::from_secs(30),
+            data_plane: DataPlane::Mesh,
         }
     }
 }
@@ -169,7 +178,9 @@ impl Drop for Fleet {
 }
 
 /// Remove the per-fleet socket directory when the fleet ends, however it
-/// ends.
+/// ends. This covers the hub socket *and* every worker's own mesh
+/// data-plane socket (`hub.sock.r<rank>`, DESIGN.md §10), which the
+/// workers bind inside the same directory.
 struct SockDir(PathBuf);
 
 impl Drop for SockDir {
@@ -217,6 +228,13 @@ pub struct ProcessFleet {
     p: usize,
     /// Digest of the database currently resident on every worker.
     resident_db: Option<u64>,
+    /// Data plane this fleet was spawned with. Fixed for the fleet
+    /// lifetime: the mesh peer map is resolved once at spawn (every
+    /// worker's own socket path, learned during the `HELLO` handshakes)
+    /// and redistributed with each phase frame.
+    data_plane: DataPlane,
+    /// The resolved mesh peer socket map; empty under [`DataPlane::Hub`].
+    peers: Vec<String>,
 }
 
 impl ProcessFleet {
@@ -242,7 +260,19 @@ impl ProcessFleet {
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
-        Ok(ProcessFleet { hub, fleet, _sock_dir: sock_dir, p, resident_db: None })
+        let peers = match cfg.data_plane {
+            DataPlane::Mesh => hub.peer_map().context("resolve mesh peer socket map")?,
+            DataPlane::Hub => Vec::new(),
+        };
+        Ok(ProcessFleet {
+            hub,
+            fleet,
+            _sock_dir: sock_dir,
+            p,
+            resident_db: None,
+            data_plane: cfg.data_plane,
+            peers,
+        })
     }
 
     /// World size.
@@ -250,9 +280,16 @@ impl ProcessFleet {
         self.p
     }
 
+    /// The data plane this fleet was spawned with.
+    pub fn data_plane(&self) -> DataPlane {
+        self.data_plane
+    }
+
     /// Run one phase across the warm fleet and block until every rank's
     /// phase-boundary merge arrived. Ships the database only when its
     /// digest differs from what the workers hold (`CONFIG` vs `RECONFIG`).
+    /// The data plane is the fleet's, fixed at spawn — `cfg.data_plane` is
+    /// ignored here.
     pub fn run_phase(
         &mut self,
         db: &Database,
@@ -274,12 +311,12 @@ impl ProcessFleet {
         };
         let digest = db.digest();
         if self.resident_db == Some(digest) {
-            self.hub.broadcast_reconfig(&phase)?;
+            self.hub.broadcast_reconfig(&phase, &self.peers)?;
         } else {
             // Invalidate first: a partial broadcast failure leaves the fleet
             // in a mixed state, and the fleet is poisoned anyway on error.
             self.resident_db = None;
-            self.hub.broadcast_config(&RunSpec { phase, db: db.clone() })?;
+            self.hub.broadcast_config(&RunSpec { phase, db: db.clone() }, &self.peers)?;
             self.resident_db = Some(digest);
         }
         self.hub.start_all()?;
@@ -448,6 +485,13 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
         }
         let makespan_ns = t0.elapsed().as_nanos() as u64;
 
+        // Fold the mailbox's per-phase data-plane split into the comm
+        // counters so the hub-vs-mesh ablation is observable in the merge.
+        let (hub_frames, direct_frames) = mb.plane_counters();
+        let mut comm = worker.comm;
+        comm.hub_frames = hub_frames;
+        comm.direct_frames = direct_frames;
+
         let hist = worker.hist().sparse();
         let merge = WorkerMerge {
             rank: rank as u32,
@@ -455,7 +499,7 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             closed_count: worker.closed_count(),
             work_units: worker.work_units(),
             breakdown: worker.breakdown,
-            comm: worker.comm,
+            comm,
             makespan_ns,
         };
         mb.send_merge(&merge)?;

@@ -23,6 +23,7 @@ pub mod engine_thread;
 pub mod worker;
 
 pub use breakdown::Breakdown;
+pub use crate::fabric::process::DataPlane;
 pub use engine_process::{run_process, run_process_with, ProcessConfig, ProcessFleet};
 pub use engine_sim::{run_sim, SimConfig};
 pub use engine_thread::{run_threads, run_threads_with, ThreadConfig};

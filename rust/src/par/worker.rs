@@ -499,16 +499,17 @@ impl<'d> Worker<'d> {
     }
 
     /// Start the steal sequence (stack just emptied): `w` random steals,
-    /// awaited one at a time; then lifelines.
+    /// awaited one at a time; then lifelines. A world with no possible
+    /// victim (`random_victim` → `None`) skips straight to lifelines.
     fn begin_steal(&mut self, mb: &mut dyn Mailbox) -> StealState {
         if self.cfg.w > 0 {
-            let victim = self.lifelines.random_victim(&mut self.rng);
-            self.comm.steal_requests += 1;
-            self.send_basic(mb, victim, BasicKind::Request { lifeline: false });
-            StealState::AwaitReply { tries: 1 }
-        } else {
-            self.post_lifelines(mb)
+            if let Some(victim) = self.lifelines.random_victim(&mut self.rng) {
+                self.comm.steal_requests += 1;
+                self.send_basic(mb, victim, BasicKind::Request { lifeline: false });
+                return StealState::AwaitReply { tries: 1 };
+            }
         }
+        self.post_lifelines(mb)
     }
 
     /// Send lifeline requests to all not-yet-activated lifelines, then idle.
@@ -602,10 +603,13 @@ impl<'d> Worker<'d> {
             if !self.stack.is_empty() {
                 self.steal_state = StealState::HaveWork;
             } else if tries < self.cfg.w {
-                let victim = self.lifelines.random_victim(&mut self.rng);
-                self.comm.steal_requests += 1;
-                self.send_basic(mb, victim, BasicKind::Request { lifeline: false });
-                self.steal_state = StealState::AwaitReply { tries: tries + 1 };
+                if let Some(victim) = self.lifelines.random_victim(&mut self.rng) {
+                    self.comm.steal_requests += 1;
+                    self.send_basic(mb, victim, BasicKind::Request { lifeline: false });
+                    self.steal_state = StealState::AwaitReply { tries: tries + 1 };
+                } else {
+                    self.steal_state = self.post_lifelines(mb);
+                }
             } else {
                 self.steal_state = self.post_lifelines(mb);
             }

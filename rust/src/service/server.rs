@@ -27,7 +27,7 @@ use std::time::Duration;
 use anyhow::{Context as _, Result};
 
 use crate::coordinator::Coordinator;
-use crate::par::{ProcessConfig, ProcessFleet};
+use crate::par::{DataPlane, ProcessConfig, ProcessFleet};
 use crate::util::sig;
 use crate::wire::service::{JobOutcome, JobSpec, JobState};
 use crate::wire::{read_frame, write_frame, Frame};
@@ -49,6 +49,11 @@ pub struct ServeConfig {
     pub worker_exe: Option<PathBuf>,
     /// Fleet spawn/handshake timeout.
     pub spawn_timeout: Duration,
+    /// Data plane of the warm fleet (`--data-plane hub|mesh`, DESIGN.md
+    /// §10). A daemon property like the fleet size: the mesh peer links
+    /// are opened lazily and then kept warm across jobs, so a stream of
+    /// steal-heavy jobs pays the connect cost once.
+    pub data_plane: DataPlane,
 }
 
 impl ServeConfig {
@@ -59,6 +64,7 @@ impl ServeConfig {
             cache_cap: 32,
             worker_exe: None,
             spawn_timeout: Duration::from_secs(30),
+            data_plane: DataPlane::Mesh,
         }
     }
 }
@@ -141,12 +147,17 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     let fleet_cfg = ProcessConfig {
         worker_exe: cfg.worker_exe.clone(),
         spawn_timeout: cfg.spawn_timeout,
+        data_plane: cfg.data_plane,
         ..ProcessConfig::paper_defaults(cfg.procs, 2015)
     };
     // Fleet first: a daemon that cannot mine should fail before it starts
     // accepting submissions.
     let mut fleet = Some(ProcessFleet::spawn(&fleet_cfg).context("spawn warm worker fleet")?);
-    println!("parlamp serve: fleet of {} worker processes warm", cfg.procs);
+    println!(
+        "parlamp serve: fleet of {} worker processes warm ({} data plane)",
+        cfg.procs,
+        cfg.data_plane.name()
+    );
 
     let listener = UnixListener::bind(&cfg.socket).with_context(|| {
         format!(

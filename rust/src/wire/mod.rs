@@ -30,10 +30,11 @@
 //! ## Versioning
 //!
 //! [`HELLO`](Frame::Hello), [`CONFIG`](Frame::Config),
-//! [`RECONFIG`](Frame::Reconfig), and [`SUBMIT`](Frame::Submit) all carry
-//! [`WIRE_VERSION`]. The receiving side rejects a peer whose version
-//! differs, so a stale binary on one side of the socket produces one clear
-//! error instead of a garbled protocol exchange.
+//! [`RECONFIG`](Frame::Reconfig), [`PEERHELLO`](Frame::PeerHello), and
+//! [`SUBMIT`](Frame::Submit) all carry [`WIRE_VERSION`]. The receiving
+//! side rejects a peer whose version differs, so a stale binary on one
+//! side of the socket produces one clear error instead of a garbled
+//! protocol exchange.
 
 pub mod service;
 
@@ -54,7 +55,12 @@ pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 /// v2: split `CONFIG` into reusable [`PhaseSpec`] + database, added
 /// `RECONFIG` (warm-fleet phase without re-shipping the database) and the
 /// `parlamp serve` job frames.
-pub const WIRE_VERSION: u16 = 2;
+/// v3: the peer-to-peer mesh data plane (DESIGN.md §10) — `HELLO` reports
+/// the worker's own data-plane socket path, `CONFIG`/`RECONFIG` carry the
+/// peer socket map, and `PEERHELLO`/`PEERMSG` open and carry the direct
+/// worker-to-worker connections (epoch-stamped for phase fencing). `MERGE`
+/// gains the hub-relayed / direct frame counters.
+pub const WIRE_VERSION: u16 = 3;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -75,6 +81,9 @@ const TAG_MERGE: u8 = 0x04;
 const TAG_BYE: u8 = 0x05;
 const TAG_START: u8 = 0x06;
 const TAG_RECONFIG: u8 = 0x07;
+// Mesh data plane (worker ↔ worker direct connections, DESIGN.md §10).
+const TAG_PEERHELLO: u8 = 0x08;
+const TAG_PEERMSG: u8 = 0x09;
 // Job frames (the `parlamp serve` client protocol, DESIGN.md §9) live in
 // a disjoint tag range so fabric and service streams can never be confused.
 const TAG_SUBMIT: u8 = 0x10;
@@ -143,14 +152,30 @@ pub struct WorkerMerge {
 /// Everything that crosses a process-fabric or service socket.
 #[derive(Clone, Debug)]
 pub enum Frame {
-    /// Worker → hub, first frame after connect: magic, version, own rank.
-    Hello { rank: u32 },
+    /// Worker → hub, first frame after connect: magic, version, own rank,
+    /// and the path of the worker's own data-plane listener socket (the
+    /// `<hub>.r<rank>` peer socket; used when the hub selects the mesh
+    /// data plane, DESIGN.md §10).
+    Hello { rank: u32, peer: String },
     /// Hub → worker: the phase specification plus the database. Sent once
     /// per dataset; subsequent phases over the same data use `Reconfig`.
-    Config(Box<RunSpec>),
+    /// `peers` is the peer socket map (one path per rank) when this phase
+    /// runs on the mesh data plane; empty = hub-relayed data plane.
+    Config { spec: Box<RunSpec>, peers: Vec<String> },
     /// Hub → worker: a new phase over the database shipped by the most
     /// recent `Config` — the warm-fleet fast path (no database bytes).
-    Reconfig(Box<PhaseSpec>),
+    /// `peers` as in `Config`.
+    Reconfig { phase: Box<PhaseSpec>, peers: Vec<String> },
+    /// Worker → worker, first frame on a direct mesh connection: magic,
+    /// version, the *sender's* rank. Opens the lazy data-plane link.
+    PeerHello { rank: u32 },
+    /// Worker → worker direct data-plane message: the sender's rank (must
+    /// match the connection's `PeerHello`), the sender's phase index
+    /// (epoch), and the protocol message. The epoch fences phases: unlike
+    /// the hub path, mesh sockets carry no CONFIG/START ordering, so the
+    /// receiver drops frames from finished phases and buffers frames from
+    /// a phase it has not started yet (DESIGN.md §10).
+    PeerMsg { src: u32, epoch: u64, msg: Msg },
     /// Hub → worker once *every* rank has completed the handshake: begin
     /// the phase. Separating `START` from `CONFIG` gives the run an MPI-like
     /// startup barrier, so no worker can send steal traffic toward a rank
@@ -188,8 +213,10 @@ impl Frame {
     pub fn name(&self) -> &'static str {
         match self {
             Frame::Hello { .. } => "HELLO",
-            Frame::Config(_) => "CONFIG",
-            Frame::Reconfig(_) => "RECONFIG",
+            Frame::Config { .. } => "CONFIG",
+            Frame::Reconfig { .. } => "RECONFIG",
+            Frame::PeerHello { .. } => "PEERHELLO",
+            Frame::PeerMsg { .. } => "PEERMSG",
             Frame::Start => "START",
             Frame::Relay { .. } => "RELAY",
             Frame::Merge(_) => "MERGE",
@@ -574,13 +601,32 @@ fn get_phase(d: &mut Dec) -> Result<PhaseSpec> {
     })
 }
 
-fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec) {
-    put_phase(buf, &spec.phase);
-    put_db(buf, &spec.db);
+/// The peer socket map carried by `CONFIG`/`RECONFIG`: one path per rank
+/// in rank order, or empty for the hub-relayed data plane.
+fn put_peers(buf: &mut Vec<u8>, peers: &[String]) {
+    put_u32(buf, peers.len() as u32);
+    for p in peers {
+        put_str(buf, p);
+    }
 }
 
-fn get_spec(d: &mut Dec) -> Result<RunSpec> {
-    Ok(RunSpec { phase: get_phase(d)?, db: get_db(d)? })
+fn get_peers(d: &mut Dec) -> Result<Vec<String>> {
+    // Each entry carries at least its 4-byte length prefix, so the count
+    // is validated against the remaining payload before any allocation.
+    let n = d.count(4)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.str()?);
+    }
+    Ok(out)
+}
+
+/// `CONFIG` payload: phase, peer map, then the database — the small
+/// header fields first, the bulk payload last.
+fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec, peers: &[String]) {
+    put_phase(buf, &spec.phase);
+    put_peers(buf, peers);
+    put_db(buf, &spec.db);
 }
 
 fn put_merge(buf: &mut Vec<u8>, m: &WorkerMerge) {
@@ -599,6 +645,8 @@ fn put_merge(buf: &mut Vec<u8>, m: &WorkerMerge) {
     put_u64(buf, m.comm.gives);
     put_u64(buf, m.comm.tasks_shipped);
     put_u64(buf, m.comm.bytes_sent);
+    put_u64(buf, m.comm.hub_frames);
+    put_u64(buf, m.comm.direct_frames);
     put_u64(buf, m.makespan_ns);
 }
 
@@ -622,6 +670,8 @@ fn get_merge(d: &mut Dec) -> Result<WorkerMerge> {
             gives: d.u64()?,
             tasks_shipped: d.u64()?,
             bytes_sent: d.u64()?,
+            hub_frames: d.u64()?,
+            direct_frames: d.u64()?,
         },
         makespan_ns: d.u64()?,
     })
@@ -634,19 +684,33 @@ impl Frame {
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::new();
         match self {
-            Frame::Hello { rank } => {
+            Frame::Hello { rank, peer } => {
                 put_u8(&mut body, TAG_HELLO);
                 body.extend_from_slice(&WIRE_MAGIC);
                 put_u16(&mut body, WIRE_VERSION);
                 put_u32(&mut body, *rank);
+                put_str(&mut body, peer);
             }
-            Frame::Config(spec) => {
+            Frame::Config { spec, peers } => {
                 put_u8(&mut body, TAG_CONFIG);
-                put_spec(&mut body, spec);
+                put_spec(&mut body, spec, peers);
             }
-            Frame::Reconfig(phase) => {
+            Frame::Reconfig { phase, peers } => {
                 put_u8(&mut body, TAG_RECONFIG);
                 put_phase(&mut body, phase);
+                put_peers(&mut body, peers);
+            }
+            Frame::PeerHello { rank } => {
+                put_u8(&mut body, TAG_PEERHELLO);
+                body.extend_from_slice(&WIRE_MAGIC);
+                put_u16(&mut body, WIRE_VERSION);
+                put_u32(&mut body, *rank);
+            }
+            Frame::PeerMsg { src, epoch, msg } => {
+                put_u8(&mut body, TAG_PEERMSG);
+                put_u32(&mut body, *src);
+                put_u64(&mut body, *epoch);
+                put_msg(&mut body, msg);
             }
             Frame::Start => put_u8(&mut body, TAG_START),
             Frame::Relay { peer, msg } => {
@@ -716,10 +780,34 @@ impl Frame {
                     version == WIRE_VERSION,
                     "wire: HELLO version {version} != supported {WIRE_VERSION}"
                 );
-                Frame::Hello { rank: d.u32()? }
+                Frame::Hello { rank: d.u32()?, peer: d.str()? }
             }
-            TAG_CONFIG => Frame::Config(Box::new(get_spec(&mut d)?)),
-            TAG_RECONFIG => Frame::Reconfig(Box::new(get_phase(&mut d)?)),
+            TAG_CONFIG => {
+                let phase = get_phase(&mut d)?;
+                let peers = get_peers(&mut d)?;
+                let db = get_db(&mut d)?;
+                Frame::Config { spec: Box::new(RunSpec { phase, db }), peers }
+            }
+            TAG_RECONFIG => {
+                let phase = Box::new(get_phase(&mut d)?);
+                let peers = get_peers(&mut d)?;
+                Frame::Reconfig { phase, peers }
+            }
+            TAG_PEERHELLO => {
+                let magic = d.take(4)?;
+                ensure!(magic == WIRE_MAGIC, "wire: bad PEERHELLO magic {magic:02x?}");
+                let version = d.u16()?;
+                ensure!(
+                    version == WIRE_VERSION,
+                    "wire: PEERHELLO version {version} != supported {WIRE_VERSION}"
+                );
+                Frame::PeerHello { rank: d.u32()? }
+            }
+            TAG_PEERMSG => Frame::PeerMsg {
+                src: d.u32()?,
+                epoch: d.u64()?,
+                msg: get_msg(&mut d)?,
+            },
             TAG_START => Frame::Start,
             TAG_RELAY => Frame::Relay { peer: d.u32()?, msg: get_msg(&mut d)? },
             TAG_MERGE => Frame::Merge(Box::new(get_merge(&mut d)?)),
@@ -755,10 +843,11 @@ impl Frame {
 
 /// Pre-encode the `CONFIG` frame from a borrowed spec (the hub sends the
 /// identical bytes to every worker; this avoids cloning the database just
-/// to feed an owned [`Frame`]).
-pub fn encode_config(spec: &RunSpec) -> Vec<u8> {
+/// to feed an owned [`Frame`]). `peers` is the mesh peer socket map, or
+/// empty for the hub-relayed data plane.
+pub fn encode_config(spec: &RunSpec, peers: &[String]) -> Vec<u8> {
     let mut body = vec![TAG_CONFIG];
-    put_spec(&mut body, spec);
+    put_spec(&mut body, spec, peers);
     let mut out = Vec::with_capacity(4 + body.len());
     out.extend_from_slice(&(body.len() as u32).to_le_bytes());
     out.extend_from_slice(&body);
@@ -911,14 +1000,40 @@ mod tests {
 
     #[test]
     fn hello_start_and_bye_roundtrip() {
-        match roundtrip(&Frame::Hello { rank: 11 }) {
-            Frame::Hello { rank } => assert_eq!(rank, 11),
+        match roundtrip(&Frame::Hello { rank: 11, peer: "/tmp/hub.sock.r11".into() }) {
+            Frame::Hello { rank, peer } => {
+                assert_eq!(rank, 11);
+                assert_eq!(peer, "/tmp/hub.sock.r11");
+            }
             other => panic!("{other:?}"),
         }
         assert!(matches!(roundtrip(&Frame::Start), Frame::Start));
         assert!(matches!(roundtrip(&Frame::Bye), Frame::Bye));
         assert_eq!(Frame::Bye.name(), "BYE");
         assert_eq!(Frame::Start.name(), "START");
+    }
+
+    #[test]
+    fn peer_frames_roundtrip() {
+        match roundtrip(&Frame::PeerHello { rank: 7 }) {
+            Frame::PeerHello { rank } => assert_eq!(rank, 7),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Frame::PeerHello { rank: 0 }.name(), "PEERHELLO");
+        let msg = Msg::Basic {
+            stamp: 9,
+            kind: BasicKind::Give {
+                tasks: vec![WireTask { items: vec![1, 2, 3], core: 3, support: 6 }],
+            },
+        };
+        match roundtrip(&Frame::PeerMsg { src: 5, epoch: 12, msg: msg.clone() }) {
+            Frame::PeerMsg { src, epoch, msg: got } => {
+                assert_eq!((src, epoch), (5, 12));
+                assert_eq!(got, msg);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Frame::PeerMsg { src: 0, epoch: 0, msg: Msg::Finish }.name(), "PEERMSG");
     }
 
     fn phase_spec(p: u32) -> PhaseSpec {
@@ -940,8 +1055,9 @@ mod tests {
     fn encode_config_matches_owned_frame_encode() {
         let db = Database::from_transactions(2, &[vec![0], vec![1]], &[true, false]);
         let spec = RunSpec { phase: phase_spec(2), db };
-        let borrowed = encode_config(&spec);
-        let owned = Frame::Config(Box::new(spec)).encode();
+        let peers = vec!["/a.sock.r0".to_string(), "/a.sock.r1".to_string()];
+        let borrowed = encode_config(&spec, &peers);
+        let owned = Frame::Config { spec: Box::new(spec), peers }.encode();
         assert_eq!(borrowed, owned);
     }
 
@@ -962,10 +1078,13 @@ mod tests {
             },
             db: db.clone(),
         };
-        let got = match roundtrip(&Frame::Config(Box::new(spec))) {
-            Frame::Config(s) => *s,
+        let peer_map = vec!["/x.r0".to_string(), "/x.r1".into(), "/x.r2".into(), "/x.r3".into()];
+        let frame = Frame::Config { spec: Box::new(spec), peers: peer_map.clone() };
+        let (got, got_peers) = match roundtrip(&frame) {
+            Frame::Config { spec, peers } => (*spec, peers),
             other => panic!("{other:?}"),
         };
+        assert_eq!(got_peers, peer_map, "peer socket map must survive the roundtrip");
         assert_eq!(got.phase.p, 4);
         assert_eq!(got.phase.seed, 99);
         assert!(matches!(got.phase.mode, RunMode::Phase1 { alpha } if alpha == 0.05));
@@ -980,8 +1099,11 @@ mod tests {
             phase: PhaseSpec { mode: RunMode::Count { min_sup: 9 }, ..got.phase },
             db: got.db,
         };
-        let back = match roundtrip(&Frame::Config(Box::new(count))) {
-            Frame::Config(s) => *s,
+        let back = match roundtrip(&Frame::Config { spec: Box::new(count), peers: vec![] }) {
+            Frame::Config { spec, peers } => {
+                assert!(peers.is_empty(), "hub-plane CONFIG carries no peer map");
+                *spec
+            }
             other => panic!("{other:?}"),
         };
         assert!(matches!(back.phase.mode, RunMode::Count { min_sup: 9 }));
@@ -990,19 +1112,24 @@ mod tests {
     #[test]
     fn reconfig_roundtrips_without_database_bytes() {
         let phase = PhaseSpec { seed: 77, mode: RunMode::Phase1 { alpha: 0.01 }, ..phase_spec(6) };
-        let frame = Frame::Reconfig(Box::new(phase));
+        let frame = Frame::Reconfig { phase: Box::new(phase), peers: vec![] };
         let bytes = frame.encode();
         // version(2) + p(4) seed(8) w(4) l(4) arity(4) steal(1) pre(1)
-        // budget(8) dtd(8) + mode(1+8) = 53 payload bytes + tag + len.
-        assert_eq!(bytes.len(), 4 + 1 + 53);
+        // budget(8) dtd(8) + mode(1+8) = 53, + empty peer map (4) = 57
+        // payload bytes + tag + len.
+        assert_eq!(bytes.len(), 4 + 1 + 57);
         let got = match roundtrip(&frame) {
-            Frame::Reconfig(p) => *p,
+            Frame::Reconfig { phase, peers } => {
+                assert!(peers.is_empty());
+                *phase
+            }
             other => panic!("{other:?}"),
         };
         assert_eq!(got.p, 6);
         assert_eq!(got.seed, 77);
         assert!(matches!(got.mode, RunMode::Phase1 { alpha } if alpha == 0.01));
-        assert_eq!(Frame::Reconfig(Box::new(got)).name(), "RECONFIG");
+        let named = Frame::Reconfig { phase: Box::new(got), peers: vec![] };
+        assert_eq!(named.name(), "RECONFIG");
     }
 
     #[test]
@@ -1021,6 +1148,8 @@ mod tests {
                 gives: 5,
                 tasks_shipped: 4,
                 bytes_sent: 3,
+                hub_frames: 2,
+                direct_frames: 11,
             },
             makespan_ns: 123_456,
         };
@@ -1041,7 +1170,7 @@ mod tests {
         // unknown tag
         assert!(Frame::decode(&[0x77]).is_err());
         // bad magic
-        let mut hello = Frame::Hello { rank: 0 }.encode();
+        let mut hello = Frame::Hello { rank: 0, peer: "/p".into() }.encode();
         hello[5] = b'X'; // first magic byte (after len prefix + tag)
         assert!(Frame::decode(&hello[4..]).is_err());
         // oversized length prefix
@@ -1063,10 +1192,11 @@ mod tests {
         // fail the dimension checks, not allocate gigabytes.
         let db = Database::from_transactions(1, &[vec![0]], &[true]);
         let spec = RunSpec { phase: phase_spec(1), db };
-        let frame = Frame::Config(Box::new(spec)).encode();
+        let frame = Frame::Config { spec: Box::new(spec), peers: vec![] }.encode();
         // db starts right after: len(4) tag(1) version(2) p(4) seed(8) w(4)
-        // l(4) arity(4) steal(1) pre(1) budget(8) dtd(8) mode(1+4) = 54.
-        let db_off = 54;
+        // l(4) arity(4) steal(1) pre(1) budget(8) dtd(8) mode(1+4) = 54,
+        // plus the empty peer map's count (4) = 58.
+        let db_off = 58;
         for dim_off in [0usize, 4] {
             let mut bad = frame.clone();
             bad[db_off + dim_off..db_off + dim_off + 4]
@@ -1074,6 +1204,73 @@ mod tests {
             let err = Frame::decode(&bad[4..]).unwrap_err();
             assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
         }
+    }
+
+    /// The mesh frames survive the same corruption battery as the fabric
+    /// frames: per-byte truncation, bad magic/version, and oversized count
+    /// prefixes must error — never panic, never allocate wildly.
+    #[test]
+    fn corrupt_peer_frames_error_instead_of_panicking() {
+        let db = Database::from_transactions(1, &[vec![0]], &[true]);
+        let frames = vec![
+            Frame::Hello { rank: 3, peer: "/tmp/hub.sock.r3".into() },
+            Frame::PeerHello { rank: 3 },
+            Frame::PeerMsg {
+                src: 1,
+                epoch: 4,
+                msg: Msg::WaveUp {
+                    t: 2,
+                    count: -1,
+                    invalid: false,
+                    all_idle: true,
+                    hist: vec![(3, 4)],
+                },
+            },
+            Frame::Config {
+                spec: Box::new(RunSpec { phase: phase_spec(2), db }),
+                peers: vec!["/x.r0".into(), "/x.r1".into()],
+            },
+            Frame::Reconfig {
+                phase: Box::new(phase_spec(2)),
+                peers: vec!["/x.r0".into(), "/x.r1".into()],
+            },
+        ];
+        for frame in &frames {
+            let bytes = frame.encode();
+            for cut in 1..bytes.len() - 4 {
+                assert!(
+                    Frame::decode(&bytes[4..4 + cut]).is_err(),
+                    "{}: truncation at {cut} must fail",
+                    frame.name()
+                );
+            }
+            assert!(Frame::decode(&bytes[4..]).is_ok(), "{}", frame.name());
+            // Trailing garbage after a well-formed payload is rejected.
+            let mut long = bytes[4..].to_vec();
+            long.push(0);
+            assert!(Frame::decode(&long).is_err(), "{}", frame.name());
+        }
+        // Bad PEERHELLO magic and a version skew produce clear errors.
+        let mut ph = Frame::PeerHello { rank: 0 }.encode();
+        ph[5] = b'X';
+        assert!(Frame::decode(&ph[4..]).is_err());
+        let mut ph = Frame::PeerHello { rank: 0 }.encode();
+        ph[9] = 0xFF; // version low byte
+        let err = Frame::decode(&ph[4..]).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // An absurd peer-map count in a RECONFIG must not allocate.
+        let mut body = vec![TAG_RECONFIG];
+        put_phase(&mut body, &phase_spec(2));
+        put_u32(&mut body, u32::MAX); // peer count with no string bytes
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // A non-UTF-8 peer path errors instead of panicking.
+        let mut body = vec![TAG_RECONFIG];
+        put_phase(&mut body, &phase_spec(2));
+        put_u32(&mut body, 1);
+        put_u32(&mut body, 2);
+        body.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Frame::decode(&body).is_err());
     }
 
     #[test]

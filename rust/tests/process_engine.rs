@@ -11,10 +11,11 @@ use std::path::PathBuf;
 use std::process::Command;
 use std::time::Duration;
 
+use parlamp::coordinator::{Coordinator, ScreenMode};
 use parlamp::datagen::{generate_gwas, GeneticModel, GwasSpec};
 use parlamp::lamp::{lamp_serial, SupportIncreaseRule};
 use parlamp::lcm::{mine_closed, SupportHist, Visit};
-use parlamp::par::{run_process_with, ProcessConfig, RunMode};
+use parlamp::par::{run_process_with, DataPlane, ProcessConfig, ProcessFleet, RunMode};
 
 fn parlamp_bin() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_parlamp"))
@@ -106,6 +107,64 @@ fn process_engine_matches_serial_on_quickstart_scenario() {
     assert!(p2.makespan_s > 0.0);
 }
 
+/// Acceptance for the peer-to-peer data plane (DESIGN.md §10): the mesh
+/// and hub planes produce bit-identical mining results on the quickstart
+/// scenario — same λ*, same closed-pattern histograms, same significant
+/// set — and the mesh run's merged `CommStats` shows *zero* data-plane
+/// frames relayed by the hub.
+#[test]
+fn mesh_and_hub_data_planes_agree_and_mesh_bypasses_hub() {
+    let db = quickstart_db();
+    let run_with = |plane: DataPlane| {
+        let cfg = ProcessConfig { data_plane: plane, ..process_cfg(3, 42) };
+        let mut fleet = ProcessFleet::spawn(&cfg).expect("spawn fleet");
+        assert_eq!(fleet.data_plane(), plane);
+        let coord = Coordinator::new(0.05).with_screen(ScreenMode::Native);
+        let run = coord.run_on_fleet(&db, &mut fleet, 42).expect("coordinated run");
+        fleet.shutdown().expect("fleet shutdown");
+        run
+    };
+    let mesh = run_with(DataPlane::Mesh);
+    let hub = run_with(DataPlane::Hub);
+
+    // Bit-identical results across the two planes.
+    assert_eq!(mesh.result.lambda_final, hub.result.lambda_final, "λ* differs");
+    assert_eq!(mesh.result.min_sup, hub.result.min_sup);
+    assert_eq!(mesh.result.correction_factor, hub.result.correction_factor);
+    assert_eq!(
+        mesh.phase1.hist.counts(),
+        hub.phase1.hist.counts(),
+        "phase-1 closed-pattern histogram differs between planes"
+    );
+    assert_eq!(
+        mesh.phase2.hist.counts(),
+        hub.phase2.hist.counts(),
+        "phase-2 closed-pattern histogram differs between planes"
+    );
+    assert_eq!(
+        mesh.result.significant.len(),
+        hub.result.significant.len(),
+        "significant set size differs"
+    );
+    for (a, b) in mesh.result.significant.iter().zip(&hub.result.significant) {
+        assert_eq!(a.items, b.items, "significant set differs");
+    }
+    // ... and against the serial reference.
+    let serial = lamp_serial(&db, 0.05);
+    assert_eq!(mesh.result.lambda_final, serial.lambda_final);
+    assert_eq!(mesh.result.correction_factor, serial.correction_factor);
+    assert_eq!(mesh.result.significant.len(), serial.significant.len());
+
+    // The headline property: under mesh the hub forwards zero data-plane
+    // frames — everything went worker-to-worker — while the hub plane
+    // relays everything and sends nothing directly.
+    let (mc, hc) = (mesh.comm_total(), hub.comm_total());
+    assert_eq!(mc.hub_frames, 0, "mesh run relayed {} frames through the hub", mc.hub_frames);
+    assert!(mc.direct_frames > 0, "mesh run sent no direct frames at all");
+    assert_eq!(hc.direct_frames, 0, "hub run must not open direct connections");
+    assert!(hc.hub_frames > 0, "hub run relayed nothing — counters broken");
+}
+
 /// The naive baseline (stealing disabled, §5.4) over the process fabric:
 /// identical counts, and no task is ever shipped.
 #[test]
@@ -170,13 +229,18 @@ fn cli_engine_process_matches_serial() {
     };
 
     let serial_out = run_cli("serial", &[]);
-    // `-n` is the documented shorthand for `--procs`.
-    let process_out = run_cli("process", &["-n", "2"]);
-    assert_eq!(
-        summary_tokens(&serial_out),
-        summary_tokens(&process_out),
-        "serial vs process CLI summaries differ\n--- serial ---\n{serial_out}\n\
-         --- process ---\n{process_out}"
-    );
+    // `-n` is the documented shorthand for `--procs`; the default data
+    // plane is mesh, and `--data-plane hub` selects the relay baseline —
+    // the quickstart equivalence must hold under both.
+    let mesh_out = run_cli("process", &["-n", "2"]);
+    let hub_out = run_cli("process", &["-n", "2", "--data-plane", "hub"]);
+    for (plane, out) in [("mesh", &mesh_out), ("hub", &hub_out)] {
+        assert_eq!(
+            summary_tokens(&serial_out),
+            summary_tokens(out),
+            "serial vs process ({plane}) CLI summaries differ\n--- serial ---\n\
+             {serial_out}\n--- process ({plane}) ---\n{out}"
+        );
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
