@@ -23,7 +23,7 @@ pub use crate::coordinator::ENGINES;
 
 use anyhow::Result;
 
-use crate::coordinator::{parse_engine, Coordinator, EngineSelect, ScreenMode};
+use crate::coordinator::{parse_engine, Coordinator, EngineSelect, ScreenMode, Transport};
 use crate::db::Database;
 use crate::par::DataPlane;
 use crate::lamp::{
@@ -111,10 +111,11 @@ pub struct EngineRun {
 }
 
 /// Run the full three-phase LAMP procedure on `engine`
-/// (`serial|lamp2|threads|sim|process`) and measure it. `data_plane`
-/// applies to the process engine only (`--data-plane hub|mesh`). The
-/// phase-3 screen is pinned to native so records compare like with like
-/// across machines with and without XLA artifacts.
+/// (`serial|lamp2|threads|sim|process`) and measure it. `data_plane` and
+/// `transport` apply to the process engine only (`--data-plane hub|mesh`,
+/// `--transport unix|tcp`). The phase-3 screen is pinned to native so
+/// records compare like with like across machines with and without XLA
+/// artifacts.
 pub fn measure_engine(
     db: &Database,
     engine: &str,
@@ -122,6 +123,7 @@ pub fn measure_engine(
     alpha: f64,
     seed: u64,
     data_plane: DataPlane,
+    transport: Transport,
 ) -> Result<EngineRun> {
     match parse_engine(engine, procs, seed)? {
         EngineSelect::Serial => {
@@ -170,7 +172,7 @@ pub fn measure_engine(
             })
         }
         EngineSelect::Backend(backend) => {
-            let backend = backend.with_data_plane(data_plane);
+            let backend = backend.with_data_plane(data_plane).with_transport(transport);
             let coord = Coordinator::new(alpha).with_screen(ScreenMode::Native);
             let (secs, run) = time_once(|| coord.run(db, &backend));
             let run = run?;
@@ -208,18 +210,19 @@ mod tests {
     fn engines_agree_and_serial_is_instrumented() {
         let db = small_db();
         let dp = DataPlane::Mesh;
-        let serial = measure_engine(&db, "serial", 1, 0.05, 1, dp).unwrap();
+        let tr = Transport::Unix;
+        let serial = measure_engine(&db, "serial", 1, 0.05, 1, dp, tr).unwrap();
         assert!(serial.work_units > 0);
         assert_eq!(serial.work_units, serial.word_ops + serial.reduce_ops);
         assert!(serial.reduce_ops > 0, "reduction work must be counted");
         assert_eq!((serial.hub_frames, serial.direct_frames), (0, 0));
         for engine in ["lamp2", "sim"] {
-            let got = measure_engine(&db, engine, 3, 0.05, 1, dp).unwrap();
+            let got = measure_engine(&db, engine, 3, 0.05, 1, dp, tr).unwrap();
             assert_eq!(got.lambda_star, serial.lambda_star, "{engine}");
             assert_eq!(got.correction_factor, serial.correction_factor, "{engine}");
             assert_eq!(got.significant, serial.significant, "{engine}");
         }
-        assert!(measure_engine(&db, "warp", 1, 0.05, 1, dp).is_err());
+        assert!(measure_engine(&db, "warp", 1, 0.05, 1, dp, tr).is_err());
     }
 
     #[test]

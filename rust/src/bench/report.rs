@@ -13,10 +13,12 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
-/// Schema identifier stamped into every report. v2 adds the process
+/// Schema identifier stamped into every report. v2 added the process
 /// engine's data-plane fields: `data_plane` ("mesh"/"hub"; "none" for the
 /// other engines) and the `hub_frames`/`direct_frames` relay counters.
-pub const SCHEMA_ID: &str = "parlamp-bench/2";
+/// v3 adds `transport` ("unix"/"tcp"; "none" for the other engines) — the
+/// stream transport the process fabric ran over (DESIGN.md §11).
+pub const SCHEMA_ID: &str = "parlamp-bench/3";
 
 /// One `(scenario, engine)` measurement.
 #[derive(Clone, Debug)]
@@ -25,6 +27,8 @@ pub struct BenchRecord {
     pub engine: String,
     /// Process engine: "mesh" or "hub" (DESIGN.md §10); "none" elsewhere.
     pub data_plane: String,
+    /// Process engine: "unix" or "tcp" (DESIGN.md §11); "none" elsewhere.
+    pub transport: String,
     /// World size (1 for the serial engines).
     pub procs: usize,
     pub n_items: usize,
@@ -97,6 +101,7 @@ impl BenchReport {
             s.push_str(&format!("\"scenario\": {}, ", json_str(&r.scenario)));
             s.push_str(&format!("\"engine\": {}, ", json_str(&r.engine)));
             s.push_str(&format!("\"data_plane\": {}, ", json_str(&r.data_plane)));
+            s.push_str(&format!("\"transport\": {}, ", json_str(&r.transport)));
             s.push_str(&format!("\"procs\": {}, ", r.procs));
             s.push_str(&format!("\"n_items\": {}, ", r.n_items));
             s.push_str(&format!("\"n_trans\": {}, ", r.n_trans));
@@ -352,7 +357,7 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
 
 // ---- schema validation -------------------------------------------------
 
-const RUN_STR_FIELDS: &[&str] = &["scenario", "engine", "data_plane"];
+const RUN_STR_FIELDS: &[&str] = &["scenario", "engine", "data_plane", "transport"];
 const RUN_NUM_FIELDS: &[&str] = &[
     "procs",
     "n_items",
@@ -373,7 +378,7 @@ const RUN_NUM_FIELDS: &[&str] = &[
     "direct_frames",
 ];
 
-/// Validate a rendered report against the `parlamp-bench/2` schema:
+/// Validate a rendered report against the `parlamp-bench/3` schema:
 /// header fields present and typed, at least one run, every run carrying
 /// every field with the right type and non-negative measurements. Returns
 /// the number of runs. This is the CI gate — timings are deliberately not
@@ -420,6 +425,7 @@ struct CompareRow {
     scenario: String,
     engine: String,
     planes: (String, String),
+    transports: (String, String),
     wall: (f64, f64),
     units: (f64, f64),
     /// Result fields that must match between runs of the same scenario;
@@ -483,6 +489,7 @@ pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
             scenario: k.0,
             engine: k.1,
             planes: (strf(ra, "data_plane"), strf(rb, "data_plane")),
+            transports: (strf(ra, "transport"), strf(rb, "transport")),
             wall: (num(ra, "wall_s"), num(rb, "wall_s")),
             units: (num(ra, "work_units"), num(rb, "work_units")),
             mismatches,
@@ -494,16 +501,20 @@ pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
     );
 
     let mut t = crate::util::table::Table::new(&[
-        "scenario", "engine", "plane", "wall A", "wall B", "Δwall", "units A", "units B",
-        "Δunits", "result",
+        "scenario", "engine", "plane", "transport", "wall A", "wall B", "Δwall", "units A",
+        "units B", "Δunits", "result",
     ]);
+    let joined = |pair: &(String, String)| {
+        if pair.0 == pair.1 {
+            pair.0.clone()
+        } else {
+            format!("{}→{}", pair.0, pair.1)
+        }
+    };
     let mut regressions = 0usize;
     for r in &rows {
-        let plane = if r.planes.0 == r.planes.1 {
-            r.planes.0.clone()
-        } else {
-            format!("{}→{}", r.planes.0, r.planes.1)
-        };
+        let plane = joined(&r.planes);
+        let transport = joined(&r.transports);
         let result = if r.mismatches.is_empty() {
             "=".to_string()
         } else {
@@ -514,6 +525,7 @@ pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
             r.scenario.clone(),
             r.engine.clone(),
             plane,
+            transport,
             crate::util::fmt_secs(r.wall.0),
             crate::util::fmt_secs(r.wall.1),
             pct_delta(r.wall.0, r.wall.1),
@@ -548,6 +560,7 @@ mod tests {
             scenario: "mcf7".into(),
             engine: engine.into(),
             data_plane: if engine == "process" { "mesh".into() } else { "none".into() },
+            transport: if engine == "process" { "unix".into() } else { "none".into() },
             procs: 4,
             n_items: 250,
             n_trans: 2000,
@@ -629,11 +642,13 @@ mod tests {
         a.push(record("serial"));
         let mut rb = record("process");
         rb.wall_s = 0.1;
+        rb.transport = "tcp".into();
         b.push(rb);
         b.push(record("sim")); // unmatched on both sides
         let out = compare(&a.to_json(), &b.to_json()).unwrap();
         assert!(out.contains("A = hub, B = mesh"), "{out}");
         assert!(out.contains("hub→mesh"), "{out}");
+        assert!(out.contains("unix→tcp"), "{out}");
         assert!(out.contains("-50.0%"), "wall delta missing:\n{out}");
         assert!(out.contains("only in A: (mcf7, serial)"), "{out}");
         assert!(out.contains("only in B: (mcf7, sim)"), "{out}");

@@ -8,14 +8,16 @@ use anyhow::{bail, Context, Result};
 
 use crate::bench::{all_scenarios, measure_engine, report, BenchRecord, BenchReport, ENGINES};
 use crate::coordinator::{
-    parse_engine, Backend, Coordinator, EngineSelect, GlbParams, ScreenKind, ScreenMode,
+    parse_engine, Backend, Coordinator, CoordinatorRun, EngineSelect, GlbParams, ScreenKind,
+    ScreenMode, Transport,
 };
 use crate::db::{read_labels, read_transactions, Database};
 use crate::fabric::sim::NetModel;
 use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
-use crate::par::DataPlane;
-use crate::service::{Client, ServeConfig};
+use crate::net::Endpoint;
+use crate::par::{DataPlane, ProcessConfig, ProcessFleet};
+use crate::service::{print_join_commands, Client, ServeConfig};
 use crate::util::table::Table;
 use crate::wire::service::{JobSpec, JobState};
 
@@ -61,6 +63,76 @@ fn data_plane_from_args(args: &Args) -> Result<DataPlane> {
     DataPlane::parse(args.get("data-plane").unwrap_or("mesh")).context("--data-plane")
 }
 
+/// `--transport unix|tcp` (default unix): which stream transport carries
+/// the process engine's fabric (DESIGN.md §11). Ignored by the other
+/// engines.
+fn transport_from_args(args: &Args) -> Result<Transport> {
+    args.get("transport").unwrap_or("unix").parse().context("--transport")
+}
+
+/// The service endpoint: `--endpoint unix:<path>|tcp:<host>:<port>`, with
+/// `--socket PATH` kept as a deprecated alias (a bare path parses as a
+/// Unix endpoint).
+fn endpoint_from_args(args: &Args) -> Result<Endpoint> {
+    let raw = args
+        .get("endpoint")
+        .or_else(|| args.get("socket"))
+        .context("missing required --endpoint (unix:<path> | tcp:<host>:<port>)")?;
+    raw.parse().context("--endpoint")
+}
+
+/// `--hosts h1:p,h2:p,…` → one mesh data-plane endpoint per rank. Bare
+/// `host:port` entries are TCP; explicit `unix:`/`tcp:` schemes pass
+/// through.
+fn hosts_from_args(args: &Args) -> Result<Option<Vec<Endpoint>>> {
+    let Some(spec) = args.get("hosts") else {
+        return Ok(None);
+    };
+    let mut out = Vec::new();
+    for h in spec.split(',').filter(|s| !s.is_empty()) {
+        let ep: Endpoint = if h.starts_with("unix:") || h.starts_with("tcp:") {
+            h.parse()
+        } else {
+            format!("tcp:{h}").parse()
+        }
+        .with_context(|| format!("--hosts entry '{h}' (want host:port)"))?;
+        out.push(ep);
+    }
+    anyhow::ensure!(!out.is_empty(), "--hosts needs at least one host:port entry");
+    Ok(Some(out))
+}
+
+/// The `--hosts` launcher path: bind the hub, print one copy-pasteable
+/// join command per rank, wait for the remote workers to attach, run the
+/// three-phase procedure across them, and dismiss the fleet. The hub
+/// listens at `--endpoint` (default `tcp:127.0.0.1:0` — pass
+/// `--endpoint tcp:0.0.0.0:<port>` to accept off-host workers).
+fn run_lamp_hosts(
+    coord: &Coordinator,
+    db: &Database,
+    args: &Args,
+    hosts: &[Endpoint],
+    data_plane: DataPlane,
+    seed: u64,
+) -> Result<CoordinatorRun> {
+    let listen = match args.get("endpoint").or_else(|| args.get("socket")) {
+        Some(raw) => raw.parse().context("--endpoint")?,
+        None => Endpoint::tcp("127.0.0.1", 0),
+    };
+    let cfg = ProcessConfig {
+        data_plane,
+        listen: Some(listen),
+        remote_workers: Some(hosts.to_vec()),
+        ..ProcessConfig::paper_defaults(hosts.len(), seed)
+    };
+    let pending = ProcessFleet::bind(&cfg)?;
+    print_join_commands(&pending, hosts);
+    let mut fleet = pending.await_workers()?;
+    let run = coord.run_on_fleet(db, &mut fleet, seed)?;
+    fleet.shutdown()?;
+    Ok(run)
+}
+
 fn glb_from_args(args: &Args) -> GlbParams {
     let base = if args.flag("naive") {
         GlbParams::naive()
@@ -101,8 +173,14 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
     let select = parse_engine(engine, p, seed)?;
     let screen = parse_screen(args)?;
     // Validated for every engine so a typo'd flag errors instead of being
-    // silently ignored; only the process backend actually consumes it.
+    // silently ignored; only the process backend actually consumes them.
     let data_plane = data_plane_from_args(args)?;
+    let transport = transport_from_args(args)?;
+    let hosts = hosts_from_args(args)?;
+    anyhow::ensure!(
+        hosts.is_none() || engine == "process",
+        "--hosts requires --engine process (got '{engine}')"
+    );
     println!(
         "N={} items={} density={:.4}% N_pos={}",
         db.n_trans(),
@@ -131,11 +209,15 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
             sig
         }
         EngineSelect::Backend(backend) => {
-            let backend = backend.with_data_plane(data_plane);
+            let backend = backend.with_data_plane(data_plane).with_transport(transport);
             let coord =
                 Coordinator::new(alpha).with_glb(glb_from_args(args)).with_screen(screen);
-            let run = coord.run(&db, &backend)?;
-            println!("engine={engine} P={p} | {}", run.summary());
+            let run = match &hosts {
+                Some(hosts) => run_lamp_hosts(&coord, &db, args, hosts, data_plane, seed)?,
+                None => coord.run(&db, &backend)?,
+            };
+            let world = hosts.as_ref().map_or(p, Vec::len);
+            println!("engine={engine} P={world} | {}", run.summary());
             run.result.significant
         }
     };
@@ -248,7 +330,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     let procs = args.get_usize("procs", 4)?;
     let seed = args.get_u64("seed", 2015)?;
     let data_plane = data_plane_from_args(args)?;
-    let label = args.get("label").unwrap_or("pr5");
+    let transport = transport_from_args(args)?;
+    let label = args.get("label").unwrap_or("pr6");
     let default_out = format!("BENCH_{label}.json");
     let out = args.get("out").unwrap_or(&default_out);
     let default_engines = ENGINES.join(",");
@@ -292,7 +375,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             db.density() * 100.0
         );
         for &engine in &engines {
-            let r = measure_engine(&db, engine, procs, alpha, seed, data_plane)
+            let r = measure_engine(&db, engine, procs, alpha, seed, data_plane, transport)
                 .with_context(|| format!("{} on {}", engine, sc.name))?;
             t.row(vec![
                 sc.name.to_string(),
@@ -308,6 +391,11 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 engine: engine.to_string(),
                 data_plane: if engine == "process" {
                     data_plane.name().to_string()
+                } else {
+                    "none".to_string()
+                },
+                transport: if engine == "process" {
+                    transport.name().to_string()
                 } else {
                     "none".to_string()
                 },
@@ -390,16 +478,31 @@ pub fn cmd_scenarios(args: &Args) -> Result<()> {
 /// fleet, FIFO job queue, bounded result cache. Blocks until `SHUTDOWN`
 /// or SIGTERM drains the queue.
 pub fn cmd_serve(args: &Args) -> Result<()> {
-    let socket = PathBuf::from(args.require("socket")?);
-    let mut cfg = ServeConfig::new(socket, args.get_usize("procs", 4)?);
+    let listen = endpoint_from_args(args)?;
+    let hosts = hosts_from_args(args)?;
+    let procs = match &hosts {
+        Some(hosts) => hosts.len(),
+        None => args.get_usize("procs", 4)?,
+    };
+    let mut cfg = ServeConfig::new(listen, procs);
     cfg.cache_cap = args.get_usize("cache", 32)?;
     cfg.data_plane = data_plane_from_args(args)?;
+    cfg.fleet_listen = match (args.get("fleet-listen"), transport_from_args(args)?, &hosts) {
+        (Some(raw), _, _) => Some(raw.parse::<Endpoint>().context("--fleet-listen")?),
+        // --hosts implies a TCP hub even without an explicit --transport:
+        // remote workers cannot dial a Unix path on another machine.
+        (None, Transport::Tcp, _) | (None, Transport::Unix, Some(_)) => {
+            Some(Endpoint::tcp("127.0.0.1", 0))
+        }
+        (None, Transport::Unix, None) => None,
+    };
+    cfg.remote_workers = hosts;
     anyhow::ensure!(cfg.cache_cap >= 1, "--cache must be ≥ 1");
     crate::service::serve(&cfg)
 }
 
 fn connect_client(args: &Args) -> Result<Client> {
-    Client::connect(Path::new(args.require("socket")?))
+    Client::connect(&endpoint_from_args(args)?)
 }
 
 fn job_id(args: &Args) -> Result<u64> {
@@ -573,9 +676,51 @@ mod tests {
         assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
         // A typo'd --data-plane must error on every engine, even the
         // serial ones that never consume it.
-        let mut argv = base;
+        let mut argv = base.clone();
         argv.extend(["--data-plane", "warp"].iter().map(|s| s.to_string()));
         assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
+        // Same for --transport…
+        let mut argv = base.clone();
+        argv.extend(["--transport", "carrier-pigeon"].iter().map(|s| s.to_string()));
+        assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
+        // …and --hosts is a process-engine launcher flag, nothing else's.
+        let mut argv = base;
+        argv.extend(["--hosts", "127.0.0.1:7001"].iter().map(|s| s.to_string()));
+        assert!(cmd_lamp(&Args::parse(&argv).unwrap()).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hosts_flag_parses_endpoints() {
+        let argv: Vec<String> = ["--hosts", "127.0.0.1:7001,tcp:10.0.0.2:7002,unix:/tmp/w.sock"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let hosts = hosts_from_args(&Args::parse(&argv).unwrap()).unwrap().unwrap();
+        assert_eq!(hosts.len(), 3);
+        assert_eq!(hosts[0], Endpoint::tcp("127.0.0.1", 7001));
+        assert_eq!(hosts[1], Endpoint::tcp("10.0.0.2", 7002));
+        assert!(hosts[2].is_unix());
+        // malformed entries and empty lists fail fast
+        let argv: Vec<String> =
+            ["--hosts", "localhost"].iter().map(|s| s.to_string()).collect();
+        assert!(hosts_from_args(&Args::parse(&argv).unwrap()).is_err());
+        let argv: Vec<String> = ["--hosts", ","].iter().map(|s| s.to_string()).collect();
+        assert!(hosts_from_args(&Args::parse(&argv).unwrap()).is_err());
+        // absent flag → None (local spawn mode)
+        assert!(hosts_from_args(&Args::parse(&[]).unwrap()).unwrap().is_none());
+    }
+
+    #[test]
+    fn endpoint_flag_accepts_socket_alias() {
+        let argv: Vec<String> =
+            ["--socket", "/tmp/d.sock"].iter().map(|s| s.to_string()).collect();
+        let ep = endpoint_from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(ep, Endpoint::unix("/tmp/d.sock"));
+        let argv: Vec<String> =
+            ["--endpoint", "tcp:127.0.0.1:9"].iter().map(|s| s.to_string()).collect();
+        let ep = endpoint_from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(ep, Endpoint::tcp("127.0.0.1", 9));
+        assert!(endpoint_from_args(&Args::parse(&[]).unwrap()).is_err());
     }
 }

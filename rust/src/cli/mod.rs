@@ -4,20 +4,24 @@
 //! ```text
 //! parlamp lamp     --data t.dat --labels t.lab
 //!                  [--engine serial|lamp2|threads|sim|process]
-//!                  [--data-plane hub|mesh]
+//!                  [--data-plane hub|mesh] [--transport unix|tcp]
+//!                  [--hosts h1:p,h2:p,..]
 //! parlamp mine     --data t.dat [--min-sup K]
 //! parlamp sim      --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
 //! parlamp bench    [--quick] [--engines a,b,..] [--scenarios x,y|all]
-//!                  [--out BENCH_pr5.json] | --check FILE
-//!                  | --compare A.json,B.json
+//!                  [--transport unix|tcp] [--out BENCH_pr6.json]
+//!                  | --check FILE | --compare A.json,B.json
 //! parlamp gendata  --scenario alz-dom-5 --out dir/
 //! parlamp scenarios
-//! parlamp serve    --socket /run/parlamp.sock --procs 8 [--cache 32]
-//! parlamp submit   --socket /run/parlamp.sock --data t.dat --labels t.lab
-//! parlamp status   --socket /run/parlamp.sock --job 1
-//! parlamp results  --socket /run/parlamp.sock --job 1
-//! parlamp shutdown --socket /run/parlamp.sock
+//! parlamp serve    --endpoint unix:/run/parlamp.sock --procs 8 [--cache 32]
+//! parlamp submit   --endpoint tcp:127.0.0.1:7878 --data t.dat --labels t.lab
+//! parlamp status   --endpoint tcp:127.0.0.1:7878 --job 1
+//! parlamp results  --endpoint tcp:127.0.0.1:7878 --job 1
+//! parlamp shutdown --endpoint tcp:127.0.0.1:7878
 //! ```
+//!
+//! `--socket PATH` stays accepted everywhere as a deprecated alias for
+//! `--endpoint unix:PATH` (a bare path parses as a Unix endpoint).
 
 mod args;
 mod commands;
@@ -57,8 +61,10 @@ pub fn run(argv: &[String]) -> i32 {
         "results" => commands::cmd_results(&args),
         "shutdown" => commands::cmd_shutdown(&args),
         // Hidden: the process-fabric child entry point. The parent engine
-        // re-executes this binary as `parlamp __worker --socket S
-        // --worker-rank R` for each rank (see par::engine_process).
+        // re-executes this binary as `parlamp __worker --connect ENDPOINT
+        // --token T --worker-rank R` for each rank, and `--hosts` launcher
+        // mode prints the same command for humans to run on other machines
+        // (see par::engine_process).
         "__worker" => crate::par::engine_process::worker_main(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -85,51 +91,66 @@ USAGE:
   parlamp lamp      --data FILE --labels FILE [--alpha A]
                     [--engine serial|lamp2|threads|sim|process]
                     [--procs P | -n P] [--naive] [--data-plane hub|mesh]
-                    [--screen native|xla|auto] [--seed S]
+                    [--transport unix|tcp] [--hosts H1:P,H2:P,..]
+                    [--endpoint EP] [--screen native|xla|auto] [--seed S]
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
                     [--no-preprocess] [--alpha A] [--seed S]
   parlamp bench     [--quick] [--engines E1,E2,..] [--scenarios S1,S2|all]
                     [--procs P] [--alpha A] [--seed S] [--label L]
-                    [--out FILE] [--data-plane hub|mesh]
+                    [--out FILE] [--data-plane hub|mesh] [--transport unix|tcp]
   parlamp bench     --check FILE
   parlamp bench     --compare A.json,B.json  (or --compare A.json --with B.json)
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
-  parlamp serve     --socket PATH [--procs P] [--cache N]
-                    [--data-plane hub|mesh]
-  parlamp submit    --socket PATH --data FILE --labels FILE [--alpha A]
+  parlamp serve     --endpoint EP [--procs P] [--cache N]
+                    [--data-plane hub|mesh] [--transport unix|tcp]
+                    [--hosts H1:P,..] [--fleet-listen EP]
+  parlamp submit    --endpoint EP --data FILE --labels FILE [--alpha A]
                     [--naive] [--no-preprocess] [--screen native|xla|auto]
                     [--seed S]
-  parlamp status    --socket PATH --job ID
-  parlamp results   --socket PATH --job ID
-  parlamp shutdown  --socket PATH
+  parlamp status    --endpoint EP --job ID
+  parlamp results   --endpoint EP --job ID
+  parlamp shutdown  --endpoint EP
+
+Endpoints (EP) are typed: `unix:<path>` or `tcp:<host>:<port>` (DESIGN.md
+§11). `--socket PATH` is a deprecated alias for `--endpoint unix:PATH` and
+stays accepted on serve/submit/status/results/shutdown; a bare path with
+no scheme parses as a Unix endpoint.
 
 `bench` runs the Table-1 scenarios across engines (default: all five) and
 writes the schema-stable perf-trajectory JSON (BENCH_<label>.json; the
-label defaults to pr5 and is stamped into the document header);
+label defaults to pr6 and is stamped into the document header);
 `--quick` shrinks the data and defaults to the single mcf7 scenario;
-`--check` validates an existing file against the parlamp-bench/2 schema;
+`--check` validates an existing file against the parlamp-bench/3 schema;
 `--compare` diffs two reports per (scenario, engine) — wall-clock and
 work-unit deltas — and errors if result fields disagree.
 
 Engines `threads`, `sim`, and `process` run the full three-phase procedure
 through the coordinator (phases 1-2 distributed, phase 3 via the configured
-screen). `process` spawns one worker OS process per rank, connected over
-Unix-domain sockets with the DESIGN.md §7 wire protocol — true distributed
-memory on one host. Its data plane is selectable (`--data-plane`,
-DESIGN.md §10): `mesh` (default) lets workers exchange steal traffic and
-DTD waves over direct worker-to-worker sockets with zero hub hops; `hub`
-relays everything through the parent (the centralized ablation baseline).
-Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20, alz-dom-5,
-alz-dom-10, alz-rec-30, mcf7.
+screen). `process` spawns one worker OS process per rank, connected over a
+pluggable stream transport (`--transport`, DESIGN.md §11) speaking the
+DESIGN.md §7 wire protocol — `unix` (default) for single-host distributed
+memory, `tcp` for cross-host fleets. Its data plane is selectable
+(`--data-plane`, DESIGN.md §10): `mesh` (default) lets workers exchange
+steal traffic and DTD waves over direct worker-to-worker sockets with zero
+hub hops; `hub` relays everything through the parent (the centralized
+ablation baseline). `--hosts` switches the process engine into launcher
+mode: the hub binds (at `--endpoint`, default tcp:127.0.0.1:0), prints one
+`JOIN[rank]: parlamp __worker …` command per listed host, and waits for
+those externally-started workers to attach instead of spawning local
+children. Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20,
+alz-dom-5, alz-dom-10, alz-rec-30, mcf7.
 
 `serve` starts the long-running mining daemon (DESIGN.md §9): the worker
 fleet spawns once and stays warm, jobs queue FIFO, and repeat submissions
 are answered from a bounded result cache keyed by (database digest, alpha,
-GLB parameters, screen). `submit` prints the assigned job id; `results`
-blocks until the job finishes and prints the same summary + table as
-`lamp --engine serial`; `shutdown` (or SIGTERM) drains the queue, BYEs the
-fleet, and unlinks the socket."
+GLB parameters, screen). The daemon listens at `--endpoint` (Unix path or
+TCP port); `--transport tcp` (or `--hosts`) puts the fleet's own fabric on
+TCP too, and `--fleet-listen` pins the fleet hub's address for off-host
+workers. `submit` prints the assigned job id; `results` blocks until the
+job finishes and prints the same summary + table as `lamp --engine
+serial`; `shutdown` (or SIGTERM) drains the queue, BYEs the fleet, and
+unlinks a Unix socket (TCP listeners leave nothing behind)."
         .to_string()
 }

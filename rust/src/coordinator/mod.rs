@@ -37,6 +37,7 @@ use crate::fabric::sim::NetModel;
 use crate::fabric::CommStats;
 use crate::glb::Lifelines;
 use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
+use crate::net::Endpoint;
 use crate::par::{
     breakdown, run_sim, run_threads_with, DataPlane, ParRunResult, ProcessConfig, ProcessFleet,
     RunMode, SimConfig, ThreadConfig,
@@ -72,11 +73,41 @@ pub fn parse_engine(name: &str, p: usize, seed: u64) -> Result<EngineSelect> {
         "lamp2" => EngineSelect::Lamp2,
         "threads" => EngineSelect::Backend(Backend::Threads { p, seed }),
         "sim" => EngineSelect::Backend(Backend::Sim { p, net: NetModel::default(), seed }),
-        "process" => {
-            EngineSelect::Backend(Backend::Process { p, seed, plane: DataPlane::Mesh })
-        }
+        "process" => EngineSelect::Backend(Backend::process(p).with_seed(seed)),
         other => bail!("unknown engine '{other}' ({})", ENGINES.join("|")),
     })
+}
+
+/// Which stream transport the process backend's sockets use
+/// (`--transport unix|tcp`, DESIGN.md §11). `Unix` is the single-host
+/// default; `Tcp` binds the hub (and every worker's mesh listener) on
+/// loopback/ephemeral TCP ports instead — the same wire bytes, a
+/// different interconnect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    Unix,
+    Tcp,
+}
+
+impl Transport {
+    /// The flag spelling, as recorded in bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Unix => "unix",
+            Transport::Tcp => "tcp",
+        }
+    }
+}
+
+impl std::str::FromStr for Transport {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Transport> {
+        match s {
+            "unix" => Ok(Transport::Unix),
+            "tcp" => Ok(Transport::Tcp),
+            other => bail!("unknown transport '{other}' (unix|tcp)"),
+        }
+    }
 }
 
 /// Lifeline-GLB topology parameters (paper §4.2), the knobs the
@@ -131,13 +162,15 @@ pub enum Backend {
     /// Discrete-event simulation; virtual time under `net`'s latency and
     /// bandwidth model (the TSUBAME substitution, DESIGN.md §2).
     Sim { p: usize, net: NetModel, seed: u64 },
-    /// One OS process per rank over the Unix-socket fabric; real wall-clock
-    /// time and real address-space separation — every message crosses the
-    /// [`crate::wire`] protocol (DESIGN.md §7). `plane` selects the data
-    /// plane: direct worker-to-worker mesh sockets (the default) or the
-    /// centralized hub relay (DESIGN.md §10). Requires a spawnable
-    /// `parlamp` binary (see [`crate::par::engine_process`]).
-    Process { p: usize, seed: u64, plane: DataPlane },
+    /// One OS process per rank over the stream-socket fabric; real
+    /// wall-clock time and real address-space separation — every message
+    /// crosses the [`crate::wire`] protocol (DESIGN.md §7). `plane`
+    /// selects the data plane: direct worker-to-worker mesh sockets (the
+    /// default) or the centralized hub relay (DESIGN.md §10); `transport`
+    /// selects Unix-domain sockets (the default) or loopback TCP
+    /// (DESIGN.md §11). Requires a spawnable `parlamp` binary (see
+    /// [`crate::par::engine_process`]).
+    Process { p: usize, seed: u64, plane: DataPlane, transport: Transport },
 }
 
 impl Backend {
@@ -151,9 +184,22 @@ impl Backend {
         Backend::Sim { p, net: NetModel::default(), seed: 2015 }
     }
 
-    /// Multi-process backend with the default seed and data plane (mesh).
+    /// Multi-process backend with the default seed, data plane (mesh),
+    /// and transport (unix).
     pub fn process(p: usize) -> Backend {
-        Backend::Process { p, seed: 2015, plane: DataPlane::Mesh }
+        Backend::Process { p, seed: 2015, plane: DataPlane::Mesh, transport: Transport::Unix }
+    }
+
+    /// This backend with its seed set. A no-op for nothing — every
+    /// backend carries a seed.
+    pub fn with_seed(self, seed: u64) -> Backend {
+        match self {
+            Backend::Threads { p, .. } => Backend::Threads { p, seed },
+            Backend::Sim { p, net, .. } => Backend::Sim { p, net, seed },
+            Backend::Process { p, plane, transport, .. } => {
+                Backend::Process { p, seed, plane, transport }
+            }
+        }
     }
 
     /// This backend with its data plane set (`--data-plane hub|mesh`).
@@ -161,7 +207,21 @@ impl Backend {
     /// in-process fabrics have no hub to bypass.
     pub fn with_data_plane(self, plane: DataPlane) -> Backend {
         match self {
-            Backend::Process { p, seed, .. } => Backend::Process { p, seed, plane },
+            Backend::Process { p, seed, transport, .. } => {
+                Backend::Process { p, seed, plane, transport }
+            }
+            other => other,
+        }
+    }
+
+    /// This backend with its stream transport set (`--transport unix|tcp`).
+    /// A no-op for backends other than [`Backend::Process`] — the
+    /// in-process fabrics have no sockets at all.
+    pub fn with_transport(self, transport: Transport) -> Backend {
+        match self {
+            Backend::Process { p, seed, plane, .. } => {
+                Backend::Process { p, seed, plane, transport }
+            }
             other => other,
         }
     }
@@ -342,8 +402,16 @@ impl Coordinator {
     /// [`Coordinator::run_on_fleet`] instead.
     pub fn run(&self, db: &Database, backend: &Backend) -> Result<CoordinatorRun> {
         match backend {
-            Backend::Process { p, seed, plane } => {
-                let cfg = ProcessConfig { data_plane: *plane, ..self.process_config(*p, *seed) };
+            Backend::Process { p, seed, plane, transport } => {
+                let listen = match transport {
+                    Transport::Unix => None,
+                    Transport::Tcp => Some(Endpoint::tcp("127.0.0.1", 0)),
+                };
+                let cfg = ProcessConfig {
+                    data_plane: *plane,
+                    listen,
+                    ..self.process_config(*p, *seed)
+                };
                 let mut fleet = ProcessFleet::spawn(&cfg)?;
                 let run = self.run_on_fleet(db, &mut fleet, *seed)?;
                 fleet.shutdown()?;
@@ -583,6 +651,27 @@ mod tests {
         assert!(format!("{err:#}").contains("artifacts"), "{err:#}");
         let run = Coordinator::new(0.05).run(&db, &Backend::sim(2)).expect("auto run");
         assert_eq!(run.screen, ScreenKind::Native);
+    }
+
+    #[test]
+    fn backend_builders_compose() {
+        let b = Backend::process(4)
+            .with_seed(7)
+            .with_data_plane(DataPlane::Hub)
+            .with_transport(Transport::Tcp);
+        match b {
+            Backend::Process { p, seed, plane, transport } => {
+                assert_eq!(p, 4);
+                assert_eq!(seed, 7);
+                assert!(matches!(plane, DataPlane::Hub));
+                assert_eq!(transport, Transport::Tcp);
+            }
+            other => panic!("unexpected backend {other:?}"),
+        }
+        assert_eq!("tcp".parse::<Transport>().unwrap(), Transport::Tcp);
+        assert_eq!("unix".parse::<Transport>().unwrap(), Transport::Unix);
+        let err = "ib".parse::<Transport>().unwrap_err();
+        assert!(err.to_string().contains("unix|tcp"), "{err}");
     }
 
     #[test]

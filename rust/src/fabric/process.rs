@@ -1,5 +1,6 @@
-//! Process-backed fabric: one OS process per rank, Unix-domain sockets as
-//! the interconnect (DESIGN.md §7).
+//! Process-backed fabric: one OS process per rank, stream sockets as the
+//! interconnect (DESIGN.md §7) — Unix-domain on one host or TCP across
+//! hosts, behind the pluggable transport of [`crate::net`] (§11).
 //!
 //! The first fabric backend with real address-space separation: unlike
 //! [`super::thread`] and [`super::sim`], nothing can be passed by value, so
@@ -7,15 +8,20 @@
 //! boundary. The *control plane* is hub-and-spoke: the parent process runs
 //! a [`Hub`] that accepts one connection per worker rank and owns the
 //! phase lifecycle (HELLO/CONFIG/START/MERGE/BYE, plus liveness via socket
-//! EOF). The *data plane* — every steal REQUEST/GIVE/REJECT frame and
-//! every DTD wave — is selectable ([`DataPlane`], DESIGN.md §10):
+//! EOF). Every HELLO and PEERHELLO carries the fleet's shared-secret
+//! token (wire v4); a connection with the wrong token never joins the
+//! fabric, so a stray TCP connector cannot poison a run. The *data
+//! plane* — every steal REQUEST/GIVE/REJECT frame and every DTD wave —
+//! is selectable ([`DataPlane`], DESIGN.md §10):
 //!
-//! - [`DataPlane::Mesh`] (the default): each worker binds its own Unix
-//!   socket (`<hub>.r<rank>`), the hub distributes the peer socket map
-//!   with each phase frame, and workers open lazy direct connections on
-//!   first send — lifeline neighbors and random-steal victims talk
-//!   worker-to-worker with zero hub hops. Mesh frames are epoch-stamped
-//!   so phases stay fenced without the hub's socket ordering.
+//! - [`DataPlane::Mesh`] (the default): each worker binds its own
+//!   data-plane listener (a `<hub>.r<rank>` Unix socket next to a unix
+//!   hub, an ephemeral TCP port on the hub-facing interface otherwise),
+//!   the hub distributes the peer endpoint map with each phase frame, and
+//!   workers open lazy direct connections on first send — lifeline
+//!   neighbors and random-steal victims talk worker-to-worker with zero
+//!   hub hops. Mesh frames are epoch-stamped so phases stay fenced
+//!   without the hub's socket ordering.
 //! - [`DataPlane::Hub`]: the original topology — every `RELAY` frame is
 //!   forwarded by the hub. `P` sockets instead of up to `P(P−1)/2`, at the
 //!   cost of doubling every data-plane hop and serializing all steal
@@ -62,7 +68,6 @@
 
 use std::collections::VecDeque;
 use std::io::Write;
-use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -72,6 +77,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::db::Database;
+use crate::net::{dial, dial_with_preamble, Endpoint, Listener, RetryPolicy, Stream};
 use crate::wire::{
     encode_config, read_frame, write_frame, Frame, PhaseSpec, RunSpec, WorkerMerge,
     MAX_FRAME_LEN,
@@ -88,7 +94,7 @@ pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 /// liveness) always runs through the hub.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum DataPlane {
-    /// Direct worker-to-worker Unix-socket connections, opened lazily on
+    /// Direct worker-to-worker stream connections, opened lazily on
     /// first send; the hub forwards zero data-plane frames. The default.
     #[default]
     Mesh,
@@ -144,8 +150,8 @@ enum ChildEvent {
     /// A direct mesh delivery. `epoch` is the *sender's* phase index; the
     /// mailbox fences it against its own (see [`ProcessMailbox::await_phase`]).
     PeerDeliver { src: usize, epoch: u64, msg: Msg },
-    Config { spec: Box<RunSpec>, peers: Vec<String> },
-    Reconfig { phase: Box<PhaseSpec>, peers: Vec<String> },
+    Config { spec: Box<RunSpec>, peers: Vec<Endpoint> },
+    Reconfig { phase: Box<PhaseSpec>, peers: Vec<Endpoint> },
     Start,
     Bye,
     Lost(String),
@@ -167,17 +173,19 @@ pub struct ProcessMailbox {
     rank: usize,
     /// World size of the current phase (set by `await_phase`).
     size: usize,
-    writer: UnixStream,
+    writer: Stream,
     rx: Receiver<ChildEvent>,
     /// Messages pulled in by a blocking wait (or buffered between `CONFIG`
     /// and `START`) but not yet consumed by the worker's probe loop.
     pending: VecDeque<(usize, Msg)>,
     link: Link,
-    /// Peer socket map of the current phase; empty = hub data plane.
-    peer_paths: Vec<String>,
+    /// Peer endpoint map of the current phase; empty = hub data plane.
+    peer_endpoints: Vec<Endpoint>,
     /// Lazily opened direct connections, cached for the fleet lifetime
     /// (warm fleets keep peer links across phases and jobs).
-    peer_writers: Vec<Option<UnixStream>>,
+    peer_writers: Vec<Option<Stream>>,
+    /// The fleet's shared-secret token, sent in every outgoing `PEERHELLO`.
+    token: String,
     /// Index of the current phase (stamped onto outgoing mesh frames).
     epoch: u64,
     /// Number of phases this mailbox has started (= the next phase index).
@@ -189,25 +197,52 @@ pub struct ProcessMailbox {
     _peer_listener: JoinHandle<()>,
 }
 
-/// Connect to the hub at `path` as `rank`: bind this rank's own data-plane
-/// listener (`<path>.r<rank>` — bound *before* `HELLO`, so the path the
-/// hub learns is always connectable), send `HELLO`, and hand the hub
-/// socket to a background reader thread. The worker then blocks in
-/// [`ProcessMailbox::await_phase`] until the hub opens a phase — there is
-/// deliberately no read timeout here, because a warm worker legitimately
-/// idles between jobs for as long as the daemon stays up; a dead hub
-/// surfaces as EOF.
-pub fn connect(path: &Path, rank: usize) -> Result<ProcessMailbox> {
-    let peer_path = peer_sock_path(path, rank);
-    let peer_listener = UnixListener::bind(&peer_path)
-        .with_context(|| format!("bind peer data-plane socket {}", peer_path.display()))?;
+/// Connect to the hub at `hub` as `rank`, authenticating with the fleet
+/// `token`: dial the hub, bind this rank's own data-plane listener
+/// (*before* `HELLO`, so the endpoint the hub learns is always
+/// connectable), send `HELLO`, and hand the hub socket to a background
+/// reader thread.
+///
+/// The data-plane listener binds at `peer_listen` when given (the
+/// `--hosts` launcher passes each remote rank its advertised endpoint);
+/// otherwise it is derived from the hub endpoint — `<path>.r<rank>` next
+/// to a unix hub, or an ephemeral TCP port on whichever local interface
+/// the dialed hub connection uses (that interface demonstrably routes to
+/// the rest of the fleet's side of the network).
+///
+/// The worker then blocks in [`ProcessMailbox::await_phase`] until the
+/// hub opens a phase — there is deliberately no read timeout, because a
+/// warm worker legitimately idles between jobs for as long as the daemon
+/// stays up; a dead hub surfaces as EOF.
+pub fn connect(
+    hub: &Endpoint,
+    rank: usize,
+    token: &str,
+    peer_listen: Option<Endpoint>,
+) -> Result<ProcessMailbox> {
+    let mut stream = dial(hub, &RetryPolicy::default())
+        .with_context(|| format!("connect to fabric hub at {hub}"))?;
+    let listen_at = match (peer_listen, hub) {
+        (Some(ep), _) => ep,
+        (None, Endpoint::Unix(path)) => Endpoint::Unix(peer_sock_path(path, rank)),
+        (None, Endpoint::Tcp(..)) => {
+            let ip = stream
+                .local_tcp_ip()
+                .context("tcp hub connection reports no local address")?;
+            Endpoint::Tcp(ip.to_string(), 0)
+        }
+    };
+    let peer_listener = Listener::bind(&listen_at)
+        .with_context(|| format!("bind peer data-plane listener at {listen_at}"))?;
+    let peer_endpoint = peer_listener.local_endpoint()?;
     let (tx, rx) = channel();
     let peer_tx = tx.clone();
-    let peer_accept = std::thread::spawn(move || peer_accept_loop(peer_listener, peer_tx));
+    let expect_token = token.to_string();
+    let peer_accept =
+        std::thread::spawn(move || peer_accept_loop(peer_listener, peer_tx, expect_token));
 
-    let mut stream = UnixStream::connect(path)
-        .with_context(|| format!("connect to fabric hub at {}", path.display()))?;
-    let hello = Frame::Hello { rank: rank as u32, peer: peer_path.display().to_string() };
+    let hello =
+        Frame::Hello { rank: rank as u32, token: token.to_string(), peer: peer_endpoint };
     write_frame(&mut stream, &hello).context("send HELLO")?;
     let reader_stream = stream.try_clone().context("clone fabric socket")?;
     let reader_tx = tx;
@@ -219,8 +254,9 @@ pub fn connect(path: &Path, rank: usize) -> Result<ProcessMailbox> {
         rx,
         pending: VecDeque::new(),
         link: Link::Open,
-        peer_paths: Vec::new(),
+        peer_endpoints: Vec::new(),
         peer_writers: Vec::new(),
+        token: token.to_string(),
         epoch: 0,
         phases_started: 0,
         hub_frames: 0,
@@ -230,7 +266,7 @@ pub fn connect(path: &Path, rank: usize) -> Result<ProcessMailbox> {
     })
 }
 
-fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
+fn reader_loop(mut stream: Stream, tx: Sender<ChildEvent>) {
     loop {
         let ev = match read_frame(&mut stream) {
             Ok(Some(Frame::Relay { peer, msg })) => ChildEvent::Deliver { src: peer as usize, msg },
@@ -275,26 +311,31 @@ fn reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
 /// are retried after a short sleep, mirroring the service listener. The
 /// thread lives as long as the worker process (a worker's mailbox does
 /// too; the process exits when the hub says `BYE`).
-fn peer_accept_loop(listener: UnixListener, tx: Sender<ChildEvent>) {
+fn peer_accept_loop(listener: Listener, tx: Sender<ChildEvent>, token: String) {
     loop {
         match listener.accept() {
-            Ok((stream, _)) => {
+            Ok(stream) => {
                 let tx = tx.clone();
-                std::thread::spawn(move || peer_reader_loop(stream, tx));
+                let token = token.clone();
+                std::thread::spawn(move || peer_reader_loop(stream, tx, token));
             }
             Err(_) => std::thread::sleep(Duration::from_millis(20)),
         }
     }
 }
 
-/// Per-connection mesh reader. The claimed source rank is range-checked
-/// by the mailbox against the phase's world size (`absorb` /
-/// `await_phase`), where that size is known — this thread only pins the
+/// Per-connection mesh reader. The `PEERHELLO` must carry the fleet
+/// token — a stray connector (routine on a TCP listener) is dropped
+/// before any of its frames reach the mailbox. The claimed source rank is
+/// range-checked by the mailbox against the phase's world size (`absorb`
+/// / `await_phase`), where that size is known — this thread only pins the
 /// connection to one rank and rejects frames that contradict it.
-fn peer_reader_loop(mut stream: UnixStream, tx: Sender<ChildEvent>) {
+fn peer_reader_loop(mut stream: Stream, tx: Sender<ChildEvent>, token: String) {
     let src = match read_frame(&mut stream) {
-        Ok(Some(Frame::PeerHello { rank })) => rank as usize,
-        _ => return, // not a well-formed peer: drop the connection
+        Ok(Some(Frame::PeerHello { rank, token: got })) if got == token => rank as usize,
+        // Wrong token, not a PEERHELLO, or malformed: drop the connection
+        // without ever joining the mesh.
+        _ => return,
     };
     loop {
         match read_frame(&mut stream) {
@@ -397,19 +438,19 @@ impl ProcessMailbox {
         Ok(Some(start))
     }
 
-    /// Install the phase's peer socket map. Cached direct connections are
-    /// kept when the map is unchanged (the warm-fleet case) and dropped
-    /// when it differs (a respawned fleet binds fresh sockets).
-    fn set_peers(&mut self, peers: Vec<String>) -> Result<()> {
+    /// Install the phase's peer endpoint map. Cached direct connections
+    /// are kept when the map is unchanged (the warm-fleet case) and
+    /// dropped when it differs (a respawned fleet binds fresh listeners).
+    fn set_peers(&mut self, peers: Vec<Endpoint>) -> Result<()> {
         ensure!(
             peers.is_empty() || peers.len() == self.size,
             "peer map has {} entries for world size {}",
             peers.len(),
             self.size
         );
-        if self.peer_paths != peers {
+        if self.peer_endpoints != peers {
             self.peer_writers = (0..peers.len()).map(|_| None).collect();
-            self.peer_paths = peers;
+            self.peer_endpoints = peers;
         }
         Ok(())
     }
@@ -501,11 +542,13 @@ impl ProcessMailbox {
         false
     }
 
-    /// Open a fresh direct connection to `dst`: connect + `PEERHELLO`.
-    fn open_peer(&self, dst: usize) -> std::io::Result<UnixStream> {
-        let mut stream = UnixStream::connect(&self.peer_paths[dst])?;
-        write_frame(&mut stream, &Frame::PeerHello { rank: self.rank as u32 })?;
-        Ok(stream)
+    /// Open a fresh direct connection to `dst`: one dial (the outer
+    /// `send_direct` loop owns retries, so the policy is single-attempt)
+    /// with the `PEERHELLO` handshake as the preamble.
+    fn open_peer(&self, dst: usize) -> Result<Stream> {
+        let hello =
+            Frame::PeerHello { rank: self.rank as u32, token: self.token.clone() }.encode();
+        dial_with_preamble(&self.peer_endpoints[dst], &RetryPolicy::once(), &hello)
     }
 
     /// The error that severed the hub link, if any. The worker loop checks
@@ -562,7 +605,7 @@ impl Mailbox for ProcessMailbox {
         }
         // The plane counters record frames actually written, so a failed
         // send (which severs the link) never inflates them.
-        if !self.peer_paths.is_empty() {
+        if !self.peer_endpoints.is_empty() {
             // Mesh data plane: worker-to-worker, zero hub hops.
             if self.send_direct(dst, msg) {
                 self.direct_frames += 1;
@@ -609,41 +652,63 @@ pub enum HubEvent {
 }
 
 /// Per-rank write halves, shared between the hub and its route threads.
-type Writers = Arc<Vec<Mutex<Option<UnixStream>>>>;
+type Writers = Arc<Vec<Mutex<Option<Stream>>>>;
 
 /// Parent-side fabric endpoint: accepts worker connections, runs one route
 /// thread per worker, opens phases, and surfaces merges. Owned and driven
 /// by [`crate::par::engine_process::ProcessFleet`].
 pub struct Hub {
-    listener: UnixListener,
+    listener: Listener,
+    /// The endpoint the listener is actually bound at (ephemeral TCP
+    /// ports resolved).
+    endpoint: Endpoint,
     p: usize,
+    /// The fleet's shared-secret token; a `HELLO` carrying anything else
+    /// is rejected before the connection touches any per-rank state.
+    token: String,
     writers: Writers,
     events_tx: Sender<HubEvent>,
     events_rx: Receiver<HubEvent>,
     routers: Vec<JoinHandle<()>>,
     connected: usize,
-    /// Each rank's own data-plane socket path, learned from its `HELLO`.
-    peer_paths: Vec<Option<String>>,
+    /// Each rank's own data-plane endpoint, learned from its `HELLO`.
+    peer_endpoints: Vec<Option<Endpoint>>,
 }
 
 impl Hub {
-    /// Bind the hub socket for a world of `p` ranks.
-    pub fn bind(path: &Path, p: usize) -> Result<Hub> {
+    /// Bind the hub listener at `ep` for a world of `p` ranks,
+    /// authenticated by `token`.
+    pub fn bind(ep: &Endpoint, p: usize, token: String) -> Result<Hub> {
         ensure!(p >= 1, "world size must be ≥ 1");
-        let listener = UnixListener::bind(path)
-            .with_context(|| format!("bind fabric hub socket {}", path.display()))?;
+        let listener =
+            Listener::bind(ep).with_context(|| format!("bind fabric hub at {ep}"))?;
+        let endpoint = listener.local_endpoint()?;
         listener.set_nonblocking(true).context("set hub listener non-blocking")?;
         let (events_tx, events_rx) = channel();
         Ok(Hub {
             listener,
+            endpoint,
             p,
+            token,
             writers: Arc::new((0..p).map(|_| Mutex::new(None)).collect()),
             events_tx,
             events_rx,
             routers: Vec::with_capacity(p),
             connected: 0,
-            peer_paths: vec![None; p],
+            peer_endpoints: vec![None; p],
         })
+    }
+
+    /// The endpoint workers must dial — the bind endpoint with any
+    /// ephemeral TCP port resolved to the one the OS picked.
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// The fleet's shared-secret token: what every joining worker must
+    /// present in its `HELLO` (and peers in their `PEERHELLO`s).
+    pub fn token(&self) -> &str {
+        &self.token
     }
 
     /// Ranks that have completed the `HELLO` handshake so far.
@@ -651,11 +716,11 @@ impl Hub {
         self.connected
     }
 
-    /// The mesh peer socket map: every rank's own data-plane socket path
+    /// The mesh peer endpoint map: every rank's own data-plane endpoint
     /// in rank order, as reported in the `HELLO` handshakes. Errors until
     /// the whole fleet has connected.
-    pub fn peer_map(&self) -> Result<Vec<String>> {
-        self.peer_paths
+    pub fn peer_map(&self) -> Result<Vec<Endpoint>> {
+        self.peer_endpoints
             .iter()
             .enumerate()
             .map(|(rank, p)| {
@@ -668,7 +733,7 @@ impl Hub {
     /// whether one was accepted. Non-blocking: the engine interleaves this
     /// with liveness checks on the spawned processes.
     pub fn try_accept(&mut self) -> Result<bool> {
-        let (mut stream, _) = match self.listener.accept() {
+        let mut stream = match self.listener.accept() {
             Ok(conn) => conn,
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
             Err(e) => return Err(e).context("accept worker connection"),
@@ -676,10 +741,14 @@ impl Hub {
         stream.set_nonblocking(false).context("set worker socket blocking")?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
         let frame = read_frame(&mut stream)?.context("worker closed during handshake")?;
-        let (rank, peer) = match frame {
-            Frame::Hello { rank, peer } => (rank as usize, peer),
+        let (rank, token, peer) = match frame {
+            Frame::Hello { rank, token, peer } => (rank as usize, token, peer),
             other => bail!("expected HELLO from worker, got {}", other.name()),
         };
+        ensure!(
+            token == self.token,
+            "HELLO with bad auth token (a stray connection, or a worker from another fleet)"
+        );
         ensure!(rank < self.p, "HELLO rank {rank} out of range for world size {}", self.p);
         stream.set_read_timeout(None)?;
         let reader = stream.try_clone().context("clone worker socket")?;
@@ -688,7 +757,7 @@ impl Hub {
             ensure!(slot.is_none(), "duplicate HELLO for rank {rank}");
             *slot = Some(stream);
         }
-        self.peer_paths[rank] = Some(peer);
+        self.peer_endpoints[rank] = Some(peer);
         let writers = Arc::clone(&self.writers);
         let tx = self.events_tx.clone();
         let p = self.p;
@@ -717,11 +786,11 @@ impl Hub {
 
     /// Open a phase by shipping the full run specification — phase
     /// parameters *plus* database — to every rank. `peers` selects the
-    /// data plane: the mesh peer socket map ([`Hub::peer_map`]) for direct
-    /// worker-to-worker traffic, or empty for the hub relay. Use
+    /// data plane: the mesh peer endpoint map ([`Hub::peer_map`]) for
+    /// direct worker-to-worker traffic, or empty for the hub relay. Use
     /// [`Hub::broadcast_reconfig`] instead when the workers already hold
     /// the database (the warm-fleet fast path).
-    pub fn broadcast_config(&mut self, spec: &RunSpec, peers: &[String]) -> Result<()> {
+    pub fn broadcast_config(&mut self, spec: &RunSpec, peers: &[Endpoint]) -> Result<()> {
         let bytes = encode_config(spec, peers);
         ensure!(
             bytes.len() - 4 <= MAX_FRAME_LEN as usize,
@@ -735,7 +804,7 @@ impl Hub {
     /// Open a phase over the database the workers already hold: ships the
     /// phase parameters (plus the peer map, as in [`Hub::broadcast_config`])
     /// only — a ~60-byte frame instead of the serialized database.
-    pub fn broadcast_reconfig(&mut self, phase: &PhaseSpec, peers: &[String]) -> Result<()> {
+    pub fn broadcast_reconfig(&mut self, phase: &PhaseSpec, peers: &[Endpoint]) -> Result<()> {
         let frame = Frame::Reconfig { phase: Box::new(phase.clone()), peers: peers.to_vec() };
         self.broadcast_bytes(&frame.encode(), "send RECONFIG")
     }
@@ -785,7 +854,7 @@ impl Hub {
 /// the whole fleet lifetime, spanning phases.
 fn route_loop(
     rank: usize,
-    mut reader: UnixStream,
+    mut reader: Stream,
     writers: Writers,
     tx: Sender<HubEvent>,
     p: usize,
@@ -872,6 +941,12 @@ mod tests {
         dir.join("hub.sock")
     }
 
+    fn test_ep(tag: &str) -> Endpoint {
+        Endpoint::unix(test_sock(tag))
+    }
+
+    const TOKEN: &str = "fabtest-fleet-token";
+
     fn merge_for(rank: u32) -> WorkerMerge {
         WorkerMerge {
             rank,
@@ -914,12 +989,12 @@ mod tests {
     /// routed both ways in each phase; `BYE` ends the loop.
     #[test]
     fn warm_hub_runs_two_phases_reusing_the_database() {
-        let sock = test_sock("route");
-        let mut hub = Hub::bind(&sock, 2).unwrap();
+        let sock = test_ep("route");
+        let mut hub = Hub::bind(&sock, 2, TOKEN.into()).unwrap();
 
-        let spawn_worker = |rank: usize, sock: std::path::PathBuf| {
+        let spawn_worker = |rank: usize, sock: Endpoint| {
             std::thread::spawn(move || -> Result<()> {
-                let mut mb = connect(&sock, rank)?;
+                let mut mb = connect(&sock, rank, TOKEN, None)?;
                 let mut phases = 0u32;
                 while let Some(start) = mb.await_phase()? {
                     assert_eq!(start.phase.p, 2);
@@ -975,12 +1050,12 @@ mod tests {
     /// per-phase plane counters show zero hub-relayed frames.
     #[test]
     fn warm_mesh_runs_two_phases_with_direct_peer_traffic() {
-        let sock = test_sock("mesh");
-        let mut hub = Hub::bind(&sock, 2).unwrap();
+        let sock = test_ep("mesh");
+        let mut hub = Hub::bind(&sock, 2, TOKEN.into()).unwrap();
 
-        let spawn_worker = |rank: usize, sock: std::path::PathBuf| {
+        let spawn_worker = |rank: usize, sock: Endpoint| {
             std::thread::spawn(move || -> Result<()> {
-                let mut mb = connect(&sock, rank)?;
+                let mut mb = connect(&sock, rank, TOKEN, None)?;
                 let mut phases = 0u32;
                 while let Some(start) = mb.await_phase()? {
                     assert_eq!(start.phase.p, 2);
@@ -1014,7 +1089,11 @@ mod tests {
         accept_all(&mut hub, 2);
         let peers = hub.peer_map().unwrap();
         assert_eq!(peers.len(), 2);
-        assert!(peers[0].ends_with(".r0") && peers[1].ends_with(".r1"), "{peers:?}");
+        assert!(
+            peers[0].to_string().ends_with(".r0") && peers[1].to_string().ends_with(".r1"),
+            "{peers:?}"
+        );
+        assert!(peers.iter().all(Endpoint::is_unix), "unix hub must yield unix peers");
         hub.broadcast_config(&tiny_spec(2), &peers).unwrap();
         hub.start_all().unwrap();
         collect_merges(&hub, 2);
@@ -1034,12 +1113,12 @@ mod tests {
     #[test]
     fn mesh_preserves_fifo_per_src_dst_pair() {
         const N: u64 = 200;
-        let sock = test_sock("fifo");
-        let mut hub = Hub::bind(&sock, 3).unwrap();
+        let sock = test_ep("fifo");
+        let mut hub = Hub::bind(&sock, 3, TOKEN.into()).unwrap();
 
-        let sender = |rank: usize, sock: std::path::PathBuf| {
+        let sender = |rank: usize, sock: Endpoint| {
             std::thread::spawn(move || -> Result<()> {
-                let mut mb = connect(&sock, rank)?;
+                let mut mb = connect(&sock, rank, TOKEN, None)?;
                 while let Some(_start) = mb.await_phase()? {
                     for t in 0..N {
                         mb.send(1, Msg::WaveDown { t, lambda: rank as u32 });
@@ -1052,7 +1131,7 @@ mod tests {
         let receiver = std::thread::spawn({
             let sock = sock.clone();
             move || -> Result<()> {
-                let mut mb = connect(&sock, 1)?;
+                let mut mb = connect(&sock, 1, TOKEN, None)?;
                 while let Some(_start) = mb.await_phase()? {
                     let mut next = [0u64; 3]; // per-source expected sequence number
                     let mut got = 0u64;
@@ -1098,14 +1177,14 @@ mod tests {
     /// GIVE payloads (serialized SearchNodes) survive the hub round trip.
     #[test]
     fn give_tasks_roundtrip_through_hub() {
-        let sock = test_sock("give");
-        let mut hub = Hub::bind(&sock, 2).unwrap();
+        let sock = test_ep("give");
+        let mut hub = Hub::bind(&sock, 2, TOKEN.into()).unwrap();
         let tasks = vec![crate::fabric::WireTask { items: vec![3, 9], core: 9, support: 4 }];
         let sent = tasks.clone();
         let w0 = std::thread::spawn({
             let sock = sock.clone();
             move || -> Result<()> {
-                let mut mb = connect(&sock, 0)?;
+                let mut mb = connect(&sock, 0, TOKEN, None)?;
                 while let Some(_start) = mb.await_phase()? {
                     mb.send(
                         1,
@@ -1119,7 +1198,7 @@ mod tests {
         let w1 = std::thread::spawn({
             let sock = sock.clone();
             move || -> Result<(usize, Msg)> {
-                let mut mb = connect(&sock, 1)?;
+                let mut mb = connect(&sock, 1, TOKEN, None)?;
                 let mut got_msg = None;
                 while let Some(_start) = mb.await_phase()? {
                     let deadline = Instant::now() + Duration::from_secs(10);
@@ -1168,21 +1247,32 @@ mod tests {
     }
 
     #[test]
-    fn hub_rejects_out_of_range_and_duplicate_ranks() {
-        let sock = test_sock("badrank");
-        let mut hub = Hub::bind(&sock, 2).unwrap();
-        let hello = |rank| Frame::Hello { rank, peer: format!("/nowhere.r{rank}") };
+    fn hub_rejects_out_of_range_duplicate_and_bad_token_hellos() {
+        let sock = test_ep("badrank");
+        let mut hub = Hub::bind(&sock, 2, TOKEN.into()).unwrap();
+        let hello = |rank, token: &str| Frame::Hello {
+            rank,
+            token: token.into(),
+            peer: Endpoint::unix(format!("/nowhere.r{rank}")),
+        };
+        let raw_connect = || dial(&sock, &RetryPolicy::once()).unwrap();
         // out-of-range rank
-        let mut s = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut s, &hello(9)).unwrap();
+        let mut s = raw_connect();
+        write_frame(&mut s, &hello(9, TOKEN)).unwrap();
         let err = accept_outcome(&mut hub).expect_err("rank 9 must be rejected");
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // wrong fleet token: rejected before any rank state is touched
+        let mut t = raw_connect();
+        write_frame(&mut t, &hello(0, "someone-elses-fleet")).unwrap();
+        let err = accept_outcome(&mut hub).expect_err("bad token must be rejected");
+        assert!(format!("{err:#}").contains("bad auth token"), "{err:#}");
+        assert_eq!(hub.connected(), 0, "a bad-token HELLO must not register a rank");
         // duplicate rank: first registration succeeds, second errors
-        let mut a = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut a, &hello(0)).unwrap();
+        let mut a = raw_connect();
+        write_frame(&mut a, &hello(0, TOKEN)).unwrap();
         assert!(accept_outcome(&mut hub).unwrap());
-        let mut b = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut b, &hello(0)).unwrap();
+        let mut b = raw_connect();
+        write_frame(&mut b, &hello(0, TOKEN)).unwrap();
         let err = accept_outcome(&mut hub).expect_err("duplicate rank must be rejected");
         assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
         assert_eq!(hub.connected(), 1);
@@ -1191,5 +1281,61 @@ mod tests {
         // a phase broadcast with a missing rank fails loudly
         let err = hub.broadcast_config(&tiny_spec(2), &[]).expect_err("incomplete fleet");
         assert!(format!("{err:#}").contains("1/2"), "{err:#}");
+    }
+
+    /// The same warm mesh exchange over loopback TCP: the hub binds an
+    /// ephemeral port, workers derive their data-plane listeners from the
+    /// dialed connection's local interface, the peer map carries tcp
+    /// endpoints with real ports, and the plane counters still show zero
+    /// hub relays.
+    #[test]
+    fn tcp_hub_runs_mesh_phase_with_direct_peer_traffic() {
+        let mut hub = Hub::bind(&Endpoint::tcp("127.0.0.1", 0), 2, TOKEN.into()).unwrap();
+        let ep = hub.endpoint().clone();
+        assert!(matches!(&ep, Endpoint::Tcp(_, port) if *port != 0), "{ep}");
+
+        let spawn_worker = |rank: usize, ep: Endpoint| {
+            std::thread::spawn(move || -> Result<()> {
+                let mut mb = connect(&ep, rank, TOKEN, None)?;
+                while let Some(start) = mb.await_phase()? {
+                    assert_eq!(start.phase.p, 2);
+                    let peer = 1 - rank;
+                    mb.send(peer, Msg::WaveDown { t: rank as u64, lambda: 5 });
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    let got = loop {
+                        if let Some(got) = mb.try_recv() {
+                            break got;
+                        }
+                        assert!(Instant::now() < deadline, "no message from peer");
+                        mb.wait_for_msg(Duration::from_millis(10));
+                    };
+                    assert_eq!(got.0, peer);
+                    assert!(matches!(got.1, Msg::WaveDown { lambda: 5, .. }));
+                    let (hub_frames, direct_frames) = mb.plane_counters();
+                    assert_eq!(hub_frames, 0, "tcp mesh must not relay through the hub");
+                    assert_eq!(direct_frames, 1);
+                    mb.send_merge(&merge_for(rank as u32))?;
+                }
+                Ok(())
+            })
+        };
+        let w0 = spawn_worker(0, ep.clone());
+        let w1 = spawn_worker(1, ep.clone());
+
+        accept_all(&mut hub, 2);
+        let peers = hub.peer_map().unwrap();
+        for p in &peers {
+            assert!(
+                matches!(p, Endpoint::Tcp(_, port) if *port != 0),
+                "tcp hub must yield resolved tcp peer endpoints, got {p}"
+            );
+        }
+        hub.broadcast_config(&tiny_spec(2), &peers).unwrap();
+        hub.start_all().unwrap();
+        collect_merges(&hub, 2);
+        hub.broadcast_bye();
+        w0.join().unwrap().unwrap();
+        w1.join().unwrap().unwrap();
+        hub.join();
     }
 }

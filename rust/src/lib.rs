@@ -17,6 +17,9 @@
 //!   MPI-like message fabric (thread, discrete-event, and multi-process
 //!   backends), lifeline work stealing, termination detection, and the
 //!   parallel DFS worker.
+//! - [`net`] — the pluggable stream transport: typed `Endpoint`
+//!   addresses (`unix:<path>` | `tcp:<host>:<port>`), listener/stream
+//!   wrappers, and the single dial/retry path (DESIGN.md §11).
 //! - [`wire`] — the versioned length-prefixed binary protocol the process
 //!   fabric speaks across address spaces (DESIGN.md §7).
 //! - [`coordinator`] — the L3 orchestration layer: owns the three-phase
@@ -42,6 +45,7 @@ pub mod fabric;
 pub mod glb;
 pub mod lamp;
 pub mod lcm;
+pub mod net;
 pub mod par;
 pub mod runtime;
 pub mod service;

@@ -1,0 +1,16 @@
+//! Host-neutral stream transport (DESIGN.md §11).
+//!
+//! Everything in the process fabric and the serving layer that used to
+//! hold a raw Unix-socket path now holds an [`Endpoint`] — a typed
+//! address that is either `unix:<path>` or `tcp:<host>:<port>` — and
+//! every listener/stream pair is a [`Listener`]/[`Stream`] wrapper that
+//! works identically over both transports. This module sits *below*
+//! [`crate::wire`]: it never encodes or decodes frames itself (callers
+//! hand [`dial_with_preamble`] pre-encoded bytes), so the layering stays
+//! acyclic while the wire layer can still carry endpoints as strings.
+
+pub mod transport;
+
+pub use transport::{
+    dial, dial_with_preamble, fresh_token, Endpoint, Listener, RetryPolicy, Stream,
+};

@@ -1,0 +1,583 @@
+//! The pluggable stream transport: typed endpoints, listener/stream
+//! wrappers over Unix-domain and TCP sockets, and the single dial path
+//! (connect timeout + bounded retry/backoff) every client-side
+//! connection in the crate goes through.
+//!
+//! Endpoint grammar (DESIGN.md §11):
+//!
+//! ```text
+//! endpoint := "unix:" path
+//!           | "tcp:" host ":" port        (port := u16; host may not be
+//!                                          empty; the LAST colon splits
+//!                                          host from port)
+//!           | path                        (no scheme — legacy `--socket`
+//!                                          form, taken as a unix path)
+//! ```
+//!
+//! Parsing and display round-trip exactly: `ep.to_string().parse()`
+//! yields `ep` back for every endpoint (the bare-path legacy form
+//! normalizes to `unix:<path>` on display).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{IpAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// Endpoint
+// ---------------------------------------------------------------------------
+
+/// A typed transport address: a Unix-domain socket path or a TCP
+/// `host:port` pair. The crate-wide replacement for the raw socket-path
+/// `String`s that used to thread through wire framing, fabric setup,
+/// peer maps, and the service layer.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    /// `unix:<path>` — a filesystem socket (single host).
+    Unix(PathBuf),
+    /// `tcp:<host>:<port>` — a network socket (any host). Port 0 asks
+    /// the OS for an ephemeral port; [`Listener::local_endpoint`]
+    /// reports the resolved one.
+    Tcp(String, u16),
+}
+
+impl Endpoint {
+    /// A unix-domain endpoint at `path`.
+    pub fn unix(path: impl Into<PathBuf>) -> Endpoint {
+        Endpoint::Unix(path.into())
+    }
+
+    /// A TCP endpoint at `host:port`.
+    pub fn tcp(host: impl Into<String>, port: u16) -> Endpoint {
+        Endpoint::Tcp(host.into(), port)
+    }
+
+    pub fn is_unix(&self) -> bool {
+        matches!(self, Endpoint::Unix(_))
+    }
+
+    pub fn is_tcp(&self) -> bool {
+        matches!(self, Endpoint::Tcp(..))
+    }
+
+    /// The filesystem path, if this is a unix endpoint. Cleanup code
+    /// (`SockDir`, the serve-socket guard) keys off this: TCP endpoints
+    /// have nothing to unlink.
+    pub fn unix_path(&self) -> Option<&Path> {
+        match self {
+            Endpoint::Unix(p) => Some(p),
+            Endpoint::Tcp(..) => None,
+        }
+    }
+
+    /// Short transport name, for log lines and error contexts.
+    pub fn transport_name(&self) -> &'static str {
+        match self {
+            Endpoint::Unix(_) => "unix",
+            Endpoint::Tcp(..) => "tcp",
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+            Endpoint::Tcp(host, port) => write!(f, "tcp:{host}:{port}"),
+        }
+    }
+}
+
+impl FromStr for Endpoint {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Endpoint> {
+        if s.is_empty() {
+            bail!("empty endpoint (expected unix:<path> or tcp:<host>:<port>)");
+        }
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                bail!("endpoint '{s}': unix endpoint needs a non-empty path");
+            }
+            return Ok(Endpoint::Unix(PathBuf::from(path)));
+        }
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            let Some((host, port)) = rest.rsplit_once(':') else {
+                bail!("endpoint '{s}': tcp endpoint needs <host>:<port>");
+            };
+            if host.is_empty() {
+                bail!("endpoint '{s}': tcp endpoint has an empty host");
+            }
+            let port: u16 = port
+                .parse()
+                .with_context(|| format!("endpoint '{s}': bad port '{port}' (want 0..=65535)"))?;
+            return Ok(Endpoint::Tcp(host.to_string(), port));
+        }
+        // No scheme: the legacy `--socket PATH` form. Any other string is
+        // a valid unix path, so typos like `tpc:h:1` parse as paths — the
+        // connect error that follows names the path, which is diagnosable.
+        Ok(Endpoint::Unix(PathBuf::from(s)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listener / Stream
+// ---------------------------------------------------------------------------
+
+/// A bound, accepting socket over either transport.
+#[derive(Debug)]
+pub enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind a listener at `ep`. For TCP, port 0 binds an ephemeral port;
+    /// read the real address back with [`Listener::local_endpoint`].
+    pub fn bind(ep: &Endpoint) -> Result<Listener> {
+        match ep {
+            Endpoint::Unix(path) => {
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("bind unix listener at {}", path.display()))?;
+                Ok(Listener::Unix(l))
+            }
+            Endpoint::Tcp(host, port) => {
+                let l = TcpListener::bind((host.as_str(), *port))
+                    .with_context(|| format!("bind tcp listener at {host}:{port}"))?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+
+    /// The endpoint this listener is actually bound at. For TCP this
+    /// resolves a requested port 0 to the ephemeral port the OS picked —
+    /// the address peers must dial.
+    pub fn local_endpoint(&self) -> Result<Endpoint> {
+        match self {
+            Listener::Unix(l) => {
+                let addr = l.local_addr().context("unix listener local_addr")?;
+                let path = addr
+                    .as_pathname()
+                    .context("unix listener is unnamed (no filesystem path)")?;
+                Ok(Endpoint::Unix(path.to_path_buf()))
+            }
+            Listener::Tcp(l) => {
+                let addr = l.local_addr().context("tcp listener local_addr")?;
+                Ok(Endpoint::Tcp(addr.ip().to_string(), addr.port()))
+            }
+        }
+    }
+
+    pub fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nonblocking),
+            Listener::Tcp(l) => l.set_nonblocking(nonblocking),
+        }
+    }
+
+    /// Accept one connection. TCP streams get `TCP_NODELAY` so the
+    /// fabric's small control frames aren't Nagle-delayed.
+    pub fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Stream::Unix(s))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+}
+
+/// A connected stream over either transport. Implements `Read + Write`,
+/// so [`crate::wire::read_frame`] / [`crate::wire::write_frame`] work on
+/// it directly — a dialed `Stream` *is* the framed connection.
+#[derive(Debug)]
+pub enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    pub fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+        }
+    }
+
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(dur),
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    pub fn shutdown(&self, how: std::net::Shutdown) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.shutdown(how),
+            Stream::Tcp(s) => s.shutdown(how),
+        }
+    }
+
+    /// The local IP of a TCP stream (`None` for unix). A worker that
+    /// dialed a remote hub uses this to learn which of its interfaces
+    /// routes to the coordinator, and binds its mesh listener there.
+    pub fn local_tcp_ip(&self) -> Option<IpAddr> {
+        match self {
+            Stream::Unix(_) => None,
+            Stream::Tcp(s) => s.local_addr().ok().map(|a| a.ip()),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dial (the one connect/retry/backoff path)
+// ---------------------------------------------------------------------------
+
+/// Connect timeout + bounded retry/backoff for [`dial`]. The backoff
+/// doubles per failed attempt, capped at one second.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total connect attempts (≥ 1).
+    pub attempts: u32,
+    /// Per-attempt connect timeout (TCP only; unix connects are local
+    /// and either succeed or fail immediately).
+    pub connect_timeout: Duration,
+    /// Pause after the first failed attempt; doubles each retry.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 5,
+            connect_timeout: Duration::from_secs(5),
+            backoff: Duration::from_millis(20),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A single attempt, no backoff — for callers (the mesh `send_direct`
+    /// path) that run their own retry loop around the dial.
+    pub fn once() -> RetryPolicy {
+        RetryPolicy { attempts: 1, ..RetryPolicy::default() }
+    }
+}
+
+fn connect_once(ep: &Endpoint, timeout: Duration) -> Result<Stream> {
+    match ep {
+        Endpoint::Unix(path) => {
+            let s = UnixStream::connect(path)
+                .with_context(|| format!("connect unix socket {}", path.display()))?;
+            Ok(Stream::Unix(s))
+        }
+        Endpoint::Tcp(host, port) => {
+            let addrs: Vec<_> = (host.as_str(), *port)
+                .to_socket_addrs()
+                .with_context(|| format!("resolve {host}:{port}"))?
+                .collect();
+            let mut last: Option<io::Error> = None;
+            for addr in &addrs {
+                match TcpStream::connect_timeout(addr, timeout) {
+                    Ok(s) => {
+                        let _ = s.set_nodelay(true);
+                        return Ok(Stream::Tcp(s));
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            match last {
+                Some(e) => Err(e).with_context(|| format!("connect tcp {host}:{port}")),
+                None => bail!("{host}:{port} resolved to no addresses"),
+            }
+        }
+    }
+}
+
+/// Dial `ep` under `policy`: up to `attempts` connects, each with the
+/// policy's timeout, sleeping a doubling backoff between failures. The
+/// returned [`Stream`] is ready for `read_frame`/`write_frame` — this is
+/// the *only* connect path in the crate (service client, worker hub
+/// dial, and mesh peer dial all come through here).
+pub fn dial(ep: &Endpoint, policy: &RetryPolicy) -> Result<Stream> {
+    let attempts = policy.attempts.max(1);
+    let mut pause = policy.backoff;
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(pause);
+            pause = (pause * 2).min(Duration::from_secs(1));
+        }
+        match connect_once(ep, policy.connect_timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap())
+        .with_context(|| format!("dial {ep} failed after {attempts} attempt(s)"))
+}
+
+/// [`dial`], then write `preamble` (a pre-encoded wire frame — HELLO or
+/// PEERHELLO bytes) before handing the stream back. Keeping the frame
+/// encoding on the caller's side keeps `net` below `wire` in the layer
+/// map while still collapsing every connect+handshake preamble into one
+/// helper.
+pub fn dial_with_preamble(ep: &Endpoint, policy: &RetryPolicy, preamble: &[u8]) -> Result<Stream> {
+    let mut stream = dial(ep, policy)?;
+    stream
+        .write_all(preamble)
+        .and_then(|()| stream.flush())
+        .with_context(|| format!("send handshake preamble to {ep}"))?;
+    Ok(stream)
+}
+
+// ---------------------------------------------------------------------------
+// Fleet auth token
+// ---------------------------------------------------------------------------
+
+/// A fresh per-fleet shared-secret token, carried in every HELLO and
+/// PEERHELLO (wire v4) and checked before a connection joins the fabric.
+/// It is an anti-accident guard — unique per fleet so a stray or stale
+/// connection (another fleet on the same port, a port scanner, a
+/// crossed-wire test) is rejected at the handshake — **not** a
+/// cryptographic credential; run real multi-host fleets on a trusted
+/// network.
+pub fn fresh_token() -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let pid = std::process::id() as u64;
+    let seq = COUNTER.fetch_add(1, Ordering::Relaxed);
+    // splitmix64 finalizer over the three entropy sources; the counter
+    // guarantees distinct tokens even within one clock tick.
+    let mut x = nanos ^ (pid << 32) ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    format!("{x:016x}")
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::rng::Rng;
+
+    fn ep(s: &str) -> Endpoint {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn parse_and_display_fixed_cases() {
+        assert_eq!(ep("unix:/tmp/x.sock"), Endpoint::unix("/tmp/x.sock"));
+        assert_eq!(ep("tcp:127.0.0.1:7401"), Endpoint::tcp("127.0.0.1", 7401));
+        assert_eq!(ep("tcp:node-03.cluster:0"), Endpoint::tcp("node-03.cluster", 0));
+        // Legacy bare path (the old `--socket PATH` form).
+        assert_eq!(ep("/run/parlamp.sock"), Endpoint::unix("/run/parlamp.sock"));
+        assert_eq!(ep("rel/path.sock"), Endpoint::unix("rel/path.sock"));
+        // Display normalizes to the schemed form and round-trips.
+        assert_eq!(ep("/tmp/a").to_string(), "unix:/tmp/a");
+        assert_eq!(ep("tcp:h:80").to_string(), "tcp:h:80");
+        // The LAST colon splits host from port, so colon-bearing hosts
+        // (unbracketed IPv6) survive.
+        assert_eq!(ep("tcp:::1:9000"), Endpoint::tcp("::1", 9000));
+    }
+
+    #[test]
+    fn parse_errors_are_clear() {
+        for (input, needle) in [
+            ("", "empty endpoint"),
+            ("unix:", "non-empty path"),
+            ("tcp:justhost", "<host>:<port>"),
+            ("tcp::9000", "empty host"),
+            ("tcp:h:70000", "bad port"),
+            ("tcp:h:-1", "bad port"),
+            ("tcp:h:x", "bad port"),
+        ] {
+            let err = input.parse::<Endpoint>().unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "error for '{input}' missing '{needle}': {msg}");
+        }
+    }
+
+    /// Satellite: `Endpoint` parse/display round-trip as a property over
+    /// generated hosts, ports, and paths (including colons in paths).
+    #[test]
+    fn endpoint_display_parse_roundtrip_property() {
+        fn rand_host(rng: &mut Rng) -> String {
+            const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789.-";
+            let len = 1 + rng.below(16) as usize;
+            (0..len).map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize] as char).collect()
+        }
+        fn rand_path(rng: &mut Rng) -> String {
+            // Paths may contain colons and dots but (for the round-trip to
+            // hold through PathBuf) no NUL and nothing empty.
+            const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789._-:/";
+            let len = 1 + rng.below(24) as usize;
+            let body: String = (0..len)
+                .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize] as char)
+                .collect();
+            format!("/{body}")
+        }
+        forall("endpoint display/parse round-trip", 512, |rng| {
+            let original = if rng.bernoulli(0.5) {
+                Endpoint::tcp(rand_host(rng), (rng.next_u64() & 0xFFFF) as u16)
+            } else {
+                Endpoint::unix(rand_path(rng))
+            };
+            let shown = original.to_string();
+            let back: Endpoint =
+                shown.parse().map_err(|e| format!("'{shown}' failed to re-parse: {e}"))?;
+            if back != original {
+                return Err(format!("{original:?} -> '{shown}' -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    fn tmp_sock(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "parlamp-net-{}-{tag}-{n}.sock",
+            std::process::id()
+        ))
+    }
+
+    fn echo_roundtrip(listen_at: &Endpoint) {
+        let listener = Listener::bind(listen_at).expect("bind");
+        let local = listener.local_endpoint().expect("local endpoint");
+        if let Endpoint::Tcp(_, port) = &local {
+            assert_ne!(*port, 0, "port 0 must resolve to a real ephemeral port");
+        }
+        let server = std::thread::spawn(move || {
+            let mut s = listener.accept().expect("accept");
+            let mut buf = [0u8; 5];
+            s.read_exact(&mut buf).expect("server read");
+            s.write_all(&buf).expect("server write");
+            buf
+        });
+        let mut c = dial(&local, &RetryPolicy::default()).expect("dial");
+        c.write_all(b"hello").expect("client write");
+        let mut back = [0u8; 5];
+        c.read_exact(&mut back).expect("client read");
+        assert_eq!(&back, b"hello");
+        assert_eq!(server.join().unwrap(), *b"hello");
+    }
+
+    #[test]
+    fn unix_listener_stream_roundtrip() {
+        let path = tmp_sock("echo");
+        echo_roundtrip(&Endpoint::unix(&path));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tcp_listener_stream_roundtrip_and_port_resolution() {
+        echo_roundtrip(&Endpoint::tcp("127.0.0.1", 0));
+    }
+
+    #[test]
+    fn dial_with_preamble_delivers_bytes_first() {
+        let listener = Listener::bind(&Endpoint::tcp("127.0.0.1", 0)).unwrap();
+        let local = listener.local_endpoint().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut s = listener.accept().unwrap();
+            let mut pre = [0u8; 4];
+            s.read_exact(&mut pre).unwrap();
+            pre
+        });
+        let stream =
+            dial_with_preamble(&local, &RetryPolicy::once(), b"PLMW").expect("dial+preamble");
+        assert!(stream.local_tcp_ip().is_some(), "tcp stream must report a local ip");
+        assert_eq!(server.join().unwrap(), *b"PLMW");
+    }
+
+    #[test]
+    fn dial_dead_endpoint_reports_attempts() {
+        let gone = Endpoint::unix(tmp_sock("gone"));
+        let policy = RetryPolicy {
+            attempts: 3,
+            connect_timeout: Duration::from_millis(200),
+            backoff: Duration::from_millis(1),
+        };
+        let err = dial(&gone, &policy).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("3 attempt(s)"), "missing attempt count: {msg}");
+        assert!(msg.contains("connect unix socket"), "missing cause: {msg}");
+    }
+
+    #[test]
+    fn fresh_tokens_are_distinct_hex() {
+        let a = fresh_token();
+        let b = fresh_token();
+        assert_ne!(a, b, "two tokens from one process must differ");
+        for t in [&a, &b] {
+            assert_eq!(t.len(), 16);
+            assert!(t.chars().all(|c| c.is_ascii_hexdigit()));
+        }
+    }
+
+    #[test]
+    fn unix_streams_have_no_tcp_ip() {
+        let path = tmp_sock("noip");
+        let listener = Listener::bind(&Endpoint::unix(&path)).unwrap();
+        let local = listener.local_endpoint().unwrap();
+        assert_eq!(local, Endpoint::unix(&path), "unix local_endpoint echoes the bind path");
+        let _srv = std::thread::spawn(move || listener.accept());
+        let stream = dial(&local, &RetryPolicy::once()).unwrap();
+        assert!(stream.local_tcp_ip().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -2,12 +2,26 @@
 //!
 //! The third engine, and the first with true distributed memory: where
 //! [`super::engine_thread`] shares one address space and [`super::engine_sim`]
-//! shares one event loop, this engine spawns each rank as a separate worker
-//! process connected to a parent [`Hub`] over Unix-domain sockets, speaking
-//! the [`crate::wire`] protocol (DESIGN.md §7). Every steal, DTD wave, and
+//! shares one event loop, this engine runs each rank as a separate worker
+//! process connected to a parent [`Hub`] over a stream transport — a
+//! Unix-domain socket by default, loopback or cross-host TCP when the hub
+//! is given a `tcp:` [`Endpoint`] (DESIGN.md §11) — speaking the
+//! [`crate::wire`] protocol (DESIGN.md §7). Every steal, DTD wave, and
 //! phase-boundary merge of the paper's §4 protocol therefore crosses a real
 //! serialization boundary — the configuration the paper's MPI runs assume,
-//! minus only the physical network.
+//! minus (on one host) only the physical network.
+//!
+//! Workers join in one of two ways, decided by
+//! [`ProcessConfig::remote_workers`]:
+//!
+//! - **local spawn** (the default): the parent forks `P` children of the
+//!   `parlamp` binary pointed at the hub endpoint;
+//! - **remote attach** (`--hosts`): the parent only *binds* — via the
+//!   two-phase [`ProcessFleet::bind`] / [`PendingFleet::await_workers`]
+//!   API — and prints per-rank join commands
+//!   (`parlamp __worker --connect <endpoint> --token <T> …`) for workers
+//!   started by hand (or by a launcher) on other machines. The shared
+//!   fleet token keeps stray TCP connections out.
 //!
 //! The central abstraction is the **warm fleet** ([`ProcessFleet`]): spawn
 //! the worker processes once, then run any number of phases — and any
@@ -30,7 +44,7 @@
 //! whatever [`ProcessConfig::worker_exe`] / `$PARLAMP_WORKER_EXE` names,
 //! for callers that are not the binary).
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -41,6 +55,7 @@ use crate::db::Database;
 use crate::fabric::process::{connect, DataPlane, Hub, HubEvent};
 use crate::fabric::CommStats;
 use crate::lcm::SupportHist;
+use crate::net::{fresh_token, Endpoint};
 use crate::wire::{PhaseSpec, RunSpec, WorkerMerge};
 
 use super::breakdown::Breakdown;
@@ -84,6 +99,19 @@ pub struct ProcessConfig {
     /// relay (`Hub`, the centralized baseline). A fleet property — fixed
     /// at [`ProcessFleet::spawn`] for the fleet's whole lifetime.
     pub data_plane: DataPlane,
+    /// Where the hub listens. `None` (the default) binds a Unix socket in
+    /// a fresh per-fleet temp directory; `Some(tcp:host:0)` asks the OS
+    /// for an ephemeral TCP port (resolved in [`Hub::endpoint`]). An
+    /// explicit `unix:` endpoint is honored as given — the caller owns the
+    /// path's directory.
+    pub listen: Option<Endpoint>,
+    /// `Some(endpoints)` switches the fleet to **remote attach** mode: no
+    /// children are spawned; the fleet instead waits for
+    /// `len()` externally-launched `parlamp __worker --connect …` processes
+    /// (overriding `p`). Entry `i` is rank `i`'s mesh data-plane listen
+    /// endpoint, handed to that worker as `--peer-endpoint` in its join
+    /// command.
+    pub remote_workers: Option<Vec<Endpoint>>,
 }
 
 impl ProcessConfig {
@@ -101,6 +129,16 @@ impl ProcessConfig {
             worker_exe: None,
             spawn_timeout: Duration::from_secs(30),
             data_plane: DataPlane::Mesh,
+            listen: None,
+            remote_workers: None,
+        }
+    }
+
+    /// World size: the remote host count in attach mode, `p` otherwise.
+    pub fn world_size(&self) -> usize {
+        match &self.remote_workers {
+            Some(hosts) => hosts.len(),
+            None => self.p,
         }
     }
 }
@@ -118,13 +156,15 @@ struct Fleet {
 }
 
 impl Fleet {
-    fn spawn(exe: &Path, sock: &Path, p: usize) -> Result<Fleet> {
+    fn spawn(exe: &PathBuf, hub: &Endpoint, token: &str, p: usize) -> Result<Fleet> {
         let mut children = Vec::with_capacity(p);
         for rank in 0..p {
             let child = Command::new(exe)
                 .arg("__worker")
-                .arg("--socket")
-                .arg(sock)
+                .arg("--connect")
+                .arg(hub.to_string())
+                .arg("--token")
+                .arg(token)
                 .arg("--worker-rank")
                 .arg(rank.to_string())
                 .stdin(Stdio::null())
@@ -135,6 +175,12 @@ impl Fleet {
             children.push(child);
         }
         Ok(Fleet { reaped: vec![false; p], children })
+    }
+
+    /// The remote-attach fleet: no children to supervise — liveness comes
+    /// from the workers' hub connections alone.
+    fn remote() -> Fleet {
+        Fleet { reaped: Vec::new(), children: Vec::new() }
     }
 
     /// Non-blocking liveness check: a worker that already exited while the
@@ -181,6 +227,10 @@ impl Drop for Fleet {
 /// ends. This covers the hub socket *and* every worker's own mesh
 /// data-plane socket (`hub.sock.r<rank>`, DESIGN.md §10), which the
 /// workers bind inside the same directory.
+///
+/// Only Unix transports have filesystem residue: a fleet whose hub
+/// listens on TCP carries no `SockDir` at all (`None`), so teardown and
+/// respawn never attempt a bogus unlink of a name that was never a file.
 struct SockDir(PathBuf);
 
 impl Drop for SockDir {
@@ -189,7 +239,7 @@ impl Drop for SockDir {
     }
 }
 
-fn fresh_sock_path() -> Result<(SockDir, PathBuf)> {
+fn fresh_sock_endpoint() -> Result<(SockDir, Endpoint)> {
     static COUNTER: AtomicU64 = AtomicU64::new(0);
     let dir = std::env::temp_dir().join(format!(
         "parlamp-pf-{}-{}",
@@ -198,7 +248,7 @@ fn fresh_sock_path() -> Result<(SockDir, PathBuf)> {
     ));
     std::fs::create_dir_all(&dir)
         .with_context(|| format!("create socket directory {}", dir.display()))?;
-    let sock = dir.join("hub.sock");
+    let sock = Endpoint::unix(dir.join("hub.sock"));
     Ok((SockDir(dir), sock))
 }
 
@@ -224,55 +274,137 @@ fn worker_exe(cfg: &ProcessConfig) -> Result<PathBuf> {
 pub struct ProcessFleet {
     hub: Hub,
     fleet: Fleet,
-    _sock_dir: SockDir,
+    _sock_dir: Option<SockDir>,
     p: usize,
     /// Digest of the database currently resident on every worker.
     resident_db: Option<u64>,
     /// Data plane this fleet was spawned with. Fixed for the fleet
     /// lifetime: the mesh peer map is resolved once at spawn (every
-    /// worker's own socket path, learned during the `HELLO` handshakes)
-    /// and redistributed with each phase frame.
+    /// worker's own listen endpoint, learned during the `HELLO`
+    /// handshakes) and redistributed with each phase frame.
     data_plane: DataPlane,
-    /// The resolved mesh peer socket map; empty under [`DataPlane::Hub`].
-    peers: Vec<String>,
+    /// The resolved mesh peer endpoint map; empty under [`DataPlane::Hub`].
+    peers: Vec<Endpoint>,
 }
 
-impl ProcessFleet {
-    /// Bind a hub socket, spawn `cfg.p` worker processes, and block until
-    /// every rank has completed the `HELLO` handshake (or
-    /// `cfg.spawn_timeout` passes / a worker dies).
-    pub fn spawn(cfg: &ProcessConfig) -> Result<ProcessFleet> {
-        let p = cfg.p;
-        ensure!(p >= 1, "world size must be ≥ 1");
-        let (sock_dir, sock) = fresh_sock_path()?;
-        let mut hub = Hub::bind(&sock, p)?;
-        let exe = worker_exe(cfg)?;
-        let mut fleet = Fleet::spawn(&exe, &sock, p)?;
-        let deadline = Instant::now() + cfg.spawn_timeout;
-        while hub.connected() < p {
-            fleet.check().context("while assembling the worker fleet")?;
-            if !hub.try_accept()? {
+/// A fleet that has bound its hub but not yet assembled its workers — the
+/// first half of the two-phase spawn. The split exists for remote attach
+/// mode: the hub endpoint and the fleet token must be *printable* (so the
+/// operator can launch `parlamp __worker --connect … --token …` on other
+/// machines) before the blocking wait for those workers begins.
+pub struct PendingFleet {
+    hub: Hub,
+    fleet: Fleet,
+    _sock_dir: Option<SockDir>,
+    p: usize,
+    data_plane: DataPlane,
+    spawn_timeout: Duration,
+    remote: bool,
+}
+
+impl PendingFleet {
+    /// The endpoint joining workers must dial (ephemeral TCP ports
+    /// resolved).
+    pub fn endpoint(&self) -> &Endpoint {
+        self.hub.endpoint()
+    }
+
+    /// The fleet's shared-secret auth token.
+    pub fn token(&self) -> &str {
+        self.hub.token()
+    }
+
+    /// The join command for rank `rank`, ready to paste on another host.
+    /// `peer` is the rank's mesh data-plane listen endpoint
+    /// (`--peer-endpoint`); omit it to let the worker pick one itself.
+    pub fn join_command(&self, exe: &str, rank: usize, peer: Option<&Endpoint>) -> String {
+        let mut cmd = format!(
+            "{exe} __worker --connect {} --token {} --worker-rank {rank}",
+            self.endpoint(),
+            self.token()
+        );
+        if let Some(p) = peer {
+            cmd.push_str(&format!(" --peer-endpoint {p}"));
+        }
+        cmd
+    }
+
+    /// Block until every rank has completed the `HELLO` handshake (or the
+    /// spawn timeout passes / a locally-spawned worker dies), then freeze
+    /// the mesh peer map and hand over the warm fleet.
+    pub fn await_workers(mut self) -> Result<ProcessFleet> {
+        let p = self.p;
+        let deadline = Instant::now() + self.spawn_timeout;
+        while self.hub.connected() < p {
+            self.fleet.check().context("while assembling the worker fleet")?;
+            if !self.hub.try_accept()? {
                 ensure!(
                     Instant::now() < deadline,
-                    "timed out assembling worker fleet ({}/{p} connected)",
-                    hub.connected()
+                    "timed out assembling worker fleet ({}/{p} {})",
+                    self.hub.connected(),
+                    if self.remote { "remote workers attached" } else { "connected" }
                 );
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
-        let peers = match cfg.data_plane {
-            DataPlane::Mesh => hub.peer_map().context("resolve mesh peer socket map")?,
+        let peers = match self.data_plane {
+            DataPlane::Mesh => {
+                self.hub.peer_map().context("resolve mesh peer endpoint map")?
+            }
             DataPlane::Hub => Vec::new(),
         };
         Ok(ProcessFleet {
+            hub: self.hub,
+            fleet: self.fleet,
+            _sock_dir: self._sock_dir,
+            p,
+            resident_db: None,
+            data_plane: self.data_plane,
+            peers,
+        })
+    }
+}
+
+impl ProcessFleet {
+    /// First half of the spawn: bind the hub (at `cfg.listen`, or a fresh
+    /// per-fleet Unix socket), mint the fleet token, and either spawn
+    /// `cfg.p` local children pointed at it or — in remote attach mode —
+    /// spawn nothing and leave the joining to the caller's operators.
+    /// Complete with [`PendingFleet::await_workers`].
+    pub fn bind(cfg: &ProcessConfig) -> Result<PendingFleet> {
+        let p = cfg.world_size();
+        ensure!(p >= 1, "world size must be ≥ 1");
+        let (sock_dir, listen) = match &cfg.listen {
+            Some(ep) => (None, ep.clone()),
+            None => {
+                let (dir, ep) = fresh_sock_endpoint()?;
+                (Some(dir), ep)
+            }
+        };
+        let hub = Hub::bind(&listen, p, fresh_token())?;
+        let fleet = if cfg.remote_workers.is_some() {
+            Fleet::remote()
+        } else {
+            let exe = worker_exe(cfg)?;
+            Fleet::spawn(&exe, hub.endpoint(), hub.token(), p)?
+        };
+        Ok(PendingFleet {
             hub,
             fleet,
             _sock_dir: sock_dir,
             p,
-            resident_db: None,
             data_plane: cfg.data_plane,
-            peers,
+            spawn_timeout: cfg.spawn_timeout,
+            remote: cfg.remote_workers.is_some(),
         })
+    }
+
+    /// Bind a hub, spawn the workers, and block until every rank has
+    /// completed the `HELLO` handshake (or `cfg.spawn_timeout` passes / a
+    /// worker dies). [`ProcessFleet::bind`] + [`PendingFleet::await_workers`]
+    /// in one call — what every local-spawn caller wants.
+    pub fn spawn(cfg: &ProcessConfig) -> Result<ProcessFleet> {
+        ProcessFleet::bind(cfg)?.await_workers()
     }
 
     /// World size.
@@ -418,22 +550,37 @@ fn collect_merges(db: &Database, merges: &[WorkerMerge], mode: RunMode) -> ParRu
 }
 
 /// Child entry point behind the hidden `__worker` CLI command: join the hub
-/// named by `--socket` as `--worker-rank`, then serve phases until `BYE` —
-/// for each one, run the ordinary Fig. 5 worker loop over the process
-/// fabric and ship the merge. The database arrives with the first phase
-/// (`CONFIG`) and is retained across `RECONFIG` phases.
+/// at `--connect <endpoint>` (legacy spellings `--endpoint`/`--socket`
+/// accepted) as `--worker-rank`, presenting the fleet's `--token`, then
+/// serve phases until `BYE` — for each one, run the ordinary Fig. 5 worker
+/// loop over the process fabric and ship the merge. The database arrives
+/// with the first phase (`CONFIG`) and is retained across `RECONFIG`
+/// phases. `--peer-endpoint` pins the mesh data-plane listener (remote
+/// attach mode hands each rank its advertised address); without it the
+/// worker derives one from the hub endpoint.
 pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
     // Terminal Ctrl-C hits the whole foreground process group; a worker
     // that died to it would abort the supervisor's graceful drain. Workers
     // are supervised — they exit on fabric EOF or `BYE` — so SIGINT is
     // ignored here (SIGTERM keeps its default for targeted kills).
     crate::util::sig::ignore_interrupts();
-    let sock = args.require("socket")?;
+    let hub: Endpoint = args
+        .get("connect")
+        .or_else(|| args.get("endpoint"))
+        .or_else(|| args.get("socket"))
+        .context("__worker needs --connect <endpoint> (or legacy --socket PATH)")?
+        .parse()
+        .context("--connect endpoint")?;
+    let token = args.get("token").unwrap_or("").to_string();
+    let peer_listen: Option<Endpoint> = match args.get("peer-endpoint") {
+        Some(p) => Some(p.parse().context("--peer-endpoint")?),
+        None => None,
+    };
     let rank: usize = args
         .require("worker-rank")?
         .parse()
         .context("--worker-rank must be a non-negative integer")?;
-    let mut mb = connect(Path::new(sock), rank)?;
+    let mut mb = connect(&hub, rank, &token, peer_listen)?;
     let mut resident: Option<Database> = None;
 
     while let Some(start) = mb.await_phase()? {
@@ -556,5 +703,35 @@ mod tests {
         assert_eq!(pc.probe_budget_units, tc.probe_budget_units);
         assert_eq!(pc.dtd_interval_ns, tc.dtd_interval_ns);
         assert!(pc.steal && pc.preprocess);
+        assert!(pc.listen.is_none() && pc.remote_workers.is_none());
+    }
+
+    #[test]
+    fn remote_workers_override_world_size() {
+        let mut cfg = ProcessConfig::paper_defaults(4, 7);
+        assert_eq!(cfg.world_size(), 4);
+        cfg.remote_workers =
+            Some(vec![Endpoint::tcp("h1", 7001), Endpoint::tcp("h2", 7001)]);
+        assert_eq!(cfg.world_size(), 2);
+    }
+
+    #[test]
+    fn bind_exposes_endpoint_token_and_join_commands() {
+        let mut cfg = ProcessConfig::paper_defaults(2, 1);
+        cfg.listen = Some(Endpoint::tcp("127.0.0.1", 0));
+        cfg.remote_workers =
+            Some(vec![Endpoint::tcp("10.0.0.1", 7001), Endpoint::tcp("10.0.0.2", 7001)]);
+        // Remote attach: bind() must return without spawning or waiting for
+        // anything, with a printable resolved endpoint and token.
+        let pending = ProcessFleet::bind(&cfg).unwrap();
+        assert!(matches!(pending.endpoint(), Endpoint::Tcp(_, p) if *p != 0));
+        assert_eq!(pending.token().len(), 16);
+        let peer = Endpoint::tcp("10.0.0.2", 7001);
+        let cmd = pending.join_command("parlamp", 1, Some(&peer));
+        assert!(cmd.contains("__worker"), "{cmd}");
+        assert!(cmd.contains(&format!("--connect {}", pending.endpoint())), "{cmd}");
+        assert!(cmd.contains(&format!("--token {}", pending.token())), "{cmd}");
+        assert!(cmd.contains("--worker-rank 1"), "{cmd}");
+        assert!(cmd.contains("--peer-endpoint tcp:10.0.0.2:7001"), "{cmd}");
     }
 }

@@ -8,8 +8,9 @@
 //! - [`engine_thread`] — real OS threads (the paper's single-node MPI runs);
 //! - [`engine_sim`] — the deterministic discrete-event simulation used for
 //!   the P ≤ 1,200 scaling studies (Figs. 6–7; TSUBAME substitution);
-//! - [`engine_process`] — one OS process per rank over the Unix-socket
-//!   fabric, with every message serialized through [`crate::wire`]
+//! - [`engine_process`] — one OS process per rank over the stream-socket
+//!   fabric (Unix-domain on one host, TCP across hosts — DESIGN.md §11),
+//!   with every message serialized through [`crate::wire`]
 //!   (distributed memory for real; DESIGN.md §7).
 //!
 //! The *naive baseline* of Table 2 is this same machinery with stealing
@@ -24,7 +25,9 @@ pub mod worker;
 
 pub use breakdown::Breakdown;
 pub use crate::fabric::process::DataPlane;
-pub use engine_process::{run_process, run_process_with, ProcessConfig, ProcessFleet};
+pub use engine_process::{
+    run_process, run_process_with, PendingFleet, ProcessConfig, ProcessFleet,
+};
 pub use engine_sim::{run_sim, SimConfig};
 pub use engine_thread::{run_threads, run_threads_with, ThreadConfig};
 pub use worker::{Poll, RunMode, Worker, WorkerConfig};

@@ -2,25 +2,25 @@
 //! surface typed results. Used by the `parlamp submit|status|results|
 //! shutdown` subcommands and by the integration tests.
 
-use std::os::unix::net::UnixStream;
-use std::path::Path;
-
 use anyhow::{bail, Context, Result};
 
+use crate::net::{dial, Endpoint, RetryPolicy, Stream};
 use crate::wire::service::{JobOutcome, JobSpec, JobState};
 use crate::wire::{read_frame, write_frame, Frame};
 
 /// One connection to a running daemon. A connection can carry any number
 /// of requests; each request is one frame out, one frame back.
 pub struct Client {
-    stream: UnixStream,
+    stream: Stream,
 }
 
 impl Client {
-    /// Connect to the daemon listening at `path`.
-    pub fn connect(path: &Path) -> Result<Client> {
-        let stream = UnixStream::connect(path).with_context(|| {
-            format!("connect to parlamp daemon at {} (is `parlamp serve` running?)", path.display())
+    /// Connect to the daemon listening at `ep` — Unix path or TCP
+    /// host:port, through the one [`dial`] retry/timeout path (DESIGN.md
+    /// §11).
+    pub fn connect(ep: &Endpoint) -> Result<Client> {
+        let stream = dial(ep, &RetryPolicy::default()).with_context(|| {
+            format!("connect to parlamp daemon at {ep} (is `parlamp serve` running?)")
         })?;
         Ok(Client { stream })
     }

@@ -9,7 +9,8 @@
 //! cost when mining requests arrive as a stream. This module is where that
 //! lives:
 //!
-//! - [`server::serve`] — the daemon: binds a Unix-domain socket, spawns
+//! - [`server::serve`] — the daemon: binds a stream socket (`unix:` or
+//!   `tcp:`, DESIGN.md §11), spawns
 //!   the process-fabric worker fleet **once** ([`crate::par::ProcessFleet`])
 //!   and keeps it warm, schedules queued jobs one at a time across it, and
 //!   drains gracefully on `SHUTDOWN` or `SIGTERM`;
@@ -33,4 +34,4 @@ pub mod server;
 pub use cache::{CacheKey, ResultCache};
 pub use client::Client;
 pub use queue::JobQueue;
-pub use server::{serve, ServeConfig};
+pub use server::{print_join_commands, serve, ServeConfig};

@@ -1,7 +1,8 @@
 //! The `parlamp serve` daemon (DESIGN.md §9).
 //!
 //! One process owns a warm [`ProcessFleet`] for its whole lifetime and
-//! answers job frames over a Unix-domain socket:
+//! answers job frames over a stream socket — Unix-domain by default, TCP
+//! when `--endpoint tcp:host:port` says so (DESIGN.md §11):
 //!
 //! - a **listener thread** accepts client connections and spawns one
 //!   handler thread per connection;
@@ -19,7 +20,6 @@
 //! and the socket is unlinked before [`serve`] returns.
 
 use std::collections::HashMap;
-use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
@@ -27,7 +27,8 @@ use std::time::Duration;
 use anyhow::{Context as _, Result};
 
 use crate::coordinator::Coordinator;
-use crate::par::{DataPlane, ProcessConfig, ProcessFleet};
+use crate::net::{Endpoint, Listener, Stream};
+use crate::par::{DataPlane, PendingFleet, ProcessConfig, ProcessFleet};
 use crate::util::sig;
 use crate::wire::service::{JobOutcome, JobSpec, JobState};
 use crate::wire::{read_frame, write_frame, Frame};
@@ -38,9 +39,11 @@ use super::queue::JobQueue;
 /// Knobs of one daemon instance.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Where to listen. Created at startup, unlinked at shutdown; refuses
-    /// to start if the path already exists.
-    pub socket: PathBuf,
+    /// Where to listen (`unix:<path>` or `tcp:<host>:<port>`). A Unix
+    /// socket is created at startup and unlinked at shutdown, and the
+    /// daemon refuses to start if the path already exists; a TCP listener
+    /// leaves nothing on disk.
+    pub listen: Endpoint,
     /// Warm fleet size (worker processes).
     pub procs: usize,
     /// Result-cache capacity (entries).
@@ -54,17 +57,26 @@ pub struct ServeConfig {
     /// are opened lazily and then kept warm across jobs, so a stream of
     /// steal-heavy jobs pays the connect cost once.
     pub data_plane: DataPlane,
+    /// Where the fleet *hub* listens (`--transport tcp` maps to
+    /// `Some(tcp:127.0.0.1:0)`); `None` = a fresh per-fleet Unix socket.
+    pub fleet_listen: Option<Endpoint>,
+    /// Remote attach mode (`--hosts`): the daemon spawns no local workers
+    /// and instead prints join commands for `len()` externally-launched
+    /// ones (see [`crate::par::engine_process`]).
+    pub remote_workers: Option<Vec<Endpoint>>,
 }
 
 impl ServeConfig {
-    pub fn new(socket: PathBuf, procs: usize) -> ServeConfig {
+    pub fn new(listen: Endpoint, procs: usize) -> ServeConfig {
         ServeConfig {
-            socket,
+            listen,
             procs,
             cache_cap: 32,
             worker_exe: None,
             spawn_timeout: Duration::from_secs(30),
             data_plane: DataPlane::Mesh,
+            fleet_listen: None,
+            remote_workers: None,
         }
     }
 }
@@ -127,17 +139,50 @@ impl Shared {
 }
 
 /// Unlink the service socket when the daemon exits, however it exits.
-struct SocketGuard(PathBuf);
+/// Transport-aware: only a Unix endpoint leaves a filesystem name behind;
+/// for TCP there is nothing to unlink, so the guard is a no-op and a
+/// restart can never fail on a bogus stale-path check.
+struct SocketGuard(Endpoint);
 
 impl Drop for SocketGuard {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.0);
+        if let Some(path) = self.0.unix_path() {
+            let _ = std::fs::remove_file(path);
+        }
     }
 }
 
-/// Run the daemon: spawn the fleet, listen on `cfg.socket`, schedule jobs
+/// Spawn (or remote-attach) the daemon's warm fleet. In remote attach
+/// mode the per-rank join commands are printed *before* the blocking wait,
+/// so the operator can start the workers on their hosts.
+fn spawn_fleet(fleet_cfg: &ProcessConfig) -> Result<ProcessFleet> {
+    let pending = ProcessFleet::bind(fleet_cfg).context("bind fleet hub")?;
+    if let Some(hosts) = &fleet_cfg.remote_workers {
+        print_join_commands(&pending, hosts);
+    }
+    pending.await_workers().context("assemble warm worker fleet")
+}
+
+/// Print one copy-pasteable `parlamp __worker` join command per rank —
+/// shared by `serve` and the `lamp --hosts` launcher path.
+pub fn print_join_commands(pending: &PendingFleet, hosts: &[Endpoint]) {
+    let exe = std::env::current_exe()
+        .map(|p| p.to_string_lossy().into_owned())
+        .unwrap_or_else(|_| "parlamp".into());
+    println!(
+        "fleet hub listening at {} ({} remote worker(s) expected)",
+        pending.endpoint(),
+        hosts.len()
+    );
+    println!("start each worker on its host:");
+    for (rank, peer) in hosts.iter().enumerate() {
+        println!("JOIN[{rank}]: {}", pending.join_command(&exe, rank, Some(peer)));
+    }
+}
+
+/// Run the daemon: spawn the fleet, listen on `cfg.listen`, schedule jobs
 /// until a `SHUTDOWN` frame or `SIGTERM`/`SIGINT` drains the queue.
-/// Returns after the fleet was dismissed and the socket unlinked.
+/// Returns after the fleet was dismissed and any Unix socket unlinked.
 pub fn serve(cfg: &ServeConfig) -> Result<()> {
     // SIGTERM/SIGINT latch into an atomic flag the scheduler polls; the
     // worker processes ignore terminal SIGINT themselves (see util::sig),
@@ -148,26 +193,36 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         worker_exe: cfg.worker_exe.clone(),
         spawn_timeout: cfg.spawn_timeout,
         data_plane: cfg.data_plane,
+        listen: cfg.fleet_listen.clone(),
+        remote_workers: cfg.remote_workers.clone(),
         ..ProcessConfig::paper_defaults(cfg.procs, 2015)
     };
     // Fleet first: a daemon that cannot mine should fail before it starts
     // accepting submissions.
-    let mut fleet = Some(ProcessFleet::spawn(&fleet_cfg).context("spawn warm worker fleet")?);
+    let mut fleet = Some(spawn_fleet(&fleet_cfg)?);
     println!(
         "parlamp serve: fleet of {} worker processes warm ({} data plane)",
-        cfg.procs,
+        fleet_cfg.world_size(),
         cfg.data_plane.name()
     );
 
-    let listener = UnixListener::bind(&cfg.socket).with_context(|| {
-        format!(
-            "bind service socket {} (stale socket from a dead daemon? remove it first)",
-            cfg.socket.display()
-        )
-    })?;
-    let _socket_guard = SocketGuard(cfg.socket.clone());
+    if let Some(path) = cfg.listen.unix_path() {
+        // Refuse a stale path loudly instead of silently stealing it; a
+        // TCP bind gets the same protection from the OS (AddrInUse).
+        if path.exists() {
+            anyhow::bail!(
+                "service socket {} already exists (stale socket from a dead daemon? \
+                 remove it first)",
+                path.display()
+            );
+        }
+    }
+    let listener = Listener::bind(&cfg.listen)
+        .with_context(|| format!("bind service endpoint {}", cfg.listen))?;
+    let _socket_guard = SocketGuard(cfg.listen.clone());
+    let bound = listener.local_endpoint().context("resolve service endpoint")?;
     listener.set_nonblocking(true).context("set service listener non-blocking")?;
-    println!("parlamp serve: listening on {}", cfg.socket.display());
+    println!("parlamp serve: listening on {bound}");
 
     let shared = Arc::new(Shared {
         inner: Mutex::new(Inner {
@@ -190,7 +245,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
             return;
         }
         match listener.accept() {
-            Ok((stream, _)) => {
+            Ok(stream) => {
                 if stream.set_nonblocking(false).is_err() {
                     continue;
                 }
@@ -319,7 +374,7 @@ fn mine(
     spec: &JobSpec,
 ) -> Result<crate::coordinator::CoordinatorRun> {
     if fleet.is_none() {
-        *fleet = Some(ProcessFleet::spawn(fleet_cfg).context("respawn worker fleet")?);
+        *fleet = Some(spawn_fleet(fleet_cfg).context("respawn worker fleet")?);
     }
     let f = fleet.as_mut().expect("fleet just ensured");
     let coord = Coordinator::new(spec.alpha).with_glb(spec.glb).with_screen(spec.screen);
@@ -333,7 +388,7 @@ fn mine(
 }
 
 /// One connected client: serve frames until EOF (or its `SHUTDOWN` ack).
-fn client_loop(mut stream: UnixStream, shared: &Arc<Shared>) {
+fn client_loop(mut stream: Stream, shared: &Arc<Shared>) {
     loop {
         let frame = match read_frame(&mut stream) {
             Ok(Some(frame)) => frame,

@@ -43,6 +43,7 @@ use std::io::{Read, Write};
 
 use crate::db::{Database, Item};
 use crate::fabric::{BasicKind, CommStats, HistDelta, Msg, WireTask};
+use crate::net::Endpoint;
 use crate::par::breakdown::Breakdown;
 use crate::par::worker::RunMode;
 
@@ -60,7 +61,12 @@ pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 /// peer socket map, and `PEERHELLO`/`PEERMSG` open and carry the direct
 /// worker-to-worker connections (epoch-stamped for phase fencing). `MERGE`
 /// gains the hub-relayed / direct frame counters.
-pub const WIRE_VERSION: u16 = 3;
+/// v4: the pluggable stream transport (DESIGN.md §11) — every peer
+/// address is a typed [`crate::net::Endpoint`] (`unix:<path>` |
+/// `tcp:<host>:<port>`) instead of a raw socket path, and `HELLO` /
+/// `PEERHELLO` carry the per-fleet shared-secret token so stray TCP
+/// connections are rejected at the handshake.
+pub const WIRE_VERSION: u16 = 4;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -153,22 +159,24 @@ pub struct WorkerMerge {
 #[derive(Clone, Debug)]
 pub enum Frame {
     /// Worker → hub, first frame after connect: magic, version, own rank,
-    /// and the path of the worker's own data-plane listener socket (the
-    /// `<hub>.r<rank>` peer socket; used when the hub selects the mesh
-    /// data plane, DESIGN.md §10).
-    Hello { rank: u32, peer: String },
+    /// the fleet's shared-secret token (checked by the hub before the
+    /// rank joins; a stray or stale connection is rejected here), and the
+    /// endpoint of the worker's own data-plane listener (used when the
+    /// hub selects the mesh data plane, DESIGN.md §10-§11).
+    Hello { rank: u32, token: String, peer: Endpoint },
     /// Hub → worker: the phase specification plus the database. Sent once
     /// per dataset; subsequent phases over the same data use `Reconfig`.
-    /// `peers` is the peer socket map (one path per rank) when this phase
-    /// runs on the mesh data plane; empty = hub-relayed data plane.
-    Config { spec: Box<RunSpec>, peers: Vec<String> },
+    /// `peers` is the peer endpoint map (one endpoint per rank) when this
+    /// phase runs on the mesh data plane; empty = hub-relayed data plane.
+    Config { spec: Box<RunSpec>, peers: Vec<Endpoint> },
     /// Hub → worker: a new phase over the database shipped by the most
     /// recent `Config` — the warm-fleet fast path (no database bytes).
     /// `peers` as in `Config`.
-    Reconfig { phase: Box<PhaseSpec>, peers: Vec<String> },
+    Reconfig { phase: Box<PhaseSpec>, peers: Vec<Endpoint> },
     /// Worker → worker, first frame on a direct mesh connection: magic,
-    /// version, the *sender's* rank. Opens the lazy data-plane link.
-    PeerHello { rank: u32 },
+    /// version, the *sender's* rank, and the fleet token (checked by the
+    /// receiving worker before the link carries any data-plane traffic).
+    PeerHello { rank: u32, token: String },
     /// Worker → worker direct data-plane message: the sender's rank (must
     /// match the connection's `PeerHello`), the sender's phase index
     /// (epoch), and the protocol message. The epoch fences phases: unlike
@@ -601,29 +609,35 @@ fn get_phase(d: &mut Dec) -> Result<PhaseSpec> {
     })
 }
 
-/// The peer socket map carried by `CONFIG`/`RECONFIG`: one path per rank
-/// in rank order, or empty for the hub-relayed data plane.
-fn put_peers(buf: &mut Vec<u8>, peers: &[String]) {
+/// The peer endpoint map carried by `CONFIG`/`RECONFIG`: one endpoint per
+/// rank in rank order, or empty for the hub-relayed data plane. Endpoints
+/// cross the wire in their display form (`unix:<path>` |
+/// `tcp:<host>:<port>`), which parses back exactly.
+fn put_peers(buf: &mut Vec<u8>, peers: &[Endpoint]) {
     put_u32(buf, peers.len() as u32);
     for p in peers {
-        put_str(buf, p);
+        put_str(buf, &p.to_string());
     }
 }
 
-fn get_peers(d: &mut Dec) -> Result<Vec<String>> {
+fn get_peers(d: &mut Dec) -> Result<Vec<Endpoint>> {
     // Each entry carries at least its 4-byte length prefix, so the count
     // is validated against the remaining payload before any allocation.
     let n = d.count(4)?;
     let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        out.push(d.str()?);
+    for i in 0..n {
+        let s = d.str()?;
+        out.push(
+            s.parse::<Endpoint>()
+                .with_context(|| format!("wire: bad peer endpoint for rank {i}"))?,
+        );
     }
     Ok(out)
 }
 
 /// `CONFIG` payload: phase, peer map, then the database — the small
 /// header fields first, the bulk payload last.
-fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec, peers: &[String]) {
+fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec, peers: &[Endpoint]) {
     put_phase(buf, &spec.phase);
     put_peers(buf, peers);
     put_db(buf, &spec.db);
@@ -684,12 +698,13 @@ impl Frame {
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::new();
         match self {
-            Frame::Hello { rank, peer } => {
+            Frame::Hello { rank, token, peer } => {
                 put_u8(&mut body, TAG_HELLO);
                 body.extend_from_slice(&WIRE_MAGIC);
                 put_u16(&mut body, WIRE_VERSION);
                 put_u32(&mut body, *rank);
-                put_str(&mut body, peer);
+                put_str(&mut body, token);
+                put_str(&mut body, &peer.to_string());
             }
             Frame::Config { spec, peers } => {
                 put_u8(&mut body, TAG_CONFIG);
@@ -700,11 +715,12 @@ impl Frame {
                 put_phase(&mut body, phase);
                 put_peers(&mut body, peers);
             }
-            Frame::PeerHello { rank } => {
+            Frame::PeerHello { rank, token } => {
                 put_u8(&mut body, TAG_PEERHELLO);
                 body.extend_from_slice(&WIRE_MAGIC);
                 put_u16(&mut body, WIRE_VERSION);
                 put_u32(&mut body, *rank);
+                put_str(&mut body, token);
             }
             Frame::PeerMsg { src, epoch, msg } => {
                 put_u8(&mut body, TAG_PEERMSG);
@@ -780,7 +796,13 @@ impl Frame {
                     version == WIRE_VERSION,
                     "wire: HELLO version {version} != supported {WIRE_VERSION}"
                 );
-                Frame::Hello { rank: d.u32()?, peer: d.str()? }
+                let rank = d.u32()?;
+                let token = d.str()?;
+                let peer = d
+                    .str()?
+                    .parse::<Endpoint>()
+                    .context("wire: bad HELLO peer endpoint")?;
+                Frame::Hello { rank, token, peer }
             }
             TAG_CONFIG => {
                 let phase = get_phase(&mut d)?;
@@ -801,7 +823,7 @@ impl Frame {
                     version == WIRE_VERSION,
                     "wire: PEERHELLO version {version} != supported {WIRE_VERSION}"
                 );
-                Frame::PeerHello { rank: d.u32()? }
+                Frame::PeerHello { rank: d.u32()?, token: d.str()? }
             }
             TAG_PEERMSG => Frame::PeerMsg {
                 src: d.u32()?,
@@ -843,9 +865,9 @@ impl Frame {
 
 /// Pre-encode the `CONFIG` frame from a borrowed spec (the hub sends the
 /// identical bytes to every worker; this avoids cloning the database just
-/// to feed an owned [`Frame`]). `peers` is the mesh peer socket map, or
+/// to feed an owned [`Frame`]). `peers` is the mesh peer endpoint map, or
 /// empty for the hub-relayed data plane.
-pub fn encode_config(spec: &RunSpec, peers: &[String]) -> Vec<u8> {
+pub fn encode_config(spec: &RunSpec, peers: &[Endpoint]) -> Vec<u8> {
     let mut body = vec![TAG_CONFIG];
     put_spec(&mut body, spec, peers);
     let mut out = Vec::with_capacity(4 + body.len());
@@ -1000,12 +1022,22 @@ mod tests {
 
     #[test]
     fn hello_start_and_bye_roundtrip() {
-        match roundtrip(&Frame::Hello { rank: 11, peer: "/tmp/hub.sock.r11".into() }) {
-            Frame::Hello { rank, peer } => {
-                assert_eq!(rank, 11);
-                assert_eq!(peer, "/tmp/hub.sock.r11");
+        // Both transports survive the HELLO roundtrip with the token.
+        for peer in
+            [Endpoint::unix("/tmp/hub.sock.r11"), Endpoint::tcp("198.51.100.7", 9131)]
+        {
+            let sent = Frame::Hello { rank: 11, token: "deadbeef01020304".into(), peer };
+            match (roundtrip(&sent), sent) {
+                (
+                    Frame::Hello { rank, token, peer },
+                    Frame::Hello { rank: r0, token: t0, peer: p0 },
+                ) => {
+                    assert_eq!(rank, r0);
+                    assert_eq!(token, t0);
+                    assert_eq!(peer, p0);
+                }
+                (other, _) => panic!("{other:?}"),
             }
-            other => panic!("{other:?}"),
         }
         assert!(matches!(roundtrip(&Frame::Start), Frame::Start));
         assert!(matches!(roundtrip(&Frame::Bye), Frame::Bye));
@@ -1015,11 +1047,14 @@ mod tests {
 
     #[test]
     fn peer_frames_roundtrip() {
-        match roundtrip(&Frame::PeerHello { rank: 7 }) {
-            Frame::PeerHello { rank } => assert_eq!(rank, 7),
+        match roundtrip(&Frame::PeerHello { rank: 7, token: "0f0f0f0f0f0f0f0f".into() }) {
+            Frame::PeerHello { rank, token } => {
+                assert_eq!(rank, 7);
+                assert_eq!(token, "0f0f0f0f0f0f0f0f");
+            }
             other => panic!("{other:?}"),
         }
-        assert_eq!(Frame::PeerHello { rank: 0 }.name(), "PEERHELLO");
+        assert_eq!(Frame::PeerHello { rank: 0, token: String::new() }.name(), "PEERHELLO");
         let msg = Msg::Basic {
             stamp: 9,
             kind: BasicKind::Give {
@@ -1055,7 +1090,7 @@ mod tests {
     fn encode_config_matches_owned_frame_encode() {
         let db = Database::from_transactions(2, &[vec![0], vec![1]], &[true, false]);
         let spec = RunSpec { phase: phase_spec(2), db };
-        let peers = vec!["/a.sock.r0".to_string(), "/a.sock.r1".to_string()];
+        let peers = vec![Endpoint::unix("/a.sock.r0"), Endpoint::tcp("10.0.0.2", 7001)];
         let borrowed = encode_config(&spec, &peers);
         let owned = Frame::Config { spec: Box::new(spec), peers }.encode();
         assert_eq!(borrowed, owned);
@@ -1078,13 +1113,18 @@ mod tests {
             },
             db: db.clone(),
         };
-        let peer_map = vec!["/x.r0".to_string(), "/x.r1".into(), "/x.r2".into(), "/x.r3".into()];
+        let peer_map = vec![
+            Endpoint::unix("/x.r0"),
+            Endpoint::tcp("127.0.0.1", 9000),
+            Endpoint::tcp("node-2", 9001),
+            Endpoint::unix("/x.r3"),
+        ];
         let frame = Frame::Config { spec: Box::new(spec), peers: peer_map.clone() };
         let (got, got_peers) = match roundtrip(&frame) {
             Frame::Config { spec, peers } => (*spec, peers),
             other => panic!("{other:?}"),
         };
-        assert_eq!(got_peers, peer_map, "peer socket map must survive the roundtrip");
+        assert_eq!(got_peers, peer_map, "peer endpoint map must survive the roundtrip");
         assert_eq!(got.phase.p, 4);
         assert_eq!(got.phase.seed, 99);
         assert!(matches!(got.phase.mode, RunMode::Phase1 { alpha } if alpha == 0.05));
@@ -1170,7 +1210,8 @@ mod tests {
         // unknown tag
         assert!(Frame::decode(&[0x77]).is_err());
         // bad magic
-        let mut hello = Frame::Hello { rank: 0, peer: "/p".into() }.encode();
+        let mut hello =
+            Frame::Hello { rank: 0, token: "t".into(), peer: Endpoint::unix("/p") }.encode();
         hello[5] = b'X'; // first magic byte (after len prefix + tag)
         assert!(Frame::decode(&hello[4..]).is_err());
         // oversized length prefix
@@ -1212,9 +1253,15 @@ mod tests {
     #[test]
     fn corrupt_peer_frames_error_instead_of_panicking() {
         let db = Database::from_transactions(1, &[vec![0]], &[true]);
+        let token = || "00ff00ff00ff00ff".to_string();
         let frames = vec![
-            Frame::Hello { rank: 3, peer: "/tmp/hub.sock.r3".into() },
-            Frame::PeerHello { rank: 3 },
+            Frame::Hello {
+                rank: 3,
+                token: token(),
+                peer: Endpoint::unix("/tmp/hub.sock.r3"),
+            },
+            Frame::Hello { rank: 4, token: token(), peer: Endpoint::tcp("10.1.2.3", 4455) },
+            Frame::PeerHello { rank: 3, token: token() },
             Frame::PeerMsg {
                 src: 1,
                 epoch: 4,
@@ -1228,11 +1275,11 @@ mod tests {
             },
             Frame::Config {
                 spec: Box::new(RunSpec { phase: phase_spec(2), db }),
-                peers: vec!["/x.r0".into(), "/x.r1".into()],
+                peers: vec![Endpoint::unix("/x.r0"), Endpoint::tcp("127.0.0.1", 9001)],
             },
             Frame::Reconfig {
                 phase: Box::new(phase_spec(2)),
-                peers: vec!["/x.r0".into(), "/x.r1".into()],
+                peers: vec![Endpoint::tcp("h0", 1), Endpoint::tcp("h1", 2)],
             },
         ];
         for frame in &frames {
@@ -1251,13 +1298,38 @@ mod tests {
             assert!(Frame::decode(&long).is_err(), "{}", frame.name());
         }
         // Bad PEERHELLO magic and a version skew produce clear errors.
-        let mut ph = Frame::PeerHello { rank: 0 }.encode();
+        let mut ph = Frame::PeerHello { rank: 0, token: token() }.encode();
         ph[5] = b'X';
         assert!(Frame::decode(&ph[4..]).is_err());
-        let mut ph = Frame::PeerHello { rank: 0 }.encode();
+        let mut ph = Frame::PeerHello { rank: 0, token: token() }.encode();
         ph[9] = 0xFF; // version low byte
         let err = Frame::decode(&ph[4..]).unwrap_err();
         assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // A version-skewed HELLO (a stale binary on one side) errors the
+        // same way — the version check runs before rank/token/endpoint.
+        let hello =
+            || Frame::Hello { rank: 0, token: token(), peer: Endpoint::tcp("h", 1) }.encode();
+        let mut h = hello();
+        h[9] = 0xFF; // version low byte (len 4 + tag 1 + magic 4)
+        let err = Frame::decode(&h[4..]).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // A HELLO whose peer string is not a valid endpoint is rejected
+        // with a clear parse error, not accepted as a bogus address.
+        let mut body = vec![TAG_HELLO];
+        body.extend_from_slice(&WIRE_MAGIC);
+        put_u16(&mut body, WIRE_VERSION);
+        put_u32(&mut body, 0);
+        put_str(&mut body, "tok");
+        put_str(&mut body, "tcp:host:notaport");
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("HELLO peer endpoint"), "{err:#}");
+        // Same for a CONFIG/RECONFIG peer-map entry.
+        let mut body = vec![TAG_RECONFIG];
+        put_phase(&mut body, &phase_spec(2));
+        put_u32(&mut body, 1);
+        put_str(&mut body, "tcp::123"); // empty host
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("peer endpoint for rank 0"), "{err:#}");
         // An absurd peer-map count in a RECONFIG must not allocate.
         let mut body = vec![TAG_RECONFIG];
         put_phase(&mut body, &phase_spec(2));

@@ -15,6 +15,7 @@ use parlamp::coordinator::{Coordinator, ScreenMode};
 use parlamp::datagen::{generate_gwas, GeneticModel, GwasSpec};
 use parlamp::lamp::{lamp_serial, SupportIncreaseRule};
 use parlamp::lcm::{mine_closed, SupportHist, Visit};
+use parlamp::net::Endpoint;
 use parlamp::par::{run_process_with, DataPlane, ProcessConfig, ProcessFleet, RunMode};
 
 fn parlamp_bin() -> PathBuf {
@@ -163,6 +164,99 @@ fn mesh_and_hub_data_planes_agree_and_mesh_bypasses_hub() {
     assert!(mc.direct_frames > 0, "mesh run sent no direct frames at all");
     assert_eq!(hc.direct_frames, 0, "hub run must not open direct connections");
     assert!(hc.hub_frames > 0, "hub run relayed nothing — counters broken");
+}
+
+/// Acceptance for the pluggable transport (DESIGN.md §11): running the
+/// whole fabric — hub control plane *and* mesh data plane — over loopback
+/// TCP instead of Unix sockets changes nothing about the mining result.
+/// Both data planes must match the serial reference and each other
+/// bit-for-bit (λ*, both closed-pattern histograms, significant set), and
+/// the mesh run must still bypass the hub entirely.
+#[test]
+fn tcp_transport_matches_serial_on_both_data_planes() {
+    let db = quickstart_db();
+    let serial = lamp_serial(&db, 0.05);
+    let run_with = |plane: DataPlane| {
+        let cfg = ProcessConfig {
+            data_plane: plane,
+            listen: Some(Endpoint::tcp("127.0.0.1", 0)),
+            ..process_cfg(3, 42)
+        };
+        let mut fleet = ProcessFleet::spawn(&cfg).expect("spawn TCP fleet");
+        let coord = Coordinator::new(0.05).with_screen(ScreenMode::Native);
+        let run = coord.run_on_fleet(&db, &mut fleet, 42).expect("coordinated TCP run");
+        fleet.shutdown().expect("fleet shutdown");
+        run
+    };
+    let mesh = run_with(DataPlane::Mesh);
+    let hub = run_with(DataPlane::Hub);
+
+    for (plane, run) in [("mesh", &mesh), ("hub", &hub)] {
+        assert_eq!(run.result.lambda_final, serial.lambda_final, "λ* differs over tcp/{plane}");
+        assert_eq!(run.result.min_sup, serial.min_sup);
+        assert_eq!(run.result.correction_factor, serial.correction_factor);
+        assert_eq!(
+            run.phase2.hist.counts(),
+            serial_hist(&db, serial.min_sup).counts(),
+            "phase-2 histogram differs over tcp/{plane}"
+        );
+        assert_eq!(run.result.significant.len(), serial.significant.len());
+        for (a, b) in run.result.significant.iter().zip(&serial.significant) {
+            assert_eq!(a.items, b.items, "significant set differs over tcp/{plane}");
+        }
+    }
+    // The same zero-hub-relay invariant must hold on TCP as on Unix.
+    assert_eq!(mesh.phase1.hist.counts(), hub.phase1.hist.counts());
+    let (mc, hc) = (mesh.comm_total(), hub.comm_total());
+    assert_eq!(mc.hub_frames, 0, "tcp mesh run relayed {} frames via the hub", mc.hub_frames);
+    assert!(mc.direct_frames > 0, "tcp mesh run sent no direct frames");
+    assert_eq!(hc.direct_frames, 0);
+    assert!(hc.hub_frames > 0);
+}
+
+/// The `--hosts` launcher path end to end, in-process: bind the hub on
+/// loopback TCP in remote-attach mode, start each "remote" worker
+/// ourselves with exactly the argv the printed `JOIN[rank]` command would
+/// carry, and check the coordinated run still matches the serial miner.
+#[test]
+fn remote_attached_tcp_workers_match_serial() {
+    let db = quickstart_db();
+    let serial = lamp_serial(&db, 0.05);
+    let hosts = vec![Endpoint::tcp("127.0.0.1", 0), Endpoint::tcp("127.0.0.1", 0)];
+    let cfg = ProcessConfig {
+        listen: Some(Endpoint::tcp("127.0.0.1", 0)),
+        remote_workers: Some(hosts),
+        ..process_cfg(0, 42) // procs ignored: world size = remote_workers.len()
+    };
+    let pending = ProcessFleet::bind(&cfg).expect("bind hub");
+    assert!(matches!(pending.endpoint(), Endpoint::Tcp(_, port) if *port != 0));
+    // What `--hosts` mode prints for humans; here we exec it ourselves.
+    let mut children: Vec<std::process::Child> = (0..2)
+        .map(|rank: usize| {
+            Command::new(parlamp_bin())
+                .arg("__worker")
+                .arg("--connect")
+                .arg(pending.endpoint().to_string())
+                .arg("--token")
+                .arg(pending.token())
+                .arg("--worker-rank")
+                .arg(rank.to_string())
+                .spawn()
+                .expect("spawn remote worker")
+        })
+        .collect();
+    let mut fleet = pending.await_workers().expect("await remote workers");
+    let coord = Coordinator::new(0.05).with_screen(ScreenMode::Native);
+    let run = coord.run_on_fleet(&db, &mut fleet, 42).expect("coordinated remote run");
+    fleet.shutdown().expect("fleet shutdown");
+    for child in &mut children {
+        child.wait().ok();
+    }
+    assert_eq!(run.result.lambda_final, serial.lambda_final, "λ* differs (remote attach)");
+    assert_eq!(run.result.correction_factor, serial.correction_factor);
+    assert_eq!(run.result.significant.len(), serial.significant.len());
+    let comm = run.comm_total();
+    assert_eq!(comm.hub_frames, 0, "remote mesh fleet must not relay through the hub");
 }
 
 /// The naive baseline (stealing disabled, §5.4) over the process fabric:

@@ -1,6 +1,7 @@
 //! End-to-end acceptance for `parlamp serve` (DESIGN.md §9): a real
 //! daemon process with a warm 2-rank worker fleet, driven over its
-//! Unix-domain socket by concurrent clients.
+//! Unix-domain socket — and, for the §11 transport abstraction, over a
+//! loopback TCP endpoint — by concurrent clients.
 //!
 //! Proves the ISSUE-4 acceptance criteria:
 //! - two concurrent clients get results identical to the serial engine
@@ -17,6 +18,7 @@ use std::time::{Duration, Instant};
 use parlamp::datagen::{generate_gwas, GeneticModel, GwasSpec};
 use parlamp::lamp::lamp_serial;
 use parlamp::lcm::{mine_closed, SupportHist, Visit};
+use parlamp::net::Endpoint;
 use parlamp::service::Client;
 use parlamp::wire::service::{JobOutcome, JobSpec, JobState};
 
@@ -87,8 +89,12 @@ impl Daemon {
         daemon
     }
 
+    fn endpoint(&self) -> Endpoint {
+        Endpoint::unix(&self.socket)
+    }
+
     fn client(&self) -> Client {
-        Client::connect(&self.socket).expect("connect to daemon")
+        Client::connect(&self.endpoint()).expect("connect to daemon")
     }
 
     /// Wait for the daemon to exit on its own; panics after 60 s.
@@ -147,9 +153,9 @@ fn daemon_serves_concurrent_clients_and_caches_repeats() {
     // block on RESULT.
     let submit = |seed: u64| {
         let db = db.clone();
-        let socket = daemon.socket.clone();
+        let ep = daemon.endpoint();
         std::thread::spawn(move || -> (u64, JobOutcome) {
-            let mut client = Client::connect(&socket).expect("connect");
+            let mut client = Client::connect(&ep).expect("connect");
             let spec = JobSpec { seed, ..JobSpec::new(db, 0.05) };
             let id = client.submit(spec).expect("submit");
             let outcome = client.results(id).expect("results");
@@ -201,6 +207,81 @@ fn daemon_serves_concurrent_clients_and_caches_repeats() {
     let status = daemon.wait_exit();
     assert!(status.success(), "daemon exit: {status}");
     assert!(!socket.exists(), "socket must be unlinked on shutdown");
+}
+
+/// Acceptance for the §11 transport abstraction: the daemon serves the
+/// exact same results over a loopback TCP endpoint. The ephemeral port is
+/// recovered from the `listening on tcp:…` banner, the client dials it,
+/// and one mined job must match the serial reference bit for bit.
+#[test]
+fn daemon_serves_over_tcp() {
+    let db = cohort();
+    let serial = lamp_serial(&db, 0.05);
+    let hist = serial_sparse_hist(&db, serial.min_sup);
+    let mut child = Command::new(parlamp_bin())
+        .args(["serve", "--endpoint", "tcp:127.0.0.1:0", "--procs", "2", "--cache", "4"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn parlamp serve (tcp)");
+    struct KillOnDrop(Option<Child>);
+    impl Drop for KillOnDrop {
+        fn drop(&mut self) {
+            if let Some(mut c) = self.0.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+    // Readiness: the daemon prints `parlamp serve: listening on
+    // tcp:127.0.0.1:<port>` once the fleet is warm — that line carries the
+    // resolved ephemeral port. Keep draining stdout afterwards so the
+    // daemon's later prints never block or hit a closed pipe.
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut guard = KillOnDrop(Some(child));
+    let ep = {
+        use std::io::BufRead;
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut found = None;
+        let mut line = String::new();
+        while reader.read_line(&mut line).expect("daemon stdout") > 0 {
+            if let Some(rest) = line.trim_end().strip_prefix("parlamp serve: listening on ") {
+                found = Some(rest.parse::<Endpoint>().expect("endpoint in banner"));
+                break;
+            }
+            line.clear();
+        }
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+                sink.clear();
+            }
+        });
+        found.expect("daemon exited without a listening banner")
+    };
+    assert!(matches!(ep, Endpoint::Tcp(_, port) if port != 0), "unresolved port in {ep}");
+
+    let mut client = Client::connect(&ep).expect("connect over TCP");
+    let id = client.submit(JobSpec::new(db, 0.05)).expect("submit over TCP");
+    let outcome = client.results(id).expect("results over TCP");
+    assert!(!outcome.from_cache);
+    assert_matches_serial(&outcome, &serial, &hist);
+
+    // Graceful shutdown over TCP: ack, exit 0 (nothing on disk to unlink).
+    client.shutdown().expect("shutdown ack");
+    let mut child = guard.0.take().expect("daemon still owned");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Some(status) = child.try_wait().expect("poll daemon") {
+            assert!(status.success(), "daemon exit: {status}");
+            break;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("tcp daemon did not exit in time");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
 }
 
 /// Acceptance: SIGTERM drains the queue (the in-flight job finishes) and
