@@ -18,6 +18,7 @@ use crate::lcm::{mine_closed, Visit};
 use crate::net::Endpoint;
 use crate::par::{DataPlane, ProcessConfig, ProcessFleet};
 use crate::service::{print_join_commands, Client, ServeConfig};
+use crate::util::fault::FaultPlan;
 use crate::util::table::Table;
 use crate::wire::service::{JobSpec, JobState};
 
@@ -68,6 +69,16 @@ fn data_plane_from_args(args: &Args) -> Result<DataPlane> {
 /// engines.
 fn transport_from_args(args: &Args) -> Result<Transport> {
     args.get("transport").unwrap_or("unix").parse().context("--transport")
+}
+
+/// `--fault-inject rank=R,phase=P,after=N` (DESIGN.md §12): arm one
+/// deterministic worker death for the chaos harness. Only the process
+/// backend (and `serve`'s warm fleet) consumes it.
+fn fault_from_args(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.get("fault-inject") {
+        Some(plan) => Ok(Some(plan.parse().context("--fault-inject")?)),
+        None => Ok(None),
+    }
 }
 
 /// The service endpoint: `--endpoint unix:<path>|tcp:<host>:<port>`, with
@@ -177,9 +188,14 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
     let data_plane = data_plane_from_args(args)?;
     let transport = transport_from_args(args)?;
     let hosts = hosts_from_args(args)?;
+    let fault = fault_from_args(args)?;
     anyhow::ensure!(
         hosts.is_none() || engine == "process",
         "--hosts requires --engine process (got '{engine}')"
+    );
+    anyhow::ensure!(
+        fault.is_none() || engine == "process",
+        "--fault-inject requires --engine process (got '{engine}')"
     );
     println!(
         "N={} items={} density={:.4}% N_pos={}",
@@ -210,8 +226,11 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
         }
         EngineSelect::Backend(backend) => {
             let backend = backend.with_data_plane(data_plane).with_transport(transport);
-            let coord =
+            let mut coord =
                 Coordinator::new(alpha).with_glb(glb_from_args(args)).with_screen(screen);
+            if let Some(plan) = fault {
+                coord = coord.with_fault_plan(plan);
+            }
             let run = match &hosts {
                 Some(hosts) => run_lamp_hosts(&coord, &db, args, hosts, data_plane, seed)?,
                 None => coord.run(&db, &backend)?,
@@ -497,6 +516,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         (None, Transport::Unix, None) => None,
     };
     cfg.remote_workers = hosts;
+    cfg.fault = fault_from_args(args)?;
     anyhow::ensure!(cfg.cache_cap >= 1, "--cache must be ≥ 1");
     crate::service::serve(&cfg)
 }

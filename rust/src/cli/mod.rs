@@ -93,6 +93,7 @@ USAGE:
                     [--procs P | -n P] [--naive] [--data-plane hub|mesh]
                     [--transport unix|tcp] [--hosts H1:P,H2:P,..]
                     [--endpoint EP] [--screen native|xla|auto] [--seed S]
+                    [--fault-inject rank=R,phase=P,after=N]
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
                     [--no-preprocess] [--alpha A] [--seed S]
@@ -106,6 +107,7 @@ USAGE:
   parlamp serve     --endpoint EP [--procs P] [--cache N]
                     [--data-plane hub|mesh] [--transport unix|tcp]
                     [--hosts H1:P,..] [--fleet-listen EP]
+                    [--fault-inject rank=R,phase=P,after=N]
   parlamp submit    --endpoint EP --data FILE --labels FILE [--alpha A]
                     [--naive] [--no-preprocess] [--screen native|xla|auto]
                     [--seed S]
@@ -141,6 +143,13 @@ mode: the hub binds (at `--endpoint`, default tcp:127.0.0.1:0), prints one
 those externally-started workers to attach instead of spawning local
 children. Scenario names mirror Table 1: hapmap-dom-10, hapmap-dom-20,
 alz-dom-5, alz-dom-10, alz-rec-30, mcf7.
+
+A process fleet survives worker death (DESIGN.md §12): a rank lost
+mid-phase is respawned in place and the phase replayed under a fresh
+epoch, with results bit-identical to an undisturbed run. `--fault-inject
+rank=R,phase=P,after=N` (lamp --engine process, serve) arms one
+deterministic worker death for chaos testing — rank R exits with code 86
+once phase epoch P has cost it N work units.
 
 `serve` starts the long-running mining daemon (DESIGN.md §9): the worker
 fleet spawns once and stays warm, jobs queue FIFO, and repeat submissions

@@ -45,6 +45,7 @@ use crate::par::{
 use crate::runtime::{
     artifacts_available, artifacts_dir, phase3_extract_xla, ScreenEngine, XlaRuntime,
 };
+use crate::util::fault::FaultPlan;
 
 /// Every engine name the CLI and the bench harness accept, in the order
 /// the bench runs them by default. [`parse_engine`] is the one dispatch
@@ -355,6 +356,10 @@ pub struct Coordinator {
     /// from a measured serial run (`bench::calibrate_lamp`); otherwise the
     /// paper-default knobs apply.
     calibration: Option<Calibration>,
+    /// Deterministic fault injection for the process backend
+    /// (`--fault-inject`, DESIGN.md §12). Only [`Backend::Process`] runs
+    /// consult it — the in-process fabrics have no workers to kill.
+    fault: Option<FaultPlan>,
 }
 
 impl Coordinator {
@@ -366,6 +371,7 @@ impl Coordinator {
             glb: GlbParams::default(),
             screen: ScreenMode::Auto,
             calibration: None,
+            fault: None,
         }
     }
 
@@ -381,6 +387,13 @@ impl Coordinator {
 
     pub fn with_calibration(mut self, cal: Calibration) -> Coordinator {
         self.calibration = Some(cal);
+        self
+    }
+
+    /// Arm a planned worker death for process-backend runs (chaos testing;
+    /// see [`FaultPlan`]).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Coordinator {
+        self.fault = Some(plan);
         self
     }
 
@@ -505,6 +518,7 @@ impl Coordinator {
             tree_arity: self.glb.tree_arity,
             steal: self.glb.steal,
             preprocess: self.glb.preprocess,
+            fault: self.fault,
             ..ProcessConfig::paper_defaults(p, seed)
         }
     }

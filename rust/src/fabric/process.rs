@@ -61,10 +61,20 @@
 //! phase index and buffers the rest exactly like hub-path pre-`START`
 //! deliveries (DESIGN.md §10).
 //!
-//! Failure semantics: a worker that dies mid-run surfaces as a
-//! [`HubEvent::Gone`] (socket EOF or error) and the engine aborts the run;
-//! a forward to an already-exited worker is silently dropped, mirroring the
-//! finished-peer no-op of the thread fabric (MPI-finalize semantics).
+//! Failure semantics (DESIGN.md §12): a worker that dies mid-run surfaces
+//! as a [`HubEvent::Gone`] whose detail embeds the rank's last delivered
+//! epoch, its frame context, and its last custody checkpoint (workers
+//! periodically report their unfinished stack roots in `CHECKPOINT`
+//! frames; the hub keeps the latest per rank in a [`Custody`] table). The
+//! fleet owner ([`crate::par::engine_process::ProcessFleet`]) respawns
+//! exactly the dead rank — [`Hub::forget_rank`] vacates the slot and the
+//! replacement re-`HELLO`s into it — and replays the interrupted phase
+//! under a fresh hub-assigned epoch (`START` carries it); survivors see
+//! the replay's `RECONFIG` arrive mid-phase, abandon the aborted attempt
+//! without merging ([`ProcessMailbox::phase_interrupted`]), and epoch
+//! fencing drops every frame of the aborted attempt on both data planes.
+//! A forward to an already-exited worker is silently dropped, mirroring
+//! the finished-peer no-op of the thread fabric (MPI-finalize semantics).
 
 use std::collections::VecDeque;
 use std::io::Write;
@@ -83,7 +93,7 @@ use crate::wire::{
     MAX_FRAME_LEN,
 };
 
-use super::{Mailbox, Msg};
+use super::{BasicKind, Mailbox, Msg, WireTask};
 
 /// How long the hub waits for a connecting worker's `HELLO` before
 /// declaring the peer dead.
@@ -143,16 +153,21 @@ enum Link {
 }
 
 enum ChildEvent {
-    /// A hub-relayed data-plane delivery (hub plane only). Phase fencing
-    /// comes for free from the hub socket's FIFO order relative to the
-    /// CONFIG/START frames.
-    Deliver { src: usize, msg: Msg },
+    /// A hub-relayed data-plane delivery (hub plane only). `epoch` is the
+    /// *sender's* phase index, carried through the relay. FIFO order on the
+    /// hub socket is NOT a fence once phases can be aborted mid-flight
+    /// (the hub's RECONFIG races relays routed by other ranks' route
+    /// threads), so hub deliveries are epoch-fenced exactly like mesh ones.
+    Deliver { src: usize, epoch: u64, msg: Msg },
     /// A direct mesh delivery. `epoch` is the *sender's* phase index; the
     /// mailbox fences it against its own (see [`ProcessMailbox::await_phase`]).
     PeerDeliver { src: usize, epoch: u64, msg: Msg },
     Config { spec: Box<RunSpec>, peers: Vec<Endpoint> },
     Reconfig { phase: Box<PhaseSpec>, peers: Vec<Endpoint> },
-    Start,
+    /// The phase barrier, carrying the hub-assigned phase epoch — the
+    /// mailbox adopts it, so a respawned worker inherits the fleet's phase
+    /// numbering and a replayed phase fences out its aborted attempt.
+    Start(u64),
     Bye,
     Lost(String),
 }
@@ -186,10 +201,20 @@ pub struct ProcessMailbox {
     peer_writers: Vec<Option<Stream>>,
     /// The fleet's shared-secret token, sent in every outgoing `PEERHELLO`.
     token: String,
-    /// Index of the current phase (stamped onto outgoing mesh frames).
+    /// Hub-assigned index of the current phase (stamped onto every
+    /// outgoing delivery, mesh or hub relay; adopted from each `START`).
     epoch: u64,
-    /// Number of phases this mailbox has started (= the next phase index).
+    /// One past the last adopted epoch.
     phases_started: u64,
+    /// Deliveries (either plane) from an epoch *above* the current one,
+    /// observed mid-phase: a peer already entered the replay of an aborted
+    /// phase. Held for the next `await_phase` (DESIGN.md §12).
+    future: VecDeque<(usize, u64, Msg)>,
+    /// Phase frames (`CONFIG`/`RECONFIG`/`START`/`BYE`) that arrived
+    /// mid-phase: the hub interrupting an aborted attempt. The worker loop
+    /// polls [`ProcessMailbox::phase_interrupted`], abandons the attempt
+    /// without merging, and `await_phase` replays these events in order.
+    interrupt: VecDeque<ChildEvent>,
     /// Per-phase data-plane counters, reset at each `START`.
     hub_frames: u64,
     direct_frames: u64,
@@ -232,6 +257,13 @@ pub fn connect(
             Endpoint::Tcp(ip.to_string(), 0)
         }
     };
+    if let Endpoint::Unix(path) = &listen_at {
+        // A respawned rank reuses its predecessor's deterministic
+        // `<hub>.r<rank>` path; the dead process never unlinked it, and a
+        // bind over an existing socket file fails. Removing a stale path
+        // is safe — the fleet owner only respawns a rank it saw die.
+        let _ = std::fs::remove_file(path);
+    }
     let peer_listener = Listener::bind(&listen_at)
         .with_context(|| format!("bind peer data-plane listener at {listen_at}"))?;
     let peer_endpoint = peer_listener.local_endpoint()?;
@@ -259,6 +291,8 @@ pub fn connect(
         token: token.to_string(),
         epoch: 0,
         phases_started: 0,
+        future: VecDeque::new(),
+        interrupt: VecDeque::new(),
         hub_frames: 0,
         direct_frames: 0,
         _reader: reader,
@@ -269,10 +303,12 @@ pub fn connect(
 fn reader_loop(mut stream: Stream, tx: Sender<ChildEvent>) {
     loop {
         let ev = match read_frame(&mut stream) {
-            Ok(Some(Frame::Relay { peer, msg })) => ChildEvent::Deliver { src: peer as usize, msg },
+            Ok(Some(Frame::Relay { peer, epoch, msg })) => {
+                ChildEvent::Deliver { src: peer as usize, epoch, msg }
+            }
             Ok(Some(Frame::Config { spec, peers })) => ChildEvent::Config { spec, peers },
             Ok(Some(Frame::Reconfig { phase, peers })) => ChildEvent::Reconfig { phase, peers },
-            Ok(Some(Frame::Start)) => ChildEvent::Start,
+            Ok(Some(Frame::Start { epoch })) => ChildEvent::Start(epoch),
             Ok(Some(Frame::Bye)) => {
                 let _ = tx.send(ChildEvent::Bye);
                 return;
@@ -360,21 +396,29 @@ impl ProcessMailbox {
     ///
     /// Stale deliveries from the finished phase are dropped; deliveries
     /// that belong to the upcoming phase (a peer that started earlier may
-    /// already be stealing) are buffered until `START`. On the hub socket
-    /// the two cases are distinguished by FIFO order alone — stale relays
-    /// arrive strictly before the phase frame. Mesh deliveries ride
-    /// independent sockets with no such ordering, so they are fenced by
-    /// the epoch their sender stamped: a frame whose epoch is below the
-    /// upcoming phase's index is stale, anything at or above it belongs to
-    /// the phase being opened (DESIGN.md §10).
+    /// already be stealing) are buffered until `START`. Both planes are
+    /// fenced the same way: every delivery — a hub `RELAY` or a direct
+    /// mesh frame — carries the epoch its sender stamped, and it is
+    /// compared against the hub-assigned epoch the `START` frame carries.
+    /// A frame below the opened phase's epoch is stale (it belongs to a
+    /// finished phase or to an aborted attempt of this one); a frame *at*
+    /// it belongs to the phase being opened (DESIGN.md §10, §12). FIFO
+    /// order on the hub socket is deliberately *not* trusted as a fence:
+    /// relays toward this rank are written by other ranks' route threads,
+    /// which race the owner thread's RECONFIG once a phase can be aborted
+    /// mid-flight. Since the hub assigns the epoch, a respawned worker
+    /// inherits the fleet's numbering here without any local state.
     pub fn await_phase(&mut self) -> Result<Option<PhaseStart>> {
         if let Link::Lost(e) = &self.link {
             bail!("fabric link lost: {e}");
         }
         self.pending.clear();
-        let next_epoch = self.phases_started;
-        let mut early: VecDeque<(usize, Msg)> = VecDeque::new();
-        // 1. The phase frame (dropping stale traffic).
+        // Early traffic for the upcoming phase. Every delivery — hub or
+        // mesh — keeps its sender's epoch so it can be fenced once the
+        // `START` frame names the phase. Frames already held over from an
+        // interrupted attempt (see `absorb`) seed the buffer.
+        let mut early: VecDeque<(usize, u64, Msg)> = std::mem::take(&mut self.future);
+        // 1. The phase frame (buffering deliveries for the epoch fence).
         let (start, peers) = loop {
             match self.recv_event()? {
                 ChildEvent::Config { spec, peers } => {
@@ -384,14 +428,12 @@ impl ProcessMailbox {
                 ChildEvent::Reconfig { phase, peers } => {
                     break (PhaseStart { phase: *phase, db: None }, peers);
                 }
-                ChildEvent::Deliver { .. } => continue, // stale: previous phase
-                ChildEvent::PeerDeliver { src, epoch, msg } => {
-                    if epoch >= next_epoch {
-                        early.push_back((src, msg)); // eager peer, next phase
-                    }
+                ChildEvent::Deliver { src, epoch, msg }
+                | ChildEvent::PeerDeliver { src, epoch, msg } => {
+                    early.push_back((src, epoch, msg));
                 }
                 ChildEvent::Bye => return Ok(None),
-                ChildEvent::Start => bail!("START from hub before CONFIG"),
+                ChildEvent::Start(_) => bail!("START from hub before CONFIG"),
                 ChildEvent::Lost(e) => {
                     self.link = Link::Lost(e.clone());
                     bail!("fabric link lost awaiting phase: {e}");
@@ -407,14 +449,12 @@ impl ProcessMailbox {
         self.size = start.phase.p as usize;
         self.set_peers(peers)?;
         // 2. The START barrier (buffering early next-phase traffic).
-        loop {
+        let epoch = loop {
             match self.recv_event()? {
-                ChildEvent::Start => break,
-                ChildEvent::Deliver { src, msg } => early.push_back((src, msg)),
-                ChildEvent::PeerDeliver { src, epoch, msg } => {
-                    if epoch >= next_epoch {
-                        early.push_back((src, msg));
-                    }
+                ChildEvent::Start(epoch) => break epoch,
+                ChildEvent::Deliver { src, epoch, msg }
+                | ChildEvent::PeerDeliver { src, epoch, msg } => {
+                    early.push_back((src, epoch, msg));
                 }
                 ChildEvent::Bye => bail!("BYE from hub between CONFIG and START"),
                 ChildEvent::Config { .. } | ChildEvent::Reconfig { .. } => {
@@ -425,14 +465,16 @@ impl ProcessMailbox {
                     bail!("fabric link lost awaiting START: {e}");
                 }
             }
-        }
-        // Buffered frames were collected before (loop 1) or after (loop 2)
-        // the world size was known; validate sources now, matching the
-        // in-phase check in `absorb`.
-        early.retain(|(src, _)| *src < self.size);
-        self.pending = early;
-        self.epoch = next_epoch;
-        self.phases_started += 1;
+        };
+        // Buffered frames were collected before the world size and the
+        // phase epoch were known; validate both now, matching the in-phase
+        // checks in `absorb`. Frames from an aborted attempt of this phase
+        // carry a smaller epoch and are dropped here — that is the fence
+        // that keeps a replayed phase's DTD counters clean.
+        early.retain(|(src, e, _)| *src < self.size && *e == epoch);
+        self.pending = early.into_iter().map(|(src, _, msg)| (src, msg)).collect();
+        self.epoch = epoch;
+        self.phases_started = epoch + 1;
         self.hub_frames = 0;
         self.direct_frames = 0;
         Ok(Some(start))
@@ -456,31 +498,51 @@ impl ProcessMailbox {
     }
 
     fn recv_event(&mut self) -> Result<ChildEvent> {
+        if let Some(ev) = self.interrupt.pop_front() {
+            return Ok(ev);
+        }
         self.rx.recv().map_err(|_| anyhow::anyhow!("fabric reader thread exited"))
     }
 
-    /// Absorb an event mid-phase, when only deliveries are legitimate.
+    /// Absorb an event mid-phase, when only deliveries are expected.
     fn absorb(&mut self, ev: ChildEvent) -> Option<(usize, Msg)> {
         match ev {
-            ChildEvent::Deliver { src, msg } => Some((src, msg)),
-            // Mesh frames from a finished phase can surface arbitrarily
-            // late (independent sockets, independent reader threads);
-            // anything below the current epoch is stale and dropped. A
-            // *future* epoch cannot occur mid-phase: no peer can start
-            // phase n+1 before the hub holds every merge of phase n,
-            // including ours — and we have not merged yet. The source rank
-            // is validated against the world size here (the reader thread
-            // cannot know it) — the mesh counterpart of the hub's
-            // out-of-range HELLO rejection: a stray connector must not be
-            // able to poison the DTD counters with unmatched messages.
-            ChildEvent::PeerDeliver { src, epoch, msg } => {
-                (epoch == self.epoch && src < self.size).then_some((src, msg))
-            }
-            ChildEvent::Config { .. } | ChildEvent::Reconfig { .. } | ChildEvent::Start
-            | ChildEvent::Bye => {
-                if self.link == Link::Open {
-                    self.link = Link::Lost("phase frame from hub mid-phase".into());
+            // Frames from a finished phase (or an aborted attempt of this
+            // one) can surface arbitrarily late — mesh deliveries ride
+            // independent sockets with independent reader threads, and hub
+            // relays written by another rank's route thread can land after
+            // this rank's RECONFIG on the same socket — so anything below
+            // the current epoch is stale and dropped. A frame *above* it
+            // means a peer already entered the replay of a phase the hub
+            // aborted while this rank has not seen its RECONFIG yet: hold
+            // it for the next `await_phase` (dropping it would unbalance
+            // the replay's DTD counters). The source rank is validated
+            // against the world size here (the reader thread cannot know
+            // it) — the mesh counterpart of the hub's out-of-range HELLO
+            // rejection: a stray connector must not be able to poison the
+            // DTD counters with unmatched messages.
+            ChildEvent::Deliver { src, epoch, msg }
+            | ChildEvent::PeerDeliver { src, epoch, msg } => {
+                if src >= self.size {
+                    return None;
                 }
+                if epoch == self.epoch {
+                    return Some((src, msg));
+                }
+                if epoch > self.epoch {
+                    self.future.push_back((src, epoch, msg));
+                }
+                None
+            }
+            ev @ (ChildEvent::Config { .. } | ChildEvent::Reconfig { .. }
+            | ChildEvent::Start(_) | ChildEvent::Bye) => {
+                // A phase frame mid-phase is the hub interrupting an
+                // aborted attempt (a rank died; the owner is replaying the
+                // phase — DESIGN.md §12) or dismissing the fleet. Stash it
+                // in arrival order: the worker loop polls
+                // `phase_interrupted`, abandons the attempt without
+                // merging, and `await_phase` replays these events.
+                self.interrupt.push_back(ev);
                 None
             }
             ChildEvent::Lost(e) => {
@@ -490,6 +552,40 @@ impl ProcessMailbox {
                 None
             }
         }
+    }
+
+    /// Did the hub interrupt the current phase (a `CONFIG`/`RECONFIG`/
+    /// `START`/`BYE` arrived mid-phase)? The worker loop checks this each
+    /// quantum and, when set, abandons the attempt *without* sending a
+    /// merge — the hub aborted the phase because a rank died, and the
+    /// whole phase is being replayed under a fresh epoch (DESIGN.md §12).
+    pub fn phase_interrupted(&self) -> bool {
+        !self.interrupt.is_empty()
+    }
+
+    /// The hub-assigned epoch of the current phase.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// One past the last adopted epoch (the fleet-wide phase count as of
+    /// this rank's latest `START`).
+    pub fn phases_started(&self) -> u64 {
+        self.phases_started
+    }
+
+    /// Report a custody checkpoint to the hub: this rank's work-unit clock
+    /// plus up to a handful of bottom-of-stack roots (DESIGN.md §12).
+    /// Best-effort diagnostics — a write failure severs nothing here; the
+    /// regular send path notices a dead hub soon enough.
+    pub fn send_checkpoint(&mut self, work_units: u64, roots: Vec<WireTask>) {
+        let frame = Frame::Checkpoint {
+            rank: self.rank as u32,
+            epoch: self.epoch,
+            work_units,
+            roots,
+        };
+        let _ = write_frame(&mut self.writer, &frame);
     }
 
     /// This phase's data-plane send counters: frames pushed through the
@@ -612,7 +708,7 @@ impl Mailbox for ProcessMailbox {
             }
             return;
         }
-        let frame = Frame::Relay { peer: dst as u32, msg };
+        let frame = Frame::Relay { peer: dst as u32, epoch: self.epoch, msg };
         match write_frame(&mut self.writer, &frame) {
             Ok(()) => self.hub_frames += 1,
             Err(e) => self.link = Link::Lost(format!("send to hub failed: {e}")),
@@ -643,16 +739,44 @@ pub enum HubEvent {
     /// A worker delivered its phase-boundary merge.
     Merge(WorkerMerge),
     /// A worker's connection ended — orderly EOF after the `BYE`, or a
-    /// crash/protocol violation. Any `Gone` surfacing while a phase's
-    /// merges are being collected fails that phase (a warm fleet with a
-    /// missing rank cannot serve further phases either — the owner drops
-    /// and respawns it); orderly post-`BYE` EOFs arrive only after the
+    /// crash/protocol violation. The detail embeds the route thread's
+    /// context (the rank's last delivered epoch, how many frames the
+    /// connection carried and the name of the last one) plus the rank's
+    /// last custody checkpoint, so a chaos-test failure or a production
+    /// crash is diagnosable from the error string alone. A `Gone` during
+    /// an active phase aborts that *attempt* only: the owner forgets the
+    /// rank, respawns it, and replays the phase under a fresh epoch
+    /// (DESIGN.md §12); orderly post-`BYE` EOFs arrive only after the
     /// engine has stopped listening.
     Gone { rank: usize, detail: String },
 }
 
+/// The hub's view of what one rank last reported holding (DESIGN.md §12):
+/// refreshed by each `CHECKPOINT` frame, plus a count of the GIVE frames
+/// the hub itself relayed *from* the rank (hub data plane only — mesh
+/// GIVEs never pass the hub, so there checkpoints are the only custody
+/// source). This is diagnostics for crash reports and lost-work estimates;
+/// recovery replays the phase from its inputs rather than trusting this
+/// necessarily-stale view (§12's DTD reconciliation argument).
+#[derive(Clone, Debug, Default)]
+pub struct Custody {
+    /// Epoch of the last checkpoint observed.
+    pub epoch: u64,
+    /// The rank's work-unit clock at that checkpoint.
+    pub work_units: u64,
+    /// The bottom-of-stack roots it reported still holding.
+    pub roots: Vec<WireTask>,
+    /// GIVE frames the hub has relayed from this rank (hub plane only).
+    pub gives_routed: u64,
+    /// Tasks shipped in those relayed GIVEs.
+    pub tasks_routed: u64,
+}
+
 /// Per-rank write halves, shared between the hub and its route threads.
 type Writers = Arc<Vec<Mutex<Option<Stream>>>>;
+
+/// Per-rank custody table, shared the same way.
+type Custodies = Arc<Vec<Mutex<Custody>>>;
 
 /// Parent-side fabric endpoint: accepts worker connections, runs one route
 /// thread per worker, opens phases, and surfaces merges. Owned and driven
@@ -667,6 +791,7 @@ pub struct Hub {
     /// is rejected before the connection touches any per-rank state.
     token: String,
     writers: Writers,
+    custody: Custodies,
     events_tx: Sender<HubEvent>,
     events_rx: Receiver<HubEvent>,
     routers: Vec<JoinHandle<()>>,
@@ -691,6 +816,7 @@ impl Hub {
             p,
             token,
             writers: Arc::new((0..p).map(|_| Mutex::new(None)).collect()),
+            custody: Arc::new((0..p).map(|_| Mutex::new(Custody::default())).collect()),
             events_tx,
             events_rx,
             routers: Vec::with_capacity(p),
@@ -729,9 +855,31 @@ impl Hub {
             .collect()
     }
 
+    /// The last custody checkpoint the hub holds for `rank` (the default
+    /// empty [`Custody`] before any checkpoint arrived).
+    pub fn custody(&self, rank: usize) -> Custody {
+        self.custody[rank].lock().expect("custody lock").clone()
+    }
+
+    /// Forget a dead rank after a [`HubEvent::Gone`]: clear its writer and
+    /// peer endpoint so a replacement worker can `HELLO` into the vacant
+    /// slot (see [`Hub::try_accept`] — the duplicate-HELLO rejection only
+    /// guards *occupied* slots). The custody entry is kept: it describes
+    /// what died. The rank's route thread has already exited by the time
+    /// its `Gone` surfaces, so there is nothing to stop here.
+    pub fn forget_rank(&mut self, rank: usize) {
+        let had = self.writers[rank].lock().expect("writer lock").take().is_some();
+        if had {
+            self.connected -= 1;
+        }
+        self.peer_endpoints[rank] = None;
+    }
+
     /// Accept and handshake at most one pending worker connection. Returns
     /// whether one was accepted. Non-blocking: the engine interleaves this
-    /// with liveness checks on the spawned processes.
+    /// with liveness checks on the spawned processes. A rank whose slot
+    /// was vacated by [`Hub::forget_rank`] re-registers here exactly like
+    /// a first connection — that is the respawn path.
     pub fn try_accept(&mut self) -> Result<bool> {
         let mut stream = match self.listener.accept() {
             Ok(conn) => conn,
@@ -759,9 +907,11 @@ impl Hub {
         }
         self.peer_endpoints[rank] = Some(peer);
         let writers = Arc::clone(&self.writers);
+        let custody = Arc::clone(&self.custody);
         let tx = self.events_tx.clone();
         let p = self.p;
-        self.routers.push(std::thread::spawn(move || route_loop(rank, reader, writers, tx, p)));
+        self.routers
+            .push(std::thread::spawn(move || route_loop(rank, reader, writers, custody, tx, p)));
         self.connected += 1;
         Ok(true)
     }
@@ -791,13 +941,7 @@ impl Hub {
     /// [`Hub::broadcast_reconfig`] instead when the workers already hold
     /// the database (the warm-fleet fast path).
     pub fn broadcast_config(&mut self, spec: &RunSpec, peers: &[Endpoint]) -> Result<()> {
-        let bytes = encode_config(spec, peers);
-        ensure!(
-            bytes.len() - 4 <= MAX_FRAME_LEN as usize,
-            "CONFIG frame ({} bytes) exceeds the {MAX_FRAME_LEN}-byte frame cap; \
-             the database is too large for the process fabric's wire format",
-            bytes.len() - 4
-        );
+        let bytes = encode_config_checked(spec, peers)?;
         self.broadcast_bytes(&bytes, "send CONFIG")
     }
 
@@ -809,11 +953,50 @@ impl Hub {
         self.broadcast_bytes(&frame.encode(), "send RECONFIG")
     }
 
-    /// Release the phase barrier: broadcast `START`. Workers begin the
-    /// phase on receipt. Call only after [`Hub::broadcast_config`] /
-    /// [`Hub::broadcast_reconfig`] for this phase.
-    pub fn start_all(&mut self) -> Result<()> {
-        let bytes = Frame::Start.encode();
+    /// Write pre-encoded frame bytes to one registered rank — the
+    /// recovery path's per-rank counterpart of [`Hub::broadcast_bytes`]:
+    /// a replayed phase mixes `CONFIG` (to the database-less replacement)
+    /// with `RECONFIG` (to the survivors), so a uniform broadcast cannot
+    /// express it (DESIGN.md §12).
+    fn send_bytes_to(&mut self, rank: usize, bytes: &[u8], what: &str) -> Result<()> {
+        let mut slot = self.writers[rank].lock().expect("writer lock");
+        let w = slot
+            .as_mut()
+            .with_context(|| format!("rank {rank} disconnected before {what}"))?;
+        w.write_all(bytes).with_context(|| format!("{what} to rank {rank}"))
+    }
+
+    /// Ship the full run specification — phase parameters plus database —
+    /// to a single rank (a respawned worker holds no database).
+    pub fn send_config_to(
+        &mut self,
+        rank: usize,
+        spec: &RunSpec,
+        peers: &[Endpoint],
+    ) -> Result<()> {
+        let bytes = encode_config_checked(spec, peers)?;
+        self.send_bytes_to(rank, &bytes, "send CONFIG")
+    }
+
+    /// Ship the phase parameters alone to a single rank (a survivor of an
+    /// aborted phase already holds the database).
+    pub fn send_reconfig_to(
+        &mut self,
+        rank: usize,
+        phase: &PhaseSpec,
+        peers: &[Endpoint],
+    ) -> Result<()> {
+        let frame = Frame::Reconfig { phase: Box::new(phase.clone()), peers: peers.to_vec() };
+        self.send_bytes_to(rank, &frame.encode(), "send RECONFIG")
+    }
+
+    /// Release the phase barrier: broadcast `START` carrying the
+    /// hub-assigned phase `epoch` the workers adopt (monotonic across
+    /// jobs, replays, and respawns — the owner owns the counter). Call
+    /// only after [`Hub::broadcast_config`] / [`Hub::broadcast_reconfig`]
+    /// (or their per-rank variants) for this phase.
+    pub fn start_all(&mut self, epoch: u64) -> Result<()> {
+        let bytes = Frame::Start { epoch }.encode();
         self.broadcast_bytes(&bytes, "send START")
     }
 
@@ -849,28 +1032,62 @@ impl Hub {
     }
 }
 
+/// Helper for the CONFIG frame-size guard shared by the broadcast and
+/// per-rank paths.
+fn encode_config_checked(spec: &RunSpec, peers: &[Endpoint]) -> Result<Vec<u8>> {
+    let bytes = encode_config(spec, peers);
+    ensure!(
+        bytes.len() - 4 <= MAX_FRAME_LEN as usize,
+        "CONFIG frame ({} bytes) exceeds the {MAX_FRAME_LEN}-byte frame cap; \
+         the database is too large for the process fabric's wire format",
+        bytes.len() - 4
+    );
+    Ok(bytes)
+}
+
 /// Per-worker route thread: forward `RELAY` frames to their destination
-/// rank (stamping the source), surface `MERGE` and disconnection. Lives for
-/// the whole fleet lifetime, spanning phases.
+/// rank (stamping the source), record `CHECKPOINT` custody reports,
+/// surface `MERGE` and disconnection. Lives for one connection — a
+/// respawned rank gets a fresh route thread from its new `HELLO`. The
+/// thread keeps connection-scoped context (frames carried, last frame
+/// name, last delivered epoch) and folds it plus the rank's last custody
+/// checkpoint into the `Gone` detail (DESIGN.md §12): a crash must be
+/// diagnosable from the error string alone.
 fn route_loop(
     rank: usize,
     mut reader: Stream,
     writers: Writers,
+    custody: Custodies,
     tx: Sender<HubEvent>,
     p: usize,
 ) {
-    let gone = |detail: String| {
-        let _ = tx.send(HubEvent::Gone { rank, detail });
-    };
-    loop {
-        match read_frame(&mut reader) {
-            Ok(Some(Frame::Relay { peer, msg })) => {
+    let mut frames: u64 = 0;
+    let mut last_frame: &'static str = "none";
+    let mut last_epoch: u64 = 0;
+    let cause: String = loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => break "EOF".into(),
+            Err(e) => break format!("{e:#}"),
+        };
+        frames += 1;
+        last_frame = frame.name();
+        match frame {
+            Frame::Relay { peer, epoch, msg } => {
                 let dst = peer as usize;
                 if dst >= p {
-                    gone(format!("relayed to out-of-range rank {dst}"));
-                    return;
+                    break format!("relayed to out-of-range rank {dst}");
                 }
-                let frame = Frame::Relay { peer: rank as u32, msg };
+                last_epoch = epoch;
+                // Custody bookkeeping: a GIVE relayed through the hub
+                // moves subtree roots off this rank (hub plane only; mesh
+                // GIVEs are counted by the sender's next checkpoint).
+                if let Msg::Basic { kind: BasicKind::Give { tasks }, .. } = &msg {
+                    let mut c = custody[rank].lock().expect("custody lock");
+                    c.gives_routed += 1;
+                    c.tasks_routed += tasks.len() as u64;
+                }
+                let frame = Frame::Relay { peer: rank as u32, epoch, msg };
                 let mut slot = writers[dst].lock().expect("writer lock");
                 if let Some(w) = slot.as_mut() {
                     // A failed forward means the destination already exited;
@@ -879,31 +1096,40 @@ fn route_loop(
                     let _ = write_frame(w, &frame);
                 }
             }
-            Ok(Some(Frame::Merge(m))) => {
-                if m.rank as usize != rank {
-                    gone(format!("MERGE claims rank {} on rank {rank}'s connection", m.rank));
-                    return;
+            Frame::Checkpoint { rank: r, epoch, work_units, roots } => {
+                if r as usize != rank {
+                    break format!("CHECKPOINT claims rank {r} on rank {rank}'s connection");
                 }
+                last_epoch = epoch;
+                let mut c = custody[rank].lock().expect("custody lock");
+                c.epoch = epoch;
+                c.work_units = work_units;
+                c.roots = roots;
+            }
+            Frame::Merge(m) => {
+                if m.rank as usize != rank {
+                    break format!("MERGE claims rank {} on rank {rank}'s connection", m.rank);
+                }
+                last_epoch = m.epoch;
                 if tx.send(HubEvent::Merge(*m)).is_err() {
                     return; // engine gone
                 }
                 // Keep reading: the next phase's relays and merge arrive on
                 // this same connection.
             }
-            Ok(Some(other)) => {
-                gone(format!("unexpected {} frame", other.name()));
-                return;
-            }
-            Ok(None) => {
-                gone("EOF".into());
-                return;
-            }
-            Err(e) => {
-                gone(format!("{e:#}"));
-                return;
-            }
+            other => break format!("unexpected {} frame", other.name()),
         }
-    }
+    };
+    let (ck_units, ck_roots) = {
+        let c = custody[rank].lock().expect("custody lock");
+        (c.work_units, c.roots.len())
+    };
+    let detail = format!(
+        "{cause}; last delivered epoch {last_epoch}, {frames} frames on this connection \
+         (last: {last_frame}); custody at last checkpoint: {ck_units} work units, \
+         {ck_roots} stack roots"
+    );
+    let _ = tx.send(HubEvent::Gone { rank, detail });
 }
 
 #[cfg(test)]
@@ -950,6 +1176,7 @@ mod tests {
     fn merge_for(rank: u32) -> WorkerMerge {
         WorkerMerge {
             rank,
+            epoch: 0,
             hist: vec![(1, 2)],
             closed_count: 2,
             work_units: 10,
@@ -1033,11 +1260,11 @@ mod tests {
         accept_all(&mut hub, 2);
         // Phase 1: full CONFIG.
         hub.broadcast_config(&tiny_spec(2), &[]).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(0).unwrap();
         collect_merges(&hub, 2);
         // Phase 2: RECONFIG over the resident database.
         hub.broadcast_reconfig(&tiny_phase(2, 2), &[]).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(1).unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
@@ -1095,10 +1322,10 @@ mod tests {
         );
         assert!(peers.iter().all(Endpoint::is_unix), "unix hub must yield unix peers");
         hub.broadcast_config(&tiny_spec(2), &peers).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(0).unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_reconfig(&tiny_phase(2, 2), &peers).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(1).unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
@@ -1165,7 +1392,7 @@ mod tests {
         accept_all(&mut hub, 3);
         let peers = hub.peer_map().unwrap();
         hub.broadcast_config(&tiny_spec(3), &peers).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(0).unwrap();
         collect_merges(&hub, 3);
         hub.broadcast_bye();
         s0.join().unwrap().unwrap();
@@ -1217,7 +1444,7 @@ mod tests {
         });
         accept_all(&mut hub, 2);
         hub.broadcast_config(&tiny_spec(2), &[]).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(0).unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
@@ -1331,11 +1558,108 @@ mod tests {
             );
         }
         hub.broadcast_config(&tiny_spec(2), &peers).unwrap();
-        hub.start_all().unwrap();
+        hub.start_all(0).unwrap();
         collect_merges(&hub, 2);
         hub.broadcast_bye();
         w0.join().unwrap().unwrap();
         w1.join().unwrap().unwrap();
+        hub.join();
+    }
+
+    /// The recovery primitives (DESIGN.md §12), end to end at the fabric
+    /// layer: a worker checkpoints custody and dies; the `Gone` detail
+    /// carries the diagnosable context in the documented format; the hub
+    /// forgets the rank; a replacement `HELLO`s into the vacant slot.
+    #[test]
+    fn gone_detail_carries_custody_and_respawn_rehellos_into_vacant_slot() {
+        let sock = test_ep("respawn");
+        let mut hub = Hub::bind(&sock, 2, TOKEN.into()).unwrap();
+        let hello = Frame::Hello {
+            rank: 0,
+            token: TOKEN.into(),
+            peer: Endpoint::unix("/nowhere.r0"),
+        };
+        let mut s = dial(&sock, &RetryPolicy::once()).unwrap();
+        write_frame(&mut s, &hello).unwrap();
+        accept_all(&mut hub, 1);
+        // A custody checkpoint, then death (socket drop → EOF).
+        let ck = Frame::Checkpoint {
+            rank: 0,
+            epoch: 3,
+            work_units: 123,
+            roots: vec![crate::fabric::WireTask { items: vec![1, 4], core: 4, support: 6 }],
+        };
+        write_frame(&mut s, &ck).unwrap();
+        drop(s);
+        let detail = match hub.recv_event(Duration::from_secs(10)).unwrap() {
+            Some(HubEvent::Gone { rank: 0, detail }) => detail,
+            other => panic!("expected Gone for rank 0, got {other:?}"),
+        };
+        // The documented detail format (satellite of ISSUE 7): cause, last
+        // delivered epoch, frame context, custody at last checkpoint.
+        assert!(detail.contains("EOF"), "{detail}");
+        assert!(detail.contains("last delivered epoch 3"), "{detail}");
+        assert!(detail.contains("1 frames on this connection (last: CHECKPOINT)"), "{detail}");
+        assert!(detail.contains("123 work units"), "{detail}");
+        assert!(detail.contains("1 stack roots"), "{detail}");
+        let c = hub.custody(0);
+        assert_eq!((c.epoch, c.work_units, c.roots.len()), (3, 123, 1));
+        // Vacate the slot and re-HELLO as the respawned rank 0.
+        hub.forget_rank(0);
+        assert_eq!(hub.connected(), 0);
+        let mut s2 = dial(&sock, &RetryPolicy::once()).unwrap();
+        write_frame(&mut s2, &hello).unwrap();
+        assert!(accept_outcome(&mut hub).unwrap(), "re-HELLO must be accepted");
+        assert_eq!(hub.connected(), 1);
+        // The occupied slot still rejects duplicates.
+        let mut dup = dial(&sock, &RetryPolicy::once()).unwrap();
+        write_frame(&mut dup, &hello).unwrap();
+        let err = accept_outcome(&mut hub).expect_err("duplicate HELLO must still fail");
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    }
+
+    /// A mid-phase RECONFIG (the hub aborting a phase attempt after a peer
+    /// died) must not sever the survivor's link: it surfaces through
+    /// `phase_interrupted`, and the stashed frames open the replay phase
+    /// on the next `await_phase`, with the worker adopting the replay's
+    /// hub-assigned epoch.
+    #[test]
+    fn survivor_sees_interrupt_and_joins_replay_epoch() {
+        let sock = test_ep("interrupt");
+        let mut hub = Hub::bind(&sock, 1, TOKEN.into()).unwrap();
+        let worker = std::thread::spawn({
+            let sock = sock.clone();
+            move || -> Result<()> {
+                let mut mb = connect(&sock, 0, TOKEN, None)?;
+                // Phase attempt at epoch 5: interrupted mid-phase.
+                let start = mb.await_phase()?.context("no phase opened")?;
+                assert!(start.db.is_some());
+                assert_eq!(mb.epoch(), 5);
+                let deadline = Instant::now() + Duration::from_secs(10);
+                while !mb.phase_interrupted() {
+                    ensure!(Instant::now() < deadline, "interrupt never surfaced");
+                    mb.wait_for_msg(Duration::from_millis(5));
+                    ensure!(mb.lost().is_none(), "interrupt must not sever the link");
+                }
+                // Abandon without merging; the replay opens at epoch 6.
+                let replay = mb.await_phase()?.context("no replay phase")?;
+                assert!(replay.db.is_none(), "survivors are reconfigured, not re-shipped");
+                assert_eq!(mb.epoch(), 6);
+                mb.send_merge(&merge_for(0))?;
+                assert!(mb.await_phase()?.is_none(), "expected BYE");
+                Ok(())
+            }
+        });
+        accept_all(&mut hub, 1);
+        hub.broadcast_config(&tiny_spec(1), &[]).unwrap();
+        hub.start_all(5).unwrap();
+        // Mid-phase: abort the attempt and open the replay under a fresh
+        // epoch (what the fleet owner does after a respawn).
+        hub.send_reconfig_to(0, &tiny_phase(1, 1), &[]).unwrap();
+        hub.start_all(6).unwrap();
+        collect_merges(&hub, 1);
+        hub.broadcast_bye();
+        worker.join().unwrap().unwrap();
         hub.join();
     }
 }

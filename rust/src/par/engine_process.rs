@@ -56,6 +56,7 @@ use crate::fabric::process::{connect, DataPlane, Hub, HubEvent};
 use crate::fabric::CommStats;
 use crate::lcm::SupportHist;
 use crate::net::{fresh_token, Endpoint};
+use crate::util::fault::{FaultPlan, FAULT_ENV, FAULT_EXIT_CODE};
 use crate::wire::{PhaseSpec, RunSpec, WorkerMerge};
 
 use super::breakdown::Breakdown;
@@ -112,6 +113,12 @@ pub struct ProcessConfig {
     /// endpoint, handed to that worker as `--peer-endpoint` in its join
     /// command.
     pub remote_workers: Option<Vec<Endpoint>>,
+    /// Deterministic fault injection (DESIGN.md §12): kill the named rank
+    /// at the planned point. Passed to the targeted worker's argv at spawn
+    /// (`--fault-inject rank=R,phase=P,after=N`); respawned replacements
+    /// never inherit it, so the fault fires exactly once. `None` in
+    /// production; the chaos suite and the `--fault-inject` CLI flag set it.
+    pub fault: Option<FaultPlan>,
 }
 
 impl ProcessConfig {
@@ -131,6 +138,7 @@ impl ProcessConfig {
             data_plane: DataPlane::Mesh,
             listen: None,
             remote_workers: None,
+            fault: None,
         }
     }
 
@@ -148,43 +156,101 @@ pub fn run_process(db: &Database, mode: RunMode, p: usize, seed: u64) -> Result<
     run_process_with(db, mode, &ProcessConfig::paper_defaults(p, seed))
 }
 
+/// Ceiling on mid-phase recoveries before a phase is abandoned: protects
+/// against a crash-looping worker binary (every respawn dies again) turning
+/// [`ProcessFleet::run_phase`] into an infinite replay loop.
+const MAX_PHASE_RECOVERIES: u32 = 8;
+
+/// Send a custody checkpoint to the hub roughly once per this many local
+/// work units (DESIGN.md §12). Matches the probe budget's order of
+/// magnitude: cheap enough to be off the critical path, frequent enough
+/// that a `Gone` report's custody context is current.
+const CHECKPOINT_EVERY_UNITS: u64 = 4_000_000;
+
+/// How one phase *attempt* ended (see [`ProcessFleet::try_phase`]).
+enum PhaseOutcome {
+    /// Every rank's merge arrived; the phase result is final.
+    Done(ParRunResult),
+    /// A rank disconnected mid-attempt; the attempt is void (its partial
+    /// merges carry the aborted epoch and will be fenced off).
+    Lost { rank: usize, detail: String },
+}
+
 /// Kill-on-drop guard for the worker fleet: a parent error path must never
-/// leak orphan miners.
+/// leak orphan miners. Keeps its spawn parameters so a single dead rank
+/// can be respawned in place (DESIGN.md §12) without re-resolving the
+/// executable through a config that may no longer name it.
 struct Fleet {
     children: Vec<Child>,
     reaped: Vec<bool>,
+    /// Spawn parameters, retained for [`Fleet::respawn`]. `None` exe =
+    /// remote-attach fleet (nothing local to respawn).
+    exe: Option<PathBuf>,
+    hub: Option<Endpoint>,
+    token: String,
 }
 
 impl Fleet {
-    fn spawn(exe: &PathBuf, hub: &Endpoint, token: &str, p: usize) -> Result<Fleet> {
+    fn spawn_one(
+        exe: &PathBuf,
+        hub: &Endpoint,
+        token: &str,
+        rank: usize,
+        fault: Option<&FaultPlan>,
+    ) -> Result<Child> {
+        let mut cmd = Command::new(exe);
+        cmd.arg("__worker")
+            .arg("--connect")
+            .arg(hub.to_string())
+            .arg("--token")
+            .arg(token)
+            .arg("--worker-rank")
+            .arg(rank.to_string())
+            .stdin(Stdio::null());
+        if let Some(plan) = fault {
+            if plan.rank == rank {
+                cmd.arg("--fault-inject").arg(plan.to_string());
+            }
+        }
+        cmd.spawn()
+            .with_context(|| format!("spawn worker rank {rank} ({})", exe.display()))
+    }
+
+    fn spawn(
+        exe: &PathBuf,
+        hub: &Endpoint,
+        token: &str,
+        p: usize,
+        fault: Option<&FaultPlan>,
+    ) -> Result<Fleet> {
         let mut children = Vec::with_capacity(p);
         for rank in 0..p {
-            let child = Command::new(exe)
-                .arg("__worker")
-                .arg("--connect")
-                .arg(hub.to_string())
-                .arg("--token")
-                .arg(token)
-                .arg("--worker-rank")
-                .arg(rank.to_string())
-                .stdin(Stdio::null())
-                .spawn()
-                .with_context(|| {
-                    format!("spawn worker rank {rank} ({})", exe.display())
-                })?;
-            children.push(child);
+            children.push(Self::spawn_one(exe, hub, token, rank, fault)?);
         }
-        Ok(Fleet { reaped: vec![false; p], children })
+        Ok(Fleet {
+            reaped: vec![false; p],
+            children,
+            exe: Some(exe.clone()),
+            hub: Some(hub.clone()),
+            token: token.to_string(),
+        })
     }
 
     /// The remote-attach fleet: no children to supervise — liveness comes
     /// from the workers' hub connections alone.
     fn remote() -> Fleet {
-        Fleet { reaped: Vec::new(), children: Vec::new() }
+        Fleet {
+            reaped: Vec::new(),
+            children: Vec::new(),
+            exe: None,
+            hub: None,
+            token: String::new(),
+        }
     }
 
     /// Non-blocking liveness check: a worker that already exited while the
-    /// fleet is still in service is a fatal fault.
+    /// fleet is still being assembled is a fatal fault (nobody will
+    /// recover a rank that never joined).
     fn check(&mut self) -> Result<()> {
         for (rank, child) in self.children.iter_mut().enumerate() {
             if self.reaped[rank] {
@@ -198,7 +264,28 @@ impl Fleet {
         Ok(())
     }
 
-    /// Reap the whole fleet after `BYE`; any non-zero exit is an error.
+    /// Replace a dead rank's process with a fresh one (DESIGN.md §12). The
+    /// old child is reaped first (its death is what triggered the call, so
+    /// the wait is momentary). The replacement is spawned *without* any
+    /// fault plan — an injected fault fires exactly once.
+    fn respawn(&mut self, rank: usize) -> Result<()> {
+        let exe = self.exe.clone().context("remote-attach fleets cannot respawn locally")?;
+        let hub = self.hub.clone().context("fleet spawn endpoint missing")?;
+        ensure!(rank < self.children.len(), "respawn of out-of-range rank {rank}");
+        if !self.reaped[rank] {
+            let _ = self.children[rank].wait();
+            self.reaped[rank] = true;
+        }
+        let token = self.token.clone();
+        self.children[rank] = Self::spawn_one(&exe, &hub, &token, rank, None)?;
+        self.reaped[rank] = false;
+        Ok(())
+    }
+
+    /// Reap the whole fleet after `BYE`. A non-zero exit is an error —
+    /// except the fault-injection exit code, which marks a death the chaos
+    /// harness planned (e.g. a kill scheduled after the fleet's last
+    /// phase, when no recovery runs because no phase is active).
     fn wait_all(&mut self) -> Result<()> {
         for (rank, child) in self.children.iter_mut().enumerate() {
             if self.reaped[rank] {
@@ -206,7 +293,10 @@ impl Fleet {
             }
             let status = child.wait().context("wait for worker")?;
             self.reaped[rank] = true;
-            ensure!(status.success(), "worker rank {rank} exited with {status}");
+            ensure!(
+                status.success() || status.code() == Some(FAULT_EXIT_CODE),
+                "worker rank {rank} exited with {status}"
+            );
         }
         Ok(())
     }
@@ -267,10 +357,14 @@ fn worker_exe(cfg: &ProcessConfig) -> Result<PathBuf> {
 /// jobs); the database ships to the workers only when it differs from the
 /// one they already hold (keyed by [`Database::digest`]).
 ///
-/// On error the fleet is *poisoned* — drop it (children are killed, the
+/// A worker death no longer poisons the fleet: a rank lost mid-phase is
+/// respawned in place and the phase replayed under a fresh epoch
+/// (DESIGN.md §12) — [`ProcessFleet::run_phase`] owns that loop. The
+/// fleet is *poisoned* only by unrecoverable errors (hub socket failures,
+/// repeated respawn failures) — then drop it (children are killed, the
 /// socket directory is removed) and spawn a fresh one; the daemon's
-/// scheduler does exactly that. On the success path, call
-/// [`ProcessFleet::shutdown`] for an orderly `BYE` + reap.
+/// scheduler does exactly that as its last resort. On the success path,
+/// call [`ProcessFleet::shutdown`] for an orderly `BYE` + reap.
 pub struct ProcessFleet {
     hub: Hub,
     fleet: Fleet,
@@ -281,10 +375,29 @@ pub struct ProcessFleet {
     /// Data plane this fleet was spawned with. Fixed for the fleet
     /// lifetime: the mesh peer map is resolved once at spawn (every
     /// worker's own listen endpoint, learned during the `HELLO`
-    /// handshakes) and redistributed with each phase frame.
+    /// handshakes), refreshed after a respawn, and redistributed with each
+    /// phase frame.
     data_plane: DataPlane,
     /// The resolved mesh peer endpoint map; empty under [`DataPlane::Hub`].
     peers: Vec<Endpoint>,
+    /// The next hub-assigned phase epoch: monotonic across phases, jobs,
+    /// and replay attempts, so mesh fencing and stale-merge dropping stay
+    /// sound for the fleet's whole lifetime.
+    next_epoch: u64,
+    /// Ranks respawned since their last `CONFIG`: they hold no database,
+    /// so the next phase ships them the full `CONFIG` even when the
+    /// survivors get a `RECONFIG`.
+    fresh: Vec<bool>,
+    /// Workers respawned over the fleet lifetime (chaos tests assert
+    /// "exactly one").
+    respawns: u64,
+    /// Ranks that died *after* their merge for the active epoch was
+    /// collected (e.g. killed while the owner runs the serial phase-3
+    /// screen): their contribution is complete, so the attempt is not
+    /// voided — the repair is deferred to the next phase opening.
+    deferred_gone: Vec<(usize, String)>,
+    spawn_timeout: Duration,
+    remote: bool,
 }
 
 /// A fleet that has bound its hub but not yet assembled its workers — the
@@ -361,6 +474,12 @@ impl PendingFleet {
             resident_db: None,
             data_plane: self.data_plane,
             peers,
+            next_epoch: 0,
+            fresh: vec![false; p],
+            respawns: 0,
+            deferred_gone: Vec::new(),
+            spawn_timeout: self.spawn_timeout,
+            remote: self.remote,
         })
     }
 }
@@ -386,7 +505,7 @@ impl ProcessFleet {
             Fleet::remote()
         } else {
             let exe = worker_exe(cfg)?;
-            Fleet::spawn(&exe, hub.endpoint(), hub.token(), p)?
+            Fleet::spawn(&exe, hub.endpoint(), hub.token(), p, cfg.fault.as_ref())?
         };
         Ok(PendingFleet {
             hub,
@@ -417,11 +536,29 @@ impl ProcessFleet {
         self.data_plane
     }
 
+    /// Workers respawned over this fleet's lifetime.
+    pub fn respawns(&self) -> u64 {
+        self.respawns
+    }
+
+    /// The hub's last custody checkpoint for `rank` (diagnostics).
+    pub fn custody(&self, rank: usize) -> crate::fabric::process::Custody {
+        self.hub.custody(rank)
+    }
+
     /// Run one phase across the warm fleet and block until every rank's
     /// phase-boundary merge arrived. Ships the database only when its
     /// digest differs from what the workers hold (`CONFIG` vs `RECONFIG`).
     /// The data plane is the fleet's, fixed at spawn — `cfg.data_plane` is
     /// ignored here.
+    ///
+    /// **Fault tolerance (DESIGN.md §12):** a rank lost mid-phase does not
+    /// fail the call. The dead rank is respawned in place (exactly that
+    /// one rank — never a fleet restart), the mesh peer map refreshed, and
+    /// the whole phase replayed under a fresh hub-assigned epoch; epoch
+    /// fencing discards every frame and merge of the aborted attempt, so
+    /// the replay — a pure function of the database and the phase spec —
+    /// yields results bit-identical to an undisturbed run.
     pub fn run_phase(
         &mut self,
         db: &Database,
@@ -442,24 +579,108 @@ impl ProcessFleet {
             mode,
         };
         let digest = db.digest();
+        let mut recoveries = 0u32;
+        loop {
+            // Between-phase deaths (a rank killed after its last merge —
+            // during the owner's serial screen, or between two jobs of a
+            // warm daemon fleet) surface as queued `Gone` events; repair
+            // before opening the phase.
+            self.repair()?;
+            match self.try_phase(db, &phase, digest, mode) {
+                Ok(PhaseOutcome::Done(result)) => return Ok(result),
+                Ok(PhaseOutcome::Lost { rank, detail }) => {
+                    recoveries += 1;
+                    ensure!(
+                        recoveries <= MAX_PHASE_RECOVERIES,
+                        "phase abandoned after {MAX_PHASE_RECOVERIES} recoveries; \
+                         last death: rank {rank}: {detail}"
+                    );
+                    self.recover_rank(rank, &detail)?;
+                }
+                Err(e) => {
+                    // A send failure can race the death that caused it (a
+                    // write to a rank that died a moment ago). If the hub
+                    // holds a pending Gone, recover and replay instead of
+                    // poisoning the fleet.
+                    match self.hub.recv_event(Duration::from_millis(50))? {
+                        Some(HubEvent::Gone { rank, detail }) => {
+                            recoveries += 1;
+                            ensure!(
+                                recoveries <= MAX_PHASE_RECOVERIES,
+                                "phase abandoned after {MAX_PHASE_RECOVERIES} recoveries; \
+                                 last death: rank {rank}: {detail}"
+                            );
+                            self.recover_rank(rank, &detail)?;
+                        }
+                        _ => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain between-phase hub events, recovering any rank that died while
+    /// no phase was active. Stale merges of aborted attempts are dropped.
+    fn repair(&mut self) -> Result<()> {
+        for (rank, detail) in std::mem::take(&mut self.deferred_gone) {
+            self.recover_rank(rank, &detail)?;
+        }
+        while let Some(ev) = self.hub.recv_event(Duration::ZERO)? {
+            match ev {
+                HubEvent::Gone { rank, detail } => self.recover_rank(rank, &detail)?,
+                HubEvent::Merge(_) => {} // stale merge of an aborted attempt
+            }
+        }
+        Ok(())
+    }
+
+    /// One phase *attempt* at a fresh epoch: per-rank phase frames (full
+    /// `CONFIG` for respawned ranks that hold no database, `RECONFIG` for
+    /// survivors), the `START` barrier, then merge collection. A `Gone`
+    /// mid-collection aborts the attempt — the caller recovers the rank
+    /// and calls again.
+    fn try_phase(
+        &mut self,
+        db: &Database,
+        phase: &PhaseSpec,
+        digest: u64,
+        mode: RunMode,
+    ) -> Result<PhaseOutcome> {
+        let epoch = self.next_epoch;
+        self.next_epoch += 1;
         if self.resident_db == Some(digest) {
-            self.hub.broadcast_reconfig(&phase, &self.peers)?;
+            for rank in 0..self.p {
+                if self.fresh[rank] {
+                    let spec = RunSpec { phase: phase.clone(), db: db.clone() };
+                    self.hub.send_config_to(rank, &spec, &self.peers)?;
+                } else {
+                    self.hub.send_reconfig_to(rank, phase, &self.peers)?;
+                }
+            }
         } else {
             // Invalidate first: a partial broadcast failure leaves the fleet
             // in a mixed state, and the fleet is poisoned anyway on error.
             self.resident_db = None;
-            self.hub.broadcast_config(&RunSpec { phase, db: db.clone() }, &self.peers)?;
+            self.hub
+                .broadcast_config(&RunSpec { phase: phase.clone(), db: db.clone() }, &self.peers)?;
             self.resident_db = Some(digest);
         }
-        self.hub.start_all()?;
+        for f in &mut self.fresh {
+            *f = false;
+        }
+        self.hub.start_all(epoch)?;
 
-        // Collect one merge per rank; any disconnect before a rank's merge
-        // is fatal for the phase (and poisons the fleet).
+        // Collect one merge per rank. Merges echo the epoch they conclude,
+        // so stragglers from an aborted attempt are dropped rather than
+        // double-counted; a disconnect aborts this attempt only.
         let mut merges: Vec<Option<WorkerMerge>> = vec![None; self.p];
         let mut collected = 0usize;
         while collected < self.p {
             match self.hub.recv_event(Duration::from_millis(200))? {
                 Some(HubEvent::Merge(m)) => {
+                    if m.epoch != epoch {
+                        continue; // stale: an aborted attempt's merge
+                    }
                     let rank = m.rank as usize;
                     ensure!(rank < self.p, "merge from out-of-range rank {rank}");
                     ensure!(merges[rank].is_none(), "duplicate merge from rank {rank}");
@@ -477,14 +698,57 @@ impl ProcessFleet {
                     collected += 1;
                 }
                 Some(HubEvent::Gone { rank, detail }) => {
-                    bail!("worker rank {rank} disconnected before its merge: {detail}");
+                    // A rank that died *after* this epoch's merge arrived
+                    // has already contributed everything the phase needs;
+                    // voiding the attempt would replay a complete phase.
+                    // Defer its repair to the next phase opening instead.
+                    if rank < self.p && merges[rank].is_some() {
+                        self.deferred_gone.push((rank, detail));
+                        continue;
+                    }
+                    return Ok(PhaseOutcome::Lost { rank, detail });
                 }
-                None => self.fleet.check()?, // idle tick: catch crashed workers
+                None => {} // idle tick; a crashed worker surfaces as Gone (EOF)
             }
         }
 
         let merges: Vec<WorkerMerge> = merges.into_iter().map(Option::unwrap).collect();
-        Ok(collect_merges(db, &merges, mode))
+        Ok(PhaseOutcome::Done(collect_merges(db, &merges, mode)))
+    }
+
+    /// Recover from one rank's death (DESIGN.md §12): vacate its hub slot,
+    /// respawn exactly that rank (or, for remote-attach fleets, print the
+    /// re-join command and wait), await its `HELLO`, refresh the mesh peer
+    /// map, and mark it fresh so the next attempt ships it the database.
+    fn recover_rank(&mut self, rank: usize, detail: &str) -> Result<()> {
+        eprintln!("parlamp: worker rank {rank} lost ({detail}); respawning rank {rank}");
+        self.hub.forget_rank(rank);
+        if self.remote {
+            eprintln!(
+                "parlamp: remote fleet — re-attach rank {rank} with: \
+                 parlamp __worker --connect {} --token {} --worker-rank {rank}",
+                self.hub.endpoint(),
+                self.hub.token()
+            );
+        } else {
+            self.fleet.respawn(rank)?;
+        }
+        self.respawns += 1;
+        let deadline = Instant::now() + self.spawn_timeout;
+        while self.hub.connected() < self.p {
+            if !self.hub.try_accept()? {
+                ensure!(
+                    Instant::now() < deadline,
+                    "timed out waiting for respawned rank {rank} to re-join the fleet"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        if self.data_plane == DataPlane::Mesh {
+            self.peers = self.hub.peer_map().context("refresh mesh peer map after respawn")?;
+        }
+        self.fresh[rank] = true;
+        Ok(())
     }
 
     /// Orderly teardown: `BYE` the fleet, reap every worker (non-zero exit
@@ -580,6 +844,15 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
         .require("worker-rank")?
         .parse()
         .context("--worker-rank must be a non-negative integer")?;
+    // Deterministic fault injection (DESIGN.md §12): `--fault-inject` wins,
+    // then the environment variable. A plan naming another rank is inert.
+    let fault: Option<FaultPlan> = match args.get("fault-inject") {
+        Some(plan) => Some(plan.parse().context("--fault-inject")?),
+        None => match std::env::var(FAULT_ENV) {
+            Ok(plan) => Some(plan.parse().with_context(|| format!("${FAULT_ENV}"))?),
+            Err(_) => None,
+        },
+    };
     let mut mb = connect(&hub, rank, &token, peer_listen)?;
     let mut resident: Option<Database> = None;
 
@@ -608,11 +881,31 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
         let mut worker = Worker::new(db, wc);
 
         // The same scheduling loop as the thread engine: blocking waits cap
-        // at 200 µs so DTD waves keep flowing.
+        // at 200 µs so DTD waves keep flowing. Two fault-tolerance hooks
+        // ride along (DESIGN.md §12): a custody checkpoint to the hub every
+        // `CHECKPOINT_EVERY_UNITS` of local expansion, and the interrupt
+        // check — a phase frame arriving mid-phase means the hub aborted
+        // this attempt (a peer died), so the attempt is abandoned without a
+        // merge and the stashed frames open the replay.
         let t0 = Instant::now();
+        let mut last_checkpoint = 0u64;
+        let mut interrupted = false;
         loop {
             if let Some(err) = mb.lost() {
                 bail!("rank {rank}: fabric link lost mid-run: {err}");
+            }
+            if mb.phase_interrupted() {
+                interrupted = true;
+                break;
+            }
+            if let Some(plan) = &fault {
+                if plan.fires_in_phase(rank, mb.epoch(), worker.work_units()) {
+                    fault_exit(rank, plan);
+                }
+            }
+            if worker.work_units() - last_checkpoint >= CHECKPOINT_EVERY_UNITS {
+                last_checkpoint = worker.work_units();
+                mb.send_checkpoint(worker.work_units(), worker.stack_roots(64));
             }
             let now_ns = t0.elapsed().as_nanos() as u64;
             match worker.poll(&mut mb, now_ns) {
@@ -630,6 +923,11 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
                 Poll::Finished => break,
             }
         }
+        if interrupted {
+            // Abandoned attempt: no merge — the hub has already moved on,
+            // and a merge stamped with this epoch would be fenced anyway.
+            continue;
+        }
         let makespan_ns = t0.elapsed().as_nanos() as u64;
 
         // Fold the mailbox's per-phase data-plane split into the comm
@@ -642,6 +940,7 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
         let hist = worker.hist().sparse();
         let merge = WorkerMerge {
             rank: rank as u32,
+            epoch: mb.epoch(),
             hist,
             closed_count: worker.closed_count(),
             work_units: worker.work_units(),
@@ -650,8 +949,26 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             makespan_ns,
         };
         mb.send_merge(&merge)?;
+
+        // The post-phase trigger: a plan whose armed epoch completed under
+        // its `after` budget fires here, right after the rank's last merge
+        // — which is how the chaos suite kills a worker while the owner
+        // runs the serial phase-3 screen (no distributed phase active, no
+        // recovery needed, and `Fleet::wait_all` tolerates the exit code).
+        if let Some(plan) = &fault {
+            if plan.fires_after_phase(rank, mb.phases_started()) {
+                fault_exit(rank, plan);
+            }
+        }
     }
     Ok(())
+}
+
+/// Die by plan: the injected fault's one observable side effect beyond the
+/// exit code is a stderr line the chaos CI job greps for.
+fn fault_exit(rank: usize, plan: &FaultPlan) -> ! {
+    eprintln!("parlamp: rank {rank}: fault injection firing ({plan}); exiting {FAULT_EXIT_CODE}");
+    std::process::exit(FAULT_EXIT_CODE);
 }
 
 #[cfg(test)]
@@ -661,6 +978,7 @@ mod tests {
     fn merge(rank: u32, hist: Vec<(u32, u64)>, closed: u64, makespan_ns: u64) -> WorkerMerge {
         WorkerMerge {
             rank,
+            epoch: 0,
             hist,
             closed_count: closed,
             work_units: closed * 10,

@@ -25,6 +25,7 @@ pub mod worker;
 
 pub use breakdown::Breakdown;
 pub use crate::fabric::process::DataPlane;
+pub use crate::util::fault::{FaultPlan, FAULT_EXIT_CODE};
 pub use engine_process::{
     run_process, run_process_with, PendingFleet, ProcessConfig, ProcessFleet,
 };

@@ -703,6 +703,19 @@ impl<'d> Worker<'d> {
     pub fn stack_len(&self) -> usize {
         self.stack.len()
     }
+
+    /// Non-draining custody snapshot: up to `max` roots from the *bottom*
+    /// of the stack (oldest, largest subtrees — the same end `give_half`
+    /// ships), serialized exactly as a GIVE would ship them. The process
+    /// engine sends these to the hub in periodic CHECKPOINT frames
+    /// (DESIGN.md §12) so a crash report can say what the rank was holding.
+    pub fn stack_roots(&self, max: usize) -> Vec<WireTask> {
+        self.stack
+            .iter()
+            .take(max)
+            .map(|t| WireTask { items: t.items.clone(), core: t.core, support: t.support })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -799,6 +812,24 @@ mod tests {
         // the shipped task is either still stacked or already expanded —
         // the worker must have counted it as work either way
         assert!(w.stack_len() > 0 || w.closed_count() > 0);
+    }
+
+    #[test]
+    fn stack_roots_snapshot_is_non_draining() {
+        let db = tiny_db();
+        let cfg = WorkerConfig::paper_defaults(0, 2, RunMode::Count { min_sup: 1 }, 7);
+        let mut w = Worker::new(&db, cfg);
+        let mut mb = SimMailbox::new(0, 2);
+        let _ = w.poll(&mut mb, 0); // depth-1 preprocess fills the stack
+        let before = w.stack_len();
+        assert!(before > 0);
+        let roots = w.stack_roots(2);
+        assert_eq!(roots.len(), before.min(2));
+        assert_eq!(w.stack_len(), before, "snapshot must not drain the stack");
+        // Bottom-of-stack order, same serialization a GIVE would use.
+        assert_eq!(roots[0].items, w.stack[0].items);
+        assert_eq!(roots[0].support, w.stack[0].support);
+        assert!(w.stack_roots(0).is_empty());
     }
 
     #[test]

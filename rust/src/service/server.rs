@@ -29,6 +29,7 @@ use anyhow::{Context as _, Result};
 use crate::coordinator::Coordinator;
 use crate::net::{Endpoint, Listener, Stream};
 use crate::par::{DataPlane, PendingFleet, ProcessConfig, ProcessFleet};
+use crate::util::fault::FaultPlan;
 use crate::util::sig;
 use crate::wire::service::{JobOutcome, JobSpec, JobState};
 use crate::wire::{read_frame, write_frame, Frame};
@@ -64,6 +65,11 @@ pub struct ServeConfig {
     /// and instead prints join commands for `len()` externally-launched
     /// ones (see [`crate::par::engine_process`]).
     pub remote_workers: Option<Vec<Endpoint>>,
+    /// Deterministic fault injection (`--fault-inject`, DESIGN.md §12):
+    /// kill the named worker at the planned point of the fleet's lifetime.
+    /// The chaos suite uses it to prove an in-flight job survives a worker
+    /// death; the respawned replacement never inherits the plan.
+    pub fault: Option<FaultPlan>,
 }
 
 impl ServeConfig {
@@ -77,6 +83,7 @@ impl ServeConfig {
             data_plane: DataPlane::Mesh,
             fleet_listen: None,
             remote_workers: None,
+            fault: None,
         }
     }
 }
@@ -195,6 +202,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         data_plane: cfg.data_plane,
         listen: cfg.fleet_listen.clone(),
         remote_workers: cfg.remote_workers.clone(),
+        fault: cfg.fault,
         ..ProcessConfig::paper_defaults(cfg.procs, 2015)
     };
     // Fleet first: a daemon that cannot mine should fail before it starts

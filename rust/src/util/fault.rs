@@ -1,0 +1,157 @@
+//! Deterministic fault injection for the process fleet (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] names one worker rank and the moment it must die: during
+//! phase epoch `phase`, once the rank's local expansion clock passes
+//! `after` work units — or, if the epoch completes first, at the rank's
+//! next idle poll after the epoch has passed (which is how the chaos suite
+//! kills a worker *between* distributed phases, e.g. while the owner runs
+//! the serial phase-3 screen). The plan travels as one CLI/env token,
+//!
+//! ```text
+//! rank=R,phase=P,after=N
+//! ```
+//!
+//! parsed by [`FaultPlan::parse`] and re-emitted verbatim by `Display`, so
+//! the same spelling works for `--fault-inject` on `lamp` and `serve`, for
+//! the `PARLAMP_FAULT_INJECT` environment variable, and for the argv the
+//! fleet owner forwards to each spawned `__worker`. The injected death is
+//! `process::exit(FAULT_EXIT_CODE)` — a real worker loss from the fleet's
+//! point of view (socket EOF → `Gone`), not a simulated one.
+//!
+//! Respawned replacement workers are always launched *without* the plan
+//! (see `Fleet::respawn`): the fault fires exactly once, which is what the
+//! chaos CI gates' "exactly one respawn" greps pin down.
+
+use anyhow::{bail, Context, Result};
+
+/// Exit code of a worker killed by fault injection. Distinctive so a chaos
+/// test or an operator reading `serve` logs can tell an injected death
+/// from a real crash.
+pub const FAULT_EXIT_CODE: i32 = 86;
+
+/// Environment variable consulted by `__worker` when no `--fault-inject`
+/// argument is present (same `rank=R,phase=P,after=N` grammar).
+pub const FAULT_ENV: &str = "PARLAMP_FAULT_INJECT";
+
+/// One planned worker death: kill `rank` during phase epoch `phase` once
+/// its work-unit clock reaches `after` (or at the first idle poll after
+/// the epoch has passed, if the phase finishes under budget).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Worker rank to kill.
+    pub rank: usize,
+    /// Fleet phase epoch (0-based, hub-assigned; monotonic across jobs,
+    /// replays, and warm-fleet lifetimes) during which the fault arms.
+    pub phase: u64,
+    /// Local work units into that epoch after which the fault fires.
+    pub after: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `rank=R,phase=P,after=N` spelling (fields in any order,
+    /// all three required).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let (mut rank, mut phase, mut after) = (None, None, None);
+        for field in s.split(',').filter(|f| !f.is_empty()) {
+            let (key, value) = field
+                .split_once('=')
+                .with_context(|| format!("fault plan field '{field}' is not key=value"))?;
+            match key.trim() {
+                "rank" => {
+                    rank = Some(value.trim().parse::<usize>().with_context(|| {
+                        format!("fault plan rank '{value}' is not an unsigned integer")
+                    })?);
+                }
+                "phase" => {
+                    phase = Some(value.trim().parse::<u64>().with_context(|| {
+                        format!("fault plan phase '{value}' is not an unsigned integer")
+                    })?);
+                }
+                "after" => {
+                    after = Some(value.trim().parse::<u64>().with_context(|| {
+                        format!("fault plan after '{value}' is not an unsigned integer")
+                    })?);
+                }
+                other => bail!("unknown fault plan field '{other}' (rank|phase|after)"),
+            }
+        }
+        Ok(FaultPlan {
+            rank: rank.context("fault plan is missing rank= (rank=R,phase=P,after=N)")?,
+            phase: phase.context("fault plan is missing phase= (rank=R,phase=P,after=N)")?,
+            after: after.context("fault plan is missing after= (rank=R,phase=P,after=N)")?,
+        })
+    }
+
+    /// The plan fires mid-phase: `rank` is inside epoch `phase` and has
+    /// done at least `after` work units.
+    pub fn fires_in_phase(&self, rank: usize, epoch: u64, work_units: u64) -> bool {
+        rank == self.rank && epoch == self.phase && work_units >= self.after
+    }
+
+    /// The plan fires at an idle poll: epoch `phase` has already completed
+    /// (`phases_started` counts past it) without the in-phase trigger
+    /// having been reached — death at the first opportunity afterwards.
+    pub fn fires_after_phase(&self, rank: usize, phases_started: u64) -> bool {
+        rank == self.rank && phases_started > self.phase
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank={},phase={},after={}", self.rank, self.phase, self.after)
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<FaultPlan> {
+        FaultPlan::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        let plan = FaultPlan { rank: 2, phase: 1, after: 4096 };
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        // Any field order parses; whitespace around fields is tolerated.
+        assert_eq!(
+            FaultPlan::parse("after=4096, rank=2 ,phase=1").unwrap(),
+            plan
+        );
+        assert_eq!("rank=0,phase=0,after=0".parse::<FaultPlan>().unwrap().after, 0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        for bad in [
+            "",
+            "rank=1",                       // missing phase/after
+            "rank=1,phase=0",               // missing after
+            "rank=x,phase=0,after=1",       // non-numeric
+            "rank=1,phase=0,after=1,bogus=2", // unknown field
+            "rank,phase=0,after=1",         // not key=value
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn trigger_semantics() {
+        let plan = FaultPlan { rank: 1, phase: 2, after: 100 };
+        // Mid-phase: only the named rank, only its epoch, only past budget.
+        assert!(plan.fires_in_phase(1, 2, 100));
+        assert!(plan.fires_in_phase(1, 2, 5000));
+        assert!(!plan.fires_in_phase(1, 2, 99));
+        assert!(!plan.fires_in_phase(0, 2, 5000));
+        assert!(!plan.fires_in_phase(1, 3, 5000));
+        // Post-phase: fires once the epoch counter moved past the armed
+        // phase (a worker that survived under budget dies while idle).
+        assert!(!plan.fires_after_phase(1, 2));
+        assert!(plan.fires_after_phase(1, 3));
+        assert!(!plan.fires_after_phase(0, 3));
+    }
+}

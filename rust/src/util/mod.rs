@@ -8,6 +8,7 @@
 //! service daemon and its workers ([`sig`]).
 
 pub mod bench_harness;
+pub mod fault;
 pub mod propcheck;
 pub mod rng;
 #[cfg(unix)]

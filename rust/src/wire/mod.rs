@@ -66,7 +66,15 @@ pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 /// `tcp:<host>:<port>`) instead of a raw socket path, and `HELLO` /
 /// `PEERHELLO` carry the per-fleet shared-secret token so stray TCP
 /// connections are rejected at the handshake.
-pub const WIRE_VERSION: u16 = 4;
+/// v5: fault-tolerant fleets (DESIGN.md §12) — `START` carries the
+/// hub-assigned phase epoch (a respawned rank must join the fleet's
+/// numbering, and a replayed phase must get a *fresh* epoch so stale
+/// frames from the aborted attempt are fenced out), `MERGE` echoes the
+/// epoch it concludes (the owner discards merges from an aborted epoch),
+/// and the new worker → hub `CHECKPOINT` frame periodically reports the
+/// rank's unfinished stack roots so the hub's custody table can say what
+/// a dead rank was holding.
+pub const WIRE_VERSION: u16 = 5;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -90,6 +98,8 @@ const TAG_RECONFIG: u8 = 0x07;
 // Mesh data plane (worker ↔ worker direct connections, DESIGN.md §10).
 const TAG_PEERHELLO: u8 = 0x08;
 const TAG_PEERMSG: u8 = 0x09;
+// Fault tolerance (custody checkpoints, DESIGN.md §12).
+const TAG_CHECKPOINT: u8 = 0x0A;
 // Job frames (the `parlamp serve` client protocol, DESIGN.md §9) live in
 // a disjoint tag range so fabric and service streams can never be confused.
 const TAG_SUBMIT: u8 = 0x10;
@@ -143,6 +153,11 @@ pub struct RunSpec {
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerMerge {
     pub rank: u32,
+    /// The phase epoch this merge concludes (v5). The fleet owner drops
+    /// merges whose epoch is not the one it is collecting — after a
+    /// mid-phase worker loss the aborted epoch's stragglers must not be
+    /// mistaken for contributions to the replayed one.
+    pub epoch: u64,
     /// Sparse closed-set histogram (support, count).
     pub hist: HistDelta,
     pub closed_count: u64,
@@ -179,19 +194,35 @@ pub enum Frame {
     PeerHello { rank: u32, token: String },
     /// Worker → worker direct data-plane message: the sender's rank (must
     /// match the connection's `PeerHello`), the sender's phase index
-    /// (epoch), and the protocol message. The epoch fences phases: unlike
-    /// the hub path, mesh sockets carry no CONFIG/START ordering, so the
-    /// receiver drops frames from finished phases and buffers frames from
-    /// a phase it has not started yet (DESIGN.md §10).
+    /// (epoch), and the protocol message. The epoch fences phases — mesh
+    /// sockets carry no CONFIG/START ordering, so the receiver drops
+    /// frames from finished phases and buffers frames from a phase it has
+    /// not started yet (DESIGN.md §10); `Relay` carries the same fence on
+    /// the hub plane.
     PeerMsg { src: u32, epoch: u64, msg: Msg },
     /// Hub → worker once *every* rank has completed the handshake: begin
     /// the phase. Separating `START` from `CONFIG` gives the run an MPI-like
     /// startup barrier, so no worker can send steal traffic toward a rank
-    /// that has not yet registered with the hub.
-    Start,
+    /// that has not yet registered with the hub. `epoch` (v5) is the
+    /// hub-assigned phase index: a respawned worker inherits the fleet's
+    /// numbering from it instead of counting its own phases, and a replayed
+    /// phase gets a fresh epoch so mesh frames and merges from the aborted
+    /// attempt are fenced out (DESIGN.md §12).
+    Start { epoch: u64 },
+    /// Worker → hub, periodically during a phase: the rank's current
+    /// unfinished [`WireTask`] stack roots (bottom of the DFS stack =
+    /// largest subtrees), its epoch, and its work-unit clock. Feeds the
+    /// hub's custody table so a `Gone` rank's loss is diagnosable — what it
+    /// held, how far it got — without any reply traffic (DESIGN.md §12).
+    Checkpoint { rank: u32, epoch: u64, work_units: u64, roots: Vec<WireTask> },
     /// Routed protocol message. Worker → hub: `peer` is the *destination*
-    /// rank. Hub → worker: `peer` is the *source* rank.
-    Relay { peer: u32, msg: Msg },
+    /// rank. Hub → worker: `peer` is the *source* rank. `epoch` (v5) is
+    /// the sender's phase epoch, carried through the relay unchanged: hub
+    /// socket FIFO alone fenced phases when phases could only end with
+    /// every merge collected, but a mid-phase abort (DESIGN.md §12) can
+    /// leave a survivor's stale relay racing the hub's own RECONFIG, so
+    /// hub-plane deliveries are epoch-fenced exactly like `PeerMsg`.
+    Relay { peer: u32, epoch: u64, msg: Msg },
     /// Worker → hub after `Finish`: the phase-boundary merge payload.
     Merge(Box<WorkerMerge>),
     /// Hub → worker: no further phases; exit cleanly.
@@ -225,7 +256,8 @@ impl Frame {
             Frame::Reconfig { .. } => "RECONFIG",
             Frame::PeerHello { .. } => "PEERHELLO",
             Frame::PeerMsg { .. } => "PEERMSG",
-            Frame::Start => "START",
+            Frame::Start { .. } => "START",
+            Frame::Checkpoint { .. } => "CHECKPOINT",
             Frame::Relay { .. } => "RELAY",
             Frame::Merge(_) => "MERGE",
             Frame::Bye => "BYE",
@@ -645,6 +677,7 @@ fn put_spec(buf: &mut Vec<u8>, spec: &RunSpec, peers: &[Endpoint]) {
 
 fn put_merge(buf: &mut Vec<u8>, m: &WorkerMerge) {
     put_u32(buf, m.rank);
+    put_u64(buf, m.epoch);
     put_hist(buf, &m.hist);
     put_u64(buf, m.closed_count);
     put_u64(buf, m.work_units);
@@ -667,6 +700,7 @@ fn put_merge(buf: &mut Vec<u8>, m: &WorkerMerge) {
 fn get_merge(d: &mut Dec) -> Result<WorkerMerge> {
     Ok(WorkerMerge {
         rank: d.u32()?,
+        epoch: d.u64()?,
         hist: get_hist(d)?,
         closed_count: d.u64()?,
         work_units: d.u64()?,
@@ -728,10 +762,24 @@ impl Frame {
                 put_u64(&mut body, *epoch);
                 put_msg(&mut body, msg);
             }
-            Frame::Start => put_u8(&mut body, TAG_START),
-            Frame::Relay { peer, msg } => {
+            Frame::Start { epoch } => {
+                put_u8(&mut body, TAG_START);
+                put_u64(&mut body, *epoch);
+            }
+            Frame::Checkpoint { rank, epoch, work_units, roots } => {
+                put_u8(&mut body, TAG_CHECKPOINT);
+                put_u32(&mut body, *rank);
+                put_u64(&mut body, *epoch);
+                put_u64(&mut body, *work_units);
+                put_u32(&mut body, roots.len() as u32);
+                for t in roots {
+                    put_task(&mut body, t);
+                }
+            }
+            Frame::Relay { peer, epoch, msg } => {
                 put_u8(&mut body, TAG_RELAY);
                 put_u32(&mut body, *peer);
+                put_u64(&mut body, *epoch);
                 put_msg(&mut body, msg);
             }
             Frame::Merge(m) => {
@@ -830,8 +878,22 @@ impl Frame {
                 epoch: d.u64()?,
                 msg: get_msg(&mut d)?,
             },
-            TAG_START => Frame::Start,
-            TAG_RELAY => Frame::Relay { peer: d.u32()?, msg: get_msg(&mut d)? },
+            TAG_START => Frame::Start { epoch: d.u64()? },
+            TAG_CHECKPOINT => {
+                let rank = d.u32()?;
+                let epoch = d.u64()?;
+                let work_units = d.u64()?;
+                // Each root carries at least its item count (4), core (8),
+                // and support (4), so the count is validated against the
+                // remaining payload before any allocation.
+                let n = d.count(16)?;
+                let mut roots = Vec::with_capacity(n);
+                for _ in 0..n {
+                    roots.push(get_task(&mut d)?);
+                }
+                Frame::Checkpoint { rank, epoch, work_units, roots }
+            }
+            TAG_RELAY => Frame::Relay { peer: d.u32()?, epoch: d.u64()?, msg: get_msg(&mut d)? },
             TAG_MERGE => Frame::Merge(Box::new(get_merge(&mut d)?)),
             TAG_BYE => Frame::Bye,
             TAG_SUBMIT => Frame::Submit(Box::new(service::get_job_spec(&mut d)?)),
@@ -934,9 +996,9 @@ mod tests {
     }
 
     fn roundtrip_msg(m: &Msg) -> Msg {
-        match roundtrip(&Frame::Relay { peer: 3, msg: m.clone() }) {
-            Frame::Relay { peer, msg } => {
-                assert_eq!(peer, 3);
+        match roundtrip(&Frame::Relay { peer: 3, epoch: 9, msg: m.clone() }) {
+            Frame::Relay { peer, epoch, msg } => {
+                assert_eq!((peer, epoch), (3, 9));
                 msg
             }
             other => panic!("wrong frame: {other:?}"),
@@ -1039,10 +1101,10 @@ mod tests {
                 (other, _) => panic!("{other:?}"),
             }
         }
-        assert!(matches!(roundtrip(&Frame::Start), Frame::Start));
+        assert!(matches!(roundtrip(&Frame::Start { epoch: 42 }), Frame::Start { epoch: 42 }));
         assert!(matches!(roundtrip(&Frame::Bye), Frame::Bye));
         assert_eq!(Frame::Bye.name(), "BYE");
-        assert_eq!(Frame::Start.name(), "START");
+        assert_eq!(Frame::Start { epoch: 0 }.name(), "START");
     }
 
     #[test]
@@ -1176,6 +1238,7 @@ mod tests {
     fn merge_roundtrips() {
         let m = WorkerMerge {
             rank: 2,
+            epoch: 9,
             hist: vec![(3, 5), (10, 1)],
             closed_count: 6,
             work_units: 777,
@@ -1200,6 +1263,131 @@ mod tests {
         assert_eq!(got, m);
     }
 
+    fn sample_checkpoint(n_roots: usize) -> Frame {
+        Frame::Checkpoint {
+            rank: 2,
+            epoch: 7,
+            work_units: 123_456,
+            roots: (0..n_roots)
+                .map(|i| WireTask {
+                    items: (0..i as Item).collect(),
+                    core: i as i64 - 1,
+                    support: 10 + i as u32,
+                })
+                .collect(),
+        }
+    }
+
+    /// The v5 frames (CHECKPOINT custody reports, the epoch-carrying START)
+    /// roundtrip exactly, including the empty-stack checkpoint an idle
+    /// worker sends.
+    #[test]
+    fn checkpoint_and_epoch_start_roundtrip() {
+        for n in [0usize, 1, 5] {
+            let sent = sample_checkpoint(n);
+            let (Frame::Checkpoint { rank, epoch, work_units, roots },
+                 Frame::Checkpoint { rank: r0, epoch: e0, work_units: w0, roots: t0 }) =
+                (roundtrip(&sent), sent)
+            else {
+                panic!("checkpoint did not roundtrip as a checkpoint");
+            };
+            assert_eq!(rank, r0);
+            assert_eq!(epoch, e0);
+            assert_eq!(work_units, w0);
+            assert_eq!(roots, t0);
+        }
+        assert_eq!(sample_checkpoint(0).name(), "CHECKPOINT");
+        match roundtrip(&Frame::Start { epoch: u64::MAX }) {
+            Frame::Start { epoch } => assert_eq!(epoch, u64::MAX),
+            other => panic!("{other:?}"),
+        }
+        // Random checkpoints through the same generator discipline as the
+        // message property test.
+        crate::util::propcheck::forall("random checkpoints roundtrip", 64, |rng| {
+            let frame = Frame::Checkpoint {
+                rank: rng.below(64) as u32,
+                epoch: rng.next_u64(),
+                work_units: rng.next_u64(),
+                roots: (0..rng.index(6))
+                    .map(|_| WireTask {
+                        items: (0..rng.index(5)).map(|_| rng.below(100) as Item).collect(),
+                        core: rng.below(100) as i64 - 1,
+                        support: rng.below(1000) as u32 + 1,
+                    })
+                    .collect(),
+            };
+            let bytes = frame.encode();
+            let Frame::Checkpoint { roots: r0, rank, epoch, work_units } = frame else {
+                unreachable!()
+            };
+            match Frame::decode(&bytes[4..]) {
+                Ok(Frame::Checkpoint { roots, rank: r, epoch: e, work_units: w })
+                    if roots == r0 && r == rank && e == epoch && w == work_units =>
+                {
+                    Ok(())
+                }
+                other => Err(format!("checkpoint roundtrip mismatch: {other:?}")),
+            }
+        });
+    }
+
+    /// The v5 frames survive the same corruption battery as every earlier
+    /// frame generation: per-byte truncation, trailing garbage, and
+    /// oversized count prefixes error — never panic, never allocate wildly.
+    #[test]
+    fn corrupt_v5_frames_error_instead_of_panicking() {
+        let relay = Frame::Relay {
+            peer: 2,
+            epoch: 7,
+            msg: Msg::Basic { stamp: 9, kind: BasicKind::Request { lifeline: true } },
+        };
+        for frame in [sample_checkpoint(3), Frame::Start { epoch: 3 }, relay] {
+            let bytes = frame.encode();
+            for cut in 1..bytes.len() - 4 {
+                assert!(
+                    Frame::decode(&bytes[4..4 + cut]).is_err(),
+                    "{}: truncation at {cut} must fail",
+                    frame.name()
+                );
+            }
+            assert!(Frame::decode(&bytes[4..]).is_ok(), "{}", frame.name());
+            let mut long = bytes[4..].to_vec();
+            long.push(0);
+            assert!(Frame::decode(&long).is_err(), "{}", frame.name());
+        }
+        // An absurd root count in a CHECKPOINT must not allocate.
+        let mut body = vec![TAG_CHECKPOINT];
+        put_u32(&mut body, 0); // rank
+        put_u64(&mut body, 0); // epoch
+        put_u64(&mut body, 0); // work units
+        put_u32(&mut body, u32::MAX); // root count with no task bytes
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // Same for an absurd per-task item count inside a valid root count.
+        let mut body = vec![TAG_CHECKPOINT];
+        put_u32(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u32(&mut body, 1); // one root…
+        put_u32(&mut body, u32::MAX); // …claiming u32::MAX items
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // A MERGE truncated inside the new epoch field fails cleanly (the
+        // epoch sits between rank and the histogram).
+        let m = WorkerMerge {
+            rank: 1,
+            epoch: 5,
+            hist: vec![(2, 2)],
+            closed_count: 2,
+            work_units: 10,
+            breakdown: Breakdown::default(),
+            comm: CommStats::default(),
+            makespan_ns: 1,
+        };
+        let bytes = Frame::Merge(Box::new(m)).encode();
+        assert!(Frame::decode(&bytes[4..4 + 8]).is_err()); // tag+rank+3 epoch bytes
+    }
+
     #[test]
     fn corrupt_input_errors_instead_of_panicking() {
         // truncated body
@@ -1221,6 +1409,7 @@ mod tests {
         // absurd count prefix inside a RELAY(GIVE) must not allocate
         let mut body = vec![TAG_RELAY];
         put_u32(&mut body, 0); // peer
+        put_u64(&mut body, 0); // epoch (v5)
         put_u8(&mut body, MSG_GIVE);
         put_u64(&mut body, 0); // stamp
         put_u32(&mut body, u32::MAX); // task count with no task bytes

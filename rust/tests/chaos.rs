@@ -1,0 +1,401 @@
+//! Chaos suite (DESIGN.md §12): deterministic fault injection proves the
+//! process fleet survives worker death with *bit-identical* results.
+//!
+//! Every test arms a [`FaultPlan`] — rank R exits with code 86 at a
+//! planned point — and asserts the three-phase LAMP outcome equals the
+//! serial reference exactly: λ*, both closed-pattern histograms, the
+//! correction factor k, and the significant set. The kill-mid-phase tests
+//! run on every {data plane × transport} combination and pin "exactly one
+//! respawn"; a kill *after* the rank's last merge (while the owner runs
+//! the serial phase-3 screen) must be absorbed with *zero* mid-phase
+//! recoveries; and the `parlamp serve` daemon must finish an in-flight
+//! job across a worker death.
+//!
+//! A property test rides along: a `SearchNode` shipped over the real wire
+//! (strip → GIVE frame → decode → occurrence-bitmap rebuild) re-expands
+//! to the identical closed-set sequence, and two replays of the shipped
+//! copy agree on the work-unit clock — the determinism the respawn/replay
+//! recovery leans on.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use parlamp::datagen::{generate_gwas, GeneticModel, GwasSpec};
+use parlamp::db::{Database, Item};
+use parlamp::fabric::{BasicKind, Msg, WireTask};
+use parlamp::lamp::{lamp_serial, phase3_extract, SupportIncreaseRule};
+use parlamp::lcm::{expand, mine_closed, ExpandScratch, SearchNode, SupportHist, Visit};
+use parlamp::net::Endpoint;
+use parlamp::par::{DataPlane, FaultPlan, ProcessConfig, ProcessFleet, RunMode};
+use parlamp::service::Client;
+use parlamp::util::propcheck::forall_sized;
+use parlamp::wire::service::{JobOutcome, JobSpec};
+use parlamp::wire::Frame;
+
+fn parlamp_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_parlamp"))
+}
+
+/// The quickstart cohort (200 SNPs × 150 individuals, one planted 3-SNP
+/// association) — the same dataset the equivalence suite and the CI smoke
+/// jobs mine.
+fn quickstart_db() -> Database {
+    let spec = GwasSpec {
+        n_snps: 200,
+        n_individuals: 150,
+        n_pos: 40,
+        model: GeneticModel::Dominant,
+        maf_upper: 0.2,
+        ld_copy_prob: 0.25,
+        common_frac: 0.2,
+        planted: vec![(3, 0.9)],
+        seed: 31,
+    };
+    generate_gwas(&spec).0
+}
+
+/// Serial closed-pattern histogram at `min_sup` — the bit-exact oracle.
+fn serial_hist(db: &Database, min_sup: u32) -> SupportHist {
+    let mut hist = SupportHist::new(db.n_trans());
+    mine_closed(db, min_sup, |node, ms| {
+        hist.record(node.support);
+        (Visit::Continue, ms)
+    });
+    hist
+}
+
+/// Fleet config for the kill-mid-phase tests. The probe budget is cut to
+/// 50 k units (paper default: 4 M) so each phase spans many mailbox polls:
+/// the fault check sits at the top of the worker's poll loop, and a budget
+/// that swallows the whole quickstart phase in one quantum would demote
+/// the "mid-phase" death to a post-merge one.
+fn chaos_cfg(plane: DataPlane, listen: Option<Endpoint>, seed: u64) -> ProcessConfig {
+    ProcessConfig {
+        worker_exe: Some(parlamp_bin()),
+        spawn_timeout: Duration::from_secs(60),
+        data_plane: plane,
+        listen,
+        probe_budget_units: 50_000,
+        fault: Some(FaultPlan { rank: 1, phase: 0, after: 1 }),
+        ..ProcessConfig::paper_defaults(3, seed)
+    }
+}
+
+/// The core acceptance: kill rank 1 mid-way through phase 1, and the
+/// three-phase run must still equal the serial reference bit for bit,
+/// with exactly one respawn over the fleet's lifetime.
+fn kill_mid_phase_and_verify(plane: DataPlane, listen: Option<Endpoint>) {
+    let db = quickstart_db();
+    let serial = lamp_serial(&db, 0.05);
+    let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
+    let cfg = chaos_cfg(plane, listen, 42);
+    let mut fleet = ProcessFleet::spawn(&cfg).expect("spawn fleet");
+
+    // Phase 1 (λ search): epoch 0 is the attempt the fault voids; the
+    // replay runs under epoch 1 with the respawned rank 1 re-CONFIGured.
+    let mut p1 = fleet
+        .run_phase(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg, 42)
+        .expect("phase 1 must survive the injected death");
+    assert_eq!(fleet.respawns(), 1, "exactly one rank must have been respawned");
+    p1.finalize_phase1(&rule);
+    assert_eq!(p1.lambda_final, serial.lambda_final, "λ* differs after recovery");
+    assert_eq!(p1.min_sup, serial.min_sup);
+    // The phase-1 merge is exact at and above λ* (DESIGN.md §4).
+    let oracle1 = serial_hist(&db, serial.lambda_final);
+    for support in serial.lambda_final..=db.n_trans() as u32 {
+        assert_eq!(
+            p1.hist.counts()[support as usize],
+            oracle1.counts()[support as usize],
+            "phase-1 histogram differs at support {support} after recovery"
+        );
+    }
+
+    // Phase 2 (count at min_sup): runs on the healed fleet; no further
+    // deaths, no further respawns.
+    let p2 = fleet
+        .run_phase(&db, RunMode::Count { min_sup: p1.min_sup }, &cfg, 43)
+        .expect("phase 2 on the healed fleet");
+    assert_eq!(fleet.respawns(), 1, "the fault fires exactly once");
+    assert_eq!(p2.closed_total, serial.correction_factor, "k differs after recovery");
+    assert_eq!(
+        p2.hist.counts(),
+        serial_hist(&db, serial.min_sup).counts(),
+        "phase-2 closed-pattern histogram differs after recovery"
+    );
+
+    // Phase 3 (serial screen at α/k), composed exactly as the coordinator
+    // composes it: the significant set must match the undisturbed run.
+    let k = p2.closed_total.max(1);
+    let significant = phase3_extract(&db, p1.min_sup, k, 0.05);
+    assert_eq!(significant.len(), serial.significant.len(), "significant set size differs");
+    for (a, b) in significant.iter().zip(&serial.significant) {
+        assert_eq!(a.items, b.items, "significant set differs after recovery");
+        assert!((a.p_value - b.p_value).abs() < 1e-12);
+    }
+    fleet.shutdown().expect("clean shutdown after recovery");
+}
+
+#[test]
+fn killed_worker_recovers_bit_identical_hub_unix() {
+    kill_mid_phase_and_verify(DataPlane::Hub, None);
+}
+
+#[test]
+fn killed_worker_recovers_bit_identical_mesh_unix() {
+    kill_mid_phase_and_verify(DataPlane::Mesh, None);
+}
+
+#[test]
+fn killed_worker_recovers_bit_identical_hub_tcp() {
+    kill_mid_phase_and_verify(DataPlane::Hub, Some(Endpoint::tcp("127.0.0.1", 0)));
+}
+
+#[test]
+fn killed_worker_recovers_bit_identical_mesh_tcp() {
+    kill_mid_phase_and_verify(DataPlane::Mesh, Some(Endpoint::tcp("127.0.0.1", 0)));
+}
+
+/// A worker killed *after* its last merge — the owner is off running the
+/// serial phase-3 screen, no distributed phase is active — must not cost
+/// a replay: the results stand, no mid-phase recovery runs, and shutdown
+/// absorbs the distinctive exit code.
+#[test]
+fn death_after_last_merge_is_absorbed_without_replay() {
+    let db = quickstart_db();
+    let serial = lamp_serial(&db, 0.05);
+    let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
+    // phase=1 arms the plan for epoch 1 (= phase 2); `after` is
+    // unreachable, so the mid-phase trigger never fires and the rank dies
+    // at the post-merge trigger instead — right after its phase-2 merge.
+    let cfg = ProcessConfig {
+        worker_exe: Some(parlamp_bin()),
+        spawn_timeout: Duration::from_secs(60),
+        fault: Some(FaultPlan { rank: 1, phase: 1, after: u64::MAX }),
+        ..ProcessConfig::paper_defaults(3, 42)
+    };
+    let mut fleet = ProcessFleet::spawn(&cfg).expect("spawn fleet");
+    let mut p1 =
+        fleet.run_phase(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg, 42).expect("phase 1");
+    p1.finalize_phase1(&rule);
+    let p2 = fleet
+        .run_phase(&db, RunMode::Count { min_sup: p1.min_sup }, &cfg, 43)
+        .expect("phase 2 completes although rank 1 dies after its merge");
+    assert_eq!(p1.lambda_final, serial.lambda_final);
+    assert_eq!(p2.closed_total, serial.correction_factor);
+    assert_eq!(p2.hist.counts(), serial_hist(&db, serial.min_sup).counts());
+    let significant = phase3_extract(&db, p1.min_sup, p2.closed_total.max(1), 0.05);
+    assert_eq!(significant.len(), serial.significant.len());
+    // The death postdates every contribution the run needed: no replay,
+    // no respawn — and the teardown tolerates exit code 86.
+    assert_eq!(fleet.respawns(), 0, "a post-merge death must not trigger recovery");
+    fleet.shutdown().expect("shutdown absorbs the injected exit code");
+}
+
+/// `parlamp serve` keeps its promise across a worker death: the in-flight
+/// job completes with serial-identical results, the daemon's warm fleet
+/// respawns exactly one rank, and shutdown still exits 0.
+#[test]
+fn daemon_finishes_in_flight_job_across_worker_death() {
+    let db = {
+        let spec = GwasSpec {
+            n_snps: 120,
+            n_individuals: 90,
+            n_pos: 24,
+            model: GeneticModel::Dominant,
+            maf_upper: 0.2,
+            ld_copy_prob: 0.25,
+            common_frac: 0.2,
+            planted: vec![(3, 0.9)],
+            seed: 47,
+        };
+        generate_gwas(&spec).0
+    };
+    let serial = lamp_serial(&db, 0.05);
+    let hist = {
+        let mut h = SupportHist::new(db.n_trans());
+        mine_closed(&db, serial.min_sup, |node, ms| {
+            h.record(node.support);
+            (Visit::Continue, ms)
+        });
+        h.sparse()
+    };
+
+    let dir = std::env::temp_dir().join(format!("parlamp-chaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("parlamp.sock");
+    let stderr_path = dir.join("serve.stderr");
+    let stderr_file = std::fs::File::create(&stderr_path).expect("create stderr capture");
+    // The daemon's stderr (hub recovery lines) and its workers' stderr
+    // (the fault's own line) both land in the capture file: workers
+    // inherit the daemon's stderr.
+    let child = Command::new(parlamp_bin())
+        .arg("serve")
+        .arg("--socket")
+        .arg(&socket)
+        .arg("--procs")
+        .arg("3")
+        .arg("--cache")
+        .arg("4")
+        .arg("--fault-inject")
+        .arg("rank=1,phase=0,after=1")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::from(stderr_file))
+        .spawn()
+        .expect("spawn parlamp serve with fault injection");
+    struct KillOnDrop(Option<Child>);
+    impl Drop for KillOnDrop {
+        fn drop(&mut self) {
+            if let Some(mut c) = self.0.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+    let mut guard = KillOnDrop(Some(child));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !socket.exists() {
+        assert!(Instant::now() < deadline, "daemon never bound its socket");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // One job; its phase 1 runs at epoch 0, where the armed rank dies. The
+    // job must still come back serial-identical.
+    let ep = Endpoint::unix(&socket);
+    let mut client = Client::connect(&ep).expect("connect to daemon");
+    let id = client.submit(JobSpec::new(db.clone(), 0.05)).expect("submit");
+    let outcome: JobOutcome = client.results(id).expect("job must finish across the death");
+    assert!(!outcome.from_cache);
+    assert_eq!(outcome.lambda_final, serial.lambda_final, "λ* differs across worker death");
+    assert_eq!(outcome.min_sup, serial.min_sup);
+    assert_eq!(outcome.correction_factor, serial.correction_factor);
+    assert_eq!(outcome.phase2_closed, serial.phase2_closed);
+    assert_eq!(outcome.hist2, hist, "phase-2 histogram differs across worker death");
+    assert_eq!(outcome.significant.len(), serial.significant.len());
+    for (a, b) in outcome.significant.iter().zip(&serial.significant) {
+        assert_eq!(a.items, b.items);
+        assert!((a.p_value - b.p_value).abs() < 1e-12);
+    }
+
+    // Graceful shutdown still works on the healed fleet.
+    client.shutdown().expect("shutdown ack");
+    let mut child = guard.0.take().expect("daemon still owned");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let status = loop {
+        if let Some(status) = child.try_wait().expect("poll daemon") {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "daemon did not exit after shutdown");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "daemon exit: {status}");
+
+    // Log shape: the fault fired (worker line), and the hub respawned
+    // exactly one rank — the plan never travels to a replacement.
+    let log = std::fs::read_to_string(&stderr_path).expect("read stderr capture");
+    assert!(
+        log.contains("fault injection firing"),
+        "worker fault line missing from daemon stderr:\n{log}"
+    );
+    assert_eq!(
+        log.matches("respawning rank 1").count(),
+        1,
+        "expected exactly one respawn of rank 1 in daemon stderr:\n{log}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Depth-first subtree mine from one node, recording the closed-set
+/// sequence (DFS order — stricter than set equality) and the work-unit
+/// clock the breakdown/DES layers charge.
+fn mine_subtree(db: &Database, node: SearchNode, min_sup: u32) -> (Vec<(Vec<Item>, u32)>, u64) {
+    let mut stack = vec![node];
+    let mut closed = Vec::new();
+    let mut units = 0u64;
+    let mut scratch = ExpandScratch::default();
+    while let Some(mut n) = stack.pop() {
+        closed.push((n.items.clone(), n.support));
+        units += expand(db, &mut n, min_sup, &mut scratch, &mut stack).units();
+    }
+    (closed, units)
+}
+
+/// Satellite property (DESIGN.md §12): shipping a `SearchNode` across the
+/// wire is lossless for mining. For random dense and sparse databases,
+/// every depth-1 subtree root is (a) mined in place with its occurrence
+/// cache warm, and (b) stripped, carried through a real encoded GIVE
+/// frame, rebuilt from the decoded [`WireTask`], and mined cold. The
+/// closed-set sequences must be identical, and two cold replays must
+/// agree on the work-unit clock — the property that makes a respawned
+/// rank's replayed phase bit-identical.
+#[test]
+fn shipped_search_nodes_re_expand_deterministically() {
+    forall_sized("shipped subtree replay is deterministic", 24, |rng, case| {
+        let n_trans = 20 + rng.index(40);
+        let n_items = 8 + rng.index(12);
+        // Even cases dense, odd cases sparse — both bitmap regimes.
+        let density = if case % 2 == 0 { 0.45 } else { 0.12 };
+        let trans: Vec<Vec<Item>> = (0..n_trans)
+            .map(|_| {
+                (0..n_items as Item).filter(|_| rng.bernoulli(density)).collect::<Vec<_>>()
+            })
+            .collect();
+        let labels: Vec<bool> = (0..n_trans).map(|_| rng.bernoulli(0.4)).collect();
+        let db = Database::from_transactions(n_items, &trans, &labels);
+        let min_sup = 1 + rng.index(3) as u32;
+
+        let mut root = SearchNode::root(&db);
+        let mut frontier = Vec::new();
+        expand(&db, &mut root, min_sup, &mut ExpandScratch::default(), &mut frontier);
+        for node in frontier {
+            let (local_closed, _) = mine_subtree(&db, node.clone(), min_sup);
+
+            // Ship it for real: strip the occurrence cache, ride an
+            // encoded GIVE frame, decode, rebuild with a cold cache.
+            let mut shipped = node.clone();
+            shipped.strip_for_wire();
+            let task = WireTask {
+                items: shipped.items.clone(),
+                core: shipped.core,
+                support: shipped.support,
+            };
+            let frame = Frame::PeerMsg {
+                src: 1,
+                epoch: 3,
+                msg: Msg::Basic { stamp: 0, kind: BasicKind::Give { tasks: vec![task] } },
+            };
+            let bytes = frame.encode();
+            let decoded = Frame::decode(&bytes[4..]).map_err(|e| format!("{e:#}"))?;
+            let t = match decoded {
+                Frame::PeerMsg {
+                    msg: Msg::Basic { kind: BasicKind::Give { mut tasks }, .. },
+                    ..
+                } => tasks.pop().ok_or("GIVE lost its task")?,
+                other => return Err(format!("GIVE decoded as {other:?}")),
+            };
+            let rebuilt =
+                SearchNode { items: t.items, core: t.core, support: t.support, occ: None };
+
+            let (a_closed, a_units) = mine_subtree(&db, rebuilt.clone(), min_sup);
+            let (b_closed, b_units) = mine_subtree(&db, rebuilt, min_sup);
+            if a_closed != local_closed {
+                return Err(format!(
+                    "shipped subtree mined a different closed sequence \
+                     (root {:?}): {} local vs {} shipped",
+                    node.items,
+                    local_closed.len(),
+                    a_closed.len()
+                ));
+            }
+            if a_closed != b_closed || a_units != b_units {
+                return Err(format!(
+                    "two replays of the same shipped subtree disagree \
+                     (root {:?}): {a_units} vs {b_units} units",
+                    node.items
+                ));
+            }
+        }
+        Ok(())
+    });
+}
