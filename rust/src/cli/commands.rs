@@ -17,7 +17,7 @@ use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
 use crate::net::Endpoint;
 use crate::par::{DataPlane, ProcessConfig, ProcessFleet};
-use crate::service::{print_join_commands, Client, ServeConfig};
+use crate::service::{print_join_commands, Client, QueueLimits, ServeConfig};
 use crate::util::fault::FaultPlan;
 use crate::util::table::Table;
 use crate::wire::service::{JobSpec, JobState};
@@ -493,9 +493,11 @@ pub fn cmd_scenarios(args: &Args) -> Result<()> {
 
 // ---- service subcommands (DESIGN.md §9) ------------------------------------
 
-/// `parlamp serve` — start the long-running mining daemon: warm worker
-/// fleet, FIFO job queue, bounded result cache. Blocks until `SHUTDOWN`
-/// or SIGTERM drains the queue.
+/// `parlamp serve` — start the long-running mining daemon: a pool of warm
+/// worker fleets (`--fleets`), a weighted-fair job queue with admission
+/// control, a bounded in-memory result cache, and an optional disk-backed
+/// persistent result store (`--store`). Blocks until `SHUTDOWN` or
+/// SIGTERM drains the queue.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let listen = endpoint_from_args(args)?;
     let hosts = hosts_from_args(args)?;
@@ -504,7 +506,25 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         None => args.get_usize("procs", 4)?,
     };
     let mut cfg = ServeConfig::new(listen, procs);
+    cfg.fleets = args.get_usize("fleets", 1)?;
+    anyhow::ensure!(cfg.fleets >= 1, "--fleets must be ≥ 1");
+    anyhow::ensure!(
+        cfg.fleets == 1 || hosts.is_none(),
+        "--fleets > 1 is incompatible with --hosts (remote attach assembles one fleet)"
+    );
     cfg.cache_cap = args.get_usize("cache", 32)?;
+    cfg.store = args.get("store").map(PathBuf::from);
+    cfg.limits = QueueLimits {
+        per_client_queued: args
+            .get_usize("client-depth", QueueLimits::default().per_client_queued)?,
+        global_queued: args.get_usize("queue-depth", QueueLimits::default().global_queued)?,
+        // By default one client may hold every fleet; lower it to reserve
+        // capacity for other clients under contention.
+        per_client_active: args.get_usize("client-slots", cfg.fleets)?,
+    };
+    anyhow::ensure!(cfg.limits.per_client_queued >= 1, "--client-depth must be ≥ 1");
+    anyhow::ensure!(cfg.limits.global_queued >= 1, "--queue-depth must be ≥ 1");
+    anyhow::ensure!(cfg.limits.per_client_active >= 1, "--client-slots must be ≥ 1");
     cfg.data_plane = data_plane_from_args(args)?;
     cfg.fleet_listen = match (args.get("fleet-listen"), transport_from_args(args)?, &hosts) {
         (Some(raw), _, _) => Some(raw.parse::<Endpoint>().context("--fleet-listen")?),
@@ -530,14 +550,21 @@ fn job_id(args: &Args) -> Result<u64> {
 }
 
 /// `parlamp submit` — submit a dataset to a running daemon; prints the
-/// assigned job id.
+/// assigned job id. `--priority` (0–255, default 1) orders jobs within
+/// one client; `--deadline-ms` expires the job if not dispatched in time;
+/// `--client NAME` names the fair-queue account (default `anon`).
 pub fn cmd_submit(args: &Args) -> Result<()> {
     let db = load_db(args)?;
+    let priority = args.get_u64("priority", 1)?;
+    anyhow::ensure!(priority <= u64::from(u8::MAX), "--priority must be ≤ 255");
     let spec = JobSpec {
         alpha: args.get_f64("alpha", crate::DEFAULT_ALPHA)?,
         glb: glb_from_args(args),
         screen: parse_screen(args)?,
         seed: args.get_u64("seed", 2015)?,
+        priority: priority as u8,
+        deadline_ms: args.get_u64("deadline-ms", 0)?,
+        client: args.get("client").unwrap_or("").to_string(),
         db,
     };
     let id = connect_client(args)?.submit(spec)?;
@@ -567,6 +594,27 @@ pub fn cmd_results(args: &Args) -> Result<()> {
     let res = outcome.to_lamp_result();
     println!("{}", res.summary());
     print_significant(&res.significant);
+    Ok(())
+}
+
+/// `parlamp cancel` — remove a still-pending job from the daemon's queue.
+pub fn cmd_cancel(args: &Args) -> Result<()> {
+    let id = job_id(args)?;
+    let state = connect_client(args)?.cancel(id)?;
+    println!("job {id}: {state}");
+    anyhow::ensure!(
+        state == JobState::Cancelled,
+        "job {id} was not pending (nothing to cancel)"
+    );
+    Ok(())
+}
+
+/// `parlamp stats` — print the daemon's operational counters: per-fleet
+/// utilization, per-client queue depths, cache/store counters, and job
+/// latency histograms.
+pub fn cmd_stats(args: &Args) -> Result<()> {
+    let stats = connect_client(args)?.stats()?;
+    print!("{stats}");
     Ok(())
 }
 

@@ -13,10 +13,15 @@
 //!                  | --check FILE | --compare A.json,B.json
 //! parlamp gendata  --scenario alz-dom-5 --out dir/
 //! parlamp scenarios
-//! parlamp serve    --endpoint unix:/run/parlamp.sock --procs 8 [--cache 32]
+//! parlamp serve    --endpoint unix:/run/parlamp.sock --procs 8
+//!                  [--fleets 2] [--cache 32] [--store results.plst]
+//!                  [--queue-depth N] [--client-depth N] [--client-slots N]
 //! parlamp submit   --endpoint tcp:127.0.0.1:7878 --data t.dat --labels t.lab
+//!                  [--priority P] [--deadline-ms MS] [--client NAME]
 //! parlamp status   --endpoint tcp:127.0.0.1:7878 --job 1
 //! parlamp results  --endpoint tcp:127.0.0.1:7878 --job 1
+//! parlamp cancel   --endpoint tcp:127.0.0.1:7878 --job 1
+//! parlamp stats    --endpoint tcp:127.0.0.1:7878
 //! parlamp shutdown --endpoint tcp:127.0.0.1:7878
 //! ```
 //!
@@ -59,6 +64,8 @@ pub fn run(argv: &[String]) -> i32 {
         "submit" => commands::cmd_submit(&args),
         "status" => commands::cmd_status(&args),
         "results" => commands::cmd_results(&args),
+        "cancel" => commands::cmd_cancel(&args),
+        "stats" => commands::cmd_stats(&args),
         "shutdown" => commands::cmd_shutdown(&args),
         // Hidden: the process-fabric child entry point. The parent engine
         // re-executes this binary as `parlamp __worker --connect ENDPOINT
@@ -104,15 +111,20 @@ USAGE:
   parlamp bench     --compare A.json,B.json  (or --compare A.json --with B.json)
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
-  parlamp serve     --endpoint EP [--procs P] [--cache N]
+  parlamp serve     --endpoint EP [--procs P] [--fleets N] [--cache N]
+                    [--store FILE] [--queue-depth N] [--client-depth N]
+                    [--client-slots N]
                     [--data-plane hub|mesh] [--transport unix|tcp]
                     [--hosts H1:P,..] [--fleet-listen EP]
                     [--fault-inject rank=R,phase=P,after=N]
   parlamp submit    --endpoint EP --data FILE --labels FILE [--alpha A]
                     [--naive] [--no-preprocess] [--screen native|xla|auto]
-                    [--seed S]
+                    [--seed S] [--priority P] [--deadline-ms MS]
+                    [--client NAME]
   parlamp status    --endpoint EP --job ID
   parlamp results   --endpoint EP --job ID
+  parlamp cancel    --endpoint EP --job ID
+  parlamp stats     --endpoint EP
   parlamp shutdown  --endpoint EP
 
 Endpoints (EP) are typed: `unix:<path>` or `tcp:<host>:<port>` (DESIGN.md
@@ -151,15 +163,22 @@ rank=R,phase=P,after=N` (lamp --engine process, serve) arms one
 deterministic worker death for chaos testing — rank R exits with code 86
 once phase epoch P has cost it N work units.
 
-`serve` starts the long-running mining daemon (DESIGN.md §9): the worker
-fleet spawns once and stays warm, jobs queue FIFO, and repeat submissions
-are answered from a bounded result cache keyed by (database digest, alpha,
-GLB parameters, screen). The daemon listens at `--endpoint` (Unix path or
-TCP port); `--transport tcp` (or `--hosts`) puts the fleet's own fabric on
+`serve` starts the long-running mining daemon (DESIGN.md §9 and §13): a
+pool of `--fleets` warm worker fleets mines queued jobs concurrently, a
+weighted-fair queue with per-client accounting picks what runs next
+(priorities, optional deadlines, typed `busy` rejections past
+`--queue-depth`/`--client-depth`), and repeat submissions are answered
+from a bounded result cache keyed by (database digest, alpha, GLB
+parameters, screen). `--store FILE` adds a disk-backed persistent result
+store behind the cache: results survive daemon restarts and are served
+without mining. The daemon listens at `--endpoint` (Unix path or TCP
+port); `--transport tcp` (or `--hosts`) puts the fleets' own fabric on
 TCP too, and `--fleet-listen` pins the fleet hub's address for off-host
 workers. `submit` prints the assigned job id; `results` blocks until the
 job finishes and prints the same summary + table as `lamp --engine
-serial`; `shutdown` (or SIGTERM) drains the queue, BYEs the fleet, and
-unlinks a Unix socket (TCP listeners leave nothing behind)."
+serial`; `stats` prints per-fleet utilization, per-client queue depths,
+cache/store counters, and latency histograms; `shutdown` (or SIGTERM)
+drains the queue, BYEs every fleet, and unlinks a Unix socket (TCP
+listeners leave nothing behind)."
         .to_string()
 }

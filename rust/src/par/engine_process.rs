@@ -149,6 +149,14 @@ impl ProcessConfig {
             None => self.p,
         }
     }
+
+    /// Copy of this config with fault injection disarmed. The serve
+    /// daemon's fleet pool arms an injected plan on fleet 0 only — every
+    /// other fleet (and every whole-fleet rebuild) spawns from this copy,
+    /// so a planned fault fires in exactly one place.
+    pub fn without_fault(&self) -> ProcessConfig {
+        ProcessConfig { fault: None, ..self.clone() }
+    }
 }
 
 /// Run one phase on `p` worker processes with the paper-default knobs.

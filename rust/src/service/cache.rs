@@ -84,7 +84,13 @@ impl ResultCache {
     /// with `from_cache = true`), evicting the least-recently-used entry
     /// at capacity.
     pub fn insert(&mut self, key: CacheKey, run: &CoordinatorRun) {
-        let outcome = Arc::new(JobOutcome::from_run(run, true));
+        self.insert_outcome(key, Arc::new(JobOutcome::from_run(run, true)));
+    }
+
+    /// Store an already-built outcome — the persistent store's warm-load
+    /// path ([`super::store`]), where the wire view was decoded from disk
+    /// rather than built from a live run. Counts neither hit nor miss.
+    pub fn insert_outcome(&mut self, key: CacheKey, outcome: Arc<JobOutcome>) {
         if self.map.insert(key, outcome).is_some() {
             self.touch(&key);
             return;

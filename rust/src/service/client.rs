@@ -1,11 +1,11 @@
 //! Client side of the `parlamp serve` protocol: connect, speak frames,
 //! surface typed results. Used by the `parlamp submit|status|results|
-//! shutdown` subcommands and by the integration tests.
+//! cancel|stats|shutdown` subcommands and by the integration tests.
 
 use anyhow::{bail, Context, Result};
 
 use crate::net::{dial, Endpoint, RetryPolicy, Stream};
-use crate::wire::service::{JobOutcome, JobSpec, JobState};
+use crate::wire::service::{JobOutcome, JobSpec, JobState, ServiceStats};
 use crate::wire::{read_frame, write_frame, Frame};
 
 /// One connection to a running daemon. A connection can carry any number
@@ -31,7 +31,11 @@ impl Client {
         read_frame(&mut self.stream)?.context("daemon closed the connection without replying")
     }
 
-    /// Submit a job; returns the assigned job id.
+    /// Submit a job; returns the assigned job id. A daemon at its
+    /// admission bounds replies with a `STATUS` carrying
+    /// [`JobState::Busy`]; that (and any other rejection, e.g. a deadline
+    /// already impossible or a draining daemon) surfaces here as an error
+    /// rendering the typed state.
     pub fn submit(&mut self, spec: JobSpec) -> Result<u64> {
         match self.call(&Frame::Submit(Box::new(spec)))? {
             Frame::Accepted { job_id } => Ok(job_id),
@@ -71,6 +75,15 @@ impl Client {
         match self.call(&Frame::Cancel { job_id })? {
             Frame::Status { job_id: got, report: Some(state) } if got == job_id => Ok(state),
             other => bail!("expected STATUS report from daemon, got {}", other.name()),
+        }
+    }
+
+    /// Fetch the daemon's operational counters: per-fleet utilization,
+    /// per-client queue depths, cache/store counters, latency histograms.
+    pub fn stats(&mut self) -> Result<ServiceStats> {
+        match self.call(&Frame::Stats { report: None })? {
+            Frame::Stats { report: Some(stats) } => Ok(*stats),
+            other => bail!("expected STATS report from daemon, got {}", other.name()),
         }
     }
 

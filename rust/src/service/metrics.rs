@@ -1,0 +1,190 @@
+//! Daemon-side counters behind the STATS frame (DESIGN.md §13).
+//!
+//! Everything here is plain data mutated under the server's existing
+//! `Shared` mutex — no atomics, no extra locks. `snapshot()` folds the
+//! counters together with queue depths and cache/store gauges into the
+//! wire-level [`ServiceStats`] report that `parlamp stats` renders.
+//!
+//! The daemon's deadline arithmetic also lives on this struct's clock:
+//! [`Metrics::now_ms`] is milliseconds since daemon start on a monotonic
+//! clock, the same timebase the fair queue's absolute deadlines use.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::wire::service::{ClientStats, FleetStats, ServiceStats};
+
+use super::queue::ClientDepth;
+
+/// Number of log₂ buckets in a latency histogram: bucket `i` counts
+/// samples in `[2^i, 2^(i+1))` ms (bucket 0 also takes 0 ms), bucket 19
+/// takes everything ≥ ~8.7 minutes.
+pub const HIST_BUCKETS: usize = 20;
+
+/// Fixed-size log₂ histogram of millisecond durations.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHist {
+    buckets: [u64; HIST_BUCKETS],
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, ms: u64) {
+        let idx = if ms == 0 { 0 } else { (63 - ms.leading_zeros()) as usize };
+        self.buckets[idx.min(HIST_BUCKETS - 1)] += 1;
+    }
+
+    pub fn to_vec(&self) -> Vec<u64> {
+        self.buckets.to_vec()
+    }
+}
+
+/// Per-fleet work accounting, indexed by fleet id.
+#[derive(Clone, Debug, Default)]
+pub struct FleetCounters {
+    pub jobs_mined: u64,
+    /// Wall-clock spent inside `mine()` — utilization = busy/uptime.
+    pub busy_ms: u64,
+    /// Worker ranks respawned in place mid-phase (PR-7 recovery).
+    pub respawns: u64,
+    /// Whole-fleet rebuilds after a poisoned run.
+    pub rebuilds: u64,
+}
+
+/// All daemon counters; lives inside the server's `Inner` state.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub jobs_submitted: u64,
+    pub jobs_mined: u64,
+    pub jobs_failed: u64,
+    pub jobs_rejected_busy: u64,
+    pub jobs_expired: u64,
+    pub jobs_cancelled: u64,
+    pub store_appends: u64,
+    /// LRU misses answered from the persistent store.
+    pub store_hits: u64,
+    /// Terminal job records dropped by the bounded history (was silent
+    /// before this PR — see `Inner::finish`).
+    pub evicted_records: u64,
+    /// Jobs submitted per client, over the daemon's lifetime.
+    pub submitted_by_client: BTreeMap<String, u64>,
+    pub fleets: Vec<FleetCounters>,
+    /// Submit → dispatch.
+    pub queue_wait: LatencyHist,
+    /// Submit → terminal state.
+    pub latency: LatencyHist,
+}
+
+impl Metrics {
+    pub fn new(n_fleets: usize) -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            jobs_submitted: 0,
+            jobs_mined: 0,
+            jobs_failed: 0,
+            jobs_rejected_busy: 0,
+            jobs_expired: 0,
+            jobs_cancelled: 0,
+            store_appends: 0,
+            store_hits: 0,
+            evicted_records: 0,
+            submitted_by_client: BTreeMap::new(),
+            fleets: vec![FleetCounters::default(); n_fleets],
+            queue_wait: LatencyHist::default(),
+            latency: LatencyHist::default(),
+        }
+    }
+
+    /// Milliseconds since daemon start (monotonic). The timebase for job
+    /// deadlines and all recorded durations.
+    pub fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Fold counters + live gauges into the wire report.
+    pub fn snapshot(
+        &self,
+        cache: (u64, u64, usize),
+        store_entries: usize,
+        depths: &[ClientDepth],
+    ) -> ServiceStats {
+        let (cache_hits, cache_misses, cache_entries) = cache;
+        let clients = depths
+            .iter()
+            .map(|d| ClientStats {
+                client: d.client.clone(),
+                queued: d.queued as u64,
+                active: d.active as u64,
+                submitted: self.submitted_by_client.get(&d.client).copied().unwrap_or(0),
+            })
+            .collect();
+        ServiceStats {
+            uptime_ms: self.now_ms(),
+            jobs_submitted: self.jobs_submitted,
+            jobs_mined: self.jobs_mined,
+            jobs_failed: self.jobs_failed,
+            jobs_rejected_busy: self.jobs_rejected_busy,
+            jobs_expired: self.jobs_expired,
+            jobs_cancelled: self.jobs_cancelled,
+            cache_hits,
+            cache_misses,
+            cache_entries: cache_entries as u64,
+            store_entries: store_entries as u64,
+            store_appends: self.store_appends,
+            store_hits: self.store_hits,
+            evicted_records: self.evicted_records,
+            fleets: self
+                .fleets
+                .iter()
+                .map(|f| FleetStats {
+                    jobs_mined: f.jobs_mined,
+                    busy_ms: f.busy_ms,
+                    respawns: f.respawns,
+                    rebuilds: f.rebuilds,
+                })
+                .collect(),
+            clients,
+            queue_wait_ms: self.queue_wait.to_vec(),
+            latency_ms: self.latency.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let mut h = LatencyHist::default();
+        for ms in [0, 1, 2, 3, 4, 7, 8, 1 << 19, u64::MAX] {
+            h.record(ms);
+        }
+        let v = h.to_vec();
+        assert_eq!(v[0], 2, "0 and 1 share bucket 0");
+        assert_eq!(v[1], 2, "2 and 3");
+        assert_eq!(v[2], 2, "4 and 7");
+        assert_eq!(v[3], 1, "8");
+        assert_eq!(v[19], 2, "2^19 and the overflow clamp");
+        assert_eq!(v.iter().sum::<u64>(), 9);
+    }
+
+    #[test]
+    fn snapshot_carries_depths_and_per_client_counts() {
+        let mut m = Metrics::new(2);
+        m.jobs_submitted = 3;
+        m.submitted_by_client.insert("a".into(), 3);
+        m.fleets[1].jobs_mined = 2;
+        let depths = vec![ClientDepth { client: "a".into(), queued: 1, active: 1 }];
+        let s = m.snapshot((5, 7, 4), 9, &depths);
+        assert_eq!(s.cache_hits, 5);
+        assert_eq!(s.cache_misses, 7);
+        assert_eq!(s.cache_entries, 4);
+        assert_eq!(s.store_entries, 9);
+        assert_eq!(s.fleets.len(), 2);
+        assert_eq!(s.fleets[1].jobs_mined, 2);
+        assert_eq!(s.clients.len(), 1);
+        assert_eq!(s.clients[0].submitted, 3);
+        assert_eq!(s.queue_wait_ms.len(), HIST_BUCKETS);
+    }
+}

@@ -1,5 +1,5 @@
-//! The serving layer (DESIGN.md §9): `parlamp` as a long-running mining
-//! service instead of a one-shot batch run.
+//! The serving layer (DESIGN.md §9 and §13): `parlamp` as a long-running
+//! mining service instead of a one-shot batch run.
 //!
 //! Every earlier entry point pays the full startup bill per request —
 //! spawn a worker fleet, handshake, ship the database, mine, tear down.
@@ -10,17 +10,26 @@
 //! lives:
 //!
 //! - [`server::serve`] — the daemon: binds a stream socket (`unix:` or
-//!   `tcp:`, DESIGN.md §11), spawns
-//!   the process-fabric worker fleet **once** ([`crate::par::ProcessFleet`])
-//!   and keeps it warm, schedules queued jobs one at a time across it, and
-//!   drains gracefully on `SHUTDOWN` or `SIGTERM`;
-//! - [`queue::JobQueue`] — the FIFO of pending jobs (`CANCEL` removes
-//!   exactly the targeted pending entry);
-//! - [`cache::ResultCache`] — a bounded LRU keyed by
+//!   `tcp:`, DESIGN.md §11), spawns a **pool** of warm worker fleets
+//!   ([`pool`], `--fleets N`) once and keeps them warm, schedules queued
+//!   jobs onto idle fleets concurrently, and drains gracefully on
+//!   `SHUTDOWN` or `SIGTERM`;
+//! - [`pool::FleetRunner`] — one fleet plus its rebuild logic: a fleet
+//!   poisoned by an unrecoverable failure is rebuilt through the fleet
+//!   recovery path (DESIGN.md §12) without draining the pool;
+//! - [`queue::FairQueue`] — the weighted-fair queue with per-client
+//!   accounting: admission control (typed [`queue::Busy`] rejections),
+//!   fairness slot caps, priorities, and deadlines;
+//! - [`cache::ResultCache`] — a bounded in-memory LRU keyed by
 //!   `(database digest, α, GlbParams, screen mode)`; a repeat submission
 //!   is answered without the workers receiving a single frame;
+//! - [`store::ResultStore`] — the disk-backed persistent result store
+//!   behind the LRU (`--store`): an append-only checksummed record log
+//!   that keeps the cache warm across daemon restarts;
+//! - [`metrics::Metrics`] — the counters behind the `STATS` frame
+//!   (per-fleet utilization, per-client depths, latency histograms);
 //! - [`client::Client`] — the typed client the `parlamp
-//!   submit|status|results|shutdown` subcommands drive.
+//!   submit|status|results|cancel|stats|shutdown` subcommands drive.
 //!
 //! The wire grammar of the job frames lives in [`crate::wire::service`];
 //! the daemon and its clients share [`crate::wire`]'s framing, bounds
@@ -28,10 +37,14 @@
 
 pub mod cache;
 pub mod client;
+pub mod metrics;
+pub mod pool;
 pub mod queue;
 pub mod server;
+pub mod store;
 
 pub use cache::{CacheKey, ResultCache};
 pub use client::Client;
-pub use queue::JobQueue;
+pub use queue::{Busy, ClientDepth, FairQueue, QueueLimits};
 pub use server::{print_join_commands, serve, ServeConfig};
+pub use store::ResultStore;

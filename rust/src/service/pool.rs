@@ -1,0 +1,121 @@
+//! The daemon's warm fleet pool (DESIGN.md §13).
+//!
+//! `serve --fleets N --procs P` owns N independent [`ProcessFleet`]s of P
+//! worker processes each. Jobs dispatch onto idle fleets concurrently —
+//! one runner thread per fleet pulls work from the shared fair queue, so
+//! two clients' jobs mine at the same time on different fleets and a long
+//! job never blocks the whole daemon.
+//!
+//! Fleet loss is contained per runner: a fleet whose run errors (a worker
+//! death the PR-7 in-place respawn could not absorb, a poisoned socket) is
+//! dropped — kill-on-drop reaps its processes — and rebuilt lazily before
+//! that runner's *next* job, without draining the queue or touching the
+//! other fleets. The failed job reports `Failed`; nothing else notices.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorRun};
+use crate::par::{ProcessConfig, ProcessFleet};
+use crate::wire::service::JobSpec;
+
+use super::print_join_commands;
+
+/// Spawn (or remote-attach) one fleet. Same path the single-fleet daemon
+/// always used: in remote attach mode the per-rank join commands print
+/// *before* the blocking wait, so the operator can start the workers.
+fn spawn_fleet(cfg: &ProcessConfig) -> Result<ProcessFleet> {
+    let pending = ProcessFleet::bind(cfg).context("bind fleet hub")?;
+    if let Some(hosts) = &cfg.remote_workers {
+        print_join_commands(&pending, hosts);
+    }
+    pending.await_workers().context("assemble warm worker fleet")
+}
+
+/// One fleet plus its rebuild configuration and work counters — the unit
+/// a runner thread owns exclusively (never shared, never locked).
+pub struct FleetRunner {
+    /// Index into the pool (the fleet id in STATS and logs).
+    pub idx: usize,
+    cfg: ProcessConfig,
+    /// `None` after a poisoned run, until the next job rebuilds it.
+    fleet: Option<ProcessFleet>,
+    /// In-place rank respawns accumulated by fleets this runner already
+    /// dropped (a live fleet's own count is added on top).
+    respawns_base: u64,
+    /// Whole-fleet rebuilds performed (poisoned → respawned).
+    rebuilds: u64,
+}
+
+impl FleetRunner {
+    /// Mine one job on this runner's fleet, rebuilding the fleet first if
+    /// the previous run poisoned it. On error the fleet is dropped
+    /// (kill-on-drop) so the next call starts from clean processes.
+    pub fn mine(&mut self, spec: &JobSpec) -> Result<CoordinatorRun> {
+        if self.fleet.is_none() {
+            // A rebuilt fleet never inherits a fault plan: the injected
+            // fault already fired once, which is the whole point.
+            self.fleet = Some(
+                spawn_fleet(&self.cfg.without_fault())
+                    .with_context(|| format!("rebuilding fleet {}", self.idx))?,
+            );
+            self.rebuilds += 1;
+        }
+        let fleet = self.fleet.as_mut().expect("fleet just ensured");
+        let coordinator = Coordinator::new(spec.alpha)
+            .with_glb(spec.glb)
+            .with_screen(spec.screen);
+        let run = coordinator.run_on_fleet(&spec.db, fleet, spec.seed);
+        if run.is_err() {
+            // Poison: drop the fleet now (reaping its processes) rather
+            // than handing the next job a wedged socket.
+            self.respawns_base += self.fleet.as_ref().map_or(0, |f| f.respawns());
+            self.fleet = None;
+        }
+        run.with_context(|| format!("mining on fleet {}", self.idx))
+    }
+
+    /// Worker ranks respawned *in place* by the fleet recovery path
+    /// (DESIGN.md §12), cumulative across this runner's whole life —
+    /// rebuilt fleets included.
+    pub fn respawns(&self) -> u64 {
+        self.respawns_base + self.fleet.as_ref().map_or(0, |f| f.respawns())
+    }
+
+    /// Whole-fleet rebuilds (distinct from in-place rank respawns).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Dismiss the fleet cleanly (BYE + join), if it is alive.
+    pub fn shutdown(mut self) -> Result<()> {
+        match self.fleet.take() {
+            Some(fleet) => fleet.shutdown(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Spawn the pool: `n` fleets, each from its own copy of `cfg`. All
+/// fleets spawn *before* the daemon accepts connections — a daemon that
+/// cannot mine must fail its startup, not its first job.
+///
+/// An injected fault plan arms **fleet 0 only** (deterministic chaos: the
+/// tests know exactly which fleet dies, and prove the others unaffected).
+/// The returned runners are meant to move into per-fleet threads; nothing
+/// in them is shared.
+pub fn spawn_pool(cfg: &ProcessConfig, n: usize) -> Result<Vec<FleetRunner>> {
+    let mut runners = Vec::with_capacity(n);
+    for idx in 0..n {
+        let fleet_cfg = if idx == 0 { cfg.clone() } else { cfg.without_fault() };
+        let fleet = spawn_fleet(&fleet_cfg)
+            .with_context(|| format!("spawning fleet {idx} of {n}"))?;
+        runners.push(FleetRunner {
+            idx,
+            cfg: fleet_cfg,
+            fleet: Some(fleet),
+            respawns_base: 0,
+            rebuilds: 0,
+        });
+    }
+    Ok(runners)
+}

@@ -1,138 +1,468 @@
-//! The daemon's FIFO job queue.
+//! The daemon's weighted-fair job queue (DESIGN.md §13).
 //!
-//! Deliberately minimal: job *records* (spec, state, outcome) live in the
-//! server's job table; the queue holds only the ids of jobs awaiting the
-//! scheduler, in submission order. `CANCEL` removes exactly the targeted
-//! pending id and nothing else — the property test below pins both the
-//! FIFO discipline and that surgical removal.
+//! PR 4's queue was a global FIFO: one greedy client could bury everyone
+//! else's jobs arbitrarily deep, nothing bounded queue growth, and a job
+//! had no way to say "useless after t". This queue replaces it with
+//! per-client accounting:
+//!
+//! - **Admission control**: a bounded number of queued jobs per client and
+//!   globally. An over-limit `SUBMIT` is rejected with a typed
+//!   [`Busy`] reply instead of growing the queue without bound.
+//! - **Weighted-fair selection**: each client carries a virtual-time
+//!   clock advanced by `SCALE / weight` per dispatched job; the eligible
+//!   client with the lowest clock goes next (start-time fair queueing).
+//!   A client that was idle has its clock caught up to the busiest
+//!   backlog's floor on re-arrival, so sleeping does not bank credit
+//!   beyond one scheduling round.
+//! - **Slot caps**: a client may hold at most `per_client_active` fleets
+//!   at once; its further jobs stay queued while others run, so no client
+//!   is starved while another holds more than its cap of the pool.
+//! - **Priorities + deadlines**: within one client, higher [`Entry`]
+//!   priority dispatches first and equal priorities dispatch in
+//!   submission order (FIFO-within-class). A job whose deadline passes
+//!   before dispatch is expired with a typed error, never run late.
+//!
+//! Every operation is a pure function of the queue state and the caller's
+//! clock (`now_ms`) — no hidden time reads — which is what lets
+//! `tests/scheduler.rs` drive it against a reference model over hundreds
+//! of randomized traces.
 
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
 
-/// FIFO queue of pending job ids.
-#[derive(Debug, Default)]
-pub struct JobQueue {
-    q: VecDeque<u64>,
+/// Virtual-time units charged per dispatch at weight 1 (`SCALE / weight`
+/// for heavier clients, so double weight = half the charge = twice the
+/// dispatch share).
+const SCALE: u64 = 1 << 20;
+
+/// Admission-control bounds. Defaults suit a small pool; the CLI exposes
+/// them as `serve --queue-depth / --client-depth / --client-slots`.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueLimits {
+    /// Max queued (not yet running) jobs per client.
+    pub per_client_queued: usize,
+    /// Max queued jobs across all clients.
+    pub global_queued: usize,
+    /// Max concurrently *running* jobs per client (fairness slot cap).
+    pub per_client_active: usize,
 }
 
-impl JobQueue {
-    pub fn new() -> JobQueue {
-        JobQueue::default()
+impl Default for QueueLimits {
+    fn default() -> QueueLimits {
+        QueueLimits { per_client_queued: 64, global_queued: 256, per_client_active: 1 }
+    }
+}
+
+/// Typed admission rejection: which bound was hit and where it stands.
+/// Carried to the client as a `JobState::Busy` STATUS payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Busy {
+    /// The submitting client's own queue is full.
+    Client { queued: usize, cap: usize },
+    /// The daemon-wide queue is full.
+    Global { queued: usize, cap: usize },
+}
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Busy::Client { queued, cap } => {
+                write!(f, "client queue full ({queued}/{cap} jobs queued)")
+            }
+            Busy::Global { queued, cap } => {
+                write!(f, "daemon queue full ({queued}/{cap} jobs queued)")
+            }
+        }
+    }
+}
+
+/// One queued job: id plus everything selection needs.
+#[derive(Clone, Debug)]
+struct Entry {
+    id: u64,
+    priority: u8,
+    /// Absolute expiry instant on the caller's `now_ms` clock; `None` =
+    /// no deadline.
+    deadline_at_ms: Option<u64>,
+    /// Global submission sequence — the FIFO-within-class tie-breaker.
+    seq: u64,
+}
+
+#[derive(Debug, Default)]
+struct ClientState {
+    /// Pending entries in submission order (`seq` ascending).
+    pending: Vec<Entry>,
+    /// Jobs currently dispatched to fleets.
+    active: usize,
+    /// Weighted-fair virtual clock (SCALE units).
+    vtime: u64,
+    /// Dispatch share weight (≥ 1); charged `SCALE / weight` per pop.
+    weight: u32,
+}
+
+impl ClientState {
+    fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active == 0
+    }
+}
+
+/// Per-client queue depths, for STATS.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientDepth {
+    pub client: String,
+    pub queued: usize,
+    pub active: usize,
+}
+
+/// The weighted-fair queue of pending job ids.
+#[derive(Debug)]
+pub struct FairQueue {
+    limits: QueueLimits,
+    clients: BTreeMap<String, ClientState>,
+    seq: u64,
+    total_pending: usize,
+}
+
+impl Default for FairQueue {
+    fn default() -> FairQueue {
+        FairQueue::new(QueueLimits::default())
+    }
+}
+
+impl FairQueue {
+    pub fn new(limits: QueueLimits) -> FairQueue {
+        FairQueue { limits, clients: BTreeMap::new(), seq: 0, total_pending: 0 }
     }
 
-    /// Append a job at the tail.
-    pub fn push(&mut self, id: u64) {
-        self.q.push_back(id);
+    /// Set a client's dispatch weight (default 1). Heavier clients are
+    /// charged less virtual time per job and so win a proportionally
+    /// larger share of pops under contention.
+    pub fn set_weight(&mut self, client: &str, weight: u32) {
+        self.clients.entry(client.to_string()).or_default().weight = weight.max(1);
     }
 
-    /// Take the next job to run (submission order).
+    /// Enqueue a job, or reject it with a typed [`Busy`] when an
+    /// admission bound is hit. `deadline_ms` is relative (0 = none);
+    /// `now_ms` is the caller's monotonic clock.
+    pub fn push(
+        &mut self,
+        client: &str,
+        id: u64,
+        priority: u8,
+        deadline_ms: u64,
+        now_ms: u64,
+    ) -> Result<(), Busy> {
+        if self.total_pending >= self.limits.global_queued {
+            return Err(Busy::Global {
+                queued: self.total_pending,
+                cap: self.limits.global_queued,
+            });
+        }
+        let queued = self.clients.get(client).map_or(0, |c| c.pending.len());
+        if queued >= self.limits.per_client_queued {
+            return Err(Busy::Client { queued, cap: self.limits.per_client_queued });
+        }
+        // A returning idle client catches its virtual clock up to the
+        // floor of the currently-busy clients, so idling never banks more
+        // than one round of credit. Computed before the borrow below.
+        let floor = self
+            .clients
+            .iter()
+            .filter(|(name, c)| name.as_str() != client && !c.is_idle())
+            .map(|(_, c)| c.vtime)
+            .min();
+        let state = self.clients.entry(client.to_string()).or_default();
+        if state.is_idle() {
+            if let Some(floor) = floor {
+                state.vtime = state.vtime.max(floor);
+            }
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        state.pending.push(Entry {
+            id,
+            priority,
+            deadline_at_ms: (deadline_ms > 0).then(|| now_ms.saturating_add(deadline_ms)),
+            seq,
+        });
+        self.total_pending += 1;
+        Ok(())
+    }
+
+    /// Remove and return every pending job whose deadline has passed
+    /// (`now_ms` strictly beyond `deadline_at`). Call before [`pop`]
+    /// so an expired job is never dispatched.
+    ///
+    /// [`pop`]: FairQueue::pop
+    pub fn expire(&mut self, now_ms: u64) -> Vec<u64> {
+        let mut expired = Vec::new();
+        for state in self.clients.values_mut() {
+            state.pending.retain(|e| {
+                let dead = e.deadline_at_ms.is_some_and(|at| now_ms > at);
+                if dead {
+                    expired.push(e.id);
+                }
+                e.deadline_at_ms.is_none() || !dead
+            });
+        }
+        self.total_pending -= expired.len();
+        // Ids in global submission order so the report is deterministic.
+        expired.sort_unstable();
+        expired
+    }
+
+    /// Dispatch the next job: among clients with pending work and a free
+    /// slot, the lowest virtual clock wins (client name breaks ties);
+    /// within the winner, highest priority first, submission order within
+    /// a priority class. Returns `None` when no client is eligible —
+    /// which can happen with jobs still pending, if every backlogged
+    /// client is at its slot cap.
     pub fn pop(&mut self) -> Option<u64> {
-        self.q.pop_front()
+        let winner = self
+            .clients
+            .iter()
+            .filter(|(_, c)| !c.pending.is_empty() && c.active < self.limits.per_client_active)
+            .min_by_key(|(name, c)| (c.vtime, name.as_str()))
+            .map(|(name, _)| name.clone())?;
+        let state = self.clients.get_mut(&winner).expect("winner exists");
+        let best = state
+            .pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (std::cmp::Reverse(e.priority), e.seq))
+            .map(|(i, _)| i)
+            .expect("winner has pending work");
+        let entry = state.pending.remove(best);
+        state.active += 1;
+        state.vtime += SCALE / u64::from(state.weight.max(1));
+        self.total_pending -= 1;
+        Some(entry.id)
+    }
+
+    /// Release a client's slot once its dispatched job reaches a terminal
+    /// state (done, failed, or the fleet died under it).
+    pub fn complete(&mut self, client: &str) {
+        if let Some(state) = self.clients.get_mut(client) {
+            state.active = state.active.saturating_sub(1);
+        }
     }
 
     /// Remove a pending job. Returns whether it was present; every other
     /// entry keeps its relative order.
     pub fn cancel(&mut self, id: u64) -> bool {
-        match self.q.iter().position(|&x| x == id) {
-            Some(i) => {
-                let _ = self.q.remove(i);
-                true
+        for state in self.clients.values_mut() {
+            if let Some(i) = state.pending.iter().position(|e| e.id == id) {
+                state.pending.remove(i);
+                self.total_pending -= 1;
+                return true;
             }
-            None => false,
         }
+        false
     }
 
-    /// 0-based distance from the head (0 = next to run).
+    /// Estimated dispatch position (0 = among the next to run): the number
+    /// of pending jobs that order before this one by (priority, seq). The
+    /// true dispatch order also depends on fairness clocks and slot
+    /// releases, so this is a display estimate, not a promise.
     pub fn position(&self, id: u64) -> Option<usize> {
-        self.q.iter().position(|&x| x == id)
+        let target = self
+            .clients
+            .values()
+            .flat_map(|c| c.pending.iter())
+            .find(|e| e.id == id)?;
+        let ahead = self
+            .clients
+            .values()
+            .flat_map(|c| c.pending.iter())
+            .filter(|e| {
+                e.priority > target.priority
+                    || (e.priority == target.priority && e.seq < target.seq)
+            })
+            .count();
+        Some(ahead)
     }
 
+    /// Total pending (queued, not running) jobs.
     pub fn len(&self) -> usize {
-        self.q.len()
+        self.total_pending
     }
 
     pub fn is_empty(&self) -> bool {
-        self.q.is_empty()
+        self.total_pending == 0
+    }
+
+    /// Total jobs currently dispatched to fleets.
+    pub fn active_total(&self) -> usize {
+        self.clients.values().map(|c| c.active).sum()
+    }
+
+    /// Per-client depths (clients that ever submitted), name order.
+    pub fn depths(&self) -> Vec<ClientDepth> {
+        self.clients
+            .iter()
+            .map(|(client, c)| ClientDepth {
+                client: client.clone(),
+                queued: c.pending.len(),
+                active: c.active,
+            })
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::propcheck::forall;
+
+    fn q(per_client_active: usize) -> FairQueue {
+        FairQueue::new(QueueLimits {
+            per_client_queued: 4,
+            global_queued: 8,
+            per_client_active,
+        })
+    }
 
     #[test]
-    fn fifo_and_position() {
-        let mut q = JobQueue::new();
-        assert!(q.is_empty());
-        q.push(10);
-        q.push(11);
-        q.push(12);
-        assert_eq!(q.len(), 3);
-        assert_eq!(q.position(11), Some(1));
-        assert_eq!(q.pop(), Some(10));
-        assert_eq!(q.position(11), Some(0));
-        assert_eq!(q.pop(), Some(11));
-        assert_eq!(q.pop(), Some(12));
+    fn fifo_within_one_client_and_priority_first() {
+        let mut q = q(8);
+        q.push("a", 1, 1, 0, 0).unwrap();
+        q.push("a", 2, 1, 0, 0).unwrap();
+        q.push("a", 3, 2, 0, 0).unwrap(); // higher priority, submitted last
+        q.push("a", 4, 1, 0, 0).unwrap();
+        assert_eq!(q.pop(), Some(3), "priority beats submission order");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
         assert_eq!(q.pop(), None);
     }
 
-    /// Random interleavings of push/cancel/pop against a model `Vec`:
-    /// FIFO order is preserved, and cancel removes exactly the targeted
-    /// pending job (present → removed and true; absent → false and
-    /// untouched).
     #[test]
-    fn queue_matches_model_under_random_ops() {
-        forall("job queue vs model", 128, |rng| {
-            let mut q = JobQueue::new();
-            let mut model: Vec<u64> = Vec::new();
-            let mut next_id = 0u64;
-            for _ in 0..rng.index(64) {
-                match rng.index(4) {
-                    // push (weighted: half the ops)
-                    0 | 1 => {
-                        q.push(next_id);
-                        model.push(next_id);
-                        next_id += 1;
-                    }
-                    // pop
-                    2 => {
-                        let want = if model.is_empty() { None } else { Some(model.remove(0)) };
-                        if q.pop() != want {
-                            return Err(format!("pop mismatch, want {want:?}"));
-                        }
-                    }
-                    // cancel a random id — sometimes pending, sometimes
-                    // already popped or never issued
-                    _ => {
-                        let id = rng.below(next_id.max(1) + 2);
-                        let want = model.iter().position(|&x| x == id);
-                        if let Some(i) = want {
-                            model.remove(i);
-                        }
-                        if q.cancel(id) != want.is_some() {
-                            return Err(format!("cancel({id}) presence mismatch"));
-                        }
-                    }
-                }
-                if q.len() != model.len() {
-                    return Err(format!("len {} != model {}", q.len(), model.len()));
-                }
-                for (i, &id) in model.iter().enumerate() {
-                    if q.position(id) != Some(i) {
-                        return Err(format!("order drift at {i} (id {id})"));
-                    }
-                }
-            }
-            // Drain: remaining pops must replay the model exactly.
-            for &id in &model {
-                if q.pop() != Some(id) {
-                    return Err(format!("drain mismatch at id {id}"));
-                }
-            }
-            if q.pop().is_some() {
-                return Err("queue not empty after drain".into());
-            }
-            Ok(())
+    fn fair_interleave_across_clients() {
+        let mut q = q(8);
+        for id in 1..=3 {
+            q.push("a", id, 1, 0, 0).unwrap();
+        }
+        for id in 11..=13 {
+            q.push("b", id, 1, 0, 0).unwrap();
+        }
+        // Equal clocks: the name tie-break starts with a, then strict
+        // alternation — neither client gets two pops in a row while the
+        // other has work.
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![1, 11, 2, 12, 3, 13]);
+    }
+
+    #[test]
+    fn weight_doubles_share() {
+        let mut q = q(8);
+        q.set_weight("heavy", 2);
+        for id in 1..=4 {
+            q.push("heavy", id, 1, 0, 0).unwrap();
+        }
+        for id in 11..=12 {
+            q.push("light", id, 1, 0, 0).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        // weight 2 charges half per pop: heavy dispatches twice per light
+        // dispatch (ties by name: "heavy" < "light").
+        assert_eq!(order, vec![1, 2, 11, 3, 4, 12]);
+    }
+
+    #[test]
+    fn slot_cap_blocks_until_complete() {
+        let mut q = q(1);
+        q.push("a", 1, 1, 0, 0).unwrap();
+        q.push("a", 2, 1, 0, 0).unwrap();
+        q.push("b", 3, 1, 0, 0).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        // a is at its cap: b runs next even though a submitted first.
+        assert_eq!(q.pop(), Some(3));
+        // Both at cap now: job 2 must wait for a slot release.
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.len(), 1);
+        q.complete("a");
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn admission_caps_reject_with_typed_busy() {
+        let mut q = FairQueue::new(QueueLimits {
+            per_client_queued: 2,
+            global_queued: 3,
+            per_client_active: 1,
         });
+        q.push("a", 1, 1, 0, 0).unwrap();
+        q.push("a", 2, 1, 0, 0).unwrap();
+        assert_eq!(q.push("a", 3, 1, 0, 0), Err(Busy::Client { queued: 2, cap: 2 }));
+        q.push("b", 4, 1, 0, 0).unwrap();
+        assert_eq!(q.push("b", 5, 1, 0, 0), Err(Busy::Global { queued: 3, cap: 3 }));
+        // Draining one entry reopens admission.
+        assert_eq!(q.pop(), Some(1));
+        q.push("b", 5, 1, 0, 0).unwrap();
+    }
+
+    #[test]
+    fn deadlines_expire_before_dispatch() {
+        let mut q = q(8);
+        q.push("a", 1, 1, 100, 1000).unwrap(); // expires after t=1100
+        q.push("a", 2, 1, 0, 1000).unwrap(); // no deadline
+        assert_eq!(q.expire(1100), Vec::<u64>::new(), "deadline instant itself still valid");
+        assert_eq!(q.expire(1101), vec![1]);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancel_and_position() {
+        let mut q = q(8);
+        q.push("a", 1, 1, 0, 0).unwrap();
+        q.push("b", 2, 2, 0, 0).unwrap();
+        q.push("a", 3, 1, 0, 0).unwrap();
+        // Priority-2 job 2 orders before both priority-1 jobs.
+        assert_eq!(q.position(2), Some(0));
+        assert_eq!(q.position(1), Some(1));
+        assert_eq!(q.position(3), Some(2));
+        assert!(q.cancel(1));
+        assert!(!q.cancel(1), "already removed");
+        assert!(!q.cancel(99), "never queued");
+        assert_eq!(q.position(3), Some(1));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn idle_client_does_not_bank_credit() {
+        let mut q = q(8);
+        // a dispatches 3 jobs while b is absent.
+        for id in 1..=3 {
+            q.push("a", id, 1, 0, 0).unwrap();
+        }
+        assert_eq!((q.pop(), q.pop(), q.pop()), (Some(1), Some(2), Some(3)));
+        for c in ["a", "a", "a"] {
+            q.complete(c);
+        }
+        // b arrives with a backlog; its clock catches up to a's — it does
+        // NOT get 3 consecutive pops of "owed" service.
+        q.push("a", 4, 1, 0, 0).unwrap();
+        q.push("a", 5, 1, 0, 0).unwrap();
+        q.push("b", 11, 1, 0, 0).unwrap();
+        q.push("b", 12, 1, 0, 0).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![4, 11, 5, 12]);
+    }
+
+    #[test]
+    fn depths_report_queued_and_active() {
+        let mut q = q(2);
+        q.push("a", 1, 1, 0, 0).unwrap();
+        q.push("a", 2, 1, 0, 0).unwrap();
+        q.push("b", 3, 1, 0, 0).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        let depths = q.depths();
+        assert_eq!(
+            depths,
+            vec![
+                ClientDepth { client: "a".into(), queued: 1, active: 1 },
+                ClientDepth { client: "b".into(), queued: 1, active: 0 },
+            ]
+        );
+        assert_eq!(q.active_total(), 1);
     }
 }

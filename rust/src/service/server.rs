@@ -1,23 +1,31 @@
-//! The `parlamp serve` daemon (DESIGN.md §9).
+//! The `parlamp serve` daemon (DESIGN.md §9 and §13).
 //!
-//! One process owns a warm [`ProcessFleet`] for its whole lifetime and
-//! answers job frames over a stream socket — Unix-domain by default, TCP
-//! when `--endpoint tcp:host:port` says so (DESIGN.md §11):
+//! One process owns a **pool** of warm [`ProcessFleet`]s for its whole
+//! lifetime and answers job frames over a stream socket — Unix-domain by
+//! default, TCP when `--endpoint tcp:host:port` says so (DESIGN.md §11):
 //!
 //! - a **listener thread** accepts client connections and spawns one
 //!   handler thread per connection;
 //! - handler threads translate frames into operations on the shared state
-//!   (submit → job table + FIFO queue, status/result/cancel → job table)
-//!   and block `RESULT` replies until the job is terminal;
-//! - the **scheduler** (the thread that called [`serve`]) pops the queue
-//!   and runs one mining job at a time across the warm fleet via
-//!   [`Coordinator::run_on_fleet`] — re-shipping the database to the
-//!   workers only when its digest changes, and skipping the fleet entirely
-//!   on a result-cache hit.
+//!   (submit → admission control + fair queue, status/result/cancel/stats
+//!   → job table) and block `RESULT` replies until the job is terminal;
+//! - one **runner thread per fleet** pulls the next eligible job from the
+//!   weighted-fair queue ([`super::queue`]) and mines it via
+//!   [`crate::coordinator::Coordinator::run_on_fleet`] — so `--fleets N`
+//!   mines N jobs concurrently, and a fleet poisoned by an unrecoverable
+//!   failure is rebuilt by its own runner without draining the pool.
+//!
+//! Results are answered from three layers, cheapest first: the in-memory
+//! LRU ([`super::cache`]), the disk-backed persistent store
+//! ([`super::store`], when `--store` is given — loaded at startup so a
+//! restart keeps the cache warm), and finally the fleets. The `STATS`
+//! frame ([`crate::wire::service::ServiceStats`]) exposes per-fleet
+//! utilization, per-client queue depths, cache/store counters, and
+//! latency histograms.
 //!
 //! Shutdown (a `SHUTDOWN` frame or `SIGTERM`/`SIGINT`) is graceful: new
-//! submissions are rejected, the queue drains, the fleet gets its `BYE`,
-//! and the socket is unlinked before [`serve`] returns.
+//! submissions are rejected, the queue drains, every fleet gets its
+//! `BYE`, and the socket is unlinked before [`serve`] returns.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -26,16 +34,18 @@ use std::time::Duration;
 
 use anyhow::{Context as _, Result};
 
-use crate::coordinator::Coordinator;
 use crate::net::{Endpoint, Listener, Stream};
-use crate::par::{DataPlane, PendingFleet, ProcessConfig, ProcessFleet};
+use crate::par::{DataPlane, PendingFleet, ProcessConfig};
 use crate::util::fault::FaultPlan;
 use crate::util::sig;
 use crate::wire::service::{JobOutcome, JobSpec, JobState};
 use crate::wire::{read_frame, write_frame, Frame};
 
 use super::cache::{CacheKey, ResultCache};
-use super::queue::JobQueue;
+use super::metrics::Metrics;
+use super::pool::{spawn_pool, FleetRunner};
+use super::queue::{FairQueue, QueueLimits};
+use super::store::ResultStore;
 
 /// Knobs of one daemon instance.
 #[derive(Clone, Debug)]
@@ -45,30 +55,41 @@ pub struct ServeConfig {
     /// daemon refuses to start if the path already exists; a TCP listener
     /// leaves nothing on disk.
     pub listen: Endpoint,
-    /// Warm fleet size (worker processes).
+    /// Worker processes per fleet.
     pub procs: usize,
+    /// Warm fleets in the pool (`--fleets`, ≥ 1). Each fleet gets its own
+    /// runner thread; jobs from different clients mine concurrently.
+    pub fleets: usize,
     /// Result-cache capacity (entries).
     pub cache_cap: usize,
+    /// Persistent result store path (`--store`); `None` = memory only.
+    /// Loaded at startup, so a restarted daemon answers previously-mined
+    /// jobs from disk without running a single fleet phase.
+    pub store: Option<PathBuf>,
+    /// Admission-control bounds and the per-client fairness slot cap.
+    pub limits: QueueLimits,
     /// Worker executable override (tests; `None` = this binary).
     pub worker_exe: Option<PathBuf>,
     /// Fleet spawn/handshake timeout.
     pub spawn_timeout: Duration,
-    /// Data plane of the warm fleet (`--data-plane hub|mesh`, DESIGN.md
+    /// Data plane of the warm fleets (`--data-plane hub|mesh`, DESIGN.md
     /// §10). A daemon property like the fleet size: the mesh peer links
     /// are opened lazily and then kept warm across jobs, so a stream of
     /// steal-heavy jobs pays the connect cost once.
     pub data_plane: DataPlane,
-    /// Where the fleet *hub* listens (`--transport tcp` maps to
-    /// `Some(tcp:127.0.0.1:0)`); `None` = a fresh per-fleet Unix socket.
+    /// Where the fleet *hubs* listen (`--transport tcp` maps to
+    /// `Some(tcp:127.0.0.1:0)` — port 0, so each fleet binds its own
+    /// ephemeral port); `None` = a fresh per-fleet Unix socket.
     pub fleet_listen: Option<Endpoint>,
     /// Remote attach mode (`--hosts`): the daemon spawns no local workers
     /// and instead prints join commands for `len()` externally-launched
-    /// ones (see [`crate::par::engine_process`]).
+    /// ones (see [`crate::par::engine_process`]). Incompatible with
+    /// `fleets > 1` — one set of operators attaches one fleet.
     pub remote_workers: Option<Vec<Endpoint>>,
     /// Deterministic fault injection (`--fault-inject`, DESIGN.md §12):
     /// kill the named worker at the planned point of the fleet's lifetime.
-    /// The chaos suite uses it to prove an in-flight job survives a worker
-    /// death; the respawned replacement never inherits the plan.
+    /// Arms **fleet 0 only**, so the chaos suite knows exactly which fleet
+    /// dies and can prove the others unaffected.
     pub fault: Option<FaultPlan>,
 }
 
@@ -77,7 +98,10 @@ impl ServeConfig {
         ServeConfig {
             listen,
             procs,
+            fleets: 1,
             cache_cap: 32,
+            store: None,
+            limits: QueueLimits::default(),
             worker_exe: None,
             spawn_timeout: Duration::from_secs(30),
             data_plane: DataPlane::Mesh,
@@ -89,53 +113,94 @@ impl ServeConfig {
 }
 
 /// A job's lifecycle record. The spec (and its database) is dropped the
-/// moment the scheduler takes the job, so queued-but-not-yet-run jobs are
-/// the only ones holding database memory.
+/// moment a runner takes the job, so queued-but-not-yet-run jobs are the
+/// only ones holding database memory. Non-terminal records carry the
+/// submitting client (for slot release) and the submit instant on the
+/// metrics clock (for the latency histograms).
 enum Record {
-    Queued { spec: Box<JobSpec>, key: CacheKey },
-    Running,
+    Queued { spec: Box<JobSpec>, key: CacheKey, client: String, submitted_ms: u64 },
+    Running { client: String, submitted_ms: u64 },
     Done { outcome: JobOutcome },
     Failed { reason: String },
     Cancelled,
+    Expired,
 }
 
-/// How many *terminal* job records (done/failed/cancelled) the daemon
-/// retains for STATUS/RESULT queries. Older ones are evicted oldest-first
-/// and report `not found` afterwards — without a bound, a long-running
-/// daemon would leak one record (outcome included) per submission forever.
+/// How many *terminal* job records (done/failed/cancelled/expired) the
+/// daemon retains for STATUS/RESULT queries. Older ones are evicted
+/// oldest-first and report `not found` afterwards — without a bound, a
+/// long-running daemon would leak one record (outcome included) per
+/// submission forever. Evictions are counted in STATS
+/// (`evicted_records`) and announced once in the log.
 const JOB_HISTORY_CAP: usize = 1024;
 
 struct Inner {
     next_id: u64,
-    queue: JobQueue,
+    queue: FairQueue,
     jobs: HashMap<u64, Record>,
     /// Terminal job ids, oldest first, for [`JOB_HISTORY_CAP`] eviction.
     finished: std::collections::VecDeque<u64>,
     cache: ResultCache,
+    store: Option<ResultStore>,
+    metrics: Metrics,
     /// Shutdown requested: reject new submissions, finish the queue, exit.
     draining: bool,
-    /// The scheduler has exited (result waiters must not block forever).
+    /// All runners have exited (result waiters must not block forever).
     done: bool,
-    jobs_mined: u64,
 }
 
 impl Inner {
-    /// Record a job's terminal state and evict the oldest terminal records
-    /// beyond [`JOB_HISTORY_CAP`]. Queued/running jobs are never evicted.
+    /// Record a job's terminal state, feed the latency histogram, and
+    /// evict the oldest terminal records beyond [`JOB_HISTORY_CAP`].
+    /// Queued/running jobs are never evicted.
     fn finish(&mut self, id: u64, record: Record) {
+        let now = self.metrics.now_ms();
+        if let Some(
+            Record::Queued { submitted_ms, .. } | Record::Running { submitted_ms, .. },
+        ) = self.jobs.get(&id)
+        {
+            self.metrics.latency.record(now.saturating_sub(*submitted_ms));
+        }
         self.jobs.insert(id, record);
         self.finished.push_back(id);
         while self.finished.len() > JOB_HISTORY_CAP {
             if let Some(old) = self.finished.pop_front() {
                 self.jobs.remove(&old);
+                if self.metrics.evicted_records == 0 {
+                    eprintln!(
+                        "parlamp serve: job history cap ({JOB_HISTORY_CAP}) reached; \
+                         evicting oldest terminal records (count in STATS)"
+                    );
+                }
+                self.metrics.evicted_records += 1;
             }
+        }
+    }
+
+    /// Layered result lookup: LRU first, then the persistent store (a
+    /// disk hit is promoted into the LRU).
+    fn lookup(&mut self, key: &CacheKey) -> Option<Arc<JobOutcome>> {
+        if let Some(outcome) = self.cache.get(key) {
+            return Some(outcome);
+        }
+        let outcome = self.store.as_ref()?.get(key)?;
+        self.metrics.store_hits += 1;
+        self.cache.insert_outcome(*key, Arc::clone(&outcome));
+        Some(outcome)
+    }
+
+    /// Poll the signal latch into the draining flag.
+    fn poll_signals(&mut self) {
+        if sig::terminate_requested() && !self.draining {
+            self.draining = true;
+            println!("parlamp serve: signal received, draining queue");
         }
     }
 }
 
 struct Shared {
     inner: Mutex<Inner>,
-    /// Signals queue arrivals (scheduler) and job completions (waiters).
+    /// Signals queue arrivals (runners) and job completions (waiters).
     wake: Condvar,
 }
 
@@ -159,17 +224,6 @@ impl Drop for SocketGuard {
     }
 }
 
-/// Spawn (or remote-attach) the daemon's warm fleet. In remote attach
-/// mode the per-rank join commands are printed *before* the blocking wait,
-/// so the operator can start the workers on their hosts.
-fn spawn_fleet(fleet_cfg: &ProcessConfig) -> Result<ProcessFleet> {
-    let pending = ProcessFleet::bind(fleet_cfg).context("bind fleet hub")?;
-    if let Some(hosts) = &fleet_cfg.remote_workers {
-        print_join_commands(&pending, hosts);
-    }
-    pending.await_workers().context("assemble warm worker fleet")
-}
-
 /// Print one copy-pasteable `parlamp __worker` join command per rank —
 /// shared by `serve` and the `lamp --hosts` launcher path.
 pub fn print_join_commands(pending: &PendingFleet, hosts: &[Endpoint]) {
@@ -187,15 +241,21 @@ pub fn print_join_commands(pending: &PendingFleet, hosts: &[Endpoint]) {
     }
 }
 
-/// Run the daemon: spawn the fleet, listen on `cfg.listen`, schedule jobs
-/// until a `SHUTDOWN` frame or `SIGTERM`/`SIGINT` drains the queue.
-/// Returns after the fleet was dismissed and any Unix socket unlinked.
+/// Run the daemon: spawn the fleet pool, load the persistent store,
+/// listen on `cfg.listen`, schedule jobs until a `SHUTDOWN` frame or
+/// `SIGTERM`/`SIGINT` drains the queue. Returns after every fleet was
+/// dismissed and any Unix socket unlinked.
 pub fn serve(cfg: &ServeConfig) -> Result<()> {
-    // SIGTERM/SIGINT latch into an atomic flag the scheduler polls; the
+    // SIGTERM/SIGINT latch into an atomic flag the runners poll; the
     // worker processes ignore terminal SIGINT themselves (see util::sig),
-    // so a Ctrl-C drain finishes the in-flight job instead of killing the
-    // fleet under it.
+    // so a Ctrl-C drain finishes the in-flight jobs instead of killing
+    // the fleets under them.
     sig::install_terminate_latch();
+    anyhow::ensure!(cfg.fleets >= 1, "serve needs at least one fleet");
+    anyhow::ensure!(
+        cfg.fleets == 1 || cfg.remote_workers.is_none(),
+        "--fleets > 1 is incompatible with --hosts (remote attach assembles one fleet)"
+    );
     let fleet_cfg = ProcessConfig {
         worker_exe: cfg.worker_exe.clone(),
         spawn_timeout: cfg.spawn_timeout,
@@ -205,14 +265,36 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         fault: cfg.fault,
         ..ProcessConfig::paper_defaults(cfg.procs, 2015)
     };
-    // Fleet first: a daemon that cannot mine should fail before it starts
-    // accepting submissions.
-    let mut fleet = Some(spawn_fleet(&fleet_cfg)?);
+    // Fleets first: a daemon that cannot mine should fail before it
+    // starts accepting submissions.
+    let runners = spawn_pool(&fleet_cfg, cfg.fleets)?;
     println!(
-        "parlamp serve: fleet of {} worker processes warm ({} data plane)",
+        "parlamp serve: {} fleet(s) of {} worker processes warm ({} data plane)",
+        cfg.fleets,
         fleet_cfg.world_size(),
         cfg.data_plane.name()
     );
+
+    // Persistent store: open, recover, and warm the LRU from the most
+    // recent records so a restart serves repeats without mining.
+    let mut cache = ResultCache::new(cfg.cache_cap);
+    let store = match &cfg.store {
+        None => None,
+        Some(path) => {
+            let store = ResultStore::open(path)?;
+            let warm = store.recent(cfg.cache_cap);
+            let loaded = warm.len();
+            for (key, outcome) in warm {
+                cache.insert_outcome(key, outcome);
+            }
+            println!(
+                "parlamp serve: result store {} ({} record(s), {loaded} preloaded)",
+                path.display(),
+                store.len()
+            );
+            Some(store)
+        }
+    };
 
     if let Some(path) = cfg.listen.unix_path() {
         // Refuse a stale path loudly instead of silently stealing it; a
@@ -235,18 +317,19 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     let shared = Arc::new(Shared {
         inner: Mutex::new(Inner {
             next_id: 1,
-            queue: JobQueue::new(),
+            queue: FairQueue::new(cfg.limits),
             jobs: HashMap::new(),
             finished: std::collections::VecDeque::new(),
-            cache: ResultCache::new(cfg.cache_cap),
+            cache,
+            store,
+            metrics: Metrics::new(cfg.fleets),
             draining: false,
             done: false,
-            jobs_mined: 0,
         }),
         wake: Condvar::new(),
     });
 
-    // Listener thread: accept until the scheduler is done.
+    // Listener thread: accept until the runners are done.
     let accept_shared = Arc::clone(&shared);
     let listener_thread = std::thread::spawn(move || loop {
         if accept_shared.lock().done {
@@ -274,124 +357,158 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         }
     });
 
-    // Scheduler: one mining job at a time on this thread.
-    scheduler_loop(&shared, &mut fleet, &fleet_cfg);
+    // One runner thread per fleet; each pulls from the shared fair queue.
+    let runner_threads: Vec<_> = runners
+        .into_iter()
+        .map(|mut runner| {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || -> Result<()> {
+                runner_loop(&shared, &mut runner);
+                runner.shutdown().context("dismiss warm fleet")
+            })
+        })
+        .collect();
 
-    // Drained. Release waiters, stop the listener, dismiss the fleet.
+    // Wait for the drain: every runner exits once draining is set and the
+    // queue is empty.
+    let mut shutdown_result: Result<()> = Ok(());
+    for thread in runner_threads {
+        let joined = thread.join().unwrap_or_else(|_| {
+            Err(anyhow::anyhow!("fleet runner thread panicked"))
+        });
+        if shutdown_result.is_ok() {
+            shutdown_result = joined;
+        }
+    }
+
+    // Drained. Release waiters and stop the listener.
     {
         let mut inner = shared.lock();
         inner.done = true;
         let (hits, misses) = inner.cache.stats();
         println!(
             "parlamp serve: drained ({} jobs mined, cache {hits} hits / {misses} misses)",
-            inner.jobs_mined
+            inner.metrics.jobs_mined
         );
     }
     shared.wake.notify_all();
     let _ = listener_thread.join();
-    if let Some(fleet) = fleet.take() {
-        fleet.shutdown().context("dismiss warm fleet")?;
-    }
-    Ok(())
+    shutdown_result
 }
 
-fn scheduler_loop(
-    shared: &Arc<Shared>,
-    fleet: &mut Option<ProcessFleet>,
-    fleet_cfg: &ProcessConfig,
-) {
+/// One fleet's scheduling loop: expire deadlines, pull the next eligible
+/// job, probe the caches, mine, publish. Exits once the daemon is
+/// draining and the queue is empty.
+fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner) {
     loop {
-        let next = {
+        // One locked section: poll signals, expire deadlines, try to pop.
+        let popped = {
             let mut inner = shared.lock();
-            if sig::terminate_requested() && !inner.draining {
-                inner.draining = true;
-                println!("parlamp serve: signal received, draining queue");
+            inner.poll_signals();
+            let now = inner.metrics.now_ms();
+            let expired = inner.queue.expire(now);
+            if !expired.is_empty() {
+                // Expired jobs were pending, never dispatched — no slot to
+                // release, just the terminal record and the counter.
+                for id in expired {
+                    inner.metrics.jobs_expired += 1;
+                    inner.finish(id, Record::Expired);
+                }
+                shared.wake.notify_all();
             }
             match inner.queue.pop() {
-                Some(id) => Some(id),
-                None if inner.draining => break,
-                None => None,
-            }
-        };
-        let Some(id) = next else {
-            // Idle: sleep until a submission (or poll the signal latch).
-            let inner = shared.lock();
-            drop(
-                shared
-                    .wake
-                    .wait_timeout(inner, Duration::from_millis(200))
-                    .expect("service state lock"),
-            );
-            continue;
-        };
-
-        // Take the job's spec and mark it running. (A popped id is always
-        // `Queued`: CANCEL only flips jobs it removed from the queue.)
-        let Some((spec, key)) = ({
-            let mut inner = shared.lock();
-            match inner.jobs.insert(id, Record::Running) {
-                Some(Record::Queued { spec, key }) => Some((spec, key)),
-                stale => {
-                    // Defensive: restore whatever was there and skip.
-                    if let Some(r) = stale {
-                        inner.jobs.insert(id, r);
+                Some(id) => {
+                    // Take the spec and mark the job running. A popped id
+                    // is always `Queued` — CANCEL and expiry only touch
+                    // jobs still in the queue.
+                    let now = inner.metrics.now_ms();
+                    match inner.jobs.remove(&id) {
+                        Some(Record::Queued { spec, key, client, submitted_ms }) => {
+                            inner.jobs.insert(
+                                id,
+                                Record::Running { client: client.clone(), submitted_ms },
+                            );
+                            inner
+                                .metrics
+                                .queue_wait
+                                .record(now.saturating_sub(submitted_ms));
+                            Some((id, spec, key, client))
+                        }
+                        stale => {
+                            // Defensive: restore whatever was there and
+                            // release the slot the pop consumed.
+                            if let Some(r) = stale {
+                                inner.jobs.insert(id, r);
+                            }
+                            None
+                        }
                     }
-                    None
+                }
+                None if inner.draining && inner.queue.is_empty() => break,
+                None => {
+                    let guard = shared
+                        .wake
+                        .wait_timeout(inner, Duration::from_millis(200))
+                        .expect("service state lock");
+                    drop(guard);
+                    continue;
                 }
             }
-        }) else {
+        };
+        let Some((id, spec, key, client)) = popped else {
             continue;
         };
 
         // Schedule-time cache probe: an identical job may have finished
-        // while this one waited in the queue.
+        // (on any fleet) while this one waited in the queue.
         let cached = {
             let mut inner = shared.lock();
-            inner.cache.get(&key).map(|o| o.as_ref().clone())
+            inner.lookup(&key).map(|o| o.as_ref().clone())
         };
         if let Some(outcome) = cached {
-            shared.lock().finish(id, Record::Done { outcome });
+            let mut inner = shared.lock();
+            inner.finish(id, Record::Done { outcome });
+            inner.queue.complete(&client);
+            drop(inner);
             shared.wake.notify_all();
             continue;
         }
 
-        // Mine. A failed fleet is poisoned: drop it (children die) and
-        // respawn for the next job.
-        let outcome = mine(fleet, fleet_cfg, &spec);
-        {
-            let mut inner = shared.lock();
-            match outcome {
-                Ok(run) => {
-                    inner.jobs_mined += 1;
-                    let outcome = JobOutcome::from_run(&run, false);
-                    inner.cache.insert(key, &run);
-                    inner.finish(id, Record::Done { outcome });
+        // Mine — the expensive part, outside the lock. Other runners keep
+        // dispatching while this fleet works.
+        let started = std::time::Instant::now();
+        let mined = runner.mine(&spec);
+        let busy_ms = started.elapsed().as_millis() as u64;
+
+        let mut inner = shared.lock();
+        let fleet = &mut inner.metrics.fleets[runner.idx];
+        fleet.busy_ms += busy_ms;
+        fleet.respawns = runner.respawns();
+        fleet.rebuilds = runner.rebuilds();
+        match mined {
+            Ok(run) => {
+                inner.metrics.jobs_mined += 1;
+                inner.metrics.fleets[runner.idx].jobs_mined += 1;
+                let shared_outcome = Arc::new(JobOutcome::from_run(&run, true));
+                if let Some(store) = &mut inner.store {
+                    match store.append(key, &shared_outcome) {
+                        Ok(()) => inner.metrics.store_appends += 1,
+                        // A full disk must not fail the job — the result
+                        // is in memory and on its way to the client.
+                        Err(e) => eprintln!("parlamp serve: store append failed: {e:#}"),
+                    }
                 }
-                Err(e) => {
-                    inner.finish(id, Record::Failed { reason: format!("{e:#}") });
-                }
+                inner.cache.insert_outcome(key, shared_outcome);
+                inner.finish(id, Record::Done { outcome: JobOutcome::from_run(&run, false) });
+            }
+            Err(e) => {
+                inner.metrics.jobs_failed += 1;
+                inner.finish(id, Record::Failed { reason: format!("{e:#}") });
             }
         }
+        inner.queue.complete(&client);
+        drop(inner);
         shared.wake.notify_all();
-    }
-}
-
-fn mine(
-    fleet: &mut Option<ProcessFleet>,
-    fleet_cfg: &ProcessConfig,
-    spec: &JobSpec,
-) -> Result<crate::coordinator::CoordinatorRun> {
-    if fleet.is_none() {
-        *fleet = Some(spawn_fleet(fleet_cfg).context("respawn worker fleet")?);
-    }
-    let f = fleet.as_mut().expect("fleet just ensured");
-    let coord = Coordinator::new(spec.alpha).with_glb(spec.glb).with_screen(spec.screen);
-    match coord.run_on_fleet(&spec.db, f, spec.seed) {
-        Ok(run) => Ok(run),
-        Err(e) => {
-            *fleet = None; // poisoned: kill-on-drop, respawn lazily
-            Err(e)
-        }
     }
 }
 
@@ -437,10 +554,25 @@ fn handle(shared: &Arc<Shared>, frame: Frame) -> Frame {
         Frame::JobResult { job_id, .. } => wait_result(shared, job_id),
         Frame::Cancel { job_id } => {
             let mut inner = shared.lock();
+            // Only a still-pending job can be cancelled; a running or
+            // terminal one just reports its current state. A cancelled
+            // job held no fleet slot, so there is nothing to release.
             if inner.queue.cancel(job_id) {
+                inner.metrics.jobs_cancelled += 1;
                 inner.finish(job_id, Record::Cancelled);
             }
             Frame::Status { job_id, report: Some(state_of(&inner, job_id)) }
+        }
+        Frame::Stats { .. } => {
+            let inner = shared.lock();
+            let (hits, misses) = inner.cache.stats();
+            let depths = inner.queue.depths();
+            let report = inner.metrics.snapshot(
+                (hits, misses, inner.cache.len()),
+                inner.store.as_ref().map_or(0, |s| s.len()),
+                &depths,
+            );
+            Frame::Stats { report: Some(Box::new(report)) }
         }
         Frame::Shutdown => {
             {
@@ -464,6 +596,7 @@ fn handle(shared: &Arc<Shared>, frame: Frame) -> Frame {
 
 fn submit(shared: &Arc<Shared>, spec: Box<JobSpec>) -> Frame {
     let key = CacheKey::new(spec.db.digest(), spec.alpha, spec.glb, spec.screen);
+    let client = if spec.client.is_empty() { "anon".to_string() } else { spec.client.clone() };
     let mut inner = shared.lock();
     if inner.draining {
         return Frame::Status {
@@ -473,18 +606,33 @@ fn submit(shared: &Arc<Shared>, spec: Box<JobSpec>) -> Frame {
             }),
         };
     }
-    let id = inner.next_id;
-    inner.next_id += 1;
-    // Submit-time cache probe: a repeat submission never reaches the
-    // queue, let alone the workers.
-    if let Some(outcome) = inner.cache.get(&key) {
+    inner.metrics.jobs_submitted += 1;
+    *inner.metrics.submitted_by_client.entry(client.clone()).or_insert(0) += 1;
+    // Submit-time cache/store probe: a repeat submission never reaches the
+    // queue, let alone the workers — and after a restart the probe hits
+    // the persistent store, so zero fleet phases run.
+    if let Some(outcome) = inner.lookup(&key) {
+        let id = inner.next_id;
+        inner.next_id += 1;
         inner.finish(id, Record::Done { outcome: outcome.as_ref().clone() });
-    } else {
-        inner.jobs.insert(id, Record::Queued { spec, key });
-        inner.queue.push(id);
-        drop(inner);
-        shared.wake.notify_all();
+        return Frame::Accepted { job_id: id };
     }
+    // Admission control: a typed busy reply instead of unbounded growth.
+    let now = inner.metrics.now_ms();
+    let id = inner.next_id;
+    if let Err(busy) = inner.queue.push(&client, id, spec.priority, spec.deadline_ms, now) {
+        inner.metrics.jobs_rejected_busy += 1;
+        return Frame::Status {
+            job_id: 0,
+            report: Some(JobState::Busy { reason: busy.to_string() }),
+        };
+    }
+    inner.next_id += 1;
+    inner
+        .jobs
+        .insert(id, Record::Queued { spec, key, client, submitted_ms: now });
+    drop(inner);
+    shared.wake.notify_all();
     Frame::Accepted { job_id: id }
 }
 
@@ -494,15 +642,16 @@ fn state_of(inner: &Inner, id: u64) -> JobState {
         Some(Record::Queued { .. }) => JobState::Queued {
             position: inner.queue.position(id).unwrap_or(0) as u32,
         },
-        Some(Record::Running) => JobState::Running,
+        Some(Record::Running { .. }) => JobState::Running,
         Some(Record::Done { outcome }) => JobState::Done { from_cache: outcome.from_cache },
         Some(Record::Failed { reason }) => JobState::Failed { reason: reason.clone() },
         Some(Record::Cancelled) => JobState::Cancelled,
+        Some(Record::Expired) => JobState::Expired,
     }
 }
 
 /// Block until `id` is terminal; reply `RESULT` for a finished job and a
-/// `STATUS` report otherwise (failed, cancelled, unknown).
+/// `STATUS` report otherwise (failed, cancelled, expired, unknown).
 fn wait_result(shared: &Arc<Shared>, id: u64) -> Frame {
     let mut inner = shared.lock();
     loop {
@@ -512,8 +661,8 @@ fn wait_result(shared: &Arc<Shared>, id: u64) -> Frame {
             Some(Record::Done { outcome }) => {
                 Some(Frame::JobResult { job_id: id, report: Some(Box::new(outcome.clone())) })
             }
-            Some(Record::Queued { .. } | Record::Running) if !inner.done => None,
-            Some(Record::Queued { .. } | Record::Running) => Some(Frame::Status {
+            Some(Record::Queued { .. } | Record::Running { .. }) if !inner.done => None,
+            Some(Record::Queued { .. } | Record::Running { .. }) => Some(Frame::Status {
                 job_id: id,
                 report: Some(JobState::Failed {
                     reason: "daemon exited before the job finished".into(),

@@ -1,0 +1,505 @@
+//! Disk-backed persistent result store (DESIGN.md §13).
+//!
+//! The in-memory LRU ([`super::cache`]) dies with the daemon; this store
+//! does not. Every mined result is appended to a single log file, and on
+//! startup the log is scanned back into an index so a restarted daemon
+//! answers repeat submissions from disk without running a single fleet
+//! phase.
+//!
+//! ## Record format
+//!
+//! ```text
+//! file    := magic:"PLAMPST1"  record*
+//! record  := body_len:u32  body  fnv64(body):u64
+//! body    := key  outcome
+//! key     := digest:u64 alpha_bits:u64 l:u32 w:u32 steal:u8 pre:u8
+//!            arity:u32 screen:u8                      (31 bytes)
+//! outcome := the RESULT frame's JobOutcome payload, byte-for-byte
+//!            (wire::service::encode_job_outcome)
+//! ```
+//!
+//! Integers are little-endian, like the wire format the `outcome` bytes
+//! already use. The checksum is FNV-1a over the whole body — each FNV
+//! step is a bijection on the 64-bit state (the prime is odd), so any
+//! single-byte flip in the body is *guaranteed* to change the checksum.
+//!
+//! ## Recovery rules
+//!
+//! The scan accepts records strictly left to right. The first record that
+//! is truncated (fewer bytes than its header promises), length-corrupt
+//! (absurd `body_len`), checksum-corrupt, or undecodable ends the scan:
+//! everything before it is intact and loads; everything from it on is
+//! dropped by truncating the file back to the last good boundary, so the
+//! store stays appendable at a clean record edge. One line is logged when
+//! a tail is dropped. A duplicate key keeps the *latest* record (the log
+//! is append-only; re-mining a key after an eviction appends a fresh
+//! record rather than rewriting history).
+//!
+//! Reads go through [`FileExt::read_at`] and take `&self`, so concurrent
+//! lookups proceed under a shared lock while appends (`&mut self`)
+//! serialize — the read-while-append test below exercises exactly that.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::ScreenMode;
+use crate::wire::service::{decode_job_outcome, encode_job_outcome, JobOutcome};
+use crate::wire::MAX_FRAME_LEN;
+
+use super::CacheKey;
+
+/// First eight bytes of every store file ("ParLamp STore v1").
+const STORE_MAGIC: [u8; 8] = *b"PLAMPST1";
+
+/// Encoded [`CacheKey`] size inside a record body.
+const KEY_BYTES: usize = 31;
+
+/// `body_len:u32` header + trailing `fnv64:u64` checksum.
+const RECORD_OVERHEAD: usize = 4 + 8;
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    // Same constants as `Database::digest` (FNV-1a).
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn put_key(buf: &mut Vec<u8>, key: &CacheKey) {
+    buf.extend_from_slice(&key.digest.to_le_bytes());
+    buf.extend_from_slice(&key.alpha_bits.to_le_bytes());
+    buf.extend_from_slice(&(key.glb.l as u32).to_le_bytes());
+    buf.extend_from_slice(&(key.glb.w as u32).to_le_bytes());
+    buf.push(key.glb.steal as u8);
+    buf.push(key.glb.preprocess as u8);
+    buf.extend_from_slice(&(key.glb.tree_arity as u32).to_le_bytes());
+    buf.push(match key.screen {
+        ScreenMode::Auto => 0,
+        ScreenMode::Native => 1,
+        ScreenMode::Xla => 2,
+    });
+}
+
+fn get_key(bytes: &[u8]) -> Result<CacheKey> {
+    ensure!(bytes.len() >= KEY_BYTES, "store: record body shorter than its key");
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    Ok(CacheKey {
+        digest: u64_at(0),
+        alpha_bits: u64_at(8),
+        glb: crate::coordinator::GlbParams {
+            l: u32_at(16) as usize,
+            w: u32_at(20) as usize,
+            steal: bytes[24] != 0,
+            preprocess: bytes[25] != 0,
+            tree_arity: u32_at(26) as usize,
+        },
+        screen: match bytes[30] {
+            0 => ScreenMode::Auto,
+            1 => ScreenMode::Native,
+            2 => ScreenMode::Xla,
+            other => bail!("store: unknown screen byte {other:#x}"),
+        },
+    })
+}
+
+/// The append-only, checksummed, indexed result log.
+#[derive(Debug)]
+pub struct ResultStore {
+    path: PathBuf,
+    file: File,
+    /// Key → (absolute body offset, body length). Latest record wins.
+    index: HashMap<CacheKey, (u64, u32)>,
+    /// Keys from oldest to newest append (deduplicated), for warm-load
+    /// recency.
+    order: Vec<CacheKey>,
+    /// End of the last intact record — where the next append goes.
+    end: u64,
+    appends: u64,
+}
+
+impl ResultStore {
+    /// Open (or create) the store at `path`, scanning every intact record
+    /// into the index and truncating a corrupt or torn tail per the
+    /// recovery rules above.
+    pub fn open(path: &Path) -> Result<ResultStore> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("store: creating {}", parent.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("store: opening {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)
+            .with_context(|| format!("store: reading {}", path.display()))?;
+        if bytes.is_empty() {
+            file.write_all(&STORE_MAGIC)
+                .with_context(|| format!("store: initializing {}", path.display()))?;
+            bytes.extend_from_slice(&STORE_MAGIC);
+        }
+        // Never silently treat a foreign file as an empty store.
+        ensure!(
+            bytes.len() >= STORE_MAGIC.len() && bytes[..STORE_MAGIC.len()] == STORE_MAGIC,
+            "store: {} is not a parlamp result store (bad magic)",
+            path.display()
+        );
+        let mut store = ResultStore {
+            path: path.to_path_buf(),
+            file,
+            index: HashMap::new(),
+            order: Vec::new(),
+            end: STORE_MAGIC.len() as u64,
+            appends: 0,
+        };
+        store.scan(&bytes)?;
+        Ok(store)
+    }
+
+    /// Walk records from `end`, stopping at the first truncated or corrupt
+    /// one and truncating the file back to the last good boundary.
+    fn scan(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut pos = self.end as usize;
+        loop {
+            let Some(reason) = self.try_record(bytes, &mut pos) else { continue };
+            if reason.is_empty() {
+                break; // clean end of log
+            }
+            let dropped = bytes.len() as u64 - self.end;
+            eprintln!(
+                "parlamp store: {}: dropped {dropped}-byte tail at offset {} ({reason})",
+                self.path.display(),
+                self.end
+            );
+            self.file
+                .set_len(self.end)
+                .with_context(|| format!("store: truncating {}", self.path.display()))?;
+            break;
+        }
+        Ok(())
+    }
+
+    /// Try to accept one record at `*pos`. `None` = accepted (index
+    /// updated, `pos` and `end` advanced). `Some("")` = clean EOF.
+    /// `Some(reason)` = corrupt/torn tail starting here.
+    fn try_record(&mut self, bytes: &[u8], pos: &mut usize) -> Option<&'static str> {
+        if *pos == bytes.len() {
+            return Some("");
+        }
+        if bytes.len() - *pos < 4 {
+            return Some("torn length prefix");
+        }
+        let body_len =
+            u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap()) as usize;
+        if body_len < KEY_BYTES || body_len > MAX_FRAME_LEN as usize {
+            return Some("absurd record length");
+        }
+        if bytes.len() - *pos - 4 < body_len + 8 {
+            return Some("torn record");
+        }
+        let body = &bytes[*pos + 4..*pos + 4 + body_len];
+        let sum_off = *pos + 4 + body_len;
+        let sum = u64::from_le_bytes(bytes[sum_off..sum_off + 8].try_into().unwrap());
+        if fnv64(body) != sum {
+            return Some("checksum mismatch");
+        }
+        let Ok(key) = get_key(body) else {
+            return Some("undecodable key");
+        };
+        if decode_job_outcome(&body[KEY_BYTES..]).is_err() {
+            return Some("undecodable outcome");
+        }
+        let body_off = (*pos + 4) as u64;
+        if self.index.insert(key, (body_off, body_len as u32)).is_some() {
+            self.order.retain(|k| k != &key);
+        }
+        self.order.push(key);
+        *pos += 4 + body_len + 8;
+        self.end = *pos as u64;
+        None
+    }
+
+    /// Append one result. The record is checksummed and synced; on return
+    /// it will survive a daemon restart.
+    pub fn append(&mut self, key: CacheKey, outcome: &JobOutcome) -> Result<()> {
+        let mut body = Vec::new();
+        put_key(&mut body, &key);
+        body.extend_from_slice(&encode_job_outcome(outcome));
+        let mut record = Vec::with_capacity(body.len() + RECORD_OVERHEAD);
+        record.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        record.extend_from_slice(&body);
+        record.extend_from_slice(&fnv64(&body).to_le_bytes());
+        self.file
+            .seek(SeekFrom::Start(self.end))
+            .and_then(|_| self.file.write_all(&record))
+            .and_then(|_| self.file.sync_data())
+            .with_context(|| format!("store: appending to {}", self.path.display()))?;
+        let body_off = self.end + 4;
+        if self.index.insert(key, (body_off, body.len() as u32)).is_some() {
+            self.order.retain(|k| k != &key);
+        }
+        self.order.push(key);
+        self.end += record.len() as u64;
+        self.appends += 1;
+        Ok(())
+    }
+
+    /// Look up a stored result. Takes `&self` (positional `read_at`), so
+    /// lookups run concurrently under a shared lock while appends hold the
+    /// exclusive one. The checksum is re-verified on every read.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<JobOutcome>> {
+        let &(off, len) = self.index.get(key)?;
+        let mut body = vec![0u8; len as usize + 8];
+        self.file.read_exact_at(&mut body, off).ok()?;
+        let sum = u64::from_le_bytes(body[len as usize..].try_into().unwrap());
+        let body = &body[..len as usize];
+        if fnv64(body) != sum {
+            return None;
+        }
+        let mut outcome = decode_job_outcome(&body[KEY_BYTES..]).ok()?;
+        // Anything answered from the store is by definition a cache hit.
+        outcome.from_cache = true;
+        Some(Arc::new(outcome))
+    }
+
+    /// The most recent `cap` entries, oldest first — feed them to
+    /// [`super::ResultCache::insert_outcome`] in order and the newest ends
+    /// up most-recently-used.
+    pub fn recent(&self, cap: usize) -> Vec<(CacheKey, Arc<JobOutcome>)> {
+        let skip = self.order.len().saturating_sub(cap);
+        self.order[skip..]
+            .iter()
+            .filter_map(|k| self.get(k).map(|o| (*k, o)))
+            .collect()
+    }
+
+    /// Number of distinct keys on disk.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Appends performed by *this* process (not counting records loaded
+    /// from a previous run).
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Coordinator, CoordinatorRun, GlbParams};
+    use crate::datagen::{generate_gwas, GwasSpec};
+    use std::sync::RwLock;
+
+    fn tiny_run() -> CoordinatorRun {
+        let spec = GwasSpec { n_snps: 40, n_individuals: 30, n_pos: 8, ..GwasSpec::small(3) };
+        let (db, _) = generate_gwas(&spec);
+        Coordinator::new(0.05)
+            .with_screen(ScreenMode::Native)
+            .run(&db, &Backend::sim(2))
+            .expect("tiny run")
+    }
+
+    fn key(digest: u64) -> CacheKey {
+        CacheKey::new(digest, 0.05, GlbParams::default(), ScreenMode::Native)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "parlamp-store-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A store at `path` holding `k` records under keys `0..k`.
+    fn seeded(path: &Path, k: u64) -> JobOutcome {
+        let outcome = JobOutcome::from_run(&tiny_run(), true);
+        let mut store = ResultStore::open(path).unwrap();
+        for digest in 0..k {
+            store.append(key(digest), &outcome).unwrap();
+        }
+        assert_eq!(store.appends(), k);
+        outcome
+    }
+
+    #[test]
+    fn roundtrips_across_reopen() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("results.log");
+        let outcome = seeded(&path, 3);
+        let store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.len(), 3);
+        for digest in 0..3 {
+            let got = store.get(&key(digest)).expect("stored record");
+            assert_eq!(*got, outcome);
+        }
+        assert!(store.get(&key(99)).is_none());
+        // Warm-load order: most recent last, capped.
+        let recent = store.recent(2);
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].0, key(1));
+        assert_eq!(recent[1].0, key(2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_key_keeps_latest_record() {
+        let dir = tmpdir("dup");
+        let path = dir.join("results.log");
+        let run = tiny_run();
+        let first = JobOutcome::from_run(&run, true);
+        let mut second = first.clone();
+        second.phase2_closed += 1;
+        {
+            let mut store = ResultStore::open(&path).unwrap();
+            store.append(key(7), &first).unwrap();
+            store.append(key(7), &second).unwrap();
+            assert_eq!(store.len(), 1);
+            assert_eq!(store.get(&key(7)).unwrap().phase2_closed, second.phase2_closed);
+        }
+        let store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(&key(7)).unwrap().phase2_closed, second.phase2_closed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_file_is_rejected_not_clobbered() {
+        let dir = tmpdir("foreign");
+        let path = dir.join("notastore");
+        std::fs::write(&path, b"definitely not a store").unwrap();
+        let err = ResultStore::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+        assert_eq!(std::fs::read(&path).unwrap(), b"definitely not a store");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The crash-recovery battery: truncate the log at *every* byte offset
+    /// of the last record; every prefix must reopen with all intact
+    /// records, drop the torn tail, and stay appendable.
+    #[test]
+    fn truncated_tail_at_every_offset_recovers() {
+        const K: u64 = 3;
+        let dir = tmpdir("trunc");
+        let path = dir.join("results.log");
+        let outcome = seeded(&path, K);
+        let full = std::fs::read(&path).unwrap();
+        // Last record start = end of the store holding K-1 records.
+        let last_start = {
+            let prefix = dir.join("prefix.log");
+            seeded(&prefix, K - 1);
+            std::fs::metadata(&prefix).unwrap().len() as usize
+        };
+        assert!(last_start < full.len());
+        let scratch = dir.join("scratch.log");
+        for cut in last_start..full.len() {
+            std::fs::write(&scratch, &full[..cut]).unwrap();
+            let mut store = ResultStore::open(&scratch).unwrap();
+            assert_eq!(store.len() as u64, K - 1, "cut at {cut}");
+            for digest in 0..K - 1 {
+                assert_eq!(*store.get(&key(digest)).unwrap(), outcome, "cut at {cut}");
+            }
+            // The truncated tail is gone and the store accepts appends at
+            // the recovered boundary.
+            store.append(key(1000 + cut as u64), &outcome).unwrap();
+            drop(store);
+            let reopened = ResultStore::open(&scratch).unwrap();
+            assert_eq!(reopened.len() as u64, K, "cut at {cut}");
+            assert_eq!(*reopened.get(&key(1000 + cut as u64)).unwrap(), outcome);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Corrupt (flip) every byte of the last record in place: the store
+    /// must reopen with the intact records only — the checksum (or, for
+    /// length-field flips, the torn-tail rule) eats the damage.
+    #[test]
+    fn corrupt_tail_at_every_offset_recovers() {
+        const K: u64 = 3;
+        let dir = tmpdir("corrupt");
+        let path = dir.join("results.log");
+        let outcome = seeded(&path, K);
+        let full = std::fs::read(&path).unwrap();
+        let last_start = {
+            let prefix = dir.join("prefix.log");
+            seeded(&prefix, K - 1);
+            std::fs::metadata(&prefix).unwrap().len() as usize
+        };
+        let scratch = dir.join("scratch.log");
+        for flip in last_start..full.len() {
+            let mut bytes = full.clone();
+            bytes[flip] ^= 0xA5;
+            std::fs::write(&scratch, &bytes).unwrap();
+            let mut store = ResultStore::open(&scratch).unwrap();
+            assert_eq!(store.len() as u64, K - 1, "flip at {flip}");
+            for digest in 0..K - 1 {
+                assert_eq!(*store.get(&key(digest)).unwrap(), outcome, "flip at {flip}");
+            }
+            store.append(key(2000 + flip as u64), &outcome).unwrap();
+            let reopened = ResultStore::open(&scratch).unwrap();
+            assert_eq!(reopened.len() as u64, K, "flip at {flip}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Lookups take `&self` and go through positional reads: readers on
+    /// shared locks race an appender holding the exclusive one, and every
+    /// read observes a complete, checksum-valid record.
+    #[test]
+    fn concurrent_reads_while_appending() {
+        let dir = tmpdir("concurrent");
+        let path = dir.join("results.log");
+        let outcome = seeded(&path, 4);
+        let store = Arc::new(RwLock::new(ResultStore::open(&path).unwrap()));
+        let readers: Vec<_> = (0..4)
+            .map(|r| {
+                let store = Arc::clone(&store);
+                let expect = outcome.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200 {
+                        let got = store
+                            .read()
+                            .unwrap()
+                            .get(&key((r + i) % 4))
+                            .expect("seeded record");
+                        assert_eq!(*got, expect);
+                    }
+                })
+            })
+            .collect();
+        let appended = JobOutcome::from_run(&tiny_run(), true);
+        for digest in 100..140 {
+            store.write().unwrap().append(key(digest), &appended).unwrap();
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        let store = store.read().unwrap();
+        assert_eq!(store.len(), 44);
+        assert_eq!(*store.get(&key(139)).unwrap(), appended);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

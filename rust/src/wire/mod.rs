@@ -23,8 +23,8 @@
 //! length prefix fails fast instead of allocating gigabytes. The fabric
 //! frame types and the message grammar are documented in DESIGN.md §7; the
 //! job frames the `parlamp serve` daemon speaks with its clients
-//! (`SUBMIT`/`ACCEPTED`/`STATUS`/`RESULT`/`CANCEL`/`SHUTDOWN`, payloads in
-//! [`service`]) in DESIGN.md §9. The encoders/decoders here are the
+//! (`SUBMIT`/`ACCEPTED`/`STATUS`/`RESULT`/`CANCEL`/`SHUTDOWN`/`STATS`,
+//! payloads in [`service`]) in DESIGN.md §9 and §13. The encoders/decoders here are the
 //! normative implementation for both.
 //!
 //! ## Versioning
@@ -47,7 +47,7 @@ use crate::net::Endpoint;
 use crate::par::breakdown::Breakdown;
 use crate::par::worker::RunMode;
 
-use service::{JobOutcome, JobSpec, JobState};
+use service::{JobOutcome, JobSpec, JobState, ServiceStats};
 
 /// First four bytes of every `HELLO` payload ("ParLamp Message Wire").
 pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
@@ -74,7 +74,12 @@ pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 /// and the new worker → hub `CHECKPOINT` frame periodically reports the
 /// rank's unfinished stack roots so the hub's custody table can say what
 /// a dead rank was holding.
-pub const WIRE_VERSION: u16 = 5;
+/// v6: multi-fleet serve (DESIGN.md §13) — `SUBMIT` gains the scheduling
+/// fields (priority, relative deadline, client identity for fair-share
+/// accounting), `STATUS` can report the new `Expired` / `Busy` job states,
+/// and the new `STATS` frame queries the daemon's scheduler/cache/store
+/// counters ([`ServiceStats`]).
+pub const WIRE_VERSION: u16 = 6;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -108,6 +113,7 @@ const TAG_STATUS: u8 = 0x12;
 const TAG_RESULT: u8 = 0x13;
 const TAG_CANCEL: u8 = 0x14;
 const TAG_SHUTDOWN: u8 = 0x15;
+const TAG_STATS: u8 = 0x16;
 
 /// Per-phase worker parameterization: the exact [`crate::par::WorkerConfig`]
 /// surface minus rank (which the worker already knows) and minus the
@@ -244,6 +250,10 @@ pub enum Frame {
     /// Client → daemon: drain the queue, dismiss the fleet, exit. Echoed
     /// back as the acknowledgment.
     Shutdown,
+    /// Daemon statistics exchange (v6). Client → daemon with
+    /// `report: None` is a query; the daemon answers with the current
+    /// [`ServiceStats`] snapshot.
+    Stats { report: Option<Box<ServiceStats>> },
 }
 
 impl Frame {
@@ -267,6 +277,7 @@ impl Frame {
             Frame::JobResult { .. } => "RESULT",
             Frame::Cancel { .. } => "CANCEL",
             Frame::Shutdown => "SHUTDOWN",
+            Frame::Stats { .. } => "STATS",
         }
     }
 }
@@ -822,6 +833,16 @@ impl Frame {
                 put_u64(&mut body, *job_id);
             }
             Frame::Shutdown => put_u8(&mut body, TAG_SHUTDOWN),
+            Frame::Stats { report } => {
+                put_u8(&mut body, TAG_STATS);
+                match report {
+                    None => put_u8(&mut body, 0),
+                    Some(stats) => {
+                        put_u8(&mut body, 1);
+                        service::put_service_stats(&mut body, stats);
+                    }
+                }
+            }
         }
         debug_assert!(body.len() <= MAX_FRAME_LEN as usize);
         let mut out = Vec::with_capacity(4 + body.len());
@@ -918,6 +939,14 @@ impl Frame {
             }
             TAG_CANCEL => Frame::Cancel { job_id: d.u64()? },
             TAG_SHUTDOWN => Frame::Shutdown,
+            TAG_STATS => {
+                let report = match d.u8()? {
+                    0 => None,
+                    1 => Some(Box::new(service::get_service_stats(&mut d)?)),
+                    b => bail!("wire: bad STATS presence byte {b:#x}"),
+                };
+                Frame::Stats { report }
+            }
             other => bail!("wire: unknown frame tag {other:#x}"),
         };
         d.finish()?;
@@ -1579,6 +1608,9 @@ mod tests {
             glb: GlbParams { w: 2, steal: false, ..GlbParams::default() },
             screen: ScreenMode::Native,
             seed: 31,
+            priority: 3,
+            deadline_ms: 1500,
+            client: "tenant-a".into(),
             db: db.clone(),
         };
         let got = match roundtrip(&Frame::Submit(Box::new(spec))) {
@@ -1589,6 +1621,9 @@ mod tests {
         assert_eq!(got.glb, GlbParams { w: 2, steal: false, ..GlbParams::default() });
         assert_eq!(got.screen, ScreenMode::Native);
         assert_eq!(got.seed, 31);
+        assert_eq!(got.priority, 3);
+        assert_eq!(got.deadline_ms, 1500);
+        assert_eq!(got.client, "tenant-a");
         assert_eq!(got.db.digest(), db.digest());
         assert_eq!(Frame::Submit(Box::new(got)).name(), "SUBMIT");
     }
@@ -1603,6 +1638,8 @@ mod tests {
             JobState::Failed { reason: "worker rank 1 exited mid-run".into() },
             JobState::Cancelled,
             JobState::NotFound,
+            JobState::Expired,
+            JobState::Busy { reason: "daemon queue full (256/256 jobs queued)".into() },
         ];
         for state in states {
             let frame = Frame::Status { job_id: 9, report: Some(state.clone()) };
@@ -1648,6 +1685,55 @@ mod tests {
         assert_eq!(Frame::Shutdown.name(), "SHUTDOWN");
     }
 
+    #[test]
+    fn stats_roundtrips_query_and_report() {
+        use super::service::{ClientStats, FleetStats, ServiceStats};
+        assert!(matches!(
+            roundtrip(&Frame::Stats { report: None }),
+            Frame::Stats { report: None }
+        ));
+        let mut latency_ms = vec![0u64; 20];
+        latency_ms[4] = 5;
+        let stats = ServiceStats {
+            uptime_ms: 12345,
+            jobs_submitted: 9,
+            jobs_mined: 5,
+            jobs_failed: 1,
+            jobs_rejected_busy: 2,
+            jobs_expired: 1,
+            jobs_cancelled: 0,
+            cache_hits: 3,
+            cache_misses: 6,
+            cache_entries: 4,
+            store_entries: 7,
+            store_appends: 5,
+            store_hits: 2,
+            evicted_records: 11,
+            fleets: vec![
+                FleetStats { jobs_mined: 3, busy_ms: 900, respawns: 1, rebuilds: 0 },
+                FleetStats { jobs_mined: 2, busy_ms: 450, respawns: 0, rebuilds: 1 },
+            ],
+            clients: vec![ClientStats {
+                client: "anon".into(),
+                queued: 1,
+                active: 1,
+                submitted: 9,
+            }],
+            queue_wait_ms: vec![0; 20],
+            latency_ms,
+        };
+        match roundtrip(&Frame::Stats { report: Some(Box::new(stats.clone())) }) {
+            Frame::Stats { report } => assert_eq!(*report.expect("payload"), stats),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Frame::Stats { report: None }.name(), "STATS");
+        // The human rendering names the load-bearing numbers.
+        let text = stats.to_string();
+        assert!(text.contains("9 submitted"), "{text}");
+        assert!(text.contains("11 terminal records evicted"), "{text}");
+        assert!(text.contains("fleet 1: 2 jobs"), "{text}");
+    }
+
     /// Every service frame survives the same corruption battery as the
     /// fabric frames: truncated payloads, bad tags/discriminants, and
     /// oversized counts must error — never panic, never allocate wildly.
@@ -1660,6 +1746,18 @@ mod tests {
             Frame::Status { job_id: 2, report: Some(JobState::Failed { reason: "x".into() }) },
             Frame::JobResult { job_id: 3, report: Some(Box::new(sample_outcome())) },
             Frame::Cancel { job_id: 4 },
+            Frame::Stats {
+                report: Some(Box::new(super::service::ServiceStats {
+                    fleets: vec![Default::default()],
+                    clients: vec![super::service::ClientStats {
+                        client: "c".into(),
+                        ..Default::default()
+                    }],
+                    queue_wait_ms: vec![0; 20],
+                    latency_ms: vec![0; 20],
+                    ..Default::default()
+                })),
+            },
         ];
         for frame in &frames {
             let bytes = frame.encode();
@@ -1674,13 +1772,15 @@ mod tests {
             }
             assert!(Frame::decode(&bytes[4..]).is_ok(), "{}", frame.name());
         }
-        // Bad presence byte on STATUS / RESULT.
+        // Bad presence byte on STATUS / RESULT / STATS.
         for tag in [TAG_STATUS, TAG_RESULT] {
             let mut body = vec![tag];
             put_u64(&mut body, 1);
             put_u8(&mut body, 7); // neither 0 nor 1
             assert!(Frame::decode(&body).is_err());
         }
+        let body = vec![TAG_STATS, 7];
+        assert!(Frame::decode(&body).is_err());
         // Unknown job-state discriminant.
         let mut body = vec![TAG_STATUS];
         put_u64(&mut body, 1);
@@ -1702,9 +1802,10 @@ mod tests {
         let db = Database::from_transactions(1, &[vec![0]], &[true]);
         let bytes = Frame::Submit(Box::new(JobSpec::new(db, 0.05))).encode();
         // db starts after len(4) tag(1) version(2) alpha(8) l(4) w(4)
-        // steal(1) pre(1) arity(4) screen(1) seed(8) = 38; n_items is first.
+        // steal(1) pre(1) arity(4) screen(1) seed(8) priority(1)
+        // deadline(8) client(4 + 0, empty) = 51; n_items is first.
         let mut bad = bytes.clone();
-        bad[38..42].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[51..55].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = Frame::decode(&bad[4..]).unwrap_err();
         assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
         // Trailing garbage after a well-formed payload is rejected.

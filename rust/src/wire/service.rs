@@ -35,6 +35,16 @@ pub struct JobSpec {
     /// timing statistics differ), which is why the seed is *excluded* from
     /// the result-cache key.
     pub seed: u64,
+    /// Scheduling priority within one client's queue (higher dispatches
+    /// first; equal priorities dispatch in submission order). Default 1.
+    pub priority: u8,
+    /// Relative deadline in milliseconds; 0 means none. A job still queued
+    /// when its deadline passes is expired with [`JobState::Expired`]
+    /// instead of being run late.
+    pub deadline_ms: u64,
+    /// Client identity for fair-share accounting and admission control.
+    /// Empty means anonymous (the daemon buckets it as `"anon"`).
+    pub client: String,
     /// The transaction database to mine.
     pub db: Database,
 }
@@ -48,6 +58,9 @@ impl JobSpec {
             glb: GlbParams::default(),
             screen: ScreenMode::Native,
             seed: 2015,
+            priority: 1,
+            deadline_ms: 0,
+            client: String::new(),
             db,
         }
     }
@@ -72,6 +85,12 @@ pub enum JobState {
     Cancelled,
     /// The daemon has no record of this job id.
     NotFound,
+    /// The job's deadline passed while it was still queued; it was never
+    /// dispatched.
+    Expired,
+    /// Admission control rejected the submission (queue depth bound hit);
+    /// `reason` says which bound. The job was never assigned an id.
+    Busy { reason: String },
 }
 
 impl JobState {
@@ -91,6 +110,8 @@ impl std::fmt::Display for JobState {
             JobState::Failed { reason } => write!(f, "failed: {reason}"),
             JobState::Cancelled => write!(f, "cancelled"),
             JobState::NotFound => write!(f, "not found"),
+            JobState::Expired => write!(f, "expired (deadline passed before dispatch)"),
+            JobState::Busy { reason } => write!(f, "busy: {reason}"),
         }
     }
 }
@@ -189,6 +210,9 @@ pub(super) fn put_job_spec(buf: &mut Vec<u8>, spec: &JobSpec) {
     put_u32(buf, spec.glb.tree_arity as u32);
     put_screen_mode(buf, spec.screen);
     put_u64(buf, spec.seed);
+    buf.push(spec.priority);
+    put_u64(buf, spec.deadline_ms);
+    put_str(buf, &spec.client);
     put_db(buf, &spec.db);
 }
 
@@ -209,6 +233,9 @@ pub(super) fn get_job_spec(d: &mut Dec) -> Result<JobSpec> {
         },
         screen: get_screen_mode(d)?,
         seed: d.u64()?,
+        priority: d.u8()?,
+        deadline_ms: d.u64()?,
+        client: d.str()?,
         db: get_db(d)?,
     })
 }
@@ -219,6 +246,8 @@ const STATE_DONE: u8 = 2;
 const STATE_FAILED: u8 = 3;
 const STATE_CANCELLED: u8 = 4;
 const STATE_NOT_FOUND: u8 = 5;
+const STATE_EXPIRED: u8 = 6;
+const STATE_BUSY: u8 = 7;
 
 pub(super) fn put_job_state(buf: &mut Vec<u8>, state: &JobState) {
     match state {
@@ -237,6 +266,11 @@ pub(super) fn put_job_state(buf: &mut Vec<u8>, state: &JobState) {
         }
         JobState::Cancelled => buf.push(STATE_CANCELLED),
         JobState::NotFound => buf.push(STATE_NOT_FOUND),
+        JobState::Expired => buf.push(STATE_EXPIRED),
+        JobState::Busy { reason } => {
+            buf.push(STATE_BUSY);
+            put_str(buf, reason);
+        }
     }
 }
 
@@ -248,6 +282,8 @@ pub(super) fn get_job_state(d: &mut Dec) -> Result<JobState> {
         STATE_FAILED => JobState::Failed { reason: d.str()? },
         STATE_CANCELLED => JobState::Cancelled,
         STATE_NOT_FOUND => JobState::NotFound,
+        STATE_EXPIRED => JobState::Expired,
+        STATE_BUSY => JobState::Busy { reason: d.str()? },
         other => bail!("wire: unknown job state {other:#x}"),
     })
 }
@@ -327,5 +363,247 @@ pub(super) fn get_job_outcome(d: &mut Dec) -> Result<JobOutcome> {
         phase2_makespan_s,
         hist2,
         significant,
+    })
+}
+
+/// Encode a [`JobOutcome`] as a standalone byte string — the persistent
+/// result store's record body reuses the wire codec verbatim so the
+/// on-disk format and the RESULT frame can never drift apart.
+pub fn encode_job_outcome(o: &JobOutcome) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_job_outcome(&mut buf, o);
+    buf
+}
+
+/// Decode a byte string produced by [`encode_job_outcome`], rejecting
+/// trailing garbage. Corrupt input errors instead of panicking.
+pub fn decode_job_outcome(bytes: &[u8]) -> Result<JobOutcome> {
+    let mut d = Dec::new(bytes);
+    let o = get_job_outcome(&mut d)?;
+    d.finish()?;
+    Ok(o)
+}
+
+// ---- STATS report ----------------------------------------------------------
+
+/// Per-fleet utilization counters inside a [`ServiceStats`] report,
+/// indexed by fleet id.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    pub jobs_mined: u64,
+    /// Wall-clock milliseconds this fleet spent mining.
+    pub busy_ms: u64,
+    /// Worker ranks respawned in place (PR-7 recovery) across all runs.
+    pub respawns: u64,
+    /// Whole-fleet rebuilds after a poisoned run.
+    pub rebuilds: u64,
+}
+
+/// Per-client queue depths + lifetime submissions inside a
+/// [`ServiceStats`] report.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    pub client: String,
+    pub queued: u64,
+    pub active: u64,
+    pub submitted: u64,
+}
+
+/// The STATS frame payload: a point-in-time view of the daemon's
+/// scheduler, cache, store, and fleet-pool health (DESIGN.md §13).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub uptime_ms: u64,
+    pub jobs_submitted: u64,
+    pub jobs_mined: u64,
+    pub jobs_failed: u64,
+    pub jobs_rejected_busy: u64,
+    pub jobs_expired: u64,
+    pub jobs_cancelled: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: u64,
+    pub store_entries: u64,
+    pub store_appends: u64,
+    /// LRU misses answered from the persistent store.
+    pub store_hits: u64,
+    /// Terminal job records evicted from the bounded history.
+    pub evicted_records: u64,
+    pub fleets: Vec<FleetStats>,
+    pub clients: Vec<ClientStats>,
+    /// Log₂ histogram of submit→dispatch wait, bucket `i` = `[2^i, 2^(i+1))` ms.
+    pub queue_wait_ms: Vec<u64>,
+    /// Log₂ histogram of submit→terminal latency, same bucketing.
+    pub latency_ms: Vec<u64>,
+}
+
+fn fmt_hist(f: &mut std::fmt::Formatter<'_>, label: &str, buckets: &[u64]) -> std::fmt::Result {
+    write!(f, "  {label}:")?;
+    if buckets.iter().all(|&c| c == 0) {
+        return writeln!(f, " (no samples)");
+    }
+    for (i, &count) in buckets.iter().enumerate() {
+        if count > 0 {
+            let lo = if i == 0 { 0 } else { 1u64 << i };
+            write!(f, " [{lo}ms,{}ms):{count}", 1u64 << (i + 1))?;
+        }
+    }
+    writeln!(f)
+}
+
+impl std::fmt::Display for ServiceStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "uptime: {:.1}s", self.uptime_ms as f64 / 1e3)?;
+        writeln!(
+            f,
+            "jobs: {} submitted / {} mined / {} failed / {} busy-rejected / \
+             {} expired / {} cancelled",
+            self.jobs_submitted,
+            self.jobs_mined,
+            self.jobs_failed,
+            self.jobs_rejected_busy,
+            self.jobs_expired,
+            self.jobs_cancelled
+        )?;
+        writeln!(
+            f,
+            "cache: {} hits / {} misses / {} entries (memory), \
+             {} entries / {} appends / {} hits (disk)",
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_entries,
+            self.store_entries,
+            self.store_appends,
+            self.store_hits
+        )?;
+        writeln!(f, "history: {} terminal records evicted", self.evicted_records)?;
+        for (i, fl) in self.fleets.iter().enumerate() {
+            let util = if self.uptime_ms > 0 {
+                100.0 * fl.busy_ms as f64 / self.uptime_ms as f64
+            } else {
+                0.0
+            };
+            writeln!(
+                f,
+                "fleet {i}: {} jobs, {:.1}% busy, {} respawns, {} rebuilds",
+                fl.jobs_mined, util, fl.respawns, fl.rebuilds
+            )?;
+        }
+        for c in &self.clients {
+            writeln!(
+                f,
+                "client {}: {} queued / {} active / {} submitted",
+                c.client, c.queued, c.active, c.submitted
+            )?;
+        }
+        fmt_hist(f, "queue wait", &self.queue_wait_ms)?;
+        fmt_hist(f, "job latency", &self.latency_ms)
+    }
+}
+
+pub(super) fn put_service_stats(buf: &mut Vec<u8>, s: &ServiceStats) {
+    put_u64(buf, s.uptime_ms);
+    put_u64(buf, s.jobs_submitted);
+    put_u64(buf, s.jobs_mined);
+    put_u64(buf, s.jobs_failed);
+    put_u64(buf, s.jobs_rejected_busy);
+    put_u64(buf, s.jobs_expired);
+    put_u64(buf, s.jobs_cancelled);
+    put_u64(buf, s.cache_hits);
+    put_u64(buf, s.cache_misses);
+    put_u64(buf, s.cache_entries);
+    put_u64(buf, s.store_entries);
+    put_u64(buf, s.store_appends);
+    put_u64(buf, s.store_hits);
+    put_u64(buf, s.evicted_records);
+    put_u32(buf, s.fleets.len() as u32);
+    for fl in &s.fleets {
+        put_u64(buf, fl.jobs_mined);
+        put_u64(buf, fl.busy_ms);
+        put_u64(buf, fl.respawns);
+        put_u64(buf, fl.rebuilds);
+    }
+    put_u32(buf, s.clients.len() as u32);
+    for c in &s.clients {
+        put_str(buf, &c.client);
+        put_u64(buf, c.queued);
+        put_u64(buf, c.active);
+        put_u64(buf, c.submitted);
+    }
+    put_u32(buf, s.queue_wait_ms.len() as u32);
+    for &b in &s.queue_wait_ms {
+        put_u64(buf, b);
+    }
+    put_u32(buf, s.latency_ms.len() as u32);
+    for &b in &s.latency_ms {
+        put_u64(buf, b);
+    }
+}
+
+pub(super) fn get_service_stats(d: &mut Dec) -> Result<ServiceStats> {
+    let uptime_ms = d.u64()?;
+    let jobs_submitted = d.u64()?;
+    let jobs_mined = d.u64()?;
+    let jobs_failed = d.u64()?;
+    let jobs_rejected_busy = d.u64()?;
+    let jobs_expired = d.u64()?;
+    let jobs_cancelled = d.u64()?;
+    let cache_hits = d.u64()?;
+    let cache_misses = d.u64()?;
+    let cache_entries = d.u64()?;
+    let store_entries = d.u64()?;
+    let store_appends = d.u64()?;
+    let store_hits = d.u64()?;
+    let evicted_records = d.u64()?;
+    let n_fleets = d.count(32)?;
+    let mut fleets = Vec::with_capacity(n_fleets);
+    for _ in 0..n_fleets {
+        fleets.push(FleetStats {
+            jobs_mined: d.u64()?,
+            busy_ms: d.u64()?,
+            respawns: d.u64()?,
+            rebuilds: d.u64()?,
+        });
+    }
+    // Each client entry is ≥ 28 bytes (name len + three u64 counters).
+    let n_clients = d.count(28)?;
+    let mut clients = Vec::with_capacity(n_clients);
+    for _ in 0..n_clients {
+        clients.push(ClientStats {
+            client: d.str()?,
+            queued: d.u64()?,
+            active: d.u64()?,
+            submitted: d.u64()?,
+        });
+    }
+    let n_wait = d.count(8)?;
+    let mut queue_wait_ms = Vec::with_capacity(n_wait);
+    for _ in 0..n_wait {
+        queue_wait_ms.push(d.u64()?);
+    }
+    let n_lat = d.count(8)?;
+    let mut latency_ms = Vec::with_capacity(n_lat);
+    for _ in 0..n_lat {
+        latency_ms.push(d.u64()?);
+    }
+    Ok(ServiceStats {
+        uptime_ms,
+        jobs_submitted,
+        jobs_mined,
+        jobs_failed,
+        jobs_rejected_busy,
+        jobs_expired,
+        jobs_cancelled,
+        cache_hits,
+        cache_misses,
+        cache_entries,
+        store_entries,
+        store_appends,
+        store_hits,
+        evicted_records,
+        fleets,
+        clients,
+        queue_wait_ms,
+        latency_ms,
     })
 }

@@ -306,6 +306,150 @@ fn daemon_finishes_in_flight_job_across_worker_death() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Pool chaos (DESIGN.md §13): a 2-fleet daemon where fleet 0 has a
+/// worker death armed. Two clients submit different jobs concurrently;
+/// the job that lands on fleet 0 rides the PR-7 recovery (one respawned
+/// rank), the other fleet's job is untouched — and BOTH results must be
+/// bit-identical to the serial reference. STATS must agree: two fleets,
+/// two jobs mined, exactly one respawn across the pool.
+#[test]
+fn pool_survives_one_fleets_worker_death() {
+    let db = {
+        let spec = GwasSpec {
+            n_snps: 120,
+            n_individuals: 90,
+            n_pos: 24,
+            model: GeneticModel::Dominant,
+            maf_upper: 0.2,
+            ld_copy_prob: 0.25,
+            common_frac: 0.2,
+            planted: vec![(3, 0.9)],
+            seed: 47,
+        };
+        generate_gwas(&spec).0
+    };
+    // Two distinct α values ⇒ two distinct cache keys ⇒ both jobs mine.
+    let alphas = [0.05, 0.01];
+    let serials: Vec<_> = alphas.iter().map(|a| lamp_serial(&db, *a)).collect();
+
+    let dir = std::env::temp_dir().join(format!("parlamp-poolchaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("parlamp.sock");
+    let stderr_path = dir.join("serve.stderr");
+    let stderr_file = std::fs::File::create(&stderr_path).expect("create stderr capture");
+    let child = Command::new(parlamp_bin())
+        .arg("serve")
+        .arg("--socket")
+        .arg(&socket)
+        .arg("--procs")
+        .arg("3")
+        .arg("--fleets")
+        .arg("2")
+        .arg("--fault-inject")
+        .arg("rank=1,phase=0,after=1")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::from(stderr_file))
+        .spawn()
+        .expect("spawn 2-fleet parlamp serve with fault injection");
+    struct KillOnDrop(Option<Child>);
+    impl Drop for KillOnDrop {
+        fn drop(&mut self) {
+            if let Some(mut c) = self.0.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+    let mut guard = KillOnDrop(Some(child));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !socket.exists() {
+        assert!(Instant::now() < deadline, "daemon never bound its socket");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Two clients, two concurrent jobs. Each thread submits and blocks on
+    // RESULT; the daemon's two runner threads mine them in parallel, so
+    // the armed fleet's death overlaps the healthy fleet's job.
+    let ep = Endpoint::unix(&socket);
+    let outcomes: Vec<JobOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = alphas
+            .iter()
+            .enumerate()
+            .map(|(i, alpha)| {
+                let db = db.clone();
+                let ep = ep.clone();
+                s.spawn(move || {
+                    let mut client = Client::connect(&ep).expect("connect");
+                    let spec = JobSpec {
+                        client: format!("tenant-{i}"),
+                        ..JobSpec::new(db, *alpha)
+                    };
+                    let id = client.submit(spec).expect("submit");
+                    client.results(id).expect("job must finish across the death")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    for (i, (outcome, serial)) in outcomes.iter().zip(&serials).enumerate() {
+        assert!(!outcome.from_cache, "job {i} must have been mined, not cached");
+        assert_eq!(outcome.lambda_final, serial.lambda_final, "λ* differs for job {i}");
+        assert_eq!(outcome.min_sup, serial.min_sup, "min_sup differs for job {i}");
+        assert_eq!(
+            outcome.correction_factor, serial.correction_factor,
+            "correction factor differs for job {i}"
+        );
+        assert_eq!(outcome.phase2_closed, serial.phase2_closed);
+        assert_eq!(outcome.significant.len(), serial.significant.len());
+        for (a, b) in outcome.significant.iter().zip(&serial.significant) {
+            assert_eq!(a.items, b.items, "significant set differs for job {i}");
+            assert!((a.p_value - b.p_value).abs() < 1e-12);
+        }
+    }
+
+    // STATS over the wire: two fleets, two mined jobs, one respawn total.
+    let mut client = Client::connect(&ep).expect("connect for stats");
+    let stats = client.stats().expect("STATS report");
+    assert_eq!(stats.fleets.len(), 2, "pool must report both fleets");
+    assert_eq!(stats.jobs_mined, 2);
+    assert_eq!(
+        stats.fleets.iter().map(|f| f.jobs_mined).sum::<u64>(),
+        2,
+        "both jobs must be accounted to fleets: {stats}"
+    );
+    assert_eq!(
+        stats.fleets.iter().map(|f| f.respawns).sum::<u64>(),
+        1,
+        "exactly one rank respawn across the pool: {stats}"
+    );
+
+    client.shutdown().expect("shutdown ack");
+    let mut child = guard.0.take().expect("daemon still owned");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let status = loop {
+        if let Some(status) = child.try_wait().expect("poll daemon") {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "daemon did not exit after shutdown");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "daemon exit: {status}");
+
+    let log = std::fs::read_to_string(&stderr_path).expect("read stderr capture");
+    assert!(
+        log.contains("fault injection firing"),
+        "worker fault line missing from daemon stderr:\n{log}"
+    );
+    assert_eq!(
+        log.matches("respawning rank 1").count(),
+        1,
+        "expected exactly one respawn of rank 1 in daemon stderr:\n{log}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Depth-first subtree mine from one node, recording the closed-set
 /// sequence (DFS order — stricter than set equality) and the work-unit
 /// clock the breakdown/DES layers charge.

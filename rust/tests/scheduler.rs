@@ -1,0 +1,533 @@
+//! Model-based test suite for the daemon's weighted-fair queue
+//! (`service::queue`, DESIGN.md §13).
+//!
+//! A reference model reimplements the scheduler's contract with the most
+//! naive data structures that can express it — scan-everything selection,
+//! no incremental bookkeeping — and hundreds of randomized traces of
+//! submit / cancel / complete / expire / dispatch operations drive the
+//! real queue and the model in lockstep, asserting every observable
+//! return value and gauge agrees at every step. On top of the
+//! equivalence, the traces assert the scheduler's headline guarantees
+//! directly:
+//!
+//! - **fairness / no starvation**: no client ever holds more than its
+//!   slot cap of the pool, and under a greedy backlog a newly-arrived
+//!   client is served within one scheduling round;
+//! - **priority ordering**: within one client, a drain dispatches in
+//!   (priority desc, submission seq asc) order — FIFO within a class;
+//! - **deadline expiry**: a job whose deadline has passed is reported by
+//!   `expire` and is never dispatched, while deadline-free jobs and jobs
+//!   at exactly their deadline instant survive.
+//!
+//! Failures replay deterministically: the harness prints the case seed
+//! (`PROPCHECK_SEED`), and the trace is a pure function of it.
+
+use std::collections::BTreeMap;
+
+use parlamp::service::{Busy, ClientDepth, FairQueue, QueueLimits};
+use parlamp::util::propcheck::{forall, forall_sized};
+use parlamp::util::rng::Rng;
+
+/// Virtual-time charge per dispatch at weight 1 — must match the
+/// scheduler's constant (the model is useless if it models a different
+/// currency).
+const SCALE: u64 = 1 << 20;
+
+// ---- the reference model ---------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct MEntry {
+    id: u64,
+    priority: u8,
+    deadline_at: Option<u64>,
+    seq: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct MClient {
+    pending: Vec<MEntry>,
+    active: usize,
+    vtime: u64,
+    weight: u32,
+}
+
+impl MClient {
+    fn idle(&self) -> bool {
+        self.pending.is_empty() && self.active == 0
+    }
+}
+
+/// The naive scan-everything reference scheduler.
+#[derive(Clone, Debug)]
+struct Model {
+    limits: QueueLimits,
+    clients: BTreeMap<String, MClient>,
+    seq: u64,
+}
+
+impl Model {
+    fn new(limits: QueueLimits) -> Model {
+        Model { limits, clients: BTreeMap::new(), seq: 0 }
+    }
+
+    fn set_weight(&mut self, client: &str, weight: u32) {
+        self.clients.entry(client.to_string()).or_default().weight = weight.max(1);
+    }
+
+    fn len(&self) -> usize {
+        self.clients.values().map(|c| c.pending.len()).sum()
+    }
+
+    fn active_total(&self) -> usize {
+        self.clients.values().map(|c| c.active).sum()
+    }
+
+    fn push(
+        &mut self,
+        client: &str,
+        id: u64,
+        priority: u8,
+        deadline_ms: u64,
+        now_ms: u64,
+    ) -> Result<(), Busy> {
+        if self.len() >= self.limits.global_queued {
+            return Err(Busy::Global { queued: self.len(), cap: self.limits.global_queued });
+        }
+        let queued = self.clients.get(client).map_or(0, |c| c.pending.len());
+        if queued >= self.limits.per_client_queued {
+            return Err(Busy::Client { queued, cap: self.limits.per_client_queued });
+        }
+        let floor = self
+            .clients
+            .iter()
+            .filter(|(name, c)| name.as_str() != client && !c.idle())
+            .map(|(_, c)| c.vtime)
+            .min();
+        let state = self.clients.entry(client.to_string()).or_default();
+        if state.idle() {
+            if let Some(floor) = floor {
+                state.vtime = state.vtime.max(floor);
+            }
+        }
+        state.pending.push(MEntry {
+            id,
+            priority,
+            deadline_at: (deadline_ms > 0).then(|| now_ms.saturating_add(deadline_ms)),
+            seq: self.seq,
+        });
+        self.seq += 1;
+        Ok(())
+    }
+
+    fn expire(&mut self, now_ms: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        for c in self.clients.values_mut() {
+            let (dead, live): (Vec<MEntry>, Vec<MEntry>) = c
+                .pending
+                .drain(..)
+                .partition(|e| e.deadline_at.is_some_and(|at| now_ms > at));
+            out.extend(dead.into_iter().map(|e| e.id));
+            c.pending = live;
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn pop(&mut self) -> Option<u64> {
+        let winner = self
+            .clients
+            .iter()
+            .filter(|(_, c)| {
+                !c.pending.is_empty() && c.active < self.limits.per_client_active
+            })
+            .min_by_key(|(name, c)| (c.vtime, name.clone()))
+            .map(|(name, _)| name.clone())?;
+        let c = self.clients.get_mut(&winner).expect("winner exists");
+        let mut best = 0;
+        for i in 1..c.pending.len() {
+            let (a, b) = (&c.pending[i], &c.pending[best]);
+            if a.priority > b.priority || (a.priority == b.priority && a.seq < b.seq) {
+                best = i;
+            }
+        }
+        let entry = c.pending.remove(best);
+        c.active += 1;
+        c.vtime += SCALE / u64::from(c.weight.max(1));
+        Some(entry.id)
+    }
+
+    fn complete(&mut self, client: &str) {
+        if let Some(c) = self.clients.get_mut(client) {
+            c.active = c.active.saturating_sub(1);
+        }
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        for c in self.clients.values_mut() {
+            if let Some(i) = c.pending.iter().position(|e| e.id == id) {
+                c.pending.remove(i);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn position(&self, id: u64) -> Option<usize> {
+        let target = self.clients.values().flat_map(|c| c.pending.iter()).find(|e| e.id == id)?;
+        Some(
+            self.clients
+                .values()
+                .flat_map(|c| c.pending.iter())
+                .filter(|e| {
+                    e.priority > target.priority
+                        || (e.priority == target.priority && e.seq < target.seq)
+                })
+                .count(),
+        )
+    }
+
+    fn depths(&self) -> Vec<ClientDepth> {
+        self.clients
+            .iter()
+            .map(|(name, c)| ClientDepth {
+                client: name.clone(),
+                queued: c.pending.len(),
+                active: c.active,
+            })
+            .collect()
+    }
+
+    /// The deadline a pending id carries (for never-dispatched-late checks).
+    fn deadline_of(&self, id: u64) -> Option<u64> {
+        self.clients
+            .values()
+            .flat_map(|c| c.pending.iter())
+            .find(|e| e.id == id)
+            .and_then(|e| e.deadline_at)
+    }
+
+    /// Which client owns a pending id.
+    fn owner_of(&self, id: u64) -> Option<String> {
+        self.clients
+            .iter()
+            .find(|(_, c)| c.pending.iter().any(|e| e.id == id))
+            .map(|(name, _)| name.clone())
+    }
+}
+
+// ---- lockstep driver -------------------------------------------------------
+
+const CLIENT_NAMES: [&str; 3] = ["ada", "bob", "cyd"];
+
+/// Compare every observable gauge of queue vs model.
+fn check_gauges(q: &FairQueue, m: &Model, step: usize) -> Result<(), String> {
+    if q.len() != m.len() {
+        return Err(format!("step {step}: len {} vs model {}", q.len(), m.len()));
+    }
+    if q.is_empty() != (m.len() == 0) {
+        return Err(format!("step {step}: is_empty disagrees"));
+    }
+    if q.active_total() != m.active_total() {
+        return Err(format!(
+            "step {step}: active_total {} vs model {}",
+            q.active_total(),
+            m.active_total()
+        ));
+    }
+    let (qd, md) = (q.depths(), m.depths());
+    if qd != md {
+        return Err(format!("step {step}: depths {qd:?} vs model {md:?}"));
+    }
+    // Invariant: the slot cap holds for everyone, always.
+    for d in &qd {
+        if d.active > m.limits.per_client_active {
+            return Err(format!(
+                "step {step}: client {} holds {} slots, cap {}",
+                d.client, d.active, m.limits.per_client_active
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// One randomized trace: drive queue and model in lockstep, then drain to
+/// empty mirroring the daemon's expire-before-pop discipline.
+fn run_trace(rng: &mut Rng, steps: usize) -> Result<(), String> {
+    let limits = QueueLimits {
+        per_client_queued: rng.range(1, 4) as usize,
+        global_queued: rng.range(2, 8) as usize,
+        per_client_active: rng.range(1, 3) as usize,
+    };
+    let mut q = FairQueue::new(limits);
+    let mut m = Model::new(limits);
+    for name in CLIENT_NAMES {
+        if rng.bernoulli(0.5) {
+            let w = rng.range(1, 3) as u32;
+            q.set_weight(name, w);
+            m.set_weight(name, w);
+        }
+    }
+
+    let mut now: u64 = 0;
+    let mut next_id: u64 = 1;
+    let mut live: Vec<u64> = Vec::new(); // queued ids (model-tracked)
+
+    for step in 0..steps {
+        now += rng.below(40);
+        match rng.below(10) {
+            // submit (weighted to keep the queue busy)
+            0..=4 => {
+                let client = rng.choose(&CLIENT_NAMES);
+                let id = next_id;
+                let priority = rng.below(4) as u8;
+                let deadline_ms = if rng.bernoulli(0.3) { rng.range(1, 60) } else { 0 };
+                let got = q.push(client, id, priority, deadline_ms, now);
+                let want = m.push(client, id, priority, deadline_ms, now);
+                if got != want {
+                    return Err(format!("step {step}: push({client},{id}) {got:?} vs {want:?}"));
+                }
+                if got.is_ok() {
+                    live.push(id);
+                    next_id += 1;
+                }
+            }
+            // dispatch, mirroring the daemon: expire first, then pop
+            5..=6 => {
+                let got_exp = q.expire(now);
+                let want_exp = m.expire(now);
+                if got_exp != want_exp {
+                    return Err(format!("step {step}: expire {got_exp:?} vs {want_exp:?}"));
+                }
+                live.retain(|id| !got_exp.contains(id));
+                // After expire(now), nothing pending may be past deadline.
+                if let Some(id) = live.iter().find(|id| {
+                    m.deadline_of(**id).is_some_and(|at| now > at)
+                }) {
+                    return Err(format!("step {step}: job {id} survived its deadline"));
+                }
+                let got = q.pop();
+                let want = m.pop();
+                if got != want {
+                    return Err(format!("step {step}: pop {got:?} vs model {want:?}"));
+                }
+                if let Some(id) = got {
+                    live.retain(|x| *x != id);
+                }
+            }
+            // release a slot
+            7 => {
+                let client = rng.choose(&CLIENT_NAMES);
+                q.complete(client);
+                m.complete(client);
+            }
+            // cancel a live or bogus id
+            8 => {
+                let id = if !live.is_empty() && rng.bernoulli(0.8) {
+                    live[rng.index(live.len())]
+                } else {
+                    next_id + 100 // unknown
+                };
+                let got = q.cancel(id);
+                let want = m.cancel(id);
+                if got != want {
+                    return Err(format!("step {step}: cancel({id}) {got} vs model {want}"));
+                }
+                live.retain(|x| *x != id);
+            }
+            // position probe
+            _ => {
+                if !live.is_empty() {
+                    let id = live[rng.index(live.len())];
+                    let (got, want) = (q.position(id), m.position(id));
+                    if got != want {
+                        return Err(format!(
+                            "step {step}: position({id}) {got:?} vs model {want:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        check_gauges(&q, &m, step)?;
+    }
+
+    // Drain: the daemon's steady-state loop — expire, pop, complete —
+    // until both agree the queue is empty. Must terminate: with all
+    // slots free, any pending client is eligible.
+    let mut guard = 0;
+    loop {
+        guard += 1;
+        if guard > 10_000 {
+            return Err("drain did not terminate".into());
+        }
+        now += 1;
+        let (ge, we) = (q.expire(now), m.expire(now));
+        if ge != we {
+            return Err(format!("drain: expire {ge:?} vs model {we:?}"));
+        }
+        // Snapshot ownership before the pops remove the entry.
+        let pre = m.clone();
+        match (q.pop(), m.pop()) {
+            (got, want) if got != want => {
+                return Err(format!("drain: pop {got:?} vs model {want:?}"));
+            }
+            (Some(id), _) => {
+                // Return the slot immediately, as the daemon does when the
+                // job finishes.
+                let owner = pre.owner_of(id).ok_or("popped id unknown to the model")?;
+                q.complete(&owner);
+                m.complete(&owner);
+            }
+            (None, _) => {
+                if q.is_empty() && m.len() == 0 {
+                    break;
+                }
+                // Pending but nobody eligible: free every slot and retry.
+                for name in CLIENT_NAMES {
+                    q.complete(name);
+                    m.complete(name);
+                }
+            }
+        }
+        check_gauges(&q, &m, usize::MAX)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn randomized_traces_match_reference_model() {
+    // ≥ 500 independent traces, ramping from short to long histories.
+    forall_sized("fair queue matches reference model", 512, |rng, case| {
+        let steps = 20 + (case as usize % 8) * 15; // 20..125 ops
+        run_trace(rng, steps)
+    });
+}
+
+// ---- targeted guarantees on top of the equivalence -------------------------
+
+#[test]
+fn no_starvation_while_another_client_is_saturated() {
+    // A greedy client with a deep backlog never locks out a late arrival:
+    // once `meek` submits, it is dispatched within one scheduling round
+    // (its job is among the next 2 pops), for any slot cap.
+    forall("greedy client cannot starve a newcomer", 64, |rng| {
+        let cap = rng.range(1, 3) as usize;
+        let mut q = FairQueue::new(QueueLimits {
+            per_client_queued: 64,
+            global_queued: 256,
+            per_client_active: cap,
+        });
+        for id in 1..=20u64 {
+            q.push("greedy", id, 1, 0, 0).map_err(|e| e.to_string())?;
+        }
+        // Let greedy run for a random while (completing as it goes, so it
+        // is never capped and keeps the pool saturated).
+        for _ in 0..rng.below(10) {
+            if q.pop().is_some() {
+                q.complete("greedy");
+            }
+        }
+        q.push("meek", 999, 1, 0, 0).map_err(|e| e.to_string())?;
+        for _ in 0..2 {
+            match q.pop() {
+                Some(999) => return Ok(()),
+                Some(_) => q.complete("greedy"),
+                None => return Err("pool stalled with work pending".into()),
+            }
+        }
+        Err("meek's job was not dispatched within one round".into())
+    });
+}
+
+#[test]
+fn drain_order_is_priority_desc_then_fifo_within_class() {
+    // Single client ⇒ fairness is irrelevant and the dispatch order must
+    // be exactly (priority desc, submission order asc).
+    forall("priority classes drain FIFO", 128, |rng| {
+        let mut q = FairQueue::new(QueueLimits {
+            per_client_queued: 64,
+            global_queued: 256,
+            per_client_active: 1,
+        });
+        let n = rng.range(2, 24);
+        let mut jobs: Vec<(u64, u8)> = Vec::new(); // (id, priority) in submit order
+        for id in 1..=n {
+            let priority = rng.below(3) as u8;
+            q.push("solo", id, priority, 0, 0).map_err(|e| e.to_string())?;
+            jobs.push((id, priority));
+        }
+        let mut order = Vec::new();
+        while let Some(id) = q.pop() {
+            order.push(id);
+            q.complete("solo");
+        }
+        let mut want = jobs.clone();
+        // Stable sort keeps submission order within a priority class.
+        want.sort_by_key(|(_, p)| std::cmp::Reverse(*p));
+        let want: Vec<u64> = want.into_iter().map(|(id, _)| id).collect();
+        if order != want {
+            return Err(format!("dispatched {order:?}, want {want:?} from {jobs:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn expired_jobs_are_reported_and_never_dispatched() {
+    forall("deadlines partition the queue exactly", 128, |rng| {
+        let mut q = FairQueue::new(QueueLimits {
+            per_client_queued: 64,
+            global_queued: 256,
+            per_client_active: 8,
+        });
+        let submit_at = 1_000u64;
+        let check_at = submit_at + rng.range(0, 120);
+        let n = rng.range(1, 16);
+        let mut doomed = Vec::new();
+        let mut safe = Vec::new();
+        for id in 1..=n {
+            let deadline_ms = if rng.bernoulli(0.5) { rng.range(1, 100) } else { 0 };
+            q.push("c", id, 1, deadline_ms, submit_at).map_err(|e| e.to_string())?;
+            // Strict: the deadline instant itself is still servable.
+            if deadline_ms > 0 && check_at > submit_at + deadline_ms {
+                doomed.push(id);
+            } else {
+                safe.push(id);
+            }
+        }
+        let expired = q.expire(check_at);
+        if expired != doomed {
+            return Err(format!("expire -> {expired:?}, want {doomed:?}"));
+        }
+        let mut served = Vec::new();
+        while let Some(id) = q.pop() {
+            served.push(id);
+            q.complete("c"); // free the slot so the cap never stalls the drain
+        }
+        served.sort_unstable();
+        if served != safe {
+            return Err(format!("dispatched {served:?}, want exactly {safe:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weights_split_service_proportionally() {
+    // Deterministic: weight 2 vs weight 1, both with deep backlogs and a
+    // free-slot pool — over any window the heavy client gets 2 of every
+    // 3 dispatches.
+    let mut q = FairQueue::new(QueueLimits {
+        per_client_queued: 64,
+        global_queued: 256,
+        per_client_active: 64,
+    });
+    q.set_weight("heavy", 2);
+    q.set_weight("light", 1);
+    for id in 1..=30u64 {
+        q.push("heavy", id, 1, 0, 0).unwrap();
+        q.push("light", 100 + id, 1, 0, 0).unwrap();
+    }
+    let first_12: Vec<u64> = (0..12).filter_map(|_| q.pop()).collect();
+    let heavy = first_12.iter().filter(|id| **id <= 30).count();
+    assert_eq!(heavy, 8, "weight 2:1 must yield a 2:1 dispatch split, got {first_12:?}");
+}

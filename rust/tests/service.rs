@@ -65,6 +65,10 @@ struct Daemon {
 
 impl Daemon {
     fn start(tag: &str, procs: usize) -> Daemon {
+        Daemon::start_with(tag, procs, &[])
+    }
+
+    fn start_with(tag: &str, procs: usize, extra: &[&str]) -> Daemon {
         let socket = test_dir(tag).join("parlamp.sock");
         let child = Command::new(parlamp_bin())
             .arg("serve")
@@ -74,6 +78,7 @@ impl Daemon {
             .arg(procs.to_string())
             .arg("--cache")
             .arg("8")
+            .args(extra)
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .spawn()
@@ -281,6 +286,60 @@ fn daemon_serves_over_tcp() {
             panic!("tcp daemon did not exit in time");
         }
         std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Acceptance (DESIGN.md §13): the persistent result store keeps the
+/// cache warm across daemon restarts. Daemon 1 mines a job and appends it
+/// to `--store`; daemon 2, started fresh on the same store file, answers
+/// the identical submission as a terminal cache hit at submit time — with
+/// zero fleet phases run, proven by STATS reporting zero mined jobs.
+#[test]
+fn persistent_store_survives_daemon_restart() {
+    let db = cohort();
+    let serial = lamp_serial(&db, 0.05);
+    let hist = serial_sparse_hist(&db, serial.min_sup);
+    let store = test_dir("store").join("results.plst");
+    let store_arg = store.to_str().expect("utf-8 temp path").to_string();
+
+    // Daemon 1: mine the job once; the result is appended to the store.
+    {
+        let daemon = Daemon::start_with("store1", 2, &["--store", &store_arg]);
+        let mut client = daemon.client();
+        let id = client.submit(JobSpec::new(db.clone(), 0.05)).expect("submit");
+        let outcome = client.results(id).expect("results");
+        assert!(!outcome.from_cache, "first run must mine");
+        assert_matches_serial(&outcome, &serial, &hist);
+        let stats = client.stats().expect("stats");
+        assert_eq!(stats.jobs_mined, 1);
+        assert_eq!(stats.store_appends, 1, "the mined result must be persisted");
+        assert_eq!(stats.store_entries, 1);
+        client.shutdown().expect("shutdown ack");
+        assert!(daemon.wait_exit().success());
+    }
+    assert!(store.exists(), "store file must outlive the daemon");
+
+    // Daemon 2: fresh process, same store. The identical submission is
+    // terminal at submit time — no queue, no fleet phase, served from the
+    // preloaded disk record.
+    {
+        let daemon = Daemon::start_with("store2", 2, &["--store", &store_arg]);
+        let mut client = daemon.client();
+        let id = client.submit(JobSpec::new(db.clone(), 0.05)).expect("resubmit");
+        match client.status(id).expect("status") {
+            JobState::Done { from_cache } => {
+                assert!(from_cache, "restart must serve the job from the store");
+            }
+            other => panic!("restarted daemon did not answer at submit time: {other}"),
+        }
+        let outcome = client.results(id).expect("cached results");
+        assert!(outcome.from_cache);
+        assert_matches_serial(&outcome, &serial, &hist);
+        let stats = client.stats().expect("stats");
+        assert_eq!(stats.jobs_mined, 0, "zero fleet phases may run for a store hit");
+        assert_eq!(stats.store_entries, 1);
+        client.shutdown().expect("shutdown ack");
+        assert!(daemon.wait_exit().success());
     }
 }
 
