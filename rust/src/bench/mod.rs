@@ -108,6 +108,22 @@ pub struct EngineRun {
     /// of the hub-demotion win. 0 on every other engine.
     pub hub_frames: u64,
     pub direct_frames: u64,
+    /// Fig. 7 CPU-time breakdown summed over processes and both
+    /// distributed phases (DESIGN.md §8); all 0 on the serial engines,
+    /// which have no per-rank instrumentation.
+    pub preprocess_s: f64,
+    pub main_s: f64,
+    pub probe_s: f64,
+    pub idle_s: f64,
+    /// Steal-protocol totals over both distributed phases: REQUEST frames
+    /// sent, GIVE frames answered, stack roots shipped. 0 on the serial
+    /// engines.
+    pub steal_sent: u64,
+    pub steal_gives: u64,
+    pub tasks_shipped: u64,
+    /// Per-rank event timelines when tracing is on (DESIGN.md §14);
+    /// empty otherwise and on the serial engines.
+    pub traces: Vec<crate::obs::trace::RankTrace>,
 }
 
 /// Run the full three-phase LAMP procedure on `engine`
@@ -149,6 +165,14 @@ pub fn measure_engine(
                 significant: sig.len(),
                 hub_frames: 0,
                 direct_frames: 0,
+                preprocess_s: 0.0,
+                main_s: 0.0,
+                probe_s: 0.0,
+                idle_s: 0.0,
+                steal_sent: 0,
+                steal_gives: 0,
+                tasks_shipped: 0,
+                traces: Vec::new(),
             })
         }
         EngineSelect::Lamp2 => {
@@ -169,6 +193,14 @@ pub fn measure_engine(
                 significant: res.significant.len(),
                 hub_frames: 0,
                 direct_frames: 0,
+                preprocess_s: 0.0,
+                main_s: 0.0,
+                probe_s: 0.0,
+                idle_s: 0.0,
+                steal_sent: 0,
+                steal_gives: 0,
+                tasks_shipped: 0,
+                traces: Vec::new(),
             })
         }
         EngineSelect::Backend(backend) => {
@@ -177,6 +209,7 @@ pub fn measure_engine(
             let (secs, run) = time_once(|| coord.run(db, &backend));
             let run = run?;
             let comm = run.comm_total();
+            let [preprocess_s, main_s, probe_s, idle_s] = run.breakdown_total().as_secs();
             Ok(EngineRun {
                 wall_s: secs,
                 t_parallel_s: run.t_parallel_s(),
@@ -191,6 +224,14 @@ pub fn measure_engine(
                 significant: run.result.significant.len(),
                 hub_frames: comm.hub_frames,
                 direct_frames: comm.direct_frames,
+                preprocess_s,
+                main_s,
+                probe_s,
+                idle_s,
+                steal_sent: comm.sent,
+                steal_gives: comm.gives,
+                tasks_shipped: comm.tasks_shipped,
+                traces: run.traces(),
             })
         }
     }

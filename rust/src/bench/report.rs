@@ -18,7 +18,11 @@ use anyhow::{bail, ensure, Context, Result};
 /// other engines) and the `hub_frames`/`direct_frames` relay counters.
 /// v3 adds `transport` ("unix"/"tcp"; "none" for the other engines) — the
 /// stream transport the process fabric ran over (DESIGN.md §11).
-pub const SCHEMA_ID: &str = "parlamp-bench/3";
+/// v4 adds the Fig. 7 CPU-time breakdown (`preprocess_s`/`main_s`/
+/// `probe_s`/`idle_s`, summed over ranks and both distributed phases) and
+/// the steal-protocol totals (`steal_sent`/`steal_gives`/`tasks_shipped`)
+/// — all 0 on the serial engines (DESIGN.md §14).
+pub const SCHEMA_ID: &str = "parlamp-bench/4";
 
 /// One `(scenario, engine)` measurement.
 #[derive(Clone, Debug)]
@@ -57,6 +61,17 @@ pub struct BenchRecord {
     pub hub_frames: u64,
     /// Process engine: data-plane frames sent worker-to-worker directly.
     pub direct_frames: u64,
+    /// Fig. 7 CPU-time breakdown, summed over ranks and both distributed
+    /// phases; 0 on the serial engines (no per-rank instrumentation).
+    pub preprocess_s: f64,
+    pub main_s: f64,
+    pub probe_s: f64,
+    pub idle_s: f64,
+    /// Steal-protocol totals over both distributed phases: REQUEST frames
+    /// sent, GIVE frames answered, stack roots shipped. 0 elsewhere.
+    pub steal_sent: u64,
+    pub steal_gives: u64,
+    pub tasks_shipped: u64,
 }
 
 /// A full report: header + one record per `(scenario, engine)`.
@@ -118,7 +133,14 @@ impl BenchReport {
             s.push_str(&format!("\"phase2_closed\": {}, ", r.phase2_closed));
             s.push_str(&format!("\"significant\": {}, ", r.significant));
             s.push_str(&format!("\"hub_frames\": {}, ", r.hub_frames));
-            s.push_str(&format!("\"direct_frames\": {}}}", r.direct_frames));
+            s.push_str(&format!("\"direct_frames\": {}, ", r.direct_frames));
+            s.push_str(&format!("\"preprocess_s\": {}, ", json_num(r.preprocess_s)));
+            s.push_str(&format!("\"main_s\": {}, ", json_num(r.main_s)));
+            s.push_str(&format!("\"probe_s\": {}, ", json_num(r.probe_s)));
+            s.push_str(&format!("\"idle_s\": {}, ", json_num(r.idle_s)));
+            s.push_str(&format!("\"steal_sent\": {}, ", r.steal_sent));
+            s.push_str(&format!("\"steal_gives\": {}, ", r.steal_gives));
+            s.push_str(&format!("\"tasks_shipped\": {}}}", r.tasks_shipped));
             s.push_str(if i + 1 < self.runs.len() { ",\n" } else { "\n" });
         }
         s.push_str("  ]\n}\n");
@@ -376,9 +398,16 @@ const RUN_NUM_FIELDS: &[&str] = &[
     "significant",
     "hub_frames",
     "direct_frames",
+    "preprocess_s",
+    "main_s",
+    "probe_s",
+    "idle_s",
+    "steal_sent",
+    "steal_gives",
+    "tasks_shipped",
 ];
 
-/// Validate a rendered report against the `parlamp-bench/3` schema:
+/// Validate a rendered report against the `parlamp-bench/4` schema:
 /// header fields present and typed, at least one run, every run carrying
 /// every field with the right type and non-negative measurements. Returns
 /// the number of runs. This is the CI gate — timings are deliberately not
@@ -428,6 +457,10 @@ struct CompareRow {
     transports: (String, String),
     wall: (f64, f64),
     units: (f64, f64),
+    /// Fig. 7 breakdown seconds (main expansion loop, idle wait) — v4
+    /// fields, so the deltas localize a slowdown to work vs. starvation.
+    main: (f64, f64),
+    idle: (f64, f64),
     /// Result fields that must match between runs of the same scenario;
     /// non-empty = a correctness regression, flagged in the report.
     mismatches: Vec<&'static str>,
@@ -492,6 +525,8 @@ pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
             transports: (strf(ra, "transport"), strf(rb, "transport")),
             wall: (num(ra, "wall_s"), num(rb, "wall_s")),
             units: (num(ra, "work_units"), num(rb, "work_units")),
+            main: (num(ra, "main_s"), num(rb, "main_s")),
+            idle: (num(ra, "idle_s"), num(rb, "idle_s")),
             mismatches,
         });
     }
@@ -502,7 +537,7 @@ pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
 
     let mut t = crate::util::table::Table::new(&[
         "scenario", "engine", "plane", "transport", "wall A", "wall B", "Δwall", "units A",
-        "units B", "Δunits", "result",
+        "units B", "Δunits", "Δmain", "Δidle", "result",
     ]);
     let joined = |pair: &(String, String)| {
         if pair.0 == pair.1 {
@@ -532,6 +567,8 @@ pub fn compare(doc_a: &str, doc_b: &str) -> Result<String> {
             (r.units.0 as u64).to_string(),
             (r.units.1 as u64).to_string(),
             pct_delta(r.units.0, r.units.1),
+            pct_delta(r.main.0, r.main.1),
+            pct_delta(r.idle.0, r.idle.1),
             result,
         ]);
     }
@@ -578,6 +615,13 @@ mod tests {
             significant: 3,
             hub_frames: 0,
             direct_frames: if engine == "process" { 42 } else { 0 },
+            preprocess_s: 0.001,
+            main_s: 0.1,
+            probe_s: 0.002,
+            idle_s: 0.02,
+            steal_sent: if engine == "process" { 12 } else { 0 },
+            steal_gives: if engine == "process" { 9 } else { 0 },
+            tasks_shipped: if engine == "process" { 42 } else { 0 },
         }
     }
 

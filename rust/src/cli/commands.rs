@@ -16,6 +16,9 @@ use crate::fabric::sim::NetModel;
 use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
 use crate::net::Endpoint;
+use crate::obs::log::{self, Tags};
+use crate::obs::trace::RankTrace;
+use crate::obs::{chrome, prom, summary, trace as obs_trace};
 use crate::par::{DataPlane, ProcessConfig, ProcessFleet};
 use crate::service::{print_join_commands, Client, QueueLimits, ServeConfig};
 use crate::util::fault::FaultPlan;
@@ -197,6 +200,15 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
         fault.is_none() || engine == "process",
         "--fault-inject requires --engine process (got '{engine}')"
     );
+    // Tracing needs ranks; the serial pipelines have none (DESIGN.md §14).
+    let trace_out = args.get("trace");
+    anyhow::ensure!(
+        trace_out.is_none() || matches!(select, EngineSelect::Backend(_)),
+        "--trace requires a distributed engine (threads|sim|process), got '{engine}'"
+    );
+    if trace_out.is_some() {
+        obs_trace::set_enabled(true);
+    }
     println!(
         "N={} items={} density={:.4}% N_pos={}",
         db.n_trans(),
@@ -231,12 +243,22 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
             if let Some(plan) = fault {
                 coord = coord.with_fault_plan(plan);
             }
+            // Smaller quanta = more steal opportunities on short runs;
+            // pairs with --trace to make the protocol visible (§14).
+            if args.get("probe-budget").is_some() {
+                coord = coord.with_probe_budget(args.get_u64("probe-budget", 0)?);
+            }
             let run = match &hosts {
                 Some(hosts) => run_lamp_hosts(&coord, &db, args, hosts, data_plane, seed)?,
                 None => coord.run(&db, &backend)?,
             };
             let world = hosts.as_ref().map_or(p, Vec::len);
             println!("engine={engine} P={world} | {}", run.summary());
+            if let Some(path) = trace_out {
+                std::fs::write(path, chrome::export(&run.traces()))
+                    .with_context(|| format!("write {path}"))?;
+                println!("wrote {path} (trace-event JSON; load at ui.perfetto.dev)");
+            }
             run.result.significant
         }
     };
@@ -350,7 +372,15 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 2015)?;
     let data_plane = data_plane_from_args(args)?;
     let transport = transport_from_args(args)?;
-    let label = args.get("label").unwrap_or("pr6");
+    // `--trace FILE`: record every distributed run and export the last
+    // one's timeline (the bench loop reuses ranks run after run, so one
+    // merged file would stack unrelated scenarios on the same tracks).
+    let trace_out = args.get("trace");
+    if trace_out.is_some() {
+        obs_trace::set_enabled(true);
+    }
+    let mut last_trace: Option<(String, String, Vec<RankTrace>)> = None;
+    let label = args.get("label").unwrap_or("pr9");
     let default_out = format!("BENCH_{label}.json");
     let out = args.get("out").unwrap_or(&default_out);
     let default_engines = ENGINES.join(",");
@@ -396,6 +426,9 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         for &engine in &engines {
             let r = measure_engine(&db, engine, procs, alpha, seed, data_plane, transport)
                 .with_context(|| format!("{} on {}", engine, sc.name))?;
+            if trace_out.is_some() && !r.traces.is_empty() {
+                last_trace = Some((sc.name.to_string(), engine.to_string(), r.traces.clone()));
+            }
             t.row(vec![
                 sc.name.to_string(),
                 engine.to_string(),
@@ -435,6 +468,13 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 significant: r.significant,
                 hub_frames: r.hub_frames,
                 direct_frames: r.direct_frames,
+                preprocess_s: r.preprocess_s,
+                main_s: r.main_s,
+                probe_s: r.probe_s,
+                idle_s: r.idle_s,
+                steal_sent: r.steal_sent,
+                steal_gives: r.steal_gives,
+                tasks_shipped: r.tasks_shipped,
             });
         }
     }
@@ -444,6 +484,13 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     report::validate(&doc).context("self-check emitted JSON")?;
     std::fs::write(out, &doc).with_context(|| format!("write {out}"))?;
     println!("wrote {out} ({} runs, schema {})", rep.len(), crate::bench::SCHEMA_ID);
+    if let Some(path) = trace_out {
+        let (sc, engine, traces) = last_trace
+            .context("--trace recorded nothing (no distributed engine in the selection)")?;
+        std::fs::write(path, chrome::export(&traces))
+            .with_context(|| format!("write {path}"))?;
+        println!("wrote {path} (trace of the last distributed run: {sc}/{engine})");
+    }
     Ok(())
 }
 
@@ -537,6 +584,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     cfg.remote_workers = hosts;
     cfg.fault = fault_from_args(args)?;
+    cfg.trace = args.get("trace").map(PathBuf::from);
+    if cfg.trace.is_some() {
+        obs_trace::set_enabled(true);
+    }
     anyhow::ensure!(cfg.cache_cap >= 1, "--cache must be ≥ 1");
     crate::service::serve(&cfg)
 }
@@ -589,7 +640,11 @@ pub fn cmd_results(args: &Args) -> Result<()> {
     let id = job_id(args)?;
     let outcome = connect_client(args)?.results(id)?;
     if outcome.from_cache {
-        eprintln!("job {id}: served from the result cache");
+        log::info(
+            "client",
+            &Tags::job(id),
+            format_args!("job {id}: served from the result cache"),
+        );
     }
     let res = outcome.to_lamp_result();
     println!("{}", res.summary());
@@ -611,11 +666,32 @@ pub fn cmd_cancel(args: &Args) -> Result<()> {
 
 /// `parlamp stats` — print the daemon's operational counters: per-fleet
 /// utilization, per-client queue depths, cache/store counters, and job
-/// latency histograms.
+/// latency histograms. `--format prom` renders the same STATS frame as
+/// the Prometheus text exposition format (DESIGN.md §14).
 pub fn cmd_stats(args: &Args) -> Result<()> {
     let stats = connect_client(args)?.stats()?;
-    print!("{stats}");
+    match args.get("format").unwrap_or("human") {
+        "human" => print!("{stats}"),
+        "prom" => print!("{}", prom::render(&stats)),
+        other => bail!("unknown --format '{other}' (human|prom)"),
+    }
     Ok(())
+}
+
+/// `parlamp trace summary FILE` — recompute the paper's Fig. 7 view from
+/// an exported Chrome trace: per-rank breakdown, steal matrix, DTD wave
+/// spreads. Takes positional operands, so [`super::run`] dispatches it
+/// before the flag parser.
+pub fn cmd_trace(rest: &[String]) -> Result<()> {
+    match rest {
+        [verb, file] if verb == "summary" => {
+            let doc =
+                std::fs::read_to_string(file).with_context(|| format!("read {file}"))?;
+            print!("{}", summary::summarize(&doc)?);
+            Ok(())
+        }
+        _ => bail!("usage: parlamp trace summary FILE"),
+    }
 }
 
 /// `parlamp shutdown` — ask the daemon to drain its queue and exit.

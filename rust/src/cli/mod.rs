@@ -5,12 +5,13 @@
 //! parlamp lamp     --data t.dat --labels t.lab
 //!                  [--engine serial|lamp2|threads|sim|process]
 //!                  [--data-plane hub|mesh] [--transport unix|tcp]
-//!                  [--hosts h1:p,h2:p,..]
+//!                  [--hosts h1:p,h2:p,..] [--trace trace.json]
 //! parlamp mine     --data t.dat [--min-sup K]
 //! parlamp sim      --scenario hapmap-dom-20 --procs 96 [--naive] [--ethernet]
 //! parlamp bench    [--quick] [--engines a,b,..] [--scenarios x,y|all]
-//!                  [--transport unix|tcp] [--out BENCH_pr6.json]
+//!                  [--transport unix|tcp] [--out BENCH_pr9.json]
 //!                  | --check FILE | --compare A.json,B.json
+//! parlamp trace    summary trace.json
 //! parlamp gendata  --scenario alz-dom-5 --out dir/
 //! parlamp scenarios
 //! parlamp serve    --endpoint unix:/run/parlamp.sock --procs 8
@@ -42,10 +43,24 @@ pub fn main() {
 
 /// Dispatch; returns the process exit code (testable).
 pub fn run(argv: &[String]) -> i32 {
+    // Dump the last-N structured log lines if anything panics, in every
+    // command (workers re-install the same hook after fork — idempotent).
+    crate::obs::log::install_panic_hook();
     let Some((cmd, rest)) = argv.split_first() else {
         eprintln!("{}", usage());
         return 2;
     };
+    // `trace` is the one verb with positional operands (`trace summary
+    // FILE`), which the flag parser would reject — dispatch it first.
+    if cmd == "trace" {
+        return match commands::cmd_trace(rest) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        };
+    }
     let args = match Args::parse(rest) {
         Ok(a) => a,
         Err(e) => {
@@ -100,15 +115,18 @@ USAGE:
                     [--procs P | -n P] [--naive] [--data-plane hub|mesh]
                     [--transport unix|tcp] [--hosts H1:P,H2:P,..]
                     [--endpoint EP] [--screen native|xla|auto] [--seed S]
-                    [--fault-inject rank=R,phase=P,after=N]
+                    [--fault-inject rank=R,phase=P,after=N] [--trace FILE]
+                    [--probe-budget UNITS]
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
                     [--no-preprocess] [--alpha A] [--seed S]
   parlamp bench     [--quick] [--engines E1,E2,..] [--scenarios S1,S2|all]
                     [--procs P] [--alpha A] [--seed S] [--label L]
                     [--out FILE] [--data-plane hub|mesh] [--transport unix|tcp]
+                    [--trace FILE]
   parlamp bench     --check FILE
   parlamp bench     --compare A.json,B.json  (or --compare A.json --with B.json)
+  parlamp trace     summary FILE
   parlamp gendata   --scenario NAME --out DIR [--quick]
   parlamp scenarios [--quick]
   parlamp serve     --endpoint EP [--procs P] [--fleets N] [--cache N]
@@ -116,7 +134,7 @@ USAGE:
                     [--client-slots N]
                     [--data-plane hub|mesh] [--transport unix|tcp]
                     [--hosts H1:P,..] [--fleet-listen EP]
-                    [--fault-inject rank=R,phase=P,after=N]
+                    [--fault-inject rank=R,phase=P,after=N] [--trace FILE]
   parlamp submit    --endpoint EP --data FILE --labels FILE [--alpha A]
                     [--naive] [--no-preprocess] [--screen native|xla|auto]
                     [--seed S] [--priority P] [--deadline-ms MS]
@@ -124,7 +142,7 @@ USAGE:
   parlamp status    --endpoint EP --job ID
   parlamp results   --endpoint EP --job ID
   parlamp cancel    --endpoint EP --job ID
-  parlamp stats     --endpoint EP
+  parlamp stats     --endpoint EP [--format human|prom]
   parlamp shutdown  --endpoint EP
 
 Endpoints (EP) are typed: `unix:<path>` or `tcp:<host>:<port>` (DESIGN.md
@@ -134,11 +152,28 @@ no scheme parses as a Unix endpoint.
 
 `bench` runs the Table-1 scenarios across engines (default: all five) and
 writes the schema-stable perf-trajectory JSON (BENCH_<label>.json; the
-label defaults to pr6 and is stamped into the document header);
+label defaults to pr9 and is stamped into the document header);
 `--quick` shrinks the data and defaults to the single mcf7 scenario;
-`--check` validates an existing file against the parlamp-bench/3 schema;
-`--compare` diffs two reports per (scenario, engine) — wall-clock and
-work-unit deltas — and errors if result fields disagree.
+`--check` validates an existing file against the parlamp-bench/4 schema;
+`--compare` diffs two reports per (scenario, engine) — wall-clock,
+work-unit, and phase-breakdown deltas — and errors if result fields
+disagree.
+
+Observability (DESIGN.md §14): `--trace FILE` on `lamp`, `bench`, and
+`serve` records a fixed-capacity ring of timestamped events per rank
+(phase spans, expand batches, steal REQUEST/GIVE/REJECT, DTD waves,
+checkpoints, respawns) and writes a Chrome/Perfetto trace-event JSON —
+one track per rank plus a hub track, with flow arrows linking each steal
+request to the give that answered it; load it at ui.perfetto.dev.
+`parlamp trace summary FILE` prints the same trace as terminal numbers:
+a per-rank Fig.-7 breakdown, the who-stole-from-whom matrix, and DTD
+wave arrival spreads. `parlamp stats --format prom` renders the daemon's
+STATS frame as the Prometheus text format. `PARLAMP_LOG=level[,target=
+level]` (error|warn|info|debug|trace, default info) filters the
+structured rank/fleet/job-tagged log on stderr. `--probe-budget UNITS`
+(lamp, distributed engines) shrinks the work quantum between mailbox
+polls below the 4M-unit paper default, so short traced runs still
+exercise the steal protocol.
 
 Engines `threads`, `sim`, and `process` run the full three-phase procedure
 through the coordinator (phases 1-2 distributed, phase 3 via the configured

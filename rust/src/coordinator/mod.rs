@@ -38,6 +38,10 @@ use crate::fabric::CommStats;
 use crate::glb::Lifelines;
 use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
 use crate::net::Endpoint;
+use crate::obs::chrome::HUB_RANK;
+use crate::obs::clock;
+use crate::obs::log;
+use crate::obs::trace::{self as obs_trace, EventKind as TraceEv, RankTrace, TraceEvent};
 use crate::par::{
     breakdown, run_sim, run_threads_with, DataPlane, ParRunResult, ProcessConfig, ProcessFleet,
     RunMode, SimConfig, ThreadConfig,
@@ -278,6 +282,10 @@ pub struct CoordinatorRun {
     /// Phase-2 merge: the full histogram at `min_sup`, whose total is the
     /// correction factor.
     pub phase2: ParRunResult,
+    /// Hub-track trace events (phase spans as the coordinator saw them,
+    /// respawn records from the fleet) on the coordinator's clock. Empty
+    /// unless tracing is on (DESIGN.md §14).
+    pub hub_events: Vec<TraceEvent>,
 }
 
 impl CoordinatorRun {
@@ -318,6 +326,42 @@ impl CoordinatorRun {
             self.phase2.makespan_s,
             self.screen
         )
+    }
+
+    /// The run's full timeline: both phases' per-rank traces merged (one
+    /// track per rank, events pre-aligned onto the hub clock) plus the
+    /// hub track ([`HUB_RANK`]) carrying the coordinator's phase 1/2/3
+    /// spans and any respawn records. Empty when the run was untraced.
+    pub fn traces(&self) -> Vec<RankTrace> {
+        let mut by_rank: std::collections::BTreeMap<u32, RankTrace> =
+            std::collections::BTreeMap::new();
+        for rt in self.phase1.traces.iter().chain(&self.phase2.traces) {
+            let merged = by_rank.entry(rt.rank).or_insert_with(|| RankTrace {
+                rank: rt.rank,
+                offset_ns: 0,
+                uncertainty_ns: 0,
+                dropped: 0,
+                events: Vec::new(),
+            });
+            merged.uncertainty_ns = merged.uncertainty_ns.max(rt.uncertainty_ns);
+            merged.dropped += rt.dropped;
+            // Apply each phase's own offset estimate here, so the merged
+            // track needs none (its events are already in hub time).
+            merged.events.extend(
+                rt.events.iter().map(|e| TraceEvent { t_ns: rt.aligned_ns(e), kind: e.kind }),
+            );
+        }
+        let mut out: Vec<RankTrace> = by_rank.into_values().collect();
+        if !self.hub_events.is_empty() {
+            out.push(RankTrace {
+                rank: HUB_RANK,
+                offset_ns: 0,
+                uncertainty_ns: 0,
+                dropped: 0,
+                events: self.hub_events.clone(),
+            });
+        }
+        out
     }
 }
 
@@ -360,6 +404,10 @@ pub struct Coordinator {
     /// (`--fault-inject`, DESIGN.md §12). Only [`Backend::Process`] runs
     /// consult it — the in-process fabrics have no workers to kill.
     fault: Option<FaultPlan>,
+    /// When present, overrides the paper-default probe budget (expansion
+    /// cost units between mailbox polls) on every backend
+    /// (`--probe-budget`, DESIGN.md §14).
+    probe_budget: Option<u64>,
 }
 
 impl Coordinator {
@@ -372,6 +420,7 @@ impl Coordinator {
             screen: ScreenMode::Auto,
             calibration: None,
             fault: None,
+            probe_budget: None,
         }
     }
 
@@ -394,6 +443,17 @@ impl Coordinator {
     /// see [`FaultPlan`]).
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> Coordinator {
         self.fault = Some(plan);
+        self
+    }
+
+    /// Override the probe budget — expansion cost units a worker mines
+    /// between mailbox polls — for phases 1–2 on any backend. A workload
+    /// that fits inside one paper-default quantum (4 M units) leaves no
+    /// mid-phase poll at which a busy victim could answer a steal
+    /// request; a smaller budget makes the steal protocol observable on
+    /// short runs (`--trace`, DESIGN.md §14) at the price of more polling.
+    pub fn with_probe_budget(mut self, units: u64) -> Coordinator {
+        self.probe_budget = Some(units.max(1));
         self
     }
 
@@ -460,11 +520,19 @@ impl Coordinator {
         seed: u64,
     ) -> Result<CoordinatorRun> {
         let cfg = self.process_config(fleet.p(), seed);
-        self.run_phases(db, |mode, idx| {
+        let mut run = self.run_phases(db, |mode, idx| {
             fleet
                 .run_phase(db, mode, &cfg, seed.wrapping_add(idx))
                 .context("process-fabric phase")
-        })
+        })?;
+        // Fold the fleet's hub-side records (respawns, replay fences) into
+        // the hub track; both sets are stamped on this process's clock.
+        let (fleet_events, _dropped) = fleet.take_hub_trace();
+        if !fleet_events.is_empty() {
+            run.hub_events.extend(fleet_events);
+            run.hub_events.sort_by_key(|e| e.t_ns);
+        }
+        Ok(run)
     }
 
     /// The three-phase skeleton, generic over how a distributed phase is
@@ -476,12 +544,23 @@ impl Coordinator {
         F: FnMut(RunMode, u64) -> Result<ParRunResult>,
     {
         let rule = SupportIncreaseRule::new(db.marginals(), self.alpha);
+        // Hub-track spans: the coordinator brackets each phase on its own
+        // clock, which puts phase 3 — never seen by any worker — on the
+        // timeline too. One closure so the off case stays one branch.
+        let mut hub_events: Vec<TraceEvent> = Vec::new();
+        let mut stamp = |events: &mut Vec<TraceEvent>, kind: TraceEv| {
+            if obs_trace::enabled() {
+                events.push(TraceEvent { t_ns: clock::now_ns(), kind });
+            }
+        };
 
         // Phase 1: λ search with the piggybacked support-increase protocol.
         // The engine returns after DTD quiescence with the workers'
         // histograms merged; the exact λ* is then recomputed from that
         // merged histogram (the root's in-flight λ may lag — DESIGN.md §4).
+        stamp(&mut hub_events, TraceEv::PhaseStart { phase: 1, epoch: 0 });
         let mut p1 = phase(RunMode::Phase1 { alpha: self.alpha }, 0)?;
+        stamp(&mut hub_events, TraceEv::PhaseEnd { phase: 1, epoch: 0 });
         p1.finalize_phase1(&rule);
         debug_assert_eq!(
             rule.advance(p1.lambda_final, |l| p1.hist.cs_ge(l)),
@@ -491,11 +570,15 @@ impl Coordinator {
 
         // Phase 2: correction factor k = CS(λ* − 1) by re-mining at the
         // final minimum support.
+        stamp(&mut hub_events, TraceEv::PhaseStart { phase: 2, epoch: 0 });
         let p2 = phase(RunMode::Count { min_sup: p1.min_sup }, 1)?;
+        stamp(&mut hub_events, TraceEv::PhaseEnd { phase: 2, epoch: 0 });
         let k = p2.closed_total.max(1);
 
         // Phase 3: significance screen at the adjusted level α / k.
+        stamp(&mut hub_events, TraceEv::PhaseStart { phase: 3, epoch: 0 });
         let (significant, screen) = self.screen(db, p1.min_sup, k)?;
+        stamp(&mut hub_events, TraceEv::PhaseEnd { phase: 3, epoch: 0 });
 
         let result = LampResult {
             alpha: self.alpha,
@@ -507,12 +590,12 @@ impl Coordinator {
             phase1_closed: p1.closed_total,
             phase2_closed: p2.closed_total,
         };
-        Ok(CoordinatorRun { result, screen, phase1: p1, phase2: p2 })
+        Ok(CoordinatorRun { result, screen, phase1: p1, phase2: p2, hub_events })
     }
 
     /// `GlbParams` (+ paper-default cadences) → process-engine knobs.
     fn process_config(&self, p: usize, seed: u64) -> ProcessConfig {
-        ProcessConfig {
+        let mut cfg = ProcessConfig {
             w: self.glb.w,
             l: self.glb.l,
             tree_arity: self.glb.tree_arity,
@@ -520,19 +603,27 @@ impl Coordinator {
             preprocess: self.glb.preprocess,
             fault: self.fault,
             ..ProcessConfig::paper_defaults(p, seed)
+        };
+        if let Some(units) = self.probe_budget {
+            cfg.probe_budget_units = units;
         }
+        cfg
     }
 
     /// `GlbParams` (+ paper-default cadences) → thread-engine knobs.
     fn thread_config(&self, p: usize, seed: u64) -> ThreadConfig {
-        ThreadConfig {
+        let mut cfg = ThreadConfig {
             w: self.glb.w,
             l: self.glb.l,
             tree_arity: self.glb.tree_arity,
             steal: self.glb.steal,
             preprocess: self.glb.preprocess,
             ..ThreadConfig::paper_defaults(p, seed)
+        };
+        if let Some(units) = self.probe_budget {
+            cfg.probe_budget_units = units;
         }
+        cfg
     }
 
     /// `GlbParams` (+ calibration when present) → DES knobs.
@@ -541,7 +632,7 @@ impl Coordinator {
             Some(cal) => SimConfig::calibrated(p, cal),
             None => SimConfig::paper_defaults(p),
         };
-        SimConfig {
+        let mut cfg = SimConfig {
             p,
             net,
             seed,
@@ -551,7 +642,11 @@ impl Coordinator {
             steal: self.glb.steal,
             preprocess: self.glb.preprocess,
             ..base
+        };
+        if let Some(units) = self.probe_budget {
+            cfg.probe_budget_units = units;
         }
+        cfg
     }
 
     /// Phase-3 dispatch: PJRT screen or native Fisher, per [`ScreenMode`].
@@ -581,7 +676,11 @@ impl Coordinator {
                     match self.xla_screen(db, min_sup, correction_factor) {
                         Ok(sig) => return Ok((sig, ScreenKind::Xla)),
                         Err(e) => {
-                            eprintln!("warning: XLA screen unusable, using native: {e:#}");
+                            log::warn(
+                                "coord",
+                                &log::Tags::NONE,
+                                format_args!("XLA screen unusable, using native: {e:#}"),
+                            );
                         }
                     }
                 }

@@ -88,6 +88,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::db::Database;
 use crate::net::{dial, dial_with_preamble, Endpoint, Listener, RetryPolicy, Stream};
+use crate::obs::clock;
+use crate::obs::trace::TraceEvent;
+use crate::wire::trace::TraceChunk;
 use crate::wire::{
     encode_config, read_frame, write_frame, Frame, PhaseSpec, RunSpec, WorkerMerge,
     MAX_FRAME_LEN,
@@ -206,6 +209,10 @@ pub struct ProcessMailbox {
     epoch: u64,
     /// One past the last adopted epoch.
     phases_started: u64,
+    /// Worker-clock time at which the current phase's `START` frame was
+    /// read — one half of the clock-alignment handshake shipped in the
+    /// `TRACE` flush (DESIGN.md §14).
+    start_recv_ns: u64,
     /// Deliveries (either plane) from an epoch *above* the current one,
     /// observed mid-phase: a peer already entered the replay of an aborted
     /// phase. Held for the next `await_phase` (DESIGN.md §12).
@@ -291,6 +298,7 @@ pub fn connect(
         token: token.to_string(),
         epoch: 0,
         phases_started: 0,
+        start_recv_ns: 0,
         future: VecDeque::new(),
         interrupt: VecDeque::new(),
         hub_frames: 0,
@@ -471,6 +479,10 @@ impl ProcessMailbox {
         // checks in `absorb`. Frames from an aborted attempt of this phase
         // carry a smaller epoch and are dropped here — that is the fence
         // that keeps a replayed phase's DTD counters clean.
+        // Stamp the START receipt on this process's clock: paired with the
+        // hub's write stamp it forms the request half of the clock-offset
+        // handshake (the TRACE flush forms the reply half, DESIGN.md §14).
+        self.start_recv_ns = clock::now_ns();
         early.retain(|(src, e, _)| *src < self.size && *e == epoch);
         self.pending = early.into_iter().map(|(src, _, msg)| (src, msg)).collect();
         self.epoch = epoch;
@@ -678,11 +690,31 @@ impl ProcessMailbox {
 
     /// Send the phase-boundary merge after the worker saw `Finish`. The
     /// worker must send nothing else until its next phase starts — the
-    /// between-phase protocol relies on `MERGE` being the last frame of a
-    /// phase (see the module docs).
+    /// between-phase protocol relies on `MERGE` ending a phase's data
+    /// traffic (see the module docs) — with one carve-out: an optional
+    /// [`ProcessMailbox::send_trace`] flush immediately after.
     pub fn send_merge(&mut self, merge: &WorkerMerge) -> Result<()> {
         write_frame(&mut self.writer, &Frame::Merge(Box::new(merge.clone())))
             .context("send MERGE to hub")
+    }
+
+    /// Flush the rank's event ring to the hub as a `TRACE` frame (v7),
+    /// immediately after [`ProcessMailbox::send_merge`] when the phase ran
+    /// with tracing armed. Best-effort, like checkpoints: a lost trace
+    /// costs a timeline, never a result. The chunk carries this phase's
+    /// `START`-receipt stamp and a flush stamp taken here, both on this
+    /// process's clock — the hub pairs them with its own send/receive
+    /// stamps to estimate the rank's clock offset (DESIGN.md §14).
+    pub fn send_trace(&mut self, events: Vec<TraceEvent>, dropped: u64) {
+        let chunk = TraceChunk {
+            rank: self.rank as u32,
+            epoch: self.epoch,
+            start_recv_ns: self.start_recv_ns,
+            flush_ns: clock::now_ns(),
+            dropped,
+            events,
+        };
+        let _ = write_frame(&mut self.writer, &Frame::Trace(Box::new(chunk)));
     }
 }
 
@@ -749,6 +781,12 @@ pub enum HubEvent {
     /// (DESIGN.md §12); orderly post-`BYE` EOFs arrive only after the
     /// engine has stopped listening.
     Gone { rank: usize, detail: String },
+    /// A worker flushed its per-rank event ring (v7): the decoded chunk
+    /// plus the hub-clock time the frame was read. Paired with the hub's
+    /// `START`-write stamp ([`Hub::start_sent_ns`]) and the chunk's two
+    /// worker-clock stamps, this forms one NTP-style handshake sample for
+    /// [`crate::obs::clock::estimate_offset`].
+    Trace { chunk: TraceChunk, hub_recv_ns: u64 },
 }
 
 /// The hub's view of what one rank last reported holding (DESIGN.md §12):
@@ -798,6 +836,9 @@ pub struct Hub {
     connected: usize,
     /// Each rank's own data-plane endpoint, learned from its `HELLO`.
     peer_endpoints: Vec<Option<Endpoint>>,
+    /// Hub-clock stamp of each rank's last `START` write — one half of
+    /// the clock-alignment handshake (DESIGN.md §14).
+    start_sent_ns: Vec<u64>,
 }
 
 impl Hub {
@@ -822,6 +863,7 @@ impl Hub {
             routers: Vec::with_capacity(p),
             connected: 0,
             peer_endpoints: vec![None; p],
+            start_sent_ns: vec![0; p],
         })
     }
 
@@ -996,8 +1038,32 @@ impl Hub {
     /// only after [`Hub::broadcast_config`] / [`Hub::broadcast_reconfig`]
     /// (or their per-rank variants) for this phase.
     pub fn start_all(&mut self, epoch: u64) -> Result<()> {
+        ensure!(
+            self.connected == self.p,
+            "cannot send START: {}/{} workers connected",
+            self.connected,
+            self.p
+        );
         let bytes = Frame::Start { epoch }.encode();
-        self.broadcast_bytes(&bytes, "send START")
+        for rank in 0..self.p {
+            // Stamp the hub clock right before each rank's write: with the
+            // worker's receipt stamp (shipped back in its TRACE flush) this
+            // is the request half of the clock-offset handshake.
+            self.start_sent_ns[rank] = clock::now_ns();
+            let mut slot = self.writers[rank].lock().expect("writer lock");
+            let w = slot
+                .as_mut()
+                .with_context(|| format!("rank {rank} disconnected before send START"))?;
+            w.write_all(&bytes).with_context(|| format!("send START to rank {rank}"))?;
+        }
+        Ok(())
+    }
+
+    /// Hub-clock stamp of `rank`'s last `START` write (0 before the first
+    /// phase). Pairs with the worker-clock stamps in the rank's `TRACE`
+    /// flush for [`crate::obs::clock::estimate_offset`].
+    pub fn start_sent_ns(&self, rank: usize) -> u64 {
+        self.start_sent_ns[rank]
     }
 
     /// Wait up to `timeout` for the next hub event. `Ok(None)` = timeout.
@@ -1117,6 +1183,18 @@ fn route_loop(
                 // Keep reading: the next phase's relays and merge arrive on
                 // this same connection.
             }
+            Frame::Trace(c) => {
+                if c.rank as usize != rank {
+                    break format!("TRACE claims rank {} on rank {rank}'s connection", c.rank);
+                }
+                last_epoch = c.epoch;
+                // Stamp the read on the hub clock: the reply half of the
+                // clock-offset handshake (DESIGN.md §14).
+                let ev = HubEvent::Trace { chunk: *c, hub_recv_ns: clock::now_ns() };
+                if tx.send(ev).is_err() {
+                    return; // engine gone
+                }
+            }
             other => break format!("unexpected {} frame", other.name()),
         }
     };
@@ -1148,6 +1226,7 @@ mod tests {
             tree_arity: 3,
             steal: true,
             preprocess: false,
+            trace: false,
             probe_budget_units: 1000,
             dtd_interval_ns: 1000,
             mode: RunMode::Count { min_sup: 1 },
@@ -1202,6 +1281,7 @@ mod tests {
         while got < want {
             match hub.recv_event(Duration::from_secs(10)).unwrap() {
                 Some(HubEvent::Merge(_)) => got += 1,
+                Some(HubEvent::Trace { .. }) => {} // optional flush, not counted
                 Some(HubEvent::Gone { rank, detail }) => {
                     panic!("rank {rank} gone before merge: {detail}")
                 }

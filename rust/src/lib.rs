@@ -29,6 +29,9 @@
 //! - [`service`] — the serving layer: the `parlamp serve` daemon (warm
 //!   worker fleet, FIFO job queue, bounded result cache) and its typed
 //!   client (DESIGN.md §9).
+//! - [`obs`] — observability: per-rank event tracing with fleet-wide
+//!   clock-aligned timelines (Chrome/Perfetto export, terminal summary),
+//!   structured logging, and Prometheus stats exposition (DESIGN.md §14).
 //! - [`runtime`] — PJRT loader for the AOT artifacts built under
 //!   `python/compile` (`make artifacts`); a stub without the `xla` feature.
 //! - [`datagen`] — synthetic GWAS / transcriptome workload generators.
@@ -46,6 +49,7 @@ pub mod glb;
 pub mod lamp;
 pub mod lcm;
 pub mod net;
+pub mod obs;
 pub mod par;
 pub mod runtime;
 pub mod service;

@@ -1,0 +1,337 @@
+//! Chrome/Perfetto trace-event JSON export.
+//!
+//! Emits the classic `{"traceEvents": [...]}` document understood by
+//! `chrome://tracing` and <https://ui.perfetto.dev>: one process (pid 0,
+//! "parlamp fleet"), one thread track per rank, complete (`ph:"X"`) spans
+//! for phases, instant (`ph:"i"`) events for everything punctual, and
+//! flow arrows (`ph:"s"` → `ph:"f"`) linking each steal REQUEST to the
+//! GIVE that answered it — the visual form of the paper's Fig. 5/6
+//! work-distribution argument.
+//!
+//! Timestamps are the rank timelines aligned onto the hub clock
+//! ([`RankTrace::aligned_ns`]), expressed in microseconds as the format
+//! requires. The hub/service's own events ride a synthetic track,
+//! [`HUB_RANK`]. Ring overflow is surfaced as a per-rank `dropped`
+//! instant plus a top-level `otherData` note — never silently absent.
+
+use crate::obs::trace::{EventKind, RankTrace, TraceEvent};
+use std::collections::HashMap;
+
+/// Synthetic `tid` for the hub / service timeline track.
+pub const HUB_RANK: u32 = u32::MAX;
+
+fn track_name(rank: u32) -> String {
+    if rank == HUB_RANK {
+        "hub".to_string()
+    } else {
+        format!("rank {rank}")
+    }
+}
+
+fn ts_us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+/// Export aligned rank timelines as a Chrome trace-event JSON document.
+pub fn export(traces: &[RankTrace]) -> String {
+    let mut ev: Vec<String> = Vec::new();
+
+    // Track metadata: stable names for every tid.
+    ev.push(
+        r#"{"name":"process_name","ph":"M","pid":0,"tid":0,"args":{"name":"parlamp fleet"}}"#
+            .to_string(),
+    );
+    for t in traces {
+        ev.push(format!(
+            r#"{{"name":"thread_name","ph":"M","pid":0,"tid":{},"args":{{"name":"{}"}}}}"#,
+            t.rank,
+            track_name(t.rank)
+        ));
+    }
+
+    // Merge all events into one hub-clock order so steal flow matching
+    // (request on the thief, give on the victim) sees them causally.
+    let mut merged: Vec<(u64, u32, &TraceEvent)> = Vec::new();
+    for t in traces {
+        for e in &t.events {
+            merged.push((t.aligned_ns(e), t.rank, e));
+        }
+    }
+    merged.sort_by_key(|(ts, rank, _)| (*ts, *rank));
+    let end_ns = merged.last().map(|(ts, _, _)| *ts).unwrap_or(0);
+
+    // Open phase spans per rank, pending steal flows per (thief, victim).
+    let mut open: HashMap<u32, Vec<(u8, u64, u64)>> = HashMap::new();
+    let mut flows: HashMap<(u32, u32), Vec<u64>> = HashMap::new();
+    let mut next_flow: u64 = 1;
+
+    for (ts, rank, e) in &merged {
+        let (ts, rank) = (*ts, *rank);
+        match e.kind {
+            EventKind::PhaseStart { phase, epoch } => {
+                open.entry(rank).or_default().push((phase, epoch, ts));
+            }
+            EventKind::PhaseEnd { phase, epoch } => {
+                let stack = open.entry(rank).or_default();
+                if let Some(i) = stack.iter().rposition(|&(p, ep, _)| p == phase && ep == epoch)
+                {
+                    let (_, _, t0) = stack.remove(i);
+                    ev.push(span(rank, phase, epoch, t0, ts));
+                }
+            }
+            EventKind::ExpandBatch { units } => {
+                ev.push(instant(rank, ts, "expand", "work", &format!(r#""units":{units}"#)));
+            }
+            EventKind::StealRequest { dst, lifeline } => {
+                let id = next_flow;
+                next_flow += 1;
+                flows.entry((rank, dst)).or_default().push(id);
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "steal.request",
+                    "steal",
+                    &format!(r#""dst":{dst},"lifeline":{lifeline}"#),
+                ));
+                ev.push(flow(rank, ts, "s", "", id));
+            }
+            EventKind::StealGive { dst, tasks } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "steal.give",
+                    "steal",
+                    &format!(r#""dst":{dst},"tasks":{tasks}"#),
+                ));
+                // The oldest outstanding request from `dst` to us is the
+                // one this GIVE answers (per-pair channels are FIFO).
+                if let Some(ids) = flows.get_mut(&(dst, rank)) {
+                    if !ids.is_empty() {
+                        let id = ids.remove(0);
+                        ev.push(flow(rank, ts, "f", r#","bp":"e""#, id));
+                    }
+                }
+            }
+            EventKind::StealReject { src, lifeline } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "steal.reject",
+                    "steal",
+                    &format!(r#""src":{src},"lifeline":{lifeline}"#),
+                ));
+            }
+            EventKind::StealRecv { src, tasks } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "steal.recv",
+                    "steal",
+                    &format!(r#""src":{src},"tasks":{tasks}"#),
+                ));
+            }
+            EventKind::WaveArrive { t, up } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "dtd.wave",
+                    "dtd",
+                    &format!(r#""t":{t},"up":{up}"#),
+                ));
+            }
+            EventKind::Checkpoint { units, roots } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "checkpoint",
+                    "fault",
+                    &format!(r#""units":{units},"roots":{roots}"#),
+                ));
+            }
+            EventKind::Respawn { rank: dead, epoch } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "respawn",
+                    "fault",
+                    &format!(r#""rank":{dead},"epoch":{epoch}"#),
+                ));
+            }
+            EventKind::ServeQueue { job } => {
+                ev.push(instant(rank, ts, "serve.queue", "serve", &format!(r#""job":{job}"#)));
+            }
+            EventKind::ServePop { job } => {
+                ev.push(instant(rank, ts, "serve.pop", "serve", &format!(r#""job":{job}"#)));
+            }
+            EventKind::ServeExpire { job } => {
+                ev.push(instant(rank, ts, "serve.expire", "serve", &format!(r#""job":{job}"#)));
+            }
+        }
+    }
+
+    // A phase whose end never arrived (ring overflow, dead rank) still
+    // renders: close it at the trace horizon.
+    let mut ranks: Vec<u32> = open.keys().copied().collect();
+    ranks.sort_unstable();
+    for rank in ranks {
+        for &(phase, epoch, t0) in &open[&rank] {
+            ev.push(span(rank, phase, epoch, t0, end_ns.max(t0)));
+        }
+    }
+
+    // Surface overflow on the affected track.
+    let mut total_dropped: u64 = 0;
+    for t in traces {
+        if t.dropped > 0 {
+            total_dropped += t.dropped;
+            ev.push(instant(
+                t.rank,
+                end_ns,
+                "trace.dropped",
+                "meta",
+                &format!(r#""dropped":{}"#, t.dropped),
+            ));
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\":[\n");
+    for (i, e) in ev.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < ev.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":\
+         {{\"generator\":\"parlamp\",\"dropped_events\":{total_dropped}}}}}\n"
+    ));
+    out
+}
+
+/// A flow event on the steal track: `ph:"s"` at the request, `ph:"f"`
+/// (with `bp:"e"` in `extra`) at the give that answers it.
+fn flow(rank: u32, ts_ns: u64, ph: &str, extra: &str, id: u64) -> String {
+    format!(
+        concat!(
+            r#"{{"name":"steal","cat":"steal","ph":"{ph}"{extra},"#,
+            r#""id":{id},"ts":{ts},"pid":0,"tid":{rank}}}"#
+        ),
+        ph = ph,
+        extra = extra,
+        id = id,
+        ts = ts_us(ts_ns),
+        rank = rank,
+    )
+}
+
+fn span(rank: u32, phase: u8, epoch: u64, t0_ns: u64, t1_ns: u64) -> String {
+    let dur_ns = t1_ns.saturating_sub(t0_ns);
+    format!(
+        concat!(
+            r#"{{"name":"phase{phase}","cat":"phase","ph":"X","ts":{ts},"dur":{dur},"#,
+            r#""pid":0,"tid":{rank},"args":{{"epoch":{epoch}}}}}"#
+        ),
+        phase = phase,
+        ts = ts_us(t0_ns),
+        dur = ts_us(dur_ns),
+        rank = rank,
+        epoch = epoch,
+    )
+}
+
+fn instant(rank: u32, ts_ns: u64, name: &str, cat: &str, args: &str) -> String {
+    format!(
+        concat!(
+            r#"{{"name":"{name}","cat":"{cat}","ph":"i","s":"t","ts":{ts},"#,
+            r#""pid":0,"tid":{rank},"args":{{{args}}}}}"#
+        ),
+        name = name,
+        cat = cat,
+        ts = ts_us(ts_ns),
+        rank = rank,
+        args = args,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceEvent;
+
+    fn rt(rank: u32, events: Vec<TraceEvent>) -> RankTrace {
+        RankTrace { rank, offset_ns: 0, uncertainty_ns: 0, dropped: 0, events }
+    }
+
+    fn e(t_ns: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_ns, kind }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_spans_and_flows() {
+        let thief = rt(
+            0,
+            vec![
+                e(0, EventKind::PhaseStart { phase: 1, epoch: 0 }),
+                e(100, EventKind::StealRequest { dst: 1, lifeline: true }),
+                e(900, EventKind::StealRecv { src: 1, tasks: 4 }),
+                e(2_000, EventKind::PhaseEnd { phase: 1, epoch: 0 }),
+            ],
+        );
+        let victim = rt(
+            1,
+            vec![
+                e(0, EventKind::PhaseStart { phase: 1, epoch: 0 }),
+                e(500, EventKind::StealGive { dst: 0, tasks: 4 }),
+                e(2_000, EventKind::PhaseEnd { phase: 1, epoch: 0 }),
+            ],
+        );
+        let json = export(&[thief, victim]);
+
+        // Structurally valid (the bench harness ships a JSON parser).
+        crate::bench::report::parse_json(&json).expect("exported trace must parse as JSON");
+
+        // One phase span per rank, one matched flow pair.
+        assert_eq!(json.matches(r#""ph":"X""#).count(), 2);
+        assert_eq!(json.matches(r#""ph":"s""#).count(), 1);
+        assert_eq!(json.matches(r#""ph":"f""#).count(), 1);
+        assert!(json.contains(r#""name":"phase1""#));
+        assert!(json.contains(r#""name":"rank 0""#));
+        assert!(json.contains(r#""name":"rank 1""#));
+    }
+
+    #[test]
+    fn unmatched_phase_start_closes_at_horizon() {
+        let t = rt(
+            0,
+            vec![
+                e(10, EventKind::PhaseStart { phase: 2, epoch: 3 }),
+                e(50, EventKind::ExpandBatch { units: 9 }),
+            ],
+        );
+        let json = export(&[t]);
+        crate::bench::report::parse_json(&json).unwrap();
+        assert_eq!(json.matches(r#""ph":"X""#).count(), 1);
+        assert!(json.contains(r#""name":"phase2""#));
+    }
+
+    #[test]
+    fn dropped_events_are_reported() {
+        let mut t = rt(5, vec![e(1, EventKind::ExpandBatch { units: 1 })]);
+        t.dropped = 7;
+        let json = export(&[t]);
+        crate::bench::report::parse_json(&json).unwrap();
+        assert!(json.contains(r#""name":"trace.dropped""#));
+        assert!(json.contains(r#""dropped_events":7"#));
+    }
+
+    #[test]
+    fn hub_track_is_named() {
+        let t = rt(HUB_RANK, vec![e(5, EventKind::ServeQueue { job: 1 })]);
+        let json = export(&[t]);
+        crate::bench::report::parse_json(&json).unwrap();
+        assert!(json.contains(r#""name":"hub""#));
+        assert!(json.contains(r#""name":"serve.queue""#));
+    }
+}

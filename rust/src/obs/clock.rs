@@ -1,0 +1,203 @@
+//! Monotonic process clocks and cross-process offset estimation.
+//!
+//! Every process (hub and each worker) timestamps trace events on its own
+//! monotonic clock, because no shared clock exists across hosts. To merge
+//! the per-rank rings into one fleet-wide timeline the hub estimates each
+//! worker's clock offset from a request/response handshake it already
+//! performs: it records its own clock when it writes START to a rank and
+//! when that rank's first post-START frame arrives; the worker timestamps
+//! the START receipt and its reply on *its* clock and ships both numbers
+//! inside the TRACE chunk.
+//!
+//! The estimator is the classic interval argument (NTP's four-timestamp
+//! bound, one round): with hub send time `t0`, worker receive time `t1`,
+//! worker send time `t2`, hub receive time `t3`, and θ defined as
+//! hub-clock minus worker-clock,
+//!
+//! ```text
+//!   t1 + θ ≥ t0        (the request cannot arrive before it was sent)
+//!   t2 + θ ≤ t3        (the reply cannot arrive before it was sent)
+//!   ⇒  t0 − t1 ≤ θ ≤ t3 − t2
+//! ```
+//!
+//! The midpoint of that interval is the estimate and its half-width the
+//! uncertainty — exact under symmetric delays, and never worse than the
+//! round-trip time even under fully asymmetric ones. Over a Unix socket
+//! the interval is microseconds wide; over TCP it is bounded by RTT.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Nanoseconds since this process first asked for the time.
+///
+/// The epoch is pinned lazily by the first call, so stamps taken anywhere
+/// in one process (hub thread, service runner, CLI) share an origin.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// The four timestamps of one hub↔worker handshake round.
+///
+/// Hub-side stamps (`hub_send_ns`, `hub_recv_ns`) are on the hub clock;
+/// worker-side stamps (`worker_recv_ns`, `worker_send_ns`) are on the
+/// worker clock. θ = hub − worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HandshakeSample {
+    /// Hub clock when the request (START) was written to the rank.
+    pub hub_send_ns: u64,
+    /// Worker clock when the request was read.
+    pub worker_recv_ns: u64,
+    /// Worker clock when the reply (TRACE chunk) was written.
+    pub worker_send_ns: u64,
+    /// Hub clock when the reply was read.
+    pub hub_recv_ns: u64,
+}
+
+/// Offset estimate: `offset_ns` ± `uncertainty_ns`, θ = hub − worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClockOffset {
+    pub offset_ns: i64,
+    pub uncertainty_ns: u64,
+}
+
+impl ClockOffset {
+    /// The identity offset (same process, same clock).
+    pub const ZERO: ClockOffset = ClockOffset { offset_ns: 0, uncertainty_ns: 0 };
+}
+
+/// Estimate θ = hub-clock − worker-clock from handshake rounds.
+///
+/// Each sample yields an interval `[t0−t1, t3−t2]` containing θ; the
+/// true offset lies in every one, so they are intersected. Samples are
+/// taken at different wall times on clocks we treat as drift-free over a
+/// phase (monotonic clocks on one machine, or NICs microseconds apart),
+/// so an empty intersection means measurement noise exceeded the bound —
+/// in that case the tightest single sample wins rather than inventing an
+/// impossible interval. Returns [`ClockOffset::ZERO`] for no samples.
+pub fn estimate_offset(samples: &[HandshakeSample]) -> ClockOffset {
+    let mut best: Option<(i64, i64)> = None;
+    for s in samples {
+        let lo = s.hub_send_ns as i64 - s.worker_recv_ns as i64;
+        let hi = s.hub_recv_ns as i64 - s.worker_send_ns as i64;
+        if hi < lo {
+            // Degenerate sample (e.g. stamps taken out of order); skip.
+            continue;
+        }
+        best = Some(match best {
+            None => (lo, hi),
+            Some((blo, bhi)) => {
+                let ilo = blo.max(lo);
+                let ihi = bhi.min(hi);
+                if ilo <= ihi {
+                    (ilo, ihi) // consistent: intersect
+                } else if (hi - lo) < (bhi - blo) {
+                    (lo, hi) // inconsistent: keep the tighter interval
+                } else {
+                    (blo, bhi)
+                }
+            }
+        });
+    }
+    match best {
+        None => ClockOffset::ZERO,
+        Some((lo, hi)) => ClockOffset {
+            // Midpoint without i64 overflow on pathological bounds.
+            offset_ns: lo + (hi - lo) / 2,
+            uncertainty_ns: ((hi - lo) / 2) as u64,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a sample for a true offset θ (hub − worker) with the given
+    /// one-way delays. Worker stamps are hub stamps minus θ.
+    fn sample(theta: i64, t0: u64, d_req: u64, proc_ns: u64, d_rep: u64) -> HandshakeSample {
+        let t1_hub = t0 + d_req; // arrival, in hub time
+        let t2_hub = t1_hub + proc_ns;
+        let t3 = t2_hub + d_rep;
+        HandshakeSample {
+            hub_send_ns: t0,
+            worker_recv_ns: (t1_hub as i64 - theta) as u64,
+            worker_send_ns: (t2_hub as i64 - theta) as u64,
+            hub_recv_ns: t3,
+        }
+    }
+
+    #[test]
+    fn symmetric_delays_recover_exact_offset() {
+        // Worker clock 5 ms ahead of the hub ⇒ θ = −5 ms.
+        let theta = -5_000_000;
+        let s = sample(theta, 1_000_000, 400, 100, 400);
+        let est = estimate_offset(&[s]);
+        assert_eq!(est.offset_ns, theta);
+        assert_eq!(est.uncertainty_ns, 400);
+    }
+
+    #[test]
+    fn skewed_clocks_positive_offset() {
+        // Worker clock far behind the hub (started later): θ = +3 s.
+        let theta = 3_000_000_000;
+        let s = sample(theta, 10_000_000_000, 2_000, 500, 2_000);
+        let est = estimate_offset(&[s]);
+        assert_eq!(est.offset_ns, theta);
+        assert_eq!(est.uncertainty_ns, 2_000);
+    }
+
+    #[test]
+    fn asymmetric_delay_error_bounded_by_uncertainty() {
+        // 10 µs out, 1 µs back: the estimate is biased but the truth
+        // stays inside [offset − u, offset + u].
+        let theta = 7_000;
+        let s = sample(theta, 500_000, 10_000, 0, 1_000);
+        let est = estimate_offset(&[s]);
+        assert!(est.offset_ns - est.uncertainty_ns as i64 <= theta);
+        assert!(theta <= est.offset_ns + est.uncertainty_ns as i64);
+        assert_eq!(est.uncertainty_ns, (10_000 + 1_000) / 2);
+    }
+
+    #[test]
+    fn multiple_samples_intersect_to_tighter_bound() {
+        let theta = -42_000;
+        // A slow round and a fast round: intersection ≈ the fast one.
+        let slow = sample(theta, 0, 50_000, 0, 50_000);
+        let fast = sample(theta, 1_000_000, 300, 0, 300);
+        let est = estimate_offset(&[slow, fast]);
+        assert!(est.uncertainty_ns <= 300);
+        assert!((est.offset_ns - theta).abs() <= est.uncertainty_ns as i64);
+    }
+
+    #[test]
+    fn inconsistent_samples_fall_back_to_tightest() {
+        // Two rounds that disagree by more than their widths (clock
+        // stepped between them): keep the tighter interval.
+        let a = sample(10_000, 0, 100, 0, 100);
+        let b = sample(90_000, 1_000_000, 5_000, 0, 5_000);
+        let est = estimate_offset(&[b, a]);
+        assert_eq!(est.offset_ns, 10_000);
+        assert_eq!(est.uncertainty_ns, 100);
+    }
+
+    #[test]
+    fn degenerate_and_empty_inputs() {
+        assert_eq!(estimate_offset(&[]), ClockOffset::ZERO);
+        // hi < lo (impossible stamps) is skipped, not propagated.
+        let bad = HandshakeSample {
+            hub_send_ns: 1_000,
+            worker_recv_ns: 0,
+            worker_send_ns: 10_000,
+            hub_recv_ns: 500,
+        };
+        assert_eq!(estimate_offset(&[bad]), ClockOffset::ZERO);
+    }
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,322 @@
+//! Leveled, target-filtered, rank/fleet/job-tagged structured logging.
+//!
+//! Replaces the ad-hoc `eprintln!` diagnostics that had accreted across
+//! the fleet supervisor, service daemon, and coordinator. Every record
+//! carries a level, a target (the subsystem: `"fleet"`, `"serve"`,
+//! `"store"`, …) and optional rank/fleet/job tags, rendered as one
+//! stderr line:
+//!
+//! ```text
+//! parlamp[WARN fleet rank=1] worker rank 1 lost (EOF); respawning rank 1
+//! ```
+//!
+//! Filtering is configured once from `PARLAMP_LOG=level[,target=level]*`
+//! (e.g. `PARLAMP_LOG=warn,serve=debug`); the default is `info`. Every
+//! record — printed or filtered — is also appended to a small in-process
+//! ring, and [`dump_recent`] replays the last records to stderr when a
+//! process dies (panic hook, fault injection) or a worker is declared
+//! `Gone`, so deaths leave a post-mortem instead of a bare exit code.
+//!
+//! Discipline: this module is for *cold-path* diagnostics — records are
+//! formatted unconditionally (the ring wants them even when filtered).
+//! Hot-path visibility belongs in [`crate::obs::trace`], which costs one
+//! branch when off.
+
+use std::fmt;
+use std::sync::{Mutex, Once, OnceLock, TryLockError};
+
+/// Severity, most severe first (`Error < Warn`, so a record prints when
+/// `record_level <= configured_level`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Optional context tags attached to a record.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Tags {
+    pub rank: Option<u32>,
+    pub fleet: Option<u32>,
+    pub job: Option<u64>,
+}
+
+impl Tags {
+    pub const NONE: Tags = Tags { rank: None, fleet: None, job: None };
+
+    pub fn rank(rank: usize) -> Tags {
+        Tags { rank: Some(rank as u32), ..Tags::NONE }
+    }
+
+    pub fn fleet(fleet: usize) -> Tags {
+        Tags { fleet: Some(fleet as u32), ..Tags::NONE }
+    }
+
+    pub fn job(job: u64) -> Tags {
+        Tags { job: Some(job), ..Tags::NONE }
+    }
+
+    pub fn and_rank(mut self, rank: usize) -> Tags {
+        self.rank = Some(rank as u32);
+        self
+    }
+
+    pub fn and_job(mut self, job: u64) -> Tags {
+        self.job = Some(job);
+        self
+    }
+}
+
+impl fmt::Display for Tags {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(r) = self.rank {
+            write!(f, " rank={r}")?;
+        }
+        if let Some(fl) = self.fleet {
+            write!(f, " fleet={fl}")?;
+        }
+        if let Some(j) = self.job {
+            write!(f, " job={j}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Parsed `PARLAMP_LOG` filter: a default level plus per-target overrides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Filter {
+    default: Level,
+    overrides: Vec<(String, Level)>,
+}
+
+impl Filter {
+    pub fn max_level(&self, target: &str) -> Level {
+        self.overrides
+            .iter()
+            .find(|(t, _)| t == target)
+            .map(|(_, l)| *l)
+            .unwrap_or(self.default)
+    }
+}
+
+/// Parse a `level[,target=level]*` spec. Unknown level names and empty
+/// parts are ignored; an empty spec yields the default (`info`).
+pub fn parse_filter(spec: &str) -> Filter {
+    let mut f = Filter { default: Level::Info, overrides: Vec::new() };
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            None => {
+                if let Some(l) = Level::parse(part) {
+                    f.default = l;
+                }
+            }
+            Some((target, level)) => {
+                if let Some(l) = Level::parse(level) {
+                    f.overrides.push((target.trim().to_string(), l));
+                }
+            }
+        }
+    }
+    f
+}
+
+fn filter() -> &'static Filter {
+    static F: OnceLock<Filter> = OnceLock::new();
+    F.get_or_init(|| parse_filter(&std::env::var("PARLAMP_LOG").unwrap_or_default()))
+}
+
+/// Would a record at `level` for `target` reach stderr?
+pub fn enabled(level: Level, target: &str) -> bool {
+    level <= filter().max_level(target)
+}
+
+fn format_line(level: Level, target: &str, tags: &Tags, msg: fmt::Arguments<'_>) -> String {
+    format!("parlamp[{} {}{}] {}", level.tag(), target, tags, msg)
+}
+
+/// Record one diagnostic: always remembered in the post-mortem ring,
+/// printed to stderr iff the filter admits it.
+pub fn emit(level: Level, target: &str, tags: &Tags, msg: fmt::Arguments<'_>) {
+    let line = format_line(level, target, tags, msg);
+    remember(&line);
+    if enabled(level, target) {
+        eprintln!("{line}");
+    }
+}
+
+pub fn error(target: &str, tags: &Tags, msg: fmt::Arguments<'_>) {
+    emit(Level::Error, target, tags, msg);
+}
+
+pub fn warn(target: &str, tags: &Tags, msg: fmt::Arguments<'_>) {
+    emit(Level::Warn, target, tags, msg);
+}
+
+pub fn info(target: &str, tags: &Tags, msg: fmt::Arguments<'_>) {
+    emit(Level::Info, target, tags, msg);
+}
+
+pub fn debug(target: &str, tags: &Tags, msg: fmt::Arguments<'_>) {
+    emit(Level::Debug, target, tags, msg);
+}
+
+/// How many records the post-mortem ring retains.
+pub const RING_CAP: usize = 128;
+
+struct Ring {
+    buf: Vec<String>,
+    next: usize,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static R: OnceLock<Mutex<Ring>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Ring { buf: Vec::new(), next: 0 }))
+}
+
+fn remember(line: &str) {
+    let mut r = match ring().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if r.buf.len() < RING_CAP {
+        r.buf.push(line.to_string());
+    } else {
+        let slot = r.next;
+        r.buf[slot] = line.to_string();
+    }
+    r.next = (r.next + 1) % RING_CAP;
+}
+
+/// The retained records, oldest first.
+pub fn recent() -> Vec<String> {
+    let r = match ring().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if r.buf.len() < RING_CAP {
+        r.buf.clone()
+    } else {
+        let mut out = Vec::with_capacity(RING_CAP);
+        out.extend_from_slice(&r.buf[r.next..]);
+        out.extend_from_slice(&r.buf[..r.next]);
+        out
+    }
+}
+
+/// Replay the retained records to stderr, e.g. from a panic hook or just
+/// before a fault-injected exit. Uses `try_lock` so a panic raised while
+/// the ring lock is held degrades to no dump rather than a deadlock.
+pub fn dump_recent(why: &str) {
+    let r = match ring().try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
+        Err(TryLockError::WouldBlock) => return,
+    };
+    if r.buf.is_empty() {
+        return;
+    }
+    let n = r.buf.len();
+    eprintln!("parlamp post-mortem ({why}): last {n} log records");
+    let order: Vec<&String> = if n < RING_CAP {
+        r.buf.iter().collect()
+    } else {
+        r.buf[r.next..].iter().chain(r.buf[..r.next].iter()).collect()
+    };
+    for line in order {
+        eprintln!("  {line}");
+    }
+}
+
+/// Chain a panic hook that dumps the log ring after the default report.
+/// Idempotent; installed by the CLI entry point and by `worker_main` so
+/// a dying worker's stderr carries its recent history.
+pub fn install_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            prev(info);
+            dump_recent("panic");
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn parse_filter_default_and_overrides() {
+        let f = parse_filter("");
+        assert_eq!(f.max_level("fleet"), Level::Info);
+
+        let f = parse_filter("warn,serve=debug, store=error");
+        assert_eq!(f.max_level("fleet"), Level::Warn);
+        assert_eq!(f.max_level("serve"), Level::Debug);
+        assert_eq!(f.max_level("store"), Level::Error);
+
+        // Unknown levels / garbage parts are ignored, not fatal.
+        let f = parse_filter("bogus,fleet=nope,debug");
+        assert_eq!(f.max_level("fleet"), Level::Debug);
+    }
+
+    #[test]
+    fn format_line_carries_level_target_and_tags() {
+        let tags = Tags::fleet(2).and_rank(1).and_job(7);
+        let line = format_line(Level::Warn, "fleet", &tags, format_args!("lost ({})", "EOF"));
+        assert_eq!(line, "parlamp[WARN fleet rank=1 fleet=2 job=7] lost (EOF)");
+        let bare = format_line(Level::Info, "serve", &Tags::NONE, format_args!("up"));
+        assert_eq!(bare, "parlamp[INFO serve] up");
+    }
+
+    #[test]
+    fn ring_retains_most_recent_in_order() {
+        // The ring is process-global and shared with other tests' emits;
+        // saturate it with known lines, then check the tail.
+        for i in 0..(RING_CAP + 10) {
+            remember(&format!("line-{i}"));
+        }
+        let recent = recent();
+        assert_eq!(recent.len(), RING_CAP);
+        assert_eq!(recent.last().unwrap(), &format!("line-{}", RING_CAP + 9));
+        assert_eq!(recent.first().unwrap(), "line-10");
+    }
+}

@@ -1,0 +1,34 @@
+//! Observability: tracing, structured logging, and metrics export.
+//!
+//! The paper's central claim — that GLB over a hypercube-with-random-edges
+//! "distributes communication evenly" (Figs. 5–7) — is a claim about *when*
+//! things happen, not just how much. Totals (`Breakdown`, `CommStats`, the
+//! serve `STATS` frame) can detect a regression; only a timeline can explain
+//! one. This module provides that timeline plus the logging and metrics
+//! plumbing around it (DESIGN.md §14):
+//!
+//! - [`trace`]: a per-rank fixed-capacity event ring ([`trace::TraceRing`])
+//!   behind a process-global static flag. When tracing is off the hot path
+//!   pays one relaxed atomic load and a branch — no allocation, no I/O.
+//!   Overflow is counted, never silent.
+//! - [`clock`]: per-process monotonic clocks ([`clock::now_ns`]) and the
+//!   interval-based offset estimator ([`clock::estimate_offset`]) the hub
+//!   uses to align worker timelines from HELLO/START handshake timestamps.
+//! - [`chrome`]: Chrome/Perfetto trace-event JSON export — one track per
+//!   rank, phase spans, instant events, and flow arrows linking each steal
+//!   REQUEST to the GIVE that answered it.
+//! - [`summary`]: `parlamp trace summary` — per-rank Fig.7 breakdown table,
+//!   who-stole-from-whom matrix, DTD wave latencies, recomputed from an
+//!   exported trace file.
+//! - [`log`]: leveled, target-filtered, rank/fleet/job-tagged structured
+//!   logging (`PARLAMP_LOG=level[,target=level]`) with a last-N record ring
+//!   dumped on panic so worker deaths leave a post-mortem.
+//! - [`prom`]: Prometheus text exposition of [`crate::wire::service::ServiceStats`]
+//!   for `parlamp stats --format prom`.
+
+pub mod chrome;
+pub mod clock;
+pub mod log;
+pub mod prom;
+pub mod summary;
+pub mod trace;

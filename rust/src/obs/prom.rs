@@ -1,0 +1,222 @@
+//! Prometheus text exposition of [`ServiceStats`].
+//!
+//! `parlamp stats --format prom` renders the same STATS frame the human
+//! report uses as the Prometheus text format (version 0.0.4), so a
+//! textfile-collector or a thin exec exporter can scrape the daemon
+//! without any new wire surface. Counters keep the `_total` suffix
+//! convention; the log₂ latency histograms are re-expressed as native
+//! cumulative `_bucket{le="…"}` series in seconds (bucket `i` of the
+//! STATS frame covers `[2^i, 2^(i+1))` ms, so its upper bound is
+//! `2^(i+1)/1000` s). The frame carries no latency sums, so `_sum` is
+//! reported as 0 and documented as untracked in HELP — explicit, not
+//! silently plausible.
+
+use crate::wire::service::ServiceStats;
+use std::fmt::Write as _;
+
+/// Escape a label value per the exposition format.
+fn label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, buckets: &[u64]) {
+    let _ = writeln!(out, "# HELP {name} {help} (_sum not tracked; reported as 0)");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum: u64 = 0;
+    for (i, &count) in buckets.iter().enumerate() {
+        cum += count;
+        let le = (1u64 << (i + 1)) as f64 / 1000.0;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "{name}_sum 0");
+    let _ = writeln!(out, "{name}_count {cum}");
+}
+
+/// Render a STATS snapshot as Prometheus text exposition.
+pub fn render(s: &ServiceStats) -> String {
+    let mut out = String::with_capacity(2048);
+
+    let _ = writeln!(out, "# HELP parlamp_uptime_seconds Daemon uptime.");
+    let _ = writeln!(out, "# TYPE parlamp_uptime_seconds gauge");
+    let _ = writeln!(out, "parlamp_uptime_seconds {}", s.uptime_ms as f64 / 1e3);
+
+    let _ = writeln!(out, "# HELP parlamp_jobs_total Jobs by terminal or admission state.");
+    let _ = writeln!(out, "# TYPE parlamp_jobs_total counter");
+    for (state, v) in [
+        ("submitted", s.jobs_submitted),
+        ("mined", s.jobs_mined),
+        ("failed", s.jobs_failed),
+        ("rejected_busy", s.jobs_rejected_busy),
+        ("expired", s.jobs_expired),
+        ("cancelled", s.jobs_cancelled),
+    ] {
+        let _ = writeln!(out, "parlamp_jobs_total{{state=\"{state}\"}} {v}");
+    }
+
+    let _ = writeln!(out, "# HELP parlamp_cache_hits_total In-memory result-cache hits.");
+    let _ = writeln!(out, "# TYPE parlamp_cache_hits_total counter");
+    let _ = writeln!(out, "parlamp_cache_hits_total {}", s.cache_hits);
+    let _ = writeln!(out, "# HELP parlamp_cache_misses_total In-memory result-cache misses.");
+    let _ = writeln!(out, "# TYPE parlamp_cache_misses_total counter");
+    let _ = writeln!(out, "parlamp_cache_misses_total {}", s.cache_misses);
+    let _ = writeln!(out, "# HELP parlamp_cache_entries Resident result-cache entries.");
+    let _ = writeln!(out, "# TYPE parlamp_cache_entries gauge");
+    let _ = writeln!(out, "parlamp_cache_entries {}", s.cache_entries);
+
+    let _ = writeln!(out, "# HELP parlamp_store_entries Records indexed in the persistent store.");
+    let _ = writeln!(out, "# TYPE parlamp_store_entries gauge");
+    let _ = writeln!(out, "parlamp_store_entries {}", s.store_entries);
+    let _ = writeln!(out, "# HELP parlamp_store_appends_total Records appended to the store.");
+    let _ = writeln!(out, "# TYPE parlamp_store_appends_total counter");
+    let _ = writeln!(out, "parlamp_store_appends_total {}", s.store_appends);
+    let _ = writeln!(out, "# HELP parlamp_store_hits_total LRU misses answered from disk.");
+    let _ = writeln!(out, "# TYPE parlamp_store_hits_total counter");
+    let _ = writeln!(out, "parlamp_store_hits_total {}", s.store_hits);
+
+    let _ = writeln!(out, "# HELP parlamp_history_evicted_total Terminal job records evicted.");
+    let _ = writeln!(out, "# TYPE parlamp_history_evicted_total counter");
+    let _ = writeln!(out, "parlamp_history_evicted_total {}", s.evicted_records);
+
+    let _ = writeln!(out, "# HELP parlamp_fleet_jobs_total Jobs mined, per fleet.");
+    let _ = writeln!(out, "# TYPE parlamp_fleet_jobs_total counter");
+    for (i, fl) in s.fleets.iter().enumerate() {
+        let _ = writeln!(out, "parlamp_fleet_jobs_total{{fleet=\"{i}\"}} {}", fl.jobs_mined);
+    }
+    let _ = writeln!(out, "# HELP parlamp_fleet_busy_seconds_total Mining wall-clock, per fleet.");
+    let _ = writeln!(out, "# TYPE parlamp_fleet_busy_seconds_total counter");
+    for (i, fl) in s.fleets.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "parlamp_fleet_busy_seconds_total{{fleet=\"{i}\"}} {}",
+            fl.busy_ms as f64 / 1e3
+        );
+    }
+    let _ = writeln!(out, "# HELP parlamp_fleet_respawns_total Worker ranks respawned in place.");
+    let _ = writeln!(out, "# TYPE parlamp_fleet_respawns_total counter");
+    for (i, fl) in s.fleets.iter().enumerate() {
+        let _ = writeln!(out, "parlamp_fleet_respawns_total{{fleet=\"{i}\"}} {}", fl.respawns);
+    }
+    let _ = writeln!(out, "# HELP parlamp_fleet_rebuilds_total Whole-fleet rebuilds.");
+    let _ = writeln!(out, "# TYPE parlamp_fleet_rebuilds_total counter");
+    for (i, fl) in s.fleets.iter().enumerate() {
+        let _ = writeln!(out, "parlamp_fleet_rebuilds_total{{fleet=\"{i}\"}} {}", fl.rebuilds);
+    }
+
+    let _ = writeln!(out, "# HELP parlamp_client_queued Jobs queued, per client.");
+    let _ = writeln!(out, "# TYPE parlamp_client_queued gauge");
+    for c in &s.clients {
+        let v = c.queued;
+        let _ = writeln!(out, "parlamp_client_queued{{client=\"{}\"}} {v}", label(&c.client));
+    }
+    let _ = writeln!(out, "# HELP parlamp_client_active Jobs running on a fleet, per client.");
+    let _ = writeln!(out, "# TYPE parlamp_client_active gauge");
+    for c in &s.clients {
+        let v = c.active;
+        let _ = writeln!(out, "parlamp_client_active{{client=\"{}\"}} {v}", label(&c.client));
+    }
+    let _ = writeln!(out, "# HELP parlamp_client_submitted_total Submissions, per client.");
+    let _ = writeln!(out, "# TYPE parlamp_client_submitted_total counter");
+    for c in &s.clients {
+        let _ = writeln!(
+            out,
+            "parlamp_client_submitted_total{{client=\"{}\"}} {}",
+            label(&c.client),
+            c.submitted
+        );
+    }
+
+    histogram(
+        &mut out,
+        "parlamp_queue_wait_seconds",
+        "Submit-to-dispatch wait.",
+        &s.queue_wait_ms,
+    );
+    histogram(
+        &mut out,
+        "parlamp_job_latency_seconds",
+        "Submit-to-terminal latency.",
+        &s.latency_ms,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::service::{ClientStats, FleetStats};
+
+    fn sample() -> ServiceStats {
+        ServiceStats {
+            uptime_ms: 2_500,
+            jobs_submitted: 5,
+            jobs_mined: 3,
+            jobs_failed: 0,
+            jobs_rejected_busy: 1,
+            jobs_expired: 1,
+            jobs_cancelled: 0,
+            cache_hits: 2,
+            cache_misses: 3,
+            cache_entries: 3,
+            store_entries: 3,
+            store_appends: 3,
+            store_hits: 1,
+            evicted_records: 0,
+            fleets: vec![
+                FleetStats { jobs_mined: 2, busy_ms: 1_500, respawns: 1, rebuilds: 0 },
+                FleetStats { jobs_mined: 1, busy_ms: 400, respawns: 0, rebuilds: 1 },
+            ],
+            clients: vec![ClientStats {
+                client: "tenant \"a\"".into(),
+                queued: 1,
+                active: 0,
+                submitted: 4,
+            }],
+            queue_wait_ms: vec![2, 0, 1],
+            latency_ms: vec![0, 0, 0],
+        }
+    }
+
+    #[test]
+    fn renders_well_formed_metric_lines() {
+        let out = render(&sample());
+        assert!(out.contains("# TYPE parlamp_jobs_total counter"), "{out}");
+        assert!(out.contains("parlamp_jobs_total{state=\"mined\"} 3"), "{out}");
+        assert!(out.contains("parlamp_uptime_seconds 2.5"), "{out}");
+        assert!(out.contains("parlamp_fleet_respawns_total{fleet=\"0\"} 1"), "{out}");
+        assert!(out.contains("parlamp_fleet_busy_seconds_total{fleet=\"1\"} 0.4"), "{out}");
+        // Every non-comment line is `name{labels} value` or `name value`.
+        for line in out.lines().filter(|l| !l.starts_with('#')) {
+            let (head, value) = line.rsplit_once(' ').expect("line must have a value");
+            assert!(!head.is_empty() && value.parse::<f64>().is_ok(), "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_seconds() {
+        let out = render(&sample());
+        // queue_wait_ms = [2, 0, 1]: bounds 2ms, 4ms, 8ms → 0.002/0.004/0.008 s
+        assert!(out.contains("parlamp_queue_wait_seconds_bucket{le=\"0.002\"} 2"), "{out}");
+        assert!(out.contains("parlamp_queue_wait_seconds_bucket{le=\"0.004\"} 2"), "{out}");
+        assert!(out.contains("parlamp_queue_wait_seconds_bucket{le=\"0.008\"} 3"), "{out}");
+        assert!(out.contains("parlamp_queue_wait_seconds_bucket{le=\"+Inf\"} 3"), "{out}");
+        assert!(out.contains("parlamp_queue_wait_seconds_count 3"), "{out}");
+        assert!(out.contains("parlamp_job_latency_seconds_bucket{le=\"+Inf\"} 0"), "{out}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let out = render(&sample());
+        assert!(out.contains(r#"client="tenant \"a\"""#), "{out}");
+        assert_eq!(label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+    }
+}

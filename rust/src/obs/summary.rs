@@ -1,0 +1,275 @@
+//! `parlamp trace summary <file>`: recompute the paper's Fig. 7 view
+//! from an exported Chrome trace.
+//!
+//! Reads the trace-event JSON written by [`crate::obs::chrome::export`]
+//! (via the same hand-rolled parser the bench schema uses) and prints
+//! three things a timeline viewer shows visually but a terminal wants as
+//! numbers: a per-rank breakdown table (phase span seconds, expansion
+//! units, steal traffic, ring overflow), a who-stole-from-whom matrix of
+//! shipped stack roots, and DTD wave arrival spreads — the latency of
+//! each termination-detection wave front across the fleet.
+
+use crate::bench::report::{parse_json, Json};
+use crate::util::table::Table;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Default, Clone)]
+struct RankAgg {
+    phase_s: [f64; 3],
+    expand_units: u64,
+    steal_requests: u64,
+    rejects: u64,
+    gives: u64,
+    tasks_out: u64,
+    tasks_in: u64,
+    dropped: u64,
+}
+
+/// How many DTD waves the summary lists individually before truncating
+/// (with an explicit "+N more" note — never a silent cap).
+const MAX_WAVE_ROWS: usize = 16;
+
+/// Summarize a Chrome trace-event JSON document into the terminal report.
+pub fn summarize(doc: &str) -> Result<String> {
+    let v = parse_json(doc).context("parse trace JSON")?;
+    let events = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("missing 'traceEvents' array — not a parlamp trace?")?;
+
+    let mut names: BTreeMap<u64, String> = BTreeMap::new();
+    let mut ranks: BTreeMap<u64, RankAgg> = BTreeMap::new();
+    // matrix[(victim, thief)] = tasks shipped victim → thief
+    let mut matrix: BTreeMap<(u64, u64), u64> = BTreeMap::new();
+    // wave (id, up) → arrival timestamps (µs)
+    let mut waves: BTreeMap<(u64, bool), Vec<f64>> = BTreeMap::new();
+
+    let num = |e: &Json, k: &str| e.get(k).and_then(Json::as_f64);
+    let arg = |e: &Json, k: &str| e.get("args").and_then(|a| a.get(k)).and_then(Json::as_f64);
+    let arg_bool = |e: &Json, k: &str| {
+        matches!(e.get("args").and_then(|a| a.get(k)), Some(Json::Bool(true)))
+    };
+
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap_or("");
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        let tid = num(e, "tid").unwrap_or(0.0) as u64;
+        match ph {
+            "M" if name == "thread_name" => {
+                if let Some(n) = e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                {
+                    names.insert(tid, n.to_string());
+                }
+            }
+            "X" => {
+                let phase = match name {
+                    "phase1" => 0,
+                    "phase2" => 1,
+                    "phase3" => 2,
+                    _ => continue,
+                };
+                let dur_us = num(e, "dur").unwrap_or(0.0);
+                ranks.entry(tid).or_default().phase_s[phase] += dur_us / 1e6;
+            }
+            "i" => {
+                let a = ranks.entry(tid).or_default();
+                match name {
+                    "expand" => a.expand_units += arg(e, "units").unwrap_or(0.0) as u64,
+                    "steal.request" => a.steal_requests += 1,
+                    "steal.reject" => a.rejects += 1,
+                    "steal.give" => {
+                        let tasks = arg(e, "tasks").unwrap_or(0.0) as u64;
+                        a.gives += 1;
+                        a.tasks_out += tasks;
+                        if let Some(thief) = arg(e, "dst") {
+                            *matrix.entry((tid, thief as u64)).or_default() += tasks;
+                        }
+                    }
+                    "steal.recv" => a.tasks_in += arg(e, "tasks").unwrap_or(0.0) as u64,
+                    "dtd.wave" => {
+                        let t = arg(e, "t").unwrap_or(0.0) as u64;
+                        let ts = num(e, "ts").unwrap_or(0.0);
+                        waves.entry((t, arg_bool(e, "up"))).or_default().push(ts);
+                    }
+                    "trace.dropped" => a.dropped += arg(e, "dropped").unwrap_or(0.0) as u64,
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let rank_label = |tid: u64| {
+        names
+            .get(&tid)
+            .cloned()
+            .unwrap_or_else(|| format!("tid {tid}"))
+    };
+
+    let mut out = String::new();
+
+    // -- per-rank breakdown (Fig. 7) -----------------------------------
+    out.push_str("per-rank breakdown (paper Fig. 7)\n");
+    let mut t = Table::new(&[
+        "rank", "phase1 s", "phase2 s", "phase3 s", "expand units", "steal req", "rejects",
+        "gives", "tasks out", "tasks in", "dropped",
+    ]);
+    for (tid, a) in &ranks {
+        t.row(vec![
+            rank_label(*tid),
+            format!("{:.6}", a.phase_s[0]),
+            format!("{:.6}", a.phase_s[1]),
+            format!("{:.6}", a.phase_s[2]),
+            a.expand_units.to_string(),
+            a.steal_requests.to_string(),
+            a.rejects.to_string(),
+            a.gives.to_string(),
+            a.tasks_out.to_string(),
+            a.tasks_in.to_string(),
+            a.dropped.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // -- steal matrix ---------------------------------------------------
+    out.push_str("\nsteal matrix (tasks shipped, victim row -> thief column)\n");
+    if matrix.is_empty() {
+        out.push_str("(no steals recorded)\n");
+    } else {
+        let mut thieves: Vec<u64> = matrix.keys().map(|&(_, t)| t).collect();
+        thieves.sort_unstable();
+        thieves.dedup();
+        let mut victims: Vec<u64> = matrix.keys().map(|&(v, _)| v).collect();
+        victims.sort_unstable();
+        victims.dedup();
+        let mut header: Vec<String> = vec!["victim".to_string()];
+        header.extend(thieves.iter().map(|t| rank_label(*t)));
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(&header_refs);
+        for v in &victims {
+            let mut row = vec![rank_label(*v)];
+            for th in &thieves {
+                row.push(matrix.get(&(*v, *th)).copied().unwrap_or(0).to_string());
+            }
+            t.row(row);
+        }
+        out.push_str(&t.render());
+    }
+
+    // -- DTD wave latencies --------------------------------------------
+    out.push_str("\nDTD waves (arrival spread across ranks)\n");
+    if waves.is_empty() {
+        out.push_str("(no waves recorded)\n");
+    } else {
+        let mut t = Table::new(&["wave", "dir", "arrivals", "first us", "last us", "spread us"]);
+        let total = waves.len();
+        for ((id, up), ts) in waves.iter().take(MAX_WAVE_ROWS) {
+            let first = ts.iter().cloned().fold(f64::INFINITY, f64::min);
+            let last = ts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            t.row(vec![
+                id.to_string(),
+                if *up { "up".to_string() } else { "down".to_string() },
+                ts.len().to_string(),
+                format!("{first:.1}"),
+                format!("{last:.1}"),
+                format!("{:.1}", last - first),
+            ]);
+        }
+        out.push_str(&t.render());
+        if total > MAX_WAVE_ROWS {
+            out.push_str(&format!("(+{} more waves not shown)\n", total - MAX_WAVE_ROWS));
+        }
+    }
+
+    let dropped: u64 = ranks.values().map(|a| a.dropped).sum();
+    if dropped > 0 {
+        out.push_str(&format!(
+            "\nWARNING: {dropped} events were dropped by full trace rings; \
+             totals above undercount.\n"
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::chrome;
+    use crate::obs::trace::{EventKind, RankTrace, TraceEvent};
+
+    fn rt(rank: u32, events: Vec<(u64, EventKind)>) -> RankTrace {
+        RankTrace {
+            rank,
+            offset_ns: 0,
+            uncertainty_ns: 0,
+            dropped: 0,
+            events: events
+                .into_iter()
+                .map(|(t_ns, kind)| TraceEvent { t_ns, kind })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn summary_reports_breakdown_matrix_and_waves() {
+        let r0 = rt(
+            0,
+            vec![
+                (0, EventKind::PhaseStart { phase: 1, epoch: 0 }),
+                (100, EventKind::ExpandBatch { units: 50 }),
+                (200, EventKind::StealRequest { dst: 1, lifeline: true }),
+                (900, EventKind::StealRecv { src: 1, tasks: 4 }),
+                (1_000, EventKind::WaveArrive { t: 1, up: false }),
+                (2_000_000, EventKind::PhaseEnd { phase: 1, epoch: 0 }),
+            ],
+        );
+        let r1 = rt(
+            1,
+            vec![
+                (0, EventKind::PhaseStart { phase: 1, epoch: 0 }),
+                (500, EventKind::StealGive { dst: 0, tasks: 4 }),
+                (1_500, EventKind::WaveArrive { t: 1, up: false }),
+                (2_000_000, EventKind::PhaseEnd { phase: 1, epoch: 0 }),
+            ],
+        );
+        let json = chrome::export(&[r0, r1]);
+        let out = summarize(&json).unwrap();
+        assert!(out.contains("per-rank breakdown"), "{out}");
+        assert!(out.contains("rank 0"), "{out}");
+        assert!(out.contains("rank 1"), "{out}");
+        assert!(out.contains("0.002000"), "phase span seconds missing:\n{out}");
+        assert!(out.contains("steal matrix"), "{out}");
+        assert!(out.contains("DTD waves"), "{out}");
+        // wave 1 spread: 1.5 µs − 1.0 µs = 0.5 µs
+        assert!(out.contains("0.5"), "wave spread missing:\n{out}");
+    }
+
+    #[test]
+    fn summary_flags_dropped_events() {
+        let mut r = rt(0, vec![(10, EventKind::ExpandBatch { units: 1 })]);
+        r.dropped = 3;
+        let out = summarize(&chrome::export(&[r])).unwrap();
+        assert!(out.contains("3 events were dropped"), "{out}");
+    }
+
+    #[test]
+    fn summary_rejects_non_trace_json() {
+        assert!(summarize("{\"a\": 1}").is_err());
+        assert!(summarize("not json").is_err());
+    }
+
+    #[test]
+    fn empty_sections_render_placeholders() {
+        let r = rt(
+            2,
+            vec![
+                (0, EventKind::PhaseStart { phase: 2, epoch: 0 }),
+                (10, EventKind::PhaseEnd { phase: 2, epoch: 0 }),
+            ],
+        );
+        let out = summarize(&chrome::export(&[r])).unwrap();
+        assert!(out.contains("(no steals recorded)"), "{out}");
+        assert!(out.contains("(no waves recorded)"), "{out}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Per-rank event tracer: a fixed-capacity ring behind a static flag.
+//!
+//! Tracing must be free when off: every hook site is
+//! `if enabled() { … }` where [`enabled`] is one relaxed atomic load —
+//! no allocation, no formatting, no I/O on the hot path. When on, events
+//! are recorded into a bounded [`TraceRing`] (keep-first: once full,
+//! further events increment [`TraceRing::dropped`] instead of evicting
+//! history — the interesting part of a mining run is usually its start,
+//! and a counted drop is honest where a silently rotated ring is not).
+//!
+//! Timestamps are nanoseconds on the *recording process's* monotonic
+//! clock; [`crate::obs::clock`] aligns them into one fleet-wide timeline
+//! after collection. Under the sim engine the "clock" is DES virtual
+//! time, which makes event sequences exactly reproducible run-to-run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-global trace switch. Off by default; flipped once at startup
+/// (CLI `--trace`, or by `worker_main` from the received `PhaseSpec`).
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing enabled? One relaxed load — the only cost paid when off.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Flip the global trace switch. Callers flip it once at startup, before
+/// workers are built; flipping mid-run merely starts/stops recording.
+pub fn set_enabled(on: bool) {
+    TRACE_ON.store(on, Ordering::Relaxed);
+}
+
+/// Default per-rank ring capacity (events). At 64 Ki events × ~24 bytes
+/// this bounds a rank's trace memory to ~1.5 MiB.
+pub const DEFAULT_RING_CAP: usize = 64 * 1024;
+
+/// What happened. All variants are fixed-size and `Copy`; the wire
+/// encoding lives in `wire::trace` and must cover every variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A phase began on this rank (phase = 1/2/3, epoch = hub replay epoch).
+    PhaseStart { phase: u8, epoch: u64 },
+    /// The phase's merge was produced.
+    PhaseEnd { phase: u8, epoch: u64 },
+    /// A batch of search nodes was expanded between polls.
+    ExpandBatch { units: u64 },
+    /// This rank asked `dst` for work (`lifeline` = hypercube edge).
+    StealRequest { dst: u32, lifeline: bool },
+    /// `src` asked us and we had nothing to give.
+    StealReject { src: u32, lifeline: bool },
+    /// We shipped `tasks` stack roots to `dst`.
+    StealGive { dst: u32, tasks: u32 },
+    /// `src` shipped us `tasks` stack roots.
+    StealRecv { src: u32, tasks: u32 },
+    /// A DTD wave token arrived (t = wave id, up = WaveUp vs WaveDown).
+    WaveArrive { t: u32, up: bool },
+    /// A custody CHECKPOINT beacon was sent to the hub.
+    Checkpoint { units: u64, roots: u32 },
+    /// The hub respawned `rank` and fenced a replay under `epoch`.
+    Respawn { rank: u32, epoch: u64 },
+    /// Service: job queued.
+    ServeQueue { job: u64 },
+    /// Service: job popped by a fleet runner.
+    ServePop { job: u64 },
+    /// Service: job expired before running.
+    ServeExpire { job: u64 },
+}
+
+/// One timestamped event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Nanoseconds on the recorder's monotonic (or DES virtual) clock.
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Fixed-capacity keep-first event buffer with a counted overflow.
+#[derive(Debug, Clone)]
+pub struct TraceRing {
+    cap: usize,
+    events: Vec<TraceEvent>,
+    /// Events rejected because the ring was full. Reported, never silent.
+    pub dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        // Don't pre-reserve `cap`: a quiet rank should not pin ~1.5 MiB.
+        TraceRing { cap, events: Vec::new(), dropped: 0 }
+    }
+
+    pub fn with_default_cap() -> Self {
+        Self::new(DEFAULT_RING_CAP)
+    }
+
+    /// Record one event, or count it as dropped if the ring is full.
+    #[inline]
+    pub fn push(&mut self, t_ns: u64, kind: EventKind) {
+        if self.events.len() < self.cap {
+            self.events.push(TraceEvent { t_ns, kind });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Drain the ring into its parts `(events, dropped)` for flushing.
+    pub fn take(&mut self) -> (Vec<TraceEvent>, u64) {
+        let dropped = self.dropped;
+        self.dropped = 0;
+        (std::mem::take(&mut self.events), dropped)
+    }
+}
+
+/// One rank's assembled timeline, clock-aligned into hub time.
+///
+/// `offset_ns` is *added* to each event's `t_ns` to place it on the hub
+/// clock; in-process engines share one clock, so their offset is 0 with
+/// zero uncertainty.
+#[derive(Debug, Clone)]
+pub struct RankTrace {
+    pub rank: u32,
+    /// Estimated hub-clock minus rank-clock, in ns (may be negative).
+    pub offset_ns: i64,
+    /// Half-width of the offset interval: ± bound on alignment error.
+    pub uncertainty_ns: u64,
+    /// Events dropped by the rank's ring (overflow), summed over phases.
+    pub dropped: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl RankTrace {
+    /// An event's timestamp translated onto the hub clock (saturating:
+    /// a clock estimated slightly behind the hub epoch clamps to 0).
+    pub fn aligned_ns(&self, e: &TraceEvent) -> u64 {
+        let t = e.t_ns as i64 + self.offset_ns;
+        t.max(0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_defaults_off_and_toggles() {
+        // Note: this test mutates process-global state; integration tests
+        // that flip the flag live in tests/trace.rs (their own process).
+        assert!(!enabled() || enabled()); // no assumption about other tests
+        set_enabled(false);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn ring_keeps_first_and_counts_overflow() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5u64 {
+            r.push(i, EventKind::ExpandBatch { units: i });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped, 2);
+        // Keep-first: the survivors are the earliest events.
+        assert_eq!(r.events()[0].t_ns, 0);
+        assert_eq!(r.events()[2].t_ns, 2);
+        let (ev, dropped) = r.take();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(dropped, 2);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn aligned_ns_applies_signed_offset_and_clamps() {
+        let rt = RankTrace {
+            rank: 1,
+            offset_ns: -100,
+            uncertainty_ns: 5,
+            dropped: 0,
+            events: vec![],
+        };
+        let early = TraceEvent { t_ns: 40, kind: EventKind::ExpandBatch { units: 1 } };
+        let late = TraceEvent { t_ns: 400, kind: EventKind::ExpandBatch { units: 1 } };
+        assert_eq!(rt.aligned_ns(&early), 0); // clamped
+        assert_eq!(rt.aligned_ns(&late), 300);
+    }
+}

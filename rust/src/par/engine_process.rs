@@ -56,7 +56,11 @@ use crate::fabric::process::{connect, DataPlane, Hub, HubEvent};
 use crate::fabric::CommStats;
 use crate::lcm::SupportHist;
 use crate::net::{fresh_token, Endpoint};
+use crate::obs::clock::{self, estimate_offset, HandshakeSample};
+use crate::obs::log::{self, Tags};
+use crate::obs::trace::{self as obs_trace, EventKind as TraceEv, RankTrace, TraceEvent, TraceRing};
 use crate::util::fault::{FaultPlan, FAULT_ENV, FAULT_EXIT_CODE};
+use crate::wire::trace::TraceChunk;
 use crate::wire::{PhaseSpec, RunSpec, WorkerMerge};
 
 use super::breakdown::Breakdown;
@@ -85,6 +89,10 @@ pub struct ProcessConfig {
     pub steal: bool,
     /// Depth-1 preprocess partition (§4.5).
     pub preprocess: bool,
+    /// Record per-rank event traces and flush them to the hub with each
+    /// merge (DESIGN.md §14). Carried to the workers in the `PhaseSpec`;
+    /// off by default — tracing must cost nothing when unused.
+    pub trace: bool,
     /// Work budget between probes, in expansion cost units (§4.6).
     pub probe_budget_units: u64,
     pub dtd_interval_ns: u64,
@@ -130,6 +138,7 @@ impl ProcessConfig {
             tree_arity: 3,
             steal: true,
             preprocess: true,
+            trace: false,
             probe_budget_units: 4_000_000,
             dtd_interval_ns: 1_000_000,
             seed,
@@ -399,6 +408,9 @@ pub struct ProcessFleet {
     /// Workers respawned over the fleet lifetime (chaos tests assert
     /// "exactly one").
     respawns: u64,
+    /// Hub-side trace events (respawn/fence records) awaiting collection —
+    /// drained by [`ProcessFleet::take_hub_trace`] onto the hub track.
+    hub_trace: TraceRing,
     /// Ranks that died *after* their merge for the active epoch was
     /// collected (e.g. killed while the owner runs the serial phase-3
     /// screen): their contribution is complete, so the attempt is not
@@ -485,6 +497,7 @@ impl PendingFleet {
             next_epoch: 0,
             fresh: vec![false; p],
             respawns: 0,
+            hub_trace: TraceRing::with_default_cap(),
             deferred_gone: Vec::new(),
             spawn_timeout: self.spawn_timeout,
             remote: self.remote,
@@ -549,6 +562,13 @@ impl ProcessFleet {
         self.respawns
     }
 
+    /// Drain the hub-side trace events (respawns and replay fences) as
+    /// `(events, dropped)`. The coordinator merges them onto the hub
+    /// track; empty unless tracing is on and a recovery ran.
+    pub fn take_hub_trace(&mut self) -> (Vec<TraceEvent>, u64) {
+        self.hub_trace.take()
+    }
+
     /// The hub's last custody checkpoint for `rank` (diagnostics).
     pub fn custody(&self, rank: usize) -> crate::fabric::process::Custody {
         self.hub.custody(rank)
@@ -582,6 +602,7 @@ impl ProcessFleet {
             tree_arity: cfg.tree_arity as u32,
             steal: cfg.steal,
             preprocess: cfg.preprocess && self.p > 1,
+            trace: cfg.trace,
             probe_budget_units: cfg.probe_budget_units,
             dtd_interval_ns: cfg.dtd_interval_ns,
             mode,
@@ -636,7 +657,8 @@ impl ProcessFleet {
         while let Some(ev) = self.hub.recv_event(Duration::ZERO)? {
             match ev {
                 HubEvent::Gone { rank, detail } => self.recover_rank(rank, &detail)?,
-                HubEvent::Merge(_) => {} // stale merge of an aborted attempt
+                HubEvent::Merge(_) => {}      // stale merge of an aborted attempt
+                HubEvent::Trace { .. } => {}  // stale flush of an aborted attempt
             }
         }
         Ok(())
@@ -682,6 +704,15 @@ impl ProcessFleet {
         // so stragglers from an aborted attempt are dropped rather than
         // double-counted; a disconnect aborts this attempt only.
         let mut merges: Vec<Option<WorkerMerge>> = vec![None; self.p];
+        let mut traces: Vec<Option<(TraceChunk, u64)>> = vec![None; self.p];
+        let mut keep_trace = |traces: &mut Vec<Option<(TraceChunk, u64)>>,
+                              chunk: TraceChunk,
+                              hub_recv_ns: u64| {
+            let rank = chunk.rank as usize;
+            if chunk.epoch == epoch && rank < traces.len() && traces[rank].is_none() {
+                traces[rank] = Some((chunk, hub_recv_ns));
+            }
+        };
         let mut collected = 0usize;
         while collected < self.p {
             match self.hub.recv_event(Duration::from_millis(200))? {
@@ -705,6 +736,9 @@ impl ProcessFleet {
                     merges[rank] = Some(m);
                     collected += 1;
                 }
+                Some(HubEvent::Trace { chunk, hub_recv_ns }) => {
+                    keep_trace(&mut traces, chunk, hub_recv_ns);
+                }
                 Some(HubEvent::Gone { rank, detail }) => {
                     // A rank that died *after* this epoch's merge arrived
                     // has already contributed everything the phase needs;
@@ -720,8 +754,60 @@ impl ProcessFleet {
             }
         }
 
+        // Each rank's TRACE flush rides its socket right behind its MERGE,
+        // so by the time the last merge lands most chunks are queued — but
+        // the *last* rank's chunk is still in flight. Wait briefly for the
+        // stragglers; the flush is best-effort, so a missing chunk degrades
+        // the timeline (logged), never the run.
+        if phase.trace {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while traces.iter().any(Option::is_none) && Instant::now() < deadline {
+                match self.hub.recv_event(Duration::from_millis(50))? {
+                    Some(HubEvent::Trace { chunk, hub_recv_ns }) => {
+                        keep_trace(&mut traces, chunk, hub_recv_ns);
+                    }
+                    Some(HubEvent::Gone { rank, detail }) => {
+                        // The phase is complete; repair at the next opening.
+                        self.deferred_gone.push((rank, detail));
+                    }
+                    Some(HubEvent::Merge(_)) | None => {}
+                }
+            }
+        }
+        let mut rank_traces: Vec<RankTrace> = Vec::new();
+        if phase.trace {
+            for (rank, slot) in traces.into_iter().enumerate() {
+                let Some((chunk, hub_recv_ns)) = slot else {
+                    log::warn(
+                        "fleet",
+                        &Tags::rank(rank),
+                        format_args!("no trace chunk from rank {rank} for epoch {epoch}"),
+                    );
+                    continue;
+                };
+                // One NTP-style handshake round per phase: hub stamps the
+                // START write and the TRACE read; the worker stamps the
+                // START read and the flush inside the chunk.
+                let off = estimate_offset(&[HandshakeSample {
+                    hub_send_ns: self.hub.start_sent_ns(rank),
+                    worker_recv_ns: chunk.start_recv_ns,
+                    worker_send_ns: chunk.flush_ns,
+                    hub_recv_ns,
+                }]);
+                rank_traces.push(RankTrace {
+                    rank: chunk.rank,
+                    offset_ns: off.offset_ns,
+                    uncertainty_ns: off.uncertainty_ns,
+                    dropped: chunk.dropped,
+                    events: chunk.events,
+                });
+            }
+        }
+
         let merges: Vec<WorkerMerge> = merges.into_iter().map(Option::unwrap).collect();
-        Ok(PhaseOutcome::Done(collect_merges(db, &merges, mode)))
+        let mut result = collect_merges(db, &merges, mode);
+        result.traces = rank_traces;
+        Ok(PhaseOutcome::Done(result))
     }
 
     /// Recover from one rank's death (DESIGN.md §12): vacate its hub slot,
@@ -729,14 +815,28 @@ impl ProcessFleet {
     /// re-join command and wait), await its `HELLO`, refresh the mesh peer
     /// map, and mark it fresh so the next attempt ships it the database.
     fn recover_rank(&mut self, rank: usize, detail: &str) -> Result<()> {
-        eprintln!("parlamp: worker rank {rank} lost ({detail}); respawning rank {rank}");
+        log::warn(
+            "fleet",
+            &Tags::rank(rank),
+            format_args!("worker rank {rank} lost ({detail}); respawning rank {rank}"),
+        );
+        if obs_trace::enabled() {
+            self.hub_trace.push(
+                clock::now_ns(),
+                TraceEv::Respawn { rank: rank as u32, epoch: self.next_epoch },
+            );
+        }
         self.hub.forget_rank(rank);
         if self.remote {
-            eprintln!(
-                "parlamp: remote fleet — re-attach rank {rank} with: \
-                 parlamp __worker --connect {} --token {} --worker-rank {rank}",
-                self.hub.endpoint(),
-                self.hub.token()
+            log::warn(
+                "fleet",
+                &Tags::rank(rank),
+                format_args!(
+                    "remote fleet — re-attach rank {rank} with: \
+                     parlamp __worker --connect {} --token {} --worker-rank {rank}",
+                    self.hub.endpoint(),
+                    self.hub.token()
+                ),
             );
         } else {
             self.fleet.respawn(rank)?;
@@ -818,6 +918,7 @@ fn collect_merges(db: &Database, merges: &[WorkerMerge], mode: RunMode) -> ParRu
         breakdowns,
         comm,
         work_units,
+        traces: Vec::new(), // filled by try_phase when the run was traced
     }
 }
 
@@ -836,6 +937,9 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
     // are supervised — they exit on fabric EOF or `BYE` — so SIGINT is
     // ignored here (SIGTERM keeps its default for targeted kills).
     crate::util::sig::ignore_interrupts();
+    // A dying worker's stderr should carry its recent history, not just a
+    // bare panic line — the hub quotes that tail in its `Gone` detail.
+    log::install_panic_hook();
     let hub: Endpoint = args
         .get("connect")
         .or_else(|| args.get("endpoint"))
@@ -872,6 +976,10 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             .as_ref()
             .context("hub opened a RECONFIG phase before ever shipping a database")?;
         let spec = start.phase;
+        // The hub decides per phase whether this run is traced; flip the
+        // process-global switch before the worker is built so its ring is
+        // allocated (or not) accordingly.
+        obs_trace::set_enabled(spec.trace);
         let wc = WorkerConfig {
             rank,
             p: spec.p as usize,
@@ -887,6 +995,10 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             seed: spec.seed,
         };
         let mut worker = Worker::new(db, wc);
+        worker.trace_event(TraceEv::PhaseStart {
+            phase: spec.mode.phase_no(),
+            epoch: mb.epoch(),
+        });
 
         // The same scheduling loop as the thread engine: blocking waits cap
         // at 200 µs so DTD waves keep flowing. Two fault-tolerance hooks
@@ -913,7 +1025,12 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             }
             if worker.work_units() - last_checkpoint >= CHECKPOINT_EVERY_UNITS {
                 last_checkpoint = worker.work_units();
-                mb.send_checkpoint(worker.work_units(), worker.stack_roots(64));
+                let roots = worker.stack_roots(64);
+                worker.trace_event(TraceEv::Checkpoint {
+                    units: last_checkpoint,
+                    roots: roots.len() as u32,
+                });
+                mb.send_checkpoint(last_checkpoint, roots);
             }
             let now_ns = t0.elapsed().as_nanos() as u64;
             match worker.poll(&mut mb, now_ns) {
@@ -934,9 +1051,15 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
         if interrupted {
             // Abandoned attempt: no merge — the hub has already moved on,
             // and a merge stamped with this epoch would be fenced anyway.
+            // The ring is drained so the replay starts a clean trace.
+            let _ = worker.take_trace();
             continue;
         }
         let makespan_ns = t0.elapsed().as_nanos() as u64;
+        worker.trace_event(TraceEv::PhaseEnd {
+            phase: spec.mode.phase_no(),
+            epoch: mb.epoch(),
+        });
 
         // Fold the mailbox's per-phase data-plane split into the comm
         // counters so the hub-vs-mesh ablation is observable in the merge.
@@ -957,6 +1080,12 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             makespan_ns,
         };
         mb.send_merge(&merge)?;
+        // The trace flush rides the same socket immediately after the
+        // merge (best-effort — a lost chunk degrades the timeline, never
+        // the run). `take_trace` is `None` when this phase was untraced.
+        if let Some((events, dropped)) = worker.take_trace() {
+            mb.send_trace(events, dropped);
+        }
 
         // The post-phase trigger: a plan whose armed epoch completed under
         // its `after` budget fires here, right after the rank's last merge
@@ -975,7 +1104,12 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
 /// Die by plan: the injected fault's one observable side effect beyond the
 /// exit code is a stderr line the chaos CI job greps for.
 fn fault_exit(rank: usize, plan: &FaultPlan) -> ! {
-    eprintln!("parlamp: rank {rank}: fault injection firing ({plan}); exiting {FAULT_EXIT_CODE}");
+    log::warn(
+        "worker",
+        &Tags::rank(rank),
+        format_args!("fault injection firing ({plan}); exiting {FAULT_EXIT_CODE}"),
+    );
+    log::dump_recent("fault injection");
     std::process::exit(FAULT_EXIT_CODE);
 }
 

@@ -11,6 +11,7 @@ use crate::db::Database;
 use crate::fabric::sim::{EventKind, EventQueue, NetModel, SimMailbox};
 use crate::fabric::CommStats;
 use crate::lcm::SupportHist;
+use crate::obs::trace::{EventKind as TraceEv, RankTrace};
 
 use super::breakdown::Breakdown;
 use super::worker::{Poll, RunMode, Worker, WorkerConfig};
@@ -102,6 +103,9 @@ pub fn run_sim(db: &Database, mode: RunMode, cfg: &SimConfig) -> ParRunResult {
             Worker::new(db, wc)
         })
         .collect();
+    for w in &mut workers {
+        w.trace_event(TraceEv::PhaseStart { phase: mode.phase_no(), epoch: 0 });
+    }
     let mut boxes: Vec<SimMailbox> = (0..p).map(|r| SimMailbox::new(r, p)).collect();
     let mut queue = EventQueue::new();
     let mut poll_scheduled = vec![false; p];
@@ -153,6 +157,8 @@ pub fn run_sim(db: &Database, mode: RunMode, cfg: &SimConfig) -> ParRunResult {
                         }
                     }
                     Poll::Finished => {
+                        workers[r]
+                            .trace_event(TraceEv::PhaseEnd { phase: mode.phase_no(), epoch: 0 });
                         done[r] = true;
                         finish_at[r] = now;
                         n_done += 1;
@@ -175,9 +181,12 @@ pub fn run_sim(db: &Database, mode: RunMode, cfg: &SimConfig) -> ParRunResult {
 }
 
 /// Merge worker-local results into a [`ParRunResult`].
+///
+/// Shared by the sim and thread engines; both run in one address space, so
+/// harvested traces carry offset 0 (every rank already reads one clock).
 pub(crate) fn collect(
     db: &Database,
-    workers: Vec<Worker>,
+    mut workers: Vec<Worker>,
     makespan_ns: u64,
     mode: RunMode,
 ) -> ParRunResult {
@@ -186,7 +195,8 @@ pub(crate) fn collect(
     let mut comm = CommStats::default();
     let mut work_units = 0u64;
     let mut breakdowns: Vec<Breakdown> = Vec::with_capacity(workers.len());
-    for w in &workers {
+    let mut traces: Vec<RankTrace> = Vec::new();
+    for w in &mut workers {
         hist.merge(w.hist());
         closed_total += w.closed_count();
         comm.add(&w.comm);
@@ -194,6 +204,15 @@ pub(crate) fn collect(
         let mut b = w.breakdown;
         b.close_over_span(makespan_ns);
         breakdowns.push(b);
+        if let Some((events, dropped)) = w.take_trace() {
+            traces.push(RankTrace {
+                rank: w.rank() as u32,
+                offset_ns: 0,
+                uncertainty_ns: 0,
+                dropped,
+                events,
+            });
+        }
     }
     let (lambda_final, min_sup) = match mode {
         RunMode::Phase1 { .. } => (0, 0), // finalized by finalize_phase1
@@ -208,6 +227,7 @@ pub(crate) fn collect(
         breakdowns,
         comm,
         work_units,
+        traces,
     }
 }
 

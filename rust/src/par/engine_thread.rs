@@ -10,6 +10,7 @@
 use std::time::{Duration, Instant};
 
 use crate::db::Database;
+use crate::obs::trace::EventKind as TraceEv;
 
 use super::engine_sim::collect;
 use super::worker::{Poll, RunMode, Worker, WorkerConfig};
@@ -87,6 +88,7 @@ pub fn run_threads_with(db: &Database, mode: RunMode, cfg: &ThreadConfig) -> Par
             };
             let mut worker = Worker::new(db, wc);
             handles.push(scope.spawn(move || {
+                worker.trace_event(TraceEv::PhaseStart { phase: mode.phase_no(), epoch: 0 });
                 let t0 = Instant::now();
                 loop {
                     let now_ns = t0.elapsed().as_nanos() as u64;
@@ -107,6 +109,7 @@ pub fn run_threads_with(db: &Database, mode: RunMode, cfg: &ThreadConfig) -> Par
                         Poll::Finished => break,
                     }
                 }
+                worker.trace_event(TraceEv::PhaseEnd { phase: mode.phase_no(), epoch: 0 });
                 worker
             }));
         }

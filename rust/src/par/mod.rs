@@ -36,6 +36,7 @@ pub use worker::{Poll, RunMode, Worker, WorkerConfig};
 use crate::db::Database;
 use crate::lamp::{phase3_extract, LampResult, SupportIncreaseRule};
 use crate::lcm::SupportHist;
+use crate::obs::trace::RankTrace;
 
 /// Aggregate outcome of one parallel run (one phase).
 #[derive(Clone, Debug)]
@@ -58,6 +59,10 @@ pub struct ParRunResult {
     /// Total expansion work units across processes: word-op equivalents
     /// including conditional-database reduction work (DESIGN.md §8).
     pub work_units: u64,
+    /// Per-rank event timelines, clock-aligned onto the hub (empty unless
+    /// the run was traced — DESIGN.md §14). In-process engines share one
+    /// clock, so their offsets are 0.
+    pub traces: Vec<RankTrace>,
 }
 
 impl ParRunResult {

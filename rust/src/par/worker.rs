@@ -24,6 +24,8 @@ use crate::fabric::{BasicKind, CommStats, HistDelta, Mailbox, Msg, WireTask};
 use crate::glb::Lifelines;
 use crate::lamp::SupportIncreaseRule;
 use crate::lcm::{expand, expand_filtered, ExpandScratch, SearchNode, SupportHist};
+use crate::obs::clock;
+use crate::obs::trace::{EventKind, TraceEvent, TraceRing};
 use crate::util::rng::Rng;
 
 use super::breakdown::Breakdown;
@@ -35,6 +37,19 @@ pub enum RunMode {
     Phase1 { alpha: f64 },
     /// LAMP phase 2 (or plain closed mining): count at fixed support.
     Count { min_sup: u32 },
+}
+
+impl RunMode {
+    /// The LAMP phase number this mode executes, as stamped into trace
+    /// `PhaseStart`/`PhaseEnd` events (DESIGN.md §14). Phase 3 — the
+    /// screen — never runs on a worker; the coordinator records it on the
+    /// hub track.
+    pub fn phase_no(&self) -> u8 {
+        match self {
+            RunMode::Phase1 { .. } => 1,
+            RunMode::Count { .. } => 2,
+        }
+    }
 }
 
 /// Static per-worker configuration.
@@ -159,6 +174,14 @@ pub struct Worker<'d> {
     pub comm: CommStats,
     main_started_at: Option<u64>,
     t0: Instant,
+
+    // Observability (DESIGN.md §14): per-rank event ring, allocated only
+    // when the global trace flag is armed — `None` costs one branch per
+    // hook site and nothing else.
+    trace: Option<TraceRing>,
+    /// DES virtual "now" of the current quantum; real-mode hooks stamp
+    /// the process-wide monotonic clock instead.
+    trace_vnow: u64,
 }
 
 impl<'d> Worker<'d> {
@@ -208,6 +231,8 @@ impl<'d> Worker<'d> {
             comm: CommStats::default(),
             main_started_at: None,
             t0: Instant::now(),
+            trace: crate::obs::trace::enabled().then(TraceRing::with_default_cap),
+            trace_vnow: 0,
         };
         if !w.cfg.preprocess && w.cfg.rank == 0 {
             // Whole tree starts at the root process (§4.5 without the
@@ -240,6 +265,30 @@ impl<'d> Worker<'d> {
 
     fn real_now_ns(&self) -> u64 {
         self.t0.elapsed().as_nanos() as u64
+    }
+
+    // ---- observability hooks (DESIGN.md §14) --------------------------
+
+    /// Record `kind` into the event ring, if tracing is armed. Stamps DES
+    /// virtual time under the sim cost model (exactly reproducible run to
+    /// run) and the process-wide monotonic clock otherwise, so worker
+    /// events share the epoch of the fabric's clock-handshake stamps.
+    #[inline]
+    pub fn trace_event(&mut self, kind: EventKind) {
+        if let Some(tr) = &mut self.trace {
+            let t = if self.cfg.ns_per_unit.is_some() {
+                self.trace_vnow
+            } else {
+                clock::now_ns()
+            };
+            tr.push(t, kind);
+        }
+    }
+
+    /// Drain the event ring for flushing: `(events, dropped)`. `None`
+    /// when tracing was off when this worker was built.
+    pub fn take_trace(&mut self) -> Option<(Vec<TraceEvent>, u64)> {
+        self.trace.as_mut().map(TraceRing::take)
     }
 
     fn record_closed(&mut self, support: u32) {
@@ -288,6 +337,9 @@ impl<'d> Worker<'d> {
     pub fn poll(&mut self, mb: &mut dyn Mailbox, now_ns: u64) -> Poll {
         if self.phase == Phase::Done {
             return Poll::Finished;
+        }
+        if self.trace.is_some() {
+            self.trace_vnow = now_ns;
         }
         let real_mode = self.cfg.ns_per_unit.is_none();
         let probe_t0 = if real_mode { self.real_now_ns() } else { 0 };
@@ -365,6 +417,9 @@ impl<'d> Worker<'d> {
                 // expansion units (DESIGN.md §8).
                 spent_units += st.units().max(1);
                 self.work_units += st.units();
+            }
+            if spent_units > 0 {
+                self.trace_event(EventKind::ExpandBatch { units: spent_units });
             }
             let main_ns = if real_mode {
                 self.real_now_ns() - main_t0
@@ -491,6 +546,7 @@ impl<'d> Worker<'d> {
             .collect();
         self.comm.gives += 1;
         self.comm.tasks_shipped += tasks.len() as u64;
+        self.trace_event(EventKind::StealGive { dst: dst as u32, tasks: tasks.len() as u32 });
         let cost_units: u64 = 50 * tasks.len() as u64;
         self.send_basic(mb, dst, BasicKind::Give { tasks });
         let c = self.units_to_ns(cost_units).max(300);
@@ -505,6 +561,7 @@ impl<'d> Worker<'d> {
         if self.cfg.w > 0 {
             if let Some(victim) = self.lifelines.random_victim(&mut self.rng) {
                 self.comm.steal_requests += 1;
+                self.trace_event(EventKind::StealRequest { dst: victim as u32, lifeline: false });
                 self.send_basic(mb, victim, BasicKind::Request { lifeline: false });
                 return StealState::AwaitReply { tries: 1 };
             }
@@ -519,6 +576,7 @@ impl<'d> Worker<'d> {
                 self.activated[j] = true;
                 let dst = self.lifelines.neighbors()[j];
                 self.comm.steal_requests += 1;
+                self.trace_event(EventKind::StealRequest { dst: dst as u32, lifeline: true });
                 self.send_basic(mb, dst, BasicKind::Request { lifeline: true });
             }
         }
@@ -538,6 +596,7 @@ impl<'d> Worker<'d> {
                 }
             }
             Msg::WaveDown { t, lambda } => {
+                self.trace_event(EventKind::WaveArrive { t: t as u32, up: false });
                 self.lambda = self.lambda.max(lambda);
                 let idle = self.idle_vote();
                 let hist = self.drain_wave_delta();
@@ -548,6 +607,7 @@ impl<'d> Worker<'d> {
                 }
             }
             Msg::WaveUp { t, count, invalid, all_idle, hist } => {
+                self.trace_event(EventKind::WaveArrive { t: t as u32, up: true });
                 let mut out = Vec::new();
                 let oc = self.dtd.on_wave_up(t, count, invalid, all_idle, hist, &mut out);
                 for (dst, m) in out {
@@ -588,9 +648,11 @@ impl<'d> Worker<'d> {
                 self.incoming_lifelines.push(src);
             }
             self.comm.rejects += 1;
+            self.trace_event(EventKind::StealReject { src: src as u32, lifeline: true });
             self.send_basic(mb, src, BasicKind::Reject { lifeline: true });
         } else {
             self.comm.rejects += 1;
+            self.trace_event(EventKind::StealReject { src: src as u32, lifeline: false });
             self.send_basic(mb, src, BasicKind::Reject { lifeline: false });
         }
     }
@@ -605,6 +667,10 @@ impl<'d> Worker<'d> {
             } else if tries < self.cfg.w {
                 if let Some(victim) = self.lifelines.random_victim(&mut self.rng) {
                     self.comm.steal_requests += 1;
+                    self.trace_event(EventKind::StealRequest {
+                        dst: victim as u32,
+                        lifeline: false,
+                    });
                     self.send_basic(mb, victim, BasicKind::Request { lifeline: false });
                     self.steal_state = StealState::AwaitReply { tries: tries + 1 };
                 } else {
@@ -617,6 +683,7 @@ impl<'d> Worker<'d> {
     }
 
     fn on_give(&mut self, src: usize, tasks: Vec<WireTask>) {
+        self.trace_event(EventKind::StealRecv { src: src as u32, tasks: tasks.len() as u32 });
         for t in tasks {
             self.stack.push(SearchNode {
                 items: t.items,

@@ -35,6 +35,9 @@ use std::time::Duration;
 use anyhow::{Context as _, Result};
 
 use crate::net::{Endpoint, Listener, Stream};
+use crate::obs::log::{self, Tags};
+use crate::obs::trace::{self as obs_trace, EventKind as TraceEv, RankTrace, TraceEvent, TraceRing};
+use crate::obs::{chrome, clock};
 use crate::par::{DataPlane, PendingFleet, ProcessConfig};
 use crate::util::fault::FaultPlan;
 use crate::util::sig;
@@ -91,6 +94,12 @@ pub struct ServeConfig {
     /// Arms **fleet 0 only**, so the chaos suite knows exactly which fleet
     /// dies and can prove the others unaffected.
     pub fault: Option<FaultPlan>,
+    /// `--trace FILE` (DESIGN.md §14): accumulate the daemon's own
+    /// queue/pop/expire events plus every mined job's per-rank timelines
+    /// and write one Chrome trace-event JSON at drain. Per-track events
+    /// are bounded by the default ring capacity (overflow counted), so a
+    /// long session degrades loudly instead of growing without bound.
+    pub trace: Option<PathBuf>,
 }
 
 impl ServeConfig {
@@ -108,6 +117,7 @@ impl ServeConfig {
             fleet_listen: None,
             remote_workers: None,
             fault: None,
+            trace: None,
         }
     }
 }
@@ -147,6 +157,12 @@ struct Inner {
     draining: bool,
     /// All runners have exited (result waiters must not block forever).
     done: bool,
+    /// Hub-side serve events (queue/pop/expire) when tracing is on
+    /// (DESIGN.md §14) — a bounded ring, like the worker rings.
+    trace: TraceRing,
+    /// Per-track fleet timelines folded in from traced jobs, keyed by
+    /// export tid (fleet·procs + rank; [`chrome::HUB_RANK`] for hubs).
+    rank_traces: std::collections::BTreeMap<u32, RankTrace>,
 }
 
 impl Inner {
@@ -167,9 +183,13 @@ impl Inner {
             if let Some(old) = self.finished.pop_front() {
                 self.jobs.remove(&old);
                 if self.metrics.evicted_records == 0 {
-                    eprintln!(
-                        "parlamp serve: job history cap ({JOB_HISTORY_CAP}) reached; \
-                         evicting oldest terminal records (count in STATS)"
+                    log::warn(
+                        "serve",
+                        &Tags::job(old),
+                        format_args!(
+                            "job history cap ({JOB_HISTORY_CAP}) reached; evicting oldest \
+                             terminal records (count in STATS)"
+                        ),
                     );
                 }
                 self.metrics.evicted_records += 1;
@@ -187,6 +207,37 @@ impl Inner {
         self.metrics.store_hits += 1;
         self.cache.insert_outcome(*key, Arc::clone(&outcome));
         Some(outcome)
+    }
+
+    /// Fold one traced job's timelines into the daemon-lifetime trace.
+    /// Fleet `fleet`'s rank r rides export track `fleet·procs + r` so
+    /// concurrent fleets stay distinct; every run's hub events land on the
+    /// one shared [`chrome::HUB_RANK`] track. Events beyond the default
+    /// ring capacity per track are dropped and counted — never silent.
+    fn absorb_traces(&mut self, fleet: usize, procs: usize, traces: Vec<RankTrace>) {
+        for rt in traces {
+            let tid = if rt.rank == chrome::HUB_RANK {
+                chrome::HUB_RANK
+            } else {
+                rt.rank + (fleet * procs) as u32
+            };
+            let slot = self.rank_traces.entry(tid).or_insert_with(|| RankTrace {
+                rank: tid,
+                offset_ns: 0,
+                uncertainty_ns: 0,
+                dropped: 0,
+                events: Vec::new(),
+            });
+            slot.uncertainty_ns = slot.uncertainty_ns.max(rt.uncertainty_ns);
+            slot.dropped += rt.dropped;
+            for e in &rt.events {
+                if slot.events.len() >= obs_trace::DEFAULT_RING_CAP {
+                    slot.dropped += 1;
+                } else {
+                    slot.events.push(TraceEvent { t_ns: rt.aligned_ns(e), kind: e.kind });
+                }
+            }
+        }
     }
 
     /// Poll the signal latch into the draining flag.
@@ -325,6 +376,8 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
             metrics: Metrics::new(cfg.fleets),
             draining: false,
             done: false,
+            trace: TraceRing::with_default_cap(),
+            rank_traces: std::collections::BTreeMap::new(),
         }),
         wake: Condvar::new(),
     });
@@ -351,19 +404,20 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
             // kill the accept loop — a daemon that silently stops
             // answering is worse than a noisy retry.
             Err(e) => {
-                eprintln!("parlamp serve: accept error (retrying): {e}");
+                log::warn("serve", &Tags::NONE, format_args!("accept error (retrying): {e}"));
                 std::thread::sleep(Duration::from_millis(100));
             }
         }
     });
 
     // One runner thread per fleet; each pulls from the shared fair queue.
+    let procs = fleet_cfg.world_size();
     let runner_threads: Vec<_> = runners
         .into_iter()
         .map(|mut runner| {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || -> Result<()> {
-                runner_loop(&shared, &mut runner);
+                runner_loop(&shared, &mut runner, procs);
                 runner.shutdown().context("dismiss warm fleet")
             })
         })
@@ -393,13 +447,36 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     }
     shared.wake.notify_all();
     let _ = listener_thread.join();
+
+    // Write the daemon-lifetime trace after everything else stopped, so
+    // no runner appends to the timelines mid-export.
+    if let Some(path) = &cfg.trace {
+        let mut inner = shared.lock();
+        let (events, dropped) = inner.trace.take();
+        let hub = inner.rank_traces.entry(chrome::HUB_RANK).or_insert_with(|| RankTrace {
+            rank: chrome::HUB_RANK,
+            offset_ns: 0,
+            uncertainty_ns: 0,
+            dropped: 0,
+            events: Vec::new(),
+        });
+        hub.events.extend(events);
+        hub.dropped += dropped;
+        hub.events.sort_by_key(|e| e.t_ns);
+        let traces: Vec<RankTrace> = inner.rank_traces.values().cloned().collect();
+        drop(inner);
+        std::fs::write(path, chrome::export(&traces))
+            .with_context(|| format!("write trace {}", path.display()))?;
+        println!("parlamp serve: wrote trace {} ({} track(s))", path.display(), traces.len());
+    }
     shutdown_result
 }
 
 /// One fleet's scheduling loop: expire deadlines, pull the next eligible
 /// job, probe the caches, mine, publish. Exits once the daemon is
-/// draining and the queue is empty.
-fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner) {
+/// draining and the queue is empty. `procs` is the fleet world size, used
+/// to give each fleet's ranks their own trace tracks.
+fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner, procs: usize) {
     loop {
         // One locked section: poll signals, expire deadlines, try to pop.
         let popped = {
@@ -412,6 +489,9 @@ fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner) {
                 // release, just the terminal record and the counter.
                 for id in expired {
                     inner.metrics.jobs_expired += 1;
+                    if obs_trace::enabled() {
+                        inner.trace.push(clock::now_ns(), TraceEv::ServeExpire { job: id });
+                    }
                     inner.finish(id, Record::Expired);
                 }
                 shared.wake.notify_all();
@@ -432,6 +512,9 @@ fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner) {
                                 .metrics
                                 .queue_wait
                                 .record(now.saturating_sub(submitted_ms));
+                            if obs_trace::enabled() {
+                                inner.trace.push(clock::now_ns(), TraceEv::ServePop { job: id });
+                            }
                             Some((id, spec, key, client))
                         }
                         stale => {
@@ -489,13 +572,21 @@ fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner) {
             Ok(run) => {
                 inner.metrics.jobs_mined += 1;
                 inner.metrics.fleets[runner.idx].jobs_mined += 1;
+                if obs_trace::enabled() {
+                    let traces = run.traces();
+                    inner.absorb_traces(runner.idx, procs, traces);
+                }
                 let shared_outcome = Arc::new(JobOutcome::from_run(&run, true));
                 if let Some(store) = &mut inner.store {
                     match store.append(key, &shared_outcome) {
                         Ok(()) => inner.metrics.store_appends += 1,
                         // A full disk must not fail the job — the result
                         // is in memory and on its way to the client.
-                        Err(e) => eprintln!("parlamp serve: store append failed: {e:#}"),
+                        Err(e) => log::warn(
+                            "serve",
+                            &Tags::fleet(runner.idx).and_job(id),
+                            format_args!("store append failed: {e:#}"),
+                        ),
                     }
                 }
                 inner.cache.insert_outcome(key, shared_outcome);
@@ -503,6 +594,11 @@ fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner) {
             }
             Err(e) => {
                 inner.metrics.jobs_failed += 1;
+                log::warn(
+                    "serve",
+                    &Tags::fleet(runner.idx).and_job(id),
+                    format_args!("job {id} failed: {e:#}"),
+                );
                 inner.finish(id, Record::Failed { reason: format!("{e:#}") });
             }
         }
@@ -522,7 +618,7 @@ fn client_loop(mut stream: Stream, shared: &Arc<Shared>) {
             // reply (the wire versioning promise) before the connection
             // closes — after a framing error the stream cannot be resynced.
             Err(e) => {
-                eprintln!("parlamp serve: bad client frame: {e:#}");
+                log::warn("serve", &Tags::NONE, format_args!("bad client frame: {e:#}"));
                 let _ = write_frame(
                     &mut stream,
                     &Frame::Status {
@@ -628,6 +724,9 @@ fn submit(shared: &Arc<Shared>, spec: Box<JobSpec>) -> Frame {
         };
     }
     inner.next_id += 1;
+    if obs_trace::enabled() {
+        inner.trace.push(clock::now_ns(), TraceEv::ServeQueue { job: id });
+    }
     inner
         .jobs
         .insert(id, Record::Queued { spec, key, client, submitted_ms: now });

@@ -181,10 +181,14 @@ impl ResultStore {
                 break; // clean end of log
             }
             let dropped = bytes.len() as u64 - self.end;
-            eprintln!(
-                "parlamp store: {}: dropped {dropped}-byte tail at offset {} ({reason})",
-                self.path.display(),
-                self.end
+            crate::obs::log::warn(
+                "store",
+                &crate::obs::log::Tags::NONE,
+                format_args!(
+                    "{}: dropped {dropped}-byte tail at offset {} ({reason})",
+                    self.path.display(),
+                    self.end
+                ),
             );
             self.file
                 .set_len(self.end)

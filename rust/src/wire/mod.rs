@@ -37,6 +37,7 @@
 //! protocol exchange.
 
 pub mod service;
+pub mod trace;
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
@@ -79,7 +80,13 @@ pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 /// accounting), `STATUS` can report the new `Expired` / `Busy` job states,
 /// and the new `STATS` frame queries the daemon's scheduler/cache/store
 /// counters ([`ServiceStats`]).
-pub const WIRE_VERSION: u16 = 6;
+/// v7: end-to-end tracing (DESIGN.md §14) — [`PhaseSpec`] carries the
+/// `trace` flag so every worker arms its event ring for exactly the
+/// phases the owner wants traced, and the new worker → hub `TRACE` frame
+/// ([`trace::TraceChunk`]) flushes the rank's timestamped event ring
+/// after `MERGE`, carrying the worker-clock START-receipt and flush
+/// stamps the hub's clock-offset estimator pairs with its own.
+pub const WIRE_VERSION: u16 = 7;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -105,6 +112,8 @@ const TAG_PEERHELLO: u8 = 0x08;
 const TAG_PEERMSG: u8 = 0x09;
 // Fault tolerance (custody checkpoints, DESIGN.md §12).
 const TAG_CHECKPOINT: u8 = 0x0A;
+// Observability (post-MERGE trace-ring flush, DESIGN.md §14).
+const TAG_TRACE: u8 = 0x0B;
 // Job frames (the `parlamp serve` client protocol, DESIGN.md §9) live in
 // a disjoint tag range so fabric and service streams can never be confused.
 const TAG_SUBMIT: u8 = 0x10;
@@ -136,6 +145,9 @@ pub struct PhaseSpec {
     pub steal: bool,
     /// Depth-1 preprocess partition (already `p > 1`-gated by the hub).
     pub preprocess: bool,
+    /// v7: arm the worker's per-rank event ring for this phase and flush
+    /// it to the hub as a `TRACE` frame after `MERGE`.
+    pub trace: bool,
     /// Expansion cost units between probes.
     pub probe_budget_units: u64,
     /// DTD wave cadence in nanoseconds.
@@ -231,6 +243,12 @@ pub enum Frame {
     Relay { peer: u32, epoch: u64, msg: Msg },
     /// Worker → hub after `Finish`: the phase-boundary merge payload.
     Merge(Box<WorkerMerge>),
+    /// Worker → hub after `Merge`, only when the phase was traced (v7):
+    /// the rank's flushed event ring plus the worker-clock stamps
+    /// (START receipt, flush time) the hub pairs with its own clock for
+    /// offset estimation (DESIGN.md §14). Best-effort: a lost TRACE
+    /// costs a timeline, never a result.
+    Trace(Box<trace::TraceChunk>),
     /// Hub → worker: no further phases; exit cleanly.
     Bye,
     /// Client → daemon: submit a mining job (parameters + database).
@@ -270,6 +288,7 @@ impl Frame {
             Frame::Checkpoint { .. } => "CHECKPOINT",
             Frame::Relay { .. } => "RELAY",
             Frame::Merge(_) => "MERGE",
+            Frame::Trace(_) => "TRACE",
             Frame::Bye => "BYE",
             Frame::Submit(_) => "SUBMIT",
             Frame::Accepted { .. } => "ACCEPTED",
@@ -627,6 +646,7 @@ fn put_phase(buf: &mut Vec<u8>, phase: &PhaseSpec) {
     put_u32(buf, phase.tree_arity);
     put_bool(buf, phase.steal);
     put_bool(buf, phase.preprocess);
+    put_bool(buf, phase.trace);
     put_u64(buf, phase.probe_budget_units);
     put_u64(buf, phase.dtd_interval_ns);
     put_mode(buf, &phase.mode);
@@ -646,6 +666,7 @@ fn get_phase(d: &mut Dec) -> Result<PhaseSpec> {
         tree_arity: d.u32()?,
         steal: d.bool()?,
         preprocess: d.bool()?,
+        trace: d.bool()?,
         probe_budget_units: d.u64()?,
         dtd_interval_ns: d.u64()?,
         mode: get_mode(d)?,
@@ -797,6 +818,10 @@ impl Frame {
                 put_u8(&mut body, TAG_MERGE);
                 put_merge(&mut body, m);
             }
+            Frame::Trace(chunk) => {
+                put_u8(&mut body, TAG_TRACE);
+                trace::put_trace_chunk(&mut body, chunk);
+            }
             Frame::Bye => put_u8(&mut body, TAG_BYE),
             Frame::Submit(spec) => {
                 put_u8(&mut body, TAG_SUBMIT);
@@ -916,6 +941,7 @@ impl Frame {
             }
             TAG_RELAY => Frame::Relay { peer: d.u32()?, epoch: d.u64()?, msg: get_msg(&mut d)? },
             TAG_MERGE => Frame::Merge(Box::new(get_merge(&mut d)?)),
+            TAG_TRACE => Frame::Trace(Box::new(trace::get_trace_chunk(&mut d)?)),
             TAG_BYE => Frame::Bye,
             TAG_SUBMIT => Frame::Submit(Box::new(service::get_job_spec(&mut d)?)),
             TAG_ACCEPTED => Frame::Accepted { job_id: d.u64()? },
@@ -1171,6 +1197,7 @@ mod tests {
             tree_arity: 3,
             steal: true,
             preprocess: true,
+            trace: false,
             probe_budget_units: 10,
             dtd_interval_ns: 20,
             mode: RunMode::Count { min_sup: 2 },
@@ -1246,9 +1273,9 @@ mod tests {
         let frame = Frame::Reconfig { phase: Box::new(phase), peers: vec![] };
         let bytes = frame.encode();
         // version(2) + p(4) seed(8) w(4) l(4) arity(4) steal(1) pre(1)
-        // budget(8) dtd(8) + mode(1+8) = 53, + empty peer map (4) = 57
-        // payload bytes + tag + len.
-        assert_eq!(bytes.len(), 4 + 1 + 57);
+        // trace(1) budget(8) dtd(8) + mode(1+8) = 54, + empty peer map
+        // (4) = 58 payload bytes + tag + len.
+        assert_eq!(bytes.len(), 4 + 1 + 58);
         let got = match roundtrip(&frame) {
             Frame::Reconfig { phase, peers } => {
                 assert!(peers.is_empty());
@@ -1417,6 +1444,111 @@ mod tests {
         assert!(Frame::decode(&bytes[4..4 + 8]).is_err()); // tag+rank+3 epoch bytes
     }
 
+    /// A TRACE chunk covering every event kind (v7).
+    fn sample_trace_chunk() -> Frame {
+        use crate::obs::trace::{EventKind, TraceEvent};
+        let kinds = [
+            EventKind::PhaseStart { phase: 1, epoch: 4 },
+            EventKind::PhaseEnd { phase: 1, epoch: 4 },
+            EventKind::ExpandBatch { units: 4096 },
+            EventKind::StealRequest { dst: 3, lifeline: true },
+            EventKind::StealReject { src: 3, lifeline: false },
+            EventKind::StealGive { dst: 1, tasks: 7 },
+            EventKind::StealRecv { src: 2, tasks: 7 },
+            EventKind::WaveArrive { t: 9, up: true },
+            EventKind::Checkpoint { units: 1_000_000, roots: 12 },
+            EventKind::Respawn { rank: 5, epoch: 6 },
+            EventKind::ServeQueue { job: 42 },
+            EventKind::ServePop { job: 42 },
+            EventKind::ServeExpire { job: 43 },
+        ];
+        let events = kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &kind)| TraceEvent { t_ns: i as u64 * 1_000, kind })
+            .collect();
+        Frame::Trace(Box::new(trace::TraceChunk {
+            rank: 2,
+            epoch: 4,
+            start_recv_ns: 111,
+            flush_ns: 99_999,
+            dropped: 3,
+            events,
+        }))
+    }
+
+    #[test]
+    fn trace_chunk_roundtrips_every_event_kind() {
+        let frame = sample_trace_chunk();
+        assert_eq!(frame.name(), "TRACE");
+        let orig = match &frame {
+            Frame::Trace(c) => (**c).clone(),
+            _ => unreachable!(),
+        };
+        match roundtrip(&frame) {
+            Frame::Trace(c) => assert_eq!(*c, orig),
+            other => panic!("{other:?}"),
+        }
+        // An empty chunk (quiet rank, or ring drained by a prior phase)
+        // is legal and roundtrips.
+        let empty = Frame::Trace(Box::new(trace::TraceChunk {
+            rank: 0,
+            epoch: 0,
+            start_recv_ns: 0,
+            flush_ns: 0,
+            dropped: 0,
+            events: vec![],
+        }));
+        match roundtrip(&empty) {
+            Frame::Trace(c) => {
+                assert!(c.events.is_empty());
+                assert_eq!(c.dropped, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The v7 TRACE frame survives the same corruption battery as every
+    /// other frame: per-byte truncation, trailing garbage, oversized
+    /// count prefixes, and unknown event kinds error — never panic.
+    #[test]
+    fn corrupt_v7_trace_frames_error_instead_of_panicking() {
+        let frame = sample_trace_chunk();
+        let bytes = frame.encode();
+        for cut in 1..bytes.len() - 4 {
+            assert!(
+                Frame::decode(&bytes[4..4 + cut]).is_err(),
+                "TRACE: truncation at {cut} must fail"
+            );
+        }
+        assert!(Frame::decode(&bytes[4..]).is_ok());
+        let mut long = bytes[4..].to_vec();
+        long.push(0);
+        assert!(Frame::decode(&long).is_err(), "trailing byte must fail");
+        // An absurd event count with no event bytes must not allocate.
+        let mut body = vec![TAG_TRACE];
+        put_u32(&mut body, 0); // rank
+        put_u64(&mut body, 0); // epoch
+        put_u64(&mut body, 0); // start_recv_ns
+        put_u64(&mut body, 0); // flush_ns
+        put_u64(&mut body, 0); // dropped
+        put_u32(&mut body, u32::MAX); // event count with no bytes behind it
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // An unknown event kind byte is a decode error, not a skip.
+        let mut body = vec![TAG_TRACE];
+        put_u32(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u32(&mut body, 1); // one event…
+        put_u64(&mut body, 5); // …with a timestamp…
+        put_u8(&mut body, 0xEE); // …and a kind from the future
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown trace event kind"), "{err:#}");
+    }
+
     #[test]
     fn corrupt_input_errors_instead_of_panicking() {
         // truncated body
@@ -1453,9 +1585,9 @@ mod tests {
         let spec = RunSpec { phase: phase_spec(1), db };
         let frame = Frame::Config { spec: Box::new(spec), peers: vec![] }.encode();
         // db starts right after: len(4) tag(1) version(2) p(4) seed(8) w(4)
-        // l(4) arity(4) steal(1) pre(1) budget(8) dtd(8) mode(1+4) = 54,
-        // plus the empty peer map's count (4) = 58.
-        let db_off = 58;
+        // l(4) arity(4) steal(1) pre(1) trace(1) budget(8) dtd(8)
+        // mode(1+4) = 55, plus the empty peer map's count (4) = 59.
+        let db_off = 59;
         for dim_off in [0usize, 4] {
             let mut bad = frame.clone();
             bad[db_off + dim_off..db_off + dim_off + 4]

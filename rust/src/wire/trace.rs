@@ -1,0 +1,169 @@
+//! Payload of the worker → hub `TRACE` frame (v7, DESIGN.md §14).
+//!
+//! When a phase runs with tracing armed ([`crate::wire::PhaseSpec::trace`]),
+//! each worker drains its event ring ([`crate::obs::trace::TraceRing`])
+//! right after `MERGE` and ships it as one [`TraceChunk`]. The chunk also
+//! carries the two worker-clock stamps the hub needs for clock alignment
+//! — when the worker *read* `START` and when it *wrote* this frame — which
+//! the hub pairs with its own send/receive stamps to form one NTP-style
+//! handshake sample per phase ([`crate::obs::clock::estimate_offset`]).
+//!
+//! Events encode as `t_ns:u64 kind:u8 args…`; the event count is
+//! validated against the bytes actually remaining (9 bytes minimum per
+//! event) so corrupt input errors instead of allocating gigabytes.
+
+use anyhow::{bail, Result};
+
+use crate::obs::trace::{EventKind, TraceEvent};
+
+use super::{put_bool, put_u32, put_u64, put_u8, Dec};
+
+/// One rank's flushed event ring plus its clock-handshake stamps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceChunk {
+    /// The rank whose timeline this is.
+    pub rank: u32,
+    /// Respawn epoch the events were recorded under.
+    pub epoch: u64,
+    /// Worker-clock time at which this phase's `START` frame was read
+    /// (pairs with the hub's stamp of the matching write).
+    pub start_recv_ns: u64,
+    /// Worker-clock time at which this frame was written (pairs with the
+    /// hub's stamp of the read).
+    pub flush_ns: u64,
+    /// Events lost to ring overflow — counted, never silent.
+    pub dropped: u64,
+    /// The ring contents, in recording order (worker-clock timestamps).
+    pub events: Vec<TraceEvent>,
+}
+
+// Event kind discriminants. New kinds append; existing values are wire
+// format and never change.
+const EK_PHASE_START: u8 = 0;
+const EK_PHASE_END: u8 = 1;
+const EK_EXPAND_BATCH: u8 = 2;
+const EK_STEAL_REQUEST: u8 = 3;
+const EK_STEAL_REJECT: u8 = 4;
+const EK_STEAL_GIVE: u8 = 5;
+const EK_STEAL_RECV: u8 = 6;
+const EK_WAVE_ARRIVE: u8 = 7;
+const EK_CHECKPOINT: u8 = 8;
+const EK_RESPAWN: u8 = 9;
+const EK_SERVE_QUEUE: u8 = 10;
+const EK_SERVE_POP: u8 = 11;
+const EK_SERVE_EXPIRE: u8 = 12;
+
+fn put_event(buf: &mut Vec<u8>, e: &TraceEvent) {
+    put_u64(buf, e.t_ns);
+    match e.kind {
+        EventKind::PhaseStart { phase, epoch } => {
+            put_u8(buf, EK_PHASE_START);
+            put_u8(buf, phase);
+            put_u64(buf, epoch);
+        }
+        EventKind::PhaseEnd { phase, epoch } => {
+            put_u8(buf, EK_PHASE_END);
+            put_u8(buf, phase);
+            put_u64(buf, epoch);
+        }
+        EventKind::ExpandBatch { units } => {
+            put_u8(buf, EK_EXPAND_BATCH);
+            put_u64(buf, units);
+        }
+        EventKind::StealRequest { dst, lifeline } => {
+            put_u8(buf, EK_STEAL_REQUEST);
+            put_u32(buf, dst);
+            put_bool(buf, lifeline);
+        }
+        EventKind::StealReject { src, lifeline } => {
+            put_u8(buf, EK_STEAL_REJECT);
+            put_u32(buf, src);
+            put_bool(buf, lifeline);
+        }
+        EventKind::StealGive { dst, tasks } => {
+            put_u8(buf, EK_STEAL_GIVE);
+            put_u32(buf, dst);
+            put_u32(buf, tasks);
+        }
+        EventKind::StealRecv { src, tasks } => {
+            put_u8(buf, EK_STEAL_RECV);
+            put_u32(buf, src);
+            put_u32(buf, tasks);
+        }
+        EventKind::WaveArrive { t, up } => {
+            put_u8(buf, EK_WAVE_ARRIVE);
+            put_u32(buf, t);
+            put_bool(buf, up);
+        }
+        EventKind::Checkpoint { units, roots } => {
+            put_u8(buf, EK_CHECKPOINT);
+            put_u64(buf, units);
+            put_u32(buf, roots);
+        }
+        EventKind::Respawn { rank, epoch } => {
+            put_u8(buf, EK_RESPAWN);
+            put_u32(buf, rank);
+            put_u64(buf, epoch);
+        }
+        EventKind::ServeQueue { job } => {
+            put_u8(buf, EK_SERVE_QUEUE);
+            put_u64(buf, job);
+        }
+        EventKind::ServePop { job } => {
+            put_u8(buf, EK_SERVE_POP);
+            put_u64(buf, job);
+        }
+        EventKind::ServeExpire { job } => {
+            put_u8(buf, EK_SERVE_EXPIRE);
+            put_u64(buf, job);
+        }
+    }
+}
+
+fn get_event(d: &mut Dec) -> Result<TraceEvent> {
+    let t_ns = d.u64()?;
+    let kind = match d.u8()? {
+        EK_PHASE_START => EventKind::PhaseStart { phase: d.u8()?, epoch: d.u64()? },
+        EK_PHASE_END => EventKind::PhaseEnd { phase: d.u8()?, epoch: d.u64()? },
+        EK_EXPAND_BATCH => EventKind::ExpandBatch { units: d.u64()? },
+        EK_STEAL_REQUEST => EventKind::StealRequest { dst: d.u32()?, lifeline: d.bool()? },
+        EK_STEAL_REJECT => EventKind::StealReject { src: d.u32()?, lifeline: d.bool()? },
+        EK_STEAL_GIVE => EventKind::StealGive { dst: d.u32()?, tasks: d.u32()? },
+        EK_STEAL_RECV => EventKind::StealRecv { src: d.u32()?, tasks: d.u32()? },
+        EK_WAVE_ARRIVE => EventKind::WaveArrive { t: d.u32()?, up: d.bool()? },
+        EK_CHECKPOINT => EventKind::Checkpoint { units: d.u64()?, roots: d.u32()? },
+        EK_RESPAWN => EventKind::Respawn { rank: d.u32()?, epoch: d.u64()? },
+        EK_SERVE_QUEUE => EventKind::ServeQueue { job: d.u64()? },
+        EK_SERVE_POP => EventKind::ServePop { job: d.u64()? },
+        EK_SERVE_EXPIRE => EventKind::ServeExpire { job: d.u64()? },
+        k => bail!("wire: unknown trace event kind {k}"),
+    };
+    Ok(TraceEvent { t_ns, kind })
+}
+
+pub(super) fn put_trace_chunk(buf: &mut Vec<u8>, c: &TraceChunk) {
+    put_u32(buf, c.rank);
+    put_u64(buf, c.epoch);
+    put_u64(buf, c.start_recv_ns);
+    put_u64(buf, c.flush_ns);
+    put_u64(buf, c.dropped);
+    put_u32(buf, c.events.len() as u32);
+    for e in &c.events {
+        put_event(buf, e);
+    }
+}
+
+pub(super) fn get_trace_chunk(d: &mut Dec) -> Result<TraceChunk> {
+    let rank = d.u32()?;
+    let epoch = d.u64()?;
+    let start_recv_ns = d.u64()?;
+    let flush_ns = d.u64()?;
+    let dropped = d.u64()?;
+    // Each event is at least t_ns(8) + kind(1) bytes.
+    let n = d.count(9)?;
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        events.push(get_event(d)?);
+    }
+    Ok(TraceChunk { rank, epoch, start_recv_ns, flush_ns, dropped, events })
+}

@@ -292,16 +292,26 @@ fn daemon_finishes_in_flight_job_across_worker_death() {
     assert!(status.success(), "daemon exit: {status}");
 
     // Log shape: the fault fired (worker line), and the hub respawned
-    // exactly one rank — the plan never travels to a replacement.
+    // exactly one rank — the plan never travels to a replacement. Both
+    // lines now ride the structured logger (DESIGN.md §14), so the shape
+    // `parlamp[LEVEL target tags]` is part of the contract too.
     let log = std::fs::read_to_string(&stderr_path).expect("read stderr capture");
     assert!(
         log.contains("fault injection firing"),
         "worker fault line missing from daemon stderr:\n{log}"
     );
+    assert!(
+        log.contains("parlamp[WARN worker rank=1]"),
+        "fault line lost its structured rank tag:\n{log}"
+    );
     assert_eq!(
         log.matches("respawning rank 1").count(),
         1,
         "expected exactly one respawn of rank 1 in daemon stderr:\n{log}"
+    );
+    assert!(
+        log.contains("parlamp[WARN fleet rank=1]"),
+        "respawn line lost its structured rank tag:\n{log}"
     );
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -446,6 +456,10 @@ fn pool_survives_one_fleets_worker_death() {
         log.matches("respawning rank 1").count(),
         1,
         "expected exactly one respawn of rank 1 in daemon stderr:\n{log}"
+    );
+    assert!(
+        log.contains("parlamp[WARN fleet rank=1]"),
+        "respawn line lost its structured rank tag:\n{log}"
     );
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,128 @@
+//! End-to-end tracing tests (DESIGN.md §14).
+//!
+//! Every test in this binary arms the global trace flag, so they can run
+//! in parallel — the flag is one-way here (nothing turns it off), exactly
+//! like a traced CLI run. Determinism matters most: the DES engine runs
+//! under virtual time, so two identical runs must produce *identical*
+//! per-rank event sequences — the property that makes a trace of a
+//! simulated 1,200-process fleet trustworthy evidence rather than noise.
+
+use parlamp::bench::report::parse_json;
+use parlamp::db::{Database, Item};
+use parlamp::obs::trace::{set_enabled, EventKind, RankTrace};
+use parlamp::obs::{chrome, summary};
+use parlamp::par::{run_sim, run_threads, RunMode, SimConfig};
+use parlamp::util::rng::Rng;
+
+fn random_db(seed: u64, m: usize, n: usize, density: f64) -> Database {
+    let mut rng = Rng::new(seed);
+    let trans: Vec<Vec<Item>> = (0..n)
+        .map(|_| (0..m as Item).filter(|_| rng.bernoulli(density)).collect())
+        .collect();
+    let labels: Vec<bool> = (0..n).map(|t| t < n / 3).collect();
+    Database::from_transactions(m, &trans, &labels)
+}
+
+/// Each rank's timeline opens with its phase span, closes it somewhere
+/// (late arrivals — rejects, DTD waves — may trail the PhaseEnd), and is
+/// time-ordered throughout.
+fn assert_well_formed(rt: &RankTrace, phase: u8) {
+    assert!(!rt.events.is_empty(), "rank {}: empty timeline", rt.rank);
+    assert_eq!(rt.dropped, 0, "rank {}: ring overflowed", rt.rank);
+    assert!(
+        matches!(rt.events[0].kind, EventKind::PhaseStart { phase: p, .. } if p == phase),
+        "rank {}: first event is {:?}",
+        rt.rank,
+        rt.events[0].kind
+    );
+    assert!(
+        rt.events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::PhaseEnd { phase: p, .. } if p == phase)),
+        "rank {}: phase {phase} never ended",
+        rt.rank
+    );
+    for w in rt.events.windows(2) {
+        assert!(w[0].t_ns <= w[1].t_ns, "rank {}: time went backwards", rt.rank);
+    }
+}
+
+#[test]
+fn sim_traces_are_deterministic_and_well_formed() {
+    set_enabled(true);
+    let db = random_db(11, 12, 30, 0.4);
+    let cfg = SimConfig::paper_defaults(6);
+    let a = run_sim(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg);
+    let b = run_sim(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg);
+
+    assert_eq!(a.traces.len(), 6, "one timeline per simulated rank");
+    for rt in &a.traces {
+        assert_well_formed(rt, 1);
+        assert_eq!((rt.offset_ns, rt.uncertainty_ns), (0, 0), "in-process: one clock");
+    }
+    // Two identical virtual-time runs → bit-identical event sequences.
+    assert_eq!(a.traces.len(), b.traces.len());
+    for (x, y) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(x.rank, y.rank);
+        assert_eq!(x.events, y.events, "rank {} diverged between replays", x.rank);
+    }
+}
+
+#[test]
+fn thread_engine_traces_cover_phase2() {
+    set_enabled(true);
+    let db = random_db(21, 10, 26, 0.5);
+    let run = run_threads(&db, RunMode::Count { min_sup: 2 }, 3, true, 7);
+    assert_eq!(run.traces.len(), 3);
+    for rt in &run.traces {
+        assert_well_formed(rt, 2);
+    }
+}
+
+#[test]
+fn chrome_export_of_a_sim_run_is_loadable_and_summarizable() {
+    set_enabled(true);
+    let db = random_db(31, 12, 30, 0.4);
+    let cfg = SimConfig::paper_defaults(4);
+    let run = run_sim(&db, RunMode::Phase1 { alpha: 0.05 }, &cfg);
+    let json = chrome::export(&run.traces);
+
+    parse_json(&json).expect("exported trace must be valid JSON");
+    // One phase span per rank, a named track per rank.
+    assert_eq!(json.matches(r#""ph":"X""#).count(), 4, "{json}");
+    for r in 0..4 {
+        assert!(json.contains(&format!(r#""name":"rank {r}""#)), "missing track {r}");
+    }
+    // Flow starts are emitted per steal REQUEST, finishes per answered
+    // GIVE; rejected or termination-time requests legitimately go
+    // unanswered, so finish count is bounded by start count.
+    let s = json.matches(r#""ph":"s""#).count();
+    let f = json.matches(r#""ph":"f""#).count();
+    assert!(f <= s, "more flow finishes ({f}) than starts ({s})");
+
+    let report = summary::summarize(&json).expect("summary must accept its own exporter");
+    assert!(report.contains("per-rank breakdown"), "{report}");
+    assert!(report.contains("rank 0"), "{report}");
+}
+
+#[test]
+fn trace_rides_along_without_perturbing_results() {
+    set_enabled(true);
+    let db = random_db(41, 12, 28, 0.45);
+    let cfg = SimConfig::paper_defaults(5);
+    let traced = run_sim(&db, RunMode::Count { min_sup: 2 }, &cfg);
+    // The reference counts come from the engine's own unit suite, which
+    // runs untraced; here it is enough that tracing does not change the
+    // virtual makespan or the mined counts between two traced runs and
+    // that the event totals match the comm counters.
+    let again = run_sim(&db, RunMode::Count { min_sup: 2 }, &cfg);
+    assert_eq!(traced.closed_total, again.closed_total);
+    assert_eq!(traced.makespan_s, again.makespan_s);
+    let gives: usize = traced
+        .traces
+        .iter()
+        .flat_map(|t| &t.events)
+        .filter(|e| matches!(e.kind, EventKind::StealGive { .. }))
+        .count();
+    assert_eq!(gives as u64, traced.comm.gives, "one GIVE event per counted give");
+}
