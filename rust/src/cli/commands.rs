@@ -3,6 +3,7 @@
 //! the CLI, the examples, and the benches exercise one orchestration path.
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -15,6 +16,7 @@ use crate::db::{read_labels, read_transactions, Database};
 use crate::fabric::sim::NetModel;
 use crate::lamp::{lamp2::lamp2_serial, lamp_serial, SignificantPattern};
 use crate::lcm::{mine_closed, Visit};
+use crate::net::fault::NetFaultPlan;
 use crate::net::Endpoint;
 use crate::obs::log::{self, Tags};
 use crate::obs::trace::RankTrace;
@@ -80,6 +82,30 @@ fn transport_from_args(args: &Args) -> Result<Transport> {
 fn fault_from_args(args: &Args) -> Result<Option<FaultPlan>> {
     match args.get("fault-inject") {
         Some(plan) => Ok(Some(plan.parse().context("--fault-inject")?)),
+        None => Ok(None),
+    }
+}
+
+/// `--net-fault rank=R,kind=stall|drop|corrupt|partition,phase=P,after=N`
+/// (DESIGN.md §15): arm one deterministic network fault under a rank's
+/// fabric stream. Only the process backend (and `serve`'s warm fleet)
+/// consumes it.
+fn net_fault_from_args(args: &Args) -> Result<Option<NetFaultPlan>> {
+    match args.get("net-fault") {
+        Some(plan) => Ok(Some(plan.parse().context("--net-fault")?)),
+        None => Ok(None),
+    }
+}
+
+/// `--lease-timeout SECS` (DESIGN.md §15): heartbeat-lease timeout for the
+/// process backend's hub. `None` keeps the 60 s default.
+fn lease_timeout_from_args(args: &Args) -> Result<Option<Duration>> {
+    match args.get("lease-timeout") {
+        Some(_) => {
+            let secs = args.get_u64("lease-timeout", 0)?;
+            anyhow::ensure!(secs > 0, "--lease-timeout must be a positive number of seconds");
+            Ok(Some(Duration::from_secs(secs)))
+        }
         None => Ok(None),
     }
 }
@@ -192,6 +218,8 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
     let transport = transport_from_args(args)?;
     let hosts = hosts_from_args(args)?;
     let fault = fault_from_args(args)?;
+    let net_fault = net_fault_from_args(args)?;
+    let lease_timeout = lease_timeout_from_args(args)?;
     anyhow::ensure!(
         hosts.is_none() || engine == "process",
         "--hosts requires --engine process (got '{engine}')"
@@ -199,6 +227,14 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
     anyhow::ensure!(
         fault.is_none() || engine == "process",
         "--fault-inject requires --engine process (got '{engine}')"
+    );
+    anyhow::ensure!(
+        net_fault.is_none() || engine == "process",
+        "--net-fault requires --engine process (got '{engine}')"
+    );
+    anyhow::ensure!(
+        lease_timeout.is_none() || engine == "process",
+        "--lease-timeout requires --engine process (got '{engine}')"
     );
     // Tracing needs ranks; the serial pipelines have none (DESIGN.md §14).
     let trace_out = args.get("trace");
@@ -242,6 +278,12 @@ pub fn cmd_lamp(args: &Args) -> Result<()> {
                 Coordinator::new(alpha).with_glb(glb_from_args(args)).with_screen(screen);
             if let Some(plan) = fault {
                 coord = coord.with_fault_plan(plan);
+            }
+            if let Some(plan) = net_fault {
+                coord = coord.with_net_fault_plan(plan);
+            }
+            if let Some(t) = lease_timeout {
+                coord = coord.with_lease_timeout(t);
             }
             // Smaller quanta = more steal opportunities on short runs;
             // pairs with --trace to make the protocol visible (§14).
@@ -584,6 +626,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     cfg.remote_workers = hosts;
     cfg.fault = fault_from_args(args)?;
+    cfg.net_fault = net_fault_from_args(args)?;
+    cfg.lease_timeout = lease_timeout_from_args(args)?;
+    // --job-watchdog-secs 0 disables the per-job watchdog entirely.
+    if args.get("job-watchdog-secs").is_some() {
+        let secs = args.get_u64("job-watchdog-secs", 0)?;
+        cfg.job_watchdog = (secs > 0).then(|| Duration::from_secs(secs));
+    }
     cfg.trace = args.get("trace").map(PathBuf::from);
     if cfg.trace.is_some() {
         obs_trace::set_enabled(true);

@@ -115,7 +115,9 @@ USAGE:
                     [--procs P | -n P] [--naive] [--data-plane hub|mesh]
                     [--transport unix|tcp] [--hosts H1:P,H2:P,..]
                     [--endpoint EP] [--screen native|xla|auto] [--seed S]
-                    [--fault-inject rank=R,phase=P,after=N] [--trace FILE]
+                    [--fault-inject rank=R,phase=P,after=N]
+                    [--net-fault rank=R,kind=K,phase=P,after=N]
+                    [--lease-timeout SECS] [--trace FILE]
                     [--probe-budget UNITS]
   parlamp mine      --data FILE [--min-sup K]
   parlamp sim       --scenario NAME [--procs P] [--naive] [--ethernet]
@@ -134,7 +136,10 @@ USAGE:
                     [--client-slots N]
                     [--data-plane hub|mesh] [--transport unix|tcp]
                     [--hosts H1:P,..] [--fleet-listen EP]
-                    [--fault-inject rank=R,phase=P,after=N] [--trace FILE]
+                    [--fault-inject rank=R,phase=P,after=N]
+                    [--net-fault rank=R,kind=K,phase=P,after=N]
+                    [--lease-timeout SECS] [--job-watchdog-secs SECS]
+                    [--trace FILE]
   parlamp submit    --endpoint EP --data FILE --labels FILE [--alpha A]
                     [--naive] [--no-preprocess] [--screen native|xla|auto]
                     [--seed S] [--priority P] [--deadline-ms MS]
@@ -197,6 +202,18 @@ epoch, with results bit-identical to an undisturbed run. `--fault-inject
 rank=R,phase=P,after=N` (lamp --engine process, serve) arms one
 deterministic worker death for chaos testing — rank R exits with code 86
 once phase epoch P has cost it N work units.
+
+Liveness beyond crash detection (DESIGN.md §15): the hub pings workers
+mid-phase and tracks a per-rank heartbeat lease; a rank silent past
+`--lease-timeout SECS` (default 60) is force-killed and respawned through
+the same replay path, so stalls and network partitions — not just deaths —
+are survived. `--net-fault rank=R,kind=stall|drop|corrupt|partition,
+phase=P,after=N` (lamp --engine process, serve) arms one deterministic
+network fault under rank R's fabric stream, scripted by data-frame count
+N within phase epoch P. `serve --job-watchdog-secs SECS` (default 1800;
+0 disables) bounds each job's wall-clock: a fleet that exceeds it is
+force-killed, the job fails with a typed error, and the fleet is rebuilt
+for the next job.
 
 `serve` starts the long-running mining daemon (DESIGN.md §9 and §13): a
 pool of `--fleets` warm worker fleets mines queued jobs concurrently, a

@@ -29,6 +29,8 @@
 //! the `quickstart` / `naive_vs_glb` / `scaling_study` / `gwas_study`
 //! examples all run through this one path.
 
+use std::time::Duration;
+
 use anyhow::{bail, Context, Result};
 
 use crate::bench::Calibration;
@@ -37,6 +39,7 @@ use crate::fabric::sim::NetModel;
 use crate::fabric::CommStats;
 use crate::glb::Lifelines;
 use crate::lamp::{phase3_extract, LampResult, SignificantPattern, SupportIncreaseRule};
+use crate::net::fault::NetFaultPlan;
 use crate::net::Endpoint;
 use crate::obs::chrome::HUB_RANK;
 use crate::obs::clock;
@@ -404,6 +407,14 @@ pub struct Coordinator {
     /// (`--fault-inject`, DESIGN.md §12). Only [`Backend::Process`] runs
     /// consult it — the in-process fabrics have no workers to kill.
     fault: Option<FaultPlan>,
+    /// Deterministic *network*-fault injection for the process backend
+    /// (`--net-fault`, DESIGN.md §15): stall/drop/corrupt/partition one
+    /// rank's fabric traffic at a scripted frame count.
+    net_fault: Option<NetFaultPlan>,
+    /// Heartbeat-lease timeout override for the process backend
+    /// (`--lease-timeout`, DESIGN.md §15); `None` keeps the paper-default
+    /// 60 s.
+    lease_timeout: Option<Duration>,
     /// When present, overrides the paper-default probe budget (expansion
     /// cost units between mailbox polls) on every backend
     /// (`--probe-budget`, DESIGN.md §14).
@@ -420,6 +431,8 @@ impl Coordinator {
             screen: ScreenMode::Auto,
             calibration: None,
             fault: None,
+            net_fault: None,
+            lease_timeout: None,
             probe_budget: None,
         }
     }
@@ -443,6 +456,21 @@ impl Coordinator {
     /// see [`FaultPlan`]).
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> Coordinator {
         self.fault = Some(plan);
+        self
+    }
+
+    /// Arm a planned network fault for process-backend runs (chaos
+    /// testing; see [`NetFaultPlan`]).
+    pub fn with_net_fault_plan(mut self, plan: NetFaultPlan) -> Coordinator {
+        self.net_fault = Some(plan);
+        self
+    }
+
+    /// Override the heartbeat-lease timeout for process-backend runs. A
+    /// rank that sends the hub nothing — no data frame, no `PONG` — for
+    /// this long mid-phase is force-killed and respawned (DESIGN.md §15).
+    pub fn with_lease_timeout(mut self, timeout: Duration) -> Coordinator {
+        self.lease_timeout = Some(timeout);
         self
     }
 
@@ -602,8 +630,12 @@ impl Coordinator {
             steal: self.glb.steal,
             preprocess: self.glb.preprocess,
             fault: self.fault,
+            net_fault: self.net_fault,
             ..ProcessConfig::paper_defaults(p, seed)
         };
+        if let Some(t) = self.lease_timeout {
+            cfg.lease_timeout = t;
+        }
         if let Some(units) = self.probe_budget {
             cfg.probe_budget_units = units;
         }

@@ -8,7 +8,10 @@
 //! boundary. The *control plane* is hub-and-spoke: the parent process runs
 //! a [`Hub`] that accepts one connection per worker rank and owns the
 //! phase lifecycle (HELLO/CONFIG/START/MERGE/BYE, plus liveness via socket
-//! EOF). Every HELLO and PEERHELLO carries the fleet's shared-secret
+//! EOF *and*, since wire v8, a PING/PONG heartbeat feeding a per-rank
+//! lease table — see [`Hub::lease_age`] — so a rank that is hung or
+//! partitioned with its socket still open is detected too, DESIGN.md
+//! §15). Every HELLO and PEERHELLO carries the fleet's shared-secret
 //! token (wire v4); a connection with the wrong token never joins the
 //! fabric, so a stray TCP connector cannot poison a run. The *data
 //! plane* — every steal REQUEST/GIVE/REJECT frame and every DTD wave —
@@ -79,6 +82,7 @@
 use std::collections::VecDeque;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -87,7 +91,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::db::Database;
+use crate::net::fault as netfault;
 use crate::net::{dial, dial_with_preamble, Endpoint, Listener, RetryPolicy, Stream};
+use crate::obs::log::{self, Tags};
 use crate::obs::clock;
 use crate::obs::trace::TraceEvent;
 use crate::wire::trace::TraceChunk;
@@ -171,6 +177,12 @@ enum ChildEvent {
     /// mailbox adopts it, so a respawned worker inherits the fleet's phase
     /// numbering and a replayed phase fences out its aborted attempt.
     Start(u64),
+    /// A heartbeat probe from the hub (v8). Queued by the reader and
+    /// answered with `PONG` by the *main* thread ([`ProcessMailbox`]'s
+    /// `answer_ping`), so the answer attests whole-worker liveness: a
+    /// rank whose reader still drains frames but whose main thread is
+    /// hung or partitioned stops answering and misses its lease.
+    Ping,
     Bye,
     Lost(String),
 }
@@ -182,6 +194,28 @@ pub struct PhaseStart {
     pub phase: PhaseSpec,
     pub db: Option<Database>,
 }
+
+/// Typed error for a bounded [`ProcessMailbox::await_phase_deadline`]
+/// wait that elapsed: no phase frame (and no EOF) arrived within the
+/// bound. Downcastable through `anyhow`, so callers that impose a
+/// deadline can tell "the hub is silent" apart from a broken link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseWaitTimeout {
+    /// The bound that elapsed.
+    pub limit: Duration,
+}
+
+impl std::fmt::Display for PhaseWaitTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "no phase frame from the hub within {:.1}s (deadline elapsed)",
+            self.limit.as_secs_f64()
+        )
+    }
+}
+
+impl std::error::Error for PhaseWaitTimeout {}
 
 /// The worker-process endpoint of the fabric: the [`Mailbox`] the ordinary
 /// [`crate::par::Worker`] state machine drives, plus the phase/merge
@@ -245,7 +279,8 @@ pub struct ProcessMailbox {
 /// The worker then blocks in [`ProcessMailbox::await_phase`] until the
 /// hub opens a phase — there is deliberately no read timeout, because a
 /// warm worker legitimately idles between jobs for as long as the daemon
-/// stays up; a dead hub surfaces as EOF.
+/// stays up; a dead hub surfaces as EOF, and hub heartbeat `PING`s are
+/// answered even while idling, so the worker's lease stays fresh (v8).
 pub fn connect(
     hub: &Endpoint,
     rank: usize,
@@ -310,6 +345,13 @@ pub fn connect(
 
 fn reader_loop(mut stream: Stream, tx: Sender<ChildEvent>) {
     loop {
+        // A fired `stall` net-fault plan means this worker must stop
+        // reading too (DESIGN.md §15): park so the hub's PINGs sit unread
+        // and only the lease can notice. The process stays alive — the
+        // force-kill that follows lease expiry ends it.
+        if netfault::stalled() {
+            netfault::park_forever();
+        }
         let ev = match read_frame(&mut stream) {
             Ok(Some(Frame::Relay { peer, epoch, msg })) => {
                 ChildEvent::Deliver { src: peer as usize, epoch, msg }
@@ -317,6 +359,7 @@ fn reader_loop(mut stream: Stream, tx: Sender<ChildEvent>) {
             Ok(Some(Frame::Config { spec, peers })) => ChildEvent::Config { spec, peers },
             Ok(Some(Frame::Reconfig { phase, peers })) => ChildEvent::Reconfig { phase, peers },
             Ok(Some(Frame::Start { epoch })) => ChildEvent::Start(epoch),
+            Ok(Some(Frame::Ping)) => ChildEvent::Ping,
             Ok(Some(Frame::Bye)) => {
                 let _ = tx.send(ChildEvent::Bye);
                 return;
@@ -417,9 +460,24 @@ impl ProcessMailbox {
     /// mid-flight. Since the hub assigns the epoch, a respawned worker
     /// inherits the fleet's numbering here without any local state.
     pub fn await_phase(&mut self) -> Result<Option<PhaseStart>> {
+        self.await_phase_deadline(None)
+    }
+
+    /// [`ProcessMailbox::await_phase`] with an optional bound: when
+    /// `limit` is `Some`, the whole wait (phase frame through `START`)
+    /// must complete within it or a typed [`PhaseWaitTimeout`] error is
+    /// returned. `worker_main` passes `None` — a warm serve worker
+    /// legitimately idles between jobs for as long as the daemon stays
+    /// up, and a dead hub surfaces as EOF — but embedders and tests that
+    /// know a phase frame is due can bound the wait instead of wedging.
+    pub fn await_phase_deadline(
+        &mut self,
+        limit: Option<Duration>,
+    ) -> Result<Option<PhaseStart>> {
         if let Link::Lost(e) = &self.link {
             bail!("fabric link lost: {e}");
         }
+        let deadline = limit.map(|d| (Instant::now() + d, d));
         self.pending.clear();
         // Early traffic for the upcoming phase. Every delivery — hub or
         // mesh — keeps its sender's epoch so it can be fenced once the
@@ -428,7 +486,7 @@ impl ProcessMailbox {
         let mut early: VecDeque<(usize, u64, Msg)> = std::mem::take(&mut self.future);
         // 1. The phase frame (buffering deliveries for the epoch fence).
         let (start, peers) = loop {
-            match self.recv_event()? {
+            match self.recv_event_until(deadline)? {
                 ChildEvent::Config { spec, peers } => {
                     let RunSpec { phase, db } = *spec;
                     break (PhaseStart { phase, db: Some(db) }, peers);
@@ -440,6 +498,7 @@ impl ProcessMailbox {
                 | ChildEvent::PeerDeliver { src, epoch, msg } => {
                     early.push_back((src, epoch, msg));
                 }
+                ChildEvent::Ping => self.answer_ping(),
                 ChildEvent::Bye => return Ok(None),
                 ChildEvent::Start(_) => bail!("START from hub before CONFIG"),
                 ChildEvent::Lost(e) => {
@@ -458,12 +517,13 @@ impl ProcessMailbox {
         self.set_peers(peers)?;
         // 2. The START barrier (buffering early next-phase traffic).
         let epoch = loop {
-            match self.recv_event()? {
+            match self.recv_event_until(deadline)? {
                 ChildEvent::Start(epoch) => break epoch,
                 ChildEvent::Deliver { src, epoch, msg }
                 | ChildEvent::PeerDeliver { src, epoch, msg } => {
                     early.push_back((src, epoch, msg));
                 }
+                ChildEvent::Ping => self.answer_ping(),
                 ChildEvent::Bye => bail!("BYE from hub between CONFIG and START"),
                 ChildEvent::Config { .. } | ChildEvent::Reconfig { .. } => {
                     bail!("duplicate CONFIG from hub before START")
@@ -509,11 +569,29 @@ impl ProcessMailbox {
         Ok(())
     }
 
-    fn recv_event(&mut self) -> Result<ChildEvent> {
+    /// Receive the next phase-wait event, optionally bounded by a
+    /// deadline (`(when, original_limit)` — the limit is echoed into the
+    /// typed [`PhaseWaitTimeout`] error when the deadline elapses).
+    fn recv_event_until(
+        &mut self,
+        deadline: Option<(Instant, Duration)>,
+    ) -> Result<ChildEvent> {
         if let Some(ev) = self.interrupt.pop_front() {
             return Ok(ev);
         }
-        self.rx.recv().map_err(|_| anyhow::anyhow!("fabric reader thread exited"))
+        match deadline {
+            None => self.rx.recv().map_err(|_| anyhow::anyhow!("fabric reader thread exited")),
+            Some((when, limit)) => {
+                let left = when.saturating_duration_since(Instant::now());
+                match self.rx.recv_timeout(left) {
+                    Ok(ev) => Ok(ev),
+                    Err(RecvTimeoutError::Timeout) => Err(PhaseWaitTimeout { limit }.into()),
+                    Err(RecvTimeoutError::Disconnected) => {
+                        bail!("fabric reader thread exited")
+                    }
+                }
+            }
+        }
     }
 
     /// Absorb an event mid-phase, when only deliveries are expected.
@@ -544,6 +622,10 @@ impl ProcessMailbox {
                 if epoch > self.epoch {
                     self.future.push_back((src, epoch, msg));
                 }
+                None
+            }
+            ChildEvent::Ping => {
+                self.answer_ping();
                 None
             }
             ev @ (ChildEvent::Config { .. } | ChildEvent::Reconfig { .. }
@@ -597,7 +679,7 @@ impl ProcessMailbox {
             work_units,
             roots,
         };
-        let _ = write_frame(&mut self.writer, &frame);
+        let _ = self.write_hub(&frame);
     }
 
     /// This phase's data-plane send counters: frames pushed through the
@@ -694,8 +776,7 @@ impl ProcessMailbox {
     /// traffic (see the module docs) — with one carve-out: an optional
     /// [`ProcessMailbox::send_trace`] flush immediately after.
     pub fn send_merge(&mut self, merge: &WorkerMerge) -> Result<()> {
-        write_frame(&mut self.writer, &Frame::Merge(Box::new(merge.clone())))
-            .context("send MERGE to hub")
+        self.write_hub(&Frame::Merge(Box::new(merge.clone()))).context("send MERGE to hub")
     }
 
     /// Flush the rank's event ring to the hub as a `TRACE` frame (v7),
@@ -714,7 +795,37 @@ impl ProcessMailbox {
             dropped,
             events,
         };
-        let _ = write_frame(&mut self.writer, &Frame::Trace(Box::new(chunk)));
+        let _ = self.write_hub(&Frame::Trace(Box::new(chunk)));
+    }
+
+    /// Answer a hub heartbeat probe with `PONG`. Called from the *main*
+    /// thread only (`absorb` / `await_phase_deadline`), never from the
+    /// reader: the answer then attests whole-worker liveness, so a rank
+    /// whose reader still drains frames but whose main thread is hung or
+    /// partitioned stops answering and misses its lease (DESIGN.md §15).
+    fn answer_ping(&mut self) {
+        let _ = self.write_hub(&Frame::Pong);
+    }
+
+    /// Every hub-bound write funnels through here so the deterministic
+    /// net-fault layer ([`crate::net::fault`], DESIGN.md §15) can
+    /// interpose: a fired `drop` plan silently discards the frame (the
+    /// worker keeps mining while its merges and PONGs vanish — only the
+    /// lease can notice), a fired `corrupt` plan flips the next frame's
+    /// tag byte (the hub's decoder errors deterministically and declares
+    /// this rank `Gone`). With no fault armed this is exactly
+    /// [`write_frame`].
+    fn write_hub(&mut self, frame: &Frame) -> Result<()> {
+        match netfault::hub_write() {
+            netfault::HubWrite::Forward => write_frame(&mut self.writer, frame),
+            netfault::HubWrite::Discard => Ok(()),
+            netfault::HubWrite::Corrupt => {
+                let mut bytes = frame.encode();
+                netfault::corrupt_frame_bytes(&mut bytes);
+                self.writer.write_all(&bytes)?;
+                Ok(())
+            }
+        }
     }
 }
 
@@ -731,6 +842,28 @@ impl Mailbox for ProcessMailbox {
         if self.link != Link::Open {
             return; // shutdown race: mirror the dropped-peer no-op
         }
+        // Deterministic net-fault trigger (DESIGN.md §15): an armed plan
+        // counts this worker's data-plane sends within its target phase,
+        // so the injected failure lands at the same frame on every run —
+        // scripted by frame counts, never by wall time.
+        if let Some(plan) = netfault::on_data_frame(self.epoch) {
+            log::warn(
+                "worker",
+                &Tags::rank(self.rank),
+                format_args!("net fault injection firing ({plan})"),
+            );
+            match plan.kind {
+                // Stall/partition: the main thread wedges right here, so
+                // PONGs stop and the hub's lease expires. (A stall also
+                // parks the reader thread — see `reader_loop`.)
+                netfault::NetFaultKind::Stall | netfault::NetFaultKind::Partition => {
+                    netfault::park_forever()
+                }
+                // Drop/corrupt act on the write path (`write_hub`); the
+                // worker keeps running.
+                netfault::NetFaultKind::Drop | netfault::NetFaultKind::Corrupt => {}
+            }
+        }
         // The plane counters record frames actually written, so a failed
         // send (which severs the link) never inflates them.
         if !self.peer_endpoints.is_empty() {
@@ -741,7 +874,7 @@ impl Mailbox for ProcessMailbox {
             return;
         }
         let frame = Frame::Relay { peer: dst as u32, epoch: self.epoch, msg };
-        match write_frame(&mut self.writer, &frame) {
+        match self.write_hub(&frame) {
             Ok(()) => self.hub_frames += 1,
             Err(e) => self.link = Link::Lost(format!("send to hub failed: {e}")),
         }
@@ -816,6 +949,12 @@ type Writers = Arc<Vec<Mutex<Option<Stream>>>>;
 /// Per-rank custody table, shared the same way.
 type Custodies = Arc<Vec<Mutex<Custody>>>;
 
+/// Per-rank heartbeat lease table (v8, DESIGN.md §15): `Some(t)` = the
+/// rank's route thread last read a frame from it at `t`; `None` = slot
+/// vacant. Shared between the hub (pings, expiry checks) and its route
+/// threads (touch on every frame).
+type Leases = Arc<Vec<Mutex<Option<Instant>>>>;
+
 /// Parent-side fabric endpoint: accepts worker connections, runs one route
 /// thread per worker, opens phases, and surfaces merges. Owned and driven
 /// by [`crate::par::engine_process::ProcessFleet`].
@@ -830,6 +969,16 @@ pub struct Hub {
     token: String,
     writers: Writers,
     custody: Custodies,
+    /// Heartbeat leases (v8): touched by each rank's route thread on every
+    /// frame it reads (`PONG` or otherwise), inspected by the fleet owner
+    /// via [`Hub::lease_age`]. DESIGN.md §15.
+    leases: Leases,
+    /// One-shot per-rank flags armed by [`Hub::mark_expected_eof`] just
+    /// before the owner force-kills a lease-expired rank: the kill makes
+    /// the route thread read EOF, and without the flag it would report a
+    /// second `Gone` for a death the owner already synthesized — which
+    /// would double-respawn the rank.
+    expect_eof: Arc<Vec<AtomicBool>>,
     events_tx: Sender<HubEvent>,
     events_rx: Receiver<HubEvent>,
     routers: Vec<JoinHandle<()>>,
@@ -858,6 +1007,8 @@ impl Hub {
             token,
             writers: Arc::new((0..p).map(|_| Mutex::new(None)).collect()),
             custody: Arc::new((0..p).map(|_| Mutex::new(Custody::default())).collect()),
+            leases: Arc::new((0..p).map(|_| Mutex::new(None)).collect()),
+            expect_eof: Arc::new((0..p).map(|_| AtomicBool::new(false)).collect()),
             events_tx,
             events_rx,
             routers: Vec::with_capacity(p),
@@ -915,6 +1066,7 @@ impl Hub {
             self.connected -= 1;
         }
         self.peer_endpoints[rank] = None;
+        *self.leases[rank].lock().expect("lease lock") = None;
     }
 
     /// Accept and handshake at most one pending worker connection. Returns
@@ -940,6 +1092,10 @@ impl Hub {
             "HELLO with bad auth token (a stray connection, or a worker from another fleet)"
         );
         ensure!(rank < self.p, "HELLO rank {rank} out of range for world size {}", self.p);
+        // Post-handshake reads are deliberately unbounded: liveness is
+        // owned by socket EOF plus the v8 heartbeat lease (the route
+        // thread touches [`Hub::lease_age`]'s table on every frame), not
+        // by read timeouts — an idle warm worker is healthy, not dead.
         stream.set_read_timeout(None)?;
         let reader = stream.try_clone().context("clone worker socket")?;
         {
@@ -948,12 +1104,16 @@ impl Hub {
             *slot = Some(stream);
         }
         self.peer_endpoints[rank] = Some(peer);
+        *self.leases[rank].lock().expect("lease lock") = Some(Instant::now());
         let writers = Arc::clone(&self.writers);
         let custody = Arc::clone(&self.custody);
+        let leases = Arc::clone(&self.leases);
+        let expect_eof = Arc::clone(&self.expect_eof);
         let tx = self.events_tx.clone();
         let p = self.p;
-        self.routers
-            .push(std::thread::spawn(move || route_loop(rank, reader, writers, custody, tx, p)));
+        self.routers.push(std::thread::spawn(move || {
+            route_loop(rank, reader, writers, custody, leases, expect_eof, tx, p)
+        }));
         self.connected += 1;
         Ok(true)
     }
@@ -1076,6 +1236,47 @@ impl Hub {
         }
     }
 
+    /// Broadcast a heartbeat probe (`PING`, v8) to every connected rank.
+    /// Write errors are ignored — a dead rank's EOF is already in flight,
+    /// and a stalled one is exactly what the lease exists to catch. PINGs
+    /// are tiny (5 bytes encoded), so even a peer that stopped reading
+    /// leaves socket-buffer room for every probe a lease window can hold.
+    pub fn ping_all(&mut self) {
+        let bytes = Frame::Ping.encode();
+        for slot in self.writers.iter() {
+            if let Some(w) = slot.lock().expect("writer lock").as_mut() {
+                let _ = w.write_all(&bytes);
+            }
+        }
+    }
+
+    /// Age of `rank`'s heartbeat lease: time since its route thread last
+    /// read *any* frame from it (`None` = slot vacant). The fleet owner
+    /// compares this against its lease timeout and force-kills a rank
+    /// whose lease expired mid-phase (DESIGN.md §15).
+    pub fn lease_age(&self, rank: usize) -> Option<Duration> {
+        self.leases[rank].lock().expect("lease lock").map(|t| t.elapsed())
+    }
+
+    /// Re-seed every connected rank's lease. The fleet owner calls this at
+    /// each phase start: between phases (an idle warm fleet in `parlamp
+    /// serve`) no traffic flows and leases go stale legitimately — they
+    /// measure liveness only while a phase is running.
+    pub fn reset_leases(&mut self) {
+        for (rank, lease) in self.leases.iter().enumerate() {
+            let connected = self.writers[rank].lock().expect("writer lock").is_some();
+            *lease.lock().expect("lease lock") = connected.then(Instant::now);
+        }
+    }
+
+    /// Arm `rank`'s one-shot expected-EOF flag. Call *before* force-killing
+    /// a lease-expired rank: the kill makes its route thread read EOF, and
+    /// the flag makes that thread swallow the event instead of reporting a
+    /// `Gone` the owner has already synthesized (see `route_loop`).
+    pub fn mark_expected_eof(&self, rank: usize) {
+        self.expect_eof[rank].store(true, Ordering::SeqCst);
+    }
+
     /// Broadcast `BYE`: no further phases; the fleet exits. Send errors are
     /// ignored: a worker that already exited has nothing left to
     /// acknowledge.
@@ -1124,6 +1325,8 @@ fn route_loop(
     mut reader: Stream,
     writers: Writers,
     custody: Custodies,
+    leases: Leases,
+    expect_eof: Arc<Vec<AtomicBool>>,
     tx: Sender<HubEvent>,
     p: usize,
 ) {
@@ -1136,6 +1339,9 @@ fn route_loop(
             Ok(None) => break "EOF".into(),
             Err(e) => break format!("{e:#}"),
         };
+        // Any frame is proof of life: touch the rank's heartbeat lease
+        // (v8). PONGs exist for ranks with nothing else to say.
+        *leases[rank].lock().expect("lease lock") = Some(Instant::now());
         frames += 1;
         last_frame = frame.name();
         match frame {
@@ -1195,6 +1401,10 @@ fn route_loop(
                     return; // engine gone
                 }
             }
+            // Heartbeat answer (v8): liveness only — the lease touch above
+            // is its entire effect. Never forwarded, never counted as a
+            // data-plane frame.
+            Frame::Pong => {}
             other => break format!("unexpected {} frame", other.name()),
         }
     };
@@ -1207,6 +1417,12 @@ fn route_loop(
          (last: {last_frame}); custody at last checkpoint: {ck_units} work units, \
          {ck_roots} stack roots"
     );
+    // A rank the owner just force-killed (lease expiry) lands here via the
+    // EOF its kill produced. The owner already synthesized that rank's
+    // loss and is respawning it — a second `Gone` would double-respawn.
+    if expect_eof[rank].swap(false, Ordering::SeqCst) {
+        return;
+    }
     let _ = tx.send(HubEvent::Gone { rank, detail });
 }
 
@@ -1741,5 +1957,84 @@ mod tests {
         hub.broadcast_bye();
         worker.join().unwrap().unwrap();
         hub.join();
+    }
+
+    /// The heartbeat lease table (v8, DESIGN.md §15) at the fabric layer:
+    /// a handshake seeds the lease, `ping_all` probes the worker, a `PONG`
+    /// refreshes the lease, `reset_leases` re-seeds it, and an EOF marked
+    /// expected by [`Hub::mark_expected_eof`] (the force-kill path) is
+    /// swallowed instead of surfacing a duplicate `Gone`.
+    #[test]
+    fn hub_lease_table_tracks_heartbeats_and_suppresses_expected_eof() {
+        let sock = test_ep("lease");
+        let mut hub = Hub::bind(&sock, 1, TOKEN.into()).unwrap();
+        let hello = Frame::Hello {
+            rank: 0,
+            token: TOKEN.into(),
+            peer: Endpoint::unix("/nowhere.r0"),
+        };
+        let mut s = dial(&sock, &RetryPolicy::once()).unwrap();
+        write_frame(&mut s, &hello).unwrap();
+        accept_all(&mut hub, 1);
+        // The handshake seeds the lease.
+        assert!(hub.lease_age(0).is_some(), "handshake must seed the lease");
+        // A PING reaches the fake worker...
+        hub.ping_all();
+        match read_frame(&mut s).unwrap() {
+            Some(Frame::Ping) => {}
+            other => panic!("expected PING from hub, got {other:?}"),
+        }
+        // ...and while it stays silent the lease only ages.
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(hub.lease_age(0).unwrap() >= Duration::from_millis(40));
+        // Its PONG refreshes the lease (the route thread races us: poll).
+        write_frame(&mut s, &Frame::Pong).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while hub.lease_age(0).unwrap() >= Duration::from_millis(40) {
+            assert!(Instant::now() < deadline, "PONG never refreshed the lease");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // A phase-start reset re-seeds connected slots.
+        std::thread::sleep(Duration::from_millis(60));
+        hub.reset_leases();
+        assert!(hub.lease_age(0).unwrap() < Duration::from_millis(40));
+        // An expected EOF (the owner force-killed this rank and already
+        // synthesized its loss) must NOT surface as a second Gone.
+        hub.mark_expected_eof(0);
+        drop(s);
+        match hub.recv_event(Duration::from_millis(300)).unwrap() {
+            None => {}
+            other => panic!("expected-EOF death must be swallowed, got {other:?}"),
+        }
+        // Vacating the slot clears the lease.
+        hub.forget_rank(0);
+        assert!(hub.lease_age(0).is_none(), "forgotten rank must hold no lease");
+    }
+
+    /// A bounded `await_phase_deadline` on a worker whose hub never opens
+    /// a phase fails with the typed [`PhaseWaitTimeout`] — the watchdog
+    /// counterpart of the unbounded production wait (DESIGN.md §15).
+    #[test]
+    fn await_phase_deadline_surfaces_typed_timeout() {
+        let sock = test_ep("deadline");
+        let mut hub = Hub::bind(&sock, 1, TOKEN.into()).unwrap();
+        let worker = std::thread::spawn({
+            let sock = sock.clone();
+            move || -> Result<Duration> {
+                let mut mb = connect(&sock, 0, TOKEN, None)?;
+                let err = mb
+                    .await_phase_deadline(Some(Duration::from_millis(100)))
+                    .expect_err("the hub never opened a phase");
+                let t = err
+                    .source()
+                    .and_then(|s| s.downcast_ref::<PhaseWaitTimeout>())
+                    .context("error source must downcast to PhaseWaitTimeout")?;
+                Ok(t.limit)
+            }
+        });
+        accept_all(&mut hub, 1);
+        // Deliberately no CONFIG/START: the worker's bounded wait elapses.
+        let limit = worker.join().unwrap().unwrap();
+        assert_eq!(limit, Duration::from_millis(100));
     }
 }

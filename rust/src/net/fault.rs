@@ -1,0 +1,376 @@
+//! Deterministic *network*-fault injection for the process fabric
+//! (DESIGN.md §15).
+//!
+//! [`crate::util::fault`] can only kill a worker process; this module
+//! breaks its **network** instead, which is the failure class heartbeat
+//! leases exist to detect — a rank that is hung, partitioned, or silently
+//! discarding traffic, while its process stays alive and its sockets stay
+//! open (no EOF ever fires). A [`NetFaultPlan`] travels as one CLI/env
+//! token,
+//!
+//! ```text
+//! rank=R,kind=K,phase=P,after=N      K := stall|drop|corrupt|partition
+//! ```
+//!
+//! mirroring the `--fault-inject` grammar, and is scripted by **frame
+//! counts, not wall time**: the plan arms during phase epoch `phase` and
+//! fires at the armed rank's `N`-th data-plane frame send of that epoch
+//! (`PEERMSG` on the mesh plane, `RELAY` on the hub plane) — so a chaos
+//! run is reproducible bit-for-bit. The four kinds:
+//!
+//! - `stall`: the worker stops reading *and* writing — the main thread
+//!   parks at the send site and the reader thread parks too, so `PING`s
+//!   pile up unread. Liveness must come from the hub's lease table.
+//! - `partition`: the main thread parks at the send site but the reader
+//!   keeps absorbing. The hub link stays open and `PING`s keep arriving —
+//!   but `PONG`s are answered by the *main* thread (whole-worker
+//!   liveness), so the lease still expires.
+//! - `drop`: sever the worker→hub direction only. The worker keeps
+//!   mining; every hub-bound frame (checkpoints, the merge, `PONG`s) is
+//!   silently discarded.
+//! - `corrupt`: flip the tag byte of the next hub-bound frame. The hub's
+//!   route thread gets a decode error on an established stream, which
+//!   must become that one rank's `Gone` — never a poisoned fleet.
+//!
+//! The state here is process-global (one armed plan per worker process,
+//! set from `__worker`'s argv/environment); the fabric layer consults the
+//! decision functions at its frame-write sites and performs the actual
+//! parking/logging so this module stays below `wire` in the layer map.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable consulted by `__worker` when no `--net-fault`
+/// argument is present (same `rank=R,kind=K,phase=P,after=N` grammar).
+pub const NET_FAULT_ENV: &str = "PARLAMP_NET_FAULT";
+
+/// The four scripted network-fault classes (DESIGN.md §15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetFaultKind {
+    /// Stop reading and writing: the classic hung rank.
+    Stall,
+    /// Sever worker→hub writes; the worker keeps mining into the void.
+    Drop,
+    /// Flip the tag byte of the next hub-bound frame.
+    Corrupt,
+    /// Park the main thread (mesh links dead) while the reader keeps the
+    /// hub link warm.
+    Partition,
+}
+
+impl NetFaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetFaultKind::Stall => "stall",
+            NetFaultKind::Drop => "drop",
+            NetFaultKind::Corrupt => "corrupt",
+            NetFaultKind::Partition => "partition",
+        }
+    }
+
+    fn parse(s: &str) -> Result<NetFaultKind> {
+        match s {
+            "stall" => Ok(NetFaultKind::Stall),
+            "drop" => Ok(NetFaultKind::Drop),
+            "corrupt" => Ok(NetFaultKind::Corrupt),
+            "partition" => Ok(NetFaultKind::Partition),
+            other => bail!("unknown net fault kind '{other}' (stall|drop|corrupt|partition)"),
+        }
+    }
+}
+
+/// One planned network fault: break `rank`'s network per `kind` at its
+/// `after`-th data-plane frame send during phase epoch `phase`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetFaultPlan {
+    /// Worker rank whose network breaks.
+    pub rank: usize,
+    /// What breaks.
+    pub kind: NetFaultKind,
+    /// Fleet phase epoch (0-based, hub-assigned) during which the plan
+    /// arms; frames sent in any other epoch neither count nor fire.
+    pub phase: u64,
+    /// Fires at the rank's `after`-th data-plane frame send of that epoch
+    /// (1-based; that send is the first affected one).
+    pub after: u64,
+}
+
+impl NetFaultPlan {
+    /// Parse the `rank=R,kind=K,phase=P,after=N` spelling (fields in any
+    /// order, all four required).
+    pub fn parse(s: &str) -> Result<NetFaultPlan> {
+        let (mut rank, mut kind, mut phase, mut after) = (None, None, None, None);
+        for field in s.split(',').filter(|f| !f.is_empty()) {
+            let (key, value) = field
+                .split_once('=')
+                .with_context(|| format!("net fault field '{field}' is not key=value"))?;
+            match key.trim() {
+                "rank" => {
+                    rank = Some(value.trim().parse::<usize>().with_context(|| {
+                        format!("net fault rank '{value}' is not an unsigned integer")
+                    })?);
+                }
+                "kind" => kind = Some(NetFaultKind::parse(value.trim())?),
+                "phase" => {
+                    phase = Some(value.trim().parse::<u64>().with_context(|| {
+                        format!("net fault phase '{value}' is not an unsigned integer")
+                    })?);
+                }
+                "after" => {
+                    after = Some(value.trim().parse::<u64>().with_context(|| {
+                        format!("net fault after '{value}' is not an unsigned integer")
+                    })?);
+                }
+                other => bail!("unknown net fault field '{other}' (rank|kind|phase|after)"),
+            }
+        }
+        let miss = "net fault plan is missing";
+        let form = "(rank=R,kind=K,phase=P,after=N)";
+        Ok(NetFaultPlan {
+            rank: rank.with_context(|| format!("{miss} rank= {form}"))?,
+            kind: kind.with_context(|| format!("{miss} kind= {form}"))?,
+            phase: phase.with_context(|| format!("{miss} phase= {form}"))?,
+            after: after.with_context(|| format!("{miss} after= {form}"))?,
+        })
+    }
+}
+
+impl std::fmt::Display for NetFaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rank={},kind={},phase={},after={}",
+            self.rank,
+            self.kind.name(),
+            self.phase,
+            self.after
+        )
+    }
+}
+
+impl std::str::FromStr for NetFaultPlan {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<NetFaultPlan> {
+        NetFaultPlan::parse(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Armed state (process-global; one worker process arms at most one plan)
+// ---------------------------------------------------------------------------
+
+static PLAN: Mutex<Option<NetFaultPlan>> = Mutex::new(None);
+/// Fast-path gate so the unarmed case (production) costs one relaxed load.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Data-plane frames sent during the armed epoch.
+static FRAMES: AtomicU64 = AtomicU64::new(0);
+/// One-shot latch: a plan fires exactly once.
+static FIRED: AtomicBool = AtomicBool::new(false);
+/// `stall` fired: the reader thread must park too.
+static STALLED: AtomicBool = AtomicBool::new(false);
+/// `drop` fired: hub-bound frame writes are silently discarded.
+static DROP_HUB: AtomicBool = AtomicBool::new(false);
+/// `corrupt` fired: the next hub-bound frame write flips its tag byte.
+static CORRUPT_NEXT: AtomicBool = AtomicBool::new(false);
+
+/// Arm `plan` for this process. Called once from `__worker` startup, and
+/// only when the plan names the worker's own rank (a plan naming another
+/// rank is inert, exactly like `--fault-inject`).
+pub fn arm(plan: NetFaultPlan) {
+    *PLAN.lock().unwrap() = Some(plan);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Consulted by the fabric at every data-plane frame send (`PEERMSG` on
+/// the mesh plane, `RELAY` on the hub plane) with the sender's current
+/// phase epoch. Counts matching-epoch sends; returns the plan exactly
+/// once, at the `after`-th such send — the caller logs the firing and
+/// performs the kind's action (parking for stall/partition; drop/corrupt
+/// latch here and apply at the hub-write sites).
+pub fn on_data_frame(epoch: u64) -> Option<NetFaultPlan> {
+    if !ARMED.load(Ordering::Acquire) || FIRED.load(Ordering::Acquire) {
+        return None;
+    }
+    let plan = (*PLAN.lock().unwrap())?;
+    if epoch != plan.phase {
+        return None;
+    }
+    let sent = FRAMES.fetch_add(1, Ordering::AcqRel) + 1;
+    if sent < plan.after.max(1) {
+        return None;
+    }
+    if FIRED.swap(true, Ordering::AcqRel) {
+        return None;
+    }
+    match plan.kind {
+        NetFaultKind::Stall => STALLED.store(true, Ordering::Release),
+        NetFaultKind::Drop => DROP_HUB.store(true, Ordering::Release),
+        NetFaultKind::Corrupt => CORRUPT_NEXT.store(true, Ordering::Release),
+        NetFaultKind::Partition => {}
+    }
+    Some(plan)
+}
+
+/// `true` once a `stall` plan fired: the fabric's reader thread parks
+/// instead of reading, so the hub's `PING`s stay unread in the socket
+/// buffer (they are a few bytes each — they never fill it before the
+/// lease expires).
+pub fn stalled() -> bool {
+    STALLED.load(Ordering::Acquire)
+}
+
+/// What the fabric must do with a hub-bound frame write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HubWrite {
+    /// No fault (or none that touches this direction): write normally.
+    Forward,
+    /// A `drop` plan fired: discard the frame, report success.
+    Discard,
+    /// A `corrupt` plan fired: flip the frame's tag byte, then write.
+    /// One-shot — returned exactly once.
+    Corrupt,
+}
+
+/// Consulted by the fabric before every hub-bound frame write
+/// (checkpoints, merges, trace flushes, `PONG`s, hub-plane relays).
+pub fn hub_write() -> HubWrite {
+    if !ARMED.load(Ordering::Acquire) {
+        return HubWrite::Forward;
+    }
+    if DROP_HUB.load(Ordering::Acquire) {
+        return HubWrite::Discard;
+    }
+    if CORRUPT_NEXT.swap(false, Ordering::AcqRel) {
+        return HubWrite::Corrupt;
+    }
+    HubWrite::Forward
+}
+
+/// Corrupt an encoded frame in place by flipping its tag byte (the byte
+/// right after the 4-byte little-endian length prefix). Every frame tag
+/// lives well below `0x80`, so the flipped value can never collide with a
+/// valid tag: the receiver's decode fails deterministically with an
+/// "unknown frame tag" error instead of a silently-wrong payload.
+pub fn corrupt_frame_bytes(bytes: &mut [u8]) {
+    if bytes.len() > 4 {
+        bytes[4] ^= 0xFF;
+    }
+}
+
+/// Park the calling thread forever — the body of a fired `stall` or
+/// `partition`. The process stays alive (no EOF anywhere); only the hub's
+/// heartbeat lease can notice, which is the point. The force-kill that
+/// follows lease expiry is what ends the process.
+pub fn park_forever() -> ! {
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+#[cfg(test)]
+fn reset() {
+    *PLAN.lock().unwrap() = None;
+    ARMED.store(false, Ordering::Release);
+    FRAMES.store(0, Ordering::Release);
+    FIRED.store(false, Ordering::Release);
+    STALLED.store(false, Ordering::Release);
+    DROP_HUB.store(false, Ordering::Release);
+    CORRUPT_NEXT.store(false, Ordering::Release);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for kind in [
+            NetFaultKind::Stall,
+            NetFaultKind::Drop,
+            NetFaultKind::Corrupt,
+            NetFaultKind::Partition,
+        ] {
+            let plan = NetFaultPlan { rank: 2, kind, phase: 1, after: 4096 };
+            assert_eq!(NetFaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        }
+        // Any field order parses; whitespace around fields is tolerated.
+        assert_eq!(
+            NetFaultPlan::parse("after=7, kind=partition ,rank=2,phase=1").unwrap(),
+            NetFaultPlan { rank: 2, kind: NetFaultKind::Partition, phase: 1, after: 7 }
+        );
+        assert_eq!(
+            "rank=0,kind=stall,phase=0,after=0".parse::<NetFaultPlan>().unwrap().after,
+            0
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        for bad in [
+            "",
+            "rank=1,phase=0,after=1",              // missing kind
+            "rank=1,kind=stall,phase=0",           // missing after
+            "rank=1,kind=sever,phase=0,after=1",   // unknown kind
+            "rank=x,kind=stall,phase=0,after=1",   // non-numeric
+            "rank=1,kind=stall,phase=0,after=1,bogus=2", // unknown field
+            "rank,kind=stall,phase=0,after=1",     // not key=value
+        ] {
+            assert!(NetFaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    /// The armed-state machine, end to end in one test (the state is
+    /// process-global, so all its assertions live in one serial body).
+    #[test]
+    fn armed_plan_counts_frames_and_fires_once() {
+        reset();
+        // Unarmed: every site is a no-op.
+        assert_eq!(on_data_frame(0), None);
+        assert_eq!(hub_write(), HubWrite::Forward);
+        assert!(!stalled());
+
+        // Drop: fires at the 3rd matching-epoch frame, exactly once.
+        let plan = NetFaultPlan { rank: 1, kind: NetFaultKind::Drop, phase: 2, after: 3 };
+        arm(plan);
+        assert_eq!(on_data_frame(1), None, "wrong epoch must not count");
+        assert_eq!(on_data_frame(2), None);
+        assert_eq!(on_data_frame(2), None);
+        assert_eq!(on_data_frame(2), Some(plan), "third matching frame fires");
+        assert_eq!(on_data_frame(2), None, "a plan fires exactly once");
+        assert_eq!(hub_write(), HubWrite::Discard);
+        assert_eq!(hub_write(), HubWrite::Discard, "drop is sticky");
+        assert!(!stalled());
+
+        // Corrupt: one-shot at the hub-write site.
+        reset();
+        arm(NetFaultPlan { rank: 0, kind: NetFaultKind::Corrupt, phase: 0, after: 1 });
+        assert!(on_data_frame(0).is_some());
+        assert_eq!(hub_write(), HubWrite::Corrupt);
+        assert_eq!(hub_write(), HubWrite::Forward, "corrupt applies to one frame");
+
+        // Stall: flips the reader-park flag; hub writes unaffected (the
+        // main thread parks before ever reaching a hub-write site).
+        reset();
+        arm(NetFaultPlan { rank: 0, kind: NetFaultKind::Stall, phase: 0, after: 1 });
+        assert!(on_data_frame(0).is_some());
+        assert!(stalled());
+        assert_eq!(hub_write(), HubWrite::Forward);
+        reset();
+    }
+
+    #[test]
+    fn corrupt_flips_the_tag_byte_only() {
+        let mut bytes = vec![5, 0, 0, 0, 0x0A, 1, 2, 3, 4];
+        let orig = bytes.clone();
+        corrupt_frame_bytes(&mut bytes);
+        assert_eq!(bytes[4], 0x0A ^ 0xFF);
+        assert_eq!(bytes[..4], orig[..4], "length prefix untouched");
+        assert_eq!(bytes[5..], orig[5..], "payload untouched");
+        // Degenerate inputs are left alone rather than panicking.
+        let mut short = vec![1, 0, 0, 0];
+        corrupt_frame_bytes(&mut short);
+        assert_eq!(short, vec![1, 0, 0, 0]);
+    }
+}

@@ -9,8 +9,10 @@
 //! hand [`dial_with_preamble`] pre-encoded bytes), so the layering stays
 //! acyclic while the wire layer can still carry endpoints as strings.
 
+pub mod fault;
 pub mod transport;
 
+pub use fault::{NetFaultKind, NetFaultPlan, NET_FAULT_ENV};
 pub use transport::{
     dial, dial_with_preamble, fresh_token, Endpoint, Listener, RetryPolicy, Stream,
 };

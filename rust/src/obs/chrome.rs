@@ -166,6 +166,24 @@ pub fn export(traces: &[RankTrace]) -> String {
             EventKind::ServeExpire { job } => {
                 ev.push(instant(rank, ts, "serve.expire", "serve", &format!(r#""job":{job}"#)));
             }
+            EventKind::LeaseMiss { rank: dead, epoch } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "lease.miss",
+                    "fault",
+                    &format!(r#""rank":{dead},"epoch":{epoch}"#),
+                ));
+            }
+            EventKind::ForceKill { rank: dead, epoch } => {
+                ev.push(instant(
+                    rank,
+                    ts,
+                    "force.kill",
+                    "fault",
+                    &format!(r#""rank":{dead},"epoch":{epoch}"#),
+                ));
+            }
         }
     }
 
@@ -333,5 +351,25 @@ mod tests {
         crate::bench::report::parse_json(&json).unwrap();
         assert!(json.contains(r#""name":"hub""#));
         assert!(json.contains(r#""name":"serve.queue""#));
+    }
+
+    #[test]
+    fn lease_events_render_on_the_fault_category() {
+        // A stalled rank's lease expiry shows up on the hub track as a
+        // lease.miss / force.kill pair next to the respawn it causes.
+        let t = rt(
+            HUB_RANK,
+            vec![
+                e(10, EventKind::LeaseMiss { rank: 1, epoch: 4 }),
+                e(20, EventKind::ForceKill { rank: 1, epoch: 4 }),
+                e(30, EventKind::Respawn { rank: 1, epoch: 5 }),
+            ],
+        );
+        let json = export(&[t]);
+        crate::bench::report::parse_json(&json).unwrap();
+        assert!(json.contains(r#""name":"lease.miss""#));
+        assert!(json.contains(r#""name":"force.kill""#));
+        assert_eq!(json.matches(r#""cat":"fault""#).count(), 3);
+        assert!(json.contains(r#""rank":1,"epoch":4"#));
     }
 }

@@ -65,10 +65,15 @@ pub struct Tags {
     pub rank: Option<u32>,
     pub fleet: Option<u32>,
     pub job: Option<u64>,
+    /// Failure-cause classifier on respawn/failed-job records (v8): one
+    /// of the fixed detection classes (`"lease-expiry"`, `"eof"`,
+    /// `"corrupt-frame"`, `"watchdog-abort"`, …) so log scrapes can
+    /// aggregate *why* ranks die, not just that they did.
+    pub cause: Option<&'static str>,
 }
 
 impl Tags {
-    pub const NONE: Tags = Tags { rank: None, fleet: None, job: None };
+    pub const NONE: Tags = Tags { rank: None, fleet: None, job: None, cause: None };
 
     pub fn rank(rank: usize) -> Tags {
         Tags { rank: Some(rank as u32), ..Tags::NONE }
@@ -91,6 +96,11 @@ impl Tags {
         self.job = Some(job);
         self
     }
+
+    pub fn and_cause(mut self, cause: &'static str) -> Tags {
+        self.cause = Some(cause);
+        self
+    }
 }
 
 impl fmt::Display for Tags {
@@ -103,6 +113,9 @@ impl fmt::Display for Tags {
         }
         if let Some(j) = self.job {
             write!(f, " job={j}")?;
+        }
+        if let Some(c) = self.cause {
+            write!(f, " cause={c}")?;
         }
         Ok(())
     }
@@ -305,6 +318,9 @@ mod tests {
         assert_eq!(line, "parlamp[WARN fleet rank=1 fleet=2 job=7] lost (EOF)");
         let bare = format_line(Level::Info, "serve", &Tags::NONE, format_args!("up"));
         assert_eq!(bare, "parlamp[INFO serve] up");
+        let caused = Tags::rank(1).and_cause("lease-expiry");
+        let line = format_line(Level::Warn, "fleet", &caused, format_args!("respawning"));
+        assert_eq!(line, "parlamp[WARN fleet rank=1 cause=lease-expiry] respawning");
     }
 
     #[test]

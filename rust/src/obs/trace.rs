@@ -65,6 +65,13 @@ pub enum EventKind {
     ServePop { job: u64 },
     /// Service: job expired before running.
     ServeExpire { job: u64 },
+    /// Hub: `rank` missed its heartbeat lease during `epoch` — hung,
+    /// partitioned, or livelocked with its socket still open (v8,
+    /// DESIGN.md §15). A `ForceKill` + `Respawn` pair follows.
+    LeaseMiss { rank: u32, epoch: u64 },
+    /// Hub: `rank` was force-killed after its lease expired; the PR-7
+    /// respawn + epoch-fenced replay path takes over from here.
+    ForceKill { rank: u32, epoch: u64 },
 }
 
 /// One timestamped event.

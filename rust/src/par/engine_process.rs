@@ -46,7 +46,8 @@
 
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -54,12 +55,13 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::db::Database;
 use crate::fabric::process::{connect, DataPlane, Hub, HubEvent};
 use crate::fabric::CommStats;
-use crate::lcm::SupportHist;
+use crate::net::fault::{self as netfault, NetFaultPlan, NET_FAULT_ENV};
 use crate::net::{fresh_token, Endpoint};
 use crate::obs::clock::{self, estimate_offset, HandshakeSample};
 use crate::obs::log::{self, Tags};
 use crate::obs::trace::{self as obs_trace, EventKind as TraceEv, RankTrace, TraceEvent, TraceRing};
 use crate::util::fault::{FaultPlan, FAULT_ENV, FAULT_EXIT_CODE};
+use crate::util::sig;
 use crate::wire::trace::TraceChunk;
 use crate::wire::{PhaseSpec, RunSpec, WorkerMerge};
 
@@ -127,6 +129,20 @@ pub struct ProcessConfig {
     /// never inherit it, so the fault fires exactly once. `None` in
     /// production; the chaos suite and the `--fault-inject` CLI flag set it.
     pub fault: Option<FaultPlan>,
+    /// Deterministic *network*-fault injection (DESIGN.md §15): break the
+    /// named rank's network (`stall`/`drop`/`corrupt`/`partition`) at a
+    /// scripted data-plane frame count, while its process stays alive.
+    /// Same propagation rules as `fault`: passed to the targeted worker's
+    /// argv at spawn (`--net-fault rank=R,kind=K,phase=P,after=N`), never
+    /// inherited by respawned replacements. `None` in production.
+    pub net_fault: Option<NetFaultPlan>,
+    /// Heartbeat lease window (v8, DESIGN.md §15): a mid-phase rank whose
+    /// route thread has read no frame — `PONG` or otherwise — for this
+    /// long is declared lost, force-killed, and respawned through the
+    /// ordinary recovery path. Generous by default: a healthy worker
+    /// answers pings from every blocking wait, so only a genuinely hung,
+    /// partitioned, or write-severed rank ever ages this far.
+    pub lease_timeout: Duration,
 }
 
 impl ProcessConfig {
@@ -148,6 +164,8 @@ impl ProcessConfig {
             listen: None,
             remote_workers: None,
             fault: None,
+            net_fault: None,
+            lease_timeout: Duration::from_secs(60),
         }
     }
 
@@ -159,12 +177,13 @@ impl ProcessConfig {
         }
     }
 
-    /// Copy of this config with fault injection disarmed. The serve
-    /// daemon's fleet pool arms an injected plan on fleet 0 only — every
-    /// other fleet (and every whole-fleet rebuild) spawns from this copy,
-    /// so a planned fault fires in exactly one place.
+    /// Copy of this config with fault injection disarmed — both the
+    /// process-kill plan and the network-fault plan. The serve daemon's
+    /// fleet pool arms an injected plan on fleet 0 only — every other
+    /// fleet (and every whole-fleet rebuild) spawns from this copy, so a
+    /// planned fault fires in exactly one place.
     pub fn without_fault(&self) -> ProcessConfig {
-        ProcessConfig { fault: None, ..self.clone() }
+        ProcessConfig { fault: None, net_fault: None, ..self.clone() }
     }
 }
 
@@ -177,6 +196,65 @@ pub fn run_process(db: &Database, mode: RunMode, p: usize, seed: u64) -> Result<
 /// against a crash-looping worker binary (every respawn dies again) turning
 /// [`ProcessFleet::run_phase`] into an infinite replay loop.
 const MAX_PHASE_RECOVERIES: u32 = 8;
+
+/// Typed failure classes of a fleet phase (DESIGN.md §15), carried through
+/// `anyhow` so callers that must *react* to a class — the serve daemon
+/// converts each into a failed-job reply plus a fleet rebuild — can
+/// downcast instead of string-matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// The fleet never finished assembling: fewer than `p` workers
+    /// completed the `HELLO` handshake within the spawn timeout.
+    AssembleTimeout { connected: usize, p: usize },
+    /// An external watchdog ([`AbortHandle::fire`]) declared this fleet
+    /// wedged and aborted it mid-phase.
+    WatchdogAbort,
+    /// The phase was abandoned after [`MAX_PHASE_RECOVERIES`] mid-phase
+    /// recoveries — a crash-looping worker binary, not a one-off death.
+    RecoveryExhausted { rank: usize, detail: String },
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::AssembleTimeout { connected, p } => {
+                write!(f, "timed out assembling worker fleet ({connected}/{p} workers joined)")
+            }
+            FleetError::WatchdogAbort => {
+                write!(f, "fleet aborted by watchdog (phase exceeded its deadline)")
+            }
+            FleetError::RecoveryExhausted { rank, detail } => write!(
+                f,
+                "phase abandoned after {MAX_PHASE_RECOVERIES} recoveries; \
+                 last death: rank {rank}: {detail}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// Handle a watchdog thread uses to abort a wedged fleet it does not own
+/// (the serve daemon's per-job watchdog, DESIGN.md §15). [`AbortHandle::fire`]
+/// sets the fleet's abort flag — checked between collection ticks, so the
+/// phase surfaces [`FleetError::WatchdogAbort`] instead of respawn-looping —
+/// and SIGKILLs the worker pids, which also frees any OS-level wait. The
+/// flag is load-bearing: the kills alone would be indistinguishable from
+/// crashes, and recovery might respawn every rank and let the phase succeed.
+#[derive(Clone, Debug)]
+pub struct AbortHandle {
+    flag: Arc<AtomicBool>,
+    pids: Vec<u32>,
+}
+
+impl AbortHandle {
+    pub fn fire(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        for &pid in &self.pids {
+            sig::kill_pid(pid, sig::SIGKILL);
+        }
+    }
+}
 
 /// Send a custody checkpoint to the hub roughly once per this many local
 /// work units (DESIGN.md §12). Matches the probe budget's order of
@@ -214,6 +292,7 @@ impl Fleet {
         token: &str,
         rank: usize,
         fault: Option<&FaultPlan>,
+        net_fault: Option<&NetFaultPlan>,
     ) -> Result<Child> {
         let mut cmd = Command::new(exe);
         cmd.arg("__worker")
@@ -229,6 +308,11 @@ impl Fleet {
                 cmd.arg("--fault-inject").arg(plan.to_string());
             }
         }
+        if let Some(plan) = net_fault {
+            if plan.rank == rank {
+                cmd.arg("--net-fault").arg(plan.to_string());
+            }
+        }
         cmd.spawn()
             .with_context(|| format!("spawn worker rank {rank} ({})", exe.display()))
     }
@@ -239,10 +323,11 @@ impl Fleet {
         token: &str,
         p: usize,
         fault: Option<&FaultPlan>,
+        net_fault: Option<&NetFaultPlan>,
     ) -> Result<Fleet> {
         let mut children = Vec::with_capacity(p);
         for rank in 0..p {
-            children.push(Self::spawn_one(exe, hub, token, rank, fault)?);
+            children.push(Self::spawn_one(exe, hub, token, rank, fault, net_fault)?);
         }
         Ok(Fleet {
             reaped: vec![false; p],
@@ -281,20 +366,43 @@ impl Fleet {
         Ok(())
     }
 
+    /// Kill `rank`'s process outright and reap it. Idempotent. This is the
+    /// lease-expiry teardown (DESIGN.md §15): the process may be perfectly
+    /// alive — hung, partitioned, or mining into a severed socket — but
+    /// its network is dead to the fleet, and the declared loss must become
+    /// a real death before the slot is respawned.
+    fn force_kill(&mut self, rank: usize) {
+        if rank >= self.children.len() || self.reaped[rank] {
+            return;
+        }
+        let _ = self.children[rank].kill();
+        let _ = self.children[rank].wait();
+        self.reaped[rank] = true;
+    }
+
+    /// Pids of the children not yet reaped, for [`AbortHandle`].
+    fn pids(&self) -> Vec<u32> {
+        self.children
+            .iter()
+            .enumerate()
+            .filter(|(rank, _)| !self.reaped[*rank])
+            .map(|(_, c)| c.id())
+            .collect()
+    }
+
     /// Replace a dead rank's process with a fresh one (DESIGN.md §12). The
-    /// old child is reaped first (its death is what triggered the call, so
-    /// the wait is momentary). The replacement is spawned *without* any
-    /// fault plan — an injected fault fires exactly once.
+    /// old child is killed-then-reaped first: usually it is already dead
+    /// (its death is what triggered the call), but on the corrupt-frame
+    /// path the hub severed the *connection* while the process mines on —
+    /// a bare `wait` there would wedge forever. The replacement is spawned
+    /// *without* any fault plan — an injected fault fires exactly once.
     fn respawn(&mut self, rank: usize) -> Result<()> {
         let exe = self.exe.clone().context("remote-attach fleets cannot respawn locally")?;
         let hub = self.hub.clone().context("fleet spawn endpoint missing")?;
         ensure!(rank < self.children.len(), "respawn of out-of-range rank {rank}");
-        if !self.reaped[rank] {
-            let _ = self.children[rank].wait();
-            self.reaped[rank] = true;
-        }
+        self.force_kill(rank);
         let token = self.token.clone();
-        self.children[rank] = Self::spawn_one(&exe, &hub, &token, rank, None)?;
+        self.children[rank] = Self::spawn_one(&exe, &hub, &token, rank, None, None)?;
         self.reaped[rank] = false;
         Ok(())
     }
@@ -417,6 +525,13 @@ pub struct ProcessFleet {
     /// voided — the repair is deferred to the next phase opening.
     deferred_gone: Vec<(usize, String)>,
     spawn_timeout: Duration,
+    /// Heartbeat lease window ([`ProcessConfig::lease_timeout`]): enforced
+    /// mid-phase against every rank still owing its merge.
+    lease_timeout: Duration,
+    /// Set by an external watchdog's [`AbortHandle::fire`]: the current
+    /// (and any next) phase attempt surfaces [`FleetError::WatchdogAbort`]
+    /// instead of recovering.
+    abort: Arc<AtomicBool>,
     remote: bool,
 }
 
@@ -432,6 +547,7 @@ pub struct PendingFleet {
     p: usize,
     data_plane: DataPlane,
     spawn_timeout: Duration,
+    lease_timeout: Duration,
     remote: bool,
 }
 
@@ -471,12 +587,15 @@ impl PendingFleet {
         while self.hub.connected() < p {
             self.fleet.check().context("while assembling the worker fleet")?;
             if !self.hub.try_accept()? {
-                ensure!(
-                    Instant::now() < deadline,
-                    "timed out assembling worker fleet ({}/{p} {})",
-                    self.hub.connected(),
-                    if self.remote { "remote workers attached" } else { "connected" }
-                );
+                if Instant::now() >= deadline {
+                    // Typed (DESIGN.md §15): the serve daemon rebuilds a
+                    // fleet that never assembled rather than retrying it.
+                    return Err(FleetError::AssembleTimeout {
+                        connected: self.hub.connected(),
+                        p,
+                    }
+                    .into());
+                }
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
@@ -500,6 +619,8 @@ impl PendingFleet {
             hub_trace: TraceRing::with_default_cap(),
             deferred_gone: Vec::new(),
             spawn_timeout: self.spawn_timeout,
+            lease_timeout: self.lease_timeout,
+            abort: Arc::new(AtomicBool::new(false)),
             remote: self.remote,
         })
     }
@@ -526,7 +647,14 @@ impl ProcessFleet {
             Fleet::remote()
         } else {
             let exe = worker_exe(cfg)?;
-            Fleet::spawn(&exe, hub.endpoint(), hub.token(), p, cfg.fault.as_ref())?
+            Fleet::spawn(
+                &exe,
+                hub.endpoint(),
+                hub.token(),
+                p,
+                cfg.fault.as_ref(),
+                cfg.net_fault.as_ref(),
+            )?
         };
         Ok(PendingFleet {
             hub,
@@ -535,6 +663,7 @@ impl ProcessFleet {
             p,
             data_plane: cfg.data_plane,
             spawn_timeout: cfg.spawn_timeout,
+            lease_timeout: cfg.lease_timeout,
             remote: cfg.remote_workers.is_some(),
         })
     }
@@ -560,6 +689,15 @@ impl ProcessFleet {
     /// Workers respawned over this fleet's lifetime.
     pub fn respawns(&self) -> u64 {
         self.respawns
+    }
+
+    /// Handle for an external watchdog to abort this fleet from another
+    /// thread (the serve daemon's per-job watchdog, DESIGN.md §15). The
+    /// pid list is a snapshot — fire the handle once and rebuild the
+    /// fleet; a handle held across respawns may miss replacement pids,
+    /// which the abort flag still covers.
+    pub fn abort_handle(&self) -> AbortHandle {
+        AbortHandle { flag: Arc::clone(&self.abort), pids: self.fleet.pids() }
     }
 
     /// Drain the hub-side trace events (respawns and replay fences) as
@@ -610,6 +748,9 @@ impl ProcessFleet {
         let digest = db.digest();
         let mut recoveries = 0u32;
         loop {
+            if self.abort.load(Ordering::SeqCst) {
+                return Err(FleetError::WatchdogAbort.into());
+            }
             // Between-phase deaths (a rank killed after its last merge —
             // during the owner's serial screen, or between two jobs of a
             // warm daemon fleet) surface as queued `Gone` events; repair
@@ -619,11 +760,9 @@ impl ProcessFleet {
                 Ok(PhaseOutcome::Done(result)) => return Ok(result),
                 Ok(PhaseOutcome::Lost { rank, detail }) => {
                     recoveries += 1;
-                    ensure!(
-                        recoveries <= MAX_PHASE_RECOVERIES,
-                        "phase abandoned after {MAX_PHASE_RECOVERIES} recoveries; \
-                         last death: rank {rank}: {detail}"
-                    );
+                    if recoveries > MAX_PHASE_RECOVERIES {
+                        return Err(FleetError::RecoveryExhausted { rank, detail }.into());
+                    }
                     self.recover_rank(rank, &detail)?;
                 }
                 Err(e) => {
@@ -634,11 +773,11 @@ impl ProcessFleet {
                     match self.hub.recv_event(Duration::from_millis(50))? {
                         Some(HubEvent::Gone { rank, detail }) => {
                             recoveries += 1;
-                            ensure!(
-                                recoveries <= MAX_PHASE_RECOVERIES,
-                                "phase abandoned after {MAX_PHASE_RECOVERIES} recoveries; \
-                                 last death: rank {rank}: {detail}"
-                            );
+                            if recoveries > MAX_PHASE_RECOVERIES {
+                                return Err(
+                                    FleetError::RecoveryExhausted { rank, detail }.into()
+                                );
+                            }
                             self.recover_rank(rank, &detail)?;
                         }
                         _ => return Err(e),
@@ -699,6 +838,13 @@ impl ProcessFleet {
             *f = false;
         }
         self.hub.start_all(epoch)?;
+        // Heartbeat bookkeeping (v8, DESIGN.md §15): leases measure
+        // liveness only while a phase runs, so re-seed them now — an idle
+        // warm fleet between jobs goes legitimately quiet and its leases
+        // would otherwise expire the first rank checked.
+        self.hub.reset_leases();
+        let ping_every = (self.lease_timeout / 4).max(Duration::from_millis(200));
+        let mut last_ping = Instant::now();
 
         // Collect one merge per rank. Merges echo the epoch they conclude,
         // so stragglers from an aborted attempt are dropped rather than
@@ -715,6 +861,16 @@ impl ProcessFleet {
         };
         let mut collected = 0usize;
         while collected < self.p {
+            if self.abort.load(Ordering::SeqCst) {
+                return Err(FleetError::WatchdogAbort.into());
+            }
+            if last_ping.elapsed() >= ping_every {
+                last_ping = Instant::now();
+                self.hub.ping_all();
+                if let Some(lost) = self.expire_leases(epoch, &merges) {
+                    return Ok(lost);
+                }
+            }
             match self.hub.recv_event(Duration::from_millis(200))? {
                 Some(HubEvent::Merge(m)) => {
                     if m.epoch != epoch {
@@ -810,14 +966,70 @@ impl ProcessFleet {
         Ok(PhaseOutcome::Done(result))
     }
 
+    /// Heartbeat-lease enforcement (v8, DESIGN.md §15): find a mid-phase
+    /// rank whose lease aged past the timeout, force-kill it, and
+    /// synthesize the same `Lost` outcome a crash would have produced —
+    /// the ordinary respawn + epoch-fenced replay path does the rest.
+    /// Ranks whose merge for this epoch already arrived owe nothing
+    /// further and are exempt; remote-attach fleets hold no child handle
+    /// to kill, so there EOF stays the only liveness signal.
+    fn expire_leases(
+        &mut self,
+        epoch: u64,
+        merges: &[Option<WorkerMerge>],
+    ) -> Option<PhaseOutcome> {
+        if self.remote {
+            return None;
+        }
+        for rank in 0..self.p {
+            if merges[rank].is_some() {
+                continue;
+            }
+            // No lease means the slot is vacated (mid-recovery); the Gone
+            // path owns that rank, not the lease scan.
+            let Some(age) = self.hub.lease_age(rank) else { continue };
+            if age < self.lease_timeout {
+                continue;
+            }
+            if obs_trace::enabled() {
+                let now = clock::now_ns();
+                self.hub_trace.push(now, TraceEv::LeaseMiss { rank: rank as u32, epoch });
+                self.hub_trace.push(now, TraceEv::ForceKill { rank: rank as u32, epoch });
+            }
+            // Order matters: arm the expected-EOF flag *before* the kill,
+            // so the route thread's EOF cannot race ahead of it and
+            // surface a duplicate `Gone` (which would double-respawn).
+            self.hub.mark_expected_eof(rank);
+            self.fleet.force_kill(rank);
+            let detail = format!(
+                "lease expired: no frame from rank {rank} in {age:.1?} \
+                 (lease timeout {:.1?}); force-killed",
+                self.lease_timeout
+            );
+            return Some(PhaseOutcome::Lost { rank, detail });
+        }
+        None
+    }
+
     /// Recover from one rank's death (DESIGN.md §12): vacate its hub slot,
     /// respawn exactly that rank (or, for remote-attach fleets, print the
     /// re-join command and wait), await its `HELLO`, refresh the mesh peer
     /// map, and mark it fresh so the next attempt ships it the database.
     fn recover_rank(&mut self, rank: usize, detail: &str) -> Result<()> {
+        // Classify the death for the structured-log scrape (DESIGN.md §15):
+        // which detection path declared this rank lost.
+        let cause = if detail.contains("lease expired") {
+            "lease-expiry"
+        } else if detail.starts_with("EOF") {
+            "eof"
+        } else if detail.contains("unknown frame tag") {
+            "corrupt-frame"
+        } else {
+            "protocol-error"
+        };
         log::warn(
             "fleet",
-            &Tags::rank(rank),
+            &Tags::rank(rank).and_cause(cause),
             format_args!("worker rank {rank} lost ({detail}); respawning rank {rank}"),
         );
         if obs_trace::enabled() {
@@ -965,6 +1177,21 @@ pub fn worker_main(args: &crate::cli::Args) -> Result<()> {
             Err(_) => None,
         },
     };
+    // Network-fault injection (DESIGN.md §15) follows the same precedence.
+    // Arming is per-process and latched before the fabric connects so the
+    // very first data frame is already counted.
+    let net_fault: Option<NetFaultPlan> = match args.get("net-fault") {
+        Some(plan) => Some(plan.parse().context("--net-fault")?),
+        None => match std::env::var(NET_FAULT_ENV) {
+            Ok(plan) => Some(plan.parse().with_context(|| format!("${NET_FAULT_ENV}"))?),
+            Err(_) => None,
+        },
+    };
+    if let Some(plan) = net_fault {
+        if plan.rank == rank {
+            netfault::arm(plan);
+        }
+    }
     let mut mb = connect(&hub, rank, &token, peer_listen)?;
     let mut resident: Option<Database> = None;
 

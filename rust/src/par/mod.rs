@@ -25,9 +25,11 @@ pub mod worker;
 
 pub use breakdown::Breakdown;
 pub use crate::fabric::process::DataPlane;
+pub use crate::net::fault::{NetFaultKind, NetFaultPlan};
 pub use crate::util::fault::{FaultPlan, FAULT_EXIT_CODE};
 pub use engine_process::{
-    run_process, run_process_with, PendingFleet, ProcessConfig, ProcessFleet,
+    run_process, run_process_with, AbortHandle, FleetError, PendingFleet, ProcessConfig,
+    ProcessFleet,
 };
 pub use engine_sim::{run_sim, SimConfig};
 pub use engine_thread::{run_threads, run_threads_with, ThreadConfig};

@@ -1,6 +1,18 @@
 //! Client side of the `parlamp serve` protocol: connect, speak frames,
 //! surface typed results. Used by the `parlamp submit|status|results|
 //! cancel|stats|shutdown` subcommands and by the integration tests.
+//!
+//! Liveness (DESIGN.md §15): every read is bounded by a deadline — a
+//! daemon that accepts the connection and then hangs (or a network that
+//! silently eats the reply) surfaces as a timeout error instead of a
+//! client parked forever. *Idempotent* requests (status, cancel, stats,
+//! shutdown, result) additionally survive one transient failure per
+//! call: the client reconnects through the standard [`dial`] retry
+//! policy and reissues the frame. `SUBMIT` is never reissued — a retry
+//! after an ambiguous failure could enqueue the job twice.
+
+use std::io;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -8,10 +20,41 @@ use crate::net::{dial, Endpoint, RetryPolicy, Stream};
 use crate::wire::service::{JobOutcome, JobSpec, JobState, ServiceStats};
 use crate::wire::{read_frame, write_frame, Frame};
 
+/// Default per-reply read deadline for the quick request kinds.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-reply read deadline while waiting on `RESULT` — the daemon blocks
+/// that reply until the job is terminal, so a long mine legitimately
+/// keeps the socket quiet. On expiry the client probes `STATUS` and keeps
+/// waiting while the job is still queued or running.
+const RESULT_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
 /// One connection to a running daemon. A connection can carry any number
 /// of requests; each request is one frame out, one frame back.
 pub struct Client {
+    endpoint: Endpoint,
     stream: Stream,
+    read_timeout: Duration,
+    retry: RetryPolicy,
+}
+
+/// Whether an error is a transport-level transient — a timed-out read, a
+/// dropped connection, a clean EOF where a reply belonged — as opposed to
+/// a protocol error (bad frame, typed rejection). Only transients justify
+/// a reconnect-and-reissue.
+fn is_transient(e: &anyhow::Error) -> bool {
+    match e.source().and_then(|s| s.downcast_ref::<io::Error>()) {
+        Some(io_err) => matches!(
+            io_err.kind(),
+            io::ErrorKind::TimedOut
+                | io::ErrorKind::WouldBlock
+                | io::ErrorKind::ConnectionReset
+                | io::ErrorKind::ConnectionAborted
+                | io::ErrorKind::BrokenPipe
+                | io::ErrorKind::UnexpectedEof
+        ),
+        None => false,
+    }
 }
 
 impl Client {
@@ -19,25 +62,82 @@ impl Client {
     /// host:port, through the one [`dial`] retry/timeout path (DESIGN.md
     /// §11).
     pub fn connect(ep: &Endpoint) -> Result<Client> {
-        let stream = dial(ep, &RetryPolicy::default()).with_context(|| {
+        let retry = RetryPolicy::default();
+        let stream = dial(ep, &retry).with_context(|| {
             format!("connect to parlamp daemon at {ep} (is `parlamp serve` running?)")
         })?;
-        Ok(Client { stream })
+        Ok(Client {
+            endpoint: ep.clone(),
+            stream,
+            read_timeout: READ_TIMEOUT,
+            retry,
+        })
     }
 
-    fn call(&mut self, frame: &Frame) -> Result<Frame> {
+    /// Override the per-reply read deadline (tests, impatient tooling).
+    pub fn with_read_timeout(mut self, timeout: Duration) -> Client {
+        self.read_timeout = timeout;
+        self
+    }
+
+    /// Drop the current stream and dial the daemon again.
+    fn reconnect(&mut self) -> Result<()> {
+        self.stream = dial(&self.endpoint, &self.retry)
+            .with_context(|| format!("reconnect to parlamp daemon at {}", self.endpoint))?;
+        Ok(())
+    }
+
+    /// One request/reply exchange on the current stream, reply bounded by
+    /// `timeout`. A clean EOF where a reply belonged is reported as an
+    /// `UnexpectedEof` io error so [`is_transient`] classifies it.
+    fn call_once(&mut self, frame: &Frame, timeout: Duration) -> Result<Frame> {
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .context("set reply deadline on the daemon stream")?;
         write_frame(&mut self.stream, frame)
             .with_context(|| format!("send {} to daemon", frame.name()))?;
-        read_frame(&mut self.stream)?.context("daemon closed the connection without replying")
+        read_frame(&mut self.stream)
+            .with_context(|| {
+                format!(
+                    "read {} reply from daemon (deadline {:.0?})",
+                    frame.name(),
+                    timeout
+                )
+            })?
+            .ok_or_else(|| {
+                anyhow::Error::new(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "daemon closed the connection without replying",
+                ))
+            })
+    }
+
+    /// One exchange at the client's standard deadline. When `reissue` is
+    /// set (idempotent requests only) a transient failure is retried once
+    /// on a fresh connection; a repeat failure — and any protocol error —
+    /// surfaces to the caller.
+    fn call_with(&mut self, frame: &Frame, reissue: bool) -> Result<Frame> {
+        match self.call_once(frame, self.read_timeout) {
+            Ok(reply) => Ok(reply),
+            Err(e) if reissue && is_transient(&e) => {
+                self.reconnect()?;
+                self.call_once(frame, self.read_timeout).with_context(|| {
+                    format!("{} retry after transient failure ({e:#})", frame.name())
+                })
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Submit a job; returns the assigned job id. A daemon at its
     /// admission bounds replies with a `STATUS` carrying
     /// [`JobState::Busy`]; that (and any other rejection, e.g. a deadline
     /// already impossible or a draining daemon) surfaces here as an error
-    /// rendering the typed state.
+    /// rendering the typed state. Never reissued: after an ambiguous
+    /// transport failure the job may or may not be queued, and a blind
+    /// retry could run it twice — query `status`/resubmit deliberately.
     pub fn submit(&mut self, spec: JobSpec) -> Result<u64> {
-        match self.call(&Frame::Submit(Box::new(spec)))? {
+        match self.call_with(&Frame::Submit(Box::new(spec)), false)? {
             Frame::Accepted { job_id } => Ok(job_id),
             Frame::Status { report: Some(state), .. } => {
                 bail!("daemon rejected the submission: {state}")
@@ -48,31 +148,51 @@ impl Client {
 
     /// Query a job's lifecycle state.
     pub fn status(&mut self, job_id: u64) -> Result<JobState> {
-        match self.call(&Frame::Status { job_id, report: None })? {
+        match self.call_with(&Frame::Status { job_id, report: None }, true)? {
             Frame::Status { job_id: got, report: Some(state) } if got == job_id => Ok(state),
             other => bail!("expected STATUS report from daemon, got {}", other.name()),
         }
     }
 
     /// Fetch a job's outcome. The daemon blocks the reply until the job is
-    /// terminal, so this call waits with it; a job that failed, was
+    /// terminal, so this call waits with it — under a long read deadline,
+    /// not forever: each expiry (or dropped connection) reconnects and
+    /// probes `STATUS`, and the wait continues only while the daemon still
+    /// reports the job queued, running, or done. A job that failed, was
     /// cancelled, or is unknown surfaces as an error carrying its state.
     pub fn results(&mut self, job_id: u64) -> Result<JobOutcome> {
-        match self.call(&Frame::JobResult { job_id, report: None })? {
-            Frame::JobResult { job_id: got, report: Some(outcome) } if got == job_id => {
-                Ok(*outcome)
+        loop {
+            let req = Frame::JobResult { job_id, report: None };
+            match self.call_once(&req, RESULT_READ_TIMEOUT) {
+                Ok(Frame::JobResult { job_id: got, report: Some(outcome) })
+                    if got == job_id =>
+                {
+                    return Ok(*outcome);
+                }
+                Ok(Frame::Status { report: Some(state), .. }) => {
+                    bail!("job {job_id} has no results: {state}")
+                }
+                Ok(other) => bail!("expected RESULT from daemon, got {}", other.name()),
+                Err(e) if is_transient(&e) => {
+                    self.reconnect()?;
+                    match self.status(job_id)? {
+                        // Still on its way (or already terminal-with-output):
+                        // reissue RESULT — it is idempotent.
+                        JobState::Queued { .. } | JobState::Running | JobState::Done { .. } => {}
+                        state => bail!("job {job_id} has no results: {state}"),
+                    }
+                }
+                Err(e) => return Err(e),
             }
-            Frame::Status { report: Some(state), .. } => {
-                bail!("job {job_id} has no results: {state}")
-            }
-            other => bail!("expected RESULT from daemon, got {}", other.name()),
         }
     }
 
     /// Remove a pending job from the queue; returns the job's state after
-    /// the attempt (`Cancelled` iff it was still pending).
+    /// the attempt (`Cancelled` iff it was still pending). Idempotent: a
+    /// reissued cancel of an already-cancelled job just reports
+    /// `Cancelled` again.
     pub fn cancel(&mut self, job_id: u64) -> Result<JobState> {
-        match self.call(&Frame::Cancel { job_id })? {
+        match self.call_with(&Frame::Cancel { job_id }, true)? {
             Frame::Status { job_id: got, report: Some(state) } if got == job_id => Ok(state),
             other => bail!("expected STATUS report from daemon, got {}", other.name()),
         }
@@ -81,7 +201,7 @@ impl Client {
     /// Fetch the daemon's operational counters: per-fleet utilization,
     /// per-client queue depths, cache/store counters, latency histograms.
     pub fn stats(&mut self) -> Result<ServiceStats> {
-        match self.call(&Frame::Stats { report: None })? {
+        match self.call_with(&Frame::Stats { report: None }, true)? {
             Frame::Stats { report: Some(stats) } => Ok(*stats),
             other => bail!("expected STATS report from daemon, got {}", other.name()),
         }
@@ -89,11 +209,134 @@ impl Client {
 
     /// Ask the daemon to drain its queue and exit. Returns once the daemon
     /// acknowledged (it may still be draining; wait on process exit or
-    /// socket removal for full teardown).
+    /// socket removal for full teardown). Idempotent: a reissued SHUTDOWN
+    /// to an already-draining daemon is acknowledged again.
     pub fn shutdown(&mut self) -> Result<()> {
-        match self.call(&Frame::Shutdown)? {
+        match self.call_with(&Frame::Shutdown, true)? {
             Frame::Shutdown => Ok(()),
             other => bail!("expected SHUTDOWN ack from daemon, got {}", other.name()),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Listener;
+    use std::time::Instant;
+
+    fn test_ep(tag: &str) -> Endpoint {
+        let dir = std::env::temp_dir()
+            .join(format!("parlamp_client_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        Endpoint::unix(dir.join("svc.sock"))
+    }
+
+    /// A daemon that accepts and immediately drops the first connection
+    /// forces the client through reconnect + reissue; the second
+    /// connection answers, and the idempotent `status` call succeeds.
+    #[test]
+    fn idempotent_call_survives_one_dropped_connection() {
+        let ep = test_ep("retry");
+        let listener = Listener::bind(&ep).unwrap();
+        let server = std::thread::spawn(move || {
+            // First connection: accept, say nothing, hang up.
+            drop(listener.accept().unwrap());
+            // Second connection: a well-behaved daemon.
+            let mut s = listener.accept().unwrap();
+            match read_frame(&mut s).unwrap().unwrap() {
+                Frame::Status { job_id, .. } => write_frame(
+                    &mut s,
+                    &Frame::Status { job_id, report: Some(JobState::Running) },
+                )
+                .unwrap(),
+                other => panic!("expected STATUS, got {}", other.name()),
+            }
+        });
+        let mut client = Client::connect(&ep)
+            .unwrap()
+            .with_read_timeout(Duration::from_secs(5));
+        let state = client.status(7).expect("status must survive one dropped connection");
+        assert!(matches!(state, JobState::Running));
+        server.join().unwrap();
+    }
+
+    /// A daemon that accepts the frame and never replies must trip the
+    /// read deadline — bounded, and *not* reissued for SUBMIT.
+    #[test]
+    fn submit_read_deadline_is_bounded_and_not_reissued() {
+        let ep = test_ep("deadline");
+        let listener = Listener::bind(&ep).unwrap();
+        let server = std::thread::spawn(move || {
+            let mut s = listener.accept().unwrap();
+            // Swallow the request; never answer. Hold the stream open so
+            // the client sees silence, not EOF.
+            let _ = read_frame(&mut s);
+            std::thread::sleep(Duration::from_millis(500));
+            // No second accept: a reissue attempt would park the client in
+            // dial and fail the elapsed-time assertion below.
+        });
+        let mut client = Client::connect(&ep)
+            .unwrap()
+            .with_read_timeout(Duration::from_millis(100));
+        let spec = JobSpec {
+            alpha: 0.05,
+            glb: Default::default(),
+            screen: crate::coordinator::ScreenMode::Native,
+            seed: 1,
+            priority: 1,
+            deadline_ms: 0,
+            client: String::new(),
+            db: crate::db::Database::from_transactions(
+                2,
+                &[vec![0u32], vec![1u32]],
+                &[true, false],
+            ),
+        };
+        let started = Instant::now();
+        let err = client.submit(spec).expect_err("silent daemon must time out");
+        assert!(
+            started.elapsed() < Duration::from_secs(3),
+            "submit must fail within the read deadline, took {:?}",
+            started.elapsed()
+        );
+        assert!(is_transient(&err), "timeout must classify as transient: {err:#}");
+        server.join().unwrap();
+    }
+
+    /// `results` under a transient failure reconnects, probes STATUS, and
+    /// keeps or stops waiting according to the reported state — here the
+    /// job failed, so the wait ends with the typed reason.
+    #[test]
+    fn results_probes_status_after_transient_failure() {
+        let ep = test_ep("results");
+        let listener = Listener::bind(&ep).unwrap();
+        let server = std::thread::spawn(move || {
+            // First connection: take the RESULT request, hang up mid-wait.
+            let mut s = listener.accept().unwrap();
+            let _ = read_frame(&mut s);
+            drop(s);
+            // Second connection: the status probe learns the job failed.
+            let mut s = listener.accept().unwrap();
+            match read_frame(&mut s).unwrap().unwrap() {
+                Frame::Status { job_id, .. } => write_frame(
+                    &mut s,
+                    &Frame::Status {
+                        job_id,
+                        report: Some(JobState::Failed { reason: "boom".into() }),
+                    },
+                )
+                .unwrap(),
+                other => panic!("expected STATUS probe, got {}", other.name()),
+            }
+        });
+        let mut client = Client::connect(&ep).unwrap();
+        let err = client.results(9).expect_err("failed job must end the wait");
+        let rendered = format!("{err:#}");
+        assert!(
+            rendered.contains("no results") && rendered.contains("boom"),
+            "error must carry the typed job state: {rendered}"
+        );
+        server.join().unwrap();
     }
 }

@@ -15,7 +15,7 @@
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, CoordinatorRun};
-use crate::par::{ProcessConfig, ProcessFleet};
+use crate::par::{AbortHandle, ProcessConfig, ProcessFleet};
 use crate::wire::service::JobSpec;
 
 use super::print_join_commands;
@@ -47,10 +47,12 @@ pub struct FleetRunner {
 }
 
 impl FleetRunner {
-    /// Mine one job on this runner's fleet, rebuilding the fleet first if
-    /// the previous run poisoned it. On error the fleet is dropped
-    /// (kill-on-drop) so the next call starts from clean processes.
-    pub fn mine(&mut self, spec: &JobSpec) -> Result<CoordinatorRun> {
+    /// Rebuild the fleet if a previous run poisoned it; a no-op while the
+    /// fleet is alive. Split out of [`FleetRunner::mine`] so the serve
+    /// watchdog can take the *fresh* fleet's [`AbortHandle`] before the
+    /// job starts mining (DESIGN.md §15) — a handle snapshotted from the
+    /// poisoned fleet would kill already-reaped pids.
+    pub fn ensure_fleet(&mut self) -> Result<()> {
         if self.fleet.is_none() {
             // A rebuilt fleet never inherits a fault plan: the injected
             // fault already fired once, which is the whole point.
@@ -60,6 +62,19 @@ impl FleetRunner {
             );
             self.rebuilds += 1;
         }
+        Ok(())
+    }
+
+    /// The live fleet's watchdog handle; `None` while poisoned.
+    pub fn abort_handle(&self) -> Option<AbortHandle> {
+        self.fleet.as_ref().map(ProcessFleet::abort_handle)
+    }
+
+    /// Mine one job on this runner's fleet, rebuilding the fleet first if
+    /// the previous run poisoned it. On error the fleet is dropped
+    /// (kill-on-drop) so the next call starts from clean processes.
+    pub fn mine(&mut self, spec: &JobSpec) -> Result<CoordinatorRun> {
+        self.ensure_fleet()?;
         let fleet = self.fleet.as_mut().expect("fleet just ensured");
         let coordinator = Coordinator::new(spec.alpha)
             .with_glb(spec.glb)

@@ -29,16 +29,18 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
+use crate::net::fault::NetFaultPlan;
 use crate::net::{Endpoint, Listener, Stream};
 use crate::obs::log::{self, Tags};
 use crate::obs::trace::{self as obs_trace, EventKind as TraceEv, RankTrace, TraceEvent, TraceRing};
 use crate::obs::{chrome, clock};
-use crate::par::{DataPlane, PendingFleet, ProcessConfig};
+use crate::par::{AbortHandle, DataPlane, FleetError, PendingFleet, ProcessConfig};
 use crate::util::fault::FaultPlan;
 use crate::util::sig;
 use crate::wire::service::{JobOutcome, JobSpec, JobState};
@@ -94,6 +96,18 @@ pub struct ServeConfig {
     /// Arms **fleet 0 only**, so the chaos suite knows exactly which fleet
     /// dies and can prove the others unaffected.
     pub fault: Option<FaultPlan>,
+    /// Deterministic *network*-fault injection (`--net-fault`, DESIGN.md
+    /// §15): stall/drop/corrupt/partition one rank's fabric stream at a
+    /// scripted frame count. Arms **fleet 0 only**, like `fault`.
+    pub net_fault: Option<NetFaultPlan>,
+    /// Heartbeat-lease timeout override for the fleets' hubs
+    /// (`--lease-timeout`); `None` keeps the 60 s default.
+    pub lease_timeout: Option<Duration>,
+    /// Per-job wall-clock bound (`--job-watchdog-secs`, DESIGN.md §15):
+    /// a job mining longer than this has its fleet force-killed by the
+    /// watchdog thread, fails with a typed reason, and the fleet is
+    /// rebuilt before that runner's next job. `None` disables the bound.
+    pub job_watchdog: Option<Duration>,
     /// `--trace FILE` (DESIGN.md §14): accumulate the daemon's own
     /// queue/pop/expire events plus every mined job's per-rank timelines
     /// and write one Chrome trace-event JSON at drain. Per-track events
@@ -117,6 +131,9 @@ impl ServeConfig {
             fleet_listen: None,
             remote_workers: None,
             fault: None,
+            net_fault: None,
+            lease_timeout: None,
+            job_watchdog: Some(Duration::from_secs(1800)),
             trace: None,
         }
     }
@@ -255,6 +272,18 @@ struct Shared {
     wake: Condvar,
 }
 
+/// One armed per-job watchdog: which job is mining on the fleet, when it
+/// must be done by, and the handle that kills the fleet if it is not.
+struct WatchEntry {
+    job: u64,
+    deadline: Instant,
+    handle: AbortHandle,
+}
+
+/// The watchdog registry, keyed by fleet index. Runners insert before
+/// mining and remove after; the monitor thread fires expired entries.
+type Watchdogs = Arc<Mutex<HashMap<usize, WatchEntry>>>;
+
 impl Shared {
     fn lock(&self) -> MutexGuard<'_, Inner> {
         self.inner.lock().expect("service state lock")
@@ -307,15 +336,19 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         cfg.fleets == 1 || cfg.remote_workers.is_none(),
         "--fleets > 1 is incompatible with --hosts (remote attach assembles one fleet)"
     );
-    let fleet_cfg = ProcessConfig {
+    let mut fleet_cfg = ProcessConfig {
         worker_exe: cfg.worker_exe.clone(),
         spawn_timeout: cfg.spawn_timeout,
         data_plane: cfg.data_plane,
         listen: cfg.fleet_listen.clone(),
         remote_workers: cfg.remote_workers.clone(),
         fault: cfg.fault,
+        net_fault: cfg.net_fault,
         ..ProcessConfig::paper_defaults(cfg.procs, 2015)
     };
+    if let Some(t) = cfg.lease_timeout {
+        fleet_cfg.lease_timeout = t;
+    }
     // Fleets first: a daemon that cannot mine should fail before it
     // starts accepting submissions.
     let runners = spawn_pool(&fleet_cfg, cfg.fleets)?;
@@ -410,14 +443,50 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         }
     });
 
+    // Per-job watchdog (DESIGN.md §15): runners register their fleet's
+    // abort handle + deadline here before mining; the monitor thread
+    // force-kills any fleet whose entry outlives its deadline. The killed
+    // run errors out, the runner fails the job and rebuilds the fleet —
+    // the same poison-and-rebuild path a crashed fleet takes.
+    let dogs: Watchdogs = Arc::new(Mutex::new(HashMap::new()));
+    let monitor_stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let dogs = Arc::clone(&dogs);
+        let stop = Arc::clone(&monitor_stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(250));
+                let mut dogs = dogs.lock().expect("watchdog registry");
+                let now = Instant::now();
+                dogs.retain(|fleet, entry| {
+                    if now < entry.deadline {
+                        return true;
+                    }
+                    log::warn(
+                        "serve",
+                        &Tags::fleet(*fleet).and_job(entry.job).and_cause("watchdog-abort"),
+                        format_args!(
+                            "job {} exceeded its watchdog deadline; force-killing fleet {}",
+                            entry.job, fleet
+                        ),
+                    );
+                    entry.handle.fire();
+                    false
+                });
+            }
+        })
+    };
+
     // One runner thread per fleet; each pulls from the shared fair queue.
     let procs = fleet_cfg.world_size();
+    let job_watchdog = cfg.job_watchdog;
     let runner_threads: Vec<_> = runners
         .into_iter()
         .map(|mut runner| {
             let shared = Arc::clone(&shared);
+            let dogs = Arc::clone(&dogs);
             std::thread::spawn(move || -> Result<()> {
-                runner_loop(&shared, &mut runner, procs);
+                runner_loop(&shared, &mut runner, procs, job_watchdog, &dogs);
                 runner.shutdown().context("dismiss warm fleet")
             })
         })
@@ -434,6 +503,8 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
             shutdown_result = joined;
         }
     }
+    monitor_stop.store(true, Ordering::SeqCst);
+    let _ = monitor.join();
 
     // Drained. Release waiters and stop the listener.
     {
@@ -475,8 +546,16 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
 /// One fleet's scheduling loop: expire deadlines, pull the next eligible
 /// job, probe the caches, mine, publish. Exits once the daemon is
 /// draining and the queue is empty. `procs` is the fleet world size, used
-/// to give each fleet's ranks their own trace tracks.
-fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner, procs: usize) {
+/// to give each fleet's ranks their own trace tracks; `watchdog` bounds
+/// each job's mining wall-clock through the `dogs` registry (DESIGN.md
+/// §15).
+fn runner_loop(
+    shared: &Arc<Shared>,
+    runner: &mut FleetRunner,
+    procs: usize,
+    watchdog: Option<Duration>,
+    dogs: &Watchdogs,
+) {
     loop {
         // One locked section: poll signals, expire deadlines, try to pop.
         let popped = {
@@ -558,9 +637,24 @@ fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner, procs: usize) {
         }
 
         // Mine — the expensive part, outside the lock. Other runners keep
-        // dispatching while this fleet works.
+        // dispatching while this fleet works. The fleet is (re)built
+        // *before* the watchdog arms so the registered handle covers the
+        // pids that actually mine this job.
         let started = std::time::Instant::now();
-        let mined = runner.mine(&spec);
+        let mined = match runner.ensure_fleet() {
+            Ok(()) => {
+                if let (Some(limit), Some(handle)) = (watchdog, runner.abort_handle()) {
+                    dogs.lock().expect("watchdog registry").insert(
+                        runner.idx,
+                        WatchEntry { job: id, deadline: Instant::now() + limit, handle },
+                    );
+                }
+                let mined = runner.mine(&spec);
+                dogs.lock().expect("watchdog registry").remove(&runner.idx);
+                mined
+            }
+            Err(e) => Err(e),
+        };
         let busy_ms = started.elapsed().as_millis() as u64;
 
         let mut inner = shared.lock();
@@ -594,11 +688,20 @@ fn runner_loop(shared: &Arc<Shared>, runner: &mut FleetRunner, procs: usize) {
             }
             Err(e) => {
                 inner.metrics.jobs_failed += 1;
-                log::warn(
-                    "serve",
-                    &Tags::fleet(runner.idx).and_job(id),
-                    format_args!("job {id} failed: {e:#}"),
-                );
+                // Tag the failure with its typed cause when the fleet
+                // layer provided one (DESIGN.md §15) — log scrapes can
+                // then tell a watchdog kill from exhausted recoveries.
+                let mut tags = Tags::fleet(runner.idx).and_job(id);
+                if let Some(fe) =
+                    e.source().and_then(|s| s.downcast_ref::<FleetError>())
+                {
+                    tags = tags.and_cause(match fe {
+                        FleetError::WatchdogAbort => "watchdog-abort",
+                        FleetError::RecoveryExhausted { .. } => "recovery-exhausted",
+                        FleetError::AssembleTimeout { .. } => "assemble-timeout",
+                    });
+                }
+                log::warn("serve", &tags, format_args!("job {id} failed: {e:#}"));
                 inner.finish(id, Record::Failed { reason: format!("{e:#}") });
             }
         }

@@ -14,6 +14,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 
 pub const SIGINT: i32 = 2;
+pub const SIGKILL: i32 = 9;
 pub const SIGTERM: i32 = 15;
 
 /// `SIG_IGN` as the kernel ABI encodes it.
@@ -29,6 +30,11 @@ extern "C" {
     /// `usize` lets the same declaration carry both real handlers and the
     /// `SIG_IGN` sentinel.
     fn signal(signum: i32, handler: usize) -> usize;
+    /// POSIX `kill(2)`. Used by the serve watchdog to SIGKILL a wedged
+    /// fleet's workers by saved pid — `std::process::Child::kill` needs
+    /// `&mut Child`, which the watchdog thread cannot borrow while the
+    /// runner thread owns the fleet.
+    fn kill(pid: i32, sig: i32) -> i32;
 }
 
 extern "C" fn latch(_signum: i32) {
@@ -54,5 +60,17 @@ pub fn terminate_requested() -> bool {
 pub fn ignore_interrupts() {
     unsafe {
         signal(SIGINT, SIG_IGN);
+    }
+}
+
+/// Send `sig` to `pid`; best-effort (a pid that already exited is fine —
+/// its zombie is reaped by whoever holds the `Child`). Pids ≤ 0 address
+/// process groups in `kill(2)` and are refused here.
+pub fn kill_pid(pid: u32, sig: i32) {
+    if pid == 0 || pid > i32::MAX as u32 {
+        return;
+    }
+    unsafe {
+        kill(pid as i32, sig);
     }
 }

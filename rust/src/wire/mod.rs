@@ -86,7 +86,14 @@ pub const WIRE_MAGIC: [u8; 4] = *b"PLMW";
 /// ([`trace::TraceChunk`]) flushes the rank's timestamped event ring
 /// after `MERGE`, carrying the worker-clock START-receipt and flush
 /// stamps the hub's clock-offset estimator pairs with its own.
-pub const WIRE_VERSION: u16 = 7;
+/// v8: heartbeat liveness (DESIGN.md §15) — the new hub → worker `PING`
+/// and worker → hub `PONG` frames (both empty) drive the hub's per-rank
+/// lease table, so a rank that is hung or partitioned (its socket open,
+/// no EOF ever arriving) is detected by a missed lease instead of
+/// stalling the fleet forever. `PONG` is answered by the worker's *main*
+/// thread, so it attests whole-worker liveness, not just the reader
+/// thread's.
+pub const WIRE_VERSION: u16 = 8;
 
 /// Upper bound on `len` (tag + payload) of a single frame: 256 MiB.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -114,6 +121,9 @@ const TAG_PEERMSG: u8 = 0x09;
 const TAG_CHECKPOINT: u8 = 0x0A;
 // Observability (post-MERGE trace-ring flush, DESIGN.md §14).
 const TAG_TRACE: u8 = 0x0B;
+// Heartbeat liveness (hub → worker PING, worker → hub PONG, DESIGN.md §15).
+const TAG_PING: u8 = 0x0C;
+const TAG_PONG: u8 = 0x0D;
 // Job frames (the `parlamp serve` client protocol, DESIGN.md §9) live in
 // a disjoint tag range so fabric and service streams can never be confused.
 const TAG_SUBMIT: u8 = 0x10;
@@ -249,6 +259,16 @@ pub enum Frame {
     /// offset estimation (DESIGN.md §14). Best-effort: a lost TRACE
     /// costs a timeline, never a result.
     Trace(Box<trace::TraceChunk>),
+    /// Hub → worker heartbeat probe (v8, empty payload): "prove the whole
+    /// worker is alive". Answered with `Pong` from the worker's *main*
+    /// thread, so a rank whose reader still drains frames but whose main
+    /// thread is hung or partitioned still misses its lease (DESIGN.md
+    /// §15). Pure control traffic — never counted as a data-plane frame.
+    Ping,
+    /// Worker → hub heartbeat answer (v8, empty payload). Refreshes the
+    /// rank's lease in the hub table; absorbed by the route thread, never
+    /// forwarded.
+    Pong,
     /// Hub → worker: no further phases; exit cleanly.
     Bye,
     /// Client → daemon: submit a mining job (parameters + database).
@@ -289,6 +309,8 @@ impl Frame {
             Frame::Relay { .. } => "RELAY",
             Frame::Merge(_) => "MERGE",
             Frame::Trace(_) => "TRACE",
+            Frame::Ping => "PING",
+            Frame::Pong => "PONG",
             Frame::Bye => "BYE",
             Frame::Submit(_) => "SUBMIT",
             Frame::Accepted { .. } => "ACCEPTED",
@@ -822,6 +844,8 @@ impl Frame {
                 put_u8(&mut body, TAG_TRACE);
                 trace::put_trace_chunk(&mut body, chunk);
             }
+            Frame::Ping => put_u8(&mut body, TAG_PING),
+            Frame::Pong => put_u8(&mut body, TAG_PONG),
             Frame::Bye => put_u8(&mut body, TAG_BYE),
             Frame::Submit(spec) => {
                 put_u8(&mut body, TAG_SUBMIT);
@@ -942,6 +966,8 @@ impl Frame {
             TAG_RELAY => Frame::Relay { peer: d.u32()?, epoch: d.u64()?, msg: get_msg(&mut d)? },
             TAG_MERGE => Frame::Merge(Box::new(get_merge(&mut d)?)),
             TAG_TRACE => Frame::Trace(Box::new(trace::get_trace_chunk(&mut d)?)),
+            TAG_PING => Frame::Ping,
+            TAG_PONG => Frame::Pong,
             TAG_BYE => Frame::Bye,
             TAG_SUBMIT => Frame::Submit(Box::new(service::get_job_spec(&mut d)?)),
             TAG_ACCEPTED => Frame::Accepted { job_id: d.u64()? },
@@ -1160,6 +1186,22 @@ mod tests {
         assert!(matches!(roundtrip(&Frame::Bye), Frame::Bye));
         assert_eq!(Frame::Bye.name(), "BYE");
         assert_eq!(Frame::Start { epoch: 0 }.name(), "START");
+    }
+
+    #[test]
+    fn ping_and_pong_roundtrip() {
+        // The v8 heartbeat frames are empty-payload singletons: 5 bytes on
+        // the wire (length prefix + tag), nothing else.
+        assert!(matches!(roundtrip(&Frame::Ping), Frame::Ping));
+        assert!(matches!(roundtrip(&Frame::Pong), Frame::Pong));
+        assert_eq!(Frame::Ping.name(), "PING");
+        assert_eq!(Frame::Pong.name(), "PONG");
+        assert_eq!(Frame::Ping.encode().len(), 5);
+        assert_eq!(Frame::Pong.encode().len(), 5);
+        // Trailing bytes after the tag are rejected like every other frame.
+        let mut long = Frame::Pong.encode()[4..].to_vec();
+        long.push(0);
+        assert!(Frame::decode(&long).is_err(), "trailing byte must fail");
     }
 
     #[test]
@@ -1444,7 +1486,7 @@ mod tests {
         assert!(Frame::decode(&bytes[4..4 + 8]).is_err()); // tag+rank+3 epoch bytes
     }
 
-    /// A TRACE chunk covering every event kind (v7).
+    /// A TRACE chunk covering every event kind (v7; lease kinds v8).
     fn sample_trace_chunk() -> Frame {
         use crate::obs::trace::{EventKind, TraceEvent};
         let kinds = [
@@ -1461,6 +1503,8 @@ mod tests {
             EventKind::ServeQueue { job: 42 },
             EventKind::ServePop { job: 42 },
             EventKind::ServeExpire { job: 43 },
+            EventKind::LeaseMiss { rank: 5, epoch: 6 },
+            EventKind::ForceKill { rank: 5, epoch: 6 },
         ];
         let events = kinds
             .iter()

@@ -52,6 +52,9 @@ const EK_RESPAWN: u8 = 9;
 const EK_SERVE_QUEUE: u8 = 10;
 const EK_SERVE_POP: u8 = 11;
 const EK_SERVE_EXPIRE: u8 = 12;
+// v8 heartbeat-lease kinds (DESIGN.md §15).
+const EK_LEASE_MISS: u8 = 13;
+const EK_FORCE_KILL: u8 = 14;
 
 fn put_event(buf: &mut Vec<u8>, e: &TraceEvent) {
     put_u64(buf, e.t_ns);
@@ -117,6 +120,16 @@ fn put_event(buf: &mut Vec<u8>, e: &TraceEvent) {
             put_u8(buf, EK_SERVE_EXPIRE);
             put_u64(buf, job);
         }
+        EventKind::LeaseMiss { rank, epoch } => {
+            put_u8(buf, EK_LEASE_MISS);
+            put_u32(buf, rank);
+            put_u64(buf, epoch);
+        }
+        EventKind::ForceKill { rank, epoch } => {
+            put_u8(buf, EK_FORCE_KILL);
+            put_u32(buf, rank);
+            put_u64(buf, epoch);
+        }
     }
 }
 
@@ -136,6 +149,8 @@ fn get_event(d: &mut Dec) -> Result<TraceEvent> {
         EK_SERVE_QUEUE => EventKind::ServeQueue { job: d.u64()? },
         EK_SERVE_POP => EventKind::ServePop { job: d.u64()? },
         EK_SERVE_EXPIRE => EventKind::ServeExpire { job: d.u64()? },
+        EK_LEASE_MISS => EventKind::LeaseMiss { rank: d.u32()?, epoch: d.u64()? },
+        EK_FORCE_KILL => EventKind::ForceKill { rank: d.u32()?, epoch: d.u64()? },
         k => bail!("wire: unknown trace event kind {k}"),
     };
     Ok(TraceEvent { t_ns, kind })

@@ -11,6 +11,15 @@
 //! recoveries; and the `parlamp serve` daemon must finish an in-flight
 //! job across a worker death.
 //!
+//! The §15 network-fault matrix extends the same contract to ranks that
+//! misbehave *without dying*: a [`NetFaultPlan`] arms `stall`, `partition`,
+//! `drop`, or `corrupt` against rank 1's streams, scripted by frame counts
+//! rather than wall time. Stall/partition/drop are caught by heartbeat
+//! lease expiry (force-kill + respawn through the same replay path);
+//! corrupt is caught at the hub's frame decoder. Every kind runs on the
+//! {data plane × transport} grid and must end bit-identical to serial with
+//! exactly one respawn.
+//!
 //! A property test rides along: a `SearchNode` shipped over the real wire
 //! (strip → GIVE frame → decode → occurrence-bitmap rebuild) re-expands
 //! to the identical closed-set sequence, and two replays of the shipped
@@ -27,7 +36,9 @@ use parlamp::fabric::{BasicKind, Msg, WireTask};
 use parlamp::lamp::{lamp_serial, phase3_extract, SupportIncreaseRule};
 use parlamp::lcm::{expand, mine_closed, ExpandScratch, SearchNode, SupportHist, Visit};
 use parlamp::net::Endpoint;
-use parlamp::par::{DataPlane, FaultPlan, ProcessConfig, ProcessFleet, RunMode};
+use parlamp::par::{
+    DataPlane, FaultPlan, NetFaultKind, NetFaultPlan, ProcessConfig, ProcessFleet, RunMode,
+};
 use parlamp::service::Client;
 use parlamp::util::propcheck::forall_sized;
 use parlamp::wire::service::{JobOutcome, JobSpec};
@@ -82,14 +93,52 @@ fn chaos_cfg(plane: DataPlane, listen: Option<Endpoint>, seed: u64) -> ProcessCo
     }
 }
 
+/// Fleet config for the network-fault tests (DESIGN.md §15): same shape
+/// as [`chaos_cfg`], but instead of killing rank 1 it stalls, partitions,
+/// drops, or corrupts its fabric traffic after the first data frame of
+/// phase epoch 0. The 3 s lease timeout (paper default: 60 s) keeps the
+/// silent-rank detection fast enough for a test.
+fn net_chaos_cfg(
+    kind: NetFaultKind,
+    plane: DataPlane,
+    listen: Option<Endpoint>,
+    seed: u64,
+) -> ProcessConfig {
+    ProcessConfig {
+        worker_exe: Some(parlamp_bin()),
+        spawn_timeout: Duration::from_secs(60),
+        data_plane: plane,
+        listen,
+        probe_budget_units: 50_000,
+        net_fault: Some(NetFaultPlan { rank: 1, kind, phase: 0, after: 1 }),
+        lease_timeout: Duration::from_secs(3),
+        ..ProcessConfig::paper_defaults(3, seed)
+    }
+}
+
 /// The core acceptance: kill rank 1 mid-way through phase 1, and the
 /// three-phase run must still equal the serial reference bit for bit,
 /// with exactly one respawn over the fleet's lifetime.
 fn kill_mid_phase_and_verify(plane: DataPlane, listen: Option<Endpoint>) {
+    chaos_run_and_verify(chaos_cfg(plane, listen, 42));
+}
+
+/// The §15 counterpart: rank 1's *network* misbehaves mid-phase — it goes
+/// silent (stall), answers nothing on its main thread (partition), loses
+/// every hub-bound frame (drop), or ships a corrupted frame. The hub's
+/// heartbeat lease (or, for corrupt, the decode error) must detect it,
+/// force-kill exactly that rank, and replay to bit-identical results.
+fn net_fault_and_verify(kind: NetFaultKind, plane: DataPlane, listen: Option<Endpoint>) {
+    chaos_run_and_verify(net_chaos_cfg(kind, plane, listen, 42));
+}
+
+/// Shared acceptance body: run the three phases on a fleet whose `cfg`
+/// has one fault armed against rank 1 in phase epoch 0, and assert the
+/// serial-identical outcome plus exactly one respawn.
+fn chaos_run_and_verify(cfg: ProcessConfig) {
     let db = quickstart_db();
     let serial = lamp_serial(&db, 0.05);
     let rule = SupportIncreaseRule::new(db.marginals(), 0.05);
-    let cfg = chaos_cfg(plane, listen, 42);
     let mut fleet = ProcessFleet::spawn(&cfg).expect("spawn fleet");
 
     // Phase 1 (λ search): epoch 0 is the attempt the fault voids; the
@@ -154,6 +203,103 @@ fn killed_worker_recovers_bit_identical_hub_tcp() {
 #[test]
 fn killed_worker_recovers_bit_identical_mesh_tcp() {
     kill_mid_phase_and_verify(DataPlane::Mesh, Some(Endpoint::tcp("127.0.0.1", 0)));
+}
+
+// --- Network faults (DESIGN.md §15): a rank that misbehaves without dying.
+//
+// `stall` parks the whole worker (main thread and reader) at its first
+// data-plane send; `partition` parks only the main thread, so the process
+// still *reads* from the hub but can answer nothing — the case EOF-based
+// detection can never catch; `drop` silently discards every hub-bound
+// frame from then on; `corrupt` flips the tag byte of one hub-bound
+// frame. The first three are detected by heartbeat-lease expiry
+// (force-kill + respawn); corrupt is detected at the hub's decoder (Gone
+// + respawn). All four must end bit-identical to the serial reference
+// with exactly one respawn — on every {data plane × transport} combo.
+
+#[test]
+fn stalled_worker_recovers_bit_identical_hub_unix() {
+    net_fault_and_verify(NetFaultKind::Stall, DataPlane::Hub, None);
+}
+
+#[test]
+fn stalled_worker_recovers_bit_identical_mesh_unix() {
+    net_fault_and_verify(NetFaultKind::Stall, DataPlane::Mesh, None);
+}
+
+#[test]
+fn stalled_worker_recovers_bit_identical_hub_tcp() {
+    net_fault_and_verify(NetFaultKind::Stall, DataPlane::Hub, Some(Endpoint::tcp("127.0.0.1", 0)));
+}
+
+#[test]
+fn stalled_worker_recovers_bit_identical_mesh_tcp() {
+    net_fault_and_verify(NetFaultKind::Stall, DataPlane::Mesh, Some(Endpoint::tcp("127.0.0.1", 0)));
+}
+
+#[test]
+fn partitioned_worker_recovers_bit_identical_hub_unix() {
+    net_fault_and_verify(NetFaultKind::Partition, DataPlane::Hub, None);
+}
+
+#[test]
+fn partitioned_worker_recovers_bit_identical_mesh_unix() {
+    net_fault_and_verify(NetFaultKind::Partition, DataPlane::Mesh, None);
+}
+
+#[test]
+fn partitioned_worker_recovers_bit_identical_hub_tcp() {
+    net_fault_and_verify(
+        NetFaultKind::Partition,
+        DataPlane::Hub,
+        Some(Endpoint::tcp("127.0.0.1", 0)),
+    );
+}
+
+#[test]
+fn partitioned_worker_recovers_bit_identical_mesh_tcp() {
+    net_fault_and_verify(
+        NetFaultKind::Partition,
+        DataPlane::Mesh,
+        Some(Endpoint::tcp("127.0.0.1", 0)),
+    );
+}
+
+#[test]
+fn corrupt_frame_recovers_bit_identical_hub_unix() {
+    net_fault_and_verify(NetFaultKind::Corrupt, DataPlane::Hub, None);
+}
+
+#[test]
+fn corrupt_frame_recovers_bit_identical_mesh_unix() {
+    net_fault_and_verify(NetFaultKind::Corrupt, DataPlane::Mesh, None);
+}
+
+#[test]
+fn corrupt_frame_recovers_bit_identical_hub_tcp() {
+    net_fault_and_verify(
+        NetFaultKind::Corrupt,
+        DataPlane::Hub,
+        Some(Endpoint::tcp("127.0.0.1", 0)),
+    );
+}
+
+#[test]
+fn corrupt_frame_recovers_bit_identical_mesh_tcp() {
+    net_fault_and_verify(
+        NetFaultKind::Corrupt,
+        DataPlane::Mesh,
+        Some(Endpoint::tcp("127.0.0.1", 0)),
+    );
+}
+
+/// `drop` keeps rank 1 mining — and stealing, on the mesh plane — while
+/// every frame it owes the hub (PONGs, checkpoints, its merge) vanishes.
+/// From the hub's chair that is indistinguishable from a partition, and
+/// the lease expiry must resolve it the same way.
+#[test]
+fn dropped_hub_frames_recover_bit_identical_mesh_unix() {
+    net_fault_and_verify(NetFaultKind::Drop, DataPlane::Mesh, None);
 }
 
 /// A worker killed *after* its last merge — the owner is off running the
